@@ -1,0 +1,45 @@
+//! Dynamic graph construction across allocators — a runnable, small
+//! instance of the paper's Fig 4 experiment (the full sweep lives in
+//! `cargo bench --bench fig4_dynamic_graph`).
+//!
+//! Run: `cargo run --release --example dynamic_graph -- [--scale 14]
+//!       [--threads 4] [--device optane]`
+
+use metall_rs::bench_util::{BenchArgs, Table};
+use metall_rs::experiments::fig4::{run, Fig4Params};
+use metall_rs::util::human;
+use metall_rs::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let p = Fig4Params {
+        scales: vec![args.get_usize("scale", 14) as u32],
+        threads: args.get_usize("threads", 4),
+        edge_factor: args.get_usize("edge-factor", 16),
+        device: args.get("device").unwrap_or("optane").to_string(),
+        ..Default::default()
+    };
+    let work = TempDir::new("dynamic-graph");
+    println!(
+        "dynamic graph construction: R-MAT SCALE {} ({} directed inserts), {} threads, device={}",
+        p.scales[0],
+        2 * (1u64 << p.scales[0]) * p.edge_factor as u64,
+        p.threads,
+        p.device,
+    );
+    let mut table = Table::new(&["allocator", "time", "edges/s", "vs metall"]);
+    let rows = run(&p, work.path(), |r| {
+        println!("  {:<20} {}", r.allocator, human::duration(r.secs));
+    })?;
+    let metall = rows.iter().find(|r| r.allocator == "metall").unwrap().secs;
+    for r in &rows {
+        table.row(&[
+            r.allocator.to_string(),
+            human::duration(r.secs),
+            human::rate(r.edges_per_sec),
+            format!("{:.2}x", r.secs / metall),
+        ]);
+    }
+    table.print(&format!("Fig 4 (single point, SCALE {})", p.scales[0]));
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! END-TO-END driver: proves all three layers compose on a real small
+//! workload.
+//!
+//!   1. L3 rust coordinator streams a Wikipedia-like timestamped edge
+//!      stream (monthly chunks) through the batched, bank-sharded
+//!      ingestion pipeline into a persistent Metall datastore,
+//!      snapshot-flushing after every month.
+//!   2. The process "restarts": the datastore is reattached read-only —
+//!      no reconstruction, no deserialization.
+//!   3. The graph is handed to the AOT-compiled analytics engine
+//!      (L2 JAX model + L1 Pallas kernels, executed via PJRT from rust —
+//!      Python is not running) for PageRank and BFS, cross-checked
+//!      against the pure-rust oracle.
+//!
+//! Headline metrics (EXPERIMENTS.md records a run): ingestion edges/s,
+//! reattach time vs ingest time, analytics time per PageRank iteration.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_pipeline`
+
+use std::time::Instant;
+
+use metall_rs::alloc::MetallManager;
+use metall_rs::containers::BankedAdjacency;
+use metall_rs::coordinator::metrics::Metrics;
+use metall_rs::coordinator::pipeline::{ingest, PipelineConfig};
+use metall_rs::graph::ell::EllGraph;
+use metall_rs::graph::stream::StreamConfig;
+use metall_rs::runtime::engine::AnalyticsEngine;
+use metall_rs::util::human;
+
+fn main() -> anyhow::Result<()> {
+    let args = metall_rs::bench_util::BenchArgs::parse();
+    let months = args.get_usize("months", 6) as u32;
+    let first = args.get_usize("first-month", 30_000);
+    let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+
+    let dir = std::env::temp_dir().join(format!("metallrs-e2e-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // ---------------- phase 1: streaming ingestion (L3) ----------------
+    let stream = StreamConfig::wiki_like(months, first);
+    println!(
+        "[1/3] ingesting wiki-like stream: {} months, {} edges total",
+        months,
+        stream.total_edges()
+    );
+    let metrics = Metrics::new();
+    let t_ingest = Instant::now();
+    let mut total_edges = 0u64;
+    {
+        let mgr = MetallManager::create(&dir)?;
+        let graph = BankedAdjacency::create(&mgr, 1024)?;
+        mgr.construct::<u64>("graph", graph.offset())?;
+        let cfg = PipelineConfig::default();
+        for batch in stream.generate() {
+            let rep = ingest(
+                &mgr,
+                &graph,
+                batch.edges.iter().copied(),
+                &cfg,
+                true,
+                &metrics,
+            )?;
+            total_edges += rep.edges;
+            mgr.sync()?; // monthly snapshot-consistency point
+            println!(
+                "    month {:>2}: +{:>8} edges  ({})",
+                batch.month,
+                rep.edges,
+                human::rate(rep.edges_per_sec)
+            );
+        }
+        mgr.close()?;
+    }
+    let ingest_secs = t_ingest.elapsed().as_secs_f64();
+    println!(
+        "    ingested {total_edges} edges in {} ({})",
+        human::duration(ingest_secs),
+        human::rate(total_edges as f64 / ingest_secs)
+    );
+
+    // ------------- phase 2: reattach (no reconstruction) --------------
+    println!("[2/3] reattaching datastore…");
+    let t_attach = Instant::now();
+    let mgr = MetallManager::open_read_only(&dir)?;
+    let graph = BankedAdjacency::open(&mgr, mgr.read(mgr.find::<u64>("graph")?.unwrap()));
+    let attach_secs = t_attach.elapsed().as_secs_f64();
+    println!(
+        "    reattached {} vertices / {} edges in {} ({}x faster than ingest)",
+        graph.num_vertices(&mgr),
+        graph.num_edges(&mgr),
+        human::duration(attach_secs),
+        (ingest_secs / attach_secs).round()
+    );
+
+    // ------ phase 3: analytics through PJRT (L2 JAX + L1 Pallas) ------
+    println!("[3/3] analytics via AOT artifacts ({artifacts})…");
+    let edges = graph.to_edge_list(&mgr);
+    let n = edges.iter().map(|&(s, d)| s.max(d) + 1).max().unwrap_or(1) as usize;
+    let ell = EllGraph::from_edges(n, &edges, 32);
+    let engine = AnalyticsEngine::new(&artifacts)?;
+
+    let pr = engine.pagerank(&ell, 30, 1e-7)?;
+    println!(
+        "    pagerank: {} iters in {} ({} per iter; compile {})",
+        pr.iterations,
+        human::duration(pr.exec_secs),
+        human::duration(pr.exec_secs / pr.iterations as f64),
+        human::duration(pr.compile_secs),
+    );
+    // cross-check against the pure-rust oracle
+    let native = ell.pagerank_native(0.85, pr.iterations);
+    let max_err = pr
+        .values
+        .iter()
+        .zip(&native)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("    pagerank max |pjrt - native| = {max_err:.2e}");
+    assert!(max_err < 1e-4, "analytics mismatch");
+
+    let bfs = engine.bfs(&ell, 0)?;
+    let reached = bfs.values.iter().filter(|&&l| l >= 0.0).count();
+    println!(
+        "    bfs: {} levels, {}/{} reachable, {}",
+        bfs.iterations,
+        reached,
+        n,
+        human::duration(bfs.exec_secs)
+    );
+
+    let top = {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| pr.values[b].partial_cmp(&pr.values[a]).unwrap());
+        idx[0]
+    };
+    println!("    top vertex by rank: {top} (rank {:.6})", pr.values[top]);
+
+    mgr.close()?;
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("e2e OK — L3 ingest → persistent store → reattach → L2/L1 analytics");
+    Ok(())
+}

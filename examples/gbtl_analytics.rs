@@ -1,0 +1,52 @@
+//! The GBTL case study (paper §7, Fig 7/Fig 8): construct the four SNAP
+//! stand-in graphs with and without Metall, then show that reattach +
+//! analyze beats reconstruct + analyze.
+//!
+//! Run: `cargo run --release --example gbtl_analytics`
+
+use metall_rs::bench_util::Table;
+use metall_rs::experiments::fig7;
+use metall_rs::util::human;
+use metall_rs::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let work = TempDir::new("gbtl-analytics");
+    println!("GBTL + Metall case study (4 SNAP-like datasets)…");
+    let rows = fig7::run(work.path(), |r| {
+        println!("  {} done", r.dataset);
+    })?;
+
+    let mut t7 = Table::new(&["dataset", "base (DRAM)", "GBTL+Metall (disk)", "ratio"]);
+    for r in &rows {
+        t7.row(&[
+            r.dataset.to_string(),
+            human::duration(r.base_construct),
+            human::duration(r.metall_construct),
+            format!("{:.2}x", r.metall_construct / r.base_construct),
+        ]);
+    }
+    t7.print("Fig 7: graph construction time");
+
+    let mut t8a = Table::new(&["dataset", "base (construct+BFS)", "metall (reattach+BFS)", "speedup"]);
+    for r in &rows {
+        t8a.row(&[
+            r.dataset.to_string(),
+            human::duration(r.base_bfs_total),
+            human::duration(r.metall_bfs_total),
+            format!("{:.1}x", r.base_bfs_total / r.metall_bfs_total),
+        ]);
+    }
+    t8a.print("Fig 8a: BFS analytics time");
+
+    let mut t8b = Table::new(&["dataset", "base (construct+PR)", "metall (reattach+PR)", "speedup"]);
+    for r in &rows {
+        t8b.row(&[
+            r.dataset.to_string(),
+            human::duration(r.base_pr_total),
+            human::duration(r.metall_pr_total),
+            format!("{:.1}x", r.base_pr_total / r.metall_pr_total),
+        ]);
+    }
+    t8b.print("Fig 8b: PageRank analytics time");
+    Ok(())
+}

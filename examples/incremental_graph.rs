@@ -1,0 +1,47 @@
+//! Incremental graph construction on simulated network file systems —
+//! a runnable, small instance of the paper's Fig 5/6 experiment.
+//!
+//! Run: `cargo run --release --example incremental_graph --
+//!       [--months 6] [--fs vast] [--dataset wiki]`
+
+use metall_rs::bench_util::{BenchArgs, Table};
+use metall_rs::experiments::fig5::{run_cell, Fig5Params, IoMode};
+use metall_rs::util::human;
+use metall_rs::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let fs = args.get("fs").unwrap_or("vast").to_string();
+    let dataset = args.get("dataset").unwrap_or("wiki").to_string();
+    let p = Fig5Params {
+        months: args.get_usize("months", 6) as u32,
+        first_month_edges: args.get_usize("first-month", 20_000),
+        ..Default::default()
+    };
+    let work = TempDir::new("incremental");
+    println!(
+        "incremental construction: {dataset}-like stream, {} months, fs={fs} (simulated)",
+        p.months
+    );
+
+    let mut table = Table::new(&["mode", "ingest", "flush", "total"]);
+    for mode in IoMode::all() {
+        let rows = run_cell(&fs, &dataset, mode, &p, work.path())?;
+        let ingest: f64 = rows.iter().map(|r| r.ingest_secs).sum();
+        let flush: f64 = rows.iter().map(|r| r.flush_secs).sum();
+        println!("  {:<14} cumulative:", mode.name());
+        let mut cum = 0.0;
+        for r in &rows {
+            cum += r.ingest_secs + r.flush_secs;
+            println!("    month {:<2} -> {}", r.month, human::duration(cum));
+        }
+        table.row(&[
+            mode.name().to_string(),
+            human::duration(ingest),
+            human::duration(flush),
+            human::duration(ingest + flush),
+        ]);
+    }
+    table.print(&format!("Fig 6 breakdown ({dataset} on {fs})"));
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path (L2 JAX models + L1 Pallas kernels).
+
+Nothing in this package is imported at runtime; ``aot.py`` lowers the
+models once to HLO text under ``artifacts/`` and the rust coordinator
+executes them through the PJRT C API.
+"""

@@ -1,0 +1,108 @@
+"""AOT compiler: lower the L2 models to HLO *text* under ``artifacts/``.
+
+HLO text — NOT ``lowered.compile()`` serialization — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the rust side's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Emits one ``.hlo.txt`` per (model, shape-variant) plus ``manifest.txt``:
+
+    pagerank <n> <f> <w> <alpha> <file>
+    bfs      <n> <f> <w> -       <file>
+    bucket   <batch> <nbanks> -  - <file>
+
+The rust runtime (`runtime::manifest`) parses this ladder and picks the
+smallest variant that fits a given graph, padding inputs.
+
+Usage: python -m compile.aot --outdir ../artifacts [--quick]
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import edge_bucket
+
+# (n, f) ladder: n = padded vertex count, f = padded fragment count.
+# f is a multiple of the kernels' ROW_BLOCK (128) and n; W is fixed.
+ELL_W = 32
+VARIANTS = [
+    # (n, f)
+    (256, 256),
+    (256, 1024),
+    (1024, 1024),
+    (1024, 4096),
+    (4096, 4096),
+    (4096, 16384),
+    (16384, 16384),
+    (16384, 65536),
+]
+QUICK_VARIANTS = [(256, 256), (1024, 1024)]
+
+BUCKET_BATCHES = [4096, 65536]
+BUCKET_NBANKS = 1024
+ALPHA = model.DEFAULT_ALPHA
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_pagerank(n, f, w):
+    fn = lambda *args: model.pagerank_step(*args, n=n, alpha=ALPHA)
+    return jax.jit(fn).lower(*model.pagerank_example_args(n, f, w))
+
+
+def lower_bfs(n, f, w):
+    fn = lambda *args: model.bfs_step(*args, n=n)
+    return jax.jit(fn).lower(*model.bfs_example_args(n, f, w))
+
+
+def lower_bucket(batch, nbanks):
+    fn = lambda src: edge_bucket(src, nbanks)
+    return jax.jit(fn).lower(jax.ShapeDtypeStruct((batch,), jnp.uint32))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true", help="small ladder (CI)")
+    args = ap.parse_args(argv)
+
+    outdir = pathlib.Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+    manifest = []
+
+    variants = QUICK_VARIANTS if args.quick else VARIANTS
+    for n, f in variants:
+        for kind, lower in (("pagerank", lower_pagerank), ("bfs", lower_bfs)):
+            name = f"{kind}_n{n}_f{f}_w{ELL_W}.hlo.txt"
+            text = to_hlo_text(lower(n, f, ELL_W))
+            (outdir / name).write_text(text)
+            alpha = f"{ALPHA}" if kind == "pagerank" else "-"
+            manifest.append(f"{kind} {n} {f} {ELL_W} {alpha} {name}")
+            print(f"  wrote {name} ({len(text)} chars)", file=sys.stderr)
+
+    for batch in BUCKET_BATCHES:
+        name = f"bucket_b{batch}_m{BUCKET_NBANKS}.hlo.txt"
+        text = to_hlo_text(lower_bucket(batch, BUCKET_NBANKS))
+        (outdir / name).write_text(text)
+        manifest.append(f"bucket {batch} {BUCKET_NBANKS} - - {name}")
+        print(f"  wrote {name} ({len(text)} chars)", file=sys.stderr)
+
+    (outdir / "manifest.txt").write_text("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts to {outdir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels for the GraphBLAS analytics hot path.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT client the
+rust runtime uses cannot execute real-TPU Mosaic custom calls (see
+DESIGN.md §Hardware-Adaptation for the TPU tiling rationale).
+"""
+
+from .ell_spmv import ell_rowsum, ell_rowmax, ROW_BLOCK
+from .bucket import edge_bucket
+
+__all__ = ["ell_rowsum", "ell_rowmax", "edge_bucket", "ROW_BLOCK"]

@@ -1,0 +1,53 @@
+"""Edge→bank bucketing kernel used by the ingestion batcher.
+
+The L3 coordinator shards incoming edges across ``m`` banks by a hash of
+the source vertex (paper §6.1: a bank is an adjacency list + mutex pair).
+This kernel computes the bank assignment for a whole edge batch in one
+AOT-compiled call; the rust pipeline uses it when a PJRT engine is
+attached (and falls back to the identical native hash otherwise — the
+two are bit-equal, which the tests assert).
+
+Hash: the splitmix64 finalizer truncated to 32-bit lanes (two rounds of
+multiply–xorshift), masked to the (power-of-two) bank count.
+"""
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BATCH_BLOCK = 1024
+
+# murmur3 fmix32 constants — numpy scalars so pallas treats them as
+# literals rather than captured traced constants.
+M1 = np.uint32(0x85EBCA6B)
+M2 = np.uint32(0xC2B2AE35)
+
+
+def _bucket_kernel(nbanks, src_ref, o_ref):
+    h = src_ref[...]
+    h = h ^ (h >> 16)
+    h = h * M1
+    h = h ^ (h >> 13)
+    h = h * M2
+    h = h ^ (h >> 16)
+    o_ref[...] = h & np.uint32(nbanks - 1)
+
+
+@functools.partial(jax.jit, static_argnames=("nbanks", "batch_block"))
+def edge_bucket(src, nbanks, batch_block=None):
+    """bank[i] = murmur3_fmix32(src[i]) & (nbanks-1). nbanks power of 2."""
+    assert nbanks & (nbanks - 1) == 0, "nbanks must be a power of two"
+    (b,) = src.shape
+    bb = min(batch_block or BATCH_BLOCK, b)
+    assert b % bb == 0, f"B={b} not a multiple of batch block {bb}"
+    return pl.pallas_call(
+        functools.partial(_bucket_kernel, nbanks),
+        grid=(b // bb,),
+        in_specs=[pl.BlockSpec((bb,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.uint32),
+        interpret=True,
+    )(src)

@@ -1,0 +1,84 @@
+"""ELL-fragment semiring row reductions — the analytics hot spot.
+
+The graph is stored as *row fragments*: each fragment owns at most ``W``
+neighbors of one vertex (high-degree vertices are split across several
+fragments; the L2 model aggregates fragment results with a segment-sum).
+The kernels below consume
+
+  - ``gathered``: (F, W) f32 — neighbor values already gathered
+    (``contrib[ell_idx]``; the irregular gather stays in XLA where the
+    backend has a native implementation),
+  - ``values``:   (F, W) f32 — semiring edge values; 0.0 marks padding,
+
+and produce the per-fragment reduction:
+
+  - ``ell_rowsum``: plus-times semiring (PageRank),
+  - ``ell_rowmax``: max-times semiring == boolean or-and on 0/1 floats
+    (BFS frontier expansion).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the grid walks row
+blocks of ``ROW_BLOCK`` fragments; each grid step holds a
+(ROW_BLOCK, W) tile of both operands in VMEM — 2·8192·32·4 B = 2 MiB,
+which double-buffers comfortably inside a TensorCore's ~16 MiB VMEM —
+and the reduction runs across lanes on the VPU. SpMV is memory-bound
+(arithmetic intensity ≈ 0.25 flop/byte), so block shapes are chosen for
+streaming, not MXU occupancy.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows (fragments) per grid step (tuned: 128 -> 8192 gave 13x on the CPU
+# interpret path by cutting grid-loop trip count; see EXPERIMENTS.md
+# §Perf). F smaller than this falls back to its largest pow2 divisor.
+ROW_BLOCK = 8192
+
+
+def _rowsum_kernel(g_ref, v_ref, o_ref):
+    o_ref[...] = jnp.sum(g_ref[...] * v_ref[...], axis=1)
+
+
+def _rowmax_kernel(g_ref, v_ref, o_ref):
+    o_ref[...] = jnp.max(g_ref[...] * v_ref[...], axis=1)
+
+
+def _largest_pow2_divisor(f):
+    return f & -f
+
+
+def _call(kernel, gathered, values, *, row_block=None):
+    f, w = gathered.shape
+    assert values.shape == (f, w), (gathered.shape, values.shape)
+    if row_block is None:
+        # AOT variants use F % ROW_BLOCK == 0; odd test shapes fall back
+        # to the largest power-of-two divisor (possibly 1).
+        rb = min(ROW_BLOCK, _largest_pow2_divisor(f))
+    else:
+        rb = min(row_block, f)
+    assert f % rb == 0, f"F={f} not a multiple of row block {rb}"
+    return pl.pallas_call(
+        kernel,
+        grid=(f // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, w), lambda i: (i, 0)),
+            pl.BlockSpec((rb, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((f,), gathered.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(gathered, values)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def ell_rowsum(gathered, values, row_block=None):
+    """out[i] = sum_k gathered[i, k] * values[i, k]  (plus-times)."""
+    return _call(_rowsum_kernel, gathered, values, row_block=row_block)
+
+
+@functools.partial(jax.jit, static_argnames=("row_block",))
+def ell_rowmax(gathered, values, row_block=None):
+    """out[i] = max_k gathered[i, k] * values[i, k]  (or-and on 0/1)."""
+    return _call(_rowmax_kernel, gathered, values, row_block=row_block)

@@ -1,0 +1,79 @@
+"""Pure-jnp/numpy oracles for every kernel and model function.
+
+These are the correctness ground truth: pytest (incl. hypothesis sweeps)
+asserts the Pallas kernels and the AOT-lowered models match these within
+float tolerance.
+"""
+
+import numpy as np
+
+
+def ell_rowsum_ref(gathered, values):
+    return np.sum(np.asarray(gathered) * np.asarray(values), axis=1)
+
+
+def ell_rowmax_ref(gathered, values):
+    return np.max(np.asarray(gathered) * np.asarray(values), axis=1)
+
+
+def edge_bucket_ref(src, nbanks):
+    """murmur3 fmix32 & (nbanks-1) — mirrors rust graph::bucket_hash32."""
+    h = np.asarray(src, dtype=np.uint32).copy()
+    h ^= h >> np.uint32(16)
+    h *= np.uint32(0x85EBCA6B)
+    h ^= h >> np.uint32(13)
+    h *= np.uint32(0xC2B2AE35)
+    h ^= h >> np.uint32(16)
+    return h & np.uint32(nbanks - 1)
+
+
+def segment_sum_ref(data, owner, n):
+    out = np.zeros(n, dtype=np.asarray(data).dtype)
+    np.add.at(out, np.asarray(owner), np.asarray(data))
+    return out
+
+
+def segment_max_ref(data, owner, n):
+    out = np.zeros(n, dtype=np.asarray(data).dtype)
+    np.maximum.at(out, np.asarray(owner), np.asarray(data))
+    return out
+
+
+def pagerank_step_ref(
+    ranks, ell_idx, ell_val, owner, inv_outdeg, dangling, n, alpha, base=None, dweight=None
+):
+    """One PageRank pull iteration over the fragment representation.
+
+    new[i] = base[i] + alpha * sum_{j->i} ranks[j]/outdeg[j] + D*dweight[i]
+    with base = (1-alpha)/n and dweight = alpha/n by default (textbook).
+    """
+    ranks = np.asarray(ranks, dtype=np.float64)
+    if base is None:
+        base = np.full(n, (1.0 - alpha) / n)
+    if dweight is None:
+        dweight = np.full(n, alpha / n)
+    contrib = ranks * np.asarray(inv_outdeg, dtype=np.float64)
+    gathered = contrib[np.asarray(ell_idx)]
+    frag = np.sum(gathered * np.asarray(ell_val, dtype=np.float64), axis=1)
+    per_vertex = segment_sum_ref(frag, owner, n)
+    dangling_mass = float(np.dot(ranks, np.asarray(dangling, dtype=np.float64)))
+    out = np.asarray(base, dtype=np.float64) + alpha * per_vertex \
+        + dangling_mass * np.asarray(dweight, dtype=np.float64)
+    return out.astype(np.float32)
+
+
+def bfs_step_ref(frontier, visited, ell_idx, ell_val, owner, n):
+    """One BFS pull expansion step on 0/1 float masks.
+
+    hit[i]   = OR_{j->i} frontier[j]
+    next[i]  = hit[i] AND NOT visited[i]
+    visited' = visited OR next
+    """
+    frontier = np.asarray(frontier, dtype=np.float32)
+    visited = np.asarray(visited, dtype=np.float32)
+    gathered = frontier[np.asarray(ell_idx)]
+    frag = np.max(gathered * np.asarray(ell_val, dtype=np.float32), axis=1)
+    hit = segment_max_ref(frag, owner, n)
+    nxt = np.minimum(hit, 1.0) * (1.0 - visited)
+    vis = np.minimum(visited + nxt, 1.0)
+    return nxt, vis

@@ -1,0 +1,102 @@
+"""Layer-2 JAX models: GraphBLAS analytic steps over the fragment-ELL
+graph representation, calling the L1 Pallas kernels.
+
+Representation (see DESIGN.md §2): a graph with ``n`` vertices is stored
+as ``F`` *row fragments* of width ``W``. Fragment ``f`` holds up to ``W``
+in-neighbor ids of vertex ``owner[f]`` in ``ell_idx[f, :]`` with validity
+mask ``ell_val[f, :]`` (0.0 padding). High-degree vertices span several
+fragments; per-vertex results are recovered with a segment reduction,
+which XLA lowers to a scatter — together with ``jnp.take`` for the
+gather, the irregular accesses stay in XLA native ops while the dense
+semiring arithmetic runs in the Pallas kernels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ell_rowsum, ell_rowmax
+
+DEFAULT_ALPHA = 0.85
+
+
+@functools.partial(jax.jit, static_argnames=("n", "alpha"))
+def pagerank_step(
+    ranks, ell_idx, ell_val, owner, inv_outdeg, dangling, base, dweight, *, n, alpha=DEFAULT_ALPHA
+):
+    """One PageRank pull iteration.
+
+    new[i] = base[i] + alpha * sum_{j->i} ranks[j]/outdeg[j] + D * dweight[i]
+
+    For an unpadded graph of n_true vertices, ``base = (1-alpha)/n_true``
+    and ``dweight = alpha/n_true`` everywhere, recovering the textbook
+    update. The vectors are *runtime inputs* (not baked-in constants) so
+    that the AOT shape ladder can pad a graph of n_true vertices up to a
+    compiled variant of n ≥ n_true **exactly**: padded vertices get
+    base = dweight = inv_outdeg = dangling = 0 and therefore stay at rank
+    0 forever, leaving real vertices' ranks bit-identical in expectation
+    to the unpadded computation.
+
+    Args:
+      ranks:      f32[n]    current PageRank vector.
+      ell_idx:    i32[F, W] in-neighbor ids per fragment.
+      ell_val:    f32[F, W] 1.0 for a real edge, 0.0 for padding.
+      owner:      i32[F]    owning vertex of each fragment.
+      inv_outdeg: f32[n]    1/outdeg (0 for dangling vertices).
+      dangling:   f32[n]    1.0 where outdeg == 0 (real vertices only).
+      base:       f32[n]    teleport term per vertex.
+      dweight:    f32[n]    dangling redistribution weight per vertex.
+    Returns:
+      f32[n] updated ranks.
+    """
+    contrib = ranks * inv_outdeg
+    gathered = jnp.take(contrib, ell_idx, axis=0)
+    frag = ell_rowsum(gathered, ell_val)
+    per_vertex = jax.ops.segment_sum(frag, owner, num_segments=n)
+    dangling_mass = jnp.dot(ranks, dangling)
+    return base + alpha * per_vertex + dangling_mass * dweight
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def bfs_step(frontier, visited, ell_idx, ell_val, owner, *, n):
+    """One BFS pull expansion on 0/1 float masks.
+
+    Returns (next_frontier, visited') with
+      next_frontier[i] = (OR_{j->i} frontier[j]) AND NOT visited[i]
+      visited'         = visited OR next_frontier
+    """
+    gathered = jnp.take(frontier, ell_idx, axis=0)
+    frag = ell_rowmax(gathered, ell_val)
+    hit = jax.ops.segment_max(frag, owner, num_segments=n)
+    hit = jnp.maximum(hit, 0.0)  # segment_max fills empty segments with -inf
+    nxt = jnp.minimum(hit, 1.0) * (1.0 - visited)
+    vis = jnp.minimum(visited + nxt, 1.0)
+    return nxt, vis
+
+
+def pagerank_example_args(n, f, w):
+    """ShapeDtypeStructs for AOT lowering of `pagerank_step`."""
+    s = jax.ShapeDtypeStruct
+    return (
+        s((n,), jnp.float32),      # ranks
+        s((f, w), jnp.int32),      # ell_idx
+        s((f, w), jnp.float32),    # ell_val
+        s((f,), jnp.int32),        # owner
+        s((n,), jnp.float32),      # inv_outdeg
+        s((n,), jnp.float32),      # dangling
+        s((n,), jnp.float32),      # base
+        s((n,), jnp.float32),      # dweight
+    )
+
+
+def bfs_example_args(n, f, w):
+    """ShapeDtypeStructs for AOT lowering of `bfs_step`."""
+    s = jax.ShapeDtypeStruct
+    return (
+        s((n,), jnp.float32),      # frontier
+        s((n,), jnp.float32),      # visited
+        s((f, w), jnp.int32),      # ell_idx
+        s((f, w), jnp.float32),    # ell_val
+        s((f,), jnp.int32),        # owner
+    )

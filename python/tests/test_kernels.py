@@ -1,0 +1,91 @@
+"""L1 Pallas kernels vs. the pure-numpy oracle (ref.py).
+
+hypothesis sweeps shapes and values; these are the core correctness
+signal for everything the rust runtime later executes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ell_rowsum, ell_rowmax, edge_bucket
+from compile.kernels import ref
+
+
+def _mk(f, w, seed):
+    rng = np.random.default_rng(seed)
+    gathered = rng.standard_normal((f, w), dtype=np.float32)
+    values = (rng.random((f, w)) < 0.5).astype(np.float32)
+    return gathered, values
+
+
+@pytest.mark.parametrize("f,w", [(128, 32), (256, 16), (1024, 32), (128, 1), (128, 64)])
+def test_rowsum_matches_ref(f, w):
+    g, v = _mk(f, w, 1)
+    out = np.asarray(ell_rowsum(g, v))
+    np.testing.assert_allclose(out, ref.ell_rowsum_ref(g, v), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("f,w", [(128, 32), (256, 16), (1024, 32), (128, 1)])
+def test_rowmax_matches_ref(f, w):
+    g, v = _mk(f, w, 2)
+    out = np.asarray(ell_rowmax(g, v))
+    np.testing.assert_allclose(out, ref.ell_rowmax_ref(g, v), rtol=1e-6, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    fb=st.integers(1, 8),
+    w=st.sampled_from([1, 2, 8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    rb=st.sampled_from([16, 32, 128]),
+)
+def test_rowsum_hypothesis_shapes(fb, w, seed, rb):
+    f = fb * rb
+    g, v = _mk(f, w, seed)
+    out = np.asarray(ell_rowsum(g, v, row_block=rb))
+    np.testing.assert_allclose(out, ref.ell_rowsum_ref(g, v), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    fb=st.integers(1, 8),
+    w=st.sampled_from([1, 2, 8, 16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    rb=st.sampled_from([16, 32, 128]),
+)
+def test_rowmax_hypothesis_shapes(fb, w, seed, rb):
+    f = fb * rb
+    g, v = _mk(f, w, seed)
+    out = np.asarray(ell_rowmax(g, v, row_block=rb))
+    np.testing.assert_allclose(out, ref.ell_rowmax_ref(g, v), rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1024, 4096]),
+    nbanks=st.sampled_from([64, 256, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_edge_bucket_hypothesis(b, nbanks, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 2**32, size=b, dtype=np.uint32)
+    out = np.asarray(edge_bucket(src, nbanks))
+    np.testing.assert_array_equal(out, ref.edge_bucket_ref(src, nbanks))
+    assert out.max() < nbanks
+
+
+def test_bucket_spread():
+    # the hash must actually spread sequential ids across banks
+    src = np.arange(4096, dtype=np.uint32)
+    out = np.asarray(edge_bucket(src, 1024))
+    counts = np.bincount(out, minlength=1024)
+    assert counts.max() <= 24, "suspiciously lumpy bank distribution"
+
+
+def test_rowsum_extreme_values():
+    g = np.array([[1e30, -1e30], [np.float32(3.4e38), 0.0]], dtype=np.float32)
+    g = np.repeat(g, 64, axis=0)  # 128 rows
+    v = np.ones_like(g)
+    out = np.asarray(ell_rowsum(g, v))
+    np.testing.assert_allclose(out, ref.ell_rowsum_ref(g, v), rtol=1e-6)

@@ -1,0 +1,85 @@
+//! Fig 4 — multi-threaded dynamic graph construction vs. the baseline
+//! allocators (paper §6.3). Reproduces both panels:
+//!   `--device nvme`   → Fig 4b line-up (metall, bip, pmemkind)
+//!   `--device optane` → Fig 4a line-up (+ pmemkind-dontneed, ralloc)
+//!
+//! `cargo bench --bench fig4_dynamic_graph -- [--device nvme]
+//!    [--scales 12,14,16] [--threads 4] [--edge-factor 16]`
+
+use metall_rs::bench_util::{record, BenchArgs, Table};
+use metall_rs::experiments::fig4::{run, Fig4Params};
+use metall_rs::util::human;
+use metall_rs::util::jsonw::JsonObj;
+use metall_rs::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let device = args.get("device").unwrap_or("nvme").to_string();
+    let scales: Vec<u32> = args
+        .get("scales")
+        .unwrap_or("12,14,16")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let p = Fig4Params {
+        scales: scales.clone(),
+        threads: args.get_usize("threads", 4),
+        edge_factor: args.get_usize("edge-factor", 16),
+        device: device.clone(),
+        ..Default::default()
+    };
+    let work = TempDir::new("fig4");
+    println!(
+        "Fig 4 ({device}): dynamic graph construction, scales {scales:?}, {} threads, edge factor {}",
+        p.threads, p.edge_factor
+    );
+
+    let rows = run(&p, work.path(), |r| {
+        println!(
+            "  scale {:>2} {:<20} {:>12} ({})",
+            r.scale,
+            r.allocator,
+            human::duration(r.secs),
+            human::rate(r.edges_per_sec)
+        );
+    })?;
+
+    for &scale in &scales {
+        let mut t = Table::new(&["allocator", "time", "edges/s", "metall speedup"]);
+        let metall = rows
+            .iter()
+            .find(|r| r.scale == scale && r.allocator == "metall")
+            .unwrap()
+            .secs;
+        for r in rows.iter().filter(|r| r.scale == scale) {
+            t.row(&[
+                r.allocator.to_string(),
+                human::duration(r.secs),
+                human::rate(r.edges_per_sec),
+                format!("{:.2}x", r.secs / metall),
+            ]);
+            record(
+                "fig4_dynamic_graph",
+                JsonObj::new()
+                    .str("device", &device)
+                    .str("allocator", r.allocator)
+                    .int("scale", r.scale as i64)
+                    .int("edges", r.edges as i64)
+                    .num("secs", r.secs)
+                    .num("edges_per_sec", r.edges_per_sec),
+            );
+        }
+        t.print(&format!("Fig 4 ({device}) — SCALE {scale}"));
+    }
+
+    // headline shape check (paper: metall 7.4–11.7x over BIP)
+    let last = *scales.last().unwrap();
+    let get = |name: &str| rows.iter().find(|r| r.scale == last && r.allocator == name);
+    if let (Some(m), Some(b)) = (get("metall"), get("bip")) {
+        println!(
+            "\nheadline @ SCALE {last}: metall is {:.1}x faster than BIP (paper: 7.4–11.7x)",
+            b.secs / m.secs
+        );
+    }
+    Ok(())
+}

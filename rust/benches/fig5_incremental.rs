@@ -1,0 +1,63 @@
+//! Fig 5 — cumulative execution time per month of incrementally
+//! constructing the Wikipedia-like and Reddit-like graphs on simulated
+//! Lustre and VAST, for direct-mmap / staging-mmap / bs-mmap.
+//!
+//! `cargo bench --bench fig5_incremental -- [--months 8] [--first-month 20000]`
+
+use metall_rs::bench_util::{record, BenchArgs, Table};
+use metall_rs::experiments::fig5::{run_cell, Fig5Params, IoMode};
+use metall_rs::util::human;
+use metall_rs::util::jsonw::JsonObj;
+use metall_rs::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let p = Fig5Params {
+        months: args.get_usize("months", 8) as u32,
+        first_month_edges: args.get_usize("first-month", 20_000),
+        ..Default::default()
+    };
+    let work = TempDir::new("fig5");
+
+    for fs in ["lustre", "vast"] {
+        for dataset in ["wiki", "reddit"] {
+            let mut t = Table::new(&["month", "direct-mmap", "staging-mmap", "bs-mmap"]);
+            let mut cells = Vec::new();
+            for mode in IoMode::all() {
+                cells.push(run_cell(fs, dataset, mode, &p, work.path())?);
+            }
+            let mut cum = [0.0f64; 3];
+            for m in 0..p.months as usize {
+                let mut rowvals = vec![format!("{m}")];
+                for (i, cell) in cells.iter().enumerate() {
+                    cum[i] += cell[m].ingest_secs + cell[m].flush_secs;
+                    rowvals.push(human::duration(cum[i]));
+                    record(
+                        "fig5_incremental",
+                        JsonObj::new()
+                            .str("fs", fs)
+                            .str("dataset", dataset)
+                            .str("mode", cell[m].mode)
+                            .int("month", m as i64)
+                            .int("edges", cell[m].edges as i64)
+                            .num("ingest_secs", cell[m].ingest_secs)
+                            .num("flush_secs", cell[m].flush_secs)
+                            .num("cumulative_secs", cum[i]),
+                    );
+                }
+                t.row(&rowvals);
+            }
+            t.print(&format!("Fig 5 — {dataset} on {fs} (cumulative, simulated time)"));
+            // paper shape notes
+            let (d, s, b) = (cum[0], cum[1], cum[2]);
+            let winner = if fs == "lustre" { "staging-mmap" } else { "bs-mmap" };
+            println!(
+                "  totals: direct {} | staging {} | bs {}   (paper winner on {fs}: {winner})",
+                human::duration(d),
+                human::duration(s),
+                human::duration(b)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Fig 6 — total time for the incremental construction broken down into
+//! ingestion time and flush time per (fs, dataset, mode).
+//!
+//! `cargo bench --bench fig6_breakdown -- [--months 8] [--first-month 20000]`
+
+use metall_rs::bench_util::{record, BenchArgs, Table};
+use metall_rs::experiments::fig5::{run_cell, Fig5Params, IoMode};
+use metall_rs::util::human;
+use metall_rs::util::jsonw::JsonObj;
+use metall_rs::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let p = Fig5Params {
+        months: args.get_usize("months", 8) as u32,
+        first_month_edges: args.get_usize("first-month", 20_000),
+        ..Default::default()
+    };
+    let work = TempDir::new("fig6");
+
+    for fs in ["lustre", "vast"] {
+        for dataset in ["wiki", "reddit"] {
+            let mut t = Table::new(&["mode", "ingest", "flush", "total"]);
+            for mode in IoMode::all() {
+                let rows = run_cell(fs, dataset, mode, &p, work.path())?;
+                let ingest: f64 = rows.iter().map(|r| r.ingest_secs).sum();
+                let flush: f64 = rows.iter().map(|r| r.flush_secs).sum();
+                t.row(&[
+                    mode.name().to_string(),
+                    human::duration(ingest),
+                    human::duration(flush),
+                    human::duration(ingest + flush),
+                ]);
+                record(
+                    "fig6_breakdown",
+                    JsonObj::new()
+                        .str("fs", fs)
+                        .str("dataset", dataset)
+                        .str("mode", mode.name())
+                        .num("ingest_secs", ingest)
+                        .num("flush_secs", flush),
+                );
+            }
+            t.print(&format!("Fig 6 — {dataset} on {fs} (ingest/flush breakdown)"));
+        }
+    }
+    Ok(())
+}

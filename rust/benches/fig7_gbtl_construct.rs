@@ -1,0 +1,33 @@
+//! Fig 7 — GBTL graph construction time on the four SNAP stand-ins,
+//! base (DRAM) vs GBTL+Metall (persistent store on local disk).
+//!
+//! `cargo bench --bench fig7_gbtl_construct`
+
+use metall_rs::bench_util::{record, Table};
+use metall_rs::experiments::fig7;
+use metall_rs::util::human;
+use metall_rs::util::jsonw::JsonObj;
+use metall_rs::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let work = TempDir::new("fig7");
+    let rows = fig7::run(work.path(), |r| println!("  {} done", r.dataset))?;
+    let mut t = Table::new(&["dataset", "Base GBTL (DRAM)", "GBTL+Metall (disk)", "ratio"]);
+    for r in &rows {
+        t.row(&[
+            r.dataset.to_string(),
+            human::duration(r.base_construct),
+            human::duration(r.metall_construct),
+            format!("{:.2}x", r.metall_construct / r.base_construct),
+        ]);
+        record(
+            "fig7_gbtl_construct",
+            JsonObj::new()
+                .str("dataset", r.dataset)
+                .num("base_secs", r.base_construct)
+                .num("metall_secs", r.metall_construct),
+        );
+    }
+    t.print("Fig 7 — GBTL graph construction time (paper: Metall ≈ 2x slower, one-time cost)");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Fig 8 — GBTL analytics time: base must reconstruct the graph before
+//! analyzing; GBTL+Metall reattaches the pre-built persistent graph
+//! (paper: "boosts up the analytics time up to 3.5X").
+//!
+//! `cargo bench --bench fig8_gbtl_analytics`
+
+use metall_rs::bench_util::{record, Table};
+use metall_rs::experiments::fig7;
+use metall_rs::util::human;
+use metall_rs::util::jsonw::JsonObj;
+use metall_rs::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let work = TempDir::new("fig8");
+    let rows = fig7::run(work.path(), |r| println!("  {} done", r.dataset))?;
+
+    let mut ta = Table::new(&["dataset", "Base (construct+BFS)", "Metall (reattach+BFS)", "speedup"]);
+    let mut tb = Table::new(&["dataset", "Base (construct+PR)", "Metall (reattach+PR)", "speedup"]);
+    for r in &rows {
+        ta.row(&[
+            r.dataset.to_string(),
+            human::duration(r.base_bfs_total),
+            human::duration(r.metall_bfs_total),
+            format!("{:.1}x", r.base_bfs_total / r.metall_bfs_total),
+        ]);
+        tb.row(&[
+            r.dataset.to_string(),
+            human::duration(r.base_pr_total),
+            human::duration(r.metall_pr_total),
+            format!("{:.1}x", r.base_pr_total / r.metall_pr_total),
+        ]);
+        record(
+            "fig8_gbtl_analytics",
+            JsonObj::new()
+                .str("dataset", r.dataset)
+                .num("base_bfs_secs", r.base_bfs_total)
+                .num("metall_bfs_secs", r.metall_bfs_total)
+                .num("base_pr_secs", r.base_pr_total)
+                .num("metall_pr_secs", r.metall_pr_total),
+        );
+    }
+    ta.print("Fig 8a — BFS analytics time");
+    tb.print("Fig 8b — PageRank analytics time");
+    println!("(paper: up to 3.5x from avoiding reconstruction)");
+    Ok(())
+}

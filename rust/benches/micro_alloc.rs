@@ -1,0 +1,128 @@
+//! Allocation-path microbenchmarks across all four allocators: raw
+//! alloc/dealloc throughput by size class, object-cache hit rate, and
+//! thread scaling — the instrument behind EXPERIMENTS.md §Perf.
+//!
+//! `cargo bench --bench micro_alloc -- [--ops 200000] [--threads 1,2,4,8]`
+
+use metall_rs::alloc::{ManagerOptions, MetallManager, SegmentAlloc};
+use metall_rs::baselines::bip::BipAllocator;
+use metall_rs::baselines::pmemkind::{MadvMode, PmemKindAllocator};
+use metall_rs::baselines::ralloc_like::RallocLike;
+use metall_rs::bench_util::{record, BenchArgs, Table};
+use metall_rs::storage::segment::SegmentOptions;
+use metall_rs::util::human;
+use metall_rs::util::jsonw::JsonObj;
+use metall_rs::util::rng::Xoshiro256ss;
+use metall_rs::util::tmp::TempDir;
+
+const CHUNK: usize = 1 << 20;
+
+fn seg_opts() -> SegmentOptions {
+    SegmentOptions::default().with_file_size(16 << 20).with_vm_reserve(32 << 30)
+}
+
+/// Churn workload: allocate/free with a live window, mixed sizes.
+fn churn<A: SegmentAlloc>(a: &A, ops: usize, threads: usize, seed: u64) -> f64 {
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let a = &a;
+            s.spawn(move || {
+                let mut rng = Xoshiro256ss::new(seed + t as u64);
+                let mut live: Vec<u64> = Vec::with_capacity(256);
+                for _ in 0..ops / threads {
+                    if live.len() >= 256 || (!live.is_empty() && rng.next_f64() < 0.4) {
+                        let i = rng.gen_range(live.len() as u64) as usize;
+                        let off = live.swap_remove(i);
+                        a.deallocate(off).unwrap();
+                    } else {
+                        let size = 8 << rng.gen_range(8); // 8..=1024
+                        live.push(a.allocate(size as usize).unwrap());
+                    }
+                }
+                for off in live {
+                    a.deallocate(off).unwrap();
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let ops = args.get_usize("ops", 200_000);
+    let threads: Vec<usize> = args
+        .get("threads")
+        .unwrap_or("1,2,4,8")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    let work = TempDir::new("micro-alloc");
+
+    let mut t = Table::new(&["allocator", "threads", "time", "ops/s"]);
+    for &nt in &threads {
+        for name in ["metall", "bip", "pmemkind", "ralloc"] {
+            let dir = work.join(&format!("{name}-{nt}"));
+            let secs = match name {
+                "metall" => {
+                    let opts = ManagerOptions {
+                        chunk_size: CHUNK,
+                        file_size: 16 << 20,
+                        vm_reserve: 32 << 30,
+                        ..Default::default()
+                    };
+                    let m = MetallManager::create_with(&dir, opts)?;
+                    let s = churn(&m, ops, nt, 1);
+                    let st = m.stats();
+                    record(
+                        "micro_alloc",
+                        JsonObj::new()
+                            .str("allocator", "metall-cache-stats")
+                            .int("threads", nt as i64)
+                            .int("allocs", st.allocs as i64)
+                            .int("cache_hits", st.cache_hits as i64),
+                    );
+                    m.close()?;
+                    s
+                }
+                "bip" => {
+                    let a = BipAllocator::create_with(&dir, seg_opts())?;
+                    churn(&a, ops, nt, 1)
+                }
+                "pmemkind" => {
+                    let a = PmemKindAllocator::create_with(
+                        &dir,
+                        MadvMode::DontNeed,
+                        seg_opts(),
+                        CHUNK,
+                    )?;
+                    churn(&a, ops, nt, 1)
+                }
+                "ralloc" => {
+                    let a = RallocLike::create_with(&dir, seg_opts(), CHUNK)?;
+                    churn(&a, ops, nt, 1)
+                }
+                _ => unreachable!(),
+            };
+            t.row(&[
+                name.to_string(),
+                nt.to_string(),
+                human::duration(secs),
+                human::rate(ops as f64 / secs),
+            ]);
+            record(
+                "micro_alloc",
+                JsonObj::new()
+                    .str("allocator", name)
+                    .int("threads", nt as i64)
+                    .int("ops", ops as i64)
+                    .num("secs", secs)
+                    .num("ops_per_sec", ops as f64 / secs),
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    t.print("alloc/dealloc churn microbenchmark (mixed sizes 8B–1KiB, 40% frees)");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Table 1 — memory device performance comparison. Prints the cost-model
+//! constants the simulator derives from the paper's Table 1 and verifies
+//! the orderings the rest of the evaluation depends on (measured back
+//! from the simulator itself).
+
+use metall_rs::bench_util::{record, Table};
+use metall_rs::storage::netfs::{profile_by_name, SimNetFs};
+use metall_rs::util::jsonw::JsonObj;
+
+fn main() {
+    let mut t = Table::new(&["device", "op latency", "bandwidth", "concurrency", "metadata op"]);
+    for name in ["optane", "nvme", "vast", "lustre"] {
+        let p = profile_by_name(name).unwrap();
+        t.row(&[
+            p.name.to_string(),
+            format!("{:.1} us", p.op_latency * 1e6),
+            format!("{:.1} GB/s", p.bandwidth / 1e9),
+            p.concurrency.to_string(),
+            format!("{:.1} us", p.metadata_latency * 1e6),
+        ]);
+        record(
+            "table1_devices",
+            JsonObj::new()
+                .str("device", p.name)
+                .num("op_latency_s", p.op_latency)
+                .num("bandwidth_Bps", p.bandwidth)
+                .int("concurrency", p.concurrency as i64)
+                .num("metadata_latency_s", p.metadata_latency),
+        );
+    }
+    t.print("Table 1: device cost model (derived from paper Table 1)");
+
+    // measured sanity of the model: latency ordering and bandwidth ordering
+    let lat = |n: &str| SimNetFs::new(profile_by_name(n).unwrap()).charge_io(1, 0, 1);
+    assert!(lat("optane") < lat("nvme"), "optane beats nvme on latency");
+    assert!(lat("nvme") < lat("vast"), "local beats network on latency");
+    assert!(lat("vast") < lat("lustre"), "vast is the latency-oriented PFS");
+    let bw = |n: &str| SimNetFs::new(profile_by_name(n).unwrap()).charge_io(0, 1 << 30, 16);
+    assert!(bw("lustre") < bw("vast"), "lustre is the throughput-oriented PFS");
+    println!("\norderings verified: optane < nvme < vast < lustre (latency); lustre > vast (bandwidth)");
+}

@@ -1,0 +1,124 @@
+//! `SegmentAlloc` — the allocator interface the persistent containers
+//! are written against (the rust analogue of Metall's STL-style
+//! allocator, §3.2.3/§4.4).
+//!
+//! Containers never hold raw pointers: they store **segment offsets** and
+//! resolve them through the allocator on every access — the same
+//! position-independence discipline Metall's offset pointers give C++
+//! containers (§3.5). Any allocator over a contiguous mapped segment can
+//! implement this; [`crate::alloc::MetallManager`] and every baseline in
+//! [`crate::baselines`] do, which is what lets the Fig-4 benchmark run
+//! the identical data structure over all four allocators.
+
+use crate::alloc::manager::Persist;
+use crate::error::Result;
+
+/// Offset-based allocation over one contiguous mapped segment.
+///
+/// # Safety-relevant contract
+/// Live allocations never overlap, and `base() + offset` stays valid for
+/// the allocation's lifetime (the segment never moves within a process).
+pub trait SegmentAlloc: Sync {
+    /// Allocate `size` bytes, returning a segment offset.
+    fn allocate(&self, size: usize) -> Result<u64>;
+
+    /// Release an allocation previously returned by [`Self::allocate`].
+    fn deallocate(&self, offset: u64) -> Result<()>;
+
+    /// Segment base address in this process.
+    fn base(&self) -> *mut u8;
+
+    /// Bytes currently addressable from `base()`.
+    fn mapped_len(&self) -> usize;
+
+    // ---- provided accessors ----
+
+    /// Read a POD value at `offset`.
+    #[inline]
+    fn read_pod<T: Persist>(&self, offset: u64) -> T {
+        debug_assert!(offset as usize + std::mem::size_of::<T>() <= self.mapped_len());
+        unsafe { std::ptr::read_unaligned(self.base().add(offset as usize) as *const T) }
+    }
+
+    /// Write a POD value at `offset`.
+    #[inline]
+    fn write_pod<T: Persist>(&self, offset: u64, value: T) {
+        debug_assert!(offset as usize + std::mem::size_of::<T>() <= self.mapped_len());
+        unsafe { std::ptr::write_unaligned(self.base().add(offset as usize) as *mut T, value) }
+    }
+
+    /// Borrow `len` bytes at `offset`.
+    ///
+    /// # Safety
+    /// Range must be inside a live allocation with no concurrent writer.
+    unsafe fn bytes_at(&self, offset: u64, len: usize) -> &[u8] {
+        std::slice::from_raw_parts(self.base().add(offset as usize), len)
+    }
+
+    /// # Safety
+    /// As [`Self::bytes_at`] plus exclusive access.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn bytes_at_mut(&self, offset: u64, len: usize) -> &mut [u8] {
+        std::slice::from_raw_parts_mut(self.base().add(offset as usize), len)
+    }
+
+    /// Bulk copy into the segment.
+    fn write_bytes(&self, offset: u64, data: &[u8]) {
+        debug_assert!(offset as usize + data.len() <= self.mapped_len());
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                data.as_ptr(),
+                self.base().add(offset as usize),
+                data.len(),
+            );
+        }
+    }
+
+    /// Bulk copy within the segment (non-overlapping).
+    fn copy_within(&self, src: u64, dst: u64, len: usize) {
+        debug_assert!(src as usize + len <= self.mapped_len());
+        debug_assert!(dst as usize + len <= self.mapped_len());
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.base().add(src as usize),
+                self.base().add(dst as usize),
+                len,
+            );
+        }
+    }
+}
+
+impl SegmentAlloc for crate::alloc::MetallManager {
+    fn allocate(&self, size: usize) -> Result<u64> {
+        MetallManagerExt::allocate(self, size)
+    }
+
+    fn deallocate(&self, offset: u64) -> Result<()> {
+        MetallManagerExt::deallocate(self, offset)
+    }
+
+    fn base(&self) -> *mut u8 {
+        self.segment().base()
+    }
+
+    fn mapped_len(&self) -> usize {
+        self.segment().mapped_len()
+    }
+}
+
+/// Disambiguation shim: calls the inherent methods (which carry the
+/// stats/caching logic) rather than recursing into the trait impl.
+trait MetallManagerExt {
+    fn allocate(&self, size: usize) -> Result<u64>;
+    fn deallocate(&self, offset: u64) -> Result<()>;
+}
+
+impl MetallManagerExt for crate::alloc::MetallManager {
+    fn allocate(&self, size: usize) -> Result<u64> {
+        crate::alloc::MetallManager::allocate(self, size)
+    }
+
+    fn deallocate(&self, offset: u64) -> Result<()> {
+        crate::alloc::MetallManager::deallocate(self, offset)
+    }
+}

@@ -1,0 +1,185 @@
+//! Bin directory (paper §4.3.2): for each internal allocation size, the
+//! set of *non-full* chunks (LIFO) plus the slot bitsets of every chunk
+//! currently assigned to that bin. One instance of [`BinData`] sits
+//! behind one mutex in the manager (§4.5.1: "a mutex object per bin"), so
+//! different allocation sizes proceed concurrently.
+
+use std::collections::HashMap;
+
+use crate::alloc::mlbitset::MlBitset;
+
+/// Non-full chunk LIFO + per-chunk slot bitsets for one bin.
+#[derive(Clone, Debug, Default)]
+pub struct BinData {
+    /// IDs of chunks of this bin with at least one free slot. LIFO:
+    /// "A bin operates in a LIFO (last in, first out) manner."
+    nonfull: Vec<u32>,
+    /// Slot occupancy per chunk (full chunks included).
+    bitsets: HashMap<u32, MlBitset>,
+}
+
+impl BinData {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate one slot. Returns `(chunk, slot)` or `None` when every
+    /// chunk of this bin is full (the caller then takes a fresh chunk
+    /// from the chunk directory).
+    pub fn alloc_slot(&mut self) -> Option<(u32, u32)> {
+        loop {
+            let &chunk = self.nonfull.last()?;
+            let bs = self.bitsets.get_mut(&chunk).expect("nonfull chunk has bitset");
+            match bs.find_and_set_first_zero() {
+                Some(slot) => {
+                    if bs.is_full() {
+                        self.nonfull.pop();
+                    }
+                    return Some((chunk, slot));
+                }
+                None => {
+                    // stale entry (shouldn't happen, but heal anyway)
+                    self.nonfull.pop();
+                }
+            }
+        }
+    }
+
+    /// Register a fresh chunk (just taken from the chunk directory) with
+    /// `slots` capacity and immediately allocate its first slot.
+    pub fn add_chunk_and_alloc(&mut self, chunk: u32, slots: u32) -> u32 {
+        let mut bs = MlBitset::new(slots);
+        let slot = bs.find_and_set_first_zero().expect("fresh chunk has room");
+        if !bs.is_full() {
+            self.nonfull.push(chunk);
+        }
+        self.bitsets.insert(chunk, bs);
+        slot
+    }
+
+    /// Free a slot. Returns `true` when the chunk became completely empty
+    /// (the caller should release it to the chunk directory and drop it
+    /// via [`Self::remove_chunk`]).
+    pub fn free_slot(&mut self, chunk: u32, slot: u32) -> bool {
+        let bs = self.bitsets.get_mut(&chunk).expect("freeing slot in unknown chunk");
+        let was_full = bs.is_full();
+        assert!(bs.clear(slot), "double free: chunk {chunk} slot {slot}");
+        if was_full {
+            self.nonfull.push(chunk); // becomes visible for reuse (LIFO)
+        }
+        bs.is_empty()
+    }
+
+    /// Drop a (now empty) chunk from this bin.
+    pub fn remove_chunk(&mut self, chunk: u32) {
+        let bs = self.bitsets.remove(&chunk).expect("removing unknown chunk");
+        assert!(bs.is_empty(), "removing non-empty chunk {chunk}");
+        self.nonfull.retain(|&c| c != chunk);
+    }
+
+    pub fn is_slot_used(&self, chunk: u32, slot: u32) -> bool {
+        self.bitsets.get(&chunk).map(|b| b.get(slot)).unwrap_or(false)
+    }
+
+    pub fn used_slots(&self) -> u64 {
+        self.bitsets.values().map(|b| b.used() as u64).sum()
+    }
+
+    pub fn chunk_ids(&self) -> impl Iterator<Item = u32> + '_ {
+        self.bitsets.keys().copied()
+    }
+
+    pub fn bitset(&self, chunk: u32) -> Option<&MlBitset> {
+        self.bitsets.get(&chunk)
+    }
+
+    // ---- serialization (bitsets only; the nonfull LIFO is rebuilt) ----
+
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
+        let mut ids: Vec<u32> = self.bitsets.keys().copied().collect();
+        ids.sort_unstable(); // deterministic layout
+        out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+        for id in ids {
+            out.extend_from_slice(&id.to_le_bytes());
+            self.bitsets[&id].serialize_into(out);
+        }
+    }
+
+    pub fn deserialize_from(buf: &[u8]) -> Option<(Self, usize)> {
+        let n = u32::from_le_bytes(buf.get(0..4)?.try_into().ok()?) as usize;
+        let mut pos = 4;
+        let mut data = BinData::new();
+        for _ in 0..n {
+            let id = u32::from_le_bytes(buf.get(pos..pos + 4)?.try_into().ok()?);
+            pos += 4;
+            let (bs, used) = MlBitset::deserialize_from(buf.get(pos..)?)?;
+            pos += used;
+            if !bs.is_full() {
+                data.nonfull.push(id);
+            }
+            data.bitsets.insert(id, bs);
+        }
+        Some((data, pos))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifo_reuse() {
+        let mut b = BinData::new();
+        assert!(b.alloc_slot().is_none());
+        let s0 = b.add_chunk_and_alloc(10, 4);
+        assert_eq!(s0, 0);
+        // fill chunk 10
+        assert_eq!(b.alloc_slot(), Some((10, 1)));
+        assert_eq!(b.alloc_slot(), Some((10, 2)));
+        assert_eq!(b.alloc_slot(), Some((10, 3)));
+        assert!(b.alloc_slot().is_none(), "chunk 10 is full");
+        // new chunk
+        b.add_chunk_and_alloc(11, 4);
+        // freeing in the full chunk 10 re-exposes it LIFO-last
+        assert!(!b.free_slot(10, 2));
+        assert_eq!(b.alloc_slot(), Some((10, 2)));
+    }
+
+    #[test]
+    fn empty_detection_and_removal() {
+        let mut b = BinData::new();
+        b.add_chunk_and_alloc(5, 2);
+        assert_eq!(b.alloc_slot(), Some((5, 1)));
+        assert!(!b.free_slot(5, 0));
+        assert!(b.free_slot(5, 1), "last slot freed → chunk empty");
+        b.remove_chunk(5);
+        assert!(b.alloc_slot().is_none());
+        assert_eq!(b.used_slots(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut b = BinData::new();
+        b.add_chunk_and_alloc(1, 8);
+        b.free_slot(1, 0);
+        b.free_slot(1, 0);
+    }
+
+    #[test]
+    fn serialization_roundtrip_rebuilds_nonfull() {
+        let mut b = BinData::new();
+        b.add_chunk_and_alloc(3, 2);
+        b.alloc_slot(); // fill chunk 3
+        b.add_chunk_and_alloc(9, 2); // half full
+        let mut buf = Vec::new();
+        b.serialize_into(&mut buf);
+        let (de, used) = BinData::deserialize_from(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(de.used_slots(), 3);
+        // only chunk 9 is non-full → next alloc must come from it
+        let mut de = de;
+        assert_eq!(de.alloc_slot(), Some((9, 1)));
+        assert!(de.alloc_slot().is_none());
+    }
+}

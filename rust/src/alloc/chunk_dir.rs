@@ -1,0 +1,278 @@
+//! Chunk directory (paper §4.3.1): one entry per chunk of the
+//! application-data segment recording its state — free, small-object
+//! chunk (with its bin number), or head/body of a large allocation.
+//!
+//! Slot bitsets live with the *bin* data ([`super::bin_dir`]) so that
+//! small allocations of different sizes only contend on their own bin
+//! mutex (§4.5.1); this directory holds the compact per-chunk kind and is
+//! guarded by a single mutex, touched only when chunks change state
+//! (the paper's two listed contention points) or a kind lookup is needed.
+//!
+//! "Metall sequentially probes the array when it needs to find empty
+//! chunk(s)."
+
+/// Per-chunk state tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkKind {
+    Free,
+    /// Small-object chunk holding objects of bin `bin`.
+    Small { bin: u32 },
+    /// First chunk of a large allocation spanning `nchunks` chunks.
+    LargeHead { nchunks: u32 },
+    /// Continuation chunk of a large allocation.
+    LargeBody,
+}
+
+/// The chunk directory: a growable array of [`ChunkKind`].
+#[derive(Clone, Debug, Default)]
+pub struct ChunkDirectory {
+    entries: Vec<ChunkKind>,
+}
+
+impl ChunkDirectory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn kind(&self, chunk: u32) -> ChunkKind {
+        self.entries[chunk as usize]
+    }
+
+    /// Find the first free chunk (sequential probe), growing the
+    /// directory if none exists. Marks it `Small { bin }`.
+    pub fn take_small_chunk(&mut self, bin: u32) -> u32 {
+        let idx = self.find_free_run(1);
+        self.entries[idx as usize] = ChunkKind::Small { bin };
+        idx
+    }
+
+    /// Find (growing as needed) a run of `n` contiguous free chunks and
+    /// mark them as one large allocation. Returns the head index.
+    pub fn take_large(&mut self, n: u32) -> u32 {
+        let head = self.find_free_run(n as usize);
+        self.entries[head as usize] = ChunkKind::LargeHead { nchunks: n };
+        for i in 1..n {
+            self.entries[(head + i) as usize] = ChunkKind::LargeBody;
+        }
+        head
+    }
+
+    /// Sequential probe for a run of `n` free chunks; grows the array so
+    /// it always succeeds (the segment's VM reservation is the real
+    /// bound, enforced by the manager when extending the segment).
+    fn find_free_run(&mut self, n: usize) -> u32 {
+        let mut run = 0usize;
+        for i in 0..self.entries.len() {
+            if self.entries[i] == ChunkKind::Free {
+                run += 1;
+                if run == n {
+                    return (i + 1 - n) as u32;
+                }
+            } else {
+                run = 0;
+            }
+        }
+        // extend with what's missing (possibly continuing a trailing run)
+        let start = self.entries.len() - run;
+        self.entries.resize(start + n, ChunkKind::Free);
+        start as u32
+    }
+
+    /// Release a small chunk back to free.
+    pub fn free_small_chunk(&mut self, chunk: u32) {
+        debug_assert!(matches!(self.entries[chunk as usize], ChunkKind::Small { .. }));
+        self.entries[chunk as usize] = ChunkKind::Free;
+    }
+
+    /// Release a large allocation; returns the number of chunks freed.
+    pub fn free_large(&mut self, head: u32) -> u32 {
+        let n = match self.entries[head as usize] {
+            ChunkKind::LargeHead { nchunks } => nchunks,
+            k => panic!("free_large on non-head chunk {head}: {k:?}"),
+        };
+        for i in 0..n {
+            self.entries[(head + i) as usize] = ChunkKind::Free;
+        }
+        n
+    }
+
+    /// Occupied chunk count (for stats / fragmentation reporting).
+    pub fn used_chunks(&self) -> usize {
+        self.entries.iter().filter(|k| !matches!(k, ChunkKind::Free)).count()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (u32, ChunkKind)> + '_ {
+        self.entries.iter().enumerate().map(|(i, &k)| (i as u32, k))
+    }
+
+    // ---- serialization ----
+
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        for e in &self.entries {
+            match e {
+                ChunkKind::Free => out.push(0),
+                ChunkKind::Small { bin } => {
+                    out.push(1);
+                    out.extend_from_slice(&bin.to_le_bytes());
+                }
+                ChunkKind::LargeHead { nchunks } => {
+                    out.push(2);
+                    out.extend_from_slice(&nchunks.to_le_bytes());
+                }
+                ChunkKind::LargeBody => out.push(3),
+            }
+        }
+    }
+
+    pub fn deserialize_from(buf: &[u8]) -> Option<(Self, usize)> {
+        if buf.len() < 8 {
+            return None;
+        }
+        let n = u64::from_le_bytes(buf[0..8].try_into().ok()?) as usize;
+        let mut entries = Vec::with_capacity(n);
+        let mut pos = 8;
+        for _ in 0..n {
+            let tag = *buf.get(pos)?;
+            pos += 1;
+            let e = match tag {
+                0 => ChunkKind::Free,
+                1 => {
+                    let bin = u32::from_le_bytes(buf.get(pos..pos + 4)?.try_into().ok()?);
+                    pos += 4;
+                    ChunkKind::Small { bin }
+                }
+                2 => {
+                    let nchunks =
+                        u32::from_le_bytes(buf.get(pos..pos + 4)?.try_into().ok()?);
+                    pos += 4;
+                    ChunkKind::LargeHead { nchunks }
+                }
+                3 => ChunkKind::LargeBody,
+                _ => return None,
+            };
+            entries.push(e);
+        }
+        // structural validation: large bodies must follow their head
+        let dir = Self { entries };
+        dir.validate().then_some(())?;
+        Some((dir, pos))
+    }
+
+    /// Check structural invariants (used after deserialization and by the
+    /// property tests).
+    pub fn validate(&self) -> bool {
+        let mut i = 0;
+        while i < self.entries.len() {
+            match self.entries[i] {
+                ChunkKind::LargeHead { nchunks } => {
+                    if nchunks == 0 || i + nchunks as usize > self.entries.len() {
+                        return false;
+                    }
+                    for j in 1..nchunks as usize {
+                        if self.entries[i + j] != ChunkKind::LargeBody {
+                            return false;
+                        }
+                    }
+                    i += nchunks as usize;
+                }
+                ChunkKind::LargeBody => return false, // orphan body
+                _ => i += 1,
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_take_and_free() {
+        let mut d = ChunkDirectory::new();
+        let c0 = d.take_small_chunk(3);
+        let c1 = d.take_small_chunk(3);
+        assert_eq!((c0, c1), (0, 1));
+        assert_eq!(d.kind(0), ChunkKind::Small { bin: 3 });
+        d.free_small_chunk(0);
+        assert_eq!(d.kind(0), ChunkKind::Free);
+        // freed chunk is reused first (sequential probe)
+        assert_eq!(d.take_small_chunk(9), 0);
+    }
+
+    #[test]
+    fn large_runs() {
+        let mut d = ChunkDirectory::new();
+        let a = d.take_large(3);
+        let b = d.take_small_chunk(0);
+        let c = d.take_large(2);
+        assert_eq!((a, b, c), (0, 3, 4));
+        assert!(d.validate());
+        assert_eq!(d.free_large(0), 3);
+        // the 3-chunk hole is reused for a 2-chunk run
+        assert_eq!(d.take_large(2), 0);
+        // but a 4-chunk run must skip the remaining 1-chunk hole
+        assert_eq!(d.take_large(4), 6);
+        assert!(d.validate());
+    }
+
+    #[test]
+    fn trailing_run_extension() {
+        let mut d = ChunkDirectory::new();
+        let _ = d.take_small_chunk(0); // chunk 0
+        d.free_small_chunk(0);
+        // 1 free chunk exists; a 3-run should start at 0 and grow by 2
+        assert_eq!(d.take_large(3), 0);
+        assert_eq!(d.len(), 3);
+    }
+
+    #[test]
+    fn used_chunks_stat() {
+        let mut d = ChunkDirectory::new();
+        d.take_large(2);
+        d.take_small_chunk(1);
+        assert_eq!(d.used_chunks(), 3);
+        d.free_large(0);
+        assert_eq!(d.used_chunks(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn free_large_on_body_panics() {
+        let mut d = ChunkDirectory::new();
+        d.take_large(2);
+        d.free_large(1);
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut d = ChunkDirectory::new();
+        d.take_large(2);
+        d.take_small_chunk(7);
+        d.take_small_chunk(2);
+        d.free_small_chunk(3);
+        let mut buf = Vec::new();
+        d.serialize_into(&mut buf);
+        let (de, used) = ChunkDirectory::deserialize_from(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(de.entries, d.entries);
+    }
+
+    #[test]
+    fn deserialize_rejects_orphan_body() {
+        // craft: 1 entry of LargeBody
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u64.to_le_bytes());
+        buf.push(3);
+        assert!(ChunkDirectory::deserialize_from(&buf).is_none());
+    }
+}

@@ -1,0 +1,1061 @@
+//! `MetallManager` — the paper's `metall::manager` (§3.2, Table 2).
+//!
+//! Owns the application-data segment (multi-file mmap), the three DRAM
+//! management directories, and the per-core object caches; provides
+//! `allocate/deallocate`, the named-object API
+//! (`construct/find/destroy`), snapshotting (§3.4) and snapshot-
+//! consistent persistence (§3.3).
+//!
+//! ## Datastore layout (§3.6)
+//! ```text
+//! <dir>/
+//!   meta.bin          immutable geometry (magic, chunk & file size)
+//!   CLEAN             marker: present iff the store was closed cleanly
+//!   management.bin    chunk dir + bin bitsets + name dir (written on sync)
+//!   segment/chunk-NNNNNN   application data backing files
+//! ```
+//!
+//! ## Locking (§4.5.1)
+//! One mutex per bin, one for the chunk directory, one for the name
+//! directory. Nesting order is always bin → chunks; the two paper-listed
+//! serialization points (taking a fresh chunk; releasing an emptied
+//! chunk) are exactly the places the chunk lock nests inside a bin lock.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::alloc::bin_dir::BinData;
+use crate::alloc::chunk_dir::{ChunkDirectory, ChunkKind};
+use crate::alloc::name_dir::{type_fingerprint, NameDirectory, NamedEntry};
+use crate::alloc::object_cache::ObjectCache;
+use crate::alloc::size_class::{
+    bin_of, is_small, large_chunks, num_bins, size_of_bin, slots_per_chunk,
+};
+use crate::error::{Error, Result};
+use crate::storage::bsmmap::BsMsync;
+use crate::storage::reflink::{self, CopyMethod};
+use crate::storage::segment::{SegmentOptions, SegmentStorage};
+
+const META_MAGIC: &[u8; 8] = b"METALLV1";
+const MGMT_MAGIC: &[u8; 8] = b"METALLMG";
+const CLEAN_MARKER: &str = "CLEAN";
+
+/// Geometry and behaviour options. Geometry (chunk/file size) is fixed at
+/// create time and read back from `meta.bin` on open.
+#[derive(Clone, Debug)]
+pub struct ManagerOptions {
+    /// Chunk size (paper default 2 MiB).
+    pub chunk_size: usize,
+    /// Backing-file size (paper default 256 MB; our scaled default 64 MiB).
+    pub file_size: usize,
+    /// VM reservation (paper default "a few TB"; ours 64 GiB).
+    pub vm_reserve: usize,
+    /// bs-mmap mode: MAP_PRIVATE + user-level msync (§5).
+    pub private_mode: bool,
+    /// MAP_POPULATE on open.
+    pub populate: bool,
+    /// Punch file holes when freeing chunks (§6.4.2 disables on Lustre).
+    pub free_file_space: bool,
+    /// Parallel per-file msync on sync (§5.2).
+    pub parallel_sync: bool,
+}
+
+impl Default for ManagerOptions {
+    fn default() -> Self {
+        Self {
+            chunk_size: 2 << 20,
+            file_size: 64 << 20,
+            vm_reserve: 64 << 30,
+            private_mode: false,
+            populate: false,
+            free_file_space: true,
+            parallel_sync: true,
+        }
+    }
+}
+
+impl ManagerOptions {
+    /// Small geometry for tests: 64 KiB chunks, 1 MiB files.
+    pub fn small_for_tests() -> Self {
+        Self {
+            chunk_size: 64 << 10,
+            file_size: 1 << 20,
+            vm_reserve: 1 << 30,
+            ..Self::default()
+        }
+    }
+
+    fn segment_options(&self, read_only: bool) -> SegmentOptions {
+        let mut o = SegmentOptions::default()
+            .with_file_size(self.file_size)
+            .with_vm_reserve(self.vm_reserve);
+        o.populate = self.populate;
+        o.free_file_space = self.free_file_space;
+        if self.private_mode {
+            o = o.private_mode();
+        }
+        if read_only {
+            o = o.read_only();
+        }
+        o
+    }
+}
+
+/// Running counters (perf instrumentation; see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+pub struct AllocStats {
+    pub allocs: AtomicU64,
+    pub deallocs: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub fresh_chunks: AtomicU64,
+    pub freed_chunks: AtomicU64,
+    pub large_allocs: AtomicU64,
+}
+
+/// Snapshot of [`AllocStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub allocs: u64,
+    pub deallocs: u64,
+    pub cache_hits: u64,
+    pub fresh_chunks: u64,
+    pub freed_chunks: u64,
+    pub large_allocs: u64,
+}
+
+/// Marker for types that may live inside the persistent segment: plain
+/// old data only — no pointers/references/niches (paper §3.5: replace raw
+/// pointers with offset pointers; remove references & virtual functions).
+///
+/// # Safety
+/// Implementors guarantee `Self` is valid for any bit pattern written by
+/// a previous process (fixed layout, no padding-sensitive invariants, no
+/// pointers).
+pub unsafe trait Persist: Copy + 'static {}
+
+macro_rules! persist_pod {
+    ($($t:ty),*) => { $(unsafe impl Persist for $t {})* };
+}
+persist_pod!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64, usize, isize);
+unsafe impl<T: Persist, const N: usize> Persist for [T; N] {}
+unsafe impl<A: Persist, B: Persist> Persist for (A, B) {}
+
+/// The Metall manager. `Sync`: share it behind `&` across threads.
+pub struct MetallManager {
+    dir: PathBuf,
+    opts: ManagerOptions,
+    read_only: bool,
+    segment: SegmentStorage,
+    chunks: Mutex<ChunkDirectory>,
+    bins: Vec<Mutex<BinData>>,
+    cache: ObjectCache,
+    names: Mutex<NameDirectory>,
+    bs: Option<Mutex<BsMsync>>,
+    stats: AllocStats,
+    closed: AtomicBool,
+}
+
+impl MetallManager {
+    // ------------------------------------------------------ lifecycle --
+
+    /// Create a fresh datastore at `dir` with default options.
+    pub fn create(dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::create_with(dir, ManagerOptions::default())
+    }
+
+    pub fn create_with(dir: impl Into<PathBuf>, opts: ManagerOptions) -> Result<Self> {
+        let dir = dir.into();
+        if dir.join("meta.bin").exists() {
+            return Err(Error::Datastore(format!("datastore already exists at {dir:?}")));
+        }
+        std::fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
+        if !opts.chunk_size.is_power_of_two() || opts.chunk_size < 4096 {
+            return Err(Error::Config("chunk_size must be a power of two ≥ 4096".into()));
+        }
+        if opts.file_size % opts.chunk_size != 0 {
+            return Err(Error::Config("file_size must be a multiple of chunk_size".into()));
+        }
+        let segment = SegmentStorage::create(dir.join("segment"), opts.segment_options(false))?;
+        let nb = num_bins(opts.chunk_size);
+        let mgr = Self {
+            bins: (0..nb).map(|_| Mutex::new(BinData::new())).collect(),
+            cache: ObjectCache::new(nb),
+            chunks: Mutex::new(ChunkDirectory::new()),
+            names: Mutex::new(NameDirectory::new()),
+            bs: opts.private_mode.then(|| Mutex::new(BsMsync::new())),
+            segment,
+            read_only: false,
+            stats: AllocStats::default(),
+            closed: AtomicBool::new(false),
+            opts,
+            dir,
+        };
+        mgr.write_meta()?;
+        // store starts dirty; becomes clean on close()
+        Ok(mgr)
+    }
+
+    /// Open an existing, cleanly closed datastore read-write.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::open_with(dir, ManagerOptions::default(), false, false)
+    }
+
+    /// Open read-only (paper: `metall::open_read_only` — writes to the
+    /// mapping SIGSEGV; mutating APIs return errors). Multiple processes
+    /// may open the same store read-only (§3.6).
+    pub fn open_read_only(dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::open_with(dir, ManagerOptions::default(), true, false)
+    }
+
+    /// Open even if the store was not closed cleanly (the paper §3.3:
+    /// after a crash the backing files may be inconsistent — the
+    /// application should work on a duplicate).
+    pub fn open_unclean(dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::open_with(dir, ManagerOptions::default(), false, true)
+    }
+
+    pub fn open_with(
+        dir: impl Into<PathBuf>,
+        mut opts: ManagerOptions,
+        read_only: bool,
+        allow_unclean: bool,
+    ) -> Result<Self> {
+        let dir = dir.into();
+        let (chunk_size, file_size) = Self::read_meta(&dir)?;
+        opts.chunk_size = chunk_size;
+        opts.file_size = file_size;
+        let clean = dir.join(CLEAN_MARKER).exists();
+        if !clean && !allow_unclean {
+            return Err(Error::Datastore(format!(
+                "datastore {dir:?} was not closed cleanly; reattach a snapshot \
+                 or use open_unclean() after duplicating it (paper §3.3)"
+            )));
+        }
+        let segment = SegmentStorage::open(dir.join("segment"), opts.segment_options(read_only))?;
+        let nb = num_bins(opts.chunk_size);
+        let (chunks, bins, names) = Self::load_management(&dir, nb)?;
+        let mgr = Self {
+            bins: bins.into_iter().map(Mutex::new).collect(),
+            cache: ObjectCache::new(nb),
+            chunks: Mutex::new(chunks),
+            names: Mutex::new(names),
+            bs: (opts.private_mode && !read_only).then(|| Mutex::new(BsMsync::new())),
+            segment,
+            read_only,
+            stats: AllocStats::default(),
+            closed: AtomicBool::new(false),
+            opts,
+            dir,
+        };
+        mgr.validate_consistency()?;
+        if !read_only {
+            // mark dirty while we hold it read-write
+            let _ = std::fs::remove_file(mgr.dir.join(CLEAN_MARKER));
+        }
+        Ok(mgr)
+    }
+
+    fn write_meta(&self) -> Result<()> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(META_MAGIC);
+        buf.extend_from_slice(&(self.opts.chunk_size as u64).to_le_bytes());
+        buf.extend_from_slice(&(self.opts.file_size as u64).to_le_bytes());
+        let p = self.dir.join("meta.bin");
+        std::fs::write(&p, &buf).map_err(|e| Error::io(&p, e))
+    }
+
+    fn read_meta(dir: &Path) -> Result<(usize, usize)> {
+        let p = dir.join("meta.bin");
+        let buf = std::fs::read(&p).map_err(|e| Error::io(&p, e))?;
+        if buf.len() != 24 || &buf[0..8] != META_MAGIC {
+            return Err(Error::Datastore(format!("bad meta.bin in {dir:?}")));
+        }
+        let cs = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+        let fs = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+        Ok((cs, fs))
+    }
+
+    /// Flush application data and management data to the backing store
+    /// (the paper's snapshot-consistency point, §3.3).
+    pub fn sync(&self) -> Result<()> {
+        if self.read_only {
+            return Ok(());
+        }
+        // Return cached free objects to their bitsets so the serialized
+        // management data does not leak them.
+        self.flush_cache()?;
+        // 1. application data
+        match &self.bs {
+            Some(bs) => {
+                bs.lock().unwrap().msync(&self.segment)?;
+            }
+            None => self.segment.sync(self.opts.parallel_sync)?,
+        }
+        // 2. management data (atomic tmp+rename)
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MGMT_MAGIC);
+        buf.extend_from_slice(&(self.bins.len() as u32).to_le_bytes());
+        self.chunks.lock().unwrap().serialize_into(&mut buf);
+        for b in &self.bins {
+            b.lock().unwrap().serialize_into(&mut buf);
+        }
+        self.names.lock().unwrap().serialize_into(&mut buf);
+        let tmp = self.dir.join("management.bin.tmp");
+        let fin = self.dir.join("management.bin");
+        std::fs::write(&tmp, &buf).map_err(|e| Error::io(&tmp, e))?;
+        std::fs::rename(&tmp, &fin).map_err(|e| Error::io(&fin, e))?;
+        Ok(())
+    }
+
+    fn load_management(
+        dir: &Path,
+        nb: usize,
+    ) -> Result<(ChunkDirectory, Vec<BinData>, NameDirectory)> {
+        let p = dir.join("management.bin");
+        if !p.exists() {
+            // never synced: empty store
+            return Ok((ChunkDirectory::new(), (0..nb).map(|_| BinData::new()).collect(), NameDirectory::new()));
+        }
+        let buf = std::fs::read(&p).map_err(|e| Error::io(&p, e))?;
+        let bad = || Error::Datastore(format!("corrupt management.bin in {dir:?}"));
+        if buf.len() < 12 || &buf[0..8] != MGMT_MAGIC {
+            return Err(bad());
+        }
+        let file_nb = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+        if file_nb != nb {
+            return Err(bad());
+        }
+        let mut pos = 12;
+        let (chunks, used) = ChunkDirectory::deserialize_from(&buf[pos..]).ok_or_else(bad)?;
+        pos += used;
+        let mut bins = Vec::with_capacity(nb);
+        for _ in 0..nb {
+            let (b, used) = BinData::deserialize_from(&buf[pos..]).ok_or_else(bad)?;
+            pos += used;
+            bins.push(b);
+        }
+        let (names, used) = NameDirectory::deserialize_from(&buf[pos..]).ok_or_else(bad)?;
+        pos += used;
+        if pos != buf.len() {
+            return Err(bad());
+        }
+        Ok((chunks, bins, names))
+    }
+
+    /// Cross-check chunk directory against bin data (run on open).
+    fn validate_consistency(&self) -> Result<()> {
+        let chunks = self.chunks.lock().unwrap();
+        let err = |m: String| Error::Datastore(format!("inconsistent management data: {m}"));
+        for (id, kind) in chunks.iter() {
+            if let ChunkKind::Small { bin } = kind {
+                let b = self
+                    .bins
+                    .get(bin as usize)
+                    .ok_or_else(|| err(format!("chunk {id} has invalid bin {bin}")))?;
+                if b.lock().unwrap().bitset(id).is_none() {
+                    return Err(err(format!("chunk {id} missing bitset in bin {bin}")));
+                }
+            }
+        }
+        for (bin, b) in self.bins.iter().enumerate() {
+            for cid in b.lock().unwrap().chunk_ids() {
+                match chunks.kind(cid) {
+                    ChunkKind::Small { bin: kb } if kb as usize == bin => {}
+                    k => {
+                        return Err(err(format!(
+                            "bin {bin} owns chunk {cid} but chunk dir says {k:?}"
+                        )))
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot the datastore to `dst` (reflink when the filesystem
+    /// supports it, §3.4). The snapshot is marked CLEAN — it is
+    /// consistent by construction.
+    pub fn snapshot(&self, dst: impl AsRef<Path>) -> Result<CopyMethod> {
+        let dst = dst.as_ref();
+        self.sync()?;
+        let (_files, _bytes, method) = reflink::copy_dir(&self.dir, dst)?;
+        std::fs::write(dst.join(CLEAN_MARKER), b"").map_err(|e| Error::io(dst, e))?;
+        Ok(method)
+    }
+
+    /// Sync, serialize, and mark the store cleanly closed.
+    pub fn close(self) -> Result<()> {
+        self.close_inner()
+    }
+
+    fn close_inner(&self) -> Result<()> {
+        if self.closed.swap(true, Ordering::SeqCst) || self.read_only {
+            return Ok(());
+        }
+        self.sync()?;
+        let p = self.dir.join(CLEAN_MARKER);
+        std::fs::write(&p, b"").map_err(|e| Error::io(&p, e))?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------ accessors --
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.opts.chunk_size
+    }
+
+    pub fn is_read_only(&self) -> bool {
+        self.read_only
+    }
+
+    pub fn segment(&self) -> &SegmentStorage {
+        &self.segment
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            allocs: self.stats.allocs.load(Ordering::Relaxed),
+            deallocs: self.stats.deallocs.load(Ordering::Relaxed),
+            cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
+            fresh_chunks: self.stats.fresh_chunks.load(Ordering::Relaxed),
+            freed_chunks: self.stats.freed_chunks.load(Ordering::Relaxed),
+            large_allocs: self.stats.large_allocs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Occupied chunks × chunk size (VM-level usage).
+    pub fn used_segment_bytes(&self) -> usize {
+        self.chunks.lock().unwrap().used_chunks() * self.opts.chunk_size
+    }
+
+    // ----------------------------------------------------- allocation --
+
+    fn check_writable(&self) -> Result<()> {
+        if self.read_only {
+            return Err(Error::InvalidOp("datastore is open read-only".into()));
+        }
+        Ok(())
+    }
+
+    /// Allocate `size` bytes; returns the segment offset.
+    pub fn allocate(&self, size: usize) -> Result<u64> {
+        self.check_writable()?;
+        if size == 0 {
+            return Err(Error::Alloc("zero-size allocation".into()));
+        }
+        self.stats.allocs.fetch_add(1, Ordering::Relaxed);
+        let cs = self.opts.chunk_size;
+        if !is_small(size, cs) {
+            return self.allocate_large(size);
+        }
+        let bin = bin_of(size) as u32;
+        if let Some(off) = self.cache.pop(bin) {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(off);
+        }
+        let mut b = self.bins[bin as usize].lock().unwrap();
+        if let Some((chunk, slot)) = b.alloc_slot() {
+            return Ok(self.slot_offset(chunk, bin, slot));
+        }
+        // bin exhausted: take a fresh chunk (bin → chunks lock order)
+        let chunk = {
+            let mut chunks = self.chunks.lock().unwrap();
+            let chunk = chunks.take_small_chunk(bin);
+            if let Err(e) = self.segment.extend_to((chunk as usize + 1) * cs) {
+                chunks.free_small_chunk(chunk);
+                return Err(e);
+            }
+            chunk
+        };
+        self.stats.fresh_chunks.fetch_add(1, Ordering::Relaxed);
+        let slots = slots_per_chunk(bin as usize, cs) as u32;
+        let slot = b.add_chunk_and_alloc(chunk, slots);
+        Ok(self.slot_offset(chunk, bin, slot))
+    }
+
+    fn allocate_large(&self, size: usize) -> Result<u64> {
+        let cs = self.opts.chunk_size;
+        let n = large_chunks(size, cs) as u32;
+        self.stats.large_allocs.fetch_add(1, Ordering::Relaxed);
+        let mut chunks = self.chunks.lock().unwrap();
+        let head = chunks.take_large(n);
+        if let Err(e) = self.segment.extend_to((head + n) as usize * cs) {
+            chunks.free_large(head);
+            return Err(e);
+        }
+        Ok(head as u64 * cs as u64)
+    }
+
+    #[inline]
+    fn slot_offset(&self, chunk: u32, bin: u32, slot: u32) -> u64 {
+        chunk as u64 * self.opts.chunk_size as u64
+            + slot as u64 * size_of_bin(bin as usize) as u64
+    }
+
+    /// Deallocate a previously allocated offset. Like `free(3)`, the
+    /// size is derived from the allocator's own metadata.
+    pub fn deallocate(&self, offset: u64) -> Result<()> {
+        self.check_writable()?;
+        self.stats.deallocs.fetch_add(1, Ordering::Relaxed);
+        let cs = self.opts.chunk_size as u64;
+        let chunk = (offset / cs) as u32;
+        let kind = {
+            let chunks = self.chunks.lock().unwrap();
+            if (chunk as usize) >= chunks.len() {
+                return Err(Error::Alloc(format!("deallocate: offset {offset} out of range")));
+            }
+            chunks.kind(chunk)
+        };
+        match kind {
+            ChunkKind::Small { bin } => {
+                let class = size_of_bin(bin as usize) as u64;
+                if (offset % cs) % class != 0 {
+                    return Err(Error::Alloc(format!(
+                        "deallocate: offset {offset} not on a slot boundary"
+                    )));
+                }
+                let spill = self.cache.push(bin, offset);
+                if !spill.is_empty() {
+                    self.return_slots(bin, &spill)?;
+                }
+                Ok(())
+            }
+            ChunkKind::LargeHead { .. } => {
+                if offset % cs != 0 {
+                    return Err(Error::Alloc(format!(
+                        "deallocate: large offset {offset} not chunk-aligned"
+                    )));
+                }
+                let n = {
+                    let mut chunks = self.chunks.lock().unwrap();
+                    chunks.free_large(chunk)
+                };
+                // Large deallocations free physical + file space
+                // immediately (§4.1).
+                self.segment
+                    .free_range(chunk as usize * cs as usize, n as usize * cs as usize)?;
+                self.stats.freed_chunks.fetch_add(n as u64, Ordering::Relaxed);
+                Ok(())
+            }
+            ChunkKind::Free | ChunkKind::LargeBody => Err(Error::Alloc(format!(
+                "deallocate: offset {offset} is not the start of a live allocation"
+            ))),
+        }
+    }
+
+    /// Return freed slots to their bitsets (cache spill / close path).
+    fn return_slots(&self, bin: u32, offsets: &[u64]) -> Result<()> {
+        let cs = self.opts.chunk_size as u64;
+        let class = size_of_bin(bin as usize) as u64;
+        let mut b = self.bins[bin as usize].lock().unwrap();
+        for &off in offsets {
+            let chunk = (off / cs) as u32;
+            let slot = ((off % cs) / class) as u32;
+            let empty = b.free_slot(chunk, slot);
+            if empty {
+                // release the chunk entirely (bin → chunks order)
+                b.remove_chunk(chunk);
+                let mut chunks = self.chunks.lock().unwrap();
+                chunks.free_small_chunk(chunk);
+                drop(chunks);
+                self.segment
+                    .free_range(chunk as usize * cs as usize, cs as usize)?;
+                self.stats.freed_chunks.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(())
+    }
+
+    fn flush_cache(&self) -> Result<()> {
+        let drained = self.cache.drain_all();
+        // group by bin to take each bin lock once
+        let mut by_bin: std::collections::HashMap<u32, Vec<u64>> = Default::default();
+        for (bin, off) in drained {
+            by_bin.entry(bin).or_default().push(off);
+        }
+        for (bin, offs) in by_bin {
+            self.return_slots(bin, &offs)?;
+        }
+        Ok(())
+    }
+
+    // -------------------------------------------------- memory access --
+
+    /// Raw pointer to a segment offset.
+    ///
+    /// # Safety
+    /// `offset` must be inside a live allocation large enough for the
+    /// intended access, and aliasing rules are the caller's burden (the
+    /// persistent containers uphold them structurally).
+    pub unsafe fn ptr(&self, offset: u64) -> *mut u8 {
+        debug_assert!((offset as usize) < self.segment.mapped_len());
+        self.segment.base().add(offset as usize)
+    }
+
+    /// Read a POD value at `offset`.
+    pub fn read<T: Persist>(&self, offset: u64) -> T {
+        assert!(offset as usize + std::mem::size_of::<T>() <= self.segment.mapped_len());
+        unsafe { std::ptr::read_unaligned(self.ptr(offset) as *const T) }
+    }
+
+    /// Write a POD value at `offset`.
+    pub fn write<T: Persist>(&self, offset: u64, value: T) {
+        assert!(!self.read_only, "write on read-only datastore");
+        assert!(offset as usize + std::mem::size_of::<T>() <= self.segment.mapped_len());
+        unsafe { std::ptr::write_unaligned(self.ptr(offset) as *mut T, value) }
+    }
+
+    /// Byte-slice view of an allocation.
+    ///
+    /// # Safety
+    /// Same contract as [`Self::ptr`] plus no concurrent writer.
+    pub unsafe fn bytes(&self, offset: u64, len: usize) -> &[u8] {
+        self.segment.slice(offset as usize, len)
+    }
+
+    /// # Safety
+    /// Same as [`Self::bytes`] plus exclusivity.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn bytes_mut(&self, offset: u64, len: usize) -> &mut [u8] {
+        self.segment.slice_mut(offset as usize, len)
+    }
+
+    // ---------------------------------------------------- named (§3.2) --
+
+    /// Allocate, zero, and register `sizeof(T)` bytes under `name`
+    /// (Table 2: `construct<T>(name)`), returning the offset. Fails if
+    /// the name exists.
+    pub fn construct<T: Persist>(&self, name: &str, value: T) -> Result<u64> {
+        self.check_writable()?;
+        if std::mem::align_of::<T>() > 8 {
+            return Err(Error::Alloc(format!(
+                "construct: alignment {} > 8 unsupported",
+                std::mem::align_of::<T>()
+            )));
+        }
+        let size = std::mem::size_of::<T>().max(1);
+        let offset = self.allocate(size)?;
+        unsafe {
+            self.bytes_mut(offset, size).fill(0);
+        }
+        self.write(offset, value);
+        let entry = NamedEntry {
+            offset,
+            size: size as u64,
+            type_fp: type_fingerprint::<T>(),
+        };
+        let inserted = self.names.lock().unwrap().insert(name, entry);
+        if !inserted {
+            self.deallocate(offset)?;
+            return Err(Error::Name(format!("name {name:?} already exists")));
+        }
+        Ok(offset)
+    }
+
+    /// Find a previously constructed object (Table 2: `find<T>(name)`).
+    pub fn find<T: Persist>(&self, name: &str) -> Result<Option<u64>> {
+        let names = self.names.lock().unwrap();
+        match names.get(name) {
+            None => Ok(None),
+            Some(e) => {
+                if e.type_fp != type_fingerprint::<T>() {
+                    return Err(Error::Name(format!(
+                        "find: type mismatch for {name:?} (stored fingerprint differs)"
+                    )));
+                }
+                Ok(Some(e.offset))
+            }
+        }
+    }
+
+    /// Destroy a named object (Table 2: `destroy(name)`): deallocates and
+    /// unregisters. Returns false if the name does not exist.
+    pub fn destroy(&self, name: &str) -> Result<bool> {
+        self.check_writable()?;
+        let entry = self.names.lock().unwrap().remove(name);
+        match entry {
+            None => Ok(false),
+            Some(e) => {
+                self.deallocate(e.offset)?;
+                Ok(true)
+            }
+        }
+    }
+
+    /// Number of named objects.
+    pub fn num_named(&self) -> usize {
+        self.names.lock().unwrap().len()
+    }
+
+    /// List named objects (for the `inspect` CLI).
+    pub fn named_list(&self) -> Vec<(String, u64, u64)> {
+        self.names
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, e)| (n.to_string(), e.offset, e.size))
+            .collect()
+    }
+
+    /// Datastore health check (`metall doctor`): re-runs the management
+    /// consistency validation and audits every named object. Returns a
+    /// list of findings (empty = healthy). This is the "program that
+    /// assesses compatibility / integrity" the paper's §3.5 sketches as
+    /// future work.
+    pub fn doctor(&self) -> Result<Vec<String>> {
+        let mut findings = Vec::new();
+        if let Err(e) = self.validate_consistency() {
+            findings.push(format!("management data: {e}"));
+        }
+        let mapped = self.segment.mapped_len() as u64;
+        let cs = self.opts.chunk_size as u64;
+        let chunks = self.chunks.lock().unwrap();
+        for (name, e) in self.names.lock().unwrap().iter() {
+            if e.offset + e.size > mapped {
+                findings.push(format!(
+                    "named object {name:?} [{}..{}] exceeds mapped segment ({mapped})",
+                    e.offset,
+                    e.offset + e.size
+                ));
+                continue;
+            }
+            // the owning chunk must be live
+            let chunk = (e.offset / cs) as u32;
+            match chunks.kind(chunk) {
+                ChunkKind::Free => findings.push(format!(
+                    "named object {name:?} points into a FREE chunk {chunk}"
+                )),
+                ChunkKind::LargeBody => findings.push(format!(
+                    "named object {name:?} points into a large-body chunk {chunk}"
+                )),
+                ChunkKind::Small { bin } => {
+                    let class = size_of_bin(bin as usize) as u64;
+                    if e.size > class {
+                        findings.push(format!(
+                            "named object {name:?} ({}B) larger than its slot class ({class}B)",
+                            e.size
+                        ));
+                    }
+                }
+                ChunkKind::LargeHead { .. } => {}
+            }
+        }
+        // chunk accounting must be structurally valid
+        if !chunks.validate() {
+            findings.push("chunk directory structure invalid".into());
+        }
+        Ok(findings)
+    }
+
+    /// Explicit user-level msync statistics (bs-mmap mode only).
+    pub fn bs_msync(&self) -> Result<crate::storage::bsmmap::FlushStats> {
+        match &self.bs {
+            Some(bs) => bs.lock().unwrap().msync(&self.segment),
+            None => Err(Error::InvalidOp("not in bs-mmap (private) mode".into())),
+        }
+    }
+}
+
+impl Drop for MetallManager {
+    fn drop(&mut self) {
+        // Best-effort clean close (explicit close() is preferred and
+        // reports errors).
+        let _ = self.close_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn mk(dir: &Path) -> MetallManager {
+        MetallManager::create_with(dir, ManagerOptions::small_for_tests()).unwrap()
+    }
+
+    #[test]
+    fn allocate_roundtrip_and_reattach() {
+        let d = TempDir::new("mgr1");
+        let store = d.join("store");
+        let off;
+        {
+            let m = mk(&store);
+            off = m.allocate(16).unwrap();
+            m.write::<u64>(off, 0xDEADBEEF);
+            m.write::<u64>(off + 8, 42);
+            m.close().unwrap();
+        }
+        {
+            let m = MetallManager::open(&store).unwrap();
+            assert_eq!(m.read::<u64>(off), 0xDEADBEEF);
+            assert_eq!(m.read::<u64>(off + 8), 42);
+            m.close().unwrap();
+        }
+    }
+
+    #[test]
+    fn small_allocations_share_chunk_and_classes_separate() {
+        let d = TempDir::new("mgr2");
+        let m = mk(&d.join("s"));
+        let a = m.allocate(8).unwrap();
+        let b = m.allocate(8).unwrap();
+        let c = m.allocate(16).unwrap();
+        // same class → same chunk, adjacent slots
+        assert_eq!(b - a, 8);
+        // different class → different chunk
+        assert_ne!(c / 65536, a / 65536);
+    }
+
+    #[test]
+    fn cache_hit_on_realloc() {
+        let d = TempDir::new("mgr3");
+        let m = mk(&d.join("s"));
+        let a = m.allocate(64).unwrap();
+        m.deallocate(a).unwrap();
+        let b = m.allocate(64).unwrap();
+        assert_eq!(a, b, "object cache must return the freed slot (LIFO)");
+        assert_eq!(m.stats().cache_hits, 1);
+    }
+
+    #[test]
+    fn large_allocation_and_free_releases_file_space() {
+        let d = TempDir::new("mgr4");
+        let m = mk(&d.join("s"));
+        let cs = m.chunk_size();
+        let off = m.allocate(3 * cs).unwrap(); // rounds to 4 chunks
+        assert_eq!(off % cs as u64, 0);
+        unsafe { m.bytes_mut(off, 3 * cs).fill(0xAB) };
+        m.sync().unwrap();
+        let before = m.segment().allocated_file_blocks().unwrap();
+        m.deallocate(off).unwrap();
+        let after = m.segment().allocated_file_blocks().unwrap();
+        assert!(after < before, "{before} -> {after}");
+        // next large alloc reuses the hole
+        let off2 = m.allocate(2 * cs).unwrap();
+        assert_eq!(off2, off);
+    }
+
+    #[test]
+    fn named_construct_find_destroy() {
+        let d = TempDir::new("mgr5");
+        let store = d.join("s");
+        {
+            let m = mk(&store);
+            let off = m.construct::<u64>("answer", 42).unwrap();
+            assert_eq!(m.read::<u64>(off), 42);
+            assert!(m.construct::<u64>("answer", 43).is_err(), "duplicate name");
+            m.close().unwrap();
+        }
+        {
+            let m = MetallManager::open(&store).unwrap();
+            let off = m.find::<u64>("answer").unwrap().expect("must exist");
+            assert_eq!(m.read::<u64>(off), 42);
+            // wrong type is rejected
+            assert!(m.find::<u32>("answer").is_err());
+            assert!(m.destroy("answer").unwrap());
+            assert!(!m.destroy("answer").unwrap());
+            assert_eq!(m.find::<u64>("answer").unwrap(), None);
+            m.close().unwrap();
+        }
+    }
+
+    #[test]
+    fn read_only_mode_blocks_mutation() {
+        let d = TempDir::new("mgr6");
+        let store = d.join("s");
+        {
+            let m = mk(&store);
+            m.construct::<u64>("x", 7).unwrap();
+            m.close().unwrap();
+        }
+        let m = MetallManager::open_read_only(&store).unwrap();
+        let off = m.find::<u64>("x").unwrap().unwrap();
+        assert_eq!(m.read::<u64>(off), 7);
+        assert!(m.allocate(8).is_err());
+        assert!(m.destroy("x").is_err());
+        assert!(m.construct::<u64>("y", 1).is_err());
+        // two read-only opens may coexist (§3.6)
+        let m2 = MetallManager::open_read_only(&store).unwrap();
+        assert_eq!(m2.read::<u64>(off), 7);
+    }
+
+    #[test]
+    fn unclean_store_is_refused() {
+        let d = TempDir::new("mgr7");
+        let store = d.join("s");
+        {
+            let m = mk(&store);
+            m.allocate(8).unwrap();
+            m.sync().unwrap();
+            // simulate crash: forget without close
+            std::mem::forget(m);
+        }
+        assert!(MetallManager::open(&store).is_err(), "dirty store must be refused");
+        let m = MetallManager::open_unclean(&store).unwrap();
+        m.close().unwrap();
+        // now clean again
+        MetallManager::open(&store).unwrap().close().unwrap();
+    }
+
+    #[test]
+    fn snapshot_is_clean_and_independent() {
+        let d = TempDir::new("mgr8");
+        let store = d.join("s");
+        let snap = d.join("snap");
+        let m = mk(&store);
+        let off = m.construct::<u64>("v", 1).unwrap();
+        m.snapshot(&snap).unwrap();
+        // mutate original after snapshot
+        m.write::<u64>(off, 2);
+        m.sync().unwrap();
+        // snapshot opens clean and sees the old value
+        let s = MetallManager::open(&snap).unwrap();
+        let soff = s.find::<u64>("v").unwrap().unwrap();
+        assert_eq!(s.read::<u64>(soff), 1);
+        s.close().unwrap();
+        assert_eq!(m.read::<u64>(off), 2);
+    }
+
+    #[test]
+    fn multithreaded_alloc_dealloc_stress() {
+        let d = TempDir::new("mgr9");
+        let m = mk(&d.join("s"));
+        let nthreads = 8;
+        let per = 500;
+        std::thread::scope(|s| {
+            for t in 0..nthreads {
+                let m = &m;
+                s.spawn(move || {
+                    let mut offs = Vec::new();
+                    for i in 0..per {
+                        let size = 8 + ((t * 13 + i * 7) % 500);
+                        let off = m.allocate(size).unwrap();
+                        // write a tag, verify later
+                        m.write::<u64>(off, (t * per + i) as u64);
+                        offs.push((off, (t * per + i) as u64, size));
+                    }
+                    // verify all, free half
+                    for (j, &(off, tag, _)) in offs.iter().enumerate() {
+                        assert_eq!(m.read::<u64>(off), tag, "thread {t} obj {j}");
+                    }
+                    for &(off, _, _) in offs.iter().step_by(2) {
+                        m.deallocate(off).unwrap();
+                    }
+                });
+            }
+        });
+        let st = m.stats();
+        assert_eq!(st.allocs, (nthreads * per) as u64);
+        assert_eq!(st.deallocs, (nthreads * per / 2) as u64);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn no_overlap_under_concurrency() {
+        use std::collections::HashSet;
+        let d = TempDir::new("mgr10");
+        let m = mk(&d.join("s"));
+        let results: Vec<Vec<(u64, usize)>> = std::thread::scope(|s| {
+            (0..4)
+                .map(|_t| {
+                    let m = &m;
+                    s.spawn(move || {
+                        (0..300)
+                            .map(|i| {
+                                let size = 8 << (i % 4); // 8,16,32,64
+                                (m.allocate(size).unwrap(), size)
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        let mut seen = HashSet::new();
+        for (off, size) in results.into_iter().flatten() {
+            // class-rounded extent must not overlap any other allocation
+            let class = size_of_bin(bin_of(size));
+            for b in (off..off + class as u64).step_by(8) {
+                assert!(seen.insert(b), "overlap at {b}");
+            }
+        }
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn empty_chunk_is_released() {
+        let d = TempDir::new("mgr11");
+        let m = mk(&d.join("s"));
+        // fill exactly one chunk of 32 KiB-class objects (64 KiB chunk → 2 slots)
+        let a = m.allocate(32 << 10).unwrap();
+        let b = m.allocate(32 << 10).unwrap();
+        m.deallocate(a).unwrap();
+        m.deallocate(b).unwrap();
+        // force the cache out
+        m.sync().unwrap();
+        assert_eq!(m.stats().freed_chunks >= 1, true);
+        assert_eq!(m.used_segment_bytes(), 0);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn bad_deallocates_are_rejected() {
+        let d = TempDir::new("mgr12");
+        let m = mk(&d.join("s"));
+        let off = m.allocate(8).unwrap();
+        assert!(m.deallocate(off + 4).is_err(), "mid-slot offset");
+        assert!(m.deallocate(10 << 20).is_err(), "out of range");
+        m.deallocate(off).unwrap();
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn zero_size_alloc_rejected() {
+        let d = TempDir::new("mgr13");
+        let m = mk(&d.join("s"));
+        assert!(m.allocate(0).is_err());
+    }
+
+    #[test]
+    fn doctor_reports_healthy_after_churn() {
+        let d = TempDir::new("mgr15");
+        let m = mk(&d.join("s"));
+        for i in 0..100u64 {
+            m.construct::<u64>(&format!("k{i}"), i).unwrap();
+        }
+        for i in (0..100u64).step_by(2) {
+            m.destroy(&format!("k{i}")).unwrap();
+        }
+        let big = m.allocate(200 << 10).unwrap();
+        m.deallocate(big).unwrap();
+        assert!(m.doctor().unwrap().is_empty(), "healthy store, no findings");
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn private_mode_persists_via_user_msync() {
+        let d = TempDir::new("mgr14");
+        let store = d.join("s");
+        {
+            let mut o = ManagerOptions::small_for_tests();
+            o.private_mode = true;
+            let m = MetallManager::create_with(&store, o).unwrap();
+            let off = m.construct::<u64>("bs", 99).unwrap();
+            let st = m.bs_msync().unwrap();
+            assert!(st.dirty_pages > 0);
+            let _ = off;
+            m.close().unwrap();
+        }
+        let m = MetallManager::open(&store).unwrap();
+        let off = m.find::<u64>("bs").unwrap().unwrap();
+        assert_eq!(m.read::<u64>(off), 99);
+        m.close().unwrap();
+    }
+}

@@ -1,0 +1,305 @@
+//! Compact multi-layer bitset (paper §4.3.1).
+//!
+//! "Metall utilizes a compact multi-layer bitset table and built-in bit
+//! operation functions to manage available slots in a chunk … It can
+//! manage up to 64³ (= 2^18) slots using a three-layer structure …
+//! Metall calls a built-in bit operation function at most three times to
+//! find an available slot."
+//!
+//! Layer 2 is the actual slot bitmap (1 = occupied); layer 1 marks fully
+//! occupied layer-2 words; layer 0 marks fully occupied layer-1 words.
+//! `find_and_set_first_zero` descends 0→1→2 with one trailing-zeros scan
+//! per layer.
+
+use crate::util::bits::lowest_zero;
+use crate::util::div_ceil;
+
+/// Up to 64³ slots, lazily sized for `capacity`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MlBitset {
+    capacity: u32,
+    used: u32,
+    l0: u64,
+    l1: Vec<u64>,
+    l2: Vec<u64>,
+}
+
+pub const MAX_SLOTS: u32 = 64 * 64 * 64;
+
+impl MlBitset {
+    pub fn new(capacity: u32) -> Self {
+        assert!(capacity >= 1 && capacity <= MAX_SLOTS, "capacity {capacity}");
+        let n2 = div_ceil(capacity as usize, 64);
+        let n1 = div_ceil(n2, 64);
+        let mut s = Self {
+            capacity,
+            used: 0,
+            l0: 0,
+            l1: vec![0; n1],
+            l2: vec![0; n2],
+        };
+        // Pre-mark the out-of-capacity tail as occupied so the scan never
+        // hands out a slot ≥ capacity.
+        for slot in capacity..(n2 as u32 * 64) {
+            s.set_raw(slot);
+        }
+        s.used = 0; // tail marking is not "use"
+        s
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    /// Number of occupied (real) slots.
+    pub fn used(&self) -> u32 {
+        self.used
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.used == self.capacity
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.used == 0
+    }
+
+    fn set_raw(&mut self, slot: u32) {
+        let w2 = (slot / 64) as usize;
+        let b2 = slot % 64;
+        self.l2[w2] |= 1 << b2;
+        if self.l2[w2] == u64::MAX {
+            let w1 = w2 / 64;
+            self.l1[w1] |= 1 << (w2 % 64);
+            // a partially-present last l1 word never saturates l0 falsely:
+            // missing l2 words are absent, so pad virtually with ones
+            let full_l1 = self.l1_word_full(w1);
+            if full_l1 {
+                self.l0 |= 1 << (w1 % 64);
+            }
+        }
+    }
+
+    /// Is layer-1 word `w1` fully occupied, accounting for the virtual
+    /// all-ones padding beyond the allocated l2 words?
+    fn l1_word_full(&self, w1: usize) -> bool {
+        let lo = w1 * 64;
+        let hi = ((w1 + 1) * 64).min(self.l2.len());
+        let mut word = self.l1[w1];
+        // virtually set bits for non-existent l2 words
+        for missing in (hi - lo)..64 {
+            word |= 1 << missing;
+        }
+        word == u64::MAX
+    }
+
+    /// Find the first free slot, mark it occupied, return its index.
+    /// At most three word scans (the paper's bound).
+    pub fn find_and_set_first_zero(&mut self) -> Option<u32> {
+        if self.is_full() {
+            return None;
+        }
+        // layer 0: find an l1 word with room (virtual padding for absent
+        // l1 words)
+        let mut l0 = self.l0;
+        for missing in self.l1.len()..64 {
+            l0 |= 1 << missing;
+        }
+        let w1 = lowest_zero(l0)? as usize;
+        // layer 1: find an l2 word with room
+        let lo = w1 * 64;
+        let hi = ((w1 + 1) * 64).min(self.l2.len());
+        let mut word1 = self.l1[w1];
+        for missing in (hi - lo)..64 {
+            word1 |= 1 << missing;
+        }
+        let w2rel = lowest_zero(word1)? as usize;
+        let w2 = lo + w2rel;
+        // layer 2: find the free slot
+        let b = lowest_zero(self.l2[w2])?;
+        let slot = (w2 as u32) * 64 + b;
+        debug_assert!(slot < self.capacity);
+        self.set_raw(slot);
+        self.used += 1;
+        Some(slot)
+    }
+
+    /// Mark `slot` occupied (returns false if it already was).
+    pub fn set(&mut self, slot: u32) -> bool {
+        assert!(slot < self.capacity);
+        if self.get(slot) {
+            return false;
+        }
+        self.set_raw(slot);
+        self.used += 1;
+        true
+    }
+
+    /// Free `slot` (returns false if it was not occupied).
+    pub fn clear(&mut self, slot: u32) -> bool {
+        assert!(slot < self.capacity, "slot {slot} >= capacity {}", self.capacity);
+        let w2 = (slot / 64) as usize;
+        let b2 = slot % 64;
+        if self.l2[w2] & (1 << b2) == 0 {
+            return false;
+        }
+        self.l2[w2] &= !(1 << b2);
+        let w1 = w2 / 64;
+        self.l1[w1] &= !(1 << (w2 % 64));
+        self.l0 &= !(1 << (w1 % 64));
+        self.used -= 1;
+        true
+    }
+
+    pub fn get(&self, slot: u32) -> bool {
+        assert!(slot < self.capacity);
+        self.l2[(slot / 64) as usize] & (1 << (slot % 64)) != 0
+    }
+
+    // ---- serialization (management data is persisted on close, §4.3) ----
+
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.capacity.to_le_bytes());
+        out.extend_from_slice(&self.used.to_le_bytes());
+        for w in &self.l2 {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+
+    pub fn deserialize_from(buf: &[u8]) -> Option<(Self, usize)> {
+        if buf.len() < 8 {
+            return None;
+        }
+        let capacity = u32::from_le_bytes(buf[0..4].try_into().ok()?);
+        let used = u32::from_le_bytes(buf[4..8].try_into().ok()?);
+        if capacity == 0 || capacity > MAX_SLOTS {
+            return None;
+        }
+        let n2 = div_ceil(capacity as usize, 64);
+        if buf.len() < 8 + n2 * 8 {
+            return None;
+        }
+        let mut s = Self::new(capacity);
+        let mut real_used = 0;
+        for (i, chunkb) in buf[8..8 + n2 * 8].chunks_exact(8).enumerate() {
+            let word = u64::from_le_bytes(chunkb.try_into().ok()?);
+            for b in 0..64 {
+                let slot = (i * 64 + b) as u32;
+                if slot < capacity && word & (1 << b) != 0 {
+                    s.set(slot);
+                    real_used += 1;
+                }
+            }
+        }
+        if real_used != used {
+            return None; // corrupt management data
+        }
+        Some((s, 8 + n2 * 8))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256ss;
+
+    #[test]
+    fn sequential_fill_and_drain() {
+        let mut bs = MlBitset::new(130); // crosses word boundaries
+        for expect in 0..130 {
+            assert_eq!(bs.find_and_set_first_zero(), Some(expect));
+        }
+        assert!(bs.is_full());
+        assert_eq!(bs.find_and_set_first_zero(), None);
+        for slot in 0..130 {
+            assert!(bs.clear(slot));
+        }
+        assert!(bs.is_empty());
+    }
+
+    #[test]
+    fn first_fit_order_after_clear() {
+        let mut bs = MlBitset::new(256);
+        for _ in 0..256 {
+            bs.find_and_set_first_zero();
+        }
+        bs.clear(77);
+        bs.clear(200);
+        bs.clear(3);
+        assert_eq!(bs.find_and_set_first_zero(), Some(3));
+        assert_eq!(bs.find_and_set_first_zero(), Some(77));
+        assert_eq!(bs.find_and_set_first_zero(), Some(200));
+        assert_eq!(bs.find_and_set_first_zero(), None);
+    }
+
+    #[test]
+    fn capacity_one_and_max_group() {
+        let mut bs = MlBitset::new(1);
+        assert_eq!(bs.find_and_set_first_zero(), Some(0));
+        assert_eq!(bs.find_and_set_first_zero(), None);
+        bs.clear(0);
+        assert_eq!(bs.find_and_set_first_zero(), Some(0));
+
+        // 2^18 slots — the paper's maximum (8 B objects in 2 MiB chunks)
+        let mut big = MlBitset::new(MAX_SLOTS);
+        for i in 0..1000 {
+            assert_eq!(big.find_and_set_first_zero(), Some(i));
+        }
+    }
+
+    #[test]
+    fn double_set_and_clear_are_detected() {
+        let mut bs = MlBitset::new(64);
+        assert!(bs.set(10));
+        assert!(!bs.set(10));
+        assert!(bs.clear(10));
+        assert!(!bs.clear(10));
+    }
+
+    #[test]
+    fn random_workout_against_model() {
+        let mut bs = MlBitset::new(777);
+        let mut model = vec![false; 777];
+        let mut rng = Xoshiro256ss::new(5);
+        for _ in 0..50_000 {
+            let slot = rng.gen_range(777) as u32;
+            if rng.next_f64() < 0.5 {
+                assert_eq!(bs.set(slot), !model[slot as usize]);
+                model[slot as usize] = true;
+            } else {
+                assert_eq!(bs.clear(slot), model[slot as usize]);
+                model[slot as usize] = false;
+            }
+            assert_eq!(bs.used() as usize, model.iter().filter(|&&x| x).count());
+        }
+        // find_and_set must return the first free slot per the model
+        let first_free = model.iter().position(|&x| !x);
+        assert_eq!(bs.find_and_set_first_zero(), first_free.map(|x| x as u32));
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut bs = MlBitset::new(300);
+        let mut rng = Xoshiro256ss::new(8);
+        for _ in 0..150 {
+            let s = rng.gen_range(300) as u32;
+            bs.set(s);
+        }
+        let mut buf = Vec::new();
+        bs.serialize_into(&mut buf);
+        let (de, consumed) = MlBitset::deserialize_from(&buf).unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(de, bs);
+    }
+
+    #[test]
+    fn deserialize_rejects_corruption() {
+        let mut bs = MlBitset::new(64);
+        bs.set(0);
+        let mut buf = Vec::new();
+        bs.serialize_into(&mut buf);
+        buf[4] = 99; // wrong used count
+        assert!(MlBitset::deserialize_from(&buf).is_none());
+        assert!(MlBitset::deserialize_from(&[1, 2, 3]).is_none());
+    }
+}

@@ -1,0 +1,23 @@
+//! The Metall persistent memory allocator (paper §3–§4).
+//!
+//! Architecture (paper Fig 2): the application-data **segment** (a
+//! reserved VM extent backed by on-demand files, [`crate::storage::segment`])
+//! is divided into **chunks** (2 MiB by default). A chunk holds either
+//! *small objects* of one internal allocation size (8 B … half a chunk,
+//! tracked by a multi-layer bitset) or the head/body of a *large object*
+//! spanning ≥ 1 contiguous chunks. Three management directories — chunk
+//! directory, bin directory, name directory — live in **DRAM** and are
+//! serialized to the datastore on close (§4.3: "Metall rarely touches
+//! persistent memory when allocating memory").
+
+pub mod api;
+pub mod size_class;
+pub mod mlbitset;
+pub mod chunk_dir;
+pub mod bin_dir;
+pub mod object_cache;
+pub mod name_dir;
+pub mod manager;
+
+pub use api::SegmentAlloc;
+pub use manager::{ManagerOptions, MetallManager, Persist};

@@ -1,0 +1,158 @@
+//! Name directory (paper §4.3.3): "a simple key-value table. When an
+//! object is constructed by construct() … some attributes (e.g., key
+//! string and address) of the object are stored here."
+//!
+//! We store `(segment offset, byte length, type fingerprint)` per name;
+//! the fingerprint lets `find::<T>` reject a type-confused reattach.
+
+use std::collections::HashMap;
+
+/// Attributes of one named allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NamedEntry {
+    pub offset: u64,
+    pub size: u64,
+    pub type_fp: u64,
+}
+
+/// The key→attributes table.
+#[derive(Clone, Debug, Default)]
+pub struct NameDirectory {
+    map: HashMap<String, NamedEntry>,
+}
+
+/// Compile-time-ish fingerprint of a type: hash of its name, size and
+/// alignment. (Rust has no stable `TypeId` across builds; this is the
+/// pragmatic equivalent of Metall trusting the application's `T`.)
+pub fn type_fingerprint<T: 'static>() -> u64 {
+    let name = std::any::type_name::<T>();
+    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h ^= std::mem::size_of::<T>() as u64;
+    h = h.wrapping_mul(0x100_0000_01b3);
+    h ^= std::mem::align_of::<T>() as u64;
+    h
+}
+
+impl NameDirectory {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a name; fails (returns false) if it already exists —
+    /// construct() with a duplicate key is an application error.
+    pub fn insert(&mut self, name: &str, e: NamedEntry) -> bool {
+        if self.map.contains_key(name) {
+            return false;
+        }
+        self.map.insert(name.to_string(), e);
+        true
+    }
+
+    pub fn get(&self, name: &str) -> Option<NamedEntry> {
+        self.map.get(name).copied()
+    }
+
+    pub fn remove(&mut self, name: &str) -> Option<NamedEntry> {
+        self.map.remove(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, NamedEntry)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    // ---- serialization ----
+
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
+        let mut names: Vec<&String> = self.map.keys().collect();
+        names.sort(); // deterministic
+        out.extend_from_slice(&(names.len() as u32).to_le_bytes());
+        for name in names {
+            let e = &self.map[name];
+            let nb = name.as_bytes();
+            out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            out.extend_from_slice(nb);
+            out.extend_from_slice(&e.offset.to_le_bytes());
+            out.extend_from_slice(&e.size.to_le_bytes());
+            out.extend_from_slice(&e.type_fp.to_le_bytes());
+        }
+    }
+
+    pub fn deserialize_from(buf: &[u8]) -> Option<(Self, usize)> {
+        let n = u32::from_le_bytes(buf.get(0..4)?.try_into().ok()?) as usize;
+        let mut pos = 4;
+        let mut dir = Self::new();
+        for _ in 0..n {
+            let len = u16::from_le_bytes(buf.get(pos..pos + 2)?.try_into().ok()?) as usize;
+            pos += 2;
+            let name = std::str::from_utf8(buf.get(pos..pos + len)?).ok()?;
+            pos += len;
+            let offset = u64::from_le_bytes(buf.get(pos..pos + 8)?.try_into().ok()?);
+            let size = u64::from_le_bytes(buf.get(pos + 8..pos + 16)?.try_into().ok()?);
+            let type_fp = u64::from_le_bytes(buf.get(pos + 16..pos + 24)?.try_into().ok()?);
+            pos += 24;
+            if !dir.insert(name, NamedEntry { offset, size, type_fp }) {
+                return None; // duplicate key = corruption
+            }
+        }
+        Some((dir, pos))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove() {
+        let mut d = NameDirectory::new();
+        let e = NamedEntry { offset: 64, size: 8, type_fp: 1 };
+        assert!(d.insert("graph", e));
+        assert!(!d.insert("graph", e), "duplicate insert must fail");
+        assert_eq!(d.get("graph"), Some(e));
+        assert_eq!(d.remove("graph"), Some(e));
+        assert_eq!(d.get("graph"), None);
+    }
+
+    #[test]
+    fn type_fingerprints_differ() {
+        assert_ne!(type_fingerprint::<u64>(), type_fingerprint::<i64>());
+        assert_ne!(type_fingerprint::<u32>(), type_fingerprint::<u64>());
+        assert_eq!(type_fingerprint::<u64>(), type_fingerprint::<u64>());
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let mut d = NameDirectory::new();
+        d.insert("a", NamedEntry { offset: 1, size: 2, type_fp: 3 });
+        d.insert("bb", NamedEntry { offset: 4, size: 5, type_fp: 6 });
+        d.insert("— utf8 name ✓", NamedEntry { offset: 7, size: 8, type_fp: 9 });
+        let mut buf = Vec::new();
+        d.serialize_into(&mut buf);
+        let (de, used) = NameDirectory::deserialize_from(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(de.len(), 3);
+        assert_eq!(de.get("bb"), d.get("bb"));
+        assert_eq!(de.get("— utf8 name ✓"), d.get("— utf8 name ✓"));
+    }
+
+    #[test]
+    fn deserialize_rejects_truncation() {
+        let mut d = NameDirectory::new();
+        d.insert("abc", NamedEntry { offset: 1, size: 2, type_fp: 3 });
+        let mut buf = Vec::new();
+        d.serialize_into(&mut buf);
+        assert!(NameDirectory::deserialize_from(&buf[..buf.len() - 3]).is_none());
+    }
+}

@@ -1,0 +1,146 @@
+//! Per-core free-object caches (paper §4.5.2).
+//!
+//! "Since Metall is designed to deal with larger data than existing
+//! memory allocators, we decided to employ free-object caches at the CPU
+//! core level only to simplify its implementation."
+//!
+//! A deallocated small object lands in the cache slot of the CPU core the
+//! calling thread runs on; a subsequent allocation of the same bin pops
+//! it without touching the bin or chunk directories. Each (core, bin)
+//! queue is bounded; overflow spills half the queue back to the bin
+//! directory through the manager.
+
+use std::sync::Mutex;
+
+/// Max objects cached per (core, bin).
+pub const PER_BIN_CAP: usize = 64;
+
+struct CoreCache {
+    by_bin: Vec<Vec<u64>>, // offsets
+}
+
+/// The cache array: one slot per CPU core.
+pub struct ObjectCache {
+    cores: Vec<Mutex<CoreCache>>,
+}
+
+impl ObjectCache {
+    pub fn new(num_bins: usize) -> Self {
+        let ncores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::with_cores(ncores, num_bins)
+    }
+
+    pub fn with_cores(ncores: usize, num_bins: usize) -> Self {
+        let cores = (0..ncores.max(1))
+            .map(|_| Mutex::new(CoreCache { by_bin: vec![Vec::new(); num_bins] }))
+            .collect();
+        Self { cores }
+    }
+
+    /// Cache slot for the current thread (sched_getcpu, clamped).
+    fn core_slot(&self) -> usize {
+        let cpu = unsafe { libc::sched_getcpu() };
+        if cpu < 0 {
+            0
+        } else {
+            cpu as usize % self.cores.len()
+        }
+    }
+
+    /// Try to pop a cached object of `bin`.
+    pub fn pop(&self, bin: u32) -> Option<u64> {
+        let mut c = self.cores[self.core_slot()].lock().unwrap();
+        c.by_bin[bin as usize].pop()
+    }
+
+    /// Push a freed object. Returns the overflow spill (possibly empty):
+    /// offsets the caller must return to the bin directory.
+    pub fn push(&self, bin: u32, offset: u64) -> Vec<u64> {
+        let mut c = self.cores[self.core_slot()].lock().unwrap();
+        let q = &mut c.by_bin[bin as usize];
+        q.push(offset);
+        if q.len() > PER_BIN_CAP {
+            // spill the older half (keep the hot top of the LIFO)
+            let keep = PER_BIN_CAP / 2;
+            let spill: Vec<u64> = q.drain(..q.len() - keep).collect();
+            return spill;
+        }
+        Vec::new()
+    }
+
+    /// Drain everything (manager close / serialize path).
+    pub fn drain_all(&self) -> Vec<(u32, u64)> {
+        let mut out = Vec::new();
+        for core in &self.cores {
+            let mut c = core.lock().unwrap();
+            for (bin, q) in c.by_bin.iter_mut().enumerate() {
+                out.extend(q.drain(..).map(|off| (bin as u32, off)));
+            }
+        }
+        out
+    }
+
+    /// Total cached objects (stats).
+    pub fn len(&self) -> usize {
+        self.cores
+            .iter()
+            .map(|c| c.lock().unwrap().by_bin.iter().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pop_hits_lifo() {
+        let c = ObjectCache::with_cores(1, 4);
+        assert!(c.pop(0).is_none());
+        assert!(c.push(0, 100).is_empty());
+        assert!(c.push(0, 200).is_empty());
+        assert_eq!(c.pop(0), Some(200));
+        assert_eq!(c.pop(0), Some(100));
+        assert!(c.pop(0).is_none());
+    }
+
+    #[test]
+    fn bins_are_separate() {
+        let c = ObjectCache::with_cores(1, 4);
+        c.push(1, 11);
+        c.push(2, 22);
+        assert!(c.pop(0).is_none());
+        assert_eq!(c.pop(2), Some(22));
+        assert_eq!(c.pop(1), Some(11));
+    }
+
+    #[test]
+    fn overflow_spills_older_half() {
+        let c = ObjectCache::with_cores(1, 1);
+        let mut spilled = Vec::new();
+        for i in 0..(PER_BIN_CAP as u64 + 1) {
+            spilled.extend(c.push(0, i));
+        }
+        assert_eq!(spilled.len(), PER_BIN_CAP + 1 - PER_BIN_CAP / 2);
+        // oldest offsets are the ones spilled
+        assert_eq!(spilled[0], 0);
+        // the hot top is still cached
+        assert_eq!(c.pop(0), Some(PER_BIN_CAP as u64));
+    }
+
+    #[test]
+    fn drain_returns_everything() {
+        let c = ObjectCache::with_cores(2, 3);
+        c.push(0, 1);
+        c.push(1, 2);
+        c.push(2, 3);
+        let mut drained = c.drain_all();
+        drained.sort_unstable();
+        assert_eq!(drained, vec![(0, 1), (1, 2), (2, 3)]);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,295 @@
+//! Boost.Interprocess-style baseline (paper §6.3.1, §8.2).
+//!
+//! "BIP uses a single tree to manage memory allocations — such design
+//! will suffer from many allocations and not scale well with multiple
+//! threads due to lock contention; it is not capable of deallocating
+//! file (persistent memory) space."
+//!
+//! Faithfully reproduced architecture: best-fit over an ordered free-
+//! block set, boundary-tag headers in the segment, first-class
+//! coalescing — all behind **one global mutex**; file space is never
+//! punched.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::alloc::SegmentAlloc;
+use crate::baselines::BenchAllocator;
+use crate::error::{Error, Result};
+use crate::storage::segment::{SegmentOptions, SegmentStorage};
+use crate::util::align_up;
+
+const HDR: u64 = 8; // per-block size header (boundary tag)
+const MIN_BLOCK: u64 = 32;
+
+struct Heap {
+    /// offset → size of every *free* block (address-ordered, for
+    /// coalescing).
+    by_addr: BTreeMap<u64, u64>,
+    /// (size, offset) of every free block (size-ordered, for best-fit).
+    by_size: BTreeSet<(u64, u64)>,
+    /// Bump frontier.
+    top: u64,
+}
+
+impl Heap {
+    fn insert_free(&mut self, off: u64, size: u64) {
+        self.by_addr.insert(off, size);
+        self.by_size.insert((size, off));
+    }
+
+    fn remove_free(&mut self, off: u64, size: u64) {
+        self.by_addr.remove(&off);
+        self.by_size.remove(&(size, off));
+    }
+}
+
+/// The single-lock managed-mapped-file allocator.
+pub struct BipAllocator {
+    segment: SegmentStorage,
+    heap: Mutex<Heap>,
+    dir: PathBuf,
+}
+
+impl BipAllocator {
+    pub fn create(dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::create_with(dir, SegmentOptions::default())
+    }
+
+    pub fn create_with(dir: impl Into<PathBuf>, opts: SegmentOptions) -> Result<Self> {
+        let dir = dir.into();
+        let segment = SegmentStorage::create(dir.join("segment"), opts)?;
+        Ok(Self {
+            segment,
+            heap: Mutex::new(Heap { by_addr: BTreeMap::new(), by_size: BTreeSet::new(), top: 0 }),
+            dir,
+        })
+    }
+
+    /// Reattach. The free list is restored from `bip_free.bin` (written
+    /// by [`Self::close`]).
+    pub fn open(dir: impl Into<PathBuf>, opts: SegmentOptions) -> Result<Self> {
+        let dir = dir.into();
+        let segment = SegmentStorage::open(dir.join("segment"), opts)?;
+        let p = dir.join("bip_free.bin");
+        let buf = std::fs::read(&p).map_err(|e| Error::io(&p, e))?;
+        if buf.len() < 16 || (buf.len() - 8) % 16 != 0 {
+            return Err(Error::Datastore("corrupt bip_free.bin".into()));
+        }
+        let top = u64::from_le_bytes(buf[0..8].try_into().unwrap());
+        let mut heap = Heap { by_addr: BTreeMap::new(), by_size: BTreeSet::new(), top };
+        for rec in buf[8..].chunks_exact(16) {
+            let off = u64::from_le_bytes(rec[0..8].try_into().unwrap());
+            let size = u64::from_le_bytes(rec[8..16].try_into().unwrap());
+            heap.insert_free(off, size);
+        }
+        Ok(Self { segment, heap: Mutex::new(heap), dir })
+    }
+
+    pub fn close(&self) -> Result<()> {
+        self.sync_all()?;
+        let heap = self.heap.lock().unwrap();
+        let mut buf = Vec::with_capacity(8 + heap.by_addr.len() * 16);
+        buf.extend_from_slice(&heap.top.to_le_bytes());
+        for (&off, &size) in &heap.by_addr {
+            buf.extend_from_slice(&off.to_le_bytes());
+            buf.extend_from_slice(&size.to_le_bytes());
+        }
+        let p = self.dir.join("bip_free.bin");
+        std::fs::write(&p, &buf).map_err(|e| Error::io(&p, e))
+    }
+
+    pub fn segment(&self) -> &SegmentStorage {
+        &self.segment
+    }
+}
+
+impl SegmentAlloc for BipAllocator {
+    fn allocate(&self, size: usize) -> Result<u64> {
+        if size == 0 {
+            return Err(Error::Alloc("zero-size allocation".into()));
+        }
+        let need = align_up(size, 8) as u64 + HDR;
+        let need = need.max(MIN_BLOCK);
+        let mut heap = self.heap.lock().unwrap();
+        // best fit: smallest free block that fits
+        let found = heap.by_size.range((need, 0)..).next().copied();
+        let (off, bsize) = match found {
+            Some((bsize, off)) => {
+                heap.remove_free(off, bsize);
+                (off, bsize)
+            }
+            None => {
+                // bump the frontier
+                let off = heap.top;
+                heap.top += need;
+                self.segment.extend_to(heap.top as usize)?;
+                (off, need)
+            }
+        };
+        // split the remainder back into the tree
+        if bsize - need >= MIN_BLOCK {
+            heap.insert_free(off + need, bsize - need);
+            self.segment_write_hdr(off, need);
+        } else {
+            self.segment_write_hdr(off, bsize);
+        }
+        Ok(off + HDR)
+    }
+
+    fn deallocate(&self, payload: u64) -> Result<()> {
+        if payload < HDR {
+            return Err(Error::Alloc("bad offset".into()));
+        }
+        let off = payload - HDR;
+        let size = self.read_pod::<u64>(off);
+        if size < MIN_BLOCK || size > self.segment.mapped_len() as u64 {
+            return Err(Error::Alloc(format!("corrupt header at {off}: size {size}")));
+        }
+        let mut heap = self.heap.lock().unwrap();
+        let mut off = off;
+        let mut size = size;
+        // coalesce with next
+        if let Some(&nsize) = heap.by_addr.get(&(off + size)) {
+            heap.remove_free(off + size, nsize);
+            size += nsize;
+        }
+        // coalesce with previous
+        if let Some((&poff, &psize)) = heap.by_addr.range(..off).next_back() {
+            if poff + psize == off {
+                heap.remove_free(poff, psize);
+                off = poff;
+                size += psize;
+            }
+        }
+        // NOTE: no file-space freeing — BIP keeps the file fully sized.
+        heap.insert_free(off, size);
+        Ok(())
+    }
+
+    fn base(&self) -> *mut u8 {
+        self.segment.base()
+    }
+
+    fn mapped_len(&self) -> usize {
+        self.segment.mapped_len()
+    }
+}
+
+impl BipAllocator {
+    fn segment_write_hdr(&self, off: u64, size: u64) {
+        self.write_pod(off, size);
+    }
+}
+
+impl BenchAllocator for BipAllocator {
+    fn name(&self) -> &'static str {
+        "bip"
+    }
+
+    fn sync_all(&self) -> Result<()> {
+        self.segment.sync(true)
+    }
+
+    fn supports_reattach(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn opts() -> SegmentOptions {
+        SegmentOptions::default().with_file_size(1 << 20).with_vm_reserve(1 << 30)
+    }
+
+    #[test]
+    fn alloc_write_free_reuse() {
+        let d = TempDir::new("bip1");
+        let a = BipAllocator::create_with(d.join("s"), opts()).unwrap();
+        let x = a.allocate(100).unwrap();
+        let y = a.allocate(100).unwrap();
+        a.write_pod::<u64>(x, 1);
+        a.write_pod::<u64>(y, 2);
+        assert_eq!(a.read_pod::<u64>(x), 1);
+        a.deallocate(x).unwrap();
+        // best-fit reuses the freed block
+        let z = a.allocate(64).unwrap();
+        assert_eq!(z, x);
+        assert_eq!(a.read_pod::<u64>(y), 2);
+    }
+
+    #[test]
+    fn coalescing_merges_neighbors() {
+        let d = TempDir::new("bip2");
+        let a = BipAllocator::create_with(d.join("s"), opts()).unwrap();
+        let x = a.allocate(1000).unwrap();
+        let y = a.allocate(1000).unwrap();
+        let z = a.allocate(1000).unwrap();
+        let _guard = a.allocate(8).unwrap(); // block the frontier
+        a.deallocate(x).unwrap();
+        a.deallocate(z).unwrap();
+        a.deallocate(y).unwrap(); // merges all three
+        // a single allocation the size of all three fits in the hole
+        let big = a.allocate(3000).unwrap();
+        assert_eq!(big, x);
+    }
+
+    #[test]
+    fn never_frees_file_space() {
+        let d = TempDir::new("bip3");
+        let a = BipAllocator::create_with(d.join("s"), opts()).unwrap();
+        let x = a.allocate(512 * 1024).unwrap();
+        unsafe { a.bytes_at_mut(x, 512 * 1024).fill(0xAA) };
+        a.sync_all().unwrap();
+        let before = a.segment().allocated_file_blocks().unwrap();
+        a.deallocate(x).unwrap();
+        a.sync_all().unwrap();
+        let after = a.segment().allocated_file_blocks().unwrap();
+        assert!(after >= before, "BIP must not punch holes: {before} -> {after}");
+    }
+
+    #[test]
+    fn persistence_roundtrip() {
+        let d = TempDir::new("bip4");
+        let dir = d.join("s");
+        let x;
+        {
+            let a = BipAllocator::create_with(&dir, opts()).unwrap();
+            x = a.allocate(64).unwrap();
+            a.write_pod::<u64>(x, 0xC0FFEE);
+            let y = a.allocate(64).unwrap();
+            a.deallocate(y).unwrap();
+            a.close().unwrap();
+        }
+        let a = BipAllocator::open(&dir, opts()).unwrap();
+        assert_eq!(a.read_pod::<u64>(x), 0xC0FFEE);
+        // free list survived: the freed block is reused
+        let z = a.allocate(64).unwrap();
+        assert_eq!(z, x + 72); // y's old spot (64+8 header after x)
+    }
+
+    #[test]
+    fn concurrent_allocs_do_not_overlap() {
+        use std::collections::HashSet;
+        let d = TempDir::new("bip5");
+        let a = BipAllocator::create_with(d.join("s"), opts()).unwrap();
+        let all: Vec<Vec<u64>> = std::thread::scope(|s| {
+            (0..4)
+                .map(|_| {
+                    let a = &a;
+                    s.spawn(move || (0..200).map(|i| a.allocate(8 + i % 100).unwrap()).collect())
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        let flat: Vec<u64> = all.into_iter().flatten().collect();
+        let set: HashSet<u64> = flat.iter().copied().collect();
+        assert_eq!(set.len(), flat.len());
+    }
+}

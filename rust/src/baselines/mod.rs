@@ -1,0 +1,47 @@
+//! Baseline persistent allocators the paper evaluates against (§6.3.1).
+//!
+//! Each reimplements the *architecture* of its C++ counterpart (the
+//! property Fig 4 actually measures) over the same
+//! [`crate::storage::segment`] substrate and behind the same
+//! [`crate::alloc::SegmentAlloc`] interface, so the identical banked
+//! adjacency list runs over all of them:
+//!
+//! - [`bip`] — Boost.Interprocess `managed_mapped_file`: one ordered
+//!   free-block tree behind **one global mutex**; never frees file space.
+//! - [`pmemkind`] — memkind PMEM kind (jemalloc): per-thread arenas, no
+//!   persistence (volatile file-backed), eager `madvise` purging of freed
+//!   memory — with the `MADV_REMOVE` vs `MADV_DONTNEED` switch the paper
+//!   flips on Optane.
+//! - [`ralloc_like`] — Ralloc: lock-free per-class free lists whose links
+//!   live inside the freed slots themselves (persistent), with per-thread
+//!   bump blocks.
+
+pub mod bip;
+pub mod pmemkind;
+pub mod ralloc_like;
+
+use crate::alloc::SegmentAlloc;
+use crate::error::Result;
+
+/// Lifecycle facet the benchmarks need on top of [`SegmentAlloc`].
+pub trait BenchAllocator: SegmentAlloc {
+    fn name(&self) -> &'static str;
+    /// Flush to the backing store (persistence point).
+    fn sync_all(&self) -> Result<()>;
+    /// Whether data can be reattached after close (pmemkind: no).
+    fn supports_reattach(&self) -> bool;
+}
+
+impl BenchAllocator for crate::alloc::MetallManager {
+    fn name(&self) -> &'static str {
+        "metall"
+    }
+
+    fn sync_all(&self) -> Result<()> {
+        self.sync()
+    }
+
+    fn supports_reattach(&self) -> bool {
+        true
+    }
+}

@@ -1,0 +1,212 @@
+//! Tiny benchmark harness (the offline build image has no criterion).
+//!
+//! Provides warmup + repeated measurement with median/min/max reporting,
+//! a paper-style table printer, and a JSONL sink so every bench emits both
+//! the human-readable rows the paper reports and machine-readable records
+//! under `bench_results/`.
+
+use std::fs::{self, OpenOptions};
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::util::{human, jsonw::JsonObj};
+
+/// One measured statistic set.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub samples: Vec<f64>, // seconds
+}
+
+impl Stats {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        if n % 2 == 1 { s[n / 2] } else { 0.5 * (s[n / 2 - 1] + s[n / 2]) }
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+}
+
+/// Time `f` once, returning (seconds, result).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let t0 = Instant::now();
+    let r = f();
+    (t0.elapsed().as_secs_f64(), r)
+}
+
+/// Run `f` `warmup` times unmeasured then `iters` times measured.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats { samples }
+}
+
+/// Fixed-width table printer that mimics the paper's result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n== {title} ==");
+        let line = |ws: &[usize]| {
+            let mut s = String::from("+");
+            for w in ws {
+                s.push_str(&"-".repeat(w + 2));
+                s.push('+');
+            }
+            s
+        };
+        println!("{}", line(&widths));
+        let mut hdr = String::from("|");
+        for (h, w) in self.headers.iter().zip(&widths) {
+            hdr.push_str(&format!(" {h:<w$} |"));
+        }
+        println!("{hdr}");
+        println!("{}", line(&widths));
+        for row in &self.rows {
+            let mut r = String::from("|");
+            for (c, w) in row.iter().zip(&widths) {
+                r.push_str(&format!(" {c:<w$} |"));
+            }
+            println!("{r}");
+        }
+        println!("{}", line(&widths));
+        let _ = total;
+    }
+}
+
+/// Append a JSON record to `bench_results/<bench>.jsonl`.
+pub fn record(bench: &str, obj: JsonObj) {
+    let dir = Path::new("bench_results");
+    let _ = fs::create_dir_all(dir);
+    let path = dir.join(format!("{bench}.jsonl"));
+    if let Ok(mut f) = OpenOptions::new().create(true).append(true).open(&path) {
+        let _ = writeln!(f, "{}", obj.finish());
+    }
+}
+
+/// Convenience: format seconds + rate column pair.
+pub fn time_and_rate(secs: f64, ops: u64) -> (String, String) {
+    (human::duration(secs), human::rate(ops as f64 / secs))
+}
+
+/// Parse trailing `--key value` style args for bench binaries
+/// (cargo bench passes `--bench`; ignore unknown flags gracefully).
+pub struct BenchArgs {
+    pairs: Vec<(String, String)>,
+    pub bare: Vec<String>,
+}
+
+impl BenchArgs {
+    pub fn parse() -> Self {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        Self::from_slice(&args)
+    }
+
+    /// Parse from an explicit argv slice (the CLI reuses this).
+    pub fn from_slice(args: &[String]) -> Self {
+        let mut pairs = vec![];
+        let mut bare = vec![];
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    pairs.push((key.to_string(), args[i + 1].clone()));
+                    i += 2;
+                } else {
+                    pairs.push((key.to_string(), String::from("true")));
+                    i += 1;
+                }
+            } else {
+                bare.push(a.clone());
+                i += 1;
+            }
+        }
+        Self { pairs, bare }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median_odd_even() {
+        let s = Stats { samples: vec![3.0, 1.0, 2.0] };
+        assert_eq!(s.median(), 2.0);
+        let s = Stats { samples: vec![4.0, 1.0, 2.0, 3.0] };
+        assert_eq!(s.median(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.mean(), 2.5);
+    }
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut count = 0;
+        let st = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(st.samples.len(), 5);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test");
+    }
+}

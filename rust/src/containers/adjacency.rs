@@ -1,0 +1,317 @@
+//! Banked adjacency list (paper §6.1, Figure 3): "To support
+//! multi-thread graph construction, we used m banks … A bank is a pair
+//! of an adjacency list and a mutex object. We constructed a graph by
+//! repeatedly inserting an edge, acquiring the bank's mutex associated
+//! with the source vertex of the edge."
+//!
+//! Persistent layout: a header points at an array of `m` bank entries;
+//! each bank holds a `PHashMapU64` vertex table mapping vertex id →
+//! `PVec<u64>` edge list (the paper's `unordered_map` + `vector`
+//! structure). Bank mutexes are runtime-only state, rebuilt on reattach.
+
+use std::sync::Mutex;
+
+use crate::alloc::manager::Persist;
+use crate::alloc::SegmentAlloc;
+use crate::containers::{PHashMapU64, PVec};
+use crate::error::Result;
+use crate::util::rng::mix64;
+
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+struct AdjHeader {
+    nbanks: u64,
+    banks_off: u64,
+}
+
+unsafe impl Persist for AdjHeader {}
+
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+struct BankEntry {
+    map: PHashMapU64<PVec<u64>>,
+    nedges: u64,
+}
+
+unsafe impl Persist for BankEntry {}
+
+/// Runtime handle to a persistent banked adjacency list.
+pub struct BankedAdjacency {
+    header_off: u64,
+    nbanks: u64,
+    /// Cached from the header at open: the bank-entry array offset is
+    /// immutable for the structure's lifetime (hot-path optimization —
+    /// saves a header read per insert; see EXPERIMENTS.md §Perf).
+    banks_off: u64,
+    locks: Vec<Mutex<()>>,
+}
+
+impl BankedAdjacency {
+    /// Create with `nbanks` banks (the paper uses m = 1024).
+    pub fn create<A: SegmentAlloc>(a: &A, nbanks: usize) -> Result<Self> {
+        assert!(nbanks >= 1);
+        let header_off = a.allocate(std::mem::size_of::<AdjHeader>())?;
+        let banks_off = a.allocate(nbanks * std::mem::size_of::<BankEntry>())?;
+        for b in 0..nbanks {
+            let map = PHashMapU64::<PVec<u64>>::create(a)?;
+            a.write_pod(
+                banks_off + (b * std::mem::size_of::<BankEntry>()) as u64,
+                BankEntry { map, nedges: 0 },
+            );
+        }
+        a.write_pod(header_off, AdjHeader { nbanks: nbanks as u64, banks_off });
+        Ok(Self::open(a, header_off))
+    }
+
+    /// Reattach to an existing structure at `header_off`.
+    pub fn open<A: SegmentAlloc>(a: &A, header_off: u64) -> Self {
+        let h: AdjHeader = a.read_pod(header_off);
+        Self {
+            header_off,
+            nbanks: h.nbanks,
+            banks_off: h.banks_off,
+            locks: (0..h.nbanks).map(|_| Mutex::new(())).collect(),
+        }
+    }
+
+    pub fn offset(&self) -> u64 {
+        self.header_off
+    }
+
+    pub fn nbanks(&self) -> usize {
+        self.nbanks as usize
+    }
+
+    /// Bank owning `src` (mix64 of the source vertex, modulo banks).
+    #[inline]
+    pub fn bank_of(&self, src: u64) -> usize {
+        (mix64(src) % self.nbanks) as usize
+    }
+
+    #[inline]
+    fn bank_entry_off<A: SegmentAlloc>(&self, _a: &A, bank: usize) -> u64 {
+        self.banks_off + (bank * std::mem::size_of::<BankEntry>()) as u64
+    }
+
+    /// Insert one directed edge (undirected graphs insert both
+    /// directions, as the paper's benchmark does).
+    pub fn insert_edge<A: SegmentAlloc>(&self, a: &A, src: u64, dst: u64) -> Result<()> {
+        let bank = self.bank_of(src);
+        let _guard = self.locks[bank].lock().unwrap();
+        self.insert_locked(a, bank, src, dst)
+    }
+
+    fn insert_locked<A: SegmentAlloc>(
+        &self,
+        a: &A,
+        bank: usize,
+        src: u64,
+        dst: u64,
+    ) -> Result<()> {
+        let entry_off = self.bank_entry_off(a, bank);
+        let entry: BankEntry = a.read_pod(entry_off);
+        let list = entry.map.get_or_insert_with(a, src, |a| PVec::<u64>::create(a))?;
+        list.push(a, dst)?;
+        a.write_pod(
+            entry_off,
+            BankEntry { map: entry.map, nedges: entry.nedges + 1 },
+        );
+        Ok(())
+    }
+
+    /// Insert a batch: edges are grouped per bank so each bank mutex is
+    /// taken once per run (the coordinator's batcher produces these
+    /// groups). Allocation-free: the batch is key-sorted in place rather
+    /// than scattered into per-bank Vecs (EXPERIMENTS.md §Perf: the
+    /// original per-bank-Vec version allocated `nbanks` Vecs per batch
+    /// and dominated the ingest profile).
+    pub fn insert_batch<A: SegmentAlloc>(&self, a: &A, edges: &[(u64, u64)]) -> Result<()> {
+        // counting sort by bank: O(n + nbanks), two allocations total
+        let nb = self.nbanks as usize;
+        let mut counts = vec![0u32; nb + 1];
+        for &(s, _) in edges {
+            counts[self.bank_of(s) + 1] += 1;
+        }
+        for b in 0..nb {
+            counts[b + 1] += counts[b];
+        }
+        let mut placed: Vec<(u64, u64)> = vec![(0, 0); edges.len()];
+        let mut cursor = counts.clone();
+        for &(s, d) in edges {
+            let b = self.bank_of(s);
+            placed[cursor[b] as usize] = (s, d);
+            cursor[b] += 1;
+        }
+        for b in 0..nb {
+            let (lo, hi) = (counts[b] as usize, counts[b + 1] as usize);
+            if lo == hi {
+                continue;
+            }
+            let _guard = self.locks[b].lock().unwrap();
+            for &(s, d) in &placed[lo..hi] {
+                self.insert_locked(a, b, s, d)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Total inserted (directed) edges.
+    pub fn num_edges<A: SegmentAlloc>(&self, a: &A) -> u64 {
+        (0..self.nbanks as usize)
+            .map(|b| a.read_pod::<BankEntry>(self.bank_entry_off(a, b)).nedges)
+            .sum()
+    }
+
+    /// Number of distinct source vertices.
+    pub fn num_vertices<A: SegmentAlloc>(&self, a: &A) -> u64 {
+        (0..self.nbanks as usize)
+            .map(|b| {
+                a.read_pod::<BankEntry>(self.bank_entry_off(a, b)).map.len(a) as u64
+            })
+            .sum()
+    }
+
+    /// Out-degree of `v` (0 when absent).
+    pub fn degree<A: SegmentAlloc>(&self, a: &A, v: u64) -> usize {
+        let entry: BankEntry = a.read_pod(self.bank_entry_off(a, self.bank_of(v)));
+        entry.map.get(a, v).map(|l| l.len(a)).unwrap_or(0)
+    }
+
+    /// Copy out the neighbors of `v`.
+    pub fn neighbors<A: SegmentAlloc>(&self, a: &A, v: u64) -> Vec<u64> {
+        let entry: BankEntry = a.read_pod(self.bank_entry_off(a, self.bank_of(v)));
+        entry.map.get(a, v).map(|l| l.to_vec(a)).unwrap_or_default()
+    }
+
+    /// Visit every `(vertex, neighbors)` pair.
+    pub fn for_each_vertex<A: SegmentAlloc>(&self, a: &A, mut f: impl FnMut(u64, Vec<u64>)) {
+        for b in 0..self.nbanks as usize {
+            let entry: BankEntry = a.read_pod(self.bank_entry_off(a, b));
+            entry.map.for_each(a, |v, list| f(v, list.to_vec(a)));
+        }
+    }
+
+    /// Export as a flat directed edge list (analytics hand-off).
+    pub fn to_edge_list<A: SegmentAlloc>(&self, a: &A) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        self.for_each_vertex(a, |v, nbrs| {
+            for d in nbrs {
+                out.push((v, d));
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{ManagerOptions, MetallManager};
+    use crate::util::tmp::TempDir;
+
+    fn mgr(d: &TempDir) -> MetallManager {
+        MetallManager::create_with(d.join("s"), ManagerOptions::small_for_tests()).unwrap()
+    }
+
+    #[test]
+    fn insert_and_query() {
+        let d = TempDir::new("adj1");
+        let m = mgr(&d);
+        let g = BankedAdjacency::create(&m, 16).unwrap();
+        g.insert_edge(&m, 1, 2).unwrap();
+        g.insert_edge(&m, 1, 3).unwrap();
+        g.insert_edge(&m, 2, 3).unwrap();
+        assert_eq!(g.num_edges(&m), 3);
+        assert_eq!(g.num_vertices(&m), 2);
+        assert_eq!(g.degree(&m, 1), 2);
+        assert_eq!(g.neighbors(&m, 1), vec![2, 3]);
+        assert_eq!(g.degree(&m, 9), 0);
+    }
+
+    #[test]
+    fn reattach_preserves_graph() {
+        let d = TempDir::new("adj2");
+        let store = d.join("s");
+        let head;
+        {
+            let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests())
+                .unwrap();
+            let g = BankedAdjacency::create(&m, 8).unwrap();
+            for s in 0..50u64 {
+                for k in 0..(s % 5) {
+                    g.insert_edge(&m, s, s + k + 1).unwrap();
+                }
+            }
+            head = g.offset();
+            m.construct::<u64>("graph", head).unwrap();
+            m.close().unwrap();
+        }
+        let m = MetallManager::open(&store).unwrap();
+        let off = m.find::<u64>("graph").unwrap().unwrap();
+        let g = BankedAdjacency::open(&m, m.read::<u64>(off));
+        assert_eq!(g.degree(&m, 4), 4);
+        assert_eq!(g.neighbors(&m, 4), vec![5, 6, 7, 8]);
+        let total: u64 = (0..50).map(|s| s % 5).sum();
+        assert_eq!(g.num_edges(&m), total);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn multithreaded_construction_is_lossless() {
+        let d = TempDir::new("adj3");
+        let m = mgr(&d);
+        let g = BankedAdjacency::create(&m, 64).unwrap();
+        let nthreads = 8u64;
+        let per = 400u64;
+        std::thread::scope(|s| {
+            for t in 0..nthreads {
+                let (g, m) = (&g, &m);
+                s.spawn(move || {
+                    for i in 0..per {
+                        // every thread inserts into overlapping vertices
+                        g.insert_edge(m, i % 50, t * per + i).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(g.num_edges(&m), nthreads * per);
+        // each vertex v < 50 has nthreads * (per/50) edges
+        for v in 0..50 {
+            assert_eq!(g.degree(&m, v), (nthreads * per / 50) as usize, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn batch_equals_single_inserts() {
+        let d = TempDir::new("adj4");
+        let m = mgr(&d);
+        let g1 = BankedAdjacency::create(&m, 8).unwrap();
+        let g2 = BankedAdjacency::create(&m, 8).unwrap();
+        let edges: Vec<(u64, u64)> =
+            (0..300).map(|i| (i % 17, (i * 7) % 23)).collect();
+        for &(s, dd) in &edges {
+            g1.insert_edge(&m, s, dd).unwrap();
+        }
+        g2.insert_batch(&m, &edges).unwrap();
+        assert_eq!(g1.num_edges(&m), g2.num_edges(&m));
+        for v in 0..17 {
+            let mut a = g1.neighbors(&m, v);
+            let mut b = g2.neighbors(&m, v);
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn edge_list_export() {
+        let d = TempDir::new("adj5");
+        let m = mgr(&d);
+        let g = BankedAdjacency::create(&m, 4).unwrap();
+        g.insert_edge(&m, 0, 1).unwrap();
+        g.insert_edge(&m, 1, 0).unwrap();
+        let mut el = g.to_edge_list(&m);
+        el.sort_unstable();
+        assert_eq!(el, vec![(0, 1), (1, 0)]);
+    }
+}

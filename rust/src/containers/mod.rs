@@ -1,0 +1,20 @@
+//! Position-independent persistent containers.
+//!
+//! These are the rust analogue of using Boost.Container with Metall's
+//! offset-pointer STL allocator (paper §3.2.3, §3.5): every internal
+//! link is a **segment offset**, never a raw pointer, so a datastore can
+//! be re-mapped at any base address in a later process. Each container
+//! is "allocator-aware": it stores no allocator inside — methods take
+//! the [`crate::alloc::SegmentAlloc`] explicitly, which also mirrors how
+//! Metall's STL allocator rediscovers its manager through the segment
+//! header (§4.4).
+
+pub mod pvec;
+pub mod phashmap;
+pub mod pstring;
+pub mod adjacency;
+
+pub use adjacency::BankedAdjacency;
+pub use phashmap::PHashMapU64;
+pub use pstring::PString;
+pub use pvec::PVec;

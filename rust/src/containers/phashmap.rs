@@ -1,0 +1,319 @@
+//! `PHashMapU64<V>` — persistent open-addressing hash map with `u64`
+//! keys (the `unordered_map` of the paper's vertex table, §6.1).
+//!
+//! Linear probing, power-of-two capacity, grow at 70% load. The reserved
+//! key `u64::MAX` marks empty slots (vertex IDs are 64-bit but the
+//! generator never produces `u64::MAX`). No deletion — the graph
+//! workloads only insert — keeping the probe sequences tombstone-free.
+
+use std::marker::PhantomData;
+
+use crate::alloc::manager::Persist;
+use crate::alloc::SegmentAlloc;
+use crate::error::Result;
+use crate::util::rng::mix64;
+
+/// Reserved empty-slot marker.
+pub const EMPTY_KEY: u64 = u64::MAX;
+
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+struct MapHeader {
+    table_off: u64,
+    cap: u64, // power of two, 0 = unallocated
+    len: u64,
+}
+
+unsafe impl Persist for MapHeader {}
+
+/// Handle to a persistent `u64 → V` hash map (`Persist`, nestable).
+#[derive(Debug)]
+#[repr(transparent)]
+pub struct PHashMapU64<V: Persist> {
+    header_off: u64,
+    _v: PhantomData<V>,
+}
+
+impl<V: Persist> Clone for PHashMapU64<V> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<V: Persist> Copy for PHashMapU64<V> {}
+unsafe impl<V: Persist> Persist for PHashMapU64<V> {}
+
+impl<V: Persist> PHashMapU64<V> {
+    /// Slot stride: key + value, 8-byte aligned.
+    const STRIDE: usize = 8 + (std::mem::size_of::<V>() + 7) / 8 * 8;
+
+    pub fn create<A: SegmentAlloc>(a: &A) -> Result<Self> {
+        let header_off = a.allocate(std::mem::size_of::<MapHeader>())?;
+        let m = Self { header_off, _v: PhantomData };
+        m.write_header(a, MapHeader { table_off: 0, cap: 0, len: 0 });
+        Ok(m)
+    }
+
+    pub fn from_offset(header_off: u64) -> Self {
+        Self { header_off, _v: PhantomData }
+    }
+
+    pub fn offset(&self) -> u64 {
+        self.header_off
+    }
+
+    fn header<A: SegmentAlloc>(&self, a: &A) -> MapHeader {
+        a.read_pod(self.header_off)
+    }
+
+    fn write_header<A: SegmentAlloc>(&self, a: &A, h: MapHeader) {
+        a.write_pod(self.header_off, h);
+    }
+
+    pub fn len<A: SegmentAlloc>(&self, a: &A) -> usize {
+        self.header(a).len as usize
+    }
+
+    pub fn is_empty<A: SegmentAlloc>(&self, a: &A) -> bool {
+        self.len(a) == 0
+    }
+
+    pub fn capacity<A: SegmentAlloc>(&self, a: &A) -> usize {
+        self.header(a).cap as usize
+    }
+
+    #[inline]
+    fn slot_off(h: &MapHeader, slot: u64) -> u64 {
+        h.table_off + slot * Self::STRIDE as u64
+    }
+
+    fn init_table<A: SegmentAlloc>(a: &A, cap: u64) -> Result<u64> {
+        let table_off = a.allocate(cap as usize * Self::STRIDE)?;
+        for s in 0..cap {
+            a.write_pod(table_off + s * Self::STRIDE as u64, EMPTY_KEY);
+        }
+        Ok(table_off)
+    }
+
+    fn grow<A: SegmentAlloc>(&self, a: &A) -> Result<MapHeader> {
+        let h = self.header(a);
+        let new_cap = (h.cap * 2).max(8);
+        let new_off = Self::init_table(a, new_cap)?;
+        let mut nh = MapHeader { table_off: new_off, cap: new_cap, len: h.len };
+        // rehash
+        if h.cap > 0 {
+            for s in 0..h.cap {
+                let off = Self::slot_off(&h, s);
+                let k: u64 = a.read_pod(off);
+                if k != EMPTY_KEY {
+                    let v: V = a.read_pod(off + 8);
+                    Self::raw_insert(a, &mut nh, k, v);
+                }
+            }
+            a.deallocate(h.table_off)?;
+        }
+        self.write_header(a, nh);
+        Ok(nh)
+    }
+
+    /// Insert into a table known to have room; does not bump `len`.
+    fn raw_insert<A: SegmentAlloc>(a: &A, h: &mut MapHeader, key: u64, value: V) {
+        let mask = h.cap - 1;
+        let mut s = mix64(key) & mask;
+        loop {
+            let off = Self::slot_off(h, s);
+            let k: u64 = a.read_pod(off);
+            if k == EMPTY_KEY {
+                a.write_pod(off, key);
+                a.write_pod(off + 8, value);
+                return;
+            }
+            debug_assert_ne!(k, key, "raw_insert on existing key");
+            s = (s + 1) & mask;
+        }
+    }
+
+    /// Find the slot offset of `key`, if present.
+    fn probe<A: SegmentAlloc>(&self, a: &A, key: u64) -> Option<u64> {
+        let h = self.header(a);
+        if h.cap == 0 {
+            return None;
+        }
+        let mask = h.cap - 1;
+        let mut s = mix64(key) & mask;
+        loop {
+            let off = Self::slot_off(&h, s);
+            let k: u64 = a.read_pod(off);
+            if k == key {
+                return Some(off);
+            }
+            if k == EMPTY_KEY {
+                return None;
+            }
+            s = (s + 1) & mask;
+        }
+    }
+
+    pub fn get<A: SegmentAlloc>(&self, a: &A, key: u64) -> Option<V> {
+        self.probe(a, key).map(|off| a.read_pod(off + 8))
+    }
+
+    pub fn contains<A: SegmentAlloc>(&self, a: &A, key: u64) -> bool {
+        self.probe(a, key).is_some()
+    }
+
+    /// Insert or overwrite; returns true when the key was new.
+    pub fn insert<A: SegmentAlloc>(&self, a: &A, key: u64, value: V) -> Result<bool> {
+        assert_ne!(key, EMPTY_KEY, "key u64::MAX is reserved");
+        if let Some(off) = self.probe(a, key) {
+            a.write_pod(off + 8, value);
+            return Ok(false);
+        }
+        let mut h = self.header(a);
+        if h.cap == 0 || (h.len + 1) * 10 > h.cap * 7 {
+            h = self.grow(a)?;
+        }
+        Self::raw_insert(a, &mut h, key, value);
+        h.len += 1;
+        self.write_header(a, h);
+        Ok(true)
+    }
+
+    /// Get the value for `key`, inserting `make()`'s result first if
+    /// absent (the vertex-table "find-or-create edge list" operation).
+    pub fn get_or_insert_with<A: SegmentAlloc>(
+        &self,
+        a: &A,
+        key: u64,
+        make: impl FnOnce(&A) -> Result<V>,
+    ) -> Result<V> {
+        if let Some(v) = self.get(a, key) {
+            return Ok(v);
+        }
+        let v = make(a)?;
+        self.insert(a, key, v)?;
+        Ok(v)
+    }
+
+    /// Iterate `(key, value)` pairs (arbitrary order).
+    pub fn for_each<A: SegmentAlloc>(&self, a: &A, mut f: impl FnMut(u64, V)) {
+        let h = self.header(a);
+        for s in 0..h.cap {
+            let off = Self::slot_off(&h, s);
+            let k: u64 = a.read_pod(off);
+            if k != EMPTY_KEY {
+                f(k, a.read_pod(off + 8));
+            }
+        }
+    }
+
+    /// Free the table and the header (does not touch values' own
+    /// allocations — the caller owns value semantics).
+    pub fn destroy<A: SegmentAlloc>(self, a: &A) -> Result<()> {
+        let h = self.header(a);
+        if h.cap > 0 {
+            a.deallocate(h.table_off)?;
+        }
+        a.deallocate(self.header_off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{ManagerOptions, MetallManager};
+    use crate::util::rng::Xoshiro256ss;
+    use crate::util::tmp::TempDir;
+
+    fn mgr(d: &TempDir) -> MetallManager {
+        MetallManager::create_with(d.join("s"), ManagerOptions::small_for_tests()).unwrap()
+    }
+
+    #[test]
+    fn insert_get_overwrite() {
+        let d = TempDir::new("pmap1");
+        let m = mgr(&d);
+        let map = PHashMapU64::<u64>::create(&m).unwrap();
+        assert_eq!(map.get(&m, 5), None);
+        assert!(map.insert(&m, 5, 50).unwrap());
+        assert!(!map.insert(&m, 5, 55).unwrap(), "overwrite returns false");
+        assert_eq!(map.get(&m, 5), Some(55));
+        assert_eq!(map.len(&m), 1);
+    }
+
+    #[test]
+    fn survives_growth_against_model() {
+        let d = TempDir::new("pmap2");
+        let m = mgr(&d);
+        let map = PHashMapU64::<u64>::create(&m).unwrap();
+        let mut model = std::collections::HashMap::new();
+        let mut rng = Xoshiro256ss::new(11);
+        for _ in 0..5_000 {
+            let k = rng.gen_range(2000);
+            let v = rng.next_u64();
+            let new = map.insert(&m, k, v).unwrap();
+            assert_eq!(new, model.insert(k, v).is_none());
+        }
+        assert_eq!(map.len(&m), model.len());
+        for (&k, &v) in &model {
+            assert_eq!(map.get(&m, k), Some(v), "key {k}");
+        }
+        // iteration covers exactly the model
+        let mut seen = std::collections::HashMap::new();
+        map.for_each(&m, |k, v| {
+            seen.insert(k, v);
+        });
+        assert_eq!(seen, model);
+    }
+
+    #[test]
+    fn reattach() {
+        let d = TempDir::new("pmap3");
+        let store = d.join("s");
+        {
+            let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests())
+                .unwrap();
+            let map = PHashMapU64::<u32>::create(&m).unwrap();
+            for k in 0..500u64 {
+                map.insert(&m, k, (k * 2) as u32).unwrap();
+            }
+            m.construct::<u64>("map", map.offset()).unwrap();
+            m.close().unwrap();
+        }
+        let m = MetallManager::open(&store).unwrap();
+        let off = m.find::<u64>("map").unwrap().unwrap();
+        let map = PHashMapU64::<u32>::from_offset(m.read::<u64>(off));
+        assert_eq!(map.len(&m), 500);
+        assert_eq!(map.get(&m, 123), Some(246));
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn get_or_insert_with_runs_once() {
+        let d = TempDir::new("pmap4");
+        let m = mgr(&d);
+        let map = PHashMapU64::<u64>::create(&m).unwrap();
+        let mut calls = 0;
+        let v1 = map
+            .get_or_insert_with(&m, 9, |_| {
+                calls += 1;
+                Ok(111)
+            })
+            .unwrap();
+        let v2 = map
+            .get_or_insert_with(&m, 9, |_| {
+                calls += 1;
+                Ok(222)
+            })
+            .unwrap();
+        assert_eq!((v1, v2, calls), (111, 111, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "reserved")]
+    fn reserved_key_panics() {
+        let d = TempDir::new("pmap5");
+        let m = mgr(&d);
+        let map = PHashMapU64::<u64>::create(&m).unwrap();
+        let _ = map.insert(&m, EMPTY_KEY, 1);
+    }
+}

@@ -1,0 +1,132 @@
+//! `PString` — persistent byte string (labels, dataset metadata).
+
+use crate::alloc::manager::Persist;
+use crate::alloc::SegmentAlloc;
+use crate::error::Result;
+
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+struct StrHeader {
+    data_off: u64,
+    len: u64,
+}
+
+unsafe impl Persist for StrHeader {}
+
+/// Handle to a persistent string (`Persist`, nestable).
+#[derive(Clone, Copy, Debug)]
+#[repr(transparent)]
+pub struct PString {
+    header_off: u64,
+}
+
+unsafe impl Persist for PString {}
+
+impl PString {
+    /// Allocate and store `s`.
+    pub fn create<A: SegmentAlloc>(a: &A, s: &str) -> Result<Self> {
+        let header_off = a.allocate(std::mem::size_of::<StrHeader>())?;
+        let this = Self { header_off };
+        let data_off = if s.is_empty() {
+            u64::MAX
+        } else {
+            let off = a.allocate(s.len())?;
+            a.write_bytes(off, s.as_bytes());
+            off
+        };
+        a.write_pod(header_off, StrHeader { data_off, len: s.len() as u64 });
+        Ok(this)
+    }
+
+    pub fn from_offset(header_off: u64) -> Self {
+        Self { header_off }
+    }
+
+    pub fn offset(&self) -> u64 {
+        self.header_off
+    }
+
+    pub fn len<A: SegmentAlloc>(&self, a: &A) -> usize {
+        a.read_pod::<StrHeader>(self.header_off).len as usize
+    }
+
+    pub fn is_empty<A: SegmentAlloc>(&self, a: &A) -> bool {
+        self.len(a) == 0
+    }
+
+    /// Copy the contents out as a `String` (lossy on invalid UTF-8,
+    /// which only happens on corruption).
+    pub fn to_string<A: SegmentAlloc>(&self, a: &A) -> String {
+        let h: StrHeader = a.read_pod(self.header_off);
+        if h.len == 0 {
+            return String::new();
+        }
+        let bytes = unsafe { a.bytes_at(h.data_off, h.len as usize) };
+        String::from_utf8_lossy(bytes).into_owned()
+    }
+
+    /// Replace the contents.
+    pub fn set<A: SegmentAlloc>(&self, a: &A, s: &str) -> Result<()> {
+        let h: StrHeader = a.read_pod(self.header_off);
+        if h.data_off != u64::MAX {
+            a.deallocate(h.data_off)?;
+        }
+        let data_off = if s.is_empty() {
+            u64::MAX
+        } else {
+            let off = a.allocate(s.len())?;
+            a.write_bytes(off, s.as_bytes());
+            off
+        };
+        a.write_pod(self.header_off, StrHeader { data_off, len: s.len() as u64 });
+        Ok(())
+    }
+
+    pub fn destroy<A: SegmentAlloc>(self, a: &A) -> Result<()> {
+        let h: StrHeader = a.read_pod(self.header_off);
+        if h.data_off != u64::MAX {
+            a.deallocate(h.data_off)?;
+        }
+        a.deallocate(self.header_off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{ManagerOptions, MetallManager};
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn create_read_set_reattach() {
+        let d = TempDir::new("pstr");
+        let store = d.join("s");
+        {
+            let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests())
+                .unwrap();
+            let s = PString::create(&m, "wikipedia-2017-07").unwrap();
+            assert_eq!(s.to_string(&m), "wikipedia-2017-07");
+            s.set(&m, "reddit").unwrap();
+            m.construct::<u64>("label", s.offset()).unwrap();
+            m.close().unwrap();
+        }
+        let m = MetallManager::open(&store).unwrap();
+        let off = m.find::<u64>("label").unwrap().unwrap();
+        let s = PString::from_offset(m.read::<u64>(off));
+        assert_eq!(s.to_string(&m), "reddit");
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn empty_string() {
+        let d = TempDir::new("pstr2");
+        let m = MetallManager::create_with(d.join("s"), ManagerOptions::small_for_tests())
+            .unwrap();
+        let s = PString::create(&m, "").unwrap();
+        assert!(s.is_empty(&m));
+        assert_eq!(s.to_string(&m), "");
+        s.set(&m, "x").unwrap();
+        assert_eq!(s.to_string(&m), "x");
+        s.destroy(&m).unwrap();
+    }
+}

@@ -1,0 +1,294 @@
+//! `PVec<T>` — persistent growable array (the `boost::container::vector`
+//! equivalent of the paper's examples, Code 3).
+//!
+//! Layout: a 24-byte header `[data_off | len | cap]` lives at the
+//! handle's offset (the header itself is usually nested inside another
+//! persistent structure); elements live in a separate allocation. All
+//! links are offsets; growth allocates a new extent, copies, frees the
+//! old one.
+
+use std::marker::PhantomData;
+
+use crate::alloc::manager::Persist;
+use crate::alloc::SegmentAlloc;
+use crate::error::Result;
+
+/// Persistent header (what actually lives in the segment).
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+pub struct PVecHeader {
+    data_off: u64,
+    len: u64,
+    cap: u64,
+}
+
+unsafe impl Persist for PVecHeader {}
+
+const NO_DATA: u64 = u64::MAX;
+
+/// Handle to a persistent vector of `T` (a typed offset — itself
+/// `Persist`, so it can nest inside other persistent structures).
+#[derive(Debug)]
+#[repr(transparent)]
+pub struct PVec<T: Persist> {
+    header_off: u64,
+    _t: PhantomData<T>,
+}
+
+// Manual impls: `derive` would bound on `T: Clone/Copy` needlessly.
+impl<T: Persist> Clone for PVec<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T: Persist> Copy for PVec<T> {}
+unsafe impl<T: Persist> Persist for PVec<T> {}
+
+impl<T: Persist> PVec<T> {
+    const ELEM: usize = std::mem::size_of::<T>();
+
+    /// Allocate an empty vector (header only), returning its handle.
+    pub fn create<A: SegmentAlloc>(a: &A) -> Result<Self> {
+        let header_off = a.allocate(std::mem::size_of::<PVecHeader>())?;
+        let v = Self { header_off, _t: PhantomData };
+        v.write_header(a, PVecHeader { data_off: NO_DATA, len: 0, cap: 0 });
+        Ok(v)
+    }
+
+    /// Re-interpret an existing header offset as a handle (reattach).
+    pub fn from_offset(header_off: u64) -> Self {
+        Self { header_off, _t: PhantomData }
+    }
+
+    pub fn offset(&self) -> u64 {
+        self.header_off
+    }
+
+    #[inline]
+    fn header<A: SegmentAlloc>(&self, a: &A) -> PVecHeader {
+        a.read_pod(self.header_off)
+    }
+
+    #[inline]
+    fn write_header<A: SegmentAlloc>(&self, a: &A, h: PVecHeader) {
+        a.write_pod(self.header_off, h);
+    }
+
+    pub fn len<A: SegmentAlloc>(&self, a: &A) -> usize {
+        self.header(a).len as usize
+    }
+
+    pub fn is_empty<A: SegmentAlloc>(&self, a: &A) -> bool {
+        self.len(a) == 0
+    }
+
+    pub fn capacity<A: SegmentAlloc>(&self, a: &A) -> usize {
+        self.header(a).cap as usize
+    }
+
+    fn elem_off(h: &PVecHeader, i: usize) -> u64 {
+        h.data_off + (i * Self::ELEM) as u64
+    }
+
+    pub fn get<A: SegmentAlloc>(&self, a: &A, i: usize) -> T {
+        let h = self.header(a);
+        assert!((i as u64) < h.len, "index {i} out of bounds (len {})", h.len);
+        a.read_pod(Self::elem_off(&h, i))
+    }
+
+    pub fn set<A: SegmentAlloc>(&self, a: &A, i: usize, v: T) {
+        let h = self.header(a);
+        assert!((i as u64) < h.len, "index {i} out of bounds (len {})", h.len);
+        a.write_pod(Self::elem_off(&h, i), v);
+    }
+
+    /// Grow capacity to at least `need` elements.
+    fn grow<A: SegmentAlloc>(&self, a: &A, need: usize) -> Result<PVecHeader> {
+        let mut h = self.header(a);
+        if (need as u64) <= h.cap {
+            return Ok(h);
+        }
+        let new_cap = need.max((h.cap as usize) * 2).max(4);
+        let new_off = a.allocate(new_cap * Self::ELEM)?;
+        if h.data_off != NO_DATA {
+            a.copy_within(h.data_off, new_off, h.len as usize * Self::ELEM);
+            a.deallocate(h.data_off)?;
+        }
+        h.data_off = new_off;
+        h.cap = new_cap as u64;
+        self.write_header(a, h);
+        Ok(h)
+    }
+
+    pub fn push<A: SegmentAlloc>(&self, a: &A, v: T) -> Result<()> {
+        let mut h = self.grow(a, self.len(a) + 1)?;
+        a.write_pod(Self::elem_off(&h, h.len as usize), v);
+        h.len += 1;
+        self.write_header(a, h);
+        Ok(())
+    }
+
+    /// Bulk append (single growth + memcpy — the ingestion hot path).
+    pub fn extend_from_slice<A: SegmentAlloc>(&self, a: &A, vs: &[T]) -> Result<()> {
+        if vs.is_empty() {
+            return Ok(());
+        }
+        let mut h = self.grow(a, self.len(a) + vs.len())?;
+        let bytes = unsafe {
+            std::slice::from_raw_parts(vs.as_ptr() as *const u8, vs.len() * Self::ELEM)
+        };
+        a.write_bytes(Self::elem_off(&h, h.len as usize), bytes);
+        h.len += vs.len() as u64;
+        self.write_header(a, h);
+        Ok(())
+    }
+
+    pub fn pop<A: SegmentAlloc>(&self, a: &A) -> Option<T> {
+        let mut h = self.header(a);
+        if h.len == 0 {
+            return None;
+        }
+        h.len -= 1;
+        let v = a.read_pod(Self::elem_off(&h, h.len as usize));
+        self.write_header(a, h);
+        Some(v)
+    }
+
+    /// Copy out as a std Vec (analytics export path).
+    pub fn to_vec<A: SegmentAlloc>(&self, a: &A) -> Vec<T> {
+        let h = self.header(a);
+        let mut out = Vec::with_capacity(h.len as usize);
+        for i in 0..h.len as usize {
+            out.push(a.read_pod(Self::elem_off(&h, i)));
+        }
+        out
+    }
+
+    /// Iterate without materializing.
+    pub fn for_each<A: SegmentAlloc>(&self, a: &A, mut f: impl FnMut(T)) {
+        let h = self.header(a);
+        for i in 0..h.len as usize {
+            f(a.read_pod(Self::elem_off(&h, i)));
+        }
+    }
+
+    /// Free the element storage and the header itself.
+    pub fn destroy<A: SegmentAlloc>(self, a: &A) -> Result<()> {
+        let h = self.header(a);
+        if h.data_off != NO_DATA {
+            a.deallocate(h.data_off)?;
+        }
+        a.deallocate(self.header_off)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{ManagerOptions, MetallManager};
+    use crate::util::tmp::TempDir;
+
+    fn mgr(d: &TempDir) -> MetallManager {
+        MetallManager::create_with(d.join("s"), ManagerOptions::small_for_tests()).unwrap()
+    }
+
+    #[test]
+    fn push_get_pop() {
+        let d = TempDir::new("pvec1");
+        let m = mgr(&d);
+        let v = PVec::<u64>::create(&m).unwrap();
+        assert!(v.is_empty(&m));
+        for i in 0..100u64 {
+            v.push(&m, i * 3).unwrap();
+        }
+        assert_eq!(v.len(&m), 100);
+        assert_eq!(v.get(&m, 0), 0);
+        assert_eq!(v.get(&m, 99), 297);
+        v.set(&m, 50, 7777);
+        assert_eq!(v.get(&m, 50), 7777);
+        assert_eq!(v.pop(&m), Some(297));
+        assert_eq!(v.len(&m), 99);
+    }
+
+    #[test]
+    fn persists_across_reattach() {
+        let d = TempDir::new("pvec2");
+        let store = d.join("s");
+        let head;
+        {
+            let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests())
+                .unwrap();
+            let v = PVec::<f64>::create(&m).unwrap();
+            for i in 0..1000 {
+                v.push(&m, i as f64 / 7.0).unwrap();
+            }
+            head = v.offset();
+            m.construct::<u64>("vec_head", head).unwrap();
+            m.close().unwrap();
+        }
+        {
+            let m = MetallManager::open(&store).unwrap();
+            let off = m.find::<u64>("vec_head").unwrap().unwrap();
+            let v = PVec::<f64>::from_offset(m.read::<u64>(off));
+            assert_eq!(v.len(&m), 1000);
+            assert_eq!(v.get(&m, 700), 100.0);
+            m.close().unwrap();
+        }
+    }
+
+    #[test]
+    fn extend_matches_push() {
+        let d = TempDir::new("pvec3");
+        let m = mgr(&d);
+        let a = PVec::<u32>::create(&m).unwrap();
+        let b = PVec::<u32>::create(&m).unwrap();
+        let data: Vec<u32> = (0..500).map(|i| i * 17).collect();
+        for &x in &data {
+            a.push(&m, x).unwrap();
+        }
+        b.extend_from_slice(&m, &data).unwrap();
+        assert_eq!(a.to_vec(&m), b.to_vec(&m));
+    }
+
+    #[test]
+    fn destroy_releases_memory() {
+        let d = TempDir::new("pvec4");
+        let m = mgr(&d);
+        let v = PVec::<u64>::create(&m).unwrap();
+        for i in 0..10_000u64 {
+            v.push(&m, i).unwrap();
+        }
+        let before = m.stats();
+        v.destroy(&m).unwrap();
+        let after = m.stats();
+        assert_eq!(after.deallocs - before.deallocs, 2); // data + header
+    }
+
+    #[test]
+    fn nested_vec_of_vec_handles() {
+        // PVec<PVec<u64>> — handles are Persist, the adjacency-list shape
+        let d = TempDir::new("pvec5");
+        let m = mgr(&d);
+        let outer = PVec::<PVec<u64>>::create(&m).unwrap();
+        for i in 0..10u64 {
+            let inner = PVec::<u64>::create(&m).unwrap();
+            for j in 0..i {
+                inner.push(&m, j).unwrap();
+            }
+            outer.push(&m, inner).unwrap();
+        }
+        let seventh = outer.get(&m, 7);
+        assert_eq!(seventh.len(&m), 7);
+        assert_eq!(seventh.to_vec(&m), (0..7u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn oob_get_panics() {
+        let d = TempDir::new("pvec6");
+        let m = mgr(&d);
+        let v = PVec::<u64>::create(&m).unwrap();
+        v.push(&m, 1).unwrap();
+        v.get(&m, 1);
+    }
+}

@@ -1,0 +1,288 @@
+//! Hand-rolled CLI (the offline image carries no clap). The launcher for
+//! the whole system: datastore lifecycle, streaming ingestion, and
+//! PJRT-backed analytics.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::alloc::{ManagerOptions, MetallManager};
+use crate::containers::BankedAdjacency;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::{ingest, PipelineConfig};
+use crate::graph::ell_cache::{self, EllCache};
+use crate::graph::rmat::RmatGenerator;
+use crate::runtime::engine::AnalyticsEngine;
+use crate::util::human;
+
+const HELP: &str = "\
+metall — persistent-memory data analytics (Metall reproduction)
+
+USAGE:
+    metall <SUBCOMMAND> [OPTIONS]
+
+SUBCOMMANDS:
+    create    --store <dir>                          create an empty datastore
+    ingest    --store <dir> --scale <s> [--threads n] [--edge-factor 16]
+              [--banks 1024] [--batch 4096] [--seed 0] [--append]
+                                                     R-MAT stream → banked adjacency list
+    inspect   --store <dir>                          named objects + usage stats
+    snapshot  --store <dir> --to <dir>               reflink/copy snapshot
+    analyze   --store <dir> --algo <pagerank|bfs> [--artifacts artifacts]
+              [--iters 50] [--source 0] [--top 5]    run analytics via the PJRT engine
+                                                     (uses/refreshes the persistent ELL cache)
+    doctor    --store <dir>                          validate datastore integrity
+    version | help
+";
+
+fn req<'a>(args: &'a crate::bench_util::BenchArgs, key: &str) -> Result<&'a str> {
+    args.get(key).ok_or_else(|| anyhow!("missing required --{key}\n\n{HELP}"))
+}
+
+/// Run the CLI; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let cmd = argv.first().map(String::as_str).unwrap_or("help");
+    // BenchArgs::parse reads process args; re-parse from argv[1..] instead
+    let args = parse_args(&argv[1..]);
+    match cmd {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(0)
+        }
+        "version" | "--version" => {
+            println!("metall-rs {}", env!("CARGO_PKG_VERSION"));
+            Ok(0)
+        }
+        "create" => {
+            let store = req(&args, "store")?;
+            let mgr = MetallManager::create(store).context("create datastore")?;
+            mgr.close()?;
+            println!("created datastore at {store}");
+            Ok(0)
+        }
+        "ingest" => {
+            let store = req(&args, "store")?;
+            let scale = args.get_usize("scale", 16) as u32;
+            let threads = args.get_usize("threads", 4);
+            let ef = args.get_usize("edge-factor", 16);
+            let banks = args.get_usize("banks", 1024);
+            let batch = args.get_usize("batch", 4096);
+            let seed = args.get_usize("seed", 0) as u64;
+            let append = args.has("append");
+
+            let mgr = if append {
+                MetallManager::open(store).context("open datastore")?
+            } else {
+                MetallManager::create(store).context("create datastore")?
+            };
+            let graph = match mgr.find::<u64>("graph")? {
+                Some(off) => BankedAdjacency::open(&mgr, mgr.read(off)),
+                None => {
+                    let g = BankedAdjacency::create(&mgr, banks)?;
+                    mgr.construct::<u64>("graph", g.offset())?;
+                    g
+                }
+            };
+            let gen = RmatGenerator::graph500(scale, ef).seed(seed);
+            let metrics = Metrics::new();
+            let cfg = PipelineConfig {
+                workers: threads,
+                batch_size: batch,
+                queue_depth: 16,
+                nbanks: banks,
+            };
+            println!(
+                "ingesting R-MAT SCALE {scale} (|V|=2^{scale}, {} undirected edges) with {threads} workers…",
+                gen.num_edges()
+            );
+            let rep = ingest(&mgr, &graph, gen.generate().into_iter(), &cfg, true, &metrics)?;
+            println!(
+                "ingested {} edges in {} ({})",
+                rep.edges,
+                human::duration(rep.ingest_secs),
+                human::rate(rep.edges_per_sec)
+            );
+            mgr.close()?;
+            Ok(0)
+        }
+        "inspect" => {
+            let store = req(&args, "store")?;
+            let mgr = MetallManager::open_read_only(store).context("open datastore")?;
+            println!("datastore: {store}");
+            println!("chunk size: {}", human::bytes(mgr.chunk_size() as u64));
+            println!("segment used: {}", human::bytes(mgr.used_segment_bytes() as u64));
+            println!(
+                "file blocks allocated: {}",
+                human::bytes(mgr.segment().allocated_file_blocks()? * 512)
+            );
+            println!("named objects ({}):", mgr.num_named());
+            for (name, off, size) in mgr.named_list() {
+                println!("  {name:<24} offset={off:<12} size={size}");
+            }
+            if let Some(off) = mgr.find::<u64>("graph")? {
+                let g = BankedAdjacency::open(&mgr, mgr.read(off));
+                println!(
+                    "graph: {} vertices, {} directed edges, {} banks",
+                    g.num_vertices(&mgr),
+                    g.num_edges(&mgr),
+                    g.nbanks()
+                );
+            }
+            Ok(0)
+        }
+        "snapshot" => {
+            let store = req(&args, "store")?;
+            let to = req(&args, "to")?;
+            let mgr = MetallManager::open(store).context("open datastore")?;
+            let method = mgr.snapshot(to)?;
+            mgr.close()?;
+            println!("snapshot {store} -> {to} ({method:?})");
+            Ok(0)
+        }
+        "analyze" => {
+            let store = req(&args, "store")?;
+            let algo = req(&args, "algo")?.to_string();
+            let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+            let iters = args.get_usize("iters", 50);
+            let source = args.get_usize("source", 0);
+            let top = args.get_usize("top", 5);
+
+            // Prefer the persistent ELL cache (built by a previous
+            // analyze/ingest); rebuild and persist when stale/missing.
+            let (ell, n) = {
+                let ro = MetallManager::open_read_only(store).context("open datastore")?;
+                let off = ro
+                    .find::<u64>("graph")?
+                    .ok_or_else(|| anyhow!("no graph in datastore (run ingest first)"))?;
+                let graph = BankedAdjacency::open(&ro, ro.read(off));
+                let cached = match ro.find::<EllCache>(ell_cache::CACHE_NAME)? {
+                    Some(coff) => ro.read::<EllCache>(coff).load(&ro, &graph),
+                    None => None,
+                };
+                match cached {
+                    Some(ell) => {
+                        println!("using persistent ELL cache ({} fragments)", ell.f);
+                        let n = ell.n;
+                        (ell, n)
+                    }
+                    None => {
+                        drop(ro); // reopen writable to refresh the cache
+                        let rw = MetallManager::open(store).context("open datastore rw")?;
+                        let off = rw.find::<u64>("graph")?.unwrap();
+                        let graph = BankedAdjacency::open(&rw, rw.read(off));
+                        println!("(re)building ELL cache…");
+                        let cache = EllCache::build(&rw, &graph, 32)?;
+                        if let Some(old) = rw.find::<EllCache>(ell_cache::CACHE_NAME)? {
+                            rw.read::<EllCache>(old).destroy(&rw)?;
+                            rw.destroy(ell_cache::CACHE_NAME)?;
+                        }
+                        rw.construct::<EllCache>(ell_cache::CACHE_NAME, cache)?;
+                        let ell = cache.load_unchecked(&rw);
+                        rw.close()?;
+                        let n = ell.n;
+                        (ell, n)
+                    }
+                }
+            };
+            let mgr = MetallManager::open_read_only(store)?;
+            let engine = AnalyticsEngine::new(&artifacts).context("load artifacts")?;
+            match algo.as_str() {
+                "pagerank" => {
+                    let run = engine.pagerank(&ell, iters, 1e-7).context("pagerank")?;
+                    println!(
+                        "pagerank: {} iters, exec {} (compile {})",
+                        run.iterations,
+                        human::duration(run.exec_secs),
+                        human::duration(run.compile_secs)
+                    );
+                    let mut idx: Vec<usize> = (0..n).collect();
+                    idx.sort_by(|&a, &b| run.values[b].partial_cmp(&run.values[a]).unwrap());
+                    for &v in idx.iter().take(top) {
+                        println!("  vertex {v:<10} rank {:.6}", run.values[v]);
+                    }
+                }
+                "bfs" => {
+                    let run = engine.bfs(&ell, source).context("bfs")?;
+                    let reached = run.values.iter().filter(|&&l| l >= 0.0).count();
+                    let max_l = run.values.iter().cloned().fold(0f32, f32::max);
+                    println!(
+                        "bfs from {source}: {} levels, {reached}/{n} reached, exec {}",
+                        max_l as i64,
+                        human::duration(run.exec_secs)
+                    );
+                }
+                other => bail!("unknown --algo {other} (pagerank|bfs)"),
+            }
+            Ok(0)
+        }
+        "doctor" => {
+            let store = req(&args, "store")?;
+            let mgr = MetallManager::open_read_only(store).context("open datastore")?;
+            let report = mgr.doctor()?;
+            if report.is_empty() {
+                println!("{store}: OK — management data consistent, all named \
+                          objects within the mapped segment");
+                Ok(0)
+            } else {
+                for finding in &report {
+                    println!("WARN: {finding}");
+                }
+                Ok(1)
+            }
+        }
+        other => {
+            eprintln!("unknown subcommand: {other}\n");
+            print!("{HELP}");
+            Ok(2)
+        }
+    }
+}
+
+/// Parse `--key value` pairs from an argv slice.
+fn parse_args(argv: &[String]) -> crate::bench_util::BenchArgs {
+    crate::bench_util::BenchArgs::from_slice(argv)
+}
+
+// Give ManagerOptions a place in the CLI later (geometry flags).
+#[allow(dead_code)]
+fn _unused(_o: ManagerOptions) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn run_cmd(parts: &[&str]) -> i32 {
+        run(&parts.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn help_and_version() {
+        assert_eq!(run_cmd(&["help"]), 0);
+        assert_eq!(run_cmd(&["version"]), 0);
+        assert_eq!(run_cmd(&["frobnicate"]), 2);
+    }
+
+    #[test]
+    fn create_ingest_inspect_snapshot() {
+        let d = TempDir::new("cli");
+        let store = d.join("s");
+        let snap = d.join("snap");
+        let store_s = store.to_str().unwrap();
+        assert_eq!(
+            run_cmd(&["ingest", "--store", store_s, "--scale", "8", "--threads", "2",
+                      "--edge-factor", "4", "--banks", "32"]),
+            0
+        );
+        assert_eq!(run_cmd(&["inspect", "--store", store_s]), 0);
+        assert_eq!(
+            run_cmd(&["snapshot", "--store", store_s, "--to", snap.to_str().unwrap()]),
+            0
+        );
+        // the snapshot is a valid, openable datastore
+        assert_eq!(run_cmd(&["inspect", "--store", snap.to_str().unwrap()]), 0);
+    }
+
+    #[test]
+    fn missing_args_error() {
+        assert!(run(&["create".to_string()]).is_err());
+    }
+}

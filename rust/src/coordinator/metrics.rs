@@ -1,0 +1,111 @@
+//! Lightweight metrics: counters and phase timers for the pipeline and
+//! the experiment harness.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A named set of monotonically increasing counters plus accumulated
+/// phase durations. Cheap to share behind an `Arc`.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    timers_ns: Mutex<BTreeMap<String, AtomicU64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&self, name: &str, v: u64) {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string()).or_default().fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Time a closure, accumulating into phase `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let r = f();
+        self.add_time(name, t0.elapsed().as_nanos() as u64);
+        r
+    }
+
+    pub fn add_time(&self, name: &str, ns: u64) {
+        let mut m = self.timers_ns.lock().unwrap();
+        m.entry(name.to_string()).or_default().fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn seconds(&self, name: &str) -> f64 {
+        self.timers_ns
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed) as f64 / 1e9)
+            .unwrap_or(0.0)
+    }
+
+    /// Snapshot all values for reporting.
+    pub fn snapshot(&self) -> (BTreeMap<String, u64>, BTreeMap<String, f64>) {
+        let c = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let t = self
+            .timers_ns
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed) as f64 / 1e9))
+            .collect();
+        (c, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_timers() {
+        let m = Metrics::new();
+        m.add("edges", 5);
+        m.add("edges", 7);
+        assert_eq!(m.get("edges"), 12);
+        assert_eq!(m.get("missing"), 0);
+        let v = m.time("phase", || 21 * 2);
+        assert_eq!(v, 42);
+        assert!(m.seconds("phase") >= 0.0);
+        let (c, t) = m.snapshot();
+        assert_eq!(c["edges"], 12);
+        assert!(t.contains_key("phase"));
+    }
+
+    #[test]
+    fn concurrent_adds() {
+        let m = Metrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        m.add("n", 1);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.get("n"), 4000);
+    }
+}

@@ -1,0 +1,6 @@
+//! L3 coordinator: the streaming graph-ingestion pipeline, metrics, and
+//! the CLI entry point.
+
+pub mod cli;
+pub mod metrics;
+pub mod pipeline;

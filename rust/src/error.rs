@@ -1,0 +1,67 @@
+//! Crate-wide error type.
+
+use std::path::PathBuf;
+
+/// Unified error type for metall-rs.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Underlying I/O failure (file creation, ftruncate, read/write...).
+    #[error("io error at {path:?}: {source}")]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// Raw system-call failure (mmap, msync, madvise, ioctl...).
+    #[error("{call} failed: {source}")]
+    Sys {
+        call: &'static str,
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// Datastore-level problems: missing, corrupt, version mismatch,
+    /// unclean shutdown detected on open.
+    #[error("datastore error: {0}")]
+    Datastore(String),
+
+    /// Allocation failure: out of segment space, invalid size, etc.
+    #[error("allocation error: {0}")]
+    Alloc(String),
+
+    /// Named-object errors (construct/find/destroy).
+    #[error("named object error: {0}")]
+    Name(String),
+
+    /// Requested operation is invalid in the current mode
+    /// (e.g. writes on a read-only datastore).
+    #[error("invalid operation: {0}")]
+    InvalidOp(String),
+
+    /// PJRT / XLA runtime errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest / HLO loading errors.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Configuration / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+impl Error {
+    /// Wrap an `io::Error` with the path it concerns.
+    pub fn io(path: impl Into<PathBuf>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+
+    /// Capture `errno` after a failed libc call.
+    pub fn sys(call: &'static str) -> Self {
+        Error::Sys { call, source: std::io::Error::last_os_error() }
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

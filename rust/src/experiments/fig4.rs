@@ -1,0 +1,193 @@
+//! Fig 4 — multi-threaded dynamic graph construction (paper §6.3).
+//!
+//! R-MAT SCALE `s` edges (×2, undirected) are inserted into the banked
+//! adjacency list allocated by each allocator in turn. The paper's two
+//! machines map to two allocator line-ups:
+//! - `nvme` (Fig 4b, EPYC): metall, bip, pmemkind (default MADV_REMOVE);
+//! - `optane` (Fig 4a): + pmemkind-dontneed (their fix) and ralloc.
+
+use std::path::Path;
+
+use crate::alloc::{ManagerOptions, MetallManager};
+use crate::baselines::bip::BipAllocator;
+use crate::baselines::pmemkind::{MadvMode, PmemKindAllocator};
+use crate::baselines::ralloc_like::RallocLike;
+use crate::baselines::BenchAllocator;
+use crate::containers::BankedAdjacency;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::{ingest, PipelineConfig};
+use crate::error::Result;
+use crate::graph::rmat::RmatGenerator;
+use crate::storage::segment::SegmentOptions;
+
+#[derive(Clone, Debug)]
+pub struct Fig4Params {
+    pub scales: Vec<u32>,
+    pub edge_factor: usize,
+    pub threads: usize,
+    pub nbanks: usize,
+    pub batch: usize,
+    /// "nvme" or "optane" — selects the allocator line-up.
+    pub device: String,
+    pub seed: u64,
+    /// Segment geometry (scaled down from the paper's 256 MB files).
+    pub chunk_size: usize,
+    pub file_size: usize,
+}
+
+impl Default for Fig4Params {
+    fn default() -> Self {
+        Self {
+            scales: vec![14, 16, 18],
+            edge_factor: 16,
+            threads: 4,
+            nbanks: 1024,
+            batch: 4096,
+            device: "nvme".into(),
+            seed: 0,
+            chunk_size: 1 << 20,
+            file_size: 16 << 20,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub allocator: &'static str,
+    pub scale: u32,
+    pub edges: u64,
+    pub secs: f64,
+    pub edges_per_sec: f64,
+}
+
+fn seg_opts(p: &Fig4Params) -> SegmentOptions {
+    SegmentOptions::default().with_file_size(p.file_size).with_vm_reserve(48 << 30)
+}
+
+fn run_one<A: BenchAllocator>(
+    alloc: &A,
+    p: &Fig4Params,
+    scale: u32,
+) -> Result<Fig4Row> {
+    let graph = BankedAdjacency::create(alloc, p.nbanks)?;
+    let gen = RmatGenerator::graph500(scale, p.edge_factor).seed(p.seed);
+    let edges = gen.generate();
+    let metrics = Metrics::new();
+    let cfg = PipelineConfig {
+        workers: p.threads,
+        batch_size: p.batch,
+        queue_depth: 16,
+        nbanks: p.nbanks,
+    };
+    let rep = ingest(alloc, &graph, edges.into_iter(), &cfg, true, &metrics)?;
+    alloc.sync_all()?;
+    Ok(Fig4Row {
+        allocator: alloc.name(),
+        scale,
+        edges: rep.edges,
+        secs: rep.ingest_secs,
+        edges_per_sec: rep.edges_per_sec,
+    })
+}
+
+/// Allocator names for a device line-up.
+pub fn lineup(device: &str) -> Vec<&'static str> {
+    match device {
+        "optane" => vec!["metall", "bip", "pmemkind", "pmemkind-dontneed", "ralloc"],
+        _ => vec!["metall", "bip", "pmemkind"],
+    }
+}
+
+/// Run the full grid; calls `on_row` as rows complete (for live output).
+pub fn run(
+    p: &Fig4Params,
+    workdir: &Path,
+    mut on_row: impl FnMut(&Fig4Row),
+) -> Result<Vec<Fig4Row>> {
+    let mut rows = Vec::new();
+    for &scale in &p.scales {
+        for name in lineup(&p.device) {
+            let dir = workdir.join(format!("fig4-{name}-{scale}"));
+            let row = match name {
+                "metall" => {
+                    let opts = ManagerOptions {
+                        chunk_size: p.chunk_size,
+                        file_size: p.file_size,
+                        vm_reserve: 48 << 30,
+                        ..Default::default()
+                    };
+                    let m = MetallManager::create_with(&dir, opts)?;
+                    let row = run_one(&m, p, scale)?;
+                    m.close()?;
+                    row
+                }
+                "bip" => {
+                    let a = BipAllocator::create_with(&dir, seg_opts(p))?;
+                    let row = run_one(&a, p, scale)?;
+                    a.close()?;
+                    row
+                }
+                "pmemkind" => {
+                    let a = PmemKindAllocator::create_with(
+                        &dir,
+                        MadvMode::Remove,
+                        seg_opts(p),
+                        p.chunk_size,
+                    )?;
+                    run_one(&a, p, scale)?
+                }
+                "pmemkind-dontneed" => {
+                    let a = PmemKindAllocator::create_with(
+                        &dir,
+                        MadvMode::DontNeed,
+                        seg_opts(p),
+                        p.chunk_size,
+                    )?;
+                    run_one(&a, p, scale)?
+                }
+                "ralloc" => {
+                    let a = RallocLike::create_with(&dir, seg_opts(p), p.chunk_size)?;
+                    let row = run_one(&a, p, scale)?;
+                    a.close()?;
+                    row
+                }
+                other => unreachable!("allocator {other}"),
+            };
+            on_row(&row);
+            rows.push(row);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn tiny_grid_produces_sane_rows() {
+        let d = TempDir::new("fig4");
+        let p = Fig4Params {
+            scales: vec![8],
+            edge_factor: 4,
+            threads: 2,
+            nbanks: 64,
+            batch: 256,
+            device: "optane".into(),
+            chunk_size: 64 << 10,
+            file_size: 1 << 20,
+            ..Default::default()
+        };
+        let rows = run(&p, d.path(), |_| {}).unwrap();
+        assert_eq!(rows.len(), 5);
+        for r in &rows {
+            assert_eq!(r.edges, 2 * 256 * 4);
+            assert!(r.secs > 0.0 && r.edges_per_sec > 0.0, "{r:?}");
+        }
+        // all five allocators produced a row
+        let names: std::collections::HashSet<_> = rows.iter().map(|r| r.allocator).collect();
+        assert_eq!(names.len(), 5);
+    }
+}

@@ -1,0 +1,305 @@
+//! Fig 5 / Fig 6 — incremental graph construction on network file
+//! systems (paper §6.4): monthly chunks of a timestamped edge stream are
+//! appended to a persistent graph; each iteration opens the datastore,
+//! ingests, flushes, and closes. Three I/O configurations ×
+//! two simulated file systems (DESIGN.md §3: Lustre/VAST are modeled by
+//! the [`SimNetFs`] cost account; all data also physically lands on
+//! local disk for full functional fidelity).
+
+use std::path::Path;
+
+use crate::alloc::{ManagerOptions, MetallManager};
+use crate::containers::BankedAdjacency;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::pipeline::{ingest, PipelineConfig};
+use crate::error::Result;
+use crate::graph::stream::{MonthBatch, StreamConfig};
+use crate::storage::mmap::page_size;
+use crate::storage::netfs::{profile_by_name, SimNetFs};
+
+/// The three §6.4.2 configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// Standard shared mapping straight "on" the network FS: the kernel
+    /// writes back sparse dirty pages page-by-page (charged per page).
+    DirectMmap,
+    /// Stage the whole datastore to tmpfs-like local memory, work
+    /// locally, stage back (charged per file + bulk bytes).
+    StagingMmap,
+    /// bs-mmap: private mapping + user msync with run coalescing and
+    /// parallel per-file write-back (charged per run).
+    BsMmap,
+}
+
+impl IoMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            IoMode::DirectMmap => "direct-mmap",
+            IoMode::StagingMmap => "staging-mmap",
+            IoMode::BsMmap => "bs-mmap",
+        }
+    }
+
+    pub fn all() -> [IoMode; 3] {
+        [IoMode::DirectMmap, IoMode::StagingMmap, IoMode::BsMmap]
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig5Params {
+    pub months: u32,
+    pub first_month_edges: usize,
+    pub nbanks: usize,
+    pub chunk_size: usize,
+    pub file_size: usize,
+}
+
+impl Default for Fig5Params {
+    fn default() -> Self {
+        Self {
+            months: 8,
+            first_month_edges: 20_000,
+            nbanks: 256,
+            chunk_size: 256 << 10,
+            file_size: 4 << 20,
+        }
+    }
+}
+
+/// Per-iteration result (one month).
+#[derive(Clone, Debug)]
+pub struct MonthRow {
+    pub fs: String,
+    pub dataset: String,
+    pub mode: &'static str,
+    pub month: u32,
+    pub edges: u64,
+    /// Local compute/ingest seconds + simulated network ingest charge.
+    pub ingest_secs: f64,
+    /// Flush (write-back / stage-out) seconds incl. simulated charge.
+    pub flush_secs: f64,
+}
+
+fn manager_opts(p: &Fig5Params, mode: IoMode) -> ManagerOptions {
+    ManagerOptions {
+        chunk_size: p.chunk_size,
+        file_size: p.file_size,
+        vm_reserve: 16 << 30,
+        private_mode: mode == IoMode::BsMmap,
+        populate: mode == IoMode::BsMmap, // §6.4.2: MAP_POPULATE read-ahead
+        // §6.4.2: file-space freeing disabled for cross-FS comparability
+        free_file_space: false,
+        parallel_sync: true,
+    }
+}
+
+fn datastore_bytes(dir: &Path) -> u64 {
+    fn walk(d: &Path, acc: &mut u64) {
+        if let Ok(rd) = std::fs::read_dir(d) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if p.is_dir() {
+                    walk(&p, acc);
+                } else if let Ok(md) = e.metadata() {
+                    *acc += md.len();
+                }
+            }
+        }
+    }
+    let mut total = 0;
+    walk(dir, &mut total);
+    total
+}
+
+fn count_files(dir: &Path) -> u64 {
+    std::fs::read_dir(dir.join("segment")).map(|rd| rd.count() as u64).unwrap_or(0) + 3
+}
+
+/// Run one (fs, dataset, mode) cell; returns a row per month.
+pub fn run_cell(
+    fs_name: &str,
+    dataset: &str,
+    mode: IoMode,
+    p: &Fig5Params,
+    workdir: &Path,
+) -> Result<Vec<MonthRow>> {
+    let profile = profile_by_name(fs_name)
+        .ok_or_else(|| crate::error::Error::Config(format!("unknown fs {fs_name}")))?;
+    let net = SimNetFs::new(profile);
+    let stream = match dataset {
+        "wiki" => StreamConfig::wiki_like(p.months, p.first_month_edges),
+        _ => StreamConfig::reddit_like(p.months, p.first_month_edges),
+    };
+    let batches: Vec<MonthBatch> = stream.generate();
+    let dir = workdir.join(format!("fig5-{fs_name}-{dataset}-{}", mode.name()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let ps = page_size() as u64;
+
+    let mut rows = Vec::new();
+    for (i, b) in batches.iter().enumerate() {
+        let first = i == 0;
+        let t0 = std::time::Instant::now();
+        let mut ingest_sim = 0.0;
+        let flush_sim;
+
+        // --- open (metadata charges against the network FS) ---
+        if mode == IoMode::StagingMmap && !first {
+            // stage in: bulk copy the whole datastore from the net FS
+            let bytes = datastore_bytes(&dir);
+            ingest_sim += net.charge_io(count_files(&dir), bytes, profile.concurrency);
+        } else if !first {
+            ingest_sim += net.charge_metadata(count_files(&dir));
+        }
+        let mgr = if first {
+            MetallManager::create_with(&dir, manager_opts(p, mode))?
+        } else {
+            MetallManager::open_with(&dir, manager_opts(p, mode), false, false)?
+        };
+        let graph = match mgr.find::<u64>("graph")? {
+            Some(off) => BankedAdjacency::open(&mgr, mgr.read(off)),
+            None => {
+                let g = BankedAdjacency::create(&mgr, p.nbanks)?;
+                mgr.construct::<u64>("graph", g.offset())?;
+                g
+            }
+        };
+
+        // --- ingest the month ---
+        let metrics = Metrics::new();
+        let cfg = PipelineConfig {
+            workers: 2,
+            batch_size: 4096,
+            queue_depth: 8,
+            nbanks: p.nbanks,
+        };
+        let rep = ingest(&mgr, &graph, b.edges.iter().copied(), &cfg, true, &metrics)?;
+        // direct-mmap pays on-demand network faults *during* ingestion
+        // on pages it re-reads (cold reattach): approximate with one op
+        // per touched chunk of the mapping on non-first iterations.
+        if mode == IoMode::DirectMmap && !first {
+            let touched = (mgr.used_segment_bytes() as u64 / ps).max(1);
+            ingest_sim += net.charge_io(touched / 8, 0, 1); // read-faults, some locality
+        }
+        let ingest_local = t0.elapsed().as_secs_f64();
+
+        // --- flush ---
+        let t1 = std::time::Instant::now();
+        match mode {
+            IoMode::BsMmap => {
+                let st = mgr.bs_msync()?;
+                // coalesced runs, parallel across files (§5.2)
+                flush_sim = net.charge_io(
+                    st.runs as u64,
+                    st.bytes_written,
+                    st.files_touched.max(1),
+                );
+                mgr.close()?;
+            }
+            IoMode::DirectMmap => {
+                // kernel writeback: page-granular, low concurrency. Use
+                // the page count actually dirtied this iteration — the
+                // private-mode scan is the measurement instrument; the
+                // charge model is what distinguishes the modes.
+                let dirty = estimate_dirty_pages(&mgr)?;
+                mgr.close()?;
+                flush_sim = net.charge_io(dirty, dirty * ps, 2);
+            }
+            IoMode::StagingMmap => {
+                mgr.close()?;
+                // stage out: bulk copy back to the network FS
+                let bytes = datastore_bytes(&dir);
+                flush_sim =
+                    net.charge_io(count_files(&dir), bytes, profile.concurrency);
+            }
+        }
+        let flush_local = t1.elapsed().as_secs_f64();
+
+        rows.push(MonthRow {
+            fs: fs_name.to_string(),
+            dataset: dataset.to_string(),
+            mode: mode.name(),
+            month: b.month,
+            edges: rep.edges,
+            ingest_secs: ingest_local + ingest_sim,
+            flush_secs: flush_local + flush_sim,
+        });
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(rows)
+}
+
+/// Dirty-page estimate for the direct-mmap charge: pages written this
+/// iteration ≈ segment pages touched by the month's inserts. We read the
+/// kernel's per-file block deltas as a cheap proxy: count pages of the
+/// mapped extent that are resident-dirty via `mincore` residency — an
+/// upper bound that tracks the write working set well at these scales.
+fn estimate_dirty_pages(mgr: &MetallManager) -> Result<u64> {
+    let ps = page_size();
+    let len = mgr.segment().mapped_len();
+    if len == 0 {
+        return Ok(0);
+    }
+    let npages = len / ps;
+    let mut vec = vec![0u8; npages];
+    let rc = unsafe {
+        libc::mincore(
+            mgr.segment().base() as *mut libc::c_void,
+            len,
+            vec.as_mut_ptr(),
+        )
+    };
+    if rc != 0 {
+        return Err(crate::error::Error::sys("mincore"));
+    }
+    Ok(vec.iter().filter(|&&b| b & 1 != 0).count() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn tiny() -> Fig5Params {
+        Fig5Params {
+            months: 3,
+            first_month_edges: 2_000,
+            nbanks: 32,
+            chunk_size: 64 << 10,
+            file_size: 1 << 20,
+        }
+    }
+
+    #[test]
+    fn all_modes_complete_and_accumulate() {
+        let d = TempDir::new("fig5");
+        for mode in IoMode::all() {
+            let rows = run_cell("vast", "wiki", mode, &tiny(), d.path()).unwrap();
+            assert_eq!(rows.len(), 3, "{mode:?}");
+            for r in &rows {
+                assert!(r.ingest_secs >= 0.0 && r.flush_secs >= 0.0);
+                assert!(r.edges > 0);
+            }
+            // months grow
+            assert!(rows[2].edges > rows[0].edges);
+        }
+    }
+
+    #[test]
+    fn expected_shape_direct_worst_on_lustre() {
+        let d = TempDir::new("fig5b");
+        let p = tiny();
+        let total = |mode| -> f64 {
+            run_cell("lustre", "wiki", mode, &p, d.path())
+                .unwrap()
+                .iter()
+                .map(|r| r.ingest_secs + r.flush_secs)
+                .sum()
+        };
+        let direct = total(IoMode::DirectMmap);
+        let bs = total(IoMode::BsMmap);
+        assert!(
+            direct > bs,
+            "page-granular direct-mmap must lose to bs-mmap on lustre: {direct} vs {bs}"
+        );
+    }
+}

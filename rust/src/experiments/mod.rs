@@ -1,0 +1,9 @@
+//! Experiment drivers — one per paper table/figure (see DESIGN.md §5).
+//! The `rust/benches/*` binaries and several `examples/*` are thin
+//! wrappers over these so the exact same code regenerates the paper's
+//! rows from both entry points.
+
+pub mod fig4;
+pub mod fig5;
+pub mod fig7;
+pub mod ooc;

@@ -1,0 +1,106 @@
+//! k-truss: iteratively prune edges supported by fewer than k-2
+//! triangles (masked `mxm` support counting), the GraphBLAS k-truss of
+//! Davis.
+
+use crate::alloc::SegmentAlloc;
+use crate::error::Result;
+use crate::gbtl::ops::mxm;
+use crate::gbtl::semiring::PlusTimes;
+use crate::gbtl::types::GrbMatrix;
+use crate::gbtl::HeapAlloc;
+
+/// Return the edges (undirected, canonical `u < v`) of the k-truss of
+/// the symmetrized input graph.
+pub fn ktruss<A: SegmentAlloc>(a: &A, m: &GrbMatrix, k: usize) -> Result<Vec<(u64, u64)>> {
+    assert!(k >= 3, "k-truss requires k >= 3");
+    let h = HeapAlloc::new()?;
+    // symmetrized simple adjacency in DRAM
+    let mut trips = Vec::new();
+    for r in 0..m.nrows() {
+        m.row_for_each(a, r, |c, _| {
+            if r as u64 != c {
+                trips.push((r as u64, c, 1.0));
+                trips.push((c, r as u64, 1.0));
+            }
+        });
+    }
+    trips.sort_unstable_by_key(|&(r, c, _)| (r, c));
+    trips.dedup_by_key(|t| (t.0, t.1));
+    let mut cur = GrbMatrix::build(&h, m.nrows(), m.ncols(), &mut trips)?;
+    let support_needed = (k - 2) as f64;
+    loop {
+        // support of each edge = # of common neighbors = (A·A) masked by A
+        let sup = mxm::<PlusTimes, _, _, _>(&h, &cur, &h, &cur, &h, Some((&h, &cur)))?;
+        // keep edges with support >= k-2
+        let mut keep = Vec::new();
+        let mut dropped = 0usize;
+        for r in 0..sup.nrows() {
+            sup.row_for_each(&h, r, |c, v| {
+                if v >= support_needed {
+                    keep.push((r as u64, c, 1.0));
+                } else {
+                    dropped += 1;
+                }
+            });
+        }
+        // edges of cur without any support entry are dropped too
+        let before = cur.nvals(&h);
+        let next = GrbMatrix::build(&h, m.nrows(), m.ncols(), &mut keep)?;
+        let after = next.nvals(&h);
+        cur = next;
+        if after == before {
+            break;
+        }
+        if after == 0 {
+            break;
+        }
+    }
+    let mut out = Vec::new();
+    for r in 0..cur.nrows() {
+        cur.row_for_each(&h, r, |c, _| {
+            if (r as u64) < c {
+                out.push((r as u64, c));
+            }
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k4_is_a_4_truss() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let mut edges = Vec::new();
+        for i in 0..4u64 {
+            for j in (i + 1)..4 {
+                edges.push((i, j));
+            }
+        }
+        let m = GrbMatrix::from_edges(&h, 4, &edges).unwrap();
+        let t3 = ktruss(&h, &m, 3).unwrap();
+        assert_eq!(t3.len(), 6, "K4 entirely survives 3-truss");
+        let t4 = ktruss(&h, &m, 4).unwrap();
+        assert_eq!(t4.len(), 6, "K4 is a 4-truss (every edge in 2 triangles)");
+        let t5 = ktruss(&h, &m, 5).unwrap();
+        assert!(t5.is_empty(), "K4 has no 5-truss");
+    }
+
+    #[test]
+    fn pendant_edges_pruned_from_3truss() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        // triangle 0-1-2 plus pendant 2-3
+        let m = GrbMatrix::from_edges(&h, 4, &[(0, 1), (1, 2), (0, 2), (2, 3)]).unwrap();
+        let t3 = ktruss(&h, &m, 3).unwrap();
+        assert_eq!(t3, vec![(0, 1), (0, 2), (1, 2)]);
+    }
+
+    #[test]
+    fn empty_result_when_no_triangles() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let m = GrbMatrix::from_edges(&h, 4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        assert!(ktruss(&h, &m, 3).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! High-level graph algorithms built on the GraphBLAS primitives — the
+//! five the paper "metallized" (§7.3.2): breadth-first search, PageRank,
+//! single-source shortest paths, triangle counting, and k-truss.
+//!
+//! Exactly as the paper found, "no changes were made inside the graph
+//! algorithm functions" to support persistence: each takes the matrix's
+//! allocator generically and uses DRAM ([`crate::gbtl::HeapAlloc`])
+//! for temporaries.
+
+pub mod bfs;
+pub mod pagerank;
+pub mod sssp;
+pub mod triangle;
+pub mod ktruss;
+
+pub use bfs::bfs_level;
+pub use ktruss::ktruss;
+pub use pagerank::pagerank;
+pub use sssp::sssp;
+pub use triangle::triangle_count;

@@ -1,0 +1,71 @@
+//! Single-source shortest paths: Bellman-Ford style min-plus `vxm`
+//! relaxation sweeps.
+
+use crate::alloc::SegmentAlloc;
+use crate::gbtl::ops::{ewise_add, vxm};
+use crate::gbtl::semiring::MinPlus;
+use crate::gbtl::types::{GrbMatrix, GrbVector};
+
+/// Distances from `source` (`f64::INFINITY` = unreachable). Edge weights
+/// are the stored matrix values.
+pub fn sssp<A: SegmentAlloc>(a: &A, m: &GrbMatrix, source: usize) -> Vec<f64> {
+    let n = m.nrows();
+    let mut dist = GrbVector::new(n);
+    dist.set(source, 0.0);
+    for _ in 0..n {
+        let relaxed = vxm::<MinPlus, _>(a, &dist, m);
+        let next = ewise_add::<MinPlus>(&dist, &relaxed);
+        if next == dist {
+            break; // fixed point
+        }
+        dist = next;
+    }
+    (0..n).map(|i| dist.get(i).unwrap_or(f64::INFINITY)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbtl::HeapAlloc;
+
+    #[test]
+    fn weighted_paths() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let mut trips = vec![
+            (0u64, 1u64, 4.0),
+            (0, 2, 1.0),
+            (2, 1, 2.0), // 0→2→1 (3) beats 0→1 (4)
+            (1, 3, 1.0),
+        ];
+        let m = GrbMatrix::build(&h, 4, 4, &mut trips).unwrap();
+        let d = sssp(&h, &m, 0);
+        assert_eq!(d, vec![0.0, 3.0, 1.0, 4.0]);
+    }
+
+    #[test]
+    fn unreachable_is_infinite() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let m = GrbMatrix::from_edges(&h, 3, &[(1, 2)]).unwrap();
+        let d = sssp(&h, &m, 0);
+        assert_eq!(d[0], 0.0);
+        assert!(d[1].is_infinite() && d[2].is_infinite());
+    }
+
+    #[test]
+    fn unweighted_equals_bfs_levels() {
+        use crate::gbtl::algorithms::bfs::bfs_level;
+        use crate::graph::rmat::RmatGenerator;
+        let h = HeapAlloc::with_reserve(256 << 20).unwrap();
+        let edges = RmatGenerator::graph500(6, 4).seed(4).generate();
+        let m = GrbMatrix::from_edges(&h, 64, &edges).unwrap();
+        let d = sssp(&h, &m, 0);
+        let l = bfs_level(&h, &m, 0);
+        for i in 0..64 {
+            if l[i] < 0 {
+                assert!(d[i].is_infinite());
+            } else {
+                assert_eq!(d[i], l[i] as f64, "vertex {i}");
+            }
+        }
+    }
+}

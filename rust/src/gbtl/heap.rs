@@ -1,0 +1,143 @@
+//! `HeapAlloc` — the *fallback allocator adaptor* (paper §7.3.2).
+//!
+//! "GBTL implementations use temporary graph containers to store
+//! intermediate results … Such temporary graphs need not be allocated in
+//! the persistent store and can be left as a non-persistent data
+//! structure in DRAM. … the fallback allocator adaptor *fallbacks* to a
+//! normal memory allocator if its default constructor is called."
+//!
+//! Implementation: an anonymous reserved VM extent with a bump frontier —
+//! arena semantics (deallocate is a no-op; everything is released when
+//! the arena drops), which is exactly the lifetime profile of algorithm
+//! temporaries. It implements [`SegmentAlloc`], so every persistent
+//! container also runs, unchanged, on DRAM.
+
+use std::sync::Mutex;
+
+use crate::alloc::SegmentAlloc;
+use crate::error::{Error, Result};
+use crate::storage::mmap::page_size;
+use crate::util::align_up;
+
+/// DRAM arena allocator (non-persistent).
+pub struct HeapAlloc {
+    base: *mut u8,
+    reserve: usize,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    top: usize,
+    committed: usize,
+}
+
+unsafe impl Send for HeapAlloc {}
+unsafe impl Sync for HeapAlloc {}
+
+impl HeapAlloc {
+    /// Reserve a DRAM arena (default 8 GiB of VM; physical pages are
+    /// committed on demand).
+    pub fn new() -> Result<Self> {
+        Self::with_reserve(8 << 30)
+    }
+
+    pub fn with_reserve(reserve: usize) -> Result<Self> {
+        let p = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                reserve,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_NORESERVE,
+                -1,
+                0,
+            )
+        };
+        if p == libc::MAP_FAILED {
+            return Err(Error::sys("mmap(heap arena)"));
+        }
+        Ok(Self {
+            base: p as *mut u8,
+            reserve,
+            inner: Mutex::new(Inner { top: 0, committed: reserve }),
+        })
+    }
+
+    pub fn used(&self) -> usize {
+        self.inner.lock().unwrap().top
+    }
+}
+
+impl Default for HeapAlloc {
+    fn default() -> Self {
+        Self::new().expect("heap arena")
+    }
+}
+
+impl Drop for HeapAlloc {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.base as *mut libc::c_void, self.reserve);
+        }
+    }
+}
+
+impl SegmentAlloc for HeapAlloc {
+    fn allocate(&self, size: usize) -> Result<u64> {
+        if size == 0 {
+            return Err(Error::Alloc("zero-size allocation".into()));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let off = align_up(inner.top, 8);
+        let new_top = off + align_up(size, 8);
+        if new_top > self.reserve {
+            return Err(Error::Alloc(format!(
+                "heap arena exhausted ({new_top} > {})",
+                self.reserve
+            )));
+        }
+        inner.top = new_top;
+        Ok(off as u64)
+    }
+
+    /// Arena semantics: individual frees are no-ops.
+    fn deallocate(&self, _offset: u64) -> Result<()> {
+        Ok(())
+    }
+
+    fn base(&self) -> *mut u8 {
+        self.base
+    }
+
+    fn mapped_len(&self) -> usize {
+        // the full reserve is addressable (pages appear on demand)
+        let _ = page_size();
+        self.inner.lock().unwrap().committed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::containers::PVec;
+
+    #[test]
+    fn bump_and_containers_work_on_dram() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let a = h.allocate(10).unwrap();
+        let b = h.allocate(10).unwrap();
+        assert!(b >= a + 16 - 8); // 8-aligned bump
+        let v = PVec::<u64>::create(&h).unwrap();
+        for i in 0..10_000u64 {
+            v.push(&h, i).unwrap();
+        }
+        assert_eq!(v.len(&h), 10_000);
+        assert_eq!(v.get(&h, 9_999), 9_999);
+        assert!(h.used() > 80_000);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error() {
+        let h = HeapAlloc::with_reserve(1 << 20).unwrap();
+        assert!(h.allocate(2 << 20).is_err());
+    }
+}

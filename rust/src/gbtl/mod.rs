@@ -1,0 +1,19 @@
+//! GBTL — a GraphBLAS Template Library analogue (paper §7).
+//!
+//! Graphs are sparse matrices; algorithms are expressed over semirings
+//! (Kepner et al., "Mathematical foundations of the GraphBLAS"). The
+//! containers are **allocator-aware** exactly as §7.3.1 describes: the
+//! persistent matrix takes a [`crate::alloc::SegmentAlloc`]; temporary
+//! results inside algorithms use the [`heap::HeapAlloc`] fallback — the
+//! rust rendition of the paper's *fallback allocator adaptor* (§7.3.2),
+//! which routes default-constructed containers to DRAM.
+
+pub mod heap;
+pub mod semiring;
+pub mod types;
+pub mod ops;
+pub mod algorithms;
+
+pub use heap::HeapAlloc;
+pub use semiring::{MinPlus, OrAnd, PlusTimes, Semiring};
+pub use types::{GrbMatrix, GrbVector};

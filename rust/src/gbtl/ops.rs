@@ -1,0 +1,281 @@
+//! GraphBLAS primitive operations over [`GrbMatrix`]/[`GrbVector`].
+//!
+//! The set GBTL's algorithms need: `mxv`, `vxm`, `mxm` (masked), element-
+//! wise add/multiply, `reduce`, and `apply` — all parameterized by a
+//! [`Semiring`].
+
+use crate::alloc::SegmentAlloc;
+use crate::error::Result;
+use crate::gbtl::semiring::Semiring;
+use crate::gbtl::types::{GrbMatrix, GrbVector};
+
+/// w = A ⊕.⊗ u  (matrix-vector product over semiring `S`).
+pub fn mxv<S: Semiring, A: SegmentAlloc>(a: &A, m: &GrbMatrix, u: &GrbVector) -> GrbVector {
+    assert_eq!(m.ncols(), u.len());
+    let mut w = GrbVector::new(m.nrows());
+    for r in 0..m.nrows() {
+        let mut acc = S::ADD_IDENTITY;
+        let mut any = false;
+        m.row_for_each(a, r, |c, v| {
+            if u.mask[c as usize] {
+                acc = S::add(acc, S::mul(v, u.vals[c as usize]));
+                any = true;
+            }
+        });
+        if any {
+            w.set(r, acc);
+        }
+    }
+    w
+}
+
+/// w = u ⊕.⊗ A  (vector-matrix; equals `mxv` with the transpose, which
+/// we compute on the fly column-push style).
+pub fn vxm<S: Semiring, A: SegmentAlloc>(a: &A, u: &GrbVector, m: &GrbMatrix) -> GrbVector {
+    assert_eq!(u.len(), m.nrows());
+    let mut w = GrbVector::new(m.ncols());
+    let mut acc: Vec<f64> = vec![S::ADD_IDENTITY; m.ncols()];
+    let mut any = vec![false; m.ncols()];
+    for r in 0..m.nrows() {
+        if !u.mask[r] {
+            continue;
+        }
+        let uv = u.vals[r];
+        m.row_for_each(a, r, |c, v| {
+            let c = c as usize;
+            acc[c] = S::add(acc[c], S::mul(uv, v));
+            any[c] = true;
+        });
+    }
+    for c in 0..m.ncols() {
+        if any[c] {
+            w.set(c, acc[c]);
+        }
+    }
+    w
+}
+
+/// C = A ⊕.⊗ B, optionally masked by `mask` (structural mask: entries of
+/// C are kept only where `mask` has an entry). Row-by-row Gustavson;
+/// the output is built into allocator `out_a`.
+pub fn mxm<S: Semiring, A: SegmentAlloc, B: SegmentAlloc, O: SegmentAlloc>(
+    a: &A,
+    ma: &GrbMatrix,
+    b: &B,
+    mb: &GrbMatrix,
+    out_a: &O,
+    mask: Option<(&A, &GrbMatrix)>,
+) -> Result<GrbMatrix> {
+    assert_eq!(ma.ncols(), mb.nrows());
+    let ncols = mb.ncols();
+    let mut trips: Vec<(u64, u64, f64)> = Vec::new();
+    let mut acc: Vec<f64> = vec![S::ADD_IDENTITY; ncols];
+    let mut touched: Vec<usize> = Vec::new();
+    let mut in_row: Vec<bool> = vec![false; ncols];
+    for r in 0..ma.nrows() {
+        touched.clear();
+        ma.row_for_each(a, r, |k, av| {
+            mb.row_for_each(b, k as usize, |c, bv| {
+                let c = c as usize;
+                if !in_row[c] {
+                    in_row[c] = true;
+                    acc[c] = S::ADD_IDENTITY;
+                    touched.push(c);
+                }
+                acc[c] = S::add(acc[c], S::mul(av, bv));
+            });
+        });
+        if let Some((mk_a, mk)) = mask {
+            // keep only entries where the mask row has structure
+            let mut allowed = vec![false; ncols];
+            mk.row_for_each(mk_a, r, |c, _| allowed[c as usize] = true);
+            for &c in &touched {
+                if allowed[c] {
+                    trips.push((r as u64, c as u64, acc[c]));
+                }
+                in_row[c] = false;
+            }
+        } else {
+            for &c in &touched {
+                trips.push((r as u64, c as u64, acc[c]));
+                in_row[c] = false;
+            }
+        }
+    }
+    GrbMatrix::build(out_a, ma.nrows(), ncols, &mut trips)
+}
+
+/// Element-wise w = u ⊕ v (union of structures).
+pub fn ewise_add<S: Semiring>(u: &GrbVector, v: &GrbVector) -> GrbVector {
+    assert_eq!(u.len(), v.len());
+    let mut w = GrbVector::new(u.len());
+    for i in 0..u.len() {
+        match (u.mask[i], v.mask[i]) {
+            (true, true) => w.set(i, S::add(u.vals[i], v.vals[i])),
+            (true, false) => w.set(i, u.vals[i]),
+            (false, true) => w.set(i, v.vals[i]),
+            (false, false) => {}
+        }
+    }
+    w
+}
+
+/// Element-wise w = u ⊗ v (intersection of structures).
+pub fn ewise_mult<S: Semiring>(u: &GrbVector, v: &GrbVector) -> GrbVector {
+    assert_eq!(u.len(), v.len());
+    let mut w = GrbVector::new(u.len());
+    for i in 0..u.len() {
+        if u.mask[i] && v.mask[i] {
+            w.set(i, S::mul(u.vals[i], v.vals[i]));
+        }
+    }
+    w
+}
+
+/// Reduce a vector with the semiring's ⊕.
+pub fn reduce<S: Semiring>(u: &GrbVector) -> f64 {
+    let mut acc = S::ADD_IDENTITY;
+    for i in 0..u.len() {
+        if u.mask[i] {
+            acc = S::add(acc, u.vals[i]);
+        }
+    }
+    acc
+}
+
+/// Reduce all stored matrix values with ⊕.
+pub fn reduce_matrix<S: Semiring, A: SegmentAlloc>(a: &A, m: &GrbMatrix) -> f64 {
+    let mut acc = S::ADD_IDENTITY;
+    for r in 0..m.nrows() {
+        m.row_for_each(a, r, |_, v| acc = S::add(acc, v));
+    }
+    acc
+}
+
+/// Apply a unary function to stored entries.
+pub fn apply(u: &GrbVector, f: impl Fn(f64) -> f64) -> GrbVector {
+    let mut w = GrbVector::new(u.len());
+    for i in 0..u.len() {
+        if u.mask[i] {
+            w.set(i, f(u.vals[i]));
+        }
+    }
+    w
+}
+
+/// Complement-masked assign: keep `u`'s entries only where `mask` has
+/// **no** entry (the BFS "not yet visited" filter).
+pub fn mask_complement(u: &GrbVector, mask: &GrbVector) -> GrbVector {
+    assert_eq!(u.len(), mask.len());
+    let mut w = GrbVector::new(u.len());
+    for i in 0..u.len() {
+        if u.mask[i] && !mask.mask[i] {
+            w.set(i, u.vals[i]);
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gbtl::semiring::{MinPlus, OrAnd, PlusTimes};
+    use crate::gbtl::HeapAlloc;
+
+    fn tri(h: &HeapAlloc) -> GrbMatrix {
+        // 0→1, 1→2, 2→0 cycle + 0→2 chord
+        GrbMatrix::from_edges(h, 3, &[(0, 1), (1, 2), (2, 0), (0, 2)]).unwrap()
+    }
+
+    #[test]
+    fn mxv_plus_times_matches_dense() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let m = tri(&h);
+        let u = GrbVector { vals: vec![1.0, 2.0, 3.0], mask: vec![true; 3] };
+        let w = mxv::<PlusTimes, _>(&h, &m, &u);
+        // dense rows: r0 = [0,1,1]·u = 5; r1 = [0,0,1]·u = 3; r2 = [1,0,0]·u = 1
+        assert_eq!(w.get(0), Some(5.0));
+        assert_eq!(w.get(1), Some(3.0));
+        assert_eq!(w.get(2), Some(1.0));
+    }
+
+    #[test]
+    fn vxm_is_transpose_mxv() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let m = tri(&h);
+        let mt = m.transpose(&h, &h).unwrap();
+        let u = GrbVector { vals: vec![1.0, 2.0, 3.0], mask: vec![true; 3] };
+        let a = vxm::<PlusTimes, _>(&h, &u, &m);
+        let b = mxv::<PlusTimes, _>(&h, &mt, &u);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mxv_respects_input_mask() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let m = tri(&h);
+        let mut u = GrbVector::new(3);
+        u.set(2, 1.0); // only vertex 2 present
+        let w = mxv::<OrAnd, _>(&h, &m, &u);
+        assert_eq!(w.get(0), Some(1.0)); // 0→2 edge sees it
+        assert_eq!(w.get(1), Some(1.0)); // 1→2
+        assert_eq!(w.get(2), None, "no in-edge from 2 to 2");
+    }
+
+    #[test]
+    fn mxm_counts_paths() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let m = tri(&h);
+        let sq = mxm::<PlusTimes, _, _, _>(&h, &m, &h, &m, &h, None).unwrap();
+        // paths of length 2: 0→1→2, 0→2→0, 1→2→0, 2→0→1, 2→0→2
+        let d = sq.to_dense(&h);
+        assert_eq!(d[0][2], 1.0);
+        assert_eq!(d[0][0], 1.0);
+        assert_eq!(d[1][0], 1.0);
+        assert_eq!(d[2][1], 1.0);
+        assert_eq!(d[2][2], 1.0);
+    }
+
+    #[test]
+    fn masked_mxm_filters_structure() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let m = tri(&h);
+        let sq = mxm::<PlusTimes, _, _, _>(&h, &m, &h, &m, &h, Some((&h, &m))).unwrap();
+        // only entries coinciding with edges of m survive:
+        // m has (0,1),(0,2),(1,2),(2,0); sq has (0,0),(0,2),(1,0),(2,1),(2,2)
+        // intersection: (0,2)
+        assert_eq!(sq.nvals(&h), 1);
+        assert_eq!(sq.to_dense(&h)[0][2], 1.0);
+    }
+
+    #[test]
+    fn ewise_and_reduce() {
+        let mut u = GrbVector::new(3);
+        u.set(0, 2.0);
+        u.set(1, 3.0);
+        let mut v = GrbVector::new(3);
+        v.set(1, 4.0);
+        v.set(2, 5.0);
+        let add = ewise_add::<PlusTimes>(&u, &v);
+        assert_eq!(add.get(0), Some(2.0));
+        assert_eq!(add.get(1), Some(7.0));
+        assert_eq!(add.get(2), Some(5.0));
+        let mult = ewise_mult::<PlusTimes>(&u, &v);
+        assert_eq!(mult.nvals(), 1);
+        assert_eq!(mult.get(1), Some(12.0));
+        assert_eq!(reduce::<PlusTimes>(&add), 14.0);
+        assert_eq!(reduce::<MinPlus>(&add), 2.0);
+    }
+
+    #[test]
+    fn complement_mask() {
+        let mut u = GrbVector::new(3);
+        u.set(0, 1.0);
+        u.set(1, 1.0);
+        let mut seen = GrbVector::new(3);
+        seen.set(1, 9.0);
+        let w = mask_complement(&u, &seen);
+        assert_eq!(w.get(0), Some(1.0));
+        assert_eq!(w.get(1), None);
+    }
+}

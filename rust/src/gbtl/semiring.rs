@@ -1,0 +1,92 @@
+//! Semirings (paper §7.1: "operations using an extended algebra of
+//! semirings"). All over `f64` carriers; the identities are the
+//! GraphBLAS-standard ones.
+
+/// A GraphBLAS semiring: `(add, add_identity, mul)`.
+pub trait Semiring: Copy + Send + Sync + 'static {
+    fn add(a: f64, b: f64) -> f64;
+    fn mul(a: f64, b: f64) -> f64;
+    const ADD_IDENTITY: f64;
+    const NAME: &'static str;
+}
+
+/// Arithmetic (+, ×) — PageRank, triangle counting.
+#[derive(Clone, Copy, Debug)]
+pub struct PlusTimes;
+
+impl Semiring for PlusTimes {
+    #[inline]
+    fn add(a: f64, b: f64) -> f64 {
+        a + b
+    }
+    #[inline]
+    fn mul(a: f64, b: f64) -> f64 {
+        a * b
+    }
+    const ADD_IDENTITY: f64 = 0.0;
+    const NAME: &'static str = "plus-times";
+}
+
+/// Boolean (∨, ∧) on 0/1 — BFS reachability.
+#[derive(Clone, Copy, Debug)]
+pub struct OrAnd;
+
+impl Semiring for OrAnd {
+    #[inline]
+    fn add(a: f64, b: f64) -> f64 {
+        if a != 0.0 || b != 0.0 { 1.0 } else { 0.0 }
+    }
+    #[inline]
+    fn mul(a: f64, b: f64) -> f64 {
+        if a != 0.0 && b != 0.0 { 1.0 } else { 0.0 }
+    }
+    const ADD_IDENTITY: f64 = 0.0;
+    const NAME: &'static str = "or-and";
+}
+
+/// Tropical (min, +) — single-source shortest paths.
+#[derive(Clone, Copy, Debug)]
+pub struct MinPlus;
+
+impl Semiring for MinPlus {
+    #[inline]
+    fn add(a: f64, b: f64) -> f64 {
+        a.min(b)
+    }
+    #[inline]
+    fn mul(a: f64, b: f64) -> f64 {
+        a + b
+    }
+    const ADD_IDENTITY: f64 = f64::INFINITY;
+    const NAME: &'static str = "min-plus";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identities() {
+        assert_eq!(PlusTimes::add(PlusTimes::ADD_IDENTITY, 5.0), 5.0);
+        assert_eq!(OrAnd::add(OrAnd::ADD_IDENTITY, 1.0), 1.0);
+        assert_eq!(MinPlus::add(MinPlus::ADD_IDENTITY, 3.0), 3.0);
+    }
+
+    #[test]
+    fn semiring_laws_sample() {
+        // associativity + commutativity spot checks
+        for (a, b, c) in [(1.0, 2.0, 3.0), (0.5, 0.0, 7.0)] {
+            assert_eq!(PlusTimes::add(a, PlusTimes::add(b, c)), PlusTimes::add(PlusTimes::add(a, b), c));
+            assert_eq!(MinPlus::add(a, b), MinPlus::add(b, a));
+            assert_eq!(MinPlus::mul(a, MinPlus::mul(b, c)), MinPlus::mul(MinPlus::mul(a, b), c));
+        }
+    }
+
+    #[test]
+    fn orand_is_boolean() {
+        assert_eq!(OrAnd::mul(1.0, 1.0), 1.0);
+        assert_eq!(OrAnd::mul(1.0, 0.0), 0.0);
+        assert_eq!(OrAnd::add(0.0, 0.0), 0.0);
+        assert_eq!(OrAnd::add(7.0, 0.0), 1.0, "nonzero collapses to 1");
+    }
+}

@@ -1,0 +1,266 @@
+//! GraphBLAS containers: CSR sparse matrix (allocator-aware, persistent)
+//! and a dense-with-mask vector (DRAM — vectors are short-lived
+//! algorithm state).
+//!
+//! `GrbMatrix` mirrors GBTL's adjacency structure after the §7.3.1
+//! adaptation: it "takes an allocator type in its template and an
+//! allocator object in its constructor" — here, a `SegmentAlloc`
+//! reference per call and persistent `PVec`s inside.
+
+use crate::alloc::manager::Persist;
+use crate::alloc::SegmentAlloc;
+use crate::containers::PVec;
+use crate::error::Result;
+
+/// Persistent CSR matrix handle (`Persist`, reattachable via offset).
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+pub struct GrbMatrix {
+    nrows: u64,
+    ncols: u64,
+    row_ptr: PVec<u64>,
+    col_idx: PVec<u64>,
+    vals: PVec<f64>,
+}
+
+unsafe impl Persist for GrbMatrix {}
+
+impl GrbMatrix {
+    /// Build from (possibly unsorted, possibly duplicated) triplets.
+    /// Duplicates are summed (GraphBLAS build semantics).
+    pub fn build<A: SegmentAlloc>(
+        a: &A,
+        nrows: usize,
+        ncols: usize,
+        triplets: &mut Vec<(u64, u64, f64)>,
+    ) -> Result<Self> {
+        triplets.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        // merge duplicates
+        let mut merged: Vec<(u64, u64, f64)> = Vec::with_capacity(triplets.len());
+        for &(r, c, v) in triplets.iter() {
+            assert!((r as usize) < nrows && (c as usize) < ncols, "triplet out of range");
+            match merged.last_mut() {
+                Some(last) if last.0 == r && last.1 == c => last.2 += v,
+                _ => merged.push((r, c, v)),
+            }
+        }
+        let row_ptr = PVec::<u64>::create(a)?;
+        let col_idx = PVec::<u64>::create(a)?;
+        let vals = PVec::<f64>::create(a)?;
+        let mut rp = Vec::with_capacity(nrows + 1);
+        let mut ci = Vec::with_capacity(merged.len());
+        let mut vv = Vec::with_capacity(merged.len());
+        let mut cur = 0usize;
+        rp.push(0u64);
+        for row in 0..nrows as u64 {
+            while cur < merged.len() && merged[cur].0 == row {
+                ci.push(merged[cur].1);
+                vv.push(merged[cur].2);
+                cur += 1;
+            }
+            rp.push(ci.len() as u64);
+        }
+        row_ptr.extend_from_slice(a, &rp)?;
+        col_idx.extend_from_slice(a, &ci)?;
+        vals.extend_from_slice(a, &vv)?;
+        Ok(Self { nrows: nrows as u64, ncols: ncols as u64, row_ptr, col_idx, vals })
+    }
+
+    /// Build the unweighted adjacency matrix of an edge list.
+    pub fn from_edges<A: SegmentAlloc>(
+        a: &A,
+        n: usize,
+        edges: &[(u64, u64)],
+    ) -> Result<Self> {
+        let mut trips: Vec<(u64, u64, f64)> =
+            edges.iter().map(|&(s, d)| (s, d, 1.0)).collect();
+        // duplicate edges collapse to weight 1 (simple graph semantics)
+        trips.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        trips.dedup_by_key(|t| (t.0, t.1));
+        Self::build(a, n, n, &mut trips)
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows as usize
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols as usize
+    }
+
+    pub fn nvals<A: SegmentAlloc>(&self, a: &A) -> usize {
+        self.vals.len(a)
+    }
+
+    /// Visit row `r`'s entries.
+    pub fn row_for_each<A: SegmentAlloc>(
+        &self,
+        a: &A,
+        r: usize,
+        mut f: impl FnMut(u64, f64),
+    ) {
+        let lo = self.row_ptr.get(a, r) as usize;
+        let hi = self.row_ptr.get(a, r + 1) as usize;
+        for i in lo..hi {
+            f(self.col_idx.get(a, i), self.vals.get(a, i));
+        }
+    }
+
+    pub fn out_degree<A: SegmentAlloc>(&self, a: &A, r: usize) -> usize {
+        (self.row_ptr.get(a, r + 1) - self.row_ptr.get(a, r)) as usize
+    }
+
+    /// Transpose into (possibly another) allocator.
+    pub fn transpose<A: SegmentAlloc, B: SegmentAlloc>(&self, a: &A, b: &B) -> Result<GrbMatrix> {
+        let mut trips = Vec::with_capacity(self.nvals(a));
+        for r in 0..self.nrows() {
+            self.row_for_each(a, r, |c, v| trips.push((c, r as u64, v)));
+        }
+        GrbMatrix::build(b, self.ncols(), self.nrows(), &mut trips)
+    }
+
+    /// Extract the strictly lower-triangular part (triangle counting).
+    pub fn tril<A: SegmentAlloc, B: SegmentAlloc>(&self, a: &A, b: &B) -> Result<GrbMatrix> {
+        let mut trips = Vec::new();
+        for r in 0..self.nrows() {
+            self.row_for_each(a, r, |c, v| {
+                if (c as usize) < r {
+                    trips.push((r as u64, c, v));
+                }
+            });
+        }
+        GrbMatrix::build(b, self.nrows(), self.ncols(), &mut trips)
+    }
+
+    /// Materialize to dense (tests / tiny graphs only).
+    pub fn to_dense<A: SegmentAlloc>(&self, a: &A) -> Vec<Vec<f64>> {
+        let mut m = vec![vec![0.0; self.ncols()]; self.nrows()];
+        for r in 0..self.nrows() {
+            self.row_for_each(a, r, |c, v| m[r][c as usize] = v);
+        }
+        m
+    }
+
+    /// Free all storage.
+    pub fn destroy<A: SegmentAlloc>(self, a: &A) -> Result<()> {
+        self.row_ptr.destroy(a)?;
+        self.col_idx.destroy(a)?;
+        self.vals.destroy(a)
+    }
+}
+
+/// Dense vector with a structural mask (GraphBLAS vectors are sparse;
+/// for the graph sizes of §7.4 a dense representation with presence
+/// flags is the pragmatic choice). DRAM-only: lives inside algorithms.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GrbVector {
+    pub vals: Vec<f64>,
+    pub mask: Vec<bool>,
+}
+
+impl GrbVector {
+    pub fn new(n: usize) -> Self {
+        Self { vals: vec![0.0; n], mask: vec![false; n] }
+    }
+
+    pub fn filled(n: usize, v: f64) -> Self {
+        Self { vals: vec![v; n], mask: vec![true; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn set(&mut self, i: usize, v: f64) {
+        self.vals[i] = v;
+        self.mask[i] = true;
+    }
+
+    pub fn get(&self, i: usize) -> Option<f64> {
+        self.mask[i].then_some(self.vals[i])
+    }
+
+    pub fn nvals(&self) -> usize {
+        self.mask.iter().filter(|&&m| m).count()
+    }
+
+    pub fn clear(&mut self) {
+        self.vals.iter_mut().for_each(|v| *v = 0.0);
+        self.mask.iter_mut().for_each(|m| *m = false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{ManagerOptions, MetallManager};
+    use crate::gbtl::HeapAlloc;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn build_csr_shape() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let m = GrbMatrix::from_edges(&h, 4, &[(0, 1), (0, 2), (2, 3), (0, 1)]).unwrap();
+        assert_eq!(m.nvals(&h), 3, "duplicate edge collapsed");
+        assert_eq!(m.out_degree(&h, 0), 2);
+        assert_eq!(m.out_degree(&h, 1), 0);
+        let d = m.to_dense(&h);
+        assert_eq!(d[0][1], 1.0);
+        assert_eq!(d[2][3], 1.0);
+        assert_eq!(d[1][0], 0.0);
+    }
+
+    #[test]
+    fn duplicates_sum_in_build() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let mut t = vec![(0u64, 0u64, 2.0), (0, 0, 3.0), (1, 1, 1.0)];
+        let m = GrbMatrix::build(&h, 2, 2, &mut t).unwrap();
+        assert_eq!(m.to_dense(&h)[0][0], 5.0);
+    }
+
+    #[test]
+    fn transpose_and_tril() {
+        let h = HeapAlloc::with_reserve(64 << 20).unwrap();
+        let m = GrbMatrix::from_edges(&h, 3, &[(0, 1), (1, 2), (2, 0)]).unwrap();
+        let t = m.transpose(&h, &h).unwrap();
+        assert_eq!(t.to_dense(&h)[1][0], 1.0);
+        let l = m.tril(&h, &h).unwrap();
+        assert_eq!(l.nvals(&h), 1); // only (2,0)
+        assert_eq!(l.to_dense(&h)[2][0], 1.0);
+    }
+
+    #[test]
+    fn matrix_is_persistent_and_reattachable() {
+        let d = TempDir::new("grbm");
+        let store = d.join("s");
+        {
+            let mg = MetallManager::create_with(&store, ManagerOptions::small_for_tests())
+                .unwrap();
+            let m = GrbMatrix::from_edges(&mg, 3, &[(0, 1), (1, 2)]).unwrap();
+            mg.construct::<GrbMatrix>("matrix", m).unwrap();
+            mg.close().unwrap();
+        }
+        let mg = MetallManager::open(&store).unwrap();
+        let off = mg.find::<GrbMatrix>("matrix").unwrap().unwrap();
+        let m: GrbMatrix = mg.read(off);
+        assert_eq!(m.nvals(&mg), 2);
+        assert_eq!(m.to_dense(&mg)[1][2], 1.0);
+        mg.close().unwrap();
+    }
+
+    #[test]
+    fn vector_mask_semantics() {
+        let mut v = GrbVector::new(3);
+        assert_eq!(v.nvals(), 0);
+        v.set(1, 5.0);
+        assert_eq!(v.get(0), None);
+        assert_eq!(v.get(1), Some(5.0));
+        assert_eq!(v.nvals(), 1);
+        v.clear();
+        assert_eq!(v.nvals(), 0);
+    }
+}

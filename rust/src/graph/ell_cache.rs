@@ -1,0 +1,173 @@
+//! Persistent ELL cache: store the analytics-ready fragment-ELL arrays
+//! *inside* the Metall datastore so that the reattach→analyze path skips
+//! the adjacency-list→ELL conversion entirely — the "ingest once,
+//! analyze many" workflow of paper §7 applied to the PJRT engine's input
+//! format.
+//!
+//! The cache records the (num_edges, nbanks) fingerprint of the source
+//! graph; `load` returns `None` when the graph has changed since the
+//! cache was built (e.g. another month was ingested), in which case the
+//! caller rebuilds with [`EllCache::build`].
+
+use crate::alloc::manager::Persist;
+use crate::alloc::SegmentAlloc;
+use crate::containers::{BankedAdjacency, PVec};
+use crate::error::Result;
+use crate::graph::ell::EllGraph;
+
+/// Persistent handle (nest under a named root).
+#[derive(Clone, Copy, Debug)]
+#[repr(C)]
+pub struct EllCache {
+    n: u64,
+    w: u64,
+    f: u64,
+    /// Fingerprint of the source graph at build time.
+    src_edges: u64,
+    idx: PVec<i32>,
+    val: PVec<f32>,
+    owner: PVec<i32>,
+    inv_outdeg: PVec<f32>,
+    dangling: PVec<f32>,
+}
+
+unsafe impl Persist for EllCache {}
+
+/// The name under which the CLI stores the cache.
+pub const CACHE_NAME: &str = "__ell_cache";
+
+impl EllCache {
+    /// Convert `graph` to ELL and persist the arrays via `a`.
+    pub fn build<A: SegmentAlloc>(
+        a: &A,
+        graph: &BankedAdjacency,
+        w: usize,
+    ) -> Result<Self> {
+        let edges = graph.to_edge_list(a);
+        let n = edges.iter().map(|&(s, d)| s.max(d) + 1).max().unwrap_or(1) as usize;
+        let g = EllGraph::from_edges(n, &edges, w);
+        let cache = Self {
+            n: g.n as u64,
+            w: g.w as u64,
+            f: g.f as u64,
+            src_edges: graph.num_edges(a),
+            idx: PVec::create(a)?,
+            val: PVec::create(a)?,
+            owner: PVec::create(a)?,
+            inv_outdeg: PVec::create(a)?,
+            dangling: PVec::create(a)?,
+        };
+        cache.idx.extend_from_slice(a, &g.idx)?;
+        cache.val.extend_from_slice(a, &g.val)?;
+        cache.owner.extend_from_slice(a, &g.owner)?;
+        cache.inv_outdeg.extend_from_slice(a, &g.inv_outdeg)?;
+        cache.dangling.extend_from_slice(a, &g.dangling)?;
+        Ok(cache)
+    }
+
+    /// Materialize back into an [`EllGraph`] **iff** the cache still
+    /// matches the graph's current fingerprint.
+    pub fn load<A: SegmentAlloc>(
+        &self,
+        a: &A,
+        graph: &BankedAdjacency,
+    ) -> Option<EllGraph> {
+        if self.src_edges != graph.num_edges(a) {
+            return None; // stale: graph grew since the cache was built
+        }
+        Some(self.load_unchecked(a))
+    }
+
+    /// Materialize without the staleness check (snapshots, tools).
+    pub fn load_unchecked<A: SegmentAlloc>(&self, a: &A) -> EllGraph {
+        EllGraph {
+            n: self.n as usize,
+            w: self.w as usize,
+            f: self.f as usize,
+            idx: self.idx.to_vec(a),
+            val: self.val.to_vec(a),
+            owner: self.owner.to_vec(a),
+            inv_outdeg: self.inv_outdeg.to_vec(a),
+            dangling: self.dangling.to_vec(a),
+        }
+    }
+
+    /// Free all cached arrays.
+    pub fn destroy<A: SegmentAlloc>(self, a: &A) -> Result<()> {
+        self.idx.destroy(a)?;
+        self.val.destroy(a)?;
+        self.owner.destroy(a)?;
+        self.inv_outdeg.destroy(a)?;
+        self.dangling.destroy(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::{ManagerOptions, MetallManager};
+    use crate::util::tmp::TempDir;
+
+    fn store_with_graph(dir: &std::path::Path) -> (MetallManager, BankedAdjacency) {
+        let m = MetallManager::create_with(dir, ManagerOptions::small_for_tests()).unwrap();
+        let g = BankedAdjacency::create(&m, 16).unwrap();
+        for s in 0..40u64 {
+            for k in 0..(s % 4) {
+                g.insert_edge(&m, s, (s + k + 1) % 40).unwrap();
+            }
+        }
+        (m, g)
+    }
+
+    #[test]
+    fn cache_roundtrips_ell_exactly() {
+        let d = TempDir::new("ellc1");
+        let (m, g) = store_with_graph(&d.join("s"));
+        let cache = EllCache::build(&m, &g, 8).unwrap();
+        let direct = {
+            let edges = g.to_edge_list(&m);
+            let n = edges.iter().map(|&(s, dd)| s.max(dd) + 1).max().unwrap() as usize;
+            EllGraph::from_edges(n, &edges, 8)
+        };
+        let loaded = cache.load(&m, &g).expect("fresh cache must load");
+        assert_eq!(loaded.n, direct.n);
+        assert_eq!(loaded.f, direct.f);
+        assert_eq!(loaded.idx, direct.idx);
+        assert_eq!(loaded.val, direct.val);
+        assert_eq!(loaded.owner, direct.owner);
+        assert_eq!(loaded.inv_outdeg, direct.inv_outdeg);
+        assert_eq!(loaded.dangling, direct.dangling);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn staleness_detection() {
+        let d = TempDir::new("ellc2");
+        let (m, g) = store_with_graph(&d.join("s"));
+        let cache = EllCache::build(&m, &g, 8).unwrap();
+        assert!(cache.load(&m, &g).is_some());
+        g.insert_edge(&m, 0, 1).unwrap(); // graph grows
+        assert!(cache.load(&m, &g).is_none(), "stale cache must be rejected");
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn cache_persists_across_reattach() {
+        let d = TempDir::new("ellc3");
+        let store = d.join("s");
+        let native;
+        {
+            let (m, g) = store_with_graph(&store);
+            let cache = EllCache::build(&m, &g, 8).unwrap();
+            native = cache.load(&m, &g).unwrap().pagerank_native(0.85, 20);
+            m.construct::<EllCache>(CACHE_NAME, cache).unwrap();
+            m.construct::<u64>("graph", g.offset()).unwrap();
+            m.close().unwrap();
+        }
+        let m = MetallManager::open_read_only(&store).unwrap();
+        let g = BankedAdjacency::open(&m, m.read(m.find::<u64>("graph").unwrap().unwrap()));
+        let cache: EllCache = m.read(m.find::<EllCache>(CACHE_NAME).unwrap().unwrap());
+        let ell = cache.load(&m, &g).expect("cache valid after reattach");
+        assert_eq!(ell.pagerank_native(0.85, 20), native);
+    }
+}

@@ -1,0 +1,40 @@
+//! Graph substrate: generators, streams, and analytic representations.
+
+pub mod ell;
+pub mod ell_cache;
+pub mod rmat;
+pub mod stream;
+pub mod datasets;
+
+/// The murmur3 fmix32 bank hash — bit-identical to the L1
+/// `kernels/bucket.py` Pallas kernel (tests assert equality through the
+/// PJRT runtime).
+#[inline]
+pub fn bucket_hash32(src: u32, nbanks: u32) -> u32 {
+    debug_assert!(nbanks.is_power_of_two());
+    let mut h = src;
+    h ^= h >> 16;
+    h = h.wrapping_mul(0x85EB_CA6B);
+    h ^= h >> 13;
+    h = h.wrapping_mul(0xC2B2_AE35);
+    h ^= h >> 16;
+    h & (nbanks - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_hash_reference_values() {
+        assert_eq!(bucket_hash32(0, 1024), 0);
+        assert!(bucket_hash32(1, 1024) < 1024);
+        // spread: sequential ids should not collapse into few banks
+        let mut counts = vec![0u32; 64];
+        for i in 0..4096u32 {
+            counts[bucket_hash32(i, 64) as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        assert!(max < 150, "lumpy distribution: max bucket {max}");
+    }
+}

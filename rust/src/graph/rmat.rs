@@ -1,0 +1,187 @@
+//! R-MAT synthetic graph generator (Chakrabarti, Zhan, Faloutsos 2004)
+//! with the Graph500 parameterization the paper uses (§6.3.2):
+//! a SCALE `s` graph has 2^s vertices and 2^s × edge_factor (16)
+//! undirected edges, and vertex IDs are *scrambled* "to remove unexpected
+//! localities".
+
+use crate::util::rng::Xoshiro256ss;
+
+/// Graph500 R-MAT probabilities.
+pub const G500_A: f64 = 0.57;
+pub const G500_B: f64 = 0.19;
+pub const G500_C: f64 = 0.19;
+pub const G500_D: f64 = 0.05;
+
+/// Configurable R-MAT generator.
+#[derive(Clone, Debug)]
+pub struct RmatGenerator {
+    pub scale: u32,
+    pub edge_factor: usize,
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub seed: u64,
+    pub scramble: bool,
+}
+
+impl RmatGenerator {
+    /// Graph500 settings: 2^scale vertices, edge_factor·2^scale generated
+    /// (undirected) edge tuples.
+    pub fn graph500(scale: u32, edge_factor: usize) -> Self {
+        Self {
+            scale,
+            edge_factor,
+            a: G500_A,
+            b: G500_B,
+            c: G500_C,
+            seed: 0,
+            scramble: true,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn num_vertices(&self) -> u64 {
+        1u64 << self.scale
+    }
+
+    pub fn num_edges(&self) -> u64 {
+        self.num_vertices() * self.edge_factor as u64
+    }
+
+    /// Bijective scramble of vertex ids within [0, 2^scale): alternating
+    /// odd-multiply and xorshift rounds — both bijective on the
+    /// power-of-two domain (the Graph500 spirit without its exact LCG).
+    #[inline]
+    pub fn scramble_id(&self, v: u64) -> u64 {
+        if !self.scramble {
+            return v;
+        }
+        let mask = self.num_vertices() - 1;
+        let mut x = v;
+        // seed-derived odd multipliers
+        let m1 = (self.seed | 1).wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        let m2 = (self.seed | 1).wrapping_mul(0xBF58_476D_1CE4_E5B9) | 1;
+        x = x.wrapping_mul(m1) & mask;
+        x ^= x >> (self.scale / 2).max(1);
+        x = x.wrapping_mul(m2) & mask;
+        x ^= x >> (self.scale / 2).max(1);
+        x & mask
+    }
+
+    /// Sample one directed edge tuple.
+    #[inline]
+    fn sample(&self, rng: &mut Xoshiro256ss) -> (u64, u64) {
+        let mut src = 0u64;
+        let mut dst = 0u64;
+        for _ in 0..self.scale {
+            let r = rng.next_f64();
+            let (sbit, dbit) = if r < self.a {
+                (0, 0)
+            } else if r < self.a + self.b {
+                (0, 1)
+            } else if r < self.a + self.b + self.c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            src = (src << 1) | sbit;
+            dst = (dst << 1) | dbit;
+        }
+        (self.scramble_id(src), self.scramble_id(dst))
+    }
+
+    /// Generate the full edge list (directed tuples; the paper inserts
+    /// each generated edge in both directions for undirected semantics —
+    /// that duplication happens at the benchmark layer).
+    pub fn generate(&self) -> Vec<(u64, u64)> {
+        let mut rng = Xoshiro256ss::new(self.seed ^ 0xD6E8_FEB8_6659_FD93);
+        let m = self.num_edges() as usize;
+        let mut edges = Vec::with_capacity(m);
+        for _ in 0..m {
+            edges.push(self.sample(&mut rng));
+        }
+        edges
+    }
+
+    /// Generate in chunks (the dynamic-construction benchmark generates a
+    /// chunk into DRAM, then inserts it — §6.3.2 — so generation cost can
+    /// be excluded from timings).
+    pub fn generate_chunks(&self, chunk: usize) -> Vec<Vec<(u64, u64)>> {
+        let mut rng = Xoshiro256ss::new(self.seed ^ 0xD6E8_FEB8_6659_FD93);
+        let mut left = self.num_edges() as usize;
+        let mut out = Vec::new();
+        while left > 0 {
+            let k = chunk.min(left);
+            let mut c = Vec::with_capacity(k);
+            for _ in 0..k {
+                c.push(self.sample(&mut rng));
+            }
+            out.push(c);
+            left -= k;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    #[test]
+    fn counts_and_range() {
+        let g = RmatGenerator::graph500(8, 16).seed(3);
+        let edges = g.generate();
+        assert_eq!(edges.len(), 256 * 16);
+        for &(s, d) in &edges {
+            assert!(s < 256 && d < 256);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = RmatGenerator::graph500(7, 8).seed(5).generate();
+        let b = RmatGenerator::graph500(7, 8).seed(5).generate();
+        let c = RmatGenerator::graph500(7, 8).seed(6).generate();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn scramble_is_bijective() {
+        let g = RmatGenerator::graph500(10, 1).seed(9);
+        let set: HashSet<u64> = (0..1024u64).map(|v| g.scramble_id(v)).collect();
+        assert_eq!(set.len(), 1024);
+    }
+
+    #[test]
+    fn skewed_degree_distribution() {
+        // R-MAT must be much more skewed than Erdős–Rényi: the max
+        // degree should far exceed the mean.
+        let g = RmatGenerator::graph500(12, 16).seed(1);
+        let edges = g.generate();
+        let mut deg = vec![0u32; 4096];
+        for &(s, _) in &edges {
+            deg[s as usize] += 1;
+        }
+        let mean = edges.len() as f64 / 4096.0;
+        let max = *deg.iter().max().unwrap() as f64;
+        assert!(
+            max > mean * 8.0,
+            "expected heavy tail: max {max}, mean {mean}"
+        );
+    }
+
+    #[test]
+    fn chunked_equals_monolithic() {
+        let g = RmatGenerator::graph500(7, 4).seed(2);
+        let whole = g.generate();
+        let chunks = g.generate_chunks(100);
+        let glued: Vec<_> = chunks.into_iter().flatten().collect();
+        assert_eq!(whole, glued);
+    }
+}

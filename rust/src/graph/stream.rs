@@ -1,0 +1,188 @@
+//! Timestamped edge streams for the incremental-construction experiments
+//! (paper §6.4): the Wikipedia page-reference graph and the Reddit
+//! author–author graph, sorted by timestamp and partitioned by month.
+//!
+//! The real dumps (1.8B / 4.4B edges) are not available on this testbed;
+//! per DESIGN.md §3 we generate synthetic streams preserving the three
+//! properties the benchmark exercises: (1) arrival in monthly chunks with
+//! *growing* volume, (2) heavy-tailed degree distribution (preferential
+//! attachment), (3) a growing vertex set so later months touch both old
+//! and new regions of the datastore (sparse updates).
+
+use crate::util::rng::Xoshiro256ss;
+
+/// One calendar month of edges.
+#[derive(Clone, Debug)]
+pub struct MonthBatch {
+    pub month: u32,
+    pub edges: Vec<(u64, u64)>,
+}
+
+/// Stream generator configuration.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    pub months: u32,
+    /// Edges in the first month.
+    pub first_month_edges: usize,
+    /// Per-month multiplicative growth (Wikipedia grew superlinearly).
+    pub growth: f64,
+    /// Probability that an endpoint is an *existing* heavy vertex
+    /// (preferential attachment strength).
+    pub pref_attach: f64,
+    /// New vertices are drawn per month as `edges_this_month / vertex_ratio`.
+    pub vertex_ratio: usize,
+    pub seed: u64,
+}
+
+impl StreamConfig {
+    /// Wikipedia-like page-reference growth: strong growth, strong hubs
+    /// (category/portal pages).
+    pub fn wiki_like(months: u32, first_month_edges: usize) -> Self {
+        Self {
+            months,
+            first_month_edges,
+            growth: 1.25,
+            pref_attach: 0.70,
+            vertex_ratio: 8,
+            seed: 20170701,
+        }
+    }
+
+    /// Reddit-like author–author comments: denser (more edges per
+    /// vertex), slightly weaker hubs, faster growth.
+    pub fn reddit_like(months: u32, first_month_edges: usize) -> Self {
+        Self {
+            months,
+            first_month_edges,
+            growth: 1.35,
+            pref_attach: 0.55,
+            vertex_ratio: 16,
+            seed: 20051223,
+        }
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Total edges across all months.
+    pub fn total_edges(&self) -> usize {
+        let mut total = 0usize;
+        let mut m = self.first_month_edges as f64;
+        for _ in 0..self.months {
+            total += m as usize;
+            m *= self.growth;
+        }
+        total
+    }
+
+    /// Generate the full stream. Deterministic in `seed`.
+    pub fn generate(&self) -> Vec<MonthBatch> {
+        let mut rng = Xoshiro256ss::new(self.seed);
+        let mut batches = Vec::with_capacity(self.months as usize);
+        // endpoint pool for preferential attachment: sampling uniformly
+        // from *edge endpoints seen so far* is exactly
+        // degree-proportional sampling.
+        let mut pool: Vec<u64> = Vec::new();
+        let mut nverts: u64 = 2;
+        let mut month_edges = self.first_month_edges as f64;
+        for month in 0..self.months {
+            let m = month_edges as usize;
+            let mut edges = Vec::with_capacity(m);
+            // grow the vertex set
+            nverts += (m / self.vertex_ratio).max(1) as u64;
+            for _ in 0..m {
+                let src = if !pool.is_empty() && rng.next_f64() < self.pref_attach {
+                    pool[rng.gen_range(pool.len() as u64) as usize]
+                } else {
+                    rng.gen_range(nverts)
+                };
+                let dst = if !pool.is_empty() && rng.next_f64() < self.pref_attach {
+                    pool[rng.gen_range(pool.len() as u64) as usize]
+                } else {
+                    rng.gen_range(nverts)
+                };
+                // keep the pool bounded: reservoir-ish subsampling
+                if pool.len() < 1_000_000 {
+                    pool.push(src);
+                    pool.push(dst);
+                } else {
+                    let i = rng.gen_range(pool.len() as u64) as usize;
+                    pool[i] = src;
+                }
+                edges.push((src, dst));
+            }
+            batches.push(MonthBatch { month, edges });
+            month_edges *= self.growth;
+        }
+        batches
+    }
+
+    /// Upper bound on vertex ids produced by [`Self::generate`].
+    pub fn max_vertices(&self) -> u64 {
+        let mut nverts: u64 = 2;
+        let mut month_edges = self.first_month_edges as f64;
+        for _ in 0..self.months {
+            nverts += ((month_edges as usize) / self.vertex_ratio).max(1) as u64;
+            month_edges *= self.growth;
+        }
+        nverts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monthly_growth() {
+        let cfg = StreamConfig::wiki_like(6, 1000);
+        let batches = cfg.generate();
+        assert_eq!(batches.len(), 6);
+        for w in batches.windows(2) {
+            assert!(
+                w[1].edges.len() > w[0].edges.len(),
+                "months must grow: {} -> {}",
+                w[0].edges.len(),
+                w[1].edges.len()
+            );
+        }
+        let total: usize = batches.iter().map(|b| b.edges.len()).sum();
+        assert_eq!(total, cfg.total_edges());
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = StreamConfig::reddit_like(4, 500).generate();
+        let b = StreamConfig::reddit_like(4, 500).generate();
+        assert_eq!(a[3].edges, b[3].edges);
+    }
+
+    #[test]
+    fn vertex_ids_in_bound() {
+        let cfg = StreamConfig::wiki_like(5, 800);
+        let max_v = cfg.max_vertices();
+        for b in cfg.generate() {
+            for (s, d) in b.edges {
+                assert!(s < max_v && d < max_v);
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_tail_exists() {
+        let cfg = StreamConfig::wiki_like(8, 2000);
+        let batches = cfg.generate();
+        let mut deg = std::collections::HashMap::<u64, u32>::new();
+        for b in &batches {
+            for &(s, _) in &b.edges {
+                *deg.entry(s).or_default() += 1;
+            }
+        }
+        let total: u32 = deg.values().sum();
+        let mean = total as f64 / deg.len() as f64;
+        let max = *deg.values().max().unwrap() as f64;
+        assert!(max > 10.0 * mean, "hubs expected: max {max} mean {mean}");
+    }
+}

@@ -1,0 +1,51 @@
+//! # metall-rs
+//!
+//! A Rust reproduction of **Metall: A Persistent Memory Allocator For
+//! Data-Centric Analytics** (Iwabuchi, Youssef, Velusamy, Gokhale, Pearce;
+//! 2021), embedded in a three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the Metall persistent allocator itself, its
+//!   storage substrates (multi-file mmap segments, `/proc/self/pagemap`
+//!   dirty scanning, batch-synchronized mmap, reflink snapshots, simulated
+//!   network file systems), position-independent persistent containers, the
+//!   baseline allocators the paper evaluates against, a GraphBLAS library
+//!   (GBTL analog), and a streaming graph-ingestion coordinator.
+//! - **L2/L1 (build-time python, `python/compile/`)** — GraphBLAS analytic
+//!   steps (PageRank / BFS over padded ELL adjacency) written in JAX with
+//!   Pallas kernels for the per-row semiring reduction, AOT-lowered to HLO
+//!   text and executed from rust through the PJRT CPU client
+//!   ([`runtime`]). Python is never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use metall_rs::alloc::MetallManager;
+//! use metall_rs::containers::PVec;
+//!
+//! // create a datastore, persist a vector, reattach later
+//! let mgr = MetallManager::create("/tmp/mydata").unwrap();
+//! let v = PVec::<u64>::create(&mgr).unwrap();
+//! v.push(&mgr, 42).unwrap();
+//! mgr.construct::<u64>("answers", v.offset()).unwrap();
+//! mgr.close().unwrap();
+//!
+//! let mgr = MetallManager::open("/tmp/mydata").unwrap();
+//! let off = mgr.find::<u64>("answers").unwrap().unwrap();
+//! let v = PVec::<u64>::from_offset(mgr.read(off));
+//! assert_eq!(v.get(&mgr, 0), 42);
+//! ```
+
+pub mod error;
+pub mod util;
+pub mod bench_util;
+pub mod storage;
+pub mod alloc;
+pub mod containers;
+pub mod baselines;
+pub mod graph;
+pub mod gbtl;
+pub mod runtime;
+pub mod coordinator;
+pub mod experiments;
+
+pub use error::{Error, Result};

@@ -1,0 +1,16 @@
+//! `metall` — CLI launcher for the metall-rs system.
+//!
+//! Subcommands (hand-rolled parser; the offline image carries no clap):
+//!   create/inspect/snapshot datastores, run the ingestion pipeline, and
+//!   run analytics through the PJRT engine. See `metall help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match metall_rs::coordinator::cli::run(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

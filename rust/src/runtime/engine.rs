@@ -1,0 +1,197 @@
+//! The analytics engine: picks a compiled shape variant for a graph,
+//! pads the inputs, and drives iterative algorithms (PageRank power
+//! iteration, BFS level sweeps) through the PJRT executables.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::graph::ell::EllGraph;
+use crate::runtime::manifest::{Kind, Manifest, Variant};
+use crate::runtime::pjrt::{lit_f32, lit_i32, lit_u32, to_vec_f32, to_vec_u32, Executable, PjrtRuntime};
+
+/// Outcome of an engine-run analytic, with timing split out so the GBTL
+/// demonstration (Fig 8) can report reattach-vs-analyze phases.
+#[derive(Clone, Debug)]
+pub struct AnalyticsRun {
+    pub iterations: usize,
+    pub compile_secs: f64,
+    pub exec_secs: f64,
+    pub values: Vec<f32>,
+}
+
+/// PJRT-backed analytics engine with an executable cache.
+pub struct AnalyticsEngine {
+    rt: PjrtRuntime,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl AnalyticsEngine {
+    pub fn new(artifacts_dir: impl Into<std::path::PathBuf>) -> Result<Self> {
+        Ok(Self {
+            rt: PjrtRuntime::cpu()?,
+            manifest: Manifest::load(artifacts_dir)?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&self, v: &Variant) -> Result<std::sync::Arc<Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(&v.file) {
+            return Ok(e.clone());
+        }
+        let exe = std::sync::Arc::new(self.rt.load_hlo_text(&self.manifest.path_of(v))?);
+        cache.insert(v.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn pick(&self, kind: Kind, g: &EllGraph) -> Result<&Variant> {
+        self.manifest.pick(kind, g.n, g.f).ok_or_else(|| {
+            Error::Artifact(format!(
+                "no {kind:?} variant fits n={} f={} — extend the AOT ladder",
+                g.n, g.f
+            ))
+        })
+    }
+
+    /// PageRank power iteration. Stops at `max_iters` or when the L1 rank
+    /// delta falls below `tol` (checked host-side between executions).
+    pub fn pagerank(&self, g: &EllGraph, max_iters: usize, tol: f32) -> Result<AnalyticsRun> {
+        let v = self.pick(Kind::Pagerank, g)?;
+        let alpha = v.alpha.unwrap_or(0.85) as f32;
+        let t0 = Instant::now();
+        let exe = self.executable(v)?;
+        let compile_secs = t0.elapsed().as_secs_f64();
+
+        let gp = g.padded(v.n, v.f);
+        let n_pad = v.n as i64;
+        let f_pad = v.f as i64;
+        let w = v.w as i64;
+
+        // base/dweight vectors: real vertices only (exact padding).
+        let n_true = g.n as f32;
+        let mut base = vec![0f32; v.n];
+        let mut dweight = vec![0f32; v.n];
+        for i in 0..g.n {
+            base[i] = (1.0 - alpha) / n_true;
+            dweight[i] = alpha / n_true;
+        }
+        let mut ranks = vec![0f32; v.n];
+        for r in ranks.iter_mut().take(g.n) {
+            *r = 1.0 / n_true;
+        }
+
+        let l_idx = lit_i32(&gp.idx, &[f_pad, w])?;
+        let l_val = lit_f32(&gp.val, &[f_pad, w])?;
+        let l_owner = lit_i32(&gp.owner, &[f_pad])?;
+        let l_inv = lit_f32(&gp.inv_outdeg, &[n_pad])?;
+        let l_dang = lit_f32(&gp.dangling, &[n_pad])?;
+        let l_base = lit_f32(&base, &[n_pad])?;
+        let l_dw = lit_f32(&dweight, &[n_pad])?;
+
+        let t1 = Instant::now();
+        let mut iters = 0;
+        for _ in 0..max_iters {
+            let l_ranks = lit_f32(&ranks, &[n_pad])?;
+            let out = exe.run(&[
+                &l_ranks, &l_idx, &l_val, &l_owner, &l_inv, &l_dang, &l_base, &l_dw,
+            ])?;
+            let new_ranks = to_vec_f32(&out[0])?;
+            iters += 1;
+            let delta: f32 =
+                new_ranks.iter().zip(&ranks).map(|(a, b)| (a - b).abs()).sum();
+            ranks = new_ranks;
+            if delta < tol {
+                break;
+            }
+        }
+        let exec_secs = t1.elapsed().as_secs_f64();
+        ranks.truncate(g.n);
+        Ok(AnalyticsRun { iterations: iters, compile_secs, exec_secs, values: ranks })
+    }
+
+    /// BFS from `source`; returns levels (-1 unreachable) as f32-encoded
+    /// in `values` (cast to i64 by callers as needed).
+    pub fn bfs(&self, g: &EllGraph, source: usize) -> Result<AnalyticsRun> {
+        let v = self.pick(Kind::Bfs, g)?;
+        let t0 = Instant::now();
+        let exe = self.executable(v)?;
+        let compile_secs = t0.elapsed().as_secs_f64();
+
+        let gp = g.padded(v.n, v.f);
+        let n_pad = v.n as i64;
+        let f_pad = v.f as i64;
+        let w = v.w as i64;
+
+        let l_idx = lit_i32(&gp.idx, &[f_pad, w])?;
+        let l_val = lit_f32(&gp.val, &[f_pad, w])?;
+        let l_owner = lit_i32(&gp.owner, &[f_pad])?;
+
+        let mut frontier = vec![0f32; v.n];
+        frontier[source] = 1.0;
+        let mut visited = frontier.clone();
+        let mut levels = vec![-1f32; v.n];
+        levels[source] = 0.0;
+
+        let t1 = Instant::now();
+        let mut lvl = 0f32;
+        let mut iters = 0;
+        loop {
+            let nf: f32 = frontier.iter().sum();
+            if nf == 0.0 || iters >= g.n {
+                break;
+            }
+            lvl += 1.0;
+            let l_front = lit_f32(&frontier, &[n_pad])?;
+            let l_vis = lit_f32(&visited, &[n_pad])?;
+            let out = exe.run(&[&l_front, &l_vis, &l_idx, &l_val, &l_owner])?;
+            frontier = to_vec_f32(&out[0])?;
+            visited = to_vec_f32(&out[1])?;
+            for i in 0..v.n {
+                if frontier[i] > 0.0 && levels[i] < 0.0 {
+                    levels[i] = lvl;
+                }
+            }
+            iters += 1;
+        }
+        let exec_secs = t1.elapsed().as_secs_f64();
+        levels.truncate(g.n);
+        Ok(AnalyticsRun { iterations: iters, compile_secs, exec_secs, values: levels })
+    }
+
+    /// Edge→bank bucketing through the AOT kernel. Falls back to exact
+    /// native hashing for the tail that does not fill a compiled batch.
+    pub fn bucket(&self, src: &[u32], nbanks: u32) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(src.len());
+        let mut rest = src;
+        while !rest.is_empty() {
+            let v = self
+                .manifest
+                .variants
+                .iter()
+                .filter(|v| v.kind == Kind::Bucket && v.f == nbanks as usize && v.n <= rest.len())
+                .max_by_key(|v| v.n);
+            match v {
+                Some(v) => {
+                    let exe = self.executable(v)?;
+                    let batch = &rest[..v.n];
+                    let res = exe.run(&[lit_u32(batch, &[v.n as i64])?])?;
+                    out.extend(to_vec_u32(&res[0])?);
+                    rest = &rest[v.n..];
+                }
+                None => {
+                    // native tail
+                    out.extend(rest.iter().map(|&s| crate::graph::bucket_hash32(s, nbanks)));
+                    rest = &[];
+                }
+            }
+        }
+        Ok(out)
+    }
+}

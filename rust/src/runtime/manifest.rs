@@ -1,0 +1,175 @@
+//! Parser for `artifacts/manifest.txt` — the shape-variant ladder emitted
+//! by `python/compile/aot.py`:
+//!
+//! ```text
+//! pagerank <n> <f> <w> <alpha> <file>
+//! bfs      <n> <f> <w> -       <file>
+//! bucket   <batch> <nbanks> -  -     <file>
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Pagerank,
+    Bfs,
+    Bucket,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Option<Kind> {
+        match s {
+            "pagerank" => Some(Kind::Pagerank),
+            "bfs" => Some(Kind::Bfs),
+            "bucket" => Some(Kind::Bucket),
+            _ => None,
+        }
+    }
+}
+
+/// One compiled shape variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub kind: Kind,
+    /// Vertex count (pagerank/bfs) or batch size (bucket).
+    pub n: usize,
+    /// Fragment count (pagerank/bfs) or bank count (bucket).
+    pub f: usize,
+    /// ELL width (pagerank/bfs only).
+    pub w: usize,
+    /// Damping factor compiled into pagerank variants.
+    pub alpha: Option<f64>,
+    pub file: String,
+}
+
+/// The parsed artifact ladder.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {path:?} — run `make artifacts` first ({e})"
+            ))
+        })?;
+        Self::parse(&dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let mut variants = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            if toks.len() != 6 {
+                return Err(Error::Artifact(format!(
+                    "manifest line {}: expected 6 fields, got {}",
+                    lineno + 1,
+                    toks.len()
+                )));
+            }
+            let kind = Kind::parse(toks[0]).ok_or_else(|| {
+                Error::Artifact(format!("manifest line {}: unknown kind {}", lineno + 1, toks[0]))
+            })?;
+            let num = |s: &str, what: &str| -> Result<usize> {
+                s.parse().map_err(|_| {
+                    Error::Artifact(format!(
+                        "manifest line {}: bad {what} `{s}`",
+                        lineno + 1
+                    ))
+                })
+            };
+            let n = num(toks[1], "n")?;
+            let f = num(toks[2], "f")?;
+            let w = if toks[3] == "-" { 0 } else { num(toks[3], "w")? };
+            let alpha = if toks[4] == "-" { None } else { toks[4].parse().ok() };
+            let file = toks[5].to_string();
+            if !dir.join(&file).exists() {
+                return Err(Error::Artifact(format!(
+                    "manifest references missing artifact {file}"
+                )));
+            }
+            variants.push(Variant { kind, n, f, w, alpha, file });
+        }
+        if variants.is_empty() {
+            return Err(Error::Artifact("manifest has no variants".into()));
+        }
+        Ok(Self { dir: dir.to_path_buf(), variants })
+    }
+
+    /// Smallest variant of `kind` with `n >= need_n && f >= need_f`.
+    pub fn pick(&self, kind: Kind, need_n: usize, need_f: usize) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.kind == kind && v.n >= need_n && v.f >= need_f)
+            .min_by_key(|v| (v.n, v.f))
+    }
+
+    pub fn path_of(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn setup(lines: &str, files: &[&str]) -> (TempDir, Result<Manifest>) {
+        let d = TempDir::new("manifest");
+        for f in files {
+            std::fs::write(d.join(f), "dummy").unwrap();
+        }
+        let m = Manifest::parse(d.path(), lines);
+        (d, m)
+    }
+
+    #[test]
+    fn parse_and_pick() {
+        let (_d, m) = setup(
+            "pagerank 256 256 32 0.85 a.hlo\npagerank 1024 4096 32 0.85 b.hlo\nbfs 256 256 32 - c.hlo\nbucket 4096 1024 - - d.hlo\n",
+            &["a.hlo", "b.hlo", "c.hlo", "d.hlo"],
+        );
+        let m = m.unwrap();
+        assert_eq!(m.variants.len(), 4);
+        let v = m.pick(Kind::Pagerank, 100, 100).unwrap();
+        assert_eq!(v.file, "a.hlo");
+        let v = m.pick(Kind::Pagerank, 100, 1000).unwrap();
+        assert_eq!(v.file, "b.hlo");
+        assert!(m.pick(Kind::Pagerank, 10_000, 1).is_none());
+        assert_eq!(m.pick(Kind::Bucket, 4096, 0).unwrap().file, "d.hlo");
+        assert_eq!(m.pick(Kind::Pagerank, 256, 256).unwrap().alpha, Some(0.85));
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let (_d, m) = setup("pagerank 256 256 32 0.85 missing.hlo\n", &[]);
+        assert!(m.is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let (_d, m) = setup("pagerank 256 256\n", &[]);
+        assert!(m.is_err());
+        let (_d2, m2) = setup("warp 1 2 3 4 x.hlo\n", &["x.hlo"]);
+        assert!(m2.is_err());
+        let (_d3, m3) = setup("", &[]);
+        assert!(m3.is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let (_d, m) = setup("# comment\n\nbfs 256 256 32 - c.hlo\n", &["c.hlo"]);
+        assert_eq!(m.unwrap().variants.len(), 1);
+    }
+}

@@ -1,0 +1,7 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! Python is **never** on this path — the artifacts are plain files.
+
+pub mod pjrt;
+pub mod manifest;
+pub mod engine;

@@ -1,0 +1,89 @@
+//! Thin wrapper over the `xla` crate's PJRT client.
+//!
+//! Interchange format is HLO **text** (not serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see aot.py and
+//! /opt/xla-example/README.md).
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+fn rt<E: std::fmt::Display>(ctx: &str) -> impl FnOnce(E) -> Error + '_ {
+    move |e| Error::Runtime(format!("{ctx}: {e}"))
+}
+
+/// A PJRT CPU client. One per process is plenty; cheap to share.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(rt("PjRtClient::cpu"))?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?,
+        )
+        .map_err(rt(&format!("parse HLO text {path:?}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(rt(&format!("compile {path:?}")))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled executable. The lowered jax functions return a tuple, so
+/// `run` always decomposes the single tuple output.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    /// Accepts owned literals or references (no copies for loop-invariant
+    /// operands).
+    pub fn run<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<L>(inputs).map_err(rt("execute"))?;
+        let out = bufs[0][0].to_literal_sync().map_err(rt("to_literal_sync"))?;
+        out.to_tuple().map_err(rt("decompose output tuple"))
+    }
+}
+
+/// Literal construction helpers.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(rt("reshape f32 literal"))
+}
+
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(rt("reshape i32 literal"))
+}
+
+pub fn lit_u32(data: &[u32], dims: &[i64]) -> Result<xla::Literal> {
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(rt("reshape u32 literal"))
+}
+
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(rt("literal to_vec f32"))
+}
+
+pub fn to_vec_u32(l: &xla::Literal) -> Result<Vec<u32>> {
+    l.to_vec::<u32>().map_err(rt("literal to_vec u32"))
+}

@@ -1,0 +1,337 @@
+//! Thin wrappers over the raw memory-mapping system calls.
+//!
+//! Everything Metall does sits on four primitives (paper §2.2, §4.1):
+//! *reserve* a large virtual-memory extent (`PROT_NONE` anonymous
+//! mapping), *map* file ranges into it with `MAP_FIXED`, *sync* dirty
+//! pages (`msync`), and *free* physical/file space (`madvise(MADV_REMOVE)`
+//! / `fallocate(PUNCH_HOLE)`).
+
+use std::fs::File;
+use std::os::unix::io::AsRawFd;
+
+use crate::error::{Error, Result};
+
+/// System page size (cached).
+pub fn page_size() -> usize {
+    static PAGE: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *PAGE.get_or_init(|| unsafe { libc::sysconf(libc::_SC_PAGESIZE) as usize })
+}
+
+/// Protection mode for a mapping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Prot {
+    None,
+    Read,
+    ReadWrite,
+}
+
+impl Prot {
+    fn flags(self) -> i32 {
+        match self {
+            Prot::None => libc::PROT_NONE,
+            Prot::Read => libc::PROT_READ,
+            Prot::ReadWrite => libc::PROT_READ | libc::PROT_WRITE,
+        }
+    }
+}
+
+/// Sharing mode for a file mapping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Share {
+    /// `MAP_SHARED`: the kernel writes dirty pages back to the file.
+    Shared,
+    /// `MAP_PRIVATE`: copy-on-write; dirty pages never reach the file
+    /// unless *we* write them back (bs-mmap, paper §5.1).
+    Private,
+}
+
+/// A reserved contiguous VM extent (anonymous `PROT_NONE` mapping).
+///
+/// Files are later mapped *into* this extent with `MAP_FIXED`, exploiting
+/// Supermalloc's "VM is cheap, physical memory is dear" philosophy (§4).
+/// Dropping unmaps the whole extent.
+#[derive(Debug)]
+pub struct VmReservation {
+    base: *mut u8,
+    len: usize,
+}
+
+// The reservation is an address range, not data; it is safe to hand
+// between threads. Interior mutation happens through raw pointers whose
+// safety is the segment layer's responsibility.
+unsafe impl Send for VmReservation {}
+unsafe impl Sync for VmReservation {}
+
+impl VmReservation {
+    /// Reserve `len` bytes of VM space (rounded up to page size).
+    pub fn reserve(len: usize) -> Result<Self> {
+        let len = crate::util::align_up(len.max(1), page_size());
+        let p = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_NONE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_NORESERVE,
+                -1,
+                0,
+            )
+        };
+        if p == libc::MAP_FAILED {
+            return Err(Error::sys("mmap(reserve)"));
+        }
+        Ok(Self { base: p as *mut u8, len })
+    }
+
+    pub fn base(&self) -> *mut u8 {
+        self.base
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Map `len` bytes of `file` starting at file offset `file_off` into
+    /// this reservation at byte offset `at`, replacing the reservation
+    /// pages (`MAP_FIXED`).
+    pub fn map_file(
+        &self,
+        at: usize,
+        file: &File,
+        file_off: u64,
+        len: usize,
+        prot: Prot,
+        share: Share,
+        populate: bool,
+    ) -> Result<()> {
+        assert!(at + len <= self.len, "mapping outside reservation");
+        assert_eq!(at % page_size(), 0);
+        let mut flags = match share {
+            Share::Shared => libc::MAP_SHARED,
+            Share::Private => libc::MAP_PRIVATE,
+        } | libc::MAP_FIXED;
+        if populate {
+            flags |= libc::MAP_POPULATE;
+        }
+        let p = unsafe {
+            libc::mmap(
+                self.base.add(at) as *mut libc::c_void,
+                len,
+                prot.flags(),
+                flags,
+                file.as_raw_fd(),
+                file_off as libc::off_t,
+            )
+        };
+        if p == libc::MAP_FAILED {
+            return Err(Error::sys("mmap(MAP_FIXED file)"));
+        }
+        Ok(())
+    }
+
+    /// Return a sub-range of the reservation back to `PROT_NONE` reserved
+    /// state (used when unmapping a file region without releasing VM).
+    pub fn re_reserve(&self, at: usize, len: usize) -> Result<()> {
+        assert!(at + len <= self.len);
+        let p = unsafe {
+            libc::mmap(
+                self.base.add(at) as *mut libc::c_void,
+                len,
+                libc::PROT_NONE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS | libc::MAP_NORESERVE | libc::MAP_FIXED,
+                -1,
+                0,
+            )
+        };
+        if p == libc::MAP_FAILED {
+            return Err(Error::sys("mmap(re-reserve)"));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for VmReservation {
+    fn drop(&mut self) {
+        unsafe {
+            libc::munmap(self.base as *mut libc::c_void, self.len);
+        }
+    }
+}
+
+/// `msync(MS_SYNC)` a range: flush dirty pages of a shared mapping to the
+/// backing file and wait for completion.
+pub fn msync(addr: *mut u8, len: usize) -> Result<()> {
+    let rc = unsafe { libc::msync(addr as *mut libc::c_void, len, libc::MS_SYNC) };
+    if rc != 0 {
+        return Err(Error::sys("msync"));
+    }
+    Ok(())
+}
+
+/// `madvise(MADV_DONTNEED)`: drop the range's pages from DRAM. For a
+/// shared file mapping the page cache stays coherent (data is not lost);
+/// for a private mapping dirty pages are discarded.
+pub fn madvise_dontneed(addr: *mut u8, len: usize) -> Result<()> {
+    let rc = unsafe { libc::madvise(addr as *mut libc::c_void, len, libc::MADV_DONTNEED) };
+    if rc != 0 {
+        return Err(Error::sys("madvise(MADV_DONTNEED)"));
+    }
+    Ok(())
+}
+
+/// `madvise(MADV_REMOVE)`: free the range in DRAM *and* punch the
+/// corresponding hole in the backing file (Metall's chunk-granular
+/// "free file space" operation, §4.1).
+pub fn madvise_remove(addr: *mut u8, len: usize) -> Result<()> {
+    let rc = unsafe { libc::madvise(addr as *mut libc::c_void, len, libc::MADV_REMOVE) };
+    if rc != 0 {
+        return Err(Error::sys("madvise(MADV_REMOVE)"));
+    }
+    Ok(())
+}
+
+/// `fallocate(FALLOC_FL_PUNCH_HOLE)` directly on a file.
+pub fn punch_hole(file: &File, offset: u64, len: u64) -> Result<()> {
+    let rc = unsafe {
+        libc::fallocate(
+            file.as_raw_fd(),
+            libc::FALLOC_FL_PUNCH_HOLE | libc::FALLOC_FL_KEEP_SIZE,
+            offset as libc::off_t,
+            len as libc::off_t,
+        )
+    };
+    if rc != 0 {
+        return Err(Error::sys("fallocate(PUNCH_HOLE)"));
+    }
+    Ok(())
+}
+
+/// Number of 512-byte blocks actually allocated to `file` (how much
+/// *file space* is in use — observable effect of `MADV_REMOVE`).
+pub fn allocated_blocks(file: &File) -> Result<u64> {
+    let mut st: libc::stat = unsafe { std::mem::zeroed() };
+    let rc = unsafe { libc::fstat(file.as_raw_fd(), &mut st) };
+    if rc != 0 {
+        return Err(Error::sys("fstat"));
+    }
+    Ok(st.st_blocks as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    use crate::util::tmp::TempDir;
+
+    fn tmpfile(len: usize) -> (TempDir, File) {
+        let dir = TempDir::new("mmaptest");
+        let path = dir.join("f");
+        let mut f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&path)
+            .unwrap();
+        f.write_all(&vec![0u8; len]).unwrap();
+        f.sync_all().unwrap();
+        (dir, f)
+    }
+
+    #[test]
+    fn reserve_and_map_roundtrip() {
+        let ps = page_size();
+        let (_d, f) = tmpfile(4 * ps);
+        let vm = VmReservation::reserve(16 * ps).unwrap();
+        vm.map_file(0, &f, 0, 4 * ps, Prot::ReadWrite, Share::Shared, false).unwrap();
+        unsafe {
+            *vm.base() = 0xAB;
+            *vm.base().add(4 * ps - 1) = 0xCD;
+            assert_eq!(*vm.base(), 0xAB);
+        }
+        msync(vm.base(), 4 * ps).unwrap();
+        // read back through the file
+        let data = {
+            use std::io::{Read, Seek};
+            let mut f2 = f.try_clone().unwrap();
+            f2.seek(std::io::SeekFrom::Start(0)).unwrap();
+            let mut buf = vec![0u8; 4 * ps];
+            f2.read_exact(&mut buf).unwrap();
+            buf
+        };
+        assert_eq!(data[0], 0xAB);
+        assert_eq!(data[4 * ps - 1], 0xCD);
+    }
+
+    #[test]
+    fn private_mapping_does_not_write_back() {
+        let ps = page_size();
+        let (_d, f) = tmpfile(ps);
+        let vm = VmReservation::reserve(ps).unwrap();
+        vm.map_file(0, &f, 0, ps, Prot::ReadWrite, Share::Private, false).unwrap();
+        unsafe {
+            *vm.base() = 0x77;
+        }
+        // msync on private mapping is a no-op for the file
+        let _ = msync(vm.base(), ps);
+        use std::io::{Read, Seek};
+        let mut f2 = f.try_clone().unwrap();
+        f2.seek(std::io::SeekFrom::Start(0)).unwrap();
+        let mut b = [0u8; 1];
+        f2.read_exact(&mut b).unwrap();
+        assert_eq!(b[0], 0, "private write must not reach the file");
+    }
+
+    #[test]
+    fn madv_remove_frees_file_space() {
+        let ps = page_size();
+        let len = 256 * ps;
+        let (_d, f) = tmpfile(len);
+        let vm = VmReservation::reserve(len).unwrap();
+        vm.map_file(0, &f, 0, len, Prot::ReadWrite, Share::Shared, false).unwrap();
+        unsafe {
+            for i in 0..len {
+                *vm.base().add(i) = 0xFF;
+            }
+        }
+        msync(vm.base(), len).unwrap();
+        let before = allocated_blocks(&f).unwrap();
+        assert!(before > 0);
+        madvise_remove(vm.base(), len).unwrap();
+        let after = allocated_blocks(&f).unwrap();
+        assert!(after < before, "MADV_REMOVE should punch file holes ({before} -> {after})");
+        // data now reads back as zeros
+        unsafe {
+            assert_eq!(*vm.base(), 0);
+        }
+    }
+
+    #[test]
+    fn re_reserve_releases_mapping() {
+        let ps = page_size();
+        let (_d, f) = tmpfile(ps);
+        let vm = VmReservation::reserve(2 * ps).unwrap();
+        vm.map_file(ps, &f, 0, ps, Prot::ReadWrite, Share::Shared, false).unwrap();
+        unsafe {
+            *vm.base().add(ps) = 1;
+        }
+        vm.re_reserve(ps, ps).unwrap();
+        // further mapping over the same spot works
+        vm.map_file(ps, &f, 0, ps, Prot::Read, Share::Shared, false).unwrap();
+        unsafe {
+            assert_eq!(*vm.base().add(ps), 1);
+        }
+    }
+
+    #[test]
+    fn punch_hole_direct() {
+        let ps = page_size();
+        let (_d, f) = tmpfile(64 * ps);
+        let before = allocated_blocks(&f).unwrap();
+        punch_hole(&f, 0, (64 * ps) as u64).unwrap();
+        assert!(allocated_blocks(&f).unwrap() <= before);
+    }
+}

@@ -1,0 +1,23 @@
+//! Storage substrates for the persistent heap.
+//!
+//! - [`mmap`] — thin, safe-ish wrappers over `mmap(2)` / `msync(2)` /
+//!   `madvise(2)` / `fallocate(2)`.
+//! - [`segment`] — Metall's application-data segment: a large reserved VM
+//!   region backed by multiple files created and mapped on demand (paper
+//!   §3.6, §4.1).
+//! - [`pagemap`] — `/proc/self/pagemap` scanning used by bs-mmap to find
+//!   dirty pages of `MAP_PRIVATE` regions (paper §5.1).
+//! - [`bsmmap`] — batch-synchronized mmap: private mapping + user-level
+//!   msync with run coalescing and per-file parallel write-back (paper §5).
+//! - [`reflink`] — `FICLONE`-based snapshot copy with a plain-copy
+//!   fallback (paper §3.4).
+//! - [`netfs`] — simulated network file systems (Lustre-like / VAST-like)
+//!   and device profiles used by the Fig 5/6 reproduction; see DESIGN.md
+//!   §3 (substitutions).
+
+pub mod mmap;
+pub mod segment;
+pub mod pagemap;
+pub mod bsmmap;
+pub mod reflink;
+pub mod netfs;

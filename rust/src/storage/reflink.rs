@@ -1,0 +1,125 @@
+//! Reflink-accelerated copies for snapshots (paper §3.4).
+//!
+//! "With reflink, a copied file shares the same data blocks with the
+//! existing file; data blocks are copied only when they are modified
+//! (copy-on-write). … In case reflink is not supported by the underlying
+//! filesystem, Metall automatically falls back to a standard copy."
+//!
+//! We issue `ioctl(FICLONE)` and fall back to `std::fs::copy` on
+//! `EOPNOTSUPP` / `EINVAL` / `EXDEV` / `ENOTTY` (the testbed's ext4 takes
+//! the fallback branch; XFS/Btrfs/APFS would take the clone branch).
+
+use std::fs::{File, OpenOptions};
+use std::os::unix::io::AsRawFd;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// `FICLONE` ioctl request code (linux/fs.h: `_IOW(0x94, 9, int)`).
+const FICLONE: libc::c_ulong = 0x4004_9409;
+
+/// How a copy was performed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CopyMethod {
+    Reflink,
+    Fallback,
+}
+
+/// Copy `src` to `dst`, attempting a reflink clone first.
+pub fn copy_file(src: &Path, dst: &Path) -> Result<CopyMethod> {
+    let sf = File::open(src).map_err(|e| Error::io(src, e))?;
+    let df = OpenOptions::new()
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(dst)
+        .map_err(|e| Error::io(dst, e))?;
+    let rc = unsafe { libc::ioctl(df.as_raw_fd(), FICLONE, sf.as_raw_fd()) };
+    if rc == 0 {
+        return Ok(CopyMethod::Reflink);
+    }
+    let errno = std::io::Error::last_os_error().raw_os_error().unwrap_or(0);
+    match errno {
+        libc::EOPNOTSUPP | libc::EINVAL | libc::EXDEV | libc::ENOTTY | libc::ENOSYS => {
+            drop(df);
+            std::fs::copy(src, dst).map_err(|e| Error::io(dst, e))?;
+            Ok(CopyMethod::Fallback)
+        }
+        _ => Err(Error::sys("ioctl(FICLONE)")),
+    }
+}
+
+/// Recursively copy a directory tree (the Metall datastore layout is a
+/// directory; §3.6 "one can easily duplicate or delete a Metall datastore,
+/// even using normal file copy or remove commands").
+///
+/// Returns `(files_copied, bytes, method_of_last_file)`; the method is
+/// uniform in practice since all files live on one filesystem.
+pub fn copy_dir(src: &Path, dst: &Path) -> Result<(usize, u64, CopyMethod)> {
+    std::fs::create_dir_all(dst).map_err(|e| Error::io(dst, e))?;
+    let mut files = 0usize;
+    let mut bytes = 0u64;
+    let mut method = CopyMethod::Fallback;
+    for entry in std::fs::read_dir(src).map_err(|e| Error::io(src, e))? {
+        let entry = entry.map_err(|e| Error::io(src, e))?;
+        let ty = entry.file_type().map_err(|e| Error::io(entry.path(), e))?;
+        let from = entry.path();
+        let to = dst.join(entry.file_name());
+        if ty.is_dir() {
+            let (f, b, m) = copy_dir(&from, &to)?;
+            files += f;
+            bytes += b;
+            method = m;
+        } else if ty.is_file() {
+            method = copy_file(&from, &to)?;
+            files += 1;
+            bytes += entry.metadata().map_err(|e| Error::io(&from, e))?.len();
+        }
+    }
+    Ok((files, bytes, method))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn copy_file_roundtrip() {
+        let d = TempDir::new("reflink");
+        let src = d.join("a");
+        let dst = d.join("b");
+        std::fs::write(&src, b"snapshot-me").unwrap();
+        let method = copy_file(&src, &dst).unwrap();
+        assert_eq!(std::fs::read(&dst).unwrap(), b"snapshot-me");
+        // On this testbed (ext4) we expect the fallback branch, but the
+        // result must be correct either way.
+        let _ = method;
+    }
+
+    #[test]
+    fn copy_file_truncates_existing_dst() {
+        let d = TempDir::new("reflink2");
+        let src = d.join("a");
+        let dst = d.join("b");
+        std::fs::write(&src, b"ab").unwrap();
+        std::fs::write(&dst, b"longer-preexisting-content").unwrap();
+        copy_file(&src, &dst).unwrap();
+        assert_eq!(std::fs::read(&dst).unwrap(), b"ab");
+    }
+
+    #[test]
+    fn copy_dir_recursive() {
+        let d = TempDir::new("reflink3");
+        let src = d.join("store");
+        std::fs::create_dir_all(src.join("sub")).unwrap();
+        std::fs::write(src.join("x"), b"1").unwrap();
+        std::fs::write(src.join("sub/y"), b"22").unwrap();
+        let dst = d.join("snap");
+        let (files, bytes, _m) = copy_dir(&src, &dst).unwrap();
+        assert_eq!(files, 2);
+        assert_eq!(bytes, 3);
+        assert_eq!(std::fs::read(dst.join("x")).unwrap(), b"1");
+        assert_eq!(std::fs::read(dst.join("sub/y")).unwrap(), b"22");
+    }
+}

@@ -1,0 +1,68 @@
+//! Bit-math helpers used by the size-class tables and the multi-layer
+//! bitset (§4.2, §4.3.1 of the paper).
+
+/// Next power of two ≥ `v` (v > 0).
+#[inline]
+pub fn next_pow2(v: u64) -> u64 {
+    debug_assert!(v > 0);
+    v.next_power_of_two()
+}
+
+/// floor(log2(v)) for v > 0.
+#[inline]
+pub fn log2_floor(v: u64) -> u32 {
+    debug_assert!(v > 0);
+    63 - v.leading_zeros()
+}
+
+/// ceil(log2(v)) for v > 0.
+#[inline]
+pub fn log2_ceil(v: u64) -> u32 {
+    if v <= 1 { 0 } else { 64 - (v - 1).leading_zeros() }
+}
+
+/// Index of the lowest zero bit of `w`, or `None` when `w == u64::MAX`.
+/// This is the "built-in bit operation" the paper's multi-layer bitset
+/// uses to find a free slot (at most 3 of these per allocation).
+#[inline]
+pub fn lowest_zero(w: u64) -> Option<u32> {
+    if w == u64::MAX { None } else { Some((!w).trailing_zeros()) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_pow2_table() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(4), 4);
+        assert_eq!(next_pow2(5), 8);
+        assert_eq!(next_pow2((1 << 20) + 1), 1 << 21);
+        assert_eq!(next_pow2(1 << 21), 1 << 21);
+    }
+
+    #[test]
+    fn log2_pair() {
+        for k in 0..62u32 {
+            let v = 1u64 << k;
+            assert_eq!(log2_floor(v), k);
+            assert_eq!(log2_ceil(v), k);
+            if v > 1 {
+                assert_eq!(log2_floor(v + 1), k);
+                assert_eq!(log2_ceil(v + 1), k + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn lowest_zero_cases() {
+        assert_eq!(lowest_zero(0), Some(0));
+        assert_eq!(lowest_zero(0b1), Some(1));
+        assert_eq!(lowest_zero(0b1011), Some(2));
+        assert_eq!(lowest_zero(u64::MAX), None);
+        assert_eq!(lowest_zero(u64::MAX >> 1), Some(63));
+    }
+}

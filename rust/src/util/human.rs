@@ -1,0 +1,68 @@
+//! Human-readable formatting for the bench harness output.
+
+/// Format a byte count: "512 B", "2.0 MiB", "1.50 GiB".
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Format a duration in adaptive units.
+pub fn duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{secs:.2} s")
+    }
+}
+
+/// Format a rate (ops/sec) with SI prefixes.
+pub fn rate(ops_per_sec: f64) -> String {
+    if ops_per_sec >= 1e9 {
+        format!("{:.2} Gop/s", ops_per_sec / 1e9)
+    } else if ops_per_sec >= 1e6 {
+        format!("{:.2} Mop/s", ops_per_sec / 1e6)
+    } else if ops_per_sec >= 1e3 {
+        format!("{:.2} Kop/s", ops_per_sec / 1e3)
+    } else {
+        format!("{ops_per_sec:.1} op/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_fmt() {
+        assert_eq!(bytes(0), "0 B");
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2 * 1024 * 1024), "2.00 MiB");
+        assert_eq!(bytes(3 * 1024 * 1024 * 1024 / 2), "1.50 GiB");
+    }
+
+    #[test]
+    fn duration_fmt() {
+        assert_eq!(duration(2.5), "2.50 s");
+        assert_eq!(duration(0.0025), "2.50 ms");
+        assert!(duration(2.5e-7).ends_with("ns"));
+    }
+
+    #[test]
+    fn rate_fmt() {
+        assert_eq!(rate(1_500_000.0), "1.50 Mop/s");
+        assert_eq!(rate(12.0), "12.0 op/s");
+    }
+}

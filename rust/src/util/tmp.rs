@@ -1,0 +1,74 @@
+//! Scratch-directory helper (the offline image has no `tempfile` crate).
+//! Used by tests, benches and examples for datastore locations.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// A uniquely named directory removed on drop.
+pub struct TempDir(PathBuf);
+
+impl TempDir {
+    /// Create under the system temp dir.
+    pub fn new(tag: &str) -> Self {
+        Self::new_in(std::env::temp_dir(), tag)
+    }
+
+    /// Create under an explicit parent (e.g. a specific mount point).
+    pub fn new_in(parent: impl AsRef<Path>, tag: &str) -> Self {
+        let p = parent.as_ref().join(format!(
+            "metallrs-{tag}-{}-{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&p).expect("create temp dir");
+        TempDir(p)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.0
+    }
+
+    /// Path of an entry inside the directory.
+    pub fn join(&self, name: &str) -> PathBuf {
+        self.0.join(name)
+    }
+
+    /// Keep the directory on drop (debugging escape hatch).
+    pub fn into_path(self) -> PathBuf {
+        let p = self.0.clone();
+        std::mem::forget(self);
+        p
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn create_and_cleanup() {
+        let p;
+        {
+            let d = TempDir::new("tmptest");
+            p = d.path().to_path_buf();
+            std::fs::write(d.join("x"), b"hi").unwrap();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn unique_names() {
+        let a = TempDir::new("u");
+        let b = TempDir::new("u");
+        assert_ne!(a.path(), b.path());
+    }
+}

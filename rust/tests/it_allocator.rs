@@ -1,0 +1,216 @@
+//! Property-style integration tests of the allocator layer: randomized
+//! allocation traces checked against a model, across Metall and every
+//! baseline (they all speak `SegmentAlloc`).
+
+use std::collections::HashMap;
+
+use metall_rs::alloc::size_class::{bin_of, size_of_bin};
+use metall_rs::alloc::{ManagerOptions, MetallManager, SegmentAlloc};
+use metall_rs::baselines::bip::BipAllocator;
+use metall_rs::baselines::pmemkind::{MadvMode, PmemKindAllocator};
+use metall_rs::baselines::ralloc_like::RallocLike;
+use metall_rs::storage::segment::SegmentOptions;
+use metall_rs::util::rng::Xoshiro256ss;
+use metall_rs::util::tmp::TempDir;
+
+const CHUNK: usize = 64 << 10;
+
+fn seg_opts() -> SegmentOptions {
+    SegmentOptions::default().with_file_size(1 << 20).with_vm_reserve(4 << 30)
+}
+
+/// Random alloc/write/verify/free trace against a shadow model. Checks:
+/// values never corrupted (=> live allocations never overlap or move),
+/// deallocate accepts exactly the live set.
+fn fuzz_against_model<A: SegmentAlloc>(a: &A, seed: u64, steps: usize, max_size: usize) {
+    let mut rng = Xoshiro256ss::new(seed);
+    let mut live: Vec<(u64, u64, usize)> = Vec::new(); // (offset, tag, size)
+    for step in 0..steps {
+        let do_alloc = live.is_empty() || rng.next_f64() < 0.6;
+        if do_alloc {
+            let size = 8 + rng.gen_range(max_size as u64 - 8) as usize;
+            let off = a.allocate(size).unwrap();
+            let tag = rng.next_u64();
+            // stamp head and tail of the allocation
+            a.write_pod::<u64>(off, tag);
+            if size >= 16 {
+                a.write_pod::<u64>(off + size as u64 - 8, tag ^ 0xFFFF);
+            }
+            live.push((off, tag, size));
+        } else {
+            let i = rng.gen_range(live.len() as u64) as usize;
+            let (off, tag, size) = live.swap_remove(i);
+            assert_eq!(a.read_pod::<u64>(off), tag, "step {step}: head corrupted");
+            if size >= 16 {
+                assert_eq!(
+                    a.read_pod::<u64>(off + size as u64 - 8),
+                    tag ^ 0xFFFF,
+                    "step {step}: tail corrupted"
+                );
+            }
+            a.deallocate(off).unwrap();
+        }
+        // periodically verify a sample of the live set
+        if step % 64 == 0 {
+            for &(off, tag, _) in live.iter().take(16) {
+                assert_eq!(a.read_pod::<u64>(off), tag);
+            }
+        }
+    }
+    for (off, tag, _) in live {
+        assert_eq!(a.read_pod::<u64>(off), tag);
+        a.deallocate(off).unwrap();
+    }
+}
+
+#[test]
+fn fuzz_metall() {
+    let d = TempDir::new("fz-metall");
+    let opts = ManagerOptions {
+        chunk_size: CHUNK,
+        file_size: 1 << 20,
+        vm_reserve: 4 << 30,
+        ..Default::default()
+    };
+    let m = MetallManager::create_with(d.join("s"), opts).unwrap();
+    fuzz_against_model(&m, 11, 6000, 4096);
+    // include large allocations (> chunk/2)
+    fuzz_against_model(&m, 12, 500, 3 * CHUNK);
+    m.close().unwrap();
+}
+
+#[test]
+fn fuzz_bip() {
+    let d = TempDir::new("fz-bip");
+    let a = BipAllocator::create_with(d.join("s"), seg_opts()).unwrap();
+    fuzz_against_model(&a, 21, 6000, 4096);
+    fuzz_against_model(&a, 22, 500, 3 * CHUNK);
+}
+
+#[test]
+fn fuzz_pmemkind() {
+    let d = TempDir::new("fz-pk");
+    let a =
+        PmemKindAllocator::create_with(d.join("s"), MadvMode::DontNeed, seg_opts(), CHUNK)
+            .unwrap();
+    fuzz_against_model(&a, 31, 6000, 4096);
+    fuzz_against_model(&a, 32, 500, 3 * CHUNK);
+}
+
+#[test]
+fn fuzz_ralloc() {
+    let d = TempDir::new("fz-ra");
+    let a = RallocLike::create_with(d.join("s"), seg_opts(), CHUNK).unwrap();
+    fuzz_against_model(&a, 41, 6000, 4096);
+    fuzz_against_model(&a, 42, 500, 3 * CHUNK);
+}
+
+#[test]
+fn fuzz_metall_multithreaded() {
+    let d = TempDir::new("fz-mt");
+    let opts = ManagerOptions {
+        chunk_size: CHUNK,
+        file_size: 1 << 20,
+        vm_reserve: 4 << 30,
+        ..Default::default()
+    };
+    let m = MetallManager::create_with(d.join("s"), opts).unwrap();
+    std::thread::scope(|s| {
+        for t in 0..6 {
+            let m = &m;
+            s.spawn(move || fuzz_against_model(m, 100 + t, 3000, 2048));
+        }
+    });
+    m.close().unwrap();
+}
+
+/// Internal-fragmentation invariant (paper §4.2): the class chosen for
+/// any size wastes ≤ 25% (geometric region) and every offset returned is
+/// aligned to 8.
+#[test]
+fn size_class_and_alignment_invariants() {
+    let d = TempDir::new("fz-frag");
+    let opts = ManagerOptions {
+        chunk_size: CHUNK,
+        file_size: 1 << 20,
+        vm_reserve: 4 << 30,
+        ..Default::default()
+    };
+    let m = MetallManager::create_with(d.join("s"), opts).unwrap();
+    let mut rng = Xoshiro256ss::new(5);
+    for _ in 0..2000 {
+        let size = 8 + rng.gen_range(30_000) as usize;
+        let off = m.allocate(size).unwrap();
+        assert_eq!(off % 8, 0, "8-byte alignment");
+        if size > 32 {
+            let class = size_of_bin(bin_of(size));
+            assert!((class - size) as f64 / class as f64 <= 0.25);
+        }
+        m.deallocate(off).unwrap();
+    }
+    m.close().unwrap();
+}
+
+/// After a full churn cycle the allocator must return all chunks —
+/// i.e., no physical leak (checked through used_segment_bytes).
+#[test]
+fn no_space_leak_after_full_free() {
+    let d = TempDir::new("fz-leak");
+    let opts = ManagerOptions {
+        chunk_size: CHUNK,
+        file_size: 1 << 20,
+        vm_reserve: 4 << 30,
+        ..Default::default()
+    };
+    let m = MetallManager::create_with(d.join("s"), opts).unwrap();
+    let mut offs = Vec::new();
+    let mut rng = Xoshiro256ss::new(77);
+    for _ in 0..3000 {
+        offs.push(m.allocate(8 + rng.gen_range(2000) as usize).unwrap());
+    }
+    for off in offs {
+        m.deallocate(off).unwrap();
+    }
+    m.sync().unwrap(); // drains object caches to the bitsets
+    assert_eq!(m.used_segment_bytes(), 0, "all chunks must return to Free");
+    m.close().unwrap();
+}
+
+/// Reattach equality: a randomized heap survives close/open bit-exactly.
+#[test]
+fn reattach_preserves_every_byte() {
+    let d = TempDir::new("fz-reattach");
+    let store = d.join("s");
+    let mut model: HashMap<u64, Vec<u8>> = HashMap::new();
+    {
+        let opts = ManagerOptions {
+            chunk_size: CHUNK,
+            file_size: 1 << 20,
+            vm_reserve: 4 << 30,
+            ..Default::default()
+        };
+        let m = MetallManager::create_with(&store, opts).unwrap();
+        let mut rng = Xoshiro256ss::new(123);
+        for i in 0..500 {
+            let size = 8 + rng.gen_range(1500) as usize;
+            let off = m.allocate(size).unwrap();
+            let data: Vec<u8> = (0..size).map(|j| ((i * j) % 251) as u8).collect();
+            m.write_bytes(off, &data);
+            model.insert(off, data);
+        }
+        m.close().unwrap();
+    }
+    let m = MetallManager::open(&store).unwrap();
+    for (&off, data) in &model {
+        let got = unsafe { m.bytes_at(off, data.len()) };
+        assert_eq!(got, &data[..], "offset {off}");
+    }
+    // allocator still works after reattach and does not clobber old data
+    let extra = m.allocate(64).unwrap();
+    m.write_pod::<u64>(extra, 42);
+    for (&off, data) in &model {
+        let got = unsafe { m.bytes_at(off, data.len()) };
+        assert_eq!(got, &data[..], "offset {off} after post-reattach alloc");
+    }
+    m.close().unwrap();
+}

@@ -1,0 +1,199 @@
+//! GBTL integration: persistent matrices + the five algorithms over the
+//! SNAP stand-ins, cross-checked between the DRAM path, the persistent
+//! path, and (where artifacts exist) the PJRT engine.
+
+use metall_rs::alloc::{ManagerOptions, MetallManager};
+use metall_rs::gbtl::algorithms::{bfs_level, ktruss, pagerank, sssp, triangle_count};
+use metall_rs::gbtl::ops::{mxm, mxv, reduce_matrix, vxm};
+use metall_rs::gbtl::semiring::{MinPlus, PlusTimes};
+use metall_rs::gbtl::types::GrbVector;
+use metall_rs::gbtl::{GrbMatrix, HeapAlloc};
+use metall_rs::graph::datasets;
+use metall_rs::graph::ell::EllGraph;
+use metall_rs::runtime::engine::AnalyticsEngine;
+use metall_rs::util::rng::Xoshiro256ss;
+use metall_rs::util::tmp::TempDir;
+
+#[test]
+fn all_five_algorithms_run_on_persistent_matrix() {
+    let d = TempDir::new("gbtl5");
+    let ds = datasets::load("EE").unwrap(); // smallest (1005 vertices)
+    let store = d.join("s");
+    {
+        let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests())
+            .unwrap();
+        let mat = GrbMatrix::from_edges(&m, ds.n, &ds.edges).unwrap();
+        m.construct::<GrbMatrix>("mat", mat).unwrap();
+        m.close().unwrap();
+    }
+    let m = MetallManager::open_read_only(&store).unwrap();
+    let mat: GrbMatrix = m.read(m.find::<GrbMatrix>("mat").unwrap().unwrap());
+
+    let levels = bfs_level(&m, &mat, 0);
+    assert_eq!(levels[0], 0);
+    assert!(levels.iter().filter(|&&l| l >= 0).count() > 1);
+
+    let (ranks, iters) = pagerank(&m, &mat, 0.85, 100, 1e-9);
+    assert!(iters > 1);
+    assert!((ranks.iter().sum::<f64>() - 1.0).abs() < 1e-6);
+
+    let dist = sssp(&m, &mat, 0);
+    for i in 0..ds.n {
+        if levels[i] >= 0 {
+            assert_eq!(dist[i], levels[i] as f64, "unweighted sssp == bfs, v{i}");
+        } else {
+            assert!(dist[i].is_infinite());
+        }
+    }
+
+    let ntri = triangle_count(&m, &mat).unwrap();
+    assert!(ntri > 0, "a power-law graph of this density has triangles");
+
+    let t3 = ktruss(&m, &mat, 3).unwrap();
+    assert!(!t3.is_empty());
+    assert!(t3.len() <= mat.nvals(&m));
+}
+
+/// Property tests: random sparse matrices vs. a dense oracle, over two
+/// semirings, for mxv / vxm / mxm (masked and unmasked).
+#[test]
+fn matrix_ops_match_dense_oracle_randomized() {
+    let h = HeapAlloc::new().unwrap();
+    let mut rng = Xoshiro256ss::new(2024);
+    for case in 0..25 {
+        let n = 4 + rng.gen_range(28) as usize;
+        let density = 0.05 + rng.next_f64() * 0.4;
+        let mut trips = Vec::new();
+        let mut dense = vec![vec![0.0f64; n]; n];
+        for r in 0..n {
+            for c in 0..n {
+                if rng.next_f64() < density {
+                    let v = (rng.gen_range(9) + 1) as f64;
+                    trips.push((r as u64, c as u64, v));
+                    dense[r][c] = v;
+                }
+            }
+        }
+        let m = GrbMatrix::build(&h, n, n, &mut trips).unwrap();
+        let u = GrbVector {
+            vals: (0..n).map(|i| (i % 7) as f64 + 0.5).collect(),
+            mask: vec![true; n],
+        };
+
+        // mxv over plus-times
+        let w = mxv::<PlusTimes, _>(&h, &m, &u);
+        for r in 0..n {
+            let want: f64 = (0..n).map(|c| dense[r][c] * u.vals[c]).sum();
+            let got = w.get(r).unwrap_or(0.0);
+            assert!((got - want).abs() < 1e-9, "case {case} mxv row {r}");
+        }
+
+        // vxm == transpose-mxv
+        let wv = vxm::<PlusTimes, _>(&h, &u, &m);
+        for c in 0..n {
+            let want: f64 = (0..n).map(|r| u.vals[r] * dense[r][c]).sum();
+            assert!((wv.get(c).unwrap_or(0.0) - want).abs() < 1e-9, "case {case} vxm col {c}");
+        }
+
+        // mxv over min-plus (only where a row has structure)
+        let wm = mxv::<MinPlus, _>(&h, &m, &u);
+        for r in 0..n {
+            let want = (0..n)
+                .filter(|&c| dense[r][c] != 0.0)
+                .map(|c| dense[r][c] + u.vals[c])
+                .fold(f64::INFINITY, f64::min);
+            if want.is_finite() {
+                assert!((wm.get(r).unwrap() - want).abs() < 1e-9, "case {case} minplus {r}");
+            } else {
+                assert!(wm.get(r).is_none());
+            }
+        }
+
+        // mxm vs dense matmul + total reduction
+        let sq = mxm::<PlusTimes, _, _, _>(&h, &m, &h, &m, &h, None).unwrap();
+        let dsq = sq.to_dense(&h);
+        let mut want_total = 0.0;
+        for r in 0..n {
+            for c in 0..n {
+                let want: f64 = (0..n).map(|k| dense[r][k] * dense[k][c]).sum();
+                assert!((dsq[r][c] - want).abs() < 1e-6, "case {case} mxm [{r}][{c}]");
+                want_total += want;
+            }
+        }
+        let got_total = reduce_matrix::<PlusTimes, _>(&h, &sq);
+        assert!((got_total - want_total).abs() / want_total.max(1.0) < 1e-9);
+    }
+}
+
+#[test]
+fn dram_and_persistent_paths_agree_on_all_datasets() {
+    let d = TempDir::new("gbtlagree");
+    for ds in datasets::all() {
+        let h = HeapAlloc::new().unwrap();
+        let dram = GrbMatrix::from_edges(&h, ds.n, &ds.edges).unwrap();
+        let store = d.join(ds.name);
+        let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests())
+            .unwrap();
+        let pers = GrbMatrix::from_edges(&m, ds.n, &ds.edges).unwrap();
+
+        assert_eq!(dram.nvals(&h), pers.nvals(&m), "{}", ds.name);
+        assert_eq!(bfs_level(&h, &dram, 0), bfs_level(&m, &pers, 0), "{}", ds.name);
+        let (ra, _) = pagerank(&h, &dram, 0.85, 30, 0.0);
+        let (rb, _) = pagerank(&m, &pers, 0.85, 30, 0.0);
+        for (x, y) in ra.iter().zip(&rb) {
+            assert!((x - y).abs() < 1e-12, "{}", ds.name);
+        }
+        m.close().unwrap();
+    }
+}
+
+/// Cross-stack agreement: GBTL (CSR/semiring) vs EllGraph native vs the
+/// PJRT engine (Pallas kernels) on the same graph.
+#[test]
+fn three_implementations_agree() {
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let ds = datasets::load("EE").unwrap();
+    let h = HeapAlloc::new().unwrap();
+    let mat = GrbMatrix::from_edges(&h, ds.n, &ds.edges).unwrap();
+    // GrbMatrix::from_edges dedups; mirror that for the other paths
+    let mut edges = ds.edges.clone();
+    edges.sort_unstable();
+    edges.dedup();
+    let ell = EllGraph::from_edges(ds.n, &edges, 32);
+
+    // 1 vs 2: gbtl vs native
+    let (r_gbtl, _) = pagerank(&h, &mat, 0.85, 25, 0.0);
+    let r_native = ell.pagerank_native(0.85, 25);
+    for i in 0..ds.n {
+        assert!(
+            (r_gbtl[i] - r_native[i] as f64).abs() < 1e-4,
+            "gbtl vs native at {i}: {} vs {}",
+            r_gbtl[i],
+            r_native[i]
+        );
+    }
+    let l_gbtl = bfs_level(&h, &mat, 0);
+    let l_native = ell.bfs_native(0);
+    assert_eq!(l_gbtl, l_native);
+
+    // 3: PJRT engine (skip silently without artifacts; Makefile builds them)
+    if artifacts.join("manifest.txt").exists() {
+        let eng = AnalyticsEngine::new(&artifacts).unwrap();
+        if let Ok(run) = eng.pagerank(&ell, 25, 0.0) {
+            for i in 0..ds.n {
+                assert!(
+                    (run.values[i] as f64 - r_gbtl[i]).abs() < 1e-4,
+                    "pjrt vs gbtl at {i}"
+                );
+            }
+        } else {
+            eprintln!("skipping PJRT leg: no variant large enough");
+        }
+        let bfs_run = eng.bfs(&ell, 0).unwrap();
+        for i in 0..ds.n {
+            assert_eq!(bfs_run.values[i] as i64, l_gbtl[i], "pjrt bfs at {i}");
+        }
+    } else {
+        eprintln!("skipping PJRT leg: run `make artifacts`");
+    }
+}

@@ -1,0 +1,204 @@
+//! Persistence-policy integration tests: snapshot consistency (§3.3),
+//! snapshots (§3.4), crash handling, bs-mmap persistence (§5), and
+//! multi-generation reattach chains.
+
+use metall_rs::alloc::{ManagerOptions, MetallManager};
+use metall_rs::containers::{BankedAdjacency, PHashMapU64, PVec};
+use metall_rs::util::rng::Xoshiro256ss;
+use metall_rs::util::tmp::TempDir;
+
+fn opts() -> ManagerOptions {
+    ManagerOptions::small_for_tests()
+}
+
+/// Five generations of open → mutate → close; all data accumulates.
+#[test]
+fn multi_generation_reattach_chain() {
+    let d = TempDir::new("gen");
+    let store = d.join("s");
+    {
+        let m = MetallManager::create_with(&store, opts()).unwrap();
+        let v = PVec::<u64>::create(&m).unwrap();
+        m.construct::<u64>("log", v.offset()).unwrap();
+        m.close().unwrap();
+    }
+    for generation in 0..5u64 {
+        let m = MetallManager::open(&store).unwrap();
+        let v = PVec::<u64>::from_offset(m.read(m.find::<u64>("log").unwrap().unwrap()));
+        for i in 0..100 {
+            v.push(&m, generation * 1000 + i).unwrap();
+        }
+        m.close().unwrap();
+    }
+    let m = MetallManager::open_read_only(&store).unwrap();
+    let v = PVec::<u64>::from_offset(m.read(m.find::<u64>("log").unwrap().unwrap()));
+    assert_eq!(v.len(&m), 500);
+    assert_eq!(v.get(&m, 0), 0);
+    assert_eq!(v.get(&m, 499), 4099);
+}
+
+/// Crash before close → store refuses plain open; a pre-crash snapshot
+/// opens fine and holds the snapshotted state (the paper's §3.3
+/// recommended workflow).
+#[test]
+fn crash_recovery_via_snapshot() {
+    let d = TempDir::new("crash");
+    let store = d.join("s");
+    let snap = d.join("snap");
+    {
+        let m = MetallManager::create_with(&store, opts()).unwrap();
+        let off = m.construct::<u64>("state", 1).unwrap();
+        m.snapshot(&snap).unwrap();
+        m.write::<u64>(off, 2);
+        // crash: no close()
+        std::mem::forget(m);
+    }
+    assert!(MetallManager::open(&store).is_err(), "dirty store refused");
+    let s = MetallManager::open(&snap).unwrap();
+    let off = s.find::<u64>("state").unwrap().unwrap();
+    assert_eq!(s.read::<u64>(off), 1, "snapshot holds pre-crash state");
+    s.close().unwrap();
+}
+
+/// Snapshots are fully independent: divergent writes after the fork.
+#[test]
+fn snapshot_divergence() {
+    let d = TempDir::new("fork");
+    let store = d.join("a");
+    let snap = d.join("b");
+    let m = MetallManager::create_with(&store, opts()).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("v", v.offset()).unwrap();
+    for i in 0..10 {
+        v.push(&m, i).unwrap();
+    }
+    m.snapshot(&snap).unwrap();
+    for i in 10..20 {
+        v.push(&m, i).unwrap();
+    }
+    m.close().unwrap();
+
+    let a = MetallManager::open(&store).unwrap();
+    let b = MetallManager::open(&snap).unwrap();
+    let va = PVec::<u64>::from_offset(a.read(a.find::<u64>("v").unwrap().unwrap()));
+    let vb = PVec::<u64>::from_offset(b.read(b.find::<u64>("v").unwrap().unwrap()));
+    assert_eq!(va.len(&a), 20);
+    assert_eq!(vb.len(&b), 10);
+    // mutate the snapshot; original untouched
+    for i in 0..5 {
+        vb.push(&b, 900 + i).unwrap();
+    }
+    assert_eq!(va.len(&a), 20);
+    a.close().unwrap();
+    b.close().unwrap();
+}
+
+/// bs-mmap mode (§5): private mapping, explicit user msync, data
+/// reattachable afterwards; kernel never wrote behind our back.
+#[test]
+fn bsmmap_mode_full_graph_roundtrip() {
+    let d = TempDir::new("bsgraph");
+    let store = d.join("s");
+    let mut o = opts();
+    o.private_mode = true;
+    let nedges = 5_000u64;
+    {
+        let m = MetallManager::create_with(&store, o).unwrap();
+        let g = BankedAdjacency::create(&m, 32).unwrap();
+        m.construct::<u64>("g", g.offset()).unwrap();
+        let mut rng = Xoshiro256ss::new(6);
+        for _ in 0..nedges {
+            g.insert_edge(&m, rng.gen_range(500), rng.gen_range(500)).unwrap();
+        }
+        let st = m.bs_msync().unwrap();
+        assert!(st.dirty_pages > 0);
+        assert!(st.runs <= st.dirty_pages, "coalescing never increases run count");
+        m.close().unwrap();
+    }
+    let m = MetallManager::open(&store).unwrap();
+    let g = BankedAdjacency::open(&m, m.read(m.find::<u64>("g").unwrap().unwrap()));
+    assert_eq!(g.num_edges(&m), nedges);
+    m.close().unwrap();
+}
+
+/// Mixed container graph (map of vecs + strings) across reattach — the
+/// "custom complex persistent data structure" claim (§7.4).
+#[test]
+fn composite_structure_roundtrip() {
+    use metall_rs::containers::PString;
+    let d = TempDir::new("composite");
+    let store = d.join("s");
+    {
+        let m = MetallManager::create_with(&store, opts()).unwrap();
+        let map = PHashMapU64::<PVec<u64>>::create(&m).unwrap();
+        m.construct::<u64>("map", map.offset()).unwrap();
+        for k in 0..50u64 {
+            let v = map.get_or_insert_with(&m, k, |a| PVec::<u64>::create(a)).unwrap();
+            for i in 0..k {
+                v.push(&m, i * k).unwrap();
+            }
+        }
+        let label = PString::create(&m, "composite-test-v1").unwrap();
+        m.construct::<u64>("label", label.offset()).unwrap();
+        m.close().unwrap();
+    }
+    let m = MetallManager::open(&store).unwrap();
+    let map = PHashMapU64::<PVec<u64>>::from_offset(
+        m.read(m.find::<u64>("map").unwrap().unwrap()),
+    );
+    assert_eq!(map.len(&m), 50);
+    let v49 = map.get(&m, 49).unwrap();
+    assert_eq!(v49.len(&m), 49);
+    assert_eq!(v49.get(&m, 48), 48 * 49);
+    let label = metall_rs::containers::PString::from_offset(
+        m.read(m.find::<u64>("label").unwrap().unwrap()),
+    );
+    assert_eq!(label.to_string(&m), "composite-test-v1");
+    m.close().unwrap();
+}
+
+/// destroy() frees space that a subsequent construct can reuse, and the
+/// name directory stays consistent across reattach.
+#[test]
+fn destroy_and_name_directory_persistence() {
+    let d = TempDir::new("destroy");
+    let store = d.join("s");
+    {
+        let m = MetallManager::create_with(&store, opts()).unwrap();
+        m.construct::<u64>("a", 1).unwrap();
+        m.construct::<u64>("b", 2).unwrap();
+        m.construct::<u64>("c", 3).unwrap();
+        assert!(m.destroy("b").unwrap());
+        m.close().unwrap();
+    }
+    let m = MetallManager::open(&store).unwrap();
+    assert_eq!(m.num_named(), 2);
+    assert!(m.find::<u64>("b").unwrap().is_none());
+    assert_eq!(m.read::<u64>(m.find::<u64>("c").unwrap().unwrap()), 3);
+    // name can be reused after destroy
+    m.construct::<u64>("b", 22).unwrap();
+    assert_eq!(m.read::<u64>(m.find::<u64>("b").unwrap().unwrap()), 22);
+    m.close().unwrap();
+}
+
+/// Corrupted management data is detected on open.
+#[test]
+fn corrupt_management_detected() {
+    let d = TempDir::new("corrupt");
+    let store = d.join("s");
+    {
+        let m = MetallManager::create_with(&store, opts()).unwrap();
+        m.construct::<u64>("x", 5).unwrap();
+        m.close().unwrap();
+    }
+    // flip a byte in management.bin
+    let p = store.join("management.bin");
+    let mut bytes = std::fs::read(&p).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&p, &bytes).unwrap();
+    assert!(
+        MetallManager::open(&store).is_err(),
+        "bit-flipped management data must not open cleanly"
+    );
+}

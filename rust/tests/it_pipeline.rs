@@ -1,0 +1,129 @@
+//! Pipeline + experiment-driver integration: ingestion equivalence
+//! across allocators, incremental monthly flow, and netfs-sim shape
+//! checks (the assertions DESIGN.md §5 lists as "expected shapes").
+
+use metall_rs::alloc::{ManagerOptions, MetallManager};
+use metall_rs::baselines::bip::BipAllocator;
+use metall_rs::containers::BankedAdjacency;
+use metall_rs::coordinator::metrics::Metrics;
+use metall_rs::coordinator::pipeline::{ingest, PipelineConfig};
+use metall_rs::experiments::fig5::{run_cell, Fig5Params, IoMode};
+use metall_rs::graph::rmat::RmatGenerator;
+use metall_rs::storage::segment::SegmentOptions;
+use metall_rs::util::tmp::TempDir;
+
+fn small_fig5() -> Fig5Params {
+    // Small enough for CI, but large enough that the store-size vs
+    // dirty-sparsity regime matches the paper (a tiny store makes
+    // staging's bulk copy artificially free and inverts the crossover).
+    Fig5Params {
+        months: 6,
+        first_month_edges: 10_000,
+        nbanks: 64,
+        chunk_size: 64 << 10,
+        file_size: 1 << 20,
+    }
+}
+
+/// The same edge stream through Metall and BIP yields the identical
+/// graph (allocator independence of the data structure).
+#[test]
+fn identical_graph_across_allocators() {
+    let d = TempDir::new("xalloc");
+    let edges = RmatGenerator::graph500(9, 8).seed(3).generate();
+    let cfg = PipelineConfig { workers: 3, batch_size: 512, queue_depth: 4, nbanks: 64 };
+
+    let m = MetallManager::create_with(d.join("m"), ManagerOptions::small_for_tests())
+        .unwrap();
+    let gm = BankedAdjacency::create(&m, 64).unwrap();
+    ingest(&m, &gm, edges.iter().copied(), &cfg, true, &Metrics::new()).unwrap();
+
+    let b = BipAllocator::create_with(
+        d.join("b"),
+        SegmentOptions::default().with_file_size(1 << 20).with_vm_reserve(4 << 30),
+    )
+    .unwrap();
+    let gb = BankedAdjacency::create(&b, 64).unwrap();
+    ingest(&b, &gb, edges.iter().copied(), &cfg, true, &Metrics::new()).unwrap();
+
+    assert_eq!(gm.num_edges(&m), gb.num_edges(&b));
+    assert_eq!(gm.num_vertices(&m), gb.num_vertices(&b));
+    for v in 0..512u64 {
+        let mut nm = gm.neighbors(&m, v);
+        let mut nb = gb.neighbors(&b, v);
+        nm.sort_unstable();
+        nb.sort_unstable();
+        assert_eq!(nm, nb, "vertex {v}");
+    }
+    m.close().unwrap();
+}
+
+/// Backpressure: a deep producer with a shallow queue still delivers
+/// every edge exactly once.
+#[test]
+fn shallow_queue_backpressure_is_lossless() {
+    let d = TempDir::new("bp");
+    let m = MetallManager::create_with(d.join("s"), ManagerOptions::small_for_tests())
+        .unwrap();
+    let g = BankedAdjacency::create(&m, 16).unwrap();
+    let cfg = PipelineConfig { workers: 1, batch_size: 16, queue_depth: 1, nbanks: 16 };
+    let edges: Vec<(u64, u64)> = (0..5_000u64).map(|i| (i % 97, i % 89)).collect();
+    let rep = ingest(&m, &g, edges.iter().copied(), &cfg, false, &Metrics::new()).unwrap();
+    assert_eq!(rep.edges, 5_000);
+    assert_eq!(g.num_edges(&m), 5_000);
+    m.close().unwrap();
+}
+
+/// Fig 5 shape on VAST: bs-mmap beats staging (paper: 1.5–2.4x).
+#[test]
+fn vast_shape_bs_beats_staging() {
+    let d = TempDir::new("vastshape");
+    let p = small_fig5();
+    let total = |mode| -> f64 {
+        run_cell("vast", "reddit", mode, &p, d.path())
+            .unwrap()
+            .iter()
+            .map(|r| r.ingest_secs + r.flush_secs)
+            .sum()
+    };
+    let bs = total(IoMode::BsMmap);
+    let staging = total(IoMode::StagingMmap);
+    let direct = total(IoMode::DirectMmap);
+    assert!(bs < staging, "VAST: bs-mmap {bs} must beat staging {staging}");
+    assert!(bs < direct, "VAST: bs-mmap {bs} must beat direct {direct}");
+}
+
+/// Fig 5 shape on Lustre: staging wins; direct-mmap is the disaster
+/// case (paper: "did not complete within a reasonable time").
+#[test]
+fn lustre_shape_staging_wins_direct_loses() {
+    let d = TempDir::new("lustreshape");
+    let p = small_fig5();
+    let total = |mode| -> f64 {
+        run_cell("lustre", "wiki", mode, &p, d.path())
+            .unwrap()
+            .iter()
+            .map(|r| r.ingest_secs + r.flush_secs)
+            .sum()
+    };
+    let bs = total(IoMode::BsMmap);
+    let staging = total(IoMode::StagingMmap);
+    let direct = total(IoMode::DirectMmap);
+    assert!(
+        direct > bs && direct > staging,
+        "Lustre: direct-mmap ({direct}) must be worst (bs {bs}, staging {staging})"
+    );
+}
+
+/// Monthly incremental run accumulates edges and every month's flush
+/// leaves a cleanly reopenable store (exercised inside run_cell).
+#[test]
+fn incremental_months_accumulate() {
+    let d = TempDir::new("months");
+    let rows = run_cell("vast", "wiki", IoMode::BsMmap, &small_fig5(), d.path()).unwrap();
+    assert_eq!(rows.len(), small_fig5().months as usize);
+    assert!(rows[1].edges > rows[0].edges, "stream grows");
+    for r in &rows {
+        assert!(r.flush_secs > 0.0);
+    }
+}

@@ -1,0 +1,93 @@
+//! Integration: AOT artifacts (HLO text) → PJRT runtime → results match
+//! the pure-rust native oracles. Requires `make artifacts` (the Makefile
+//! runs it before `cargo test`); tests skip gracefully if artifacts are
+//! missing so bare `cargo test` still passes.
+
+use metall_rs::graph::ell::EllGraph;
+use metall_rs::graph::{bucket_hash32, rmat};
+use metall_rs::runtime::engine::AnalyticsEngine;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts/ (run `make artifacts`)");
+        None
+    }
+}
+
+fn engine() -> Option<AnalyticsEngine> {
+    artifacts_dir().map(|d| AnalyticsEngine::new(d).expect("engine"))
+}
+
+fn small_graph(seed: u64) -> EllGraph {
+    // R-MAT scale 7: 128 vertices, ~512 edges
+    let edges = rmat::RmatGenerator::graph500(7, 4).seed(seed).generate();
+    EllGraph::from_edges(128, &edges, 32)
+}
+
+#[test]
+fn pagerank_pjrt_matches_native() {
+    let Some(eng) = engine() else { return };
+    let g = small_graph(42);
+    let run = eng.pagerank(&g, 50, 0.0).expect("pjrt pagerank");
+    let native = g.pagerank_native(0.85, 50);
+    assert_eq!(run.iterations, 50);
+    assert_eq!(run.values.len(), g.n);
+    let sum: f32 = run.values.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3, "rank mass {sum}");
+    for (i, (a, b)) in run.values.iter().zip(&native).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-4,
+            "vertex {i}: pjrt {a} vs native {b}"
+        );
+    }
+}
+
+#[test]
+fn pagerank_early_stops_on_tolerance() {
+    let Some(eng) = engine() else { return };
+    let g = small_graph(7);
+    let run = eng.pagerank(&g, 500, 1e-6).expect("pjrt pagerank");
+    assert!(run.iterations < 500, "should converge well before 500 iters");
+}
+
+#[test]
+fn bfs_pjrt_matches_native() {
+    let Some(eng) = engine() else { return };
+    let g = small_graph(1);
+    let run = eng.bfs(&g, 0).expect("pjrt bfs");
+    let native = g.bfs_native(0);
+    assert_eq!(run.values.len(), g.n);
+    for (i, (a, b)) in run.values.iter().zip(&native).enumerate() {
+        assert_eq!(*a as i64, *b, "vertex {i} level mismatch");
+    }
+}
+
+#[test]
+fn bucket_pjrt_matches_native_hash() {
+    let Some(eng) = engine() else { return };
+    // 5000 ids: one compiled batch of 4096 + native tail of 904
+    let src: Vec<u32> = (0..5000u32).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+    let got = eng.bucket(&src, 1024).expect("bucket");
+    assert_eq!(got.len(), src.len());
+    for (i, (&g_, &s)) in got.iter().zip(&src).enumerate() {
+        assert_eq!(g_, bucket_hash32(s, 1024), "id {i}");
+    }
+}
+
+#[test]
+fn padding_to_larger_variant_is_exact() {
+    let Some(eng) = engine() else { return };
+    // a 40-vertex graph forced into the n=256 variant
+    let edges: Vec<(u64, u64)> = (1..40u64).map(|s| (s, s / 2)).collect();
+    let g = EllGraph::from_edges(40, &edges, 32);
+    let run = eng.pagerank(&g, 30, 0.0).expect("pagerank");
+    let native = g.pagerank_native(0.85, 30);
+    for (a, b) in run.values.iter().zip(&native) {
+        assert!((a - b).abs() < 1e-4, "pjrt {a} vs native {b}");
+    }
+    let sum: f32 = run.values.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3);
+}
