@@ -1,0 +1,68 @@
+"""Property-testing shim: re-export `hypothesis` when it is installed,
+otherwise provide a minimal deterministic stand-in so the test suite runs
+in the offline build image (which carries numpy/jax but no hypothesis).
+
+The stand-in supports exactly what these tests use — `@settings`,
+`@given` with keyword strategies, `st.integers(lo, hi)` and
+`st.sampled_from(seq)` — and replays each test over a fixed number of
+seeded pseudo-random samples, so failures reproduce bit-identically.
+"""
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    strategies = _StrategiesModule()
+
+    def settings(max_examples=20, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                # @settings sits above @given, so it annotates the wrapper
+                n = getattr(wrapper, "_compat_max_examples", 20)
+                rng = random.Random(0xC0FFEE)
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strats.items()}
+                    fn(**drawn)
+
+            # pytest must not mistake the original params for fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -1,0 +1,7 @@
+"""Test-path setup: make the `compile` package (python/) importable no
+matter where pytest is launched from."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))

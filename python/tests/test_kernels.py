@@ -6,7 +6,7 @@ signal for everything the rust runtime later executes.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from compile.kernels import ell_rowsum, ell_rowmax, edge_bucket
 from compile.kernels import ref

@@ -4,7 +4,7 @@ BFS levels vs. a CPU BFS)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from compile import model
 from compile.kernels import ref

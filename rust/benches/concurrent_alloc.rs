@@ -1,0 +1,123 @@
+//! Thread-scaling benchmark for the lock-free small-allocation fast path
+//! (§4.5 concurrency design + the atomic-bitset claim path).
+//!
+//! Measures aggregate alloc/dealloc throughput of one shared
+//! `MetallManager` at 1/2/4/8 threads over mixed small size classes, and
+//! reports the speedup relative to single-threaded. The acceptance bar
+//! for the fast path is ≥ 2x aggregate throughput at 8 threads.
+//!
+//! `cargo bench --bench concurrent_alloc -- [--ops 400000]
+//!  [--threads 1,2,4,8] [--repeats 3] [--live 192]`
+
+use metall_rs::alloc::{ManagerOptions, MetallHandle, MetallManager};
+use metall_rs::bench_util::{record, BenchArgs, Table};
+use metall_rs::util::human;
+use metall_rs::util::jsonw::JsonObj;
+use metall_rs::util::rng::Xoshiro256ss;
+use metall_rs::util::tmp::TempDir;
+
+const CHUNK: usize = 1 << 20;
+
+/// Mixed small-class churn: every thread keeps a bounded live window and
+/// allocates/frees objects spanning eight size classes (8 B – 1 KiB).
+/// Returns elapsed seconds for `ops` total operations across `threads`.
+fn churn(h: &MetallHandle, ops: usize, threads: usize, live_cap: usize, seed: u64) -> f64 {
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let h = h.clone();
+            s.spawn(move || {
+                let mut rng = Xoshiro256ss::new(seed + t as u64);
+                let mut live: Vec<u64> = Vec::with_capacity(live_cap);
+                for _ in 0..ops / threads {
+                    if live.len() >= live_cap || (!live.is_empty() && rng.next_f64() < 0.4)
+                    {
+                        let i = rng.gen_range(live.len() as u64) as usize;
+                        let off = live.swap_remove(i);
+                        h.deallocate(off).unwrap();
+                    } else {
+                        let size = 8usize << rng.gen_range(8); // 8..=1024
+                        live.push(h.allocate(size).unwrap());
+                    }
+                }
+                for off in live {
+                    h.deallocate(off).unwrap();
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let ops = args.get_usize("ops", 400_000);
+    let threads = args.get_usize_list("threads", &[1, 2, 4, 8]);
+    let repeats = args.get_usize("repeats", 3);
+    let live_cap = args.get_usize("live", 192);
+    let work = TempDir::new("concurrent-alloc");
+
+    let mut t = Table::new(&[
+        "threads", "time", "agg ops/s", "speedup", "fast claims", "cache hits",
+    ]);
+    let mut base_rate = 0.0f64;
+    let mut rate_at = Vec::new();
+    for &nt in &threads {
+        // best-of-N to shed scheduler noise; fresh store per run so every
+        // thread count sees identical initial state
+        let mut best = f64::INFINITY;
+        let mut stats = Default::default();
+        for rep in 0..repeats.max(1) {
+            let dir = work.join(&format!("t{nt}-r{rep}"));
+            let opts = ManagerOptions {
+                chunk_size: CHUNK,
+                file_size: 16 << 20,
+                vm_reserve: 32 << 30,
+                ..Default::default()
+            };
+            let h = MetallHandle::new(MetallManager::create_with(&dir, opts)?);
+            let secs = churn(&h, ops, nt, live_cap, 1);
+            stats = h.stats();
+            h.try_close().map_err(|e| anyhow::anyhow!("{e}"))?;
+            let _ = std::fs::remove_dir_all(&dir);
+            best = best.min(secs);
+        }
+        let rate = ops as f64 / best;
+        if nt == threads[0] {
+            base_rate = rate;
+        }
+        let speedup = rate / base_rate;
+        rate_at.push((nt, rate, speedup));
+        t.row(&[
+            nt.to_string(),
+            human::duration(best),
+            human::rate(rate),
+            format!("{speedup:.2}x"),
+            stats.fast_claims.to_string(),
+            stats.cache_hits.to_string(),
+        ]);
+        record(
+            "concurrent_alloc",
+            JsonObj::new()
+                .str("bench", "mixed-small-churn")
+                .int("threads", nt as i64)
+                .int("ops", ops as i64)
+                .num("secs", best)
+                .num("ops_per_sec", rate)
+                .num("speedup_vs_1t", speedup)
+                .int("fast_claims", stats.fast_claims as i64)
+                .int("cache_hits", stats.cache_hits as i64)
+                .int("fresh_chunks", stats.fresh_chunks as i64),
+        );
+    }
+    t.print("thread-scaling: shared manager, mixed small classes (8B–1KiB, 40% frees)");
+    if let (Some(&(_, _, _)), Some(&(nt_max, _, sp_max))) =
+        (rate_at.first(), rate_at.last())
+    {
+        println!(
+            "\naggregate speedup at {nt_max} threads: {sp_max:.2}x \
+             (target ≥ 2x for the lock-free fast path)"
+        );
+    }
+    Ok(())
+}

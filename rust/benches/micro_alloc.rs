@@ -52,12 +52,7 @@ fn churn<A: SegmentAlloc>(a: &A, ops: usize, threads: usize, seed: u64) -> f64 {
 fn main() -> anyhow::Result<()> {
     let args = BenchArgs::parse();
     let ops = args.get_usize("ops", 200_000);
-    let threads: Vec<usize> = args
-        .get("threads")
-        .unwrap_or("1,2,4,8")
-        .split(',')
-        .filter_map(|s| s.trim().parse().ok())
-        .collect();
+    let threads = args.get_usize_list("threads", &[1, 2, 4, 8]);
     let work = TempDir::new("micro-alloc");
 
     let mut t = Table::new(&["allocator", "threads", "time", "ops/s"]);

@@ -10,8 +10,11 @@
 //! [`crate::baselines`] do, which is what lets the Fig-4 benchmark run
 //! the identical data structure over all four allocators.
 
-use crate::alloc::manager::Persist;
-use crate::error::Result;
+use std::ops::Deref;
+use std::sync::Arc;
+
+use crate::alloc::manager::{MetallManager, Persist};
+use crate::error::{Error, Result};
 
 /// Offset-based allocation over one contiguous mapped segment.
 ///
@@ -106,6 +109,103 @@ impl SegmentAlloc for crate::alloc::MetallManager {
     }
 }
 
+/// Cloneable, `Send + Sync` handle to a shared [`MetallManager`] — the
+/// ergonomic face of the thread-scalable allocation path. Each worker
+/// thread clones a handle and allocates independently; the manager's
+/// per-core caches and lock-free bin claims keep them off each other's
+/// locks. Derefs to the manager, so the full API (`construct`, `find`,
+/// `snapshot`, …) is available through it.
+///
+/// ```no_run
+/// use metall_rs::alloc::{MetallHandle, MetallManager};
+///
+/// let h = MetallHandle::new(MetallManager::create("/tmp/shared").unwrap());
+/// let workers: Vec<_> = (0..8)
+///     .map(|_| {
+///         let h = h.clone();
+///         std::thread::spawn(move || h.allocate(64).unwrap())
+///     })
+///     .collect();
+/// for w in workers {
+///     w.join().unwrap();
+/// }
+/// h.try_close().unwrap();
+/// ```
+#[derive(Clone)]
+pub struct MetallHandle(Arc<MetallManager>);
+
+impl MetallHandle {
+    pub fn new(manager: MetallManager) -> Self {
+        Self(Arc::new(manager))
+    }
+
+    /// The underlying manager (also available through `Deref`).
+    pub fn manager(&self) -> &MetallManager {
+        &self.0
+    }
+
+    /// Number of live handles to this manager.
+    pub fn handle_count(&self) -> usize {
+        Arc::strong_count(&self.0)
+    }
+
+    /// Recover exclusive ownership of the manager when this is the last
+    /// handle; otherwise hands the handle back unchanged so the caller
+    /// can retry once the other handles drop.
+    pub fn try_into_inner(self) -> std::result::Result<MetallManager, Self> {
+        Arc::try_unwrap(self.0).map_err(Self)
+    }
+
+    /// Close the datastore if this is the last handle; errors while other
+    /// handles are still alive. On that error this handle is forfeited —
+    /// the store stays open, kept alive by the remaining handles, and the
+    /// last of them to drop closes it (silently, via `Drop`). Use
+    /// [`Self::try_into_inner`] when you need to keep the handle and
+    /// retry with error reporting.
+    pub fn try_close(self) -> Result<()> {
+        match self.try_into_inner() {
+            Ok(m) => m.close(),
+            Err(h) => Err(Error::InvalidOp(format!(
+                "cannot close: {} other handle(s) still alive",
+                h.handle_count() - 1
+            ))),
+        }
+    }
+}
+
+impl Deref for MetallHandle {
+    type Target = MetallManager;
+
+    fn deref(&self) -> &MetallManager {
+        &self.0
+    }
+}
+
+impl SegmentAlloc for MetallHandle {
+    fn allocate(&self, size: usize) -> Result<u64> {
+        MetallManagerExt::allocate(&*self.0, size)
+    }
+
+    fn deallocate(&self, offset: u64) -> Result<()> {
+        MetallManagerExt::deallocate(&*self.0, offset)
+    }
+
+    fn base(&self) -> *mut u8 {
+        self.0.segment().base()
+    }
+
+    fn mapped_len(&self) -> usize {
+        self.0.segment().mapped_len()
+    }
+}
+
+// The whole point of the handle: it crosses threads.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<MetallHandle>();
+    assert_send_sync::<MetallManager>();
+};
+
 /// Disambiguation shim: calls the inherent methods (which carry the
 /// stats/caching logic) rather than recursing into the trait impl.
 trait MetallManagerExt {
@@ -120,5 +220,75 @@ impl MetallManagerExt for crate::alloc::MetallManager {
 
     fn deallocate(&self, offset: u64) -> Result<()> {
         crate::alloc::MetallManager::deallocate(self, offset)
+    }
+}
+
+#[cfg(test)]
+mod handle_tests {
+    use super::*;
+    use crate::alloc::ManagerOptions;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn handle_shares_and_closes_last() {
+        let d = TempDir::new("handle1");
+        let store = d.join("s");
+        let h = MetallHandle::new(
+            MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap(),
+        );
+        let h2 = h.clone();
+        assert_eq!(h.handle_count(), 2);
+        let off = h.construct::<u64>("x", 9).unwrap();
+        assert_eq!(h2.read::<u64>(off), 9);
+        // close refused while h2 is alive
+        assert!(h.try_close().is_err());
+        h2.try_close().unwrap();
+        let m = MetallManager::open(&store).unwrap();
+        assert_eq!(m.read::<u64>(m.find::<u64>("x").unwrap().unwrap()), 9);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn try_into_inner_returns_handle_for_retry() {
+        let d = TempDir::new("handle3");
+        let h = MetallHandle::new(
+            MetallManager::create_with(d.join("s"), ManagerOptions::small_for_tests())
+                .unwrap(),
+        );
+        let h2 = h.clone();
+        let h = match h.try_into_inner() {
+            Err(h) => h, // two handles alive: handed back for retry
+            Ok(_) => panic!("must not unwrap while h2 is alive"),
+        };
+        drop(h2);
+        let m = match h.try_into_inner() {
+            Ok(m) => m,
+            Err(_) => panic!("exclusive now, must unwrap"),
+        };
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn handles_allocate_from_threads() {
+        let d = TempDir::new("handle2");
+        let h = MetallHandle::new(
+            MetallManager::create_with(d.join("s"), ManagerOptions::small_for_tests())
+                .unwrap(),
+        );
+        let workers: Vec<_> = (0..4u64)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    let off = SegmentAlloc::allocate(&h, 32).unwrap();
+                    h.write::<u64>(off, t);
+                    (off, t)
+                })
+            })
+            .collect();
+        for w in workers {
+            let (off, t) = w.join().unwrap();
+            assert_eq!(h.read::<u64>(off), t);
+        }
+        h.try_close().unwrap();
     }
 }

@@ -1,8 +1,15 @@
 //! Bin directory (paper §4.3.2): for each internal allocation size, the
 //! set of *non-full* chunks (LIFO) plus the slot bitsets of every chunk
 //! currently assigned to that bin. One instance of [`BinData`] sits
-//! behind one mutex in the manager (§4.5.1: "a mutex object per bin"), so
-//! different allocation sizes proceed concurrently.
+//! behind one `RwLock` in the manager (§4.5.1: "a mutex object per bin"),
+//! so different allocation sizes proceed concurrently — and, since the
+//! bitsets claim slots with lock-free CAS ([`MlBitset`]), *same*-bin
+//! allocations proceed concurrently too, under the shared (read) side of
+//! the lock via [`BinData::try_claim`] / [`BinData::try_claim_batch`].
+//!
+//! The exclusive (write) side is reserved for the paper's two
+//! serialization points — registering a fresh chunk and releasing an
+//! emptied chunk — plus frees and structural healing of the LIFO.
 
 use std::collections::HashMap;
 
@@ -13,6 +20,9 @@ use crate::alloc::mlbitset::MlBitset;
 pub struct BinData {
     /// IDs of chunks of this bin with at least one free slot. LIFO:
     /// "A bin operates in a LIFO (last in, first out) manner."
+    /// May transiently contain chunks that filled up through the shared
+    /// claim path (readers cannot mutate the Vec); the exclusive path
+    /// heals via [`Self::prune_full`].
     nonfull: Vec<u32>,
     /// Slot occupancy per chunk (full chunks included).
     bitsets: HashMap<u32, MlBitset>,
@@ -23,13 +33,49 @@ impl BinData {
         Self::default()
     }
 
-    /// Allocate one slot. Returns `(chunk, slot)` or `None` when every
-    /// chunk of this bin is full (the caller then takes a fresh chunk
-    /// from the chunk directory).
+    /// Lock-free slot claim under a *shared* bin lock: walk the non-full
+    /// LIFO from the hot end and CAS-claim a slot in the first chunk with
+    /// room. Returns `(chunk, slot)` or `None` when every listed chunk is
+    /// full (the caller then falls back to the exclusive path).
+    pub fn try_claim(&self) -> Option<(u32, u32)> {
+        for &chunk in self.nonfull.iter().rev() {
+            if let Some(bs) = self.bitsets.get(&chunk) {
+                if let Some(slot) = bs.find_and_set_first_zero() {
+                    return Some((chunk, slot));
+                }
+            }
+        }
+        None
+    }
+
+    /// Batch variant of [`Self::try_claim`] for the object-cache refill
+    /// path: claim up to `want` slots (word-level CAS batches), appending
+    /// `(chunk, slot)` pairs. A batch may span chunks. Returns the number
+    /// of slots claimed.
+    pub fn try_claim_batch(&self, want: usize, out: &mut Vec<(u32, u32)>) -> usize {
+        let mut got = 0usize;
+        let mut slots = Vec::with_capacity(want);
+        for &chunk in self.nonfull.iter().rev() {
+            if got >= want {
+                break;
+            }
+            if let Some(bs) = self.bitsets.get(&chunk) {
+                slots.clear();
+                let n = bs.claim_batch(want - got, &mut slots);
+                out.extend(slots.iter().map(|&s| (chunk, s)));
+                got += n;
+            }
+        }
+        got
+    }
+
+    /// Allocate one slot (exclusive path). Returns `(chunk, slot)` or
+    /// `None` when every chunk of this bin is full (the caller then takes
+    /// a fresh chunk from the chunk directory).
     pub fn alloc_slot(&mut self) -> Option<(u32, u32)> {
         loop {
             let &chunk = self.nonfull.last()?;
-            let bs = self.bitsets.get_mut(&chunk).expect("nonfull chunk has bitset");
+            let bs = self.bitsets.get(&chunk).expect("nonfull chunk has bitset");
             match bs.find_and_set_first_zero() {
                 Some(slot) => {
                     if bs.is_full() {
@@ -38,17 +84,26 @@ impl BinData {
                     return Some((chunk, slot));
                 }
                 None => {
-                    // stale entry (shouldn't happen, but heal anyway)
+                    // chunk filled through the shared claim path — heal
                     self.nonfull.pop();
                 }
             }
         }
     }
 
+    /// Drop chunks that filled up through the shared claim path from the
+    /// non-full LIFO (exclusive-path healing; keeps `try_claim` scans
+    /// short).
+    pub fn prune_full(&mut self) {
+        let bitsets = &self.bitsets;
+        self.nonfull
+            .retain(|c| bitsets.get(c).map(|b| !b.is_full()).unwrap_or(false));
+    }
+
     /// Register a fresh chunk (just taken from the chunk directory) with
     /// `slots` capacity and immediately allocate its first slot.
     pub fn add_chunk_and_alloc(&mut self, chunk: u32, slots: u32) -> u32 {
-        let mut bs = MlBitset::new(slots);
+        let bs = MlBitset::new(slots);
         let slot = bs.find_and_set_first_zero().expect("fresh chunk has room");
         if !bs.is_full() {
             self.nonfull.push(chunk);
@@ -61,8 +116,21 @@ impl BinData {
     /// (the caller should release it to the chunk directory and drop it
     /// via [`Self::remove_chunk`]).
     pub fn free_slot(&mut self, chunk: u32, slot: u32) -> bool {
-        let bs = self.bitsets.get_mut(&chunk).expect("freeing slot in unknown chunk");
-        let was_full = bs.is_full();
+        let was_full = self
+            .bitsets
+            .get(&chunk)
+            .expect("freeing slot in unknown chunk")
+            .is_full();
+        if was_full {
+            // The chunk transitions full → non-full: prune while it is
+            // still full, which both removes any stale LIFO entry for it
+            // (so the push below cannot duplicate) and heals entries for
+            // other chunks that filled via the shared claim path — the
+            // exclusive lock is already held here, so this is the natural
+            // healing point for fast-path-steady workloads.
+            self.prune_full();
+        }
+        let bs = self.bitsets.get(&chunk).expect("freeing slot in unknown chunk");
         assert!(bs.clear(slot), "double free: chunk {chunk} slot {slot}");
         if was_full {
             self.nonfull.push(chunk); // becomes visible for reuse (LIFO)
@@ -181,5 +249,41 @@ mod tests {
         let mut de = de;
         assert_eq!(de.alloc_slot(), Some((9, 1)));
         assert!(de.alloc_slot().is_none());
+    }
+
+    #[test]
+    fn shared_claim_matches_exclusive_order() {
+        let mut b = BinData::new();
+        b.add_chunk_and_alloc(7, 8); // slot 0 taken
+        assert_eq!(b.try_claim(), Some((7, 1)));
+        assert_eq!(b.try_claim(), Some((7, 2)));
+        // exclusive path continues where the shared path left off
+        assert_eq!(b.alloc_slot(), Some((7, 3)));
+    }
+
+    #[test]
+    fn shared_batch_claim_spans_chunks() {
+        let mut b = BinData::new();
+        b.add_chunk_and_alloc(1, 4); // 3 free (slot 0 taken)
+        b.add_chunk_and_alloc(2, 4); // hot end of the LIFO, 3 free
+        let mut out = Vec::new();
+        assert_eq!(b.try_claim_batch(5, &mut out), 5);
+        // hot chunk 2 first, then chunk 1
+        assert_eq!(out, vec![(2, 1), (2, 2), (2, 3), (1, 1), (1, 2)]);
+        // both now full except one slot in chunk 1
+        assert_eq!(b.try_claim(), Some((1, 3)));
+        assert_eq!(b.try_claim(), None);
+    }
+
+    #[test]
+    fn prune_full_heals_lifo() {
+        let mut b = BinData::new();
+        b.add_chunk_and_alloc(4, 2);
+        // fill through the shared path: nonfull still lists chunk 4
+        assert_eq!(b.try_claim(), Some((4, 1)));
+        assert!(b.bitset(4).unwrap().is_full());
+        b.prune_full();
+        assert_eq!(b.try_claim(), None);
+        assert!(b.alloc_slot().is_none());
     }
 }

@@ -15,20 +15,38 @@
 //!   segment/chunk-NNNNNN   application data backing files
 //! ```
 //!
-//! ## Locking (§4.5.1)
-//! One mutex per bin, one for the chunk directory, one for the name
-//! directory. Nesting order is always bin → chunks; the two paper-listed
-//! serialization points (taking a fresh chunk; releasing an emptied
-//! chunk) are exactly the places the chunk lock nests inside a bin lock.
+//! ## Concurrency model (§4.5.1, relaxed with a lock-free fast path)
+//!
+//! One `RwLock` per bin, one mutex for the chunk directory, one for the
+//! name directory. The small-allocation hot path is **lock-free with
+//! respect to other allocators of the same bin**:
+//!
+//! 1. Per-core object cache pop (no directory locks at all).
+//! 2. On a cache miss, the *shared* (read) side of the bin lock is taken
+//!    and a word-level CAS claim runs against an active chunk's atomic
+//!    bitset ([`crate::alloc::mlbitset::MlBitset`]). The claim grabs a
+//!    batch ([`crate::alloc::object_cache::REFILL_BATCH`]) in one CAS and
+//!    parks the surplus in this core's cache, so same-bin allocations
+//!    from different threads proceed concurrently — readers of an
+//!    `RwLock` do not serialize.
+//! 3. Only when every active chunk is full does a thread take the
+//!    *exclusive* (write) side — the paper's serialization point #1
+//!    (registering a fresh chunk, with the chunk-directory mutex nested
+//!    inside). Serialization point #2 (releasing an emptied chunk) also
+//!    runs under the write lock, on the free/spill path.
+//!
+//! Frees always go through the per-core cache; only cache spills and the
+//! close/sync drain touch the bin write lock, batched. Nesting order is
+//! always bin → chunks; the chunk lock never nests inside another bin.
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 
 use crate::alloc::bin_dir::BinData;
 use crate::alloc::chunk_dir::{ChunkDirectory, ChunkKind};
 use crate::alloc::name_dir::{type_fingerprint, NameDirectory, NamedEntry};
-use crate::alloc::object_cache::ObjectCache;
+use crate::alloc::object_cache::{ObjectCache, REFILL_BATCH};
 use crate::alloc::size_class::{
     bin_of, is_small, large_chunks, num_bins, size_of_bin, slots_per_chunk,
 };
@@ -108,6 +126,9 @@ pub struct AllocStats {
     pub allocs: AtomicU64,
     pub deallocs: AtomicU64,
     pub cache_hits: AtomicU64,
+    /// Slots claimed through the lock-free (shared bin lock + CAS) path,
+    /// including batch-refill surplus parked in the object cache.
+    pub fast_claims: AtomicU64,
     pub fresh_chunks: AtomicU64,
     pub freed_chunks: AtomicU64,
     pub large_allocs: AtomicU64,
@@ -119,6 +140,7 @@ pub struct StatsSnapshot {
     pub allocs: u64,
     pub deallocs: u64,
     pub cache_hits: u64,
+    pub fast_claims: u64,
     pub fresh_chunks: u64,
     pub freed_chunks: u64,
     pub large_allocs: u64,
@@ -148,7 +170,7 @@ pub struct MetallManager {
     read_only: bool,
     segment: SegmentStorage,
     chunks: Mutex<ChunkDirectory>,
-    bins: Vec<Mutex<BinData>>,
+    bins: Vec<RwLock<BinData>>,
     cache: ObjectCache,
     names: Mutex<NameDirectory>,
     bs: Option<Mutex<BsMsync>>,
@@ -179,7 +201,7 @@ impl MetallManager {
         let segment = SegmentStorage::create(dir.join("segment"), opts.segment_options(false))?;
         let nb = num_bins(opts.chunk_size);
         let mgr = Self {
-            bins: (0..nb).map(|_| Mutex::new(BinData::new())).collect(),
+            bins: (0..nb).map(|_| RwLock::new(BinData::new())).collect(),
             cache: ObjectCache::new(nb),
             chunks: Mutex::new(ChunkDirectory::new()),
             names: Mutex::new(NameDirectory::new()),
@@ -236,7 +258,7 @@ impl MetallManager {
         let nb = num_bins(opts.chunk_size);
         let (chunks, bins, names) = Self::load_management(&dir, nb)?;
         let mgr = Self {
-            bins: bins.into_iter().map(Mutex::new).collect(),
+            bins: bins.into_iter().map(RwLock::new).collect(),
             cache: ObjectCache::new(nb),
             chunks: Mutex::new(chunks),
             names: Mutex::new(names),
@@ -298,7 +320,8 @@ impl MetallManager {
         buf.extend_from_slice(&(self.bins.len() as u32).to_le_bytes());
         self.chunks.lock().unwrap().serialize_into(&mut buf);
         for b in &self.bins {
-            b.lock().unwrap().serialize_into(&mut buf);
+            // exclusive: quiesce in-flight shared-path claims per bin
+            b.write().unwrap().serialize_into(&mut buf);
         }
         self.names.lock().unwrap().serialize_into(&mut buf);
         let tmp = self.dir.join("management.bin.tmp");
@@ -343,9 +366,13 @@ impl MetallManager {
         Ok((chunks, bins, names))
     }
 
-    /// Cross-check chunk directory against bin data (run on open).
+    /// Cross-check chunk directory against bin data (run on open and by
+    /// `doctor`). Works on a snapshot of the chunk directory so the
+    /// chunk mutex is never held while bin locks are taken (the alloc
+    /// path nests bin → chunks; holding them in the opposite order here
+    /// could deadlock a live store).
     fn validate_consistency(&self) -> Result<()> {
-        let chunks = self.chunks.lock().unwrap();
+        let chunks = self.chunks.lock().unwrap().clone();
         let err = |m: String| Error::Datastore(format!("inconsistent management data: {m}"));
         for (id, kind) in chunks.iter() {
             if let ChunkKind::Small { bin } = kind {
@@ -353,13 +380,13 @@ impl MetallManager {
                     .bins
                     .get(bin as usize)
                     .ok_or_else(|| err(format!("chunk {id} has invalid bin {bin}")))?;
-                if b.lock().unwrap().bitset(id).is_none() {
+                if b.read().unwrap().bitset(id).is_none() {
                     return Err(err(format!("chunk {id} missing bitset in bin {bin}")));
                 }
             }
         }
         for (bin, b) in self.bins.iter().enumerate() {
-            for cid in b.lock().unwrap().chunk_ids() {
+            for cid in b.read().unwrap().chunk_ids() {
                 match chunks.kind(cid) {
                     ChunkKind::Small { bin: kb } if kb as usize == bin => {}
                     k => {
@@ -422,6 +449,7 @@ impl MetallManager {
             allocs: self.stats.allocs.load(Ordering::Relaxed),
             deallocs: self.stats.deallocs.load(Ordering::Relaxed),
             cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
+            fast_claims: self.stats.fast_claims.load(Ordering::Relaxed),
             fresh_chunks: self.stats.fresh_chunks.load(Ordering::Relaxed),
             freed_chunks: self.stats.freed_chunks.load(Ordering::Relaxed),
             large_allocs: self.stats.large_allocs.load(Ordering::Relaxed),
@@ -458,11 +486,48 @@ impl MetallManager {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(off);
         }
-        let mut b = self.bins[bin as usize].lock().unwrap();
+        // Fast path: shared bin lock + lock-free CAS claim in an active
+        // chunk; a word-level batch is taken and the surplus refills this
+        // core's object cache, so same-bin allocators never serialize
+        // while any active chunk has room.
+        let claims = {
+            let b = self.bins[bin as usize].read().unwrap();
+            let mut claims: Vec<(u32, u32)> = Vec::with_capacity(REFILL_BATCH);
+            b.try_claim_batch(REFILL_BATCH, &mut claims);
+            claims
+        };
+        if let Some(&(chunk, slot)) = claims.first() {
+            self.stats.fast_claims.fetch_add(claims.len() as u64, Ordering::Relaxed);
+            let first = self.slot_offset(chunk, bin, slot);
+            if claims.len() > 1 {
+                // reversed: the cache pops LIFO, so the lowest (first-fit)
+                // slot must land on top and come back out first
+                let extra: Vec<u64> = claims[1..]
+                    .iter()
+                    .rev()
+                    .map(|&(c, s)| self.slot_offset(c, bin, s))
+                    .collect();
+                let spill = self.cache.push_batch(bin, &extra);
+                if !spill.is_empty() {
+                    // Read lock is already released — return_slots takes the
+                    // write lock. Best-effort: the allocation itself already
+                    // succeeded, and a spill failure (hole-punch I/O on an
+                    // emptied chunk) must not turn it into a phantom error
+                    // that leaks the whole claimed batch.
+                    let _ = self.return_slots(bin, &spill);
+                }
+            }
+            return Ok(first);
+        }
+        // Slow path (serialization point #1): exclusive bin lock — heal
+        // the non-full LIFO, retry (another thread may have registered a
+        // chunk while we waited), else take a fresh chunk (bin → chunks
+        // lock order).
+        let mut b = self.bins[bin as usize].write().unwrap();
+        b.prune_full();
         if let Some((chunk, slot)) = b.alloc_slot() {
             return Ok(self.slot_offset(chunk, bin, slot));
         }
-        // bin exhausted: take a fresh chunk (bin → chunks lock order)
         let chunk = {
             let mut chunks = self.chunks.lock().unwrap();
             let chunk = chunks.take_small_chunk(bin);
@@ -548,11 +613,90 @@ impl MetallManager {
         }
     }
 
+    /// Usable bytes of the allocation starting at `offset` (its internal
+    /// size class for small objects, its chunk-run footprint for large
+    /// ones). Errors if `offset` is not the start of an allocation.
+    pub fn usable_size(&self, offset: u64) -> Result<usize> {
+        let cs = self.opts.chunk_size as u64;
+        let chunk = (offset / cs) as u32;
+        let kind = {
+            let chunks = self.chunks.lock().unwrap();
+            if (chunk as usize) >= chunks.len() {
+                return Err(Error::Alloc(format!("usable_size: offset {offset} out of range")));
+            }
+            chunks.kind(chunk)
+        };
+        match kind {
+            ChunkKind::Small { bin } => {
+                let class = size_of_bin(bin as usize) as u64;
+                if (offset % cs) % class != 0 {
+                    return Err(Error::Alloc(format!(
+                        "usable_size: offset {offset} not on a slot boundary"
+                    )));
+                }
+                // the slot must be claimed in the bin bitset (live or
+                // parked in an object cache — both count as allocated);
+                // this rejects already-freed and never-allocated slots
+                let slot = ((offset % cs) / class) as u32;
+                let used = self.bins[bin as usize].read().unwrap().is_slot_used(chunk, slot);
+                if !used {
+                    return Err(Error::Alloc(format!(
+                        "usable_size: offset {offset} is not a live allocation"
+                    )));
+                }
+                Ok(class as usize)
+            }
+            ChunkKind::LargeHead { nchunks } => {
+                if offset % cs != 0 {
+                    return Err(Error::Alloc(format!(
+                        "usable_size: large offset {offset} not chunk-aligned"
+                    )));
+                }
+                Ok(nchunks as usize * cs as usize)
+            }
+            ChunkKind::Free | ChunkKind::LargeBody => Err(Error::Alloc(format!(
+                "usable_size: offset {offset} is not the start of a live allocation"
+            ))),
+        }
+    }
+
+    /// Resize an allocation (the `realloc(3)` analogue the persistent
+    /// containers' growth paths want). Returns the — possibly moved —
+    /// offset; contents up to `min(old usable, new_size)` bytes are
+    /// preserved. In place whenever the internal size class (small) or
+    /// chunk-run footprint (large) is unchanged.
+    pub fn reallocate(&self, offset: u64, new_size: usize) -> Result<u64> {
+        self.check_writable()?;
+        if new_size == 0 {
+            return Err(Error::Alloc("zero-size reallocation".into()));
+        }
+        let old_usable = self.usable_size(offset)?;
+        let cs = self.opts.chunk_size;
+        let in_place = if is_small(new_size, cs) {
+            is_small(old_usable, cs) && size_of_bin(bin_of(new_size)) == old_usable
+        } else {
+            !is_small(old_usable, cs) && large_chunks(new_size, cs) * cs == old_usable
+        };
+        if in_place {
+            return Ok(offset);
+        }
+        let new_off = self.allocate(new_size)?;
+        let copy = old_usable.min(new_size);
+        // distinct live allocations never overlap
+        unsafe {
+            std::ptr::copy_nonoverlapping(self.ptr(offset), self.ptr(new_off), copy);
+        }
+        self.deallocate(offset)?;
+        Ok(new_off)
+    }
+
     /// Return freed slots to their bitsets (cache spill / close path).
+    /// Runs under the exclusive bin lock: chunk-empty detection and
+    /// release (serialization point #2) must not race shared-path claims.
     fn return_slots(&self, bin: u32, offsets: &[u64]) -> Result<()> {
         let cs = self.opts.chunk_size as u64;
         let class = size_of_bin(bin as usize) as u64;
-        let mut b = self.bins[bin as usize].lock().unwrap();
+        let mut b = self.bins[bin as usize].write().unwrap();
         for &off in offsets {
             let chunk = (off / cs) as u32;
             let slot = ((off % cs) / class) as u32;
@@ -1021,6 +1165,48 @@ mod tests {
         let d = TempDir::new("mgr13");
         let m = mk(&d.join("s"));
         assert!(m.allocate(0).is_err());
+    }
+
+    #[test]
+    fn fast_path_claims_batch_and_refills_cache() {
+        let d = TempDir::new("mgr16");
+        let m = mk(&d.join("s"));
+        let a = m.allocate(64).unwrap(); // fresh chunk via slow path
+        let b = m.allocate(64).unwrap(); // lock-free claim + batch refill
+        assert_eq!(b - a, 64, "adjacent slot from the same chunk");
+        let st = m.stats();
+        assert!(st.fast_claims >= 2, "batch claim recorded: {}", st.fast_claims);
+        // the parked surplus now serves allocations as pure cache hits
+        let c = m.allocate(64).unwrap();
+        assert_eq!(c - b, 64);
+        assert!(m.stats().cache_hits >= 1);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn reallocate_in_place_and_moving() {
+        let d = TempDir::new("mgr17");
+        let m = mk(&d.join("s"));
+        let off = m.allocate(50).unwrap(); // class 56
+        m.write::<u64>(off, 0xAA55);
+        // still inside the same class → in place
+        let same = m.reallocate(off, 56).unwrap();
+        assert_eq!(same, off);
+        // grow to another class → moves, contents preserved
+        let moved = m.reallocate(off, 500).unwrap();
+        assert_ne!(moved, off);
+        assert_eq!(m.read::<u64>(moved), 0xAA55);
+        // grow to a large allocation → moves again, contents preserved
+        let cs = m.chunk_size();
+        let large = m.reallocate(moved, cs).unwrap();
+        assert_eq!(m.read::<u64>(large), 0xAA55);
+        assert_eq!(m.usable_size(large).unwrap() % cs, 0);
+        // shrink back to small
+        let small = m.reallocate(large, 8).unwrap();
+        assert_eq!(m.read::<u64>(small), 0xAA55);
+        m.deallocate(small).unwrap();
+        assert!(m.reallocate(1 << 40, 8).is_err(), "bogus offset rejected");
+        m.close().unwrap();
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Compact multi-layer bitset (paper §4.3.1).
+//! Compact multi-layer bitset (paper §4.3.1) with **lock-free slot
+//! claims** (llfree-style word-level CAS).
 //!
 //! "Metall utilizes a compact multi-layer bitset table and built-in bit
 //! operation functions to manage available slots in a chunk … It can
@@ -8,20 +9,45 @@
 //!
 //! Layer 2 is the actual slot bitmap (1 = occupied); layer 1 marks fully
 //! occupied layer-2 words; layer 0 marks fully occupied layer-1 words.
-//! `find_and_set_first_zero` descends 0→1→2 with one trailing-zeros scan
-//! per layer.
+//!
+//! ## Concurrency model
+//!
+//! Every word is an [`AtomicU64`], so all operations take `&self`:
+//!
+//! - **Claims** (`find_and_set_first_zero`, `claim_batch`) are lock-free:
+//!   the hint layers (l0/l1) are scanned read-only to pick a candidate
+//!   layer-2 word, then the slot bit(s) are taken with a single
+//!   `compare_exchange` on that word. A lost race simply retries; each
+//!   failed CAS implies another thread succeeded, so the system always
+//!   makes progress.
+//! - **Layer-2 is authoritative; l0/l1 are hints.** After a claim fills a
+//!   word, the summary bits are raised with `fetch_or` and re-validated
+//!   (set-then-recheck), so a concurrent `clear` can never leave a stale
+//!   "full" hint standing. If the hint scan comes up empty while `used()`
+//!   says slots remain, a linear layer-2 word scan is the fallback — the
+//!   paper's three-probe bound holds on the uncontended path.
+//! - The exact `used` counter is maintained with atomic add/sub *after*
+//!   the bit transition; it is exact at rest and conservatively lags
+//!   mid-operation.
+//!
+//! The manager's bin directory drives claims under a shared (read) lock
+//! and performs frees / chunk release under the exclusive (write) lock,
+//! which keeps the two paper-listed serialization points (§4.5.1) as the
+//! only exclusive sections.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 
 use crate::util::bits::lowest_zero;
 use crate::util::div_ceil;
 
-/// Up to 64³ slots, lazily sized for `capacity`.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// Up to 64³ slots, lazily sized for `capacity`. All operations take
+/// `&self`; slot claims are word-level CAS (see module docs).
 pub struct MlBitset {
     capacity: u32,
-    used: u32,
-    l0: u64,
-    l1: Vec<u64>,
-    l2: Vec<u64>,
+    used: AtomicU32,
+    l0: AtomicU64,
+    l1: Vec<AtomicU64>,
+    l2: Vec<AtomicU64>,
 }
 
 pub const MAX_SLOTS: u32 = 64 * 64 * 64;
@@ -31,20 +57,37 @@ impl MlBitset {
         assert!(capacity >= 1 && capacity <= MAX_SLOTS, "capacity {capacity}");
         let n2 = div_ceil(capacity as usize, 64);
         let n1 = div_ceil(n2, 64);
-        let mut s = Self {
-            capacity,
-            used: 0,
-            l0: 0,
-            l1: vec![0; n1],
-            l2: vec![0; n2],
-        };
         // Pre-mark the out-of-capacity tail as occupied so the scan never
-        // hands out a slot ≥ capacity.
+        // hands out a slot ≥ capacity (tail bits are never cleared).
+        let mut l2 = vec![0u64; n2];
         for slot in capacity..(n2 as u32 * 64) {
-            s.set_raw(slot);
+            l2[(slot / 64) as usize] |= 1 << (slot % 64);
         }
-        s.used = 0; // tail marking is not "use"
-        s
+        let mut l1 = vec![0u64; n1];
+        for (w2, &w) in l2.iter().enumerate() {
+            if w == u64::MAX {
+                l1[w2 / 64] |= 1 << (w2 % 64);
+            }
+        }
+        let mut l0 = 0u64;
+        for w1 in 0..n1 {
+            let lo = w1 * 64;
+            let hi = ((w1 + 1) * 64).min(n2);
+            let mut word = l1[w1];
+            for missing in (hi - lo)..64 {
+                word |= 1 << missing;
+            }
+            if word == u64::MAX {
+                l0 |= 1 << (w1 % 64);
+            }
+        }
+        Self {
+            capacity,
+            used: AtomicU32::new(0),
+            l0: AtomicU64::new(l0),
+            l1: l1.into_iter().map(AtomicU64::new).collect(),
+            l2: l2.into_iter().map(AtomicU64::new).collect(),
+        }
     }
 
     pub fn capacity(&self) -> u32 {
@@ -53,31 +96,15 @@ impl MlBitset {
 
     /// Number of occupied (real) slots.
     pub fn used(&self) -> u32 {
-        self.used
+        self.used.load(Ordering::Acquire)
     }
 
     pub fn is_full(&self) -> bool {
-        self.used == self.capacity
+        self.used() == self.capacity
     }
 
     pub fn is_empty(&self) -> bool {
-        self.used == 0
-    }
-
-    fn set_raw(&mut self, slot: u32) {
-        let w2 = (slot / 64) as usize;
-        let b2 = slot % 64;
-        self.l2[w2] |= 1 << b2;
-        if self.l2[w2] == u64::MAX {
-            let w1 = w2 / 64;
-            self.l1[w1] |= 1 << (w2 % 64);
-            // a partially-present last l1 word never saturates l0 falsely:
-            // missing l2 words are absent, so pad virtually with ones
-            let full_l1 = self.l1_word_full(w1);
-            if full_l1 {
-                self.l0 |= 1 << (w1 % 64);
-            }
-        }
+        self.used() == 0
     }
 
     /// Is layer-1 word `w1` fully occupied, accounting for the virtual
@@ -85,84 +112,190 @@ impl MlBitset {
     fn l1_word_full(&self, w1: usize) -> bool {
         let lo = w1 * 64;
         let hi = ((w1 + 1) * 64).min(self.l2.len());
-        let mut word = self.l1[w1];
-        // virtually set bits for non-existent l2 words
+        let mut word = self.l1[w1].load(Ordering::Acquire);
         for missing in (hi - lo)..64 {
             word |= 1 << missing;
         }
         word == u64::MAX
     }
 
-    /// Find the first free slot, mark it occupied, return its index.
-    /// At most three word scans (the paper's bound).
-    pub fn find_and_set_first_zero(&mut self) -> Option<u32> {
-        if self.is_full() {
-            return None;
+    /// Raise the "full" hints for layer-2 word `w2`, then re-validate
+    /// (set-then-recheck): if a concurrent `clear` reopened the word
+    /// after we loaded it, withdraw the hint so it cannot go stale.
+    fn mark_full_hints(&self, w2: usize) {
+        let w1 = w2 / 64;
+        self.l1[w1].fetch_or(1 << (w2 % 64), Ordering::AcqRel);
+        if self.l2[w2].load(Ordering::Acquire) != u64::MAX {
+            self.l1[w1].fetch_and(!(1 << (w2 % 64)), Ordering::AcqRel);
+            return;
         }
-        // layer 0: find an l1 word with room (virtual padding for absent
-        // l1 words)
-        let mut l0 = self.l0;
+        if self.l1_word_full(w1) {
+            self.l0.fetch_or(1 << (w1 % 64), Ordering::AcqRel);
+            if !self.l1_word_full(w1) {
+                self.l0.fetch_and(!(1 << (w1 % 64)), Ordering::AcqRel);
+            }
+        }
+    }
+
+    /// Hint-guided descent l0 → l1: candidate layer-2 word with (probable)
+    /// room. The paper's "at most three built-in bit operations" path.
+    fn find_candidate_word(&self) -> Option<usize> {
+        let mut l0 = self.l0.load(Ordering::Acquire);
         for missing in self.l1.len()..64 {
             l0 |= 1 << missing;
         }
         let w1 = lowest_zero(l0)? as usize;
-        // layer 1: find an l2 word with room
         let lo = w1 * 64;
         let hi = ((w1 + 1) * 64).min(self.l2.len());
-        let mut word1 = self.l1[w1];
+        let mut word1 = self.l1[w1].load(Ordering::Acquire);
         for missing in (hi - lo)..64 {
             word1 |= 1 << missing;
         }
         let w2rel = lowest_zero(word1)? as usize;
-        let w2 = lo + w2rel;
-        // layer 2: find the free slot
-        let b = lowest_zero(self.l2[w2])?;
-        let slot = (w2 as u32) * 64 + b;
-        debug_assert!(slot < self.capacity);
-        self.set_raw(slot);
-        self.used += 1;
-        Some(slot)
+        Some(lo + w2rel)
+    }
+
+    /// Authoritative fallback: first layer-2 word with a zero bit. Only
+    /// reached when the hints are transiently stale under contention.
+    fn linear_scan(&self) -> Option<usize> {
+        (0..self.l2.len()).find(|&w2| self.l2[w2].load(Ordering::Acquire) != u64::MAX)
+    }
+
+    /// Find the first free slot, mark it occupied, return its index.
+    /// Lock-free: word-level CAS with retry on a lost race.
+    pub fn find_and_set_first_zero(&self) -> Option<u32> {
+        loop {
+            if self.is_full() {
+                return None;
+            }
+            let w2 = match self.find_candidate_word().or_else(|| self.linear_scan()) {
+                Some(w) => w,
+                // No zero bit anywhere right now (a racing claim may not
+                // have bumped `used` yet) — treat as full.
+                None => return None,
+            };
+            let word = self.l2[w2].load(Ordering::Acquire);
+            let bit = match lowest_zero(word) {
+                Some(b) => b,
+                None => {
+                    // Hint pointed at a word that filled up meanwhile.
+                    self.mark_full_hints(w2);
+                    continue;
+                }
+            };
+            let new = word | 1 << bit;
+            if self.l2[w2]
+                .compare_exchange(word, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.used.fetch_add(1, Ordering::AcqRel);
+                if new == u64::MAX {
+                    self.mark_full_hints(w2);
+                }
+                let slot = (w2 as u32) * 64 + bit;
+                debug_assert!(slot < self.capacity);
+                return Some(slot);
+            }
+            // lost the CAS race — another thread claimed in this word
+        }
+    }
+
+    /// Claim up to `want` free slots, appending their indices to `out`.
+    /// Each iteration takes *all* the bits it can from one layer-2 word
+    /// with a single CAS (the batch analogue of the llfree per-core
+    /// claim), so a cache refill costs ~1 CAS instead of ~N.
+    /// Returns the number of slots claimed.
+    pub fn claim_batch(&self, want: usize, out: &mut Vec<u32>) -> usize {
+        let mut got = 0usize;
+        while got < want {
+            if self.is_full() {
+                break;
+            }
+            let w2 = match self.find_candidate_word().or_else(|| self.linear_scan()) {
+                Some(w) => w,
+                None => break,
+            };
+            let word = self.l2[w2].load(Ordering::Acquire);
+            let free = !word;
+            if free == 0 {
+                self.mark_full_hints(w2);
+                continue;
+            }
+            let take = (want - got).min(free.count_ones() as usize);
+            let mut mask = 0u64;
+            let mut m = free;
+            for _ in 0..take {
+                let b = m.trailing_zeros();
+                mask |= 1 << b;
+                m &= m - 1;
+            }
+            let new = word | mask;
+            if self.l2[w2]
+                .compare_exchange(word, new, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                self.used.fetch_add(take as u32, Ordering::AcqRel);
+                let mut mm = mask;
+                while mm != 0 {
+                    let b = mm.trailing_zeros();
+                    out.push((w2 as u32) * 64 + b);
+                    mm &= mm - 1;
+                }
+                got += take;
+                if new == u64::MAX {
+                    self.mark_full_hints(w2);
+                }
+            }
+            // on CAS failure: retry — the claimant that beat us made progress
+        }
+        got
     }
 
     /// Mark `slot` occupied (returns false if it already was).
-    pub fn set(&mut self, slot: u32) -> bool {
+    pub fn set(&self, slot: u32) -> bool {
         assert!(slot < self.capacity);
-        if self.get(slot) {
+        let w2 = (slot / 64) as usize;
+        let mask = 1u64 << (slot % 64);
+        let prev = self.l2[w2].fetch_or(mask, Ordering::AcqRel);
+        if prev & mask != 0 {
             return false;
         }
-        self.set_raw(slot);
-        self.used += 1;
+        self.used.fetch_add(1, Ordering::AcqRel);
+        if prev | mask == u64::MAX {
+            self.mark_full_hints(w2);
+        }
         true
     }
 
     /// Free `slot` (returns false if it was not occupied).
-    pub fn clear(&mut self, slot: u32) -> bool {
+    pub fn clear(&self, slot: u32) -> bool {
         assert!(slot < self.capacity, "slot {slot} >= capacity {}", self.capacity);
         let w2 = (slot / 64) as usize;
-        let b2 = slot % 64;
-        if self.l2[w2] & (1 << b2) == 0 {
+        let mask = 1u64 << (slot % 64);
+        let prev = self.l2[w2].fetch_and(!mask, Ordering::AcqRel);
+        if prev & mask == 0 {
             return false;
         }
-        self.l2[w2] &= !(1 << b2);
+        self.used.fetch_sub(1, Ordering::AcqRel);
+        // the word now has room: withdraw the "full" hints
         let w1 = w2 / 64;
-        self.l1[w1] &= !(1 << (w2 % 64));
-        self.l0 &= !(1 << (w1 % 64));
-        self.used -= 1;
+        self.l1[w1].fetch_and(!(1 << (w2 % 64)), Ordering::AcqRel);
+        self.l0.fetch_and(!(1 << (w1 % 64)), Ordering::AcqRel);
         true
     }
 
     pub fn get(&self, slot: u32) -> bool {
         assert!(slot < self.capacity);
-        self.l2[(slot / 64) as usize] & (1 << (slot % 64)) != 0
+        self.l2[(slot / 64) as usize].load(Ordering::Acquire) & (1 << (slot % 64)) != 0
     }
 
     // ---- serialization (management data is persisted on close, §4.3) ----
 
     pub fn serialize_into(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.capacity.to_le_bytes());
-        out.extend_from_slice(&self.used.to_le_bytes());
+        out.extend_from_slice(&self.used().to_le_bytes());
         for w in &self.l2 {
-            out.extend_from_slice(&w.to_le_bytes());
+            out.extend_from_slice(&w.load(Ordering::Acquire).to_le_bytes());
         }
     }
 
@@ -179,7 +312,7 @@ impl MlBitset {
         if buf.len() < 8 + n2 * 8 {
             return None;
         }
-        let mut s = Self::new(capacity);
+        let s = Self::new(capacity);
         let mut real_used = 0;
         for (i, chunkb) in buf[8..8 + n2 * 8].chunks_exact(8).enumerate() {
             let word = u64::from_le_bytes(chunkb.try_into().ok()?);
@@ -198,6 +331,49 @@ impl MlBitset {
     }
 }
 
+impl Clone for MlBitset {
+    fn clone(&self) -> Self {
+        Self {
+            capacity: self.capacity,
+            used: AtomicU32::new(self.used()),
+            l0: AtomicU64::new(self.l0.load(Ordering::Acquire)),
+            l1: self
+                .l1
+                .iter()
+                .map(|w| AtomicU64::new(w.load(Ordering::Acquire)))
+                .collect(),
+            l2: self
+                .l2
+                .iter()
+                .map(|w| AtomicU64::new(w.load(Ordering::Acquire)))
+                .collect(),
+        }
+    }
+}
+
+impl PartialEq for MlBitset {
+    fn eq(&self, other: &Self) -> bool {
+        self.capacity == other.capacity
+            && self.used() == other.used()
+            && self
+                .l2
+                .iter()
+                .zip(&other.l2)
+                .all(|(a, b)| a.load(Ordering::Acquire) == b.load(Ordering::Acquire))
+    }
+}
+
+impl Eq for MlBitset {}
+
+impl std::fmt::Debug for MlBitset {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MlBitset")
+            .field("capacity", &self.capacity)
+            .field("used", &self.used())
+            .finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,7 +381,7 @@ mod tests {
 
     #[test]
     fn sequential_fill_and_drain() {
-        let mut bs = MlBitset::new(130); // crosses word boundaries
+        let bs = MlBitset::new(130); // crosses word boundaries
         for expect in 0..130 {
             assert_eq!(bs.find_and_set_first_zero(), Some(expect));
         }
@@ -219,7 +395,7 @@ mod tests {
 
     #[test]
     fn first_fit_order_after_clear() {
-        let mut bs = MlBitset::new(256);
+        let bs = MlBitset::new(256);
         for _ in 0..256 {
             bs.find_and_set_first_zero();
         }
@@ -234,14 +410,14 @@ mod tests {
 
     #[test]
     fn capacity_one_and_max_group() {
-        let mut bs = MlBitset::new(1);
+        let bs = MlBitset::new(1);
         assert_eq!(bs.find_and_set_first_zero(), Some(0));
         assert_eq!(bs.find_and_set_first_zero(), None);
         bs.clear(0);
         assert_eq!(bs.find_and_set_first_zero(), Some(0));
 
         // 2^18 slots — the paper's maximum (8 B objects in 2 MiB chunks)
-        let mut big = MlBitset::new(MAX_SLOTS);
+        let big = MlBitset::new(MAX_SLOTS);
         for i in 0..1000 {
             assert_eq!(big.find_and_set_first_zero(), Some(i));
         }
@@ -249,7 +425,7 @@ mod tests {
 
     #[test]
     fn double_set_and_clear_are_detected() {
-        let mut bs = MlBitset::new(64);
+        let bs = MlBitset::new(64);
         assert!(bs.set(10));
         assert!(!bs.set(10));
         assert!(bs.clear(10));
@@ -258,7 +434,7 @@ mod tests {
 
     #[test]
     fn random_workout_against_model() {
-        let mut bs = MlBitset::new(777);
+        let bs = MlBitset::new(777);
         let mut model = vec![false; 777];
         let mut rng = Xoshiro256ss::new(5);
         for _ in 0..50_000 {
@@ -279,7 +455,7 @@ mod tests {
 
     #[test]
     fn serialization_roundtrip() {
-        let mut bs = MlBitset::new(300);
+        let bs = MlBitset::new(300);
         let mut rng = Xoshiro256ss::new(8);
         for _ in 0..150 {
             let s = rng.gen_range(300) as u32;
@@ -294,12 +470,93 @@ mod tests {
 
     #[test]
     fn deserialize_rejects_corruption() {
-        let mut bs = MlBitset::new(64);
+        let bs = MlBitset::new(64);
         bs.set(0);
         let mut buf = Vec::new();
         bs.serialize_into(&mut buf);
         buf[4] = 99; // wrong used count
         assert!(MlBitset::deserialize_from(&buf).is_none());
         assert!(MlBitset::deserialize_from(&[1, 2, 3]).is_none());
+    }
+
+    #[test]
+    fn claim_batch_takes_first_fit_prefix() {
+        let bs = MlBitset::new(200);
+        let mut out = Vec::new();
+        assert_eq!(bs.claim_batch(70, &mut out), 70);
+        assert_eq!(out, (0..70).collect::<Vec<u32>>());
+        assert_eq!(bs.used(), 70);
+        // holes are refilled first
+        bs.clear(5);
+        bs.clear(6);
+        let mut out2 = Vec::new();
+        assert_eq!(bs.claim_batch(3, &mut out2), 3);
+        assert_eq!(out2, vec![5, 6, 70]);
+    }
+
+    #[test]
+    fn claim_batch_stops_at_capacity() {
+        let bs = MlBitset::new(10);
+        let mut out = Vec::new();
+        assert_eq!(bs.claim_batch(64, &mut out), 10);
+        assert!(bs.is_full());
+        assert_eq!(bs.claim_batch(1, &mut out), 0);
+    }
+
+    #[test]
+    fn concurrent_claims_never_collide() {
+        use std::collections::HashSet;
+        use std::sync::Arc;
+        let bs = Arc::new(MlBitset::new(MAX_SLOTS));
+        let nthreads = 8;
+        let per = 4000;
+        let mut handles = Vec::new();
+        for _ in 0..nthreads {
+            let bs = Arc::clone(&bs);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::with_capacity(per);
+                for _ in 0..per {
+                    got.push(bs.find_and_set_first_zero().expect("capacity suffices"));
+                }
+                got
+            }));
+        }
+        let mut seen = HashSet::new();
+        for h in handles {
+            for slot in h.join().unwrap() {
+                assert!(seen.insert(slot), "slot {slot} claimed twice");
+            }
+        }
+        assert_eq!(bs.used() as usize, nthreads * per);
+    }
+
+    #[test]
+    fn concurrent_batch_claims_never_collide() {
+        use std::collections::HashSet;
+        use std::sync::Arc;
+        let bs = Arc::new(MlBitset::new(64 * 64));
+        let nthreads = 8;
+        let batches = 16;
+        let want = 16;
+        let mut handles = Vec::new();
+        for _ in 0..nthreads {
+            let bs = Arc::clone(&bs);
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for _ in 0..batches {
+                    bs.claim_batch(want, &mut got);
+                }
+                got
+            }));
+        }
+        let mut seen = HashSet::new();
+        let mut total = 0;
+        for h in handles {
+            for slot in h.join().unwrap() {
+                assert!(seen.insert(slot), "slot {slot} claimed twice");
+                total += 1;
+            }
+        }
+        assert_eq!(bs.used() as usize, total);
     }
 }

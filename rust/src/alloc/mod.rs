@@ -19,5 +19,5 @@ pub mod object_cache;
 pub mod name_dir;
 pub mod manager;
 
-pub use api::SegmentAlloc;
+pub use api::{MetallHandle, SegmentAlloc};
 pub use manager::{ManagerOptions, MetallManager, Persist};

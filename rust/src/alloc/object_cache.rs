@@ -15,6 +15,12 @@ use std::sync::Mutex;
 /// Max objects cached per (core, bin).
 pub const PER_BIN_CAP: usize = 64;
 
+/// Slots claimed per lock-free refill on a cache miss (the manager claims
+/// a word-level batch from the bin bitsets and parks the surplus here, so
+/// the next `REFILL_BATCH - 1` same-bin allocations on this core are pure
+/// cache pops).
+pub const REFILL_BATCH: usize = 16;
+
 struct CoreCache {
     by_bin: Vec<Vec<u64>>, // offsets
 }
@@ -56,9 +62,17 @@ impl ObjectCache {
     /// Push a freed object. Returns the overflow spill (possibly empty):
     /// offsets the caller must return to the bin directory.
     pub fn push(&self, bin: u32, offset: u64) -> Vec<u64> {
+        self.push_batch(bin, &[offset])
+    }
+
+    /// Push a batch of objects (refill path: slots just claimed through
+    /// the lock-free bitset path, or a bulk free). Returns the overflow
+    /// spill (possibly empty): offsets the caller must return to the bin
+    /// directory.
+    pub fn push_batch(&self, bin: u32, offsets: &[u64]) -> Vec<u64> {
         let mut c = self.cores[self.core_slot()].lock().unwrap();
         let q = &mut c.by_bin[bin as usize];
-        q.push(offset);
+        q.extend_from_slice(offsets);
         if q.len() > PER_BIN_CAP {
             // spill the older half (keep the hot top of the LIFO)
             let keep = PER_BIN_CAP / 2;
@@ -130,6 +144,16 @@ mod tests {
         assert_eq!(spilled[0], 0);
         // the hot top is still cached
         assert_eq!(c.pop(0), Some(PER_BIN_CAP as u64));
+    }
+
+    #[test]
+    fn push_batch_spills_once_over_cap() {
+        let c = ObjectCache::with_cores(1, 1);
+        let offs: Vec<u64> = (0..PER_BIN_CAP as u64 + 10).collect();
+        let spilled = c.push_batch(0, &offs);
+        assert_eq!(spilled.len(), PER_BIN_CAP + 10 - PER_BIN_CAP / 2);
+        assert_eq!(spilled[0], 0, "oldest spilled first");
+        assert_eq!(c.pop(0), Some(PER_BIN_CAP as u64 + 9), "hot top kept");
     }
 
     #[test]

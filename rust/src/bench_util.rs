@@ -175,6 +175,14 @@ impl BenchArgs {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Comma-separated list of usizes (e.g. `--threads 1,2,4,8`).
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        }
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.get(key).is_some()
     }
@@ -201,6 +209,13 @@ mod tests {
         let st = bench(2, 5, || count += 1);
         assert_eq!(count, 7);
         assert_eq!(st.samples.len(), 5);
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let a = BenchArgs::from_slice(&["--threads".into(), "1,2, 8".into()]);
+        assert_eq!(a.get_usize_list("threads", &[4]), vec![1, 2, 8]);
+        assert_eq!(a.get_usize_list("missing", &[4]), vec![4]);
     }
 
     #[test]

@@ -176,6 +176,118 @@ fn no_space_leak_after_full_free() {
     m.close().unwrap();
 }
 
+/// Property-based trace against a shadow oracle: 12k randomized
+/// alloc/dealloc/realloc ops spanning every bin through multi-chunk large
+/// allocations, checked against a `HashMap` of live allocations. Asserts
+/// (a) no two live allocations overlap (byte-range check on every
+/// mutation), (b) freed slots are reusable, (c) contents survive realloc
+/// moves, and (d) every live offset is stable across a close/open cycle.
+#[test]
+fn property_trace_against_oracle() {
+    const STEPS: usize = 12_000;
+    let d = TempDir::new("fz-oracle");
+    let store = d.join("s");
+    let opts = ManagerOptions {
+        chunk_size: CHUNK,
+        file_size: 1 << 20,
+        vm_reserve: 4 << 30,
+        ..Default::default()
+    };
+    let m = MetallManager::create_with(&store, opts).unwrap();
+    let mut rng = Xoshiro256ss::new(0x0_2ACE);
+    // oracle: offset → (requested size, usable size, fill byte)
+    let mut live: HashMap<u64, (usize, usize, u8)> = HashMap::new();
+    let mut order: Vec<u64> = Vec::new(); // for random victim picks
+
+    let usable_of = |m: &MetallManager, off: u64| m.usable_size(off).unwrap();
+    let check_no_overlap = |live: &HashMap<u64, (usize, usize, u8)>, off: u64, usable: usize| {
+        for (&o, &(_, u, _)) in live {
+            let disjoint = off + usable as u64 <= o || o + u as u64 <= off;
+            assert!(disjoint, "[{off}, +{usable}) overlaps [{o}, +{u})");
+        }
+    };
+    let random_size = |rng: &mut Xoshiro256ss| -> usize {
+        match rng.gen_range(100) {
+            0..=69 => 1 + rng.gen_range(2048) as usize,            // all small bins
+            70..=89 => 1 + rng.gen_range((CHUNK / 2) as u64) as usize, // up to max small
+            _ => CHUNK / 2 + 1 + rng.gen_range((3 * CHUNK) as u64) as usize, // large
+        }
+    };
+
+    for step in 0..STEPS {
+        match rng.gen_range(100) {
+            // allocate
+            0..=49 => {
+                let size = random_size(&mut rng);
+                let off = m.allocate(size).unwrap();
+                let usable = usable_of(&m, off);
+                assert!(usable >= size, "step {step}: usable {usable} < size {size}");
+                check_no_overlap(&live, off, usable);
+                let fill = (step % 251) as u8;
+                unsafe { m.bytes_mut(off, size).fill(fill) };
+                assert!(live.insert(off, (size, usable, fill)).is_none());
+                order.push(off);
+            }
+            // deallocate
+            50..=74 => {
+                if order.is_empty() {
+                    continue;
+                }
+                let i = rng.gen_range(order.len() as u64) as usize;
+                let off = order.swap_remove(i);
+                let (size, _, fill) = live.remove(&off).unwrap();
+                let data = unsafe { m.bytes(off, size) };
+                assert!(
+                    data.iter().all(|&b| b == fill),
+                    "step {step}: contents corrupted before free"
+                );
+                m.deallocate(off).unwrap();
+            }
+            // reallocate
+            _ => {
+                if order.is_empty() {
+                    continue;
+                }
+                let i = rng.gen_range(order.len() as u64) as usize;
+                let off = order[i];
+                let (old_size, _, fill) = live.remove(&off).unwrap();
+                let new_size = random_size(&mut rng);
+                let new_off = m.reallocate(off, new_size).unwrap();
+                let usable = usable_of(&m, new_off);
+                assert!(usable >= new_size);
+                check_no_overlap(&live, new_off, usable);
+                let preserved = old_size.min(new_size);
+                let data = unsafe { m.bytes(new_off, preserved) };
+                assert!(
+                    data.iter().all(|&b| b == fill),
+                    "step {step}: realloc lost contents"
+                );
+                // refresh the fill over the full new extent
+                let fill = (step % 251) as u8;
+                unsafe { m.bytes_mut(new_off, new_size).fill(fill) };
+                assert!(live.insert(new_off, (new_size, usable, fill)).is_none());
+                order[i] = new_off;
+            }
+        }
+    }
+
+    // offsets and contents are stable across a close/open cycle
+    m.close().unwrap();
+    let m = MetallManager::open(&store).unwrap();
+    for (&off, &(size, usable, fill)) in &live {
+        assert_eq!(m.usable_size(off).unwrap(), usable, "offset {off} class stable");
+        let data = unsafe { m.bytes(off, size) };
+        assert!(data.iter().all(|&b| b == fill), "offset {off} contents stable");
+    }
+    // the allocator still works: everything frees, nothing leaks
+    for &off in live.keys() {
+        m.deallocate(off).unwrap();
+    }
+    m.sync().unwrap();
+    assert_eq!(m.used_segment_bytes(), 0, "full free returns every chunk");
+    m.close().unwrap();
+}
+
 /// Reattach equality: a randomized heap survives close/open bit-exactly.
 #[test]
 fn reattach_preserves_every_byte() {

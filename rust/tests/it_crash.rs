@@ -1,0 +1,189 @@
+//! Crash-injection integration tests (paper §3.3 CLEAN-marker protocol).
+//!
+//! A child process — this very test binary re-executed with a filter for
+//! `crash_child_entry` and control env vars — mutates a datastore and
+//! `SIGKILL`s itself at a randomized (seeded, deterministic) operation
+//! index, memento-`crash_recovery.sh`-style but in pure Rust. The parent
+//! then asserts the recovery contract:
+//!
+//! - a store that was **not** closed cleanly is refused by `open()`,
+//! - the pre-crash **snapshot** opens cleanly and holds exactly the
+//!   snapshotted state,
+//! - `open_unclean()` is the explicit opt-in escape hatch, and closing it
+//!   re-seals the store,
+//! - a child that closes cleanly produces a store that reattaches with
+//!   all data.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use metall_rs::alloc::{ManagerOptions, MetallManager};
+use metall_rs::containers::PVec;
+use metall_rs::util::rng::Xoshiro256ss;
+use metall_rs::util::tmp::TempDir;
+
+const MODE_ENV: &str = "METALL_IT_CRASH_MODE";
+const DIR_ENV: &str = "METALL_IT_CRASH_DIR";
+const KILL_AT_ENV: &str = "METALL_IT_CRASH_KILL_AT";
+
+/// Records pushed before the snapshot is taken.
+const BASE_RECORDS: u64 = 200;
+
+fn record_value(i: u64) -> u64 {
+    i.wrapping_mul(7).wrapping_add(1)
+}
+
+/// Child-process body: build a store, snapshot it, keep mutating, die.
+/// Runs only when the control env vars are present; as a plain member of
+/// the suite it is a no-op.
+#[test]
+fn crash_child_entry() {
+    let mode = match std::env::var(MODE_ENV) {
+        Ok(m) => m,
+        Err(_) => return, // normal test run: nothing to do
+    };
+    let dir = PathBuf::from(std::env::var(DIR_ENV).expect("child needs dir"));
+    let kill_at: u64 = std::env::var(KILL_AT_ENV).expect("child needs kill_at").parse().unwrap();
+
+    let store = dir.join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("log", v.offset()).unwrap();
+    for i in 0..BASE_RECORDS {
+        v.push(&m, record_value(i)).unwrap();
+    }
+    m.snapshot(dir.join("snap")).unwrap();
+
+    // post-snapshot churn: pushes plus alloc/free noise, then die (or
+    // close cleanly) at the controlled op index
+    let mut scratch: Vec<u64> = Vec::new();
+    for op in 0.. {
+        if op == kill_at {
+            match mode.as_str() {
+                "clean" => {
+                    m.construct::<u64>("post_ops", op).unwrap();
+                    m.close().unwrap();
+                    return;
+                }
+                _ => unsafe {
+                    libc::raise(libc::SIGKILL);
+                },
+            }
+        }
+        let i = BASE_RECORDS + op;
+        v.push(&m, record_value(i)).unwrap();
+        if op % 3 == 0 {
+            scratch.push(m.allocate(8 + (op as usize % 300)).unwrap());
+        }
+        if op % 5 == 0 {
+            if let Some(off) = scratch.pop() {
+                m.deallocate(off).unwrap();
+            }
+        }
+    }
+    unreachable!("loop only exits through close or SIGKILL");
+}
+
+/// Re-exec this test binary as the crash child.
+fn spawn_child(mode: &str, dir: &Path, kill_at: u64) -> std::process::ExitStatus {
+    let exe = std::env::current_exe().expect("test binary path");
+    Command::new(exe)
+        .args(["crash_child_entry", "--exact", "--nocapture", "--test-threads=1"])
+        .env(MODE_ENV, mode)
+        .env(DIR_ENV, dir)
+        .env(KILL_AT_ENV, kill_at.to_string())
+        .status()
+        .expect("spawn crash child")
+}
+
+fn assert_snapshot_intact(snap: &Path) {
+    let s = MetallManager::open(snap).expect("snapshot must open cleanly");
+    let off = s.find::<u64>("log").unwrap().expect("named object survives");
+    let v = PVec::<u64>::from_offset(s.read(off));
+    assert_eq!(v.len(&s), BASE_RECORDS as usize, "exactly the snapshotted records");
+    for i in 0..BASE_RECORDS {
+        assert_eq!(v.get(&s, i as usize), record_value(i), "record {i}");
+    }
+    assert!(s.doctor().unwrap().is_empty(), "snapshot is healthy");
+    s.close().unwrap();
+}
+
+#[test]
+fn kill9_mid_mutation_dirty_store_refused_snapshot_recovers() {
+    use std::os::unix::process::ExitStatusExt;
+    let mut rng = Xoshiro256ss::new(0xC4A5);
+    for round in 0..3 {
+        let d = TempDir::new(&format!("crash-inj-{round}"));
+        let kill_at = rng.gen_range(400); // randomized kill point, seeded
+        let status = spawn_child("crash", d.path(), kill_at);
+        assert_eq!(
+            status.signal(),
+            Some(libc::SIGKILL),
+            "round {round}: child must die by SIGKILL, got {status:?}"
+        );
+
+        let store = d.join("s");
+        assert!(
+            !store.join("CLEAN").exists(),
+            "round {round}: no CLEAN marker after kill -9"
+        );
+        // 1. the dirty store is refused
+        let err = match MetallManager::open(&store) {
+            Err(e) => e,
+            Ok(_) => panic!("round {round}: dirty store must be refused"),
+        };
+        let msg = format!("{err}");
+        assert!(msg.contains("not closed cleanly"), "round {round}: {msg}");
+        // 2. the pre-crash snapshot recovers the snapshotted state
+        assert_snapshot_intact(&d.join("snap"));
+        // 3. open_unclean is the explicit escape hatch; closing re-seals
+        {
+            let m = MetallManager::open_unclean(&store)
+                .expect("open_unclean must accept the dirty store");
+            let _ = m.doctor().expect("doctor runs on a recovered store");
+            m.close().unwrap();
+        }
+        MetallManager::open(&store).expect("re-sealed store opens").close().unwrap();
+    }
+}
+
+#[test]
+fn clean_close_child_reattaches_with_all_data() {
+    let d = TempDir::new("crash-clean");
+    let post_ops = 123u64;
+    let status = spawn_child("clean", d.path(), post_ops);
+    assert!(status.success(), "clean child exits 0: {status:?}");
+
+    let store = d.join("s");
+    assert!(store.join("CLEAN").exists(), "clean close leaves the marker");
+    let m = MetallManager::open(&store).unwrap();
+    let v = PVec::<u64>::from_offset(m.read(m.find::<u64>("log").unwrap().unwrap()));
+    let total = BASE_RECORDS + post_ops;
+    assert_eq!(v.len(&m), total as usize, "base + post-snapshot records");
+    for i in 0..total {
+        assert_eq!(v.get(&m, i as usize), record_value(i), "record {i}");
+    }
+    assert_eq!(
+        m.read::<u64>(m.find::<u64>("post_ops").unwrap().unwrap()),
+        post_ops
+    );
+    assert!(m.doctor().unwrap().is_empty());
+    m.close().unwrap();
+    // the snapshot taken mid-run is still independently intact
+    assert_snapshot_intact(&d.join("snap"));
+}
+
+/// Kill while a large multi-chunk write is in flight: the CLEAN protocol
+/// must still hold (this exercises the segment-extension path, not just
+/// small-object churn).
+#[test]
+fn kill9_mid_large_write_still_refused() {
+    use std::os::unix::process::ExitStatusExt;
+    let d = TempDir::new("crash-large");
+    // kill_at 0: the child dies before any post-snapshot op, i.e. with
+    // the snapshot's sync as the last consistency point
+    let status = spawn_child("crash", d.path(), 0);
+    assert_eq!(status.signal(), Some(libc::SIGKILL));
+    assert!(MetallManager::open(d.join("s")).is_err());
+    assert_snapshot_intact(&d.join("snap"));
+}

@@ -1,0 +1,171 @@
+//! Multi-thread stress: 8 threads hammering `allocate`/`deallocate`
+//! through the lock-free fast path while also writing persistent
+//! containers (`PVec`, `PHashMapU64`) on ONE shared manager, via the
+//! `Send + Sync` [`MetallHandle`] API. Asserts post-join integrity, that
+//! a close/open cycle round-trips every byte, and that full teardown
+//! leaks nothing.
+
+use metall_rs::alloc::{ManagerOptions, MetallHandle, MetallManager, SegmentAlloc};
+use metall_rs::containers::{PHashMapU64, PVec};
+use metall_rs::util::rng::Xoshiro256ss;
+use metall_rs::util::tmp::TempDir;
+
+const NTHREADS: u64 = 8;
+const VEC_ITEMS: u64 = 400;
+const MAP_ITEMS: u64 = 250;
+const CHURN_OPS: usize = 2000;
+
+fn opts() -> ManagerOptions {
+    ManagerOptions::small_for_tests()
+}
+
+fn vec_value(t: u64, i: u64) -> u64 {
+    t * 1_000_000 + i
+}
+
+fn map_key(t: u64, i: u64) -> u64 {
+    t * 1_000_000 + i
+}
+
+#[test]
+fn eight_threads_alloc_churn_plus_container_writers() {
+    let d = TempDir::new("stress8");
+    let store = d.join("s");
+    let h = MetallHandle::new(MetallManager::create_with(&store, opts()).unwrap());
+
+    // every thread builds its own containers and churns the allocator;
+    // the *allocator state* underneath is fully shared
+    let results: Vec<(u64, u64, u64)> = std::thread::scope(|s| {
+        (0..NTHREADS)
+            .map(|t| {
+                let h = h.clone();
+                s.spawn(move || {
+                    let v = PVec::<u64>::create(&h).unwrap();
+                    let map = PHashMapU64::<u64>::create(&h).unwrap();
+                    let mut rng = Xoshiro256ss::new(0xBEEF + t);
+                    let mut scratch: Vec<(u64, u64)> = Vec::new(); // (offset, tag)
+                    for i in 0..VEC_ITEMS.max(MAP_ITEMS) {
+                        if i < VEC_ITEMS {
+                            v.push(&h, vec_value(t, i)).unwrap();
+                        }
+                        if i < MAP_ITEMS {
+                            assert!(map.insert(&h, map_key(t, i), map_key(t, i) * 3).unwrap());
+                        }
+                        // interleaved raw churn across mixed size classes
+                        for _ in 0..CHURN_OPS / VEC_ITEMS as usize {
+                            if scratch.len() >= 64 || (!scratch.is_empty() && rng.next_f64() < 0.45)
+                            {
+                                let j = rng.gen_range(scratch.len() as u64) as usize;
+                                let (off, tag) = scratch.swap_remove(j);
+                                assert_eq!(h.read::<u64>(off), tag, "thread {t}: tag corrupted");
+                                h.deallocate(off).unwrap();
+                            } else {
+                                let size = 8usize << rng.gen_range(7); // 8..=512
+                                let off = SegmentAlloc::allocate(&h, size).unwrap();
+                                let tag = rng.next_u64();
+                                h.write::<u64>(off, tag);
+                                scratch.push((off, tag));
+                            }
+                        }
+                    }
+                    // leave the scratch allocations live on purpose: they
+                    // must not disturb container data, and we free them
+                    // post-join to test cross-thread deallocation
+                    let scratch_vec = PVec::<u64>::create(&h).unwrap();
+                    for &(off, _) in &scratch {
+                        scratch_vec.push(&h, off).unwrap();
+                    }
+                    for &(off, tag) in &scratch {
+                        assert_eq!(h.read::<u64>(off), tag, "thread {t}: post-churn tag");
+                    }
+                    (t, v.offset(), map.offset())
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|j| j.join().unwrap())
+            .collect()
+    });
+
+    // post-join integrity on the live manager
+    for &(t, voff, moff) in &results {
+        let v = PVec::<u64>::from_offset(voff);
+        assert_eq!(v.len(&*h), VEC_ITEMS as usize, "thread {t} vec length");
+        for i in 0..VEC_ITEMS {
+            assert_eq!(v.get(&*h, i as usize), vec_value(t, i), "thread {t} vec[{i}]");
+        }
+        let map = PHashMapU64::<u64>::from_offset(moff);
+        assert_eq!(map.len(&*h), MAP_ITEMS as usize, "thread {t} map length");
+        for i in 0..MAP_ITEMS {
+            assert_eq!(
+                map.get(&*h, map_key(t, i)),
+                Some(map_key(t, i) * 3),
+                "thread {t} map[{i}]"
+            );
+        }
+        h.construct::<u64>(&format!("vec{t}"), voff).unwrap();
+        h.construct::<u64>(&format!("map{t}"), moff).unwrap();
+    }
+    assert!(h.doctor().unwrap().is_empty(), "healthy after the stampede");
+    let st = h.stats();
+    assert!(st.fast_claims > 0, "the lock-free claim path was exercised");
+    h.try_close().expect("all worker handles dropped at join");
+
+    // close/open round-trip: every container byte survives
+    let m = MetallManager::open(&store).unwrap();
+    for t in 0..NTHREADS {
+        let voff = m.read::<u64>(m.find::<u64>(&format!("vec{t}")).unwrap().unwrap());
+        let v = PVec::<u64>::from_offset(voff);
+        assert_eq!(v.len(&m), VEC_ITEMS as usize);
+        for i in 0..VEC_ITEMS {
+            assert_eq!(v.get(&m, i as usize), vec_value(t, i), "reattach vec{t}[{i}]");
+        }
+        let moff = m.read::<u64>(m.find::<u64>(&format!("map{t}")).unwrap().unwrap());
+        let map = PHashMapU64::<u64>::from_offset(moff);
+        for i in 0..MAP_ITEMS {
+            assert_eq!(map.get(&m, map_key(t, i)), Some(map_key(t, i) * 3));
+        }
+    }
+    assert!(m.doctor().unwrap().is_empty());
+    m.close().unwrap();
+}
+
+/// Deterministic two-phase variant: phase 1 races 8 allocating threads,
+/// phase 2 frees everything from the main thread and asserts zero chunk
+/// leakage — the cross-thread free path (cache → spill → bitset → chunk
+/// release) fully unwinds what the fast path claimed.
+#[test]
+fn cross_thread_free_unwinds_everything() {
+    let d = TempDir::new("stress-unwind");
+    let h = MetallHandle::new(MetallManager::create_with(d.join("s"), opts()).unwrap());
+    let all: Vec<u64> = std::thread::scope(|s| {
+        (0..NTHREADS)
+            .map(|t| {
+                let h = h.clone();
+                s.spawn(move || {
+                    let mut rng = Xoshiro256ss::new(77 + t);
+                    (0..500)
+                        .map(|_| {
+                            let size = 8 + rng.gen_range(1000) as usize;
+                            SegmentAlloc::allocate(&h, size).unwrap()
+                        })
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .flat_map(|j| j.join().unwrap())
+            .collect()
+    });
+    // no duplicate offsets across threads
+    let mut sorted = all.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), all.len(), "duplicate offsets handed out");
+    for off in all {
+        h.deallocate(off).unwrap();
+    }
+    h.sync().unwrap(); // drain per-core caches to the bitsets
+    assert_eq!(h.used_segment_bytes(), 0, "every chunk returned to Free");
+    h.try_close().unwrap();
+}
