@@ -1,15 +1,22 @@
-//! Thread-scaling benchmark for the lock-free small-allocation fast path
-//! (§4.5 concurrency design + the atomic-bitset claim path).
+//! Thread- and shard-scaling benchmark for the small-allocation fast
+//! path (§4.5 concurrency design + the sharded bin directory).
 //!
 //! Measures aggregate alloc/dealloc throughput of one shared
-//! `MetallManager` at 1/2/4/8 threads over mixed small size classes, and
-//! reports the speedup relative to single-threaded. The acceptance bar
-//! for the fast path is ≥ 2x aggregate throughput at 8 threads.
+//! `MetallManager` over a (threads × shards) matrix of mixed small size
+//! classes, and reports the speedup relative to single-threaded as well
+//! as the sharding delta at the highest thread count. The acceptance bar
+//! for the sharded directory is ≥ 1.5× throughput at 8 threads / 4
+//! shards over 8 threads / 1 shard.
+//!
+//! Results go to the human table, to `bench_results/concurrent_alloc.jsonl`
+//! (append-only history), and to `BENCH_concurrent_alloc.json` at the
+//! repo root — one machine-readable document per run so the perf
+//! trajectory is tracked across PRs.
 //!
 //! `cargo bench --bench concurrent_alloc -- [--ops 400000]
-//!  [--threads 1,2,4,8] [--repeats 3] [--live 192]`
+//!  [--threads 1,2,4,8] [--shards 1,2,4] [--repeats 3] [--live 192]`
 
-use metall_rs::alloc::{ManagerOptions, MetallHandle, MetallManager};
+use metall_rs::alloc::{ManagerOptions, MetallHandle, MetallManager, ShardStatsSnapshot};
 use metall_rs::bench_util::{record, BenchArgs, Table};
 use metall_rs::util::human;
 use metall_rs::util::jsonw::JsonObj;
@@ -49,75 +56,172 @@ fn churn(h: &MetallHandle, ops: usize, threads: usize, live_cap: usize, seed: u6
     t0.elapsed().as_secs_f64()
 }
 
+struct Cell {
+    threads: usize,
+    shards: usize,
+    secs: f64,
+    rate: f64,
+    speedup_vs_1t: f64,
+    fast_claims: u64,
+    cache_hits: u64,
+    fresh_chunks: u64,
+    remote_frees: u64,
+    exclusive_acquires: u64,
+}
+
+fn shard_sum(ss: &[ShardStatsSnapshot], f: impl Fn(&ShardStatsSnapshot) -> u64) -> u64 {
+    ss.iter().map(f).sum()
+}
+
 fn main() -> anyhow::Result<()> {
     let args = BenchArgs::parse();
     let ops = args.get_usize("ops", 400_000);
     let threads = args.get_usize_list("threads", &[1, 2, 4, 8]);
+    let shard_counts = args.get_usize_list("shards", &[1, 2, 4]);
     let repeats = args.get_usize("repeats", 3);
     let live_cap = args.get_usize("live", 192);
     let work = TempDir::new("concurrent-alloc");
 
     let mut t = Table::new(&[
-        "threads", "time", "agg ops/s", "speedup", "fast claims", "cache hits",
+        "shards", "threads", "time", "agg ops/s", "speedup", "fast claims", "remote frees",
+        "excl locks",
     ]);
-    let mut base_rate = 0.0f64;
-    let mut rate_at = Vec::new();
-    for &nt in &threads {
-        // best-of-N to shed scheduler noise; fresh store per run so every
-        // thread count sees identical initial state
-        let mut best = f64::INFINITY;
-        let mut stats = Default::default();
-        for rep in 0..repeats.max(1) {
-            let dir = work.join(&format!("t{nt}-r{rep}"));
-            let opts = ManagerOptions {
-                chunk_size: CHUNK,
-                file_size: 16 << 20,
-                vm_reserve: 32 << 30,
-                ..Default::default()
-            };
-            let h = MetallHandle::new(MetallManager::create_with(&dir, opts)?);
-            let secs = churn(&h, ops, nt, live_cap, 1);
-            stats = h.stats();
-            h.try_close().map_err(|e| anyhow::anyhow!("{e}"))?;
-            let _ = std::fs::remove_dir_all(&dir);
-            best = best.min(secs);
+    let mut cells: Vec<Cell> = Vec::new();
+    for &ns in &shard_counts {
+        let mut base_rate = 0.0f64;
+        for &nt in &threads {
+            // best-of-N to shed scheduler noise; fresh store per run so
+            // every cell sees identical initial state. The reported
+            // counters come from the same repeat as the reported time.
+            let mut best = f64::INFINITY;
+            let mut stats = Default::default();
+            let mut per_shard: Vec<ShardStatsSnapshot> = Vec::new();
+            for rep in 0..repeats.max(1) {
+                let dir = work.join(&format!("s{ns}-t{nt}-r{rep}"));
+                let opts = ManagerOptions {
+                    chunk_size: CHUNK,
+                    file_size: 16 << 20,
+                    vm_reserve: 32 << 30,
+                    shards: ns,
+                    ..Default::default()
+                };
+                let h = MetallHandle::new(MetallManager::create_with(&dir, opts)?);
+                let secs = churn(&h, ops, nt, live_cap, 1);
+                let (tot, ss) = h.stats_with_shards();
+                h.try_close().map_err(|e| anyhow::anyhow!("{e}"))?;
+                let _ = std::fs::remove_dir_all(&dir);
+                if secs < best {
+                    best = secs;
+                    stats = tot;
+                    per_shard = ss;
+                }
+            }
+            let rate = ops as f64 / best;
+            if nt == threads[0] {
+                base_rate = rate;
+            }
+            let speedup = rate / base_rate;
+            let remote_frees = shard_sum(&per_shard, |s| s.remote_frees);
+            let excl = shard_sum(&per_shard, |s| s.exclusive_acquires);
+            t.row(&[
+                ns.to_string(),
+                nt.to_string(),
+                human::duration(best),
+                human::rate(rate),
+                format!("{speedup:.2}x"),
+                stats.fast_claims.to_string(),
+                remote_frees.to_string(),
+                excl.to_string(),
+            ]);
+            record(
+                "concurrent_alloc",
+                JsonObj::new()
+                    .str("bench", "mixed-small-churn")
+                    .int("shards", ns as i64)
+                    .int("threads", nt as i64)
+                    .int("ops", ops as i64)
+                    .num("secs", best)
+                    .num("ops_per_sec", rate)
+                    .num("speedup_vs_1t", speedup)
+                    .int("fast_claims", stats.fast_claims as i64)
+                    .int("cache_hits", stats.cache_hits as i64)
+                    .int("fresh_chunks", stats.fresh_chunks as i64)
+                    .int("remote_frees", remote_frees as i64)
+                    .int("exclusive_acquires", excl as i64),
+            );
+            cells.push(Cell {
+                threads: nt,
+                shards: ns,
+                secs: best,
+                rate,
+                speedup_vs_1t: speedup,
+                fast_claims: stats.fast_claims,
+                cache_hits: stats.cache_hits,
+                fresh_chunks: stats.fresh_chunks,
+                remote_frees,
+                exclusive_acquires: excl,
+            });
         }
-        let rate = ops as f64 / best;
-        if nt == threads[0] {
-            base_rate = rate;
-        }
-        let speedup = rate / base_rate;
-        rate_at.push((nt, rate, speedup));
-        t.row(&[
-            nt.to_string(),
-            human::duration(best),
-            human::rate(rate),
-            format!("{speedup:.2}x"),
-            stats.fast_claims.to_string(),
-            stats.cache_hits.to_string(),
-        ]);
-        record(
-            "concurrent_alloc",
-            JsonObj::new()
-                .str("bench", "mixed-small-churn")
-                .int("threads", nt as i64)
-                .int("ops", ops as i64)
-                .num("secs", best)
-                .num("ops_per_sec", rate)
-                .num("speedup_vs_1t", speedup)
-                .int("fast_claims", stats.fast_claims as i64)
-                .int("cache_hits", stats.cache_hits as i64)
-                .int("fresh_chunks", stats.fresh_chunks as i64),
-        );
     }
-    t.print("thread-scaling: shared manager, mixed small classes (8B–1KiB, 40% frees)");
-    if let (Some(&(_, _, _)), Some(&(nt_max, _, sp_max))) =
-        (rate_at.first(), rate_at.last())
-    {
+    t.print("thread × shard scaling: shared manager, mixed small classes (8B–1KiB, 40% frees)");
+
+    // sharding delta at the highest thread count: max shards vs 1 shard
+    let max_t = threads.iter().copied().max().unwrap_or(1);
+    let rate_of = |ns: usize| {
+        cells
+            .iter()
+            .find(|c| c.threads == max_t && c.shards == ns)
+            .map(|c| c.rate)
+    };
+    let max_s = shard_counts.iter().copied().max().unwrap_or(1);
+    let shard_speedup = match (rate_of(1), rate_of(max_s)) {
+        (Some(r1), Some(rs)) if r1 > 0.0 => Some(rs / r1),
+        _ => None,
+    };
+    if let Some(sp) = shard_speedup {
         println!(
-            "\naggregate speedup at {nt_max} threads: {sp_max:.2}x \
-             (target ≥ 2x for the lock-free fast path)"
+            "\nsharding delta at {max_t} threads: {max_s} shards vs 1 shard = {sp:.2}x \
+             (target ≥ 1.5x for the sharded bin directory)"
         );
     }
+
+    // machine-readable summary at the repo root (one document per run,
+    // overwritten: the perf trajectory across PRs lives in git history)
+    let mut rows = String::from("[");
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            rows.push(',');
+        }
+        rows.push_str(
+            &JsonObj::new()
+                .int("threads", c.threads as i64)
+                .int("shards", c.shards as i64)
+                .num("secs", c.secs)
+                .num("ops_per_sec", c.rate)
+                .num("speedup_vs_1t", c.speedup_vs_1t)
+                .int("fast_claims", c.fast_claims as i64)
+                .int("cache_hits", c.cache_hits as i64)
+                .int("fresh_chunks", c.fresh_chunks as i64)
+                .int("remote_frees", c.remote_frees as i64)
+                .int("exclusive_acquires", c.exclusive_acquires as i64)
+                .finish(),
+        );
+    }
+    rows.push(']');
+    let mut doc = JsonObj::new()
+        .str("bench", "concurrent_alloc")
+        .str("workload", "mixed-small-churn 8B-1KiB, 40% frees")
+        .int("ops", ops as i64)
+        .int("repeats", repeats as i64)
+        .int("live_cap", live_cap as i64)
+        .raw("results", &rows);
+    if let Some(sp) = shard_speedup {
+        doc = doc
+            .int("shard_speedup_threads", max_t as i64)
+            .int("shard_speedup_shards", max_s as i64)
+            .num("shard_speedup", sp);
+    }
+    std::fs::write("BENCH_concurrent_alloc.json", doc.finish() + "\n")?;
+    println!("wrote BENCH_concurrent_alloc.json");
     Ok(())
 }

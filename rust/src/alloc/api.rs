@@ -13,7 +13,8 @@
 use std::ops::Deref;
 use std::sync::Arc;
 
-use crate::alloc::manager::{MetallManager, Persist};
+use crate::alloc::bin_dir::ShardStatsSnapshot;
+use crate::alloc::manager::{MetallManager, Persist, StatsSnapshot};
 use crate::error::{Error, Result};
 
 /// Offset-based allocation over one contiguous mapped segment.
@@ -112,9 +113,11 @@ impl SegmentAlloc for crate::alloc::MetallManager {
 /// Cloneable, `Send + Sync` handle to a shared [`MetallManager`] — the
 /// ergonomic face of the thread-scalable allocation path. Each worker
 /// thread clones a handle and allocates independently; the manager's
-/// per-core caches and lock-free bin claims keep them off each other's
-/// locks. Derefs to the manager, so the full API (`construct`, `find`,
-/// `snapshot`, …) is available through it.
+/// per-core caches, CPU-affine allocator shards
+/// ([`crate::alloc::manager::ManagerOptions::shards`]), and lock-free bin
+/// claims keep them off each other's locks. Derefs to the manager, so the
+/// full API (`construct`, `find`, `snapshot`, `shard_stats`, …) is
+/// available through it.
 ///
 /// ```no_run
 /// use metall_rs::alloc::{MetallHandle, MetallManager};
@@ -142,6 +145,13 @@ impl MetallHandle {
     /// The underlying manager (also available through `Deref`).
     pub fn manager(&self) -> &MetallManager {
         &self.0
+    }
+
+    /// Aggregate totals plus the per-shard contention counters in one
+    /// call (workers report both after a run; the totals are the same
+    /// counters the unsharded allocator exposed).
+    pub fn stats_with_shards(&self) -> (StatsSnapshot, Vec<ShardStatsSnapshot>) {
+        (self.0.stats(), self.0.shard_stats())
     }
 
     /// Number of live handles to this manager.
@@ -266,6 +276,46 @@ mod handle_tests {
             Err(_) => panic!("exclusive now, must unwrap"),
         };
         m.close().unwrap();
+    }
+
+    #[test]
+    fn handle_exposes_per_shard_stats() {
+        use crate::alloc::object_cache::{pin_thread_vcpu, PER_BIN_CAP};
+        let d = TempDir::new("handle4");
+        let mut o = ManagerOptions::small_for_tests();
+        o.shards = 2;
+        let h = MetallHandle::new(MetallManager::create_with(d.join("s"), o).unwrap());
+        assert_eq!(h.num_shards(), 2);
+        // more allocations than a cache queue can hold, so each worker is
+        // guaranteed at least one cache miss — and the first miss takes a
+        // fresh chunk on the worker's own shard — even when both pinned
+        // vcpus share one cache slot (single-core machine)
+        let per_worker = PER_BIN_CAP + 16;
+        let workers: Vec<_> = (0..2usize)
+            .map(|t| {
+                let h = h.clone();
+                std::thread::spawn(move || {
+                    pin_thread_vcpu(Some(t));
+                    let offs: Vec<u64> = (0..per_worker)
+                        .map(|_| SegmentAlloc::allocate(&h, 32).unwrap())
+                        .collect();
+                    for off in offs {
+                        SegmentAlloc::deallocate(&h, off).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+        let (totals, shards) = h.stats_with_shards();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(totals.allocs, 2 * per_worker as u64);
+        assert_eq!(totals.fast_claims, shards.iter().map(|s| s.fast_claims).sum());
+        // both shards took at least one fresh chunk: the workers were
+        // homed on different shards
+        assert!(shards.iter().all(|s| s.fresh_chunks >= 1), "{shards:?}");
+        h.try_close().unwrap();
     }
 
     #[test]

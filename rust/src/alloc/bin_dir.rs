@@ -1,19 +1,154 @@
-//! Bin directory (paper §4.3.2): for each internal allocation size, the
-//! set of *non-full* chunks (LIFO) plus the slot bitsets of every chunk
-//! currently assigned to that bin. One instance of [`BinData`] sits
-//! behind one `RwLock` in the manager (§4.5.1: "a mutex object per bin"),
-//! so different allocation sizes proceed concurrently — and, since the
-//! bitsets claim slots with lock-free CAS ([`MlBitset`]), *same*-bin
-//! allocations proceed concurrently too, under the shared (read) side of
-//! the lock via [`BinData::try_claim`] / [`BinData::try_claim_batch`].
+//! Bin directory (paper §4.3.2), **sharded**: for each internal
+//! allocation size, the set of *non-full* chunks (LIFO) plus the slot
+//! bitsets of every chunk currently assigned to that bin. The manager
+//! owns N [`AllocShard`]s; each shard holds its own `RwLock<BinData>` per
+//! size class over the chunks that shard took from the chunk directory,
+//! so the paper's two serialization points (registering a fresh chunk,
+//! releasing an emptied chunk) are contended per shard, not per manager —
+//! llfree-style per-core trees flattened to per-shard LIFOs.
 //!
-//! The exclusive (write) side is reserved for the paper's two
-//! serialization points — registering a fresh chunk and releasing an
-//! emptied chunk — plus frees and structural healing of the LIFO.
+//! Within one `BinData` the concurrency model is unchanged from the
+//! unsharded design: bitsets claim slots with lock-free CAS
+//! ([`MlBitset`]) under the shared (read) side of the lock via
+//! [`BinData::try_claim`] / [`BinData::try_claim_batch`]; the exclusive
+//! (write) side is reserved for the serialization points, frees, and
+//! structural healing of the LIFO.
+//!
+//! Cross-shard frees (an object freed by a thread whose home shard is not
+//! the chunk's owner) never touch the foreign shard's bin locks: they are
+//! parked in the owner's [`AllocShard::remote_free`] queue and drained by
+//! the owner the next time it is at a serialization point anyway.
+//!
+//! [`ShardMap`] assigns threads to shards by virtual CPU
+//! ([`super::object_cache::current_vcpu`]); the persistent image is
+//! shard-agnostic — [`serialize_merged_into`] writes the union of the
+//! per-shard bitsets in the exact byte layout of an unsharded bin.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
 
 use crate::alloc::mlbitset::MlBitset;
+use crate::alloc::object_cache::current_vcpu;
+
+/// Maps calling threads and recovered chunks to shards.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardMap {
+    nshards: usize,
+}
+
+impl ShardMap {
+    pub fn new(nshards: usize) -> Self {
+        Self { nshards: nshards.max(1) }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.nshards
+    }
+
+    /// Home shard of the calling thread (CPU-affine; stable under
+    /// [`super::object_cache::pin_thread_vcpu`]).
+    #[inline]
+    pub fn home_shard(&self) -> usize {
+        self.shard_of_vcpu(current_vcpu())
+    }
+
+    #[inline]
+    pub fn shard_of_vcpu(&self, vcpu: usize) -> usize {
+        vcpu % self.nshards
+    }
+
+    /// Deterministic shard of a recovered chunk: a store written with N
+    /// shards reopens with M shards by re-dealing every small chunk as
+    /// `chunk % M` (must match `ChunkDirectory::set_shards`).
+    #[inline]
+    pub fn recovery_shard_of_chunk(&self, chunk: u32) -> usize {
+        chunk as usize % self.nshards
+    }
+}
+
+/// Per-shard contention counters (DRAM-only instrumentation).
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// Slots claimed through the lock-free (shared lock + CAS) path.
+    pub fast_claims: AtomicU64,
+    /// Fresh chunks registered (serialization point #1).
+    pub fresh_chunks: AtomicU64,
+    /// Emptied chunks released (serialization point #2).
+    pub freed_chunks: AtomicU64,
+    /// Slots parked on this shard's remote-free queue by other shards.
+    pub remote_frees: AtomicU64,
+    /// Slots drained from the remote-free queue by this shard.
+    pub remote_drained: AtomicU64,
+    /// Exclusive (write) bin-lock acquisitions — the contention signal.
+    pub exclusive_acquires: AtomicU64,
+}
+
+/// Snapshot of [`ShardStats`] for one shard.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStatsSnapshot {
+    pub shard: usize,
+    pub fast_claims: u64,
+    pub fresh_chunks: u64,
+    pub freed_chunks: u64,
+    pub remote_frees: u64,
+    pub remote_drained: u64,
+    pub exclusive_acquires: u64,
+}
+
+/// One shard of the bin directory: per-size-class non-full-chunk LIFOs
+/// over the chunks this shard owns, a queue of cross-shard frees parked
+/// for it, and its contention counters.
+pub struct AllocShard {
+    /// One [`BinData`] per size class (same indexing as the unsharded
+    /// design), holding only this shard's chunks.
+    pub bins: Vec<RwLock<BinData>>,
+    /// Cross-shard frees parked for this shard as `(bin, offset)` pairs;
+    /// pushed by foreign threads without touching `bins`, drained by this
+    /// shard at its serialization points.
+    pub remote_free: Mutex<Vec<(u32, u64)>>,
+    pub stats: ShardStats,
+}
+
+impl AllocShard {
+    pub fn new(num_bins: usize) -> Self {
+        Self {
+            bins: (0..num_bins).map(|_| RwLock::new(BinData::new())).collect(),
+            remote_free: Mutex::new(Vec::new()),
+            stats: ShardStats::default(),
+        }
+    }
+
+    pub fn stats_snapshot(&self, shard: usize) -> ShardStatsSnapshot {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        ShardStatsSnapshot {
+            shard,
+            fast_claims: ld(&self.stats.fast_claims),
+            fresh_chunks: ld(&self.stats.fresh_chunks),
+            freed_chunks: ld(&self.stats.freed_chunks),
+            remote_frees: ld(&self.stats.remote_frees),
+            remote_drained: ld(&self.stats.remote_drained),
+            exclusive_acquires: ld(&self.stats.exclusive_acquires),
+        }
+    }
+}
+
+/// Serialize the union of per-shard [`BinData`] of one bin in the exact
+/// byte layout [`BinData::serialize_into`] produces for an unsharded bin
+/// (chunk ids sorted ascending) — the persistent format does not know the
+/// shard count.
+pub fn serialize_merged_into(parts: &[&BinData], out: &mut Vec<u8>) {
+    let mut ids: Vec<(u32, &MlBitset)> = parts
+        .iter()
+        .flat_map(|p| p.bitsets.iter().map(|(&id, bs)| (id, bs)))
+        .collect();
+    ids.sort_unstable_by_key(|&(id, _)| id);
+    out.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+    for (id, bs) in ids {
+        out.extend_from_slice(&id.to_le_bytes());
+        bs.serialize_into(out);
+    }
+}
 
 /// Non-full chunk LIFO + per-chunk slot bitsets for one bin.
 #[derive(Clone, Debug, Default)]
@@ -110,6 +245,24 @@ impl BinData {
         }
         self.bitsets.insert(chunk, bs);
         slot
+    }
+
+    /// Adopt a chunk with an existing bitset (recovery split path: the
+    /// manager deals deserialized chunks out to their shards). Call in
+    /// ascending chunk-id order to reproduce the deserialized LIFO order.
+    pub fn insert_chunk(&mut self, chunk: u32, bs: MlBitset) {
+        if !bs.is_full() {
+            self.nonfull.push(chunk);
+        }
+        self.bitsets.insert(chunk, bs);
+    }
+
+    /// Tear down into `(chunk, bitset)` pairs sorted by chunk id
+    /// (recovery split path).
+    pub fn into_chunks(self) -> Vec<(u32, MlBitset)> {
+        let mut v: Vec<(u32, MlBitset)> = self.bitsets.into_iter().collect();
+        v.sort_unstable_by_key(|&(id, _)| id);
+        v
     }
 
     /// Free a slot. Returns `true` when the chunk became completely empty
@@ -273,6 +426,87 @@ mod tests {
         // both now full except one slot in chunk 1
         assert_eq!(b.try_claim(), Some((1, 3)));
         assert_eq!(b.try_claim(), None);
+    }
+
+    #[test]
+    fn merged_serialization_matches_unsharded_layout() {
+        // one bin split over two shards must serialize byte-identically to
+        // the same chunks living in a single BinData
+        let mut whole = BinData::new();
+        whole.add_chunk_and_alloc(2, 4);
+        whole.add_chunk_and_alloc(5, 4);
+        whole.add_chunk_and_alloc(9, 4);
+        let mut part_a = BinData::new();
+        part_a.add_chunk_and_alloc(5, 4);
+        let mut part_b = BinData::new();
+        part_b.add_chunk_and_alloc(9, 4);
+        part_b.add_chunk_and_alloc(2, 4);
+        let mut want = Vec::new();
+        whole.serialize_into(&mut want);
+        let mut got = Vec::new();
+        serialize_merged_into(&[&part_a, &part_b], &mut got);
+        assert_eq!(got, want);
+        // and a single part is the identity
+        let mut solo = Vec::new();
+        serialize_merged_into(&[&whole], &mut solo);
+        assert_eq!(solo, want);
+    }
+
+    #[test]
+    fn split_and_merge_roundtrip() {
+        let mut b = BinData::new();
+        b.add_chunk_and_alloc(0, 2);
+        b.add_chunk_and_alloc(1, 2);
+        b.alloc_slot(); // fills chunk 1
+        b.add_chunk_and_alloc(2, 2);
+        let mut want = Vec::new();
+        b.serialize_into(&mut want);
+        // deal chunks to 2 shards by chunk % 2 (the recovery assignment)
+        let mut shards = vec![BinData::new(), BinData::new()];
+        for (id, bs) in b.into_chunks() {
+            shards[id as usize % 2].insert_chunk(id, bs);
+        }
+        assert_eq!(shards[0].used_slots(), 2); // chunks 0, 2
+        assert_eq!(shards[1].used_slots(), 2); // chunk 1 (full)
+        // shard 1's only chunk is full: no claims there
+        assert_eq!(shards[1].try_claim(), None);
+        assert_eq!(shards[0].try_claim(), Some((2, 1)));
+        assert!(!shards[0].free_slot(2, 1));
+        let mut got = Vec::new();
+        serialize_merged_into(&[&shards[0], &shards[1]], &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn shard_map_is_deterministic() {
+        let m = ShardMap::new(4);
+        assert_eq!(m.nshards(), 4);
+        for vcpu in 0..16 {
+            assert_eq!(m.shard_of_vcpu(vcpu), vcpu % 4);
+        }
+        for chunk in 0..16u32 {
+            assert_eq!(m.recovery_shard_of_chunk(chunk), chunk as usize % 4);
+        }
+        crate::alloc::object_cache::pin_thread_vcpu(Some(7));
+        assert_eq!(m.home_shard(), 3);
+        crate::alloc::object_cache::pin_thread_vcpu(None);
+        assert!(m.home_shard() < 4);
+        // zero normalizes to one shard
+        assert_eq!(ShardMap::new(0).nshards(), 1);
+    }
+
+    #[test]
+    fn alloc_shard_snapshot_reads_counters() {
+        let s = AllocShard::new(3);
+        assert_eq!(s.bins.len(), 3);
+        s.stats.fast_claims.fetch_add(5, Ordering::Relaxed);
+        s.stats.remote_frees.fetch_add(2, Ordering::Relaxed);
+        s.remote_free.lock().unwrap().push((1, 64));
+        let snap = s.stats_snapshot(2);
+        assert_eq!(snap.shard, 2);
+        assert_eq!(snap.fast_claims, 5);
+        assert_eq!(snap.remote_frees, 2);
+        assert_eq!(snap.exclusive_acquires, 0);
     }
 
     #[test]

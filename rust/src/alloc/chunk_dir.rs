@@ -10,6 +10,28 @@
 //!
 //! "Metall sequentially probes the array when it needs to find empty
 //! chunk(s)."
+//!
+//! ## Sharding (in-DRAM only)
+//!
+//! Alongside the persistent `entries` array the directory keeps two
+//! DRAM-only structures that are **never serialized** (the on-disk format
+//! is unchanged for every shard count):
+//!
+//! - `owners` — the allocator shard that owns each small chunk. Set when a
+//!   shard takes a fresh chunk; rebuilt deterministically on open as
+//!   `chunk % nshards` ([`Self::set_shards`]), so a datastore written with
+//!   N shards reopens correctly with M ≠ N.
+//! - `pools` — per-shard min-heaps of recently freed chunk ids, the
+//!   shard's slice of the free-chunk pool. They are *hints*: a pooled id is
+//!   re-validated against `entries` under the directory lock before reuse
+//!   (a large allocation's sequential probe may have claimed it in the
+//!   meantime), so no chunk can be handed out twice. With one shard the
+//!   pools are bypassed entirely and every take goes through the same
+//!   lowest-first sequential probe as the unsharded allocator — that is
+//!   what keeps shard=1 byte-identical on disk.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Per-chunk state tag.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,15 +45,73 @@ pub enum ChunkKind {
     LargeBody,
 }
 
-/// The chunk directory: a growable array of [`ChunkKind`].
-#[derive(Clone, Debug, Default)]
+/// The chunk directory: a growable array of [`ChunkKind`] plus the
+/// DRAM-only shard-ownership map and per-shard free pools (module docs).
+#[derive(Clone, Debug)]
 pub struct ChunkDirectory {
     entries: Vec<ChunkKind>,
+    /// Owning shard per chunk (meaningful for `Small` chunks). Same length
+    /// as `entries`; not serialized.
+    owners: Vec<u32>,
+    /// Per-shard min-heaps of freed chunk ids (validated hints). Length is
+    /// the shard count; not serialized.
+    pools: Vec<BinaryHeap<Reverse<u32>>>,
+}
+
+impl Default for ChunkDirectory {
+    fn default() -> Self {
+        Self::with_shards(1)
+    }
 }
 
 impl ChunkDirectory {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_shards(1)
+    }
+
+    pub fn with_shards(nshards: usize) -> Self {
+        Self {
+            entries: Vec::new(),
+            owners: Vec::new(),
+            pools: (0..nshards.max(1)).map(|_| BinaryHeap::new()).collect(),
+        }
+    }
+
+    /// Re-key the DRAM-only shard state for `nshards` shards: ownership is
+    /// reassigned deterministically (`chunk % nshards`, the same function
+    /// the manager uses to split the bin bitsets on open) and the free
+    /// pools are rebuilt from the current `Free` entries.
+    pub fn set_shards(&mut self, nshards: usize) {
+        let n = nshards.max(1);
+        self.pools = (0..n).map(|_| BinaryHeap::new()).collect();
+        for (i, o) in self.owners.iter_mut().enumerate() {
+            *o = (i % n) as u32;
+        }
+        if n > 1 {
+            for (i, e) in self.entries.iter().enumerate() {
+                if *e == ChunkKind::Free {
+                    self.pools[i % n].push(Reverse(i as u32));
+                }
+            }
+        }
+    }
+
+    pub fn nshards(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Owning shard of `chunk` (meaningful while the chunk is `Small`).
+    pub fn owner(&self, chunk: u32) -> u32 {
+        self.owners[chunk as usize]
+    }
+
+    /// Keep `owners` in lockstep after `entries` grew; new chunks default
+    /// to the deterministic recovery assignment until a shard claims them.
+    fn sync_owners(&mut self) {
+        let n = self.pools.len();
+        while self.owners.len() < self.entries.len() {
+            self.owners.push((self.owners.len() % n) as u32);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -47,10 +127,29 @@ impl ChunkDirectory {
     }
 
     /// Find the first free chunk (sequential probe), growing the
-    /// directory if none exists. Marks it `Small { bin }`.
+    /// directory if none exists. Marks it `Small { bin }` owned by shard 0.
     pub fn take_small_chunk(&mut self, bin: u32) -> u32 {
+        self.take_small_chunk_on(bin, 0)
+    }
+
+    /// Take a free chunk for `shard`, preferring the shard's own pool of
+    /// previously freed chunks (validated hints, lowest id first) and
+    /// falling back to the global sequential probe. Single-shard
+    /// directories always probe, matching the unsharded allocator exactly.
+    pub fn take_small_chunk_on(&mut self, bin: u32, shard: u32) -> u32 {
+        if self.pools.len() > 1 {
+            while let Some(Reverse(c)) = self.pools[shard as usize].pop() {
+                if self.entries[c as usize] == ChunkKind::Free {
+                    self.entries[c as usize] = ChunkKind::Small { bin };
+                    self.owners[c as usize] = shard;
+                    return c;
+                }
+            }
+        }
         let idx = self.find_free_run(1);
+        self.sync_owners();
         self.entries[idx as usize] = ChunkKind::Small { bin };
+        self.owners[idx as usize] = shard;
         idx
     }
 
@@ -58,6 +157,7 @@ impl ChunkDirectory {
     /// mark them as one large allocation. Returns the head index.
     pub fn take_large(&mut self, n: u32) -> u32 {
         let head = self.find_free_run(n as usize);
+        self.sync_owners();
         self.entries[head as usize] = ChunkKind::LargeHead { nchunks: n };
         for i in 1..n {
             self.entries[(head + i) as usize] = ChunkKind::LargeBody;
@@ -86,10 +186,21 @@ impl ChunkDirectory {
         start as u32
     }
 
-    /// Release a small chunk back to free.
+    /// Release a small chunk back to free (pooled under its recorded
+    /// owner).
     pub fn free_small_chunk(&mut self, chunk: u32) {
+        let owner = self.owners.get(chunk as usize).copied().unwrap_or(0);
+        self.free_small_chunk_on(chunk, owner);
+    }
+
+    /// Release a small chunk back to free, remembering it in `shard`'s
+    /// pool for locality on the next take.
+    pub fn free_small_chunk_on(&mut self, chunk: u32, shard: u32) {
         debug_assert!(matches!(self.entries[chunk as usize], ChunkKind::Small { .. }));
         self.entries[chunk as usize] = ChunkKind::Free;
+        if self.pools.len() > 1 {
+            self.pools[shard as usize].push(Reverse(chunk));
+        }
     }
 
     /// Release a large allocation; returns the number of chunks freed.
@@ -162,7 +273,9 @@ impl ChunkDirectory {
             entries.push(e);
         }
         // structural validation: large bodies must follow their head
-        let dir = Self { entries };
+        let mut dir = Self::with_shards(1);
+        dir.entries = entries;
+        dir.sync_owners();
         dir.validate().then_some(())?;
         Some((dir, pos))
     }
@@ -265,6 +378,65 @@ mod tests {
         let (de, used) = ChunkDirectory::deserialize_from(&buf).unwrap();
         assert_eq!(used, buf.len());
         assert_eq!(de.entries, d.entries);
+    }
+
+    #[test]
+    fn sharded_take_records_owner_and_pools_reuse() {
+        let mut d = ChunkDirectory::with_shards(2);
+        let a = d.take_small_chunk_on(3, 0);
+        let b = d.take_small_chunk_on(3, 1);
+        assert_eq!((a, b), (0, 1));
+        assert_eq!((d.owner(a), d.owner(b)), (0, 1));
+        // shard 1 frees its chunk; the next take on shard 1 reuses it even
+        // though shard 0's probe would also find it
+        d.free_small_chunk_on(b, 1);
+        assert_eq!(d.take_small_chunk_on(7, 1), b);
+        assert_eq!(d.owner(b), 1);
+    }
+
+    #[test]
+    fn stale_pool_entry_is_skipped() {
+        let mut d = ChunkDirectory::with_shards(2);
+        let c = d.take_small_chunk_on(0, 1);
+        d.free_small_chunk_on(c, 1);
+        // a large allocation's sequential probe claims the pooled chunk
+        assert_eq!(d.take_large(1), c);
+        // shard 1's pool hint is now stale and must be skipped
+        let next = d.take_small_chunk_on(0, 1);
+        assert_ne!(next, c);
+        assert_eq!(d.kind(c), ChunkKind::LargeHead { nchunks: 1 });
+        assert_eq!(d.kind(next), ChunkKind::Small { bin: 0 });
+    }
+
+    #[test]
+    fn set_shards_reassigns_owners_deterministically() {
+        let mut d = ChunkDirectory::with_shards(4);
+        for i in 0..6u32 {
+            d.take_small_chunk_on(0, i % 4);
+        }
+        d.free_small_chunk_on(4, 0);
+        // reopen with a different shard count: chunk % nshards
+        d.set_shards(2);
+        assert_eq!(d.nshards(), 2);
+        for i in 0..6u32 {
+            assert_eq!(d.owner(i), i % 2, "chunk {i}");
+        }
+        // the rebuilt pool serves the free chunk to its recovery shard
+        assert_eq!(d.take_small_chunk_on(1, 0), 4);
+    }
+
+    #[test]
+    fn single_shard_matches_probe_order() {
+        // with one shard the pool is bypassed: frees then takes follow the
+        // exact lowest-first probe order of the unsharded directory
+        let mut d = ChunkDirectory::new();
+        for _ in 0..4 {
+            d.take_small_chunk(0);
+        }
+        d.free_small_chunk(2);
+        d.free_small_chunk(0);
+        assert_eq!(d.take_small_chunk(0), 0, "lowest free id first");
+        assert_eq!(d.take_small_chunk(0), 2);
     }
 
     #[test]

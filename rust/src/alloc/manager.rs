@@ -15,35 +15,53 @@
 //!   segment/chunk-NNNNNN   application data backing files
 //! ```
 //!
-//! ## Concurrency model (§4.5.1, relaxed with a lock-free fast path)
+//! ## Concurrency model (§4.5.1, sharded with a lock-free fast path)
 //!
-//! One `RwLock` per bin, one mutex for the chunk directory, one for the
-//! name directory. The small-allocation hot path is **lock-free with
-//! respect to other allocators of the same bin**:
+//! The bin directory is split into N [`AllocShard`]s (option
+//! [`ManagerOptions::shards`]): each shard holds one `RwLock<BinData>`
+//! per size class over the chunks it owns, a remote-free queue, and
+//! contention counters. A thread's home shard is its virtual CPU modulo
+//! N ([`crate::alloc::bin_dir::ShardMap`]); the per-core object caches
+//! key off the same virtual CPU, binding each cache slot to its shard.
+//! The small-allocation hot path:
 //!
 //! 1. Per-core object cache pop (no directory locks at all).
-//! 2. On a cache miss, the *shared* (read) side of the bin lock is taken
-//!    and a word-level CAS claim runs against an active chunk's atomic
-//!    bitset ([`crate::alloc::mlbitset::MlBitset`]). The claim grabs a
-//!    batch ([`crate::alloc::object_cache::REFILL_BATCH`]) in one CAS and
-//!    parks the surplus in this core's cache, so same-bin allocations
-//!    from different threads proceed concurrently — readers of an
-//!    `RwLock` do not serialize.
-//! 3. Only when every active chunk is full does a thread take the
-//!    *exclusive* (write) side — the paper's serialization point #1
-//!    (registering a fresh chunk, with the chunk-directory mutex nested
-//!    inside). Serialization point #2 (releasing an emptied chunk) also
-//!    runs under the write lock, on the free/spill path.
+//! 2. On a cache miss, the *shared* (read) side of the home shard's bin
+//!    lock is taken and a word-level CAS claim runs against an active
+//!    chunk's atomic bitset ([`crate::alloc::mlbitset::MlBitset`]). The
+//!    claim grabs a batch ([`crate::alloc::object_cache::REFILL_BATCH`])
+//!    in one CAS and parks the surplus in this core's cache, so same-bin
+//!    allocations from different threads proceed concurrently — and
+//!    threads on different shards touch disjoint locks entirely.
+//! 3. Only when every active chunk of the home shard is full does a
+//!    thread take the *exclusive* (write) side — the paper's
+//!    serialization point #1 (registering a fresh chunk, with the chunk
+//!    directory nested inside), now contended per shard rather than per
+//!    manager. Serialization point #2 (releasing an emptied chunk) also
+//!    runs under the owner shard's write lock, on the free/spill path.
 //!
-//! Frees always go through the per-core cache; only cache spills and the
-//! close/sync drain touch the bin write lock, batched. Nesting order is
-//! always bin → chunks; the chunk lock never nests inside another bin.
+//! Frees always go through the per-core cache; spills are routed to the
+//! owning shard — home-shard slots under the exclusive bin lock, foreign
+//! slots onto the owner's remote-free queue (a plain mutex push; the
+//! foreign shard's bin locks are never touched on the hot path). Each
+//! shard drains its queue when it next reaches a serialization point,
+//! and `sync`/`close` drain everything. Nesting order is always bin →
+//! chunks; the chunk lock never nests inside a bin lock.
+//!
+//! Shard count is DRAM-only: the persistent format is identical for
+//! every N, a store written with N shards reopens with M ≠ N (ownership
+//! is re-dealt as `chunk % M`), and N = 1 reproduces the unsharded
+//! allocator's on-disk layout bit-for-bit.
 
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 
-use crate::alloc::bin_dir::BinData;
+use crate::alloc::bin_dir::{
+    serialize_merged_into, AllocShard, BinData, ShardMap, ShardStatsSnapshot,
+};
+use crate::alloc::object_cache::current_vcpu;
 use crate::alloc::chunk_dir::{ChunkDirectory, ChunkKind};
 use crate::alloc::name_dir::{type_fingerprint, NameDirectory, NamedEntry};
 use crate::alloc::object_cache::{ObjectCache, REFILL_BATCH};
@@ -77,6 +95,11 @@ pub struct ManagerOptions {
     pub free_file_space: bool,
     /// Parallel per-file msync on sync (§5.2).
     pub parallel_sync: bool,
+    /// Allocator shard count (DRAM-only; `0` = auto:
+    /// `min(available_parallelism, 4)`). `1` reproduces the unsharded
+    /// allocator's on-disk layout bit-for-bit; every count reads every
+    /// other count's datastore — the persistent format does not change.
+    pub shards: usize,
 }
 
 impl Default for ManagerOptions {
@@ -89,19 +112,29 @@ impl Default for ManagerOptions {
             populate: false,
             free_file_space: true,
             parallel_sync: true,
+            shards: 0,
         }
     }
 }
 
 impl ManagerOptions {
-    /// Small geometry for tests: 64 KiB chunks, 1 MiB files.
+    /// Small geometry for tests: 64 KiB chunks, 1 MiB files. Single shard
+    /// for deterministic slot placement.
     pub fn small_for_tests() -> Self {
         Self {
             chunk_size: 64 << 10,
             file_size: 1 << 20,
             vm_reserve: 1 << 30,
+            shards: 1,
             ..Self::default()
         }
+    }
+
+    fn resolved_shards(&self) -> usize {
+        if self.shards > 0 {
+            return self.shards;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
     }
 
     fn segment_options(&self, read_only: bool) -> SegmentOptions {
@@ -120,21 +153,25 @@ impl ManagerOptions {
     }
 }
 
-/// Running counters (perf instrumentation; see EXPERIMENTS.md §Perf).
+/// Running manager-wide counters (perf instrumentation; see
+/// EXPERIMENTS.md §Perf). Small-object path counters (`fast_claims`,
+/// `fresh_chunks`, small-chunk releases) live in the per-shard
+/// [`crate::alloc::bin_dir::ShardStats`] and are aggregated into
+/// [`StatsSnapshot`] by [`MetallManager::stats`].
 #[derive(Default)]
 pub struct AllocStats {
     pub allocs: AtomicU64,
     pub deallocs: AtomicU64,
     pub cache_hits: AtomicU64,
-    /// Slots claimed through the lock-free (shared bin lock + CAS) path,
-    /// including batch-refill surplus parked in the object cache.
-    pub fast_claims: AtomicU64,
-    pub fresh_chunks: AtomicU64,
-    pub freed_chunks: AtomicU64,
+    /// Chunks freed through the *large*-object path (small-chunk releases
+    /// are counted per shard).
+    pub freed_large_chunks: AtomicU64,
     pub large_allocs: AtomicU64,
 }
 
-/// Snapshot of [`AllocStats`].
+/// Snapshot of the allocator counters: manager-wide totals with the
+/// per-shard counters aggregated in (same field set as before sharding —
+/// consumers of the totals are unaffected by the shard count).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StatsSnapshot {
     pub allocs: u64,
@@ -144,6 +181,14 @@ pub struct StatsSnapshot {
     pub fresh_chunks: u64,
     pub freed_chunks: u64,
     pub large_allocs: u64,
+}
+
+/// Batch error policy for the free paths: process every slot (a partial
+/// failure must not leak the rest of the batch), report the first error.
+fn keep_first_err(result: &mut Result<()>, r: Result<()>) {
+    if result.is_ok() {
+        *result = r;
+    }
 }
 
 /// Marker for types that may live inside the persistent segment: plain
@@ -169,8 +214,12 @@ pub struct MetallManager {
     opts: ManagerOptions,
     read_only: bool,
     segment: SegmentStorage,
-    chunks: Mutex<ChunkDirectory>,
-    bins: Vec<RwLock<BinData>>,
+    /// Read-mostly: `kind`/`owner` lookups take the shared side; chunk
+    /// state changes (the rare serialization points) take the exclusive
+    /// side.
+    chunks: RwLock<ChunkDirectory>,
+    shards: Vec<AllocShard>,
+    shard_map: ShardMap,
     cache: ObjectCache,
     names: Mutex<NameDirectory>,
     bs: Option<Mutex<BsMsync>>,
@@ -200,10 +249,12 @@ impl MetallManager {
         }
         let segment = SegmentStorage::create(dir.join("segment"), opts.segment_options(false))?;
         let nb = num_bins(opts.chunk_size);
+        let nshards = opts.resolved_shards();
         let mgr = Self {
-            bins: (0..nb).map(|_| RwLock::new(BinData::new())).collect(),
+            shards: (0..nshards).map(|_| AllocShard::new(nb)).collect(),
+            shard_map: ShardMap::new(nshards),
             cache: ObjectCache::new(nb),
-            chunks: Mutex::new(ChunkDirectory::new()),
+            chunks: RwLock::new(ChunkDirectory::with_shards(nshards)),
             names: Mutex::new(NameDirectory::new()),
             bs: opts.private_mode.then(|| Mutex::new(BsMsync::new())),
             segment,
@@ -256,11 +307,25 @@ impl MetallManager {
         }
         let segment = SegmentStorage::open(dir.join("segment"), opts.segment_options(read_only))?;
         let nb = num_bins(opts.chunk_size);
-        let (chunks, bins, names) = Self::load_management(&dir, nb)?;
+        let (mut chunks, bins, names) = Self::load_management(&dir, nb)?;
+        // Rebuild the DRAM-only shard state: ownership is re-dealt
+        // deterministically (`chunk % nshards`), so any shard count
+        // reopens any store.
+        let nshards = opts.resolved_shards();
+        chunks.set_shards(nshards);
+        let shard_map = ShardMap::new(nshards);
+        let shards: Vec<AllocShard> = (0..nshards).map(|_| AllocShard::new(nb)).collect();
+        for (bin, data) in bins.into_iter().enumerate() {
+            for (chunk, bs) in data.into_chunks() {
+                let s = shard_map.recovery_shard_of_chunk(chunk);
+                shards[s].bins[bin].write().unwrap().insert_chunk(chunk, bs);
+            }
+        }
         let mgr = Self {
-            bins: bins.into_iter().map(RwLock::new).collect(),
+            shards,
+            shard_map,
             cache: ObjectCache::new(nb),
-            chunks: Mutex::new(chunks),
+            chunks: RwLock::new(chunks),
             names: Mutex::new(names),
             bs: (opts.private_mode && !read_only).then(|| Mutex::new(BsMsync::new())),
             segment,
@@ -314,14 +379,21 @@ impl MetallManager {
             }
             None => self.segment.sync(self.opts.parallel_sync)?,
         }
-        // 2. management data (atomic tmp+rename)
+        // 2. management data (atomic tmp+rename). The shard count is
+        // DRAM-only: each bin is written as the merged union of its
+        // per-shard parts, byte-identical to an unsharded bin.
+        let nb = self.num_bins();
         let mut buf = Vec::new();
         buf.extend_from_slice(MGMT_MAGIC);
-        buf.extend_from_slice(&(self.bins.len() as u32).to_le_bytes());
-        self.chunks.lock().unwrap().serialize_into(&mut buf);
-        for b in &self.bins {
-            // exclusive: quiesce in-flight shared-path claims per bin
-            b.write().unwrap().serialize_into(&mut buf);
+        buf.extend_from_slice(&(nb as u32).to_le_bytes());
+        self.chunks.read().unwrap().serialize_into(&mut buf);
+        for bin in 0..nb {
+            // exclusive on this bin in every shard: quiesce in-flight
+            // shared-path claims (lock order shard 0..N, consistently)
+            let guards: Vec<_> =
+                self.shards.iter().map(|s| s.bins[bin].write().unwrap()).collect();
+            let parts: Vec<&BinData> = guards.iter().map(|g| &**g).collect();
+            serialize_merged_into(&parts, &mut buf);
         }
         self.names.lock().unwrap().serialize_into(&mut buf);
         let tmp = self.dir.join("management.bin.tmp");
@@ -366,33 +438,45 @@ impl MetallManager {
         Ok((chunks, bins, names))
     }
 
-    /// Cross-check chunk directory against bin data (run on open and by
-    /// `doctor`). Works on a snapshot of the chunk directory so the
-    /// chunk mutex is never held while bin locks are taken (the alloc
-    /// path nests bin → chunks; holding them in the opposite order here
-    /// could deadlock a live store).
+    /// Cross-check chunk directory against the sharded bin data (run on
+    /// open and by `doctor`). Works on a snapshot of the chunk directory
+    /// so the chunk lock is never held while bin locks are taken (the
+    /// alloc path nests bin → chunks; holding them in the opposite order
+    /// here could deadlock a live store).
     fn validate_consistency(&self) -> Result<()> {
-        let chunks = self.chunks.lock().unwrap().clone();
+        let chunks = self.chunks.read().unwrap().clone();
         let err = |m: String| Error::Datastore(format!("inconsistent management data: {m}"));
         for (id, kind) in chunks.iter() {
             if let ChunkKind::Small { bin } = kind {
-                let b = self
+                let owner = chunks.owner(id) as usize;
+                let sh = self
+                    .shards
+                    .get(owner)
+                    .ok_or_else(|| err(format!("chunk {id} has invalid shard {owner}")))?;
+                let b = sh
                     .bins
                     .get(bin as usize)
                     .ok_or_else(|| err(format!("chunk {id} has invalid bin {bin}")))?;
                 if b.read().unwrap().bitset(id).is_none() {
-                    return Err(err(format!("chunk {id} missing bitset in bin {bin}")));
+                    return Err(err(format!(
+                        "chunk {id} missing bitset in shard {owner} bin {bin}"
+                    )));
                 }
             }
         }
-        for (bin, b) in self.bins.iter().enumerate() {
-            for cid in b.read().unwrap().chunk_ids() {
-                match chunks.kind(cid) {
-                    ChunkKind::Small { bin: kb } if kb as usize == bin => {}
-                    k => {
-                        return Err(err(format!(
-                            "bin {bin} owns chunk {cid} but chunk dir says {k:?}"
-                        )))
+        for (s, sh) in self.shards.iter().enumerate() {
+            for (bin, b) in sh.bins.iter().enumerate() {
+                for cid in b.read().unwrap().chunk_ids() {
+                    match chunks.kind(cid) {
+                        ChunkKind::Small { bin: kb }
+                            if kb as usize == bin && chunks.owner(cid) as usize == s => {}
+                        k => {
+                            return Err(err(format!(
+                                "shard {s} bin {bin} owns chunk {cid} but chunk dir says \
+                                 {k:?} owned by shard {}",
+                                chunks.owner(cid)
+                            )))
+                        }
                     }
                 }
             }
@@ -444,21 +528,39 @@ impl MetallManager {
         &self.segment
     }
 
+    /// Manager-wide totals with the per-shard counters aggregated in (the
+    /// shard count never changes the meaning of a total).
     pub fn stats(&self) -> StatsSnapshot {
+        let per_shard = self.shard_stats();
         StatsSnapshot {
             allocs: self.stats.allocs.load(Ordering::Relaxed),
             deallocs: self.stats.deallocs.load(Ordering::Relaxed),
             cache_hits: self.stats.cache_hits.load(Ordering::Relaxed),
-            fast_claims: self.stats.fast_claims.load(Ordering::Relaxed),
-            fresh_chunks: self.stats.fresh_chunks.load(Ordering::Relaxed),
-            freed_chunks: self.stats.freed_chunks.load(Ordering::Relaxed),
+            fast_claims: per_shard.iter().map(|s| s.fast_claims).sum(),
+            fresh_chunks: per_shard.iter().map(|s| s.fresh_chunks).sum(),
+            freed_chunks: self.stats.freed_large_chunks.load(Ordering::Relaxed)
+                + per_shard.iter().map(|s| s.freed_chunks).sum::<u64>(),
             large_allocs: self.stats.large_allocs.load(Ordering::Relaxed),
         }
     }
 
+    /// Per-shard contention counters.
+    pub fn shard_stats(&self) -> Vec<ShardStatsSnapshot> {
+        self.shards.iter().enumerate().map(|(i, s)| s.stats_snapshot(i)).collect()
+    }
+
+    /// Number of allocator shards (DRAM-only; see [`ManagerOptions::shards`]).
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn num_bins(&self) -> usize {
+        self.shards[0].bins.len()
+    }
+
     /// Occupied chunks × chunk size (VM-level usage).
     pub fn used_segment_bytes(&self) -> usize {
-        self.chunks.lock().unwrap().used_chunks() * self.opts.chunk_size
+        self.chunks.read().unwrap().used_chunks() * self.opts.chunk_size
     }
 
     // ----------------------------------------------------- allocation --
@@ -482,22 +584,27 @@ impl MetallManager {
             return self.allocate_large(size);
         }
         let bin = bin_of(size) as u32;
-        if let Some(off) = self.cache.pop(bin) {
+        // one virtual-CPU resolution drives both the cache slot and the
+        // home shard (the cache-slot ↔ shard binding)
+        let vcpu = current_vcpu();
+        if let Some(off) = self.cache.pop_at(self.cache.slot_for(vcpu), bin) {
             self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(off);
         }
-        // Fast path: shared bin lock + lock-free CAS claim in an active
-        // chunk; a word-level batch is taken and the surplus refills this
-        // core's object cache, so same-bin allocators never serialize
-        // while any active chunk has room.
+        let shard = self.shard_map.shard_of_vcpu(vcpu);
+        let sh = &self.shards[shard];
+        // Fast path: shared bin lock of the home shard + lock-free CAS
+        // claim in an active chunk; a word-level batch is taken and the
+        // surplus refills this core's object cache, so same-bin allocators
+        // never serialize while any active chunk of their shard has room.
         let claims = {
-            let b = self.bins[bin as usize].read().unwrap();
+            let b = sh.bins[bin as usize].read().unwrap();
             let mut claims: Vec<(u32, u32)> = Vec::with_capacity(REFILL_BATCH);
             b.try_claim_batch(REFILL_BATCH, &mut claims);
             claims
         };
         if let Some(&(chunk, slot)) = claims.first() {
-            self.stats.fast_claims.fetch_add(claims.len() as u64, Ordering::Relaxed);
+            sh.stats.fast_claims.fetch_add(claims.len() as u64, Ordering::Relaxed);
             let first = self.slot_offset(chunk, bin, slot);
             if claims.len() > 1 {
                 // reversed: the cache pops LIFO, so the lowest (first-fit)
@@ -507,37 +614,41 @@ impl MetallManager {
                     .rev()
                     .map(|&(c, s)| self.slot_offset(c, bin, s))
                     .collect();
-                let spill = self.cache.push_batch(bin, &extra);
+                let spill = self.cache.push_batch_at(self.cache.slot_for(vcpu), bin, &extra);
                 if !spill.is_empty() {
-                    // Read lock is already released — return_slots takes the
-                    // write lock. Best-effort: the allocation itself already
+                    // Read lock is already released — routing takes write
+                    // locks. Best-effort: the allocation itself already
                     // succeeded, and a spill failure (hole-punch I/O on an
                     // emptied chunk) must not turn it into a phantom error
                     // that leaks the whole claimed batch.
-                    let _ = self.return_slots(bin, &spill);
+                    let _ = self.route_frees(bin, &spill);
                 }
             }
             return Ok(first);
         }
-        // Slow path (serialization point #1): exclusive bin lock — heal
-        // the non-full LIFO, retry (another thread may have registered a
-        // chunk while we waited), else take a fresh chunk (bin → chunks
-        // lock order).
-        let mut b = self.bins[bin as usize].write().unwrap();
+        // Slow path (serialization point #1, per shard): drain frees other
+        // shards parked for us while we are here anyway, then exclusive
+        // bin lock — heal the non-full LIFO, retry (another thread may
+        // have registered a chunk while we waited), else take a fresh
+        // chunk (bin → chunks lock order). Drain errors are hole-punch
+        // I/O, not allocation failures.
+        let _ = self.drain_remote(shard);
+        sh.stats.exclusive_acquires.fetch_add(1, Ordering::Relaxed);
+        let mut b = sh.bins[bin as usize].write().unwrap();
         b.prune_full();
         if let Some((chunk, slot)) = b.alloc_slot() {
             return Ok(self.slot_offset(chunk, bin, slot));
         }
         let chunk = {
-            let mut chunks = self.chunks.lock().unwrap();
-            let chunk = chunks.take_small_chunk(bin);
+            let mut chunks = self.chunks.write().unwrap();
+            let chunk = chunks.take_small_chunk_on(bin, shard as u32);
             if let Err(e) = self.segment.extend_to((chunk as usize + 1) * cs) {
-                chunks.free_small_chunk(chunk);
+                chunks.free_small_chunk_on(chunk, shard as u32);
                 return Err(e);
             }
             chunk
         };
-        self.stats.fresh_chunks.fetch_add(1, Ordering::Relaxed);
+        sh.stats.fresh_chunks.fetch_add(1, Ordering::Relaxed);
         let slots = slots_per_chunk(bin as usize, cs) as u32;
         let slot = b.add_chunk_and_alloc(chunk, slots);
         Ok(self.slot_offset(chunk, bin, slot))
@@ -547,7 +658,7 @@ impl MetallManager {
         let cs = self.opts.chunk_size;
         let n = large_chunks(size, cs) as u32;
         self.stats.large_allocs.fetch_add(1, Ordering::Relaxed);
-        let mut chunks = self.chunks.lock().unwrap();
+        let mut chunks = self.chunks.write().unwrap();
         let head = chunks.take_large(n);
         if let Err(e) = self.segment.extend_to((head + n) as usize * cs) {
             chunks.free_large(head);
@@ -570,7 +681,7 @@ impl MetallManager {
         let cs = self.opts.chunk_size as u64;
         let chunk = (offset / cs) as u32;
         let kind = {
-            let chunks = self.chunks.lock().unwrap();
+            let chunks = self.chunks.read().unwrap();
             if (chunk as usize) >= chunks.len() {
                 return Err(Error::Alloc(format!("deallocate: offset {offset} out of range")));
             }
@@ -586,7 +697,7 @@ impl MetallManager {
                 }
                 let spill = self.cache.push(bin, offset);
                 if !spill.is_empty() {
-                    self.return_slots(bin, &spill)?;
+                    self.route_frees(bin, &spill)?;
                 }
                 Ok(())
             }
@@ -597,14 +708,14 @@ impl MetallManager {
                     )));
                 }
                 let n = {
-                    let mut chunks = self.chunks.lock().unwrap();
+                    let mut chunks = self.chunks.write().unwrap();
                     chunks.free_large(chunk)
                 };
                 // Large deallocations free physical + file space
                 // immediately (§4.1).
                 self.segment
                     .free_range(chunk as usize * cs as usize, n as usize * cs as usize)?;
-                self.stats.freed_chunks.fetch_add(n as u64, Ordering::Relaxed);
+                self.stats.freed_large_chunks.fetch_add(n as u64, Ordering::Relaxed);
                 Ok(())
             }
             ChunkKind::Free | ChunkKind::LargeBody => Err(Error::Alloc(format!(
@@ -619,12 +730,12 @@ impl MetallManager {
     pub fn usable_size(&self, offset: u64) -> Result<usize> {
         let cs = self.opts.chunk_size as u64;
         let chunk = (offset / cs) as u32;
-        let kind = {
-            let chunks = self.chunks.lock().unwrap();
+        let (kind, owner) = {
+            let chunks = self.chunks.read().unwrap();
             if (chunk as usize) >= chunks.len() {
                 return Err(Error::Alloc(format!("usable_size: offset {offset} out of range")));
             }
-            chunks.kind(chunk)
+            (chunks.kind(chunk), chunks.owner(chunk) as usize)
         };
         match kind {
             ChunkKind::Small { bin } => {
@@ -634,11 +745,15 @@ impl MetallManager {
                         "usable_size: offset {offset} not on a slot boundary"
                     )));
                 }
-                // the slot must be claimed in the bin bitset (live or
-                // parked in an object cache — both count as allocated);
-                // this rejects already-freed and never-allocated slots
+                // the slot must be claimed in the owning shard's bitset
+                // (live, parked in an object cache, or queued as a remote
+                // free — all count as allocated); this rejects
+                // already-freed and never-allocated slots
                 let slot = ((offset % cs) / class) as u32;
-                let used = self.bins[bin as usize].read().unwrap().is_slot_used(chunk, slot);
+                let used = self.shards[owner].bins[bin as usize]
+                    .read()
+                    .unwrap()
+                    .is_slot_used(chunk, slot);
                 if !used {
                     return Err(Error::Alloc(format!(
                         "usable_size: offset {offset} is not a live allocation"
@@ -690,13 +805,82 @@ impl MetallManager {
         Ok(new_off)
     }
 
-    /// Return freed slots to their bitsets (cache spill / close path).
-    /// Runs under the exclusive bin lock: chunk-empty detection and
-    /// release (serialization point #2) must not race shared-path claims.
-    fn return_slots(&self, bin: u32, offsets: &[u64]) -> Result<()> {
+    /// Route freed slots of one bin to their owning shards (cache spill
+    /// path): home-shard slots are returned under the exclusive bin lock
+    /// (serialization point #2), foreign slots are parked on the owner's
+    /// remote-free queue — a plain mutex push, never the foreign shard's
+    /// bin locks.
+    fn route_frees(&self, bin: u32, offsets: &[u64]) -> Result<()> {
+        if self.shards.len() == 1 {
+            return self.return_slots(0, bin, offsets);
+        }
+        let cs = self.opts.chunk_size as u64;
+        let home = self.shard_map.home_shard();
+        let mut mine: Vec<u64> = Vec::new();
+        let mut foreign: Vec<(usize, u64)> = Vec::new();
+        {
+            let chunks = self.chunks.read().unwrap();
+            for &off in offsets {
+                let owner = chunks.owner((off / cs) as u32) as usize;
+                if owner == home {
+                    mine.push(off);
+                } else {
+                    foreign.push((owner, off));
+                }
+            }
+        }
+        for &(owner, off) in &foreign {
+            let sh = &self.shards[owner];
+            sh.remote_free.lock().unwrap().push((bin, off));
+            sh.stats.remote_frees.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut result = Ok(());
+        if !mine.is_empty() {
+            keep_first_err(&mut result, self.return_slots(home, bin, &mine));
+            // we are at our own serialization point anyway: drain what
+            // other shards parked for us (no-op when the queue is empty)
+            keep_first_err(&mut result, self.drain_remote(home));
+        }
+        result
+    }
+
+    /// Drain the cross-shard frees parked for `shard` back into its
+    /// bitsets. Called by the shard itself at its serialization points
+    /// and by the sync/close flush.
+    fn drain_remote(&self, shard: usize) -> Result<()> {
+        let sh = &self.shards[shard];
+        let drained: Vec<(u32, u64)> = {
+            let mut q = sh.remote_free.lock().unwrap();
+            if q.is_empty() {
+                return Ok(());
+            }
+            std::mem::take(&mut *q)
+        };
+        sh.stats.remote_drained.fetch_add(drained.len() as u64, Ordering::Relaxed);
+        let mut by_bin: HashMap<u32, Vec<u64>> = HashMap::new();
+        for (bin, off) in drained {
+            by_bin.entry(bin).or_default().push(off);
+        }
+        let mut result = Ok(());
+        for (bin, offs) in by_bin {
+            keep_first_err(&mut result, self.return_slots(shard, bin, &offs));
+        }
+        result
+    }
+
+    /// Return freed slots of one bin — all owned by `shard` — to their
+    /// bitsets (spill / remote-drain / close path). Runs under the owner
+    /// shard's exclusive bin lock: chunk-empty detection and release
+    /// (serialization point #2) must not race shared-path claims. Every
+    /// slot is returned even if a chunk release hits hole-punch I/O
+    /// errors; the first error is reported after the batch.
+    fn return_slots(&self, shard: usize, bin: u32, offsets: &[u64]) -> Result<()> {
         let cs = self.opts.chunk_size as u64;
         let class = size_of_bin(bin as usize) as u64;
-        let mut b = self.bins[bin as usize].write().unwrap();
+        let sh = &self.shards[shard];
+        sh.stats.exclusive_acquires.fetch_add(1, Ordering::Relaxed);
+        let mut b = sh.bins[bin as usize].write().unwrap();
+        let mut result = Ok(());
         for &off in offsets {
             let chunk = (off / cs) as u32;
             let slot = ((off % cs) / class) as u32;
@@ -704,28 +888,39 @@ impl MetallManager {
             if empty {
                 // release the chunk entirely (bin → chunks order)
                 b.remove_chunk(chunk);
-                let mut chunks = self.chunks.lock().unwrap();
-                chunks.free_small_chunk(chunk);
+                let mut chunks = self.chunks.write().unwrap();
+                chunks.free_small_chunk_on(chunk, shard as u32);
                 drop(chunks);
-                self.segment
-                    .free_range(chunk as usize * cs as usize, cs as usize)?;
-                self.stats.freed_chunks.fetch_add(1, Ordering::Relaxed);
+                sh.stats.freed_chunks.fetch_add(1, Ordering::Relaxed);
+                keep_first_err(
+                    &mut result,
+                    self.segment.free_range(chunk as usize * cs as usize, cs as usize),
+                );
             }
         }
-        Ok(())
+        result
     }
 
     fn flush_cache(&self) -> Result<()> {
         let drained = self.cache.drain_all();
-        // group by bin to take each bin lock once
-        let mut by_bin: std::collections::HashMap<u32, Vec<u64>> = Default::default();
-        for (bin, off) in drained {
-            by_bin.entry(bin).or_default().push(off);
+        // group by (owner shard, bin) to take each bin lock once
+        let cs = self.opts.chunk_size as u64;
+        let mut by_key: HashMap<(usize, u32), Vec<u64>> = HashMap::new();
+        {
+            let chunks = self.chunks.read().unwrap();
+            for (bin, off) in drained {
+                let owner = chunks.owner((off / cs) as u32) as usize;
+                by_key.entry((owner, bin)).or_default().push(off);
+            }
         }
-        for (bin, offs) in by_bin {
-            self.return_slots(bin, &offs)?;
+        let mut result = Ok(());
+        for ((shard, bin), offs) in by_key {
+            keep_first_err(&mut result, self.return_slots(shard, bin, &offs));
         }
-        Ok(())
+        for shard in 0..self.shards.len() {
+            keep_first_err(&mut result, self.drain_remote(shard));
+        }
+        result
     }
 
     // -------------------------------------------------- memory access --
@@ -858,7 +1053,7 @@ impl MetallManager {
         }
         let mapped = self.segment.mapped_len() as u64;
         let cs = self.opts.chunk_size as u64;
-        let chunks = self.chunks.lock().unwrap();
+        let chunks = self.chunks.read().unwrap();
         for (name, e) in self.names.lock().unwrap().iter() {
             if e.offset + e.size > mapped {
                 findings.push(format!(
@@ -1144,7 +1339,7 @@ mod tests {
         m.deallocate(b).unwrap();
         // force the cache out
         m.sync().unwrap();
-        assert_eq!(m.stats().freed_chunks >= 1, true);
+        assert!(m.stats().freed_chunks >= 1);
         assert_eq!(m.used_segment_bytes(), 0);
         m.close().unwrap();
     }
@@ -1222,6 +1417,162 @@ mod tests {
         let big = m.allocate(200 << 10).unwrap();
         m.deallocate(big).unwrap();
         assert!(m.doctor().unwrap().is_empty(), "healthy store, no findings");
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn shard1_layout_is_deterministic() {
+        use crate::alloc::object_cache::pin_thread_vcpu;
+        // Two identical traces at shards=1 must produce byte-identical
+        // stores — the shard=1 equivalence guarantee (every sharded path
+        // collapses to the unsharded one: pools bypassed, remote queues
+        // empty, merged serialization of one part is the identity).
+        let d = TempDir::new("mgr-shard-det");
+        let run = |store: &Path| {
+            pin_thread_vcpu(Some(0));
+            let m = mk(store);
+            let mut offs = Vec::new();
+            for i in 0..600usize {
+                let off = m.allocate(8 + (i * 37) % 2000).unwrap();
+                m.write::<u64>(off, i as u64);
+                offs.push(off);
+                if i % 3 == 0 {
+                    let victim = offs.remove((i * 7) % offs.len());
+                    m.deallocate(victim).unwrap();
+                }
+            }
+            let big = m.allocate(100 << 10).unwrap(); // large (> chunk/2)
+            m.deallocate(big).unwrap();
+            m.close().unwrap();
+            pin_thread_vcpu(None);
+        };
+        run(&d.join("a"));
+        run(&d.join("b"));
+        let mgmt_a = std::fs::read(d.join("a").join("management.bin")).unwrap();
+        let mgmt_b = std::fs::read(d.join("b").join("management.bin")).unwrap();
+        assert_eq!(mgmt_a, mgmt_b, "management data bit-identical");
+        let files = |p: &Path| {
+            let mut v: Vec<_> = std::fs::read_dir(p.join("segment"))
+                .unwrap()
+                .map(|e| e.unwrap().path())
+                .collect();
+            v.sort();
+            v
+        };
+        let (fa, fb) = (files(&d.join("a")), files(&d.join("b")));
+        assert_eq!(fa.len(), fb.len(), "same backing files");
+        for (a, b) in fa.iter().zip(&fb) {
+            assert_eq!(a.file_name(), b.file_name());
+            assert_eq!(
+                std::fs::read(a).unwrap(),
+                std::fs::read(b).unwrap(),
+                "segment file {a:?} bit-identical"
+            );
+        }
+    }
+
+    #[test]
+    fn cross_shard_free_routes_through_remote_queue() {
+        use crate::alloc::object_cache::{pin_thread_vcpu, PER_BIN_CAP};
+        let d = TempDir::new("mgr-xshard");
+        let store = d.join("s");
+        let mut o = ManagerOptions::small_for_tests();
+        o.shards = 2;
+        let m = MetallManager::create_with(&store, o).unwrap();
+        // allocate on shard 0…
+        pin_thread_vcpu(Some(0));
+        let n = 2 * PER_BIN_CAP;
+        let offs: Vec<u64> = (0..n).map(|_| m.allocate(64).unwrap()).collect();
+        pin_thread_vcpu(None);
+        // …free everything from a thread homed on shard 1: spills must be
+        // parked on shard 0's remote queue, never shard 0's bin locks
+        std::thread::scope(|s| {
+            let (m, offs) = (&m, &offs);
+            s.spawn(move || {
+                pin_thread_vcpu(Some(1));
+                for &off in offs {
+                    m.deallocate(off).unwrap();
+                }
+            });
+        });
+        let ss = m.shard_stats();
+        assert!(ss[0].remote_frees > 0, "cross-shard frees queued: {ss:?}");
+        // sync drains caches and remote queues: nothing may leak
+        m.sync().unwrap();
+        assert_eq!(m.used_segment_bytes(), 0, "no leaked slots");
+        let agg = m.stats();
+        assert_eq!(agg.allocs, n as u64);
+        assert_eq!(agg.deallocs, n as u64);
+        assert_eq!(
+            agg.fast_claims,
+            ss.iter().map(|s| s.fast_claims).sum::<u64>(),
+            "totals aggregate the per-shard counters"
+        );
+        assert!(m.doctor().unwrap().is_empty());
+        m.close().unwrap();
+        let m = MetallManager::open(&store).unwrap();
+        assert_eq!(m.used_segment_bytes(), 0);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn reopen_with_different_shard_count() {
+        use crate::alloc::object_cache::pin_thread_vcpu;
+        let d = TempDir::new("mgr-reshard");
+        let store = d.join("s");
+        let mut live: Vec<(u64, u64)> = Vec::new();
+        {
+            let mut o = ManagerOptions::small_for_tests();
+            o.shards = 4;
+            let m = MetallManager::create_with(&store, o).unwrap();
+            assert_eq!(m.num_shards(), 4);
+            for i in 0..400u64 {
+                // rotate home shards so chunks of every bin spread over
+                // all four shards and frees cross shards
+                pin_thread_vcpu(Some((i % 4) as usize));
+                let off = m.allocate(16 + (i as usize % 700)).unwrap();
+                m.write::<u64>(off, i);
+                live.push((off, i));
+                if i % 4 == 3 {
+                    let (voff, _) = live.remove((i as usize * 13) % live.len());
+                    m.deallocate(voff).unwrap();
+                }
+            }
+            pin_thread_vcpu(None);
+            m.close().unwrap();
+        }
+        let golden = std::fs::read(store.join("management.bin")).unwrap();
+        // a store written with 4 shards reopens and validates with any
+        // shard count; closing again rewrites identical management bytes
+        for reopen_shards in [1usize, 2, 4, 3] {
+            let mut o = ManagerOptions::small_for_tests();
+            o.shards = reopen_shards;
+            let m = MetallManager::open_with(&store, o, false, false)
+                .unwrap_or_else(|e| panic!("reopen with {reopen_shards} shards: {e}"));
+            assert_eq!(m.num_shards(), reopen_shards);
+            for &(off, tag) in &live {
+                assert_eq!(m.read::<u64>(off), tag, "shards={reopen_shards} offset {off}");
+                assert!(m.usable_size(off).unwrap() >= 8);
+            }
+            assert!(m.doctor().unwrap().is_empty());
+            m.close().unwrap();
+            assert_eq!(
+                std::fs::read(store.join("management.bin")).unwrap(),
+                golden,
+                "shards={reopen_shards}: persistent image unchanged by reopen"
+            );
+        }
+        // everything frees cleanly under yet another shard count
+        let mut o = ManagerOptions::small_for_tests();
+        o.shards = 2;
+        let m = MetallManager::open_with(&store, o, false, false).unwrap();
+        pin_thread_vcpu(Some(1));
+        for &(off, _) in &live {
+            m.deallocate(off).unwrap();
+        }
+        pin_thread_vcpu(None);
+        m.sync().unwrap();
+        assert_eq!(m.used_segment_bytes(), 0, "no leaked slots after reshard churn");
         m.close().unwrap();
     }
 

@@ -9,6 +9,42 @@
 //! directory, bin directory, name directory — live in **DRAM** and are
 //! serialized to the datastore on close (§4.3: "Metall rarely touches
 //! persistent memory when allocating memory").
+//!
+//! ## Shard architecture (beyond the paper)
+//!
+//! The DRAM bin directory is split into N CPU-affine **shards**
+//! ([`ManagerOptions::shards`], default `min(num_cpus, 4)`). Each
+//! [`bin_dir::AllocShard`] owns, per size class, its own non-full-chunk
+//! LIFO and slot bitsets over the chunks it took from the chunk
+//! directory, plus its own slice of the free-chunk pool inside
+//! [`chunk_dir::ChunkDirectory`]. A thread's home shard is its virtual
+//! CPU modulo N ([`bin_dir::ShardMap`], `sched_getcpu` with a thread-id
+//! hash fallback), the same value that selects its
+//! [`object_cache::ObjectCache`] slot — so cache slots are bound to
+//! shards and the paper's two serialization points (fresh-chunk take,
+//! emptied-chunk release) are contended per shard instead of per
+//! manager.
+//!
+//! **Remote-free queue:** an object freed by a thread whose home shard
+//! is not the owning shard of its chunk is parked on the owner's
+//! [`bin_dir::AllocShard::remote_free`] queue (a plain mutex push; the
+//! foreign shard's bin locks are never taken on the free hot path,
+//! llfree-style). The owner drains the queue whenever it next reaches
+//! one of its serialization points, and `sync`/`close` drain every
+//! queue, so no slot is ever leaked.
+//!
+//! **Shard=1 equivalence:** the shard count is a DRAM-only property. The
+//! persistent format is identical for every N — each bin serializes as
+//! the sorted union of its per-shard bitsets
+//! ([`bin_dir::serialize_merged_into`]) and chunk ownership is re-dealt
+//! deterministically (`chunk % N`) on open, so a store written with N
+//! shards reopens with M ≠ N. With N = 1 every sharded code path
+//! collapses to the unsharded one (free pools bypassed, remote queues
+//! structurally empty), reproducing the pre-sharding on-disk layout
+//! bit-for-bit.
+//!
+//! Follow-on (ROADMAP): true NUMA placement — `mbind`/first-touch of
+//! each shard's chunks on its socket's memory node.
 
 pub mod api;
 pub mod size_class;
@@ -20,4 +56,6 @@ pub mod name_dir;
 pub mod manager;
 
 pub use api::{MetallHandle, SegmentAlloc};
-pub use manager::{ManagerOptions, MetallManager, Persist};
+pub use bin_dir::{ShardMap, ShardStatsSnapshot};
+pub use manager::{ManagerOptions, MetallManager, Persist, StatsSnapshot};
+pub use object_cache::pin_thread_vcpu;

@@ -9,8 +9,49 @@
 //! it without touching the bin or chunk directories. Each (core, bin)
 //! queue is bounded; overflow spills half the queue back to the bin
 //! directory through the manager.
+//!
+//! ## Virtual CPU and shard affinity
+//!
+//! Slot selection and the manager's shard selection both key off
+//! [`current_vcpu`]: the thread's *virtual CPU* — `sched_getcpu` when
+//! available, a stable thread-id hash otherwise, or a per-thread pinned
+//! value ([`pin_thread_vcpu`], used by tests and benchmarks to make shard
+//! placement deterministic). Because cache slot (`vcpu % ncores`) and home
+//! shard (`vcpu % nshards`) derive from the same value, each cache slot is
+//! bound to a fixed shard whenever `ncores` is a multiple of the shard
+//! count — objects parked on a core refill allocations that the same
+//! shard's bins would serve.
 
+use std::cell::Cell;
 use std::sync::Mutex;
+
+thread_local! {
+    static VCPU_PIN: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Pin (or with `None` unpin) the calling thread to a fixed virtual CPU
+/// for object-cache slot and allocator-shard selection. Test/bench
+/// utility: real workloads rely on `sched_getcpu` affinity.
+pub fn pin_thread_vcpu(vcpu: Option<usize>) {
+    VCPU_PIN.with(|p| p.set(vcpu));
+}
+
+/// The calling thread's virtual CPU (module docs): pinned value, else
+/// `sched_getcpu`, else a stable hash of the thread id.
+#[inline]
+pub fn current_vcpu() -> usize {
+    if let Some(v) = VCPU_PIN.with(|p| p.get()) {
+        return v;
+    }
+    let cpu = unsafe { libc::sched_getcpu() };
+    if cpu >= 0 {
+        return cpu as usize;
+    }
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    std::thread::current().id().hash(&mut h);
+    h.finish() as usize
+}
 
 /// Max objects cached per (core, bin).
 pub const PER_BIN_CAP: usize = 64;
@@ -43,26 +84,33 @@ impl ObjectCache {
         Self { cores }
     }
 
-    /// Cache slot for the current thread (sched_getcpu, clamped).
+    /// Cache slot for a virtual CPU (clamped to the slot count).
+    #[inline]
+    pub fn slot_for(&self, vcpu: usize) -> usize {
+        vcpu % self.cores.len()
+    }
+
+    /// Cache slot for the current thread.
     fn core_slot(&self) -> usize {
-        let cpu = unsafe { libc::sched_getcpu() };
-        if cpu < 0 {
-            0
-        } else {
-            cpu as usize % self.cores.len()
-        }
+        self.slot_for(current_vcpu())
     }
 
     /// Try to pop a cached object of `bin`.
     pub fn pop(&self, bin: u32) -> Option<u64> {
-        let mut c = self.cores[self.core_slot()].lock().unwrap();
+        self.pop_at(self.core_slot(), bin)
+    }
+
+    /// [`Self::pop`] with the slot precomputed (the manager resolves the
+    /// virtual CPU once per allocation for both slot and shard).
+    pub fn pop_at(&self, slot: usize, bin: u32) -> Option<u64> {
+        let mut c = self.cores[slot].lock().unwrap();
         c.by_bin[bin as usize].pop()
     }
 
     /// Push a freed object. Returns the overflow spill (possibly empty):
     /// offsets the caller must return to the bin directory.
     pub fn push(&self, bin: u32, offset: u64) -> Vec<u64> {
-        self.push_batch(bin, &[offset])
+        self.push_batch_at(self.core_slot(), bin, &[offset])
     }
 
     /// Push a batch of objects (refill path: slots just claimed through
@@ -70,7 +118,12 @@ impl ObjectCache {
     /// spill (possibly empty): offsets the caller must return to the bin
     /// directory.
     pub fn push_batch(&self, bin: u32, offsets: &[u64]) -> Vec<u64> {
-        let mut c = self.cores[self.core_slot()].lock().unwrap();
+        self.push_batch_at(self.core_slot(), bin, offsets)
+    }
+
+    /// [`Self::push_batch`] with the slot precomputed.
+    pub fn push_batch_at(&self, slot: usize, bin: u32, offsets: &[u64]) -> Vec<u64> {
+        let mut c = self.cores[slot].lock().unwrap();
         let q = &mut c.by_bin[bin as usize];
         q.extend_from_slice(offsets);
         if q.len() > PER_BIN_CAP {
@@ -154,6 +207,21 @@ mod tests {
         assert_eq!(spilled.len(), PER_BIN_CAP + 10 - PER_BIN_CAP / 2);
         assert_eq!(spilled[0], 0, "oldest spilled first");
         assert_eq!(c.pop(0), Some(PER_BIN_CAP as u64 + 9), "hot top kept");
+    }
+
+    #[test]
+    fn pinned_vcpu_selects_a_fixed_slot() {
+        let c = ObjectCache::with_cores(2, 1);
+        pin_thread_vcpu(Some(0));
+        assert!(c.push(0, 100).is_empty());
+        pin_thread_vcpu(Some(1));
+        assert!(c.pop(0).is_none(), "slot 1 does not see slot 0's object");
+        assert!(c.push(0, 200).is_empty());
+        pin_thread_vcpu(Some(0));
+        assert_eq!(c.pop(0), Some(100));
+        pin_thread_vcpu(Some(3)); // wraps: 3 % 2 == slot 1
+        assert_eq!(c.pop(0), Some(200));
+        pin_thread_vcpu(None);
     }
 
     #[test]

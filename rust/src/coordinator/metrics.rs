@@ -1,10 +1,15 @@
 //! Lightweight metrics: counters and phase timers for the pipeline and
-//! the experiment harness.
+//! the experiment harness, plus the allocator-counter bridge
+//! ([`record_alloc_stats`]) that folds the manager's aggregate totals and
+//! per-shard contention counters into a metrics set.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::alloc::bin_dir::ShardStatsSnapshot;
+use crate::alloc::manager::StatsSnapshot;
 
 /// A named set of monotonically increasing counters plus accumulated
 /// phase durations. Cheap to share behind an `Arc`.
@@ -75,6 +80,30 @@ impl Metrics {
     }
 }
 
+/// Fold an allocator snapshot into `m`: manager-wide totals under the
+/// pre-sharding `alloc.*` names (backward compatible — the shard count
+/// never changes these keys or their meaning) and per-shard contention
+/// counters under `alloc.shard<N>.*`. Counters are monotonic adds: call
+/// once per snapshot, or feed deltas.
+pub fn record_alloc_stats(m: &Metrics, totals: &StatsSnapshot, shards: &[ShardStatsSnapshot]) {
+    m.add("alloc.allocs", totals.allocs);
+    m.add("alloc.deallocs", totals.deallocs);
+    m.add("alloc.cache_hits", totals.cache_hits);
+    m.add("alloc.fast_claims", totals.fast_claims);
+    m.add("alloc.fresh_chunks", totals.fresh_chunks);
+    m.add("alloc.freed_chunks", totals.freed_chunks);
+    m.add("alloc.large_allocs", totals.large_allocs);
+    for s in shards {
+        let k = |name: &str| format!("alloc.shard{}.{name}", s.shard);
+        m.add(&k("fast_claims"), s.fast_claims);
+        m.add(&k("fresh_chunks"), s.fresh_chunks);
+        m.add(&k("freed_chunks"), s.freed_chunks);
+        m.add(&k("remote_frees"), s.remote_frees);
+        m.add(&k("remote_drained"), s.remote_drained);
+        m.add(&k("exclusive_acquires"), s.exclusive_acquires);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,6 +121,43 @@ mod tests {
         let (c, t) = m.snapshot();
         assert_eq!(c["edges"], 12);
         assert!(t.contains_key("phase"));
+    }
+
+    #[test]
+    fn alloc_stats_bridge_keeps_totals_backward_compatible() {
+        let m = Metrics::new();
+        let totals = StatsSnapshot {
+            allocs: 10,
+            deallocs: 4,
+            cache_hits: 3,
+            fast_claims: 7,
+            fresh_chunks: 2,
+            freed_chunks: 1,
+            large_allocs: 0,
+        };
+        let shards = vec![
+            ShardStatsSnapshot { shard: 0, fast_claims: 5, fresh_chunks: 1, ..Default::default() },
+            ShardStatsSnapshot {
+                shard: 1,
+                fast_claims: 2,
+                fresh_chunks: 1,
+                freed_chunks: 1,
+                remote_frees: 6,
+                remote_drained: 6,
+                exclusive_acquires: 3,
+            },
+        ];
+        record_alloc_stats(&m, &totals, &shards);
+        // pre-sharding keys carry the aggregates
+        assert_eq!(m.get("alloc.allocs"), 10);
+        assert_eq!(m.get("alloc.fast_claims"), 7);
+        // per-shard contention counters sum to the totals
+        assert_eq!(
+            m.get("alloc.shard0.fast_claims") + m.get("alloc.shard1.fast_claims"),
+            m.get("alloc.fast_claims")
+        );
+        assert_eq!(m.get("alloc.shard1.remote_frees"), 6);
+        assert_eq!(m.get("alloc.shard1.exclusive_acquires"), 3);
     }
 
     #[test]

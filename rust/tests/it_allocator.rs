@@ -5,7 +5,7 @@
 use std::collections::HashMap;
 
 use metall_rs::alloc::size_class::{bin_of, size_of_bin};
-use metall_rs::alloc::{ManagerOptions, MetallManager, SegmentAlloc};
+use metall_rs::alloc::{pin_thread_vcpu, ManagerOptions, MetallManager, SegmentAlloc};
 use metall_rs::baselines::bip::BipAllocator;
 use metall_rs::baselines::pmemkind::{MadvMode, PmemKindAllocator};
 use metall_rs::baselines::ralloc_like::RallocLike;
@@ -285,6 +285,102 @@ fn property_trace_against_oracle() {
     }
     m.sync().unwrap();
     assert_eq!(m.used_segment_bytes(), 0, "full free returns every chunk");
+    m.close().unwrap();
+}
+
+/// Cross-shard property trace: a 4-shard manager driven from one thread
+/// whose home shard rotates every step, so objects are routinely freed
+/// from a different shard than the one that allocated them (remote-free
+/// queue path). Checked against a shadow oracle; afterwards the store is
+/// reopened with 2 shards and then 1 shard (recovery re-deals chunk
+/// ownership), contents are verified, and a full free must leak nothing.
+#[test]
+fn cross_shard_property_trace_and_reshard_reopen() {
+    const STEPS: usize = 6000;
+    let d = TempDir::new("fz-xshard");
+    let store = d.join("s");
+    let opts = ManagerOptions {
+        chunk_size: CHUNK,
+        file_size: 1 << 20,
+        vm_reserve: 4 << 30,
+        shards: 4,
+        ..Default::default()
+    };
+    let m = MetallManager::create_with(&store, opts).unwrap();
+    let mut rng = Xoshiro256ss::new(0x5A4D);
+    // oracle: offset → (size, usable, tag)
+    let mut live: HashMap<u64, (usize, usize, u64)> = HashMap::new();
+    let mut order: Vec<u64> = Vec::new();
+    for step in 0..STEPS {
+        pin_thread_vcpu(Some(step % 4)); // rotate home shard
+        if live.is_empty() || rng.next_f64() < 0.55 {
+            // three hot classes so the per-(core, bin) caches overflow and
+            // spill — the path that feeds the remote-free queues
+            let size = 8usize << rng.gen_range(3); // 8, 16, 32
+            let off = m.allocate(size).unwrap();
+            let usable = m.usable_size(off).unwrap();
+            assert!(usable >= size);
+            for (&o, &(_, u, _)) in &live {
+                let disjoint = off + usable as u64 <= o || o + u as u64 <= off;
+                assert!(disjoint, "step {step}: [{off},+{usable}) overlaps [{o},+{u})");
+            }
+            let tag = rng.next_u64();
+            m.write_pod::<u64>(off, tag);
+            assert!(live.insert(off, (size, usable, tag)).is_none());
+            order.push(off);
+        } else {
+            let i = rng.gen_range(order.len() as u64) as usize;
+            let off = order.swap_remove(i);
+            let (_, _, tag) = live.remove(&off).unwrap();
+            assert_eq!(m.read_pod::<u64>(off), tag, "step {step}: corrupted before free");
+            m.deallocate(off).unwrap();
+        }
+    }
+    // deterministic cross-shard burst: allocate a batch on shard 0 (at
+    // most PER_BIN_CAP of these can come from the mixed-owner cache; the
+    // rest are claims from shard 0's own chunks), then free it all from
+    // shard 1 — the spill must park shard-0-owned slots on the remote
+    // queue
+    pin_thread_vcpu(Some(0));
+    let extra: Vec<u64> = (0..200).map(|_| m.allocate(8).unwrap()).collect();
+    pin_thread_vcpu(Some(1));
+    for &off in &extra {
+        m.deallocate(off).unwrap();
+    }
+    pin_thread_vcpu(None);
+    let ss = m.shard_stats();
+    assert!(
+        ss.iter().map(|s| s.remote_frees).sum::<u64>() > 0,
+        "cross-shard burst must exercise the remote-free queue: {ss:?}"
+    );
+    m.close().unwrap();
+
+    // reopen with fewer shards; every live object must be intact
+    for reopen_shards in [2usize, 1] {
+        let opts = ManagerOptions {
+            chunk_size: CHUNK,
+            file_size: 1 << 20,
+            vm_reserve: 4 << 30,
+            shards: reopen_shards,
+            ..Default::default()
+        };
+        let m = MetallManager::open_with(&store, opts, false, false).unwrap();
+        assert_eq!(m.num_shards(), reopen_shards);
+        for (&off, &(_, usable, tag)) in &live {
+            assert_eq!(m.read_pod::<u64>(off), tag, "shards={reopen_shards} offset {off}");
+            assert_eq!(m.usable_size(off).unwrap(), usable, "class stable");
+        }
+        assert!(m.doctor().unwrap().is_empty());
+        m.close().unwrap();
+    }
+
+    // full free under the final shard count: no leaked slots
+    let m = MetallManager::open(&store).unwrap();
+    for &off in live.keys() {
+        m.deallocate(off).unwrap();
+    }
+    m.sync().unwrap();
+    assert_eq!(m.used_segment_bytes(), 0, "cross-shard churn leaked chunks");
     m.close().unwrap();
 }
 

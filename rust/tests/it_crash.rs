@@ -17,7 +17,7 @@
 use std::path::{Path, PathBuf};
 use std::process::Command;
 
-use metall_rs::alloc::{ManagerOptions, MetallManager};
+use metall_rs::alloc::{pin_thread_vcpu, ManagerOptions, MetallManager};
 use metall_rs::containers::PVec;
 use metall_rs::util::rng::Xoshiro256ss;
 use metall_rs::util::tmp::TempDir;
@@ -46,10 +46,20 @@ fn crash_child_entry() {
     let kill_at: u64 = std::env::var(KILL_AT_ENV).expect("child needs kill_at").parse().unwrap();
 
     let store = dir.join("s");
-    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    // the "*-shards4" modes run the same trace on a 4-shard manager with
+    // the home shard rotating per op (cross-shard alloc/free traffic)
+    let sharded = mode.ends_with("shards4");
+    let mut opts = ManagerOptions::small_for_tests();
+    if sharded {
+        opts.shards = 4;
+    }
+    let m = MetallManager::create_with(&store, opts).unwrap();
     let v = PVec::<u64>::create(&m).unwrap();
     m.construct::<u64>("log", v.offset()).unwrap();
     for i in 0..BASE_RECORDS {
+        if sharded {
+            pin_thread_vcpu(Some((i % 4) as usize));
+        }
         v.push(&m, record_value(i)).unwrap();
     }
     m.snapshot(dir.join("snap")).unwrap();
@@ -58,6 +68,9 @@ fn crash_child_entry() {
     // close cleanly) at the controlled op index
     let mut scratch: Vec<u64> = Vec::new();
     for op in 0.. {
+        if sharded {
+            pin_thread_vcpu(Some((op % 4) as usize));
+        }
         if op == kill_at {
             match mode.as_str() {
                 "clean" => {
@@ -170,6 +183,41 @@ fn clean_close_child_reattaches_with_all_data() {
     assert!(m.doctor().unwrap().is_empty());
     m.close().unwrap();
     // the snapshot taken mid-run is still independently intact
+    assert_snapshot_intact(&d.join("snap"));
+}
+
+/// Recovery with a different shard count: a 4-shard child (home shard
+/// rotating per op, so chunks belong to all four shards) snapshots and is
+/// kill-9ed; the snapshot must reopen with 1 and 2 shards — ownership is
+/// re-dealt deterministically — with the property-trace oracle
+/// (`record_value`) still matching every record.
+#[test]
+fn kill9_with_4_shards_snapshot_reopens_with_fewer_shards() {
+    use std::os::unix::process::ExitStatusExt;
+    let d = TempDir::new("crash-shards");
+    let status = spawn_child("crash-shards4", d.path(), 150);
+    assert_eq!(status.signal(), Some(libc::SIGKILL), "child dies by SIGKILL: {status:?}");
+
+    let store = d.join("s");
+    assert!(!store.join("CLEAN").exists());
+    assert!(MetallManager::open(&store).is_err(), "dirty store refused");
+    // the snapshot was written by a 4-shard manager; reopen with fewer
+    for shards in [1usize, 2] {
+        let mut o = ManagerOptions::small_for_tests();
+        o.shards = shards;
+        let s = MetallManager::open_with(d.join("snap"), o, false, false)
+            .unwrap_or_else(|e| panic!("snapshot must reopen with {shards} shards: {e}"));
+        assert_eq!(s.num_shards(), shards);
+        let off = s.find::<u64>("log").unwrap().expect("named object survives");
+        let v = PVec::<u64>::from_offset(s.read(off));
+        assert_eq!(v.len(&s), BASE_RECORDS as usize, "shards={shards}");
+        for i in 0..BASE_RECORDS {
+            assert_eq!(v.get(&s, i as usize), record_value(i), "shards={shards} record {i}");
+        }
+        assert!(s.doctor().unwrap().is_empty(), "snapshot healthy at {shards} shards");
+        s.close().unwrap();
+    }
+    // and the default (auto-shard) open still accepts it
     assert_snapshot_intact(&d.join("snap"));
 }
 

@@ -16,7 +16,11 @@ const MAP_ITEMS: u64 = 250;
 const CHURN_OPS: usize = 2000;
 
 fn opts() -> ManagerOptions {
-    ManagerOptions::small_for_tests()
+    // explicitly sharded: 8 threads over 4 shards exercises the
+    // cross-shard free routing under real scheduler placement
+    let mut o = ManagerOptions::small_for_tests();
+    o.shards = 4;
+    o
 }
 
 fn vec_value(t: u64, i: u64) -> u64 {
@@ -109,6 +113,19 @@ fn eight_threads_alloc_churn_plus_container_writers() {
     assert!(h.doctor().unwrap().is_empty(), "healthy after the stampede");
     let st = h.stats();
     assert!(st.fast_claims > 0, "the lock-free claim path was exercised");
+    h.sync().unwrap(); // drains the object caches and remote-free queues
+    let ss = h.shard_stats();
+    assert_eq!(ss.len(), 4);
+    assert_eq!(
+        st.fast_claims,
+        ss.iter().map(|s| s.fast_claims).sum::<u64>(),
+        "totals aggregate the per-shard counters"
+    );
+    assert_eq!(
+        ss.iter().map(|s| s.remote_frees).sum::<u64>(),
+        ss.iter().map(|s| s.remote_drained).sum::<u64>(),
+        "every queued cross-shard free was drained: {ss:?}"
+    );
     h.try_close().expect("all worker handles dropped at join");
 
     // close/open round-trip: every container byte survives
