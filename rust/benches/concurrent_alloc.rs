@@ -1,39 +1,60 @@
-//! Thread- and shard-scaling benchmark for the small-allocation fast
-//! path (§4.5 concurrency design + the sharded bin directory).
+//! Thread-, shard-, and NUMA-scaling benchmark for the small-allocation
+//! fast path (§4.5 concurrency design + the sharded bin directory + the
+//! topology-aware placement layer).
 //!
 //! Measures aggregate alloc/dealloc throughput of one shared
-//! `MetallManager` over a (threads × shards) matrix of mixed small size
-//! classes, and reports the speedup relative to single-threaded as well
-//! as the sharding delta at the highest thread count. The acceptance bar
-//! for the sharded directory is ≥ 1.5× throughput at 8 threads / 4
-//! shards over 8 threads / 1 shard.
+//! `MetallManager` over a (nodes × shards × threads) matrix of mixed
+//! small size classes. The `nodes` dimension injects fake topologies
+//! (`Topology::fake`) with worker vcpus pinned, so the NUMA routing and
+//! first-touch paths are exercised — and their placement measured via
+//! `placement_report()` — even on single-node machines. `nodes = 1` runs
+//! the machine topology unpinned, directly comparable to earlier PRs.
 //!
 //! Results go to the human table, to `bench_results/concurrent_alloc.jsonl`
 //! (append-only history), and to `BENCH_concurrent_alloc.json` at the
-//! repo root — one machine-readable document per run so the perf
-//! trajectory is tracked across PRs.
+//! repo root. That file is written twice: a `"status": "started"` stub
+//! before the first measurement and the full document at the end — so
+//! every run leaves a machine-readable trace even if it is interrupted,
+//! on any machine shape (1 shard / 1 node included).
 //!
 //! `cargo bench --bench concurrent_alloc -- [--ops 400000]
-//!  [--threads 1,2,4,8] [--shards 1,2,4] [--repeats 3] [--live 192]`
+//!  [--threads 1,2,4,8] [--shards 1,2,4] [--nodes 1,2] [--repeats 3]
+//!  [--live 192]`
 
-use metall_rs::alloc::{ManagerOptions, MetallHandle, MetallManager, ShardStatsSnapshot};
+use metall_rs::alloc::{
+    pin_thread_vcpu, ManagerOptions, MetallHandle, MetallManager, ShardStatsSnapshot,
+};
 use metall_rs::bench_util::{record, BenchArgs, Table};
+use metall_rs::numa::Topology;
 use metall_rs::util::human;
 use metall_rs::util::jsonw::JsonObj;
 use metall_rs::util::rng::Xoshiro256ss;
 use metall_rs::util::tmp::TempDir;
 
 const CHUNK: usize = 1 << 20;
+const OUT: &str = "BENCH_concurrent_alloc.json";
 
 /// Mixed small-class churn: every thread keeps a bounded live window and
 /// allocates/frees objects spanning eight size classes (8 B – 1 KiB).
-/// Returns elapsed seconds for `ops` total operations across `threads`.
-fn churn(h: &MetallHandle, ops: usize, threads: usize, live_cap: usize, seed: u64) -> f64 {
+/// With `pin`, worker `t` is pinned to vcpu `t` (the numa dimension needs
+/// deterministic thread→node assignment). Returns elapsed seconds for
+/// `ops` total operations across `threads`.
+fn churn(
+    h: &MetallHandle,
+    ops: usize,
+    threads: usize,
+    live_cap: usize,
+    seed: u64,
+    pin: bool,
+) -> f64 {
     let t0 = std::time::Instant::now();
     std::thread::scope(|s| {
         for t in 0..threads {
             let h = h.clone();
             s.spawn(move || {
+                if pin {
+                    pin_thread_vcpu(Some(t));
+                }
                 let mut rng = Xoshiro256ss::new(seed + t as u64);
                 let mut live: Vec<u64> = Vec::with_capacity(live_cap);
                 for _ in 0..ops / threads {
@@ -56,7 +77,29 @@ fn churn(h: &MetallHandle, ops: usize, threads: usize, live_cap: usize, seed: u6
     t0.elapsed().as_secs_f64()
 }
 
+/// Non-timed placement probe: allocate a wave of live objects from every
+/// worker vcpu, read `placement_report()`, free the wave. Returns
+/// (node-local pages, attributed small-chunk pages).
+fn placement_probe(h: &MetallHandle, threads: usize) -> (u64, u64) {
+    let mut offs = Vec::new();
+    for t in 0..threads {
+        pin_thread_vcpu(Some(t));
+        for _ in 0..64 {
+            offs.push(h.allocate(256).unwrap());
+        }
+    }
+    pin_thread_vcpu(None);
+    let r = h.placement_report();
+    for off in offs {
+        h.deallocate(off).unwrap();
+    }
+    let local: u64 = r.per_shard.iter().map(|s| s.node_local_pages).sum();
+    let pages: u64 = r.per_shard.iter().map(|s| s.pages).sum();
+    (local, pages)
+}
+
 struct Cell {
+    nodes: usize,
     threads: usize,
     shards: usize,
     secs: f64,
@@ -67,6 +110,8 @@ struct Cell {
     fresh_chunks: u64,
     remote_frees: u64,
     exclusive_acquires: u64,
+    node_local_pages: u64,
+    placement_pages: u64,
 }
 
 fn shard_sum(ss: &[ShardStatsSnapshot], f: impl Fn(&ShardStatsSnapshot) -> u64) -> u64 {
@@ -78,99 +123,139 @@ fn main() -> anyhow::Result<()> {
     let ops = args.get_usize("ops", 400_000);
     let threads = args.get_usize_list("threads", &[1, 2, 4, 8]);
     let shard_counts = args.get_usize_list("shards", &[1, 2, 4]);
+    let node_counts = args.get_usize_list("nodes", &[1, 2]);
     let repeats = args.get_usize("repeats", 3);
     let live_cap = args.get_usize("live", 192);
     let work = TempDir::new("concurrent-alloc");
 
+    // the trajectory file must exist whatever happens after this point
+    let stub = JsonObj::new()
+        .str("bench", "concurrent_alloc")
+        .str("status", "started")
+        .raw("results", "[]")
+        .finish();
+    std::fs::write(OUT, stub + "\n")?;
+
     let mut t = Table::new(&[
-        "shards", "threads", "time", "agg ops/s", "speedup", "fast claims", "remote frees",
-        "excl locks",
+        "nodes", "shards", "threads", "time", "agg ops/s", "speedup", "fast claims",
+        "remote frees", "excl locks", "node-local",
     ]);
     let mut cells: Vec<Cell> = Vec::new();
-    for &ns in &shard_counts {
-        let mut base_rate = 0.0f64;
-        for &nt in &threads {
-            // best-of-N to shed scheduler noise; fresh store per run so
-            // every cell sees identical initial state. The reported
-            // counters come from the same repeat as the reported time.
-            let mut best = f64::INFINITY;
-            let mut stats = Default::default();
-            let mut per_shard: Vec<ShardStatsSnapshot> = Vec::new();
-            for rep in 0..repeats.max(1) {
-                let dir = work.join(&format!("s{ns}-t{nt}-r{rep}"));
-                let opts = ManagerOptions {
-                    chunk_size: CHUNK,
-                    file_size: 16 << 20,
-                    vm_reserve: 32 << 30,
-                    shards: ns,
-                    ..Default::default()
-                };
-                let h = MetallHandle::new(MetallManager::create_with(&dir, opts)?);
-                let secs = churn(&h, ops, nt, live_cap, 1);
-                let (tot, ss) = h.stats_with_shards();
-                h.try_close().map_err(|e| anyhow::anyhow!("{e}"))?;
-                let _ = std::fs::remove_dir_all(&dir);
-                if secs < best {
-                    best = secs;
-                    stats = tot;
-                    per_shard = ss;
+    let max_threads = threads.iter().copied().max().unwrap_or(1);
+    for &nn in &node_counts {
+        // nodes = 1: machine topology, unpinned (comparable to earlier
+        // PRs); nodes > 1: injected fake topology with pinned workers so
+        // every node's shards see traffic
+        let fake = (nn > 1).then(|| Topology::fake(&vec![max_threads.div_ceil(nn); nn]));
+        for &ns in &shard_counts {
+            let mut base_rate = 0.0f64;
+            for &nt in &threads {
+                // best-of-N to shed scheduler noise; fresh store per run so
+                // every cell sees identical initial state. The reported
+                // counters come from the same repeat as the reported time.
+                let mut best = f64::INFINITY;
+                let mut stats = Default::default();
+                let mut per_shard: Vec<ShardStatsSnapshot> = Vec::new();
+                let mut placement = (0u64, 0u64);
+                for rep in 0..repeats.max(1) {
+                    let dir = work.join(&format!("n{nn}-s{ns}-t{nt}-r{rep}"));
+                    let opts = ManagerOptions {
+                        chunk_size: CHUNK,
+                        file_size: 16 << 20,
+                        vm_reserve: 32 << 30,
+                        shards: ns,
+                        topology: fake.clone(),
+                        ..Default::default()
+                    };
+                    let h = MetallHandle::new(MetallManager::create_with(&dir, opts)?);
+                    let secs = churn(&h, ops, nt, live_cap, 1, fake.is_some());
+                    // counters snapshot first: the probe's own allocations
+                    // must not pollute the churn counters the trajectory
+                    // compares across PRs
+                    let (tot, ss) = h.stats_with_shards();
+                    let probe = placement_probe(&h, nt);
+                    h.try_close().map_err(|e| anyhow::anyhow!("{e}"))?;
+                    let _ = std::fs::remove_dir_all(&dir);
+                    if secs < best {
+                        best = secs;
+                        stats = tot;
+                        per_shard = ss;
+                        placement = probe;
+                    }
                 }
+                let rate = ops as f64 / best;
+                if nt == threads[0] {
+                    base_rate = rate;
+                }
+                let speedup = rate / base_rate;
+                let remote_frees = shard_sum(&per_shard, |s| s.remote_frees);
+                let excl = shard_sum(&per_shard, |s| s.exclusive_acquires);
+                let (local, pages) = placement;
+                let local_str = if pages > 0 {
+                    format!("{:.0}%", 100.0 * local as f64 / pages as f64)
+                } else {
+                    "-".to_string()
+                };
+                t.row(&[
+                    nn.to_string(),
+                    ns.to_string(),
+                    nt.to_string(),
+                    human::duration(best),
+                    human::rate(rate),
+                    format!("{speedup:.2}x"),
+                    stats.fast_claims.to_string(),
+                    remote_frees.to_string(),
+                    excl.to_string(),
+                    local_str,
+                ]);
+                record(
+                    "concurrent_alloc",
+                    JsonObj::new()
+                        .str("bench", "mixed-small-churn")
+                        .int("nodes", nn as i64)
+                        .int("shards", ns as i64)
+                        .int("threads", nt as i64)
+                        .int("ops", ops as i64)
+                        .num("secs", best)
+                        .num("ops_per_sec", rate)
+                        .num("speedup_vs_1t", speedup)
+                        .int("fast_claims", stats.fast_claims as i64)
+                        .int("cache_hits", stats.cache_hits as i64)
+                        .int("fresh_chunks", stats.fresh_chunks as i64)
+                        .int("remote_frees", remote_frees as i64)
+                        .int("exclusive_acquires", excl as i64)
+                        .int("node_local_pages", local as i64)
+                        .int("placement_pages", pages as i64),
+                );
+                cells.push(Cell {
+                    nodes: nn,
+                    threads: nt,
+                    shards: ns,
+                    secs: best,
+                    rate,
+                    speedup_vs_1t: speedup,
+                    fast_claims: stats.fast_claims,
+                    cache_hits: stats.cache_hits,
+                    fresh_chunks: stats.fresh_chunks,
+                    remote_frees,
+                    exclusive_acquires: excl,
+                    node_local_pages: local,
+                    placement_pages: pages,
+                });
             }
-            let rate = ops as f64 / best;
-            if nt == threads[0] {
-                base_rate = rate;
-            }
-            let speedup = rate / base_rate;
-            let remote_frees = shard_sum(&per_shard, |s| s.remote_frees);
-            let excl = shard_sum(&per_shard, |s| s.exclusive_acquires);
-            t.row(&[
-                ns.to_string(),
-                nt.to_string(),
-                human::duration(best),
-                human::rate(rate),
-                format!("{speedup:.2}x"),
-                stats.fast_claims.to_string(),
-                remote_frees.to_string(),
-                excl.to_string(),
-            ]);
-            record(
-                "concurrent_alloc",
-                JsonObj::new()
-                    .str("bench", "mixed-small-churn")
-                    .int("shards", ns as i64)
-                    .int("threads", nt as i64)
-                    .int("ops", ops as i64)
-                    .num("secs", best)
-                    .num("ops_per_sec", rate)
-                    .num("speedup_vs_1t", speedup)
-                    .int("fast_claims", stats.fast_claims as i64)
-                    .int("cache_hits", stats.cache_hits as i64)
-                    .int("fresh_chunks", stats.fresh_chunks as i64)
-                    .int("remote_frees", remote_frees as i64)
-                    .int("exclusive_acquires", excl as i64),
-            );
-            cells.push(Cell {
-                threads: nt,
-                shards: ns,
-                secs: best,
-                rate,
-                speedup_vs_1t: speedup,
-                fast_claims: stats.fast_claims,
-                cache_hits: stats.cache_hits,
-                fresh_chunks: stats.fresh_chunks,
-                remote_frees,
-                exclusive_acquires: excl,
-            });
         }
     }
-    t.print("thread × shard scaling: shared manager, mixed small classes (8B–1KiB, 40% frees)");
+    t.print(
+        "node × shard × thread scaling: shared manager, mixed small classes (8B–1KiB, 40% frees)",
+    );
 
-    // sharding delta at the highest thread count: max shards vs 1 shard
-    let max_t = threads.iter().copied().max().unwrap_or(1);
+    // sharding delta at the highest thread count on the machine topology:
+    // max shards vs 1 shard
+    let max_t = max_threads;
     let rate_of = |ns: usize| {
         cells
             .iter()
-            .find(|c| c.threads == max_t && c.shards == ns)
+            .find(|c| c.nodes == 1 && c.threads == max_t && c.shards == ns)
             .map(|c| c.rate)
     };
     let max_s = shard_counts.iter().copied().max().unwrap_or(1);
@@ -184,6 +269,19 @@ fn main() -> anyhow::Result<()> {
              (target ≥ 1.5x for the sharded bin directory)"
         );
     }
+    // placement bar under the largest fake topology: ≥ 95% node-local
+    let numa_local = cells
+        .iter()
+        .filter(|c| c.nodes > 1 && c.placement_pages > 0)
+        .map(|c| c.node_local_pages as f64 / c.placement_pages as f64)
+        .fold(f64::INFINITY, f64::min);
+    if numa_local.is_finite() {
+        println!(
+            "numa placement: worst node-local share across fake-topology cells = {:.1}% \
+             (target ≥ 95%)",
+            100.0 * numa_local
+        );
+    }
 
     // machine-readable summary at the repo root (one document per run,
     // overwritten: the perf trajectory across PRs lives in git history)
@@ -194,6 +292,7 @@ fn main() -> anyhow::Result<()> {
         }
         rows.push_str(
             &JsonObj::new()
+                .int("nodes", c.nodes as i64)
                 .int("threads", c.threads as i64)
                 .int("shards", c.shards as i64)
                 .num("secs", c.secs)
@@ -204,12 +303,15 @@ fn main() -> anyhow::Result<()> {
                 .int("fresh_chunks", c.fresh_chunks as i64)
                 .int("remote_frees", c.remote_frees as i64)
                 .int("exclusive_acquires", c.exclusive_acquires as i64)
+                .int("node_local_pages", c.node_local_pages as i64)
+                .int("placement_pages", c.placement_pages as i64)
                 .finish(),
         );
     }
     rows.push(']');
     let mut doc = JsonObj::new()
         .str("bench", "concurrent_alloc")
+        .str("status", "complete")
         .str("workload", "mixed-small-churn 8B-1KiB, 40% frees")
         .int("ops", ops as i64)
         .int("repeats", repeats as i64)
@@ -221,7 +323,10 @@ fn main() -> anyhow::Result<()> {
             .int("shard_speedup_shards", max_s as i64)
             .num("shard_speedup", sp);
     }
-    std::fs::write("BENCH_concurrent_alloc.json", doc.finish() + "\n")?;
-    println!("wrote BENCH_concurrent_alloc.json");
+    if numa_local.is_finite() {
+        doc = doc.num("numa_worst_node_local_share", numa_local);
+    }
+    std::fs::write(OUT, doc.finish() + "\n")?;
+    println!("wrote {OUT}");
     Ok(())
 }

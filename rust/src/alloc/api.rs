@@ -284,6 +284,9 @@ mod handle_tests {
         let d = TempDir::new("handle4");
         let mut o = ManagerOptions::small_for_tests();
         o.shards = 2;
+        // single-node topology pinned: vcpu → shard must stay the plain
+        // modulo on NUMA hosts too
+        o.topology = Some(crate::numa::Topology::fake(&[2]));
         let h = MetallHandle::new(MetallManager::create_with(d.join("s"), o).unwrap());
         assert_eq!(h.num_shards(), 2);
         // more allocations than a cache queue can hold, so each worker is

@@ -30,20 +30,39 @@ use std::sync::{Mutex, RwLock};
 
 use crate::alloc::mlbitset::MlBitset;
 use crate::alloc::object_cache::current_vcpu;
+use crate::numa::Topology;
 
-/// Maps calling threads and recovered chunks to shards.
-#[derive(Clone, Copy, Debug)]
+/// Maps calling threads and recovered chunks to shards, NUMA-aware: on a
+/// multi-node [`Topology`] the shards are dealt round-robin to nodes
+/// (`node_of_shard(s) = s % nnodes`) and a thread's home shard is chosen
+/// among *its own node's* shards — so a shard's bins, remote-free queue,
+/// and (with [`super::manager`]'s first-touch discipline) the DRAM pages
+/// of its chunks all live on the socket of the threads it serves. On a
+/// single node every rule collapses to the pre-NUMA `vcpu % nshards`.
+#[derive(Clone, Debug)]
 pub struct ShardMap {
     nshards: usize,
+    topo: Topology,
 }
 
 impl ShardMap {
+    /// Topology-blind map (single node, every cpu): exactly the pre-NUMA
+    /// `vcpu % nshards` behaviour. The manager uses
+    /// [`Self::with_topology`].
     pub fn new(nshards: usize) -> Self {
-        Self { nshards: nshards.max(1) }
+        Self::with_topology(nshards, Topology::single_node())
+    }
+
+    pub fn with_topology(nshards: usize, topo: Topology) -> Self {
+        Self { nshards: nshards.max(1), topo }
     }
 
     pub fn nshards(&self) -> usize {
         self.nshards
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
     }
 
     /// Home shard of the calling thread (CPU-affine; stable under
@@ -53,9 +72,43 @@ impl ShardMap {
         self.shard_of_vcpu(current_vcpu())
     }
 
+    /// Home shard of a virtual CPU: one of its node's shards, spread
+    /// within the node by the cpu's rank there. Single-node topologies
+    /// (and single-shard managers) keep the plain `vcpu % nshards`.
     #[inline]
     pub fn shard_of_vcpu(&self, vcpu: usize) -> usize {
-        vcpu % self.nshards
+        let nnodes = self.topo.num_nodes();
+        if nnodes <= 1 || self.nshards == 1 {
+            return vcpu % self.nshards;
+        }
+        let node = self.topo.node_of_cpu(vcpu);
+        let k = self.shards_of_node(node);
+        if k == 0 {
+            // fewer shards than nodes: wrap onto somebody's shard
+            return node % self.nshards;
+        }
+        node + (self.topo.rank_in_node(vcpu) % k) * nnodes
+    }
+
+    /// Memory node a shard's chunks are placed on (round-robin deal of
+    /// shards to nodes; node 0 on single-node topologies).
+    #[inline]
+    pub fn node_of_shard(&self, shard: usize) -> usize {
+        let nnodes = self.topo.num_nodes();
+        if nnodes <= 1 {
+            0
+        } else {
+            shard % nnodes
+        }
+    }
+
+    /// How many shards the round-robin deal gives `node`.
+    fn shards_of_node(&self, node: usize) -> usize {
+        let nnodes = self.topo.num_nodes();
+        if node >= self.nshards {
+            return 0;
+        }
+        (self.nshards - node).div_ceil(nnodes)
     }
 
     /// Deterministic shard of a recovered chunk: a store written with N
@@ -82,6 +135,16 @@ pub struct ShardStats {
     pub remote_drained: AtomicU64,
     /// Exclusive (write) bin-lock acquisitions — the contention signal.
     pub exclusive_acquires: AtomicU64,
+    /// Fresh chunks zeroed by this (owning) shard before entering its
+    /// LIFO — the NUMA first-touch fallback, used when `mbind` is
+    /// unavailable. On multi-node topologies every fresh chunk is placed
+    /// by exactly one layer: `bound_chunks + first_touch_chunks ==
+    /// fresh_chunks`.
+    pub first_touch_chunks: AtomicU64,
+    /// Fresh chunks whose extent `mbind` accepted (kernel policy then
+    /// covers every later fault; 0 on NUMA-less kernels, where the
+    /// first-touch fallback takes over).
+    pub bound_chunks: AtomicU64,
 }
 
 /// Snapshot of [`ShardStats`] for one shard.
@@ -94,6 +157,8 @@ pub struct ShardStatsSnapshot {
     pub remote_frees: u64,
     pub remote_drained: u64,
     pub exclusive_acquires: u64,
+    pub first_touch_chunks: u64,
+    pub bound_chunks: u64,
 }
 
 /// One shard of the bin directory: per-size-class non-full-chunk LIFOs
@@ -129,6 +194,8 @@ impl AllocShard {
             remote_frees: ld(&self.stats.remote_frees),
             remote_drained: ld(&self.stats.remote_drained),
             exclusive_acquires: ld(&self.stats.exclusive_acquires),
+            first_touch_chunks: ld(&self.stats.first_touch_chunks),
+            bound_chunks: ld(&self.stats.bound_chunks),
         }
     }
 }
@@ -493,6 +560,57 @@ mod tests {
         assert!(m.home_shard() < 4);
         // zero normalizes to one shard
         assert_eq!(ShardMap::new(0).nshards(), 1);
+    }
+
+    #[test]
+    fn shard_map_routes_vcpus_to_their_nodes_shards() {
+        // the satellite shape: fake 2-node / 8-cpu topology, 4 shards
+        let topo = Topology::fake(&[4, 4]);
+        let m = ShardMap::with_topology(4, topo.clone());
+        // node 0 cpus rotate over shards {0, 2}; node 1 over {1, 3}
+        assert_eq!(m.shard_of_vcpu(0), 0);
+        assert_eq!(m.shard_of_vcpu(1), 2);
+        assert_eq!(m.shard_of_vcpu(2), 0);
+        assert_eq!(m.shard_of_vcpu(3), 2);
+        assert_eq!(m.shard_of_vcpu(4), 1);
+        assert_eq!(m.shard_of_vcpu(5), 3);
+        for s in 0..4 {
+            assert_eq!(m.node_of_shard(s), s % 2);
+        }
+        // the core invariant: a thread's home shard lives on its own node
+        for cpu in 0..8 {
+            assert_eq!(
+                m.node_of_shard(m.shard_of_vcpu(cpu)),
+                topo.node_of_cpu(cpu),
+                "cpu {cpu}"
+            );
+        }
+        // odd shard counts still keep threads node-local
+        let m3 = ShardMap::with_topology(3, topo.clone());
+        for cpu in 0..8 {
+            let s = m3.shard_of_vcpu(cpu);
+            assert!(s < 3);
+            assert_eq!(m3.node_of_shard(s), topo.node_of_cpu(cpu), "cpu {cpu}");
+        }
+        // fewer shards than nodes wraps without panicking
+        let m1 = ShardMap::with_topology(1, Topology::fake(&[2, 2]));
+        for cpu in 0..4 {
+            assert_eq!(m1.shard_of_vcpu(cpu), 0);
+        }
+        assert_eq!(m1.node_of_shard(0), 0);
+    }
+
+    #[test]
+    fn pinned_vcpus_drive_home_shard_across_nodes() {
+        use crate::alloc::object_cache::pin_thread_vcpu;
+        let m = ShardMap::with_topology(4, Topology::fake(&[2, 2]));
+        // vcpus 0,1 are node 0 → shards {0, 2}; vcpus 2,3 node 1 → {1, 3}
+        for (vcpu, want) in [(0usize, 0usize), (1, 2), (2, 1), (3, 3)] {
+            pin_thread_vcpu(Some(vcpu));
+            assert_eq!(m.home_shard(), want, "vcpu {vcpu}");
+        }
+        pin_thread_vcpu(None);
+        assert!(m.home_shard() < 4);
     }
 
     #[test]

@@ -29,6 +29,11 @@
 //!   pools are bypassed entirely and every take goes through the same
 //!   lowest-first sequential probe as the unsharded allocator — that is
 //!   what keeps shard=1 byte-identical on disk.
+//! - `birth` — the NUMA node each small chunk was bound and
+//!   first-touched on by its owning shard (placement introspection), or
+//!   "unknown" for chunks placed before this session (recovered stores)
+//!   and on single-node topologies. Cleared whenever a chunk is freed or
+//!   re-taken; like the shard count, placement is DRAM-only state.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -56,7 +61,13 @@ pub struct ChunkDirectory {
     /// Per-shard min-heaps of freed chunk ids (validated hints). Length is
     /// the shard count; not serialized.
     pools: Vec<BinaryHeap<Reverse<u32>>>,
+    /// Birth node per chunk ([`NO_BIRTH_NODE`] = unknown). Same length as
+    /// `entries`; not serialized.
+    birth: Vec<i32>,
 }
+
+/// Sentinel for "no recorded birth node" (module docs).
+const NO_BIRTH_NODE: i32 = -1;
 
 impl Default for ChunkDirectory {
     fn default() -> Self {
@@ -74,6 +85,7 @@ impl ChunkDirectory {
             entries: Vec::new(),
             owners: Vec::new(),
             pools: (0..nshards.max(1)).map(|_| BinaryHeap::new()).collect(),
+            birth: Vec::new(),
         }
     }
 
@@ -105,13 +117,41 @@ impl ChunkDirectory {
         self.owners[chunk as usize]
     }
 
-    /// Keep `owners` in lockstep after `entries` grew; new chunks default
-    /// to the deterministic recovery assignment until a shard claims them.
+    /// Keep `owners` and `birth` in lockstep after `entries` grew; new
+    /// chunks default to the deterministic recovery assignment (and no
+    /// birth node) until a shard claims them.
     fn sync_owners(&mut self) {
         let n = self.pools.len();
         while self.owners.len() < self.entries.len() {
             self.owners.push((self.owners.len() % n) as u32);
         }
+        self.birth.resize(self.entries.len(), NO_BIRTH_NODE);
+    }
+
+    /// Record the node the owning shard bound + first-touched `chunk` on.
+    pub fn set_birth_node(&mut self, chunk: u32, node: u32) {
+        self.birth[chunk as usize] = node as i32;
+    }
+
+    /// Recorded birth node of `chunk`, if its pages were placed by this
+    /// session.
+    pub fn birth_node(&self, chunk: u32) -> Option<u32> {
+        match self.birth.get(chunk as usize) {
+            Some(&n) if n >= 0 => Some(n as u32),
+            _ => None,
+        }
+    }
+
+    /// Cheap snapshot for placement introspection: `(kind, owner, birth)`
+    /// per chunk — only the three flat arrays, none of the per-shard
+    /// free-pool heaps a full `clone()` would copy.
+    pub fn placement_rows(&self) -> Vec<(ChunkKind, u32, Option<u32>)> {
+        self.entries
+            .iter()
+            .zip(&self.owners)
+            .zip(&self.birth)
+            .map(|((&k, &o), &b)| (k, o, (b >= 0).then_some(b as u32)))
+            .collect()
     }
 
     pub fn len(&self) -> usize {
@@ -198,6 +238,7 @@ impl ChunkDirectory {
     pub fn free_small_chunk_on(&mut self, chunk: u32, shard: u32) {
         debug_assert!(matches!(self.entries[chunk as usize], ChunkKind::Small { .. }));
         self.entries[chunk as usize] = ChunkKind::Free;
+        self.birth[chunk as usize] = NO_BIRTH_NODE;
         if self.pools.len() > 1 {
             self.pools[shard as usize].push(Reverse(chunk));
         }
@@ -211,6 +252,7 @@ impl ChunkDirectory {
         };
         for i in 0..n {
             self.entries[(head + i) as usize] = ChunkKind::Free;
+            self.birth[(head + i) as usize] = NO_BIRTH_NODE;
         }
         n
     }
@@ -437,6 +479,32 @@ mod tests {
         d.free_small_chunk(0);
         assert_eq!(d.take_small_chunk(0), 0, "lowest free id first");
         assert_eq!(d.take_small_chunk(0), 2);
+    }
+
+    #[test]
+    fn birth_node_lifecycle() {
+        let mut d = ChunkDirectory::with_shards(2);
+        let c = d.take_small_chunk_on(0, 1);
+        assert_eq!(d.birth_node(c), None, "fresh chunk has no birth yet");
+        d.set_birth_node(c, 1);
+        assert_eq!(d.birth_node(c), Some(1));
+        // freeing clears the record; retake starts unknown again
+        d.free_small_chunk_on(c, 1);
+        assert_eq!(d.birth_node(c), None);
+        let c2 = d.take_small_chunk_on(0, 1);
+        assert_eq!(c2, c);
+        assert_eq!(d.birth_node(c2), None);
+        // large frees clear too, and deserialized stores know nothing
+        d.set_birth_node(c2, 0);
+        let mut buf = Vec::new();
+        d.serialize_into(&mut buf);
+        let (de, _) = ChunkDirectory::deserialize_from(&buf).unwrap();
+        assert_eq!(de.birth_node(c2), None, "placement is DRAM-only");
+        let head = d.take_large(2);
+        d.free_large(head);
+        assert_eq!(d.birth_node(head), None);
+        // out-of-range ids are a graceful None
+        assert_eq!(d.birth_node(10_000), None);
     }
 
     #[test]

@@ -69,7 +69,10 @@ use crate::alloc::size_class::{
     bin_of, is_small, large_chunks, num_bins, size_of_bin, slots_per_chunk,
 };
 use crate::error::{Error, Result};
+use crate::numa::Topology;
 use crate::storage::bsmmap::BsMsync;
+use crate::storage::mmap::page_size;
+use crate::storage::pagemap;
 use crate::storage::reflink::{self, CopyMethod};
 use crate::storage::segment::{SegmentOptions, SegmentStorage};
 
@@ -95,11 +98,19 @@ pub struct ManagerOptions {
     pub free_file_space: bool,
     /// Parallel per-file msync on sync (§5.2).
     pub parallel_sync: bool,
-    /// Allocator shard count (DRAM-only; `0` = auto:
-    /// `min(available_parallelism, 4)`). `1` reproduces the unsharded
-    /// allocator's on-disk layout bit-for-bit; every count reads every
-    /// other count's datastore — the persistent format does not change.
+    /// Allocator shard count (DRAM-only; `0` = auto: sized from the NUMA
+    /// topology — [`Topology::default_shards`], which is
+    /// `min(available_parallelism, 4)` rounded up to a multiple of the
+    /// node count, and exactly `min(available_parallelism, 4)` on a
+    /// single node). `1` reproduces the unsharded allocator's on-disk
+    /// layout bit-for-bit; every count reads every other count's
+    /// datastore — the persistent format does not change.
     pub shards: usize,
+    /// NUMA topology override (DRAM-only, like the shard count). `None`
+    /// detects the machine topology from `/sys/devices/system/node`
+    /// (single-node fallback when absent); tests and benches inject fakes
+    /// ([`Topology::fake`]) to exercise multi-node placement on any host.
+    pub topology: Option<Topology>,
 }
 
 impl Default for ManagerOptions {
@@ -113,6 +124,7 @@ impl Default for ManagerOptions {
             free_file_space: true,
             parallel_sync: true,
             shards: 0,
+            topology: None,
         }
     }
 }
@@ -130,11 +142,15 @@ impl ManagerOptions {
         }
     }
 
-    fn resolved_shards(&self) -> usize {
+    fn resolved_topology(&self) -> Topology {
+        self.topology.clone().unwrap_or_else(Topology::detect)
+    }
+
+    fn resolved_shards(&self, topo: &Topology) -> usize {
         if self.shards > 0 {
             return self.shards;
         }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
+        topo.default_shards()
     }
 
     fn segment_options(&self, read_only: bool) -> SegmentOptions {
@@ -181,6 +197,71 @@ pub struct StatsSnapshot {
     pub fresh_chunks: u64,
     pub freed_chunks: u64,
     pub large_allocs: u64,
+}
+
+/// Where [`PlacementReport`] got its node-per-page attribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementSource {
+    /// Kernel truth via `move_pages(2)` page queries — used only when the
+    /// topology was *detected* on this machine (an injected topology
+    /// describes sockets the kernel has never heard of).
+    Kernel,
+    /// Recorded birth nodes (the node the owning shard bound and
+    /// first-touched each chunk on). Used for injected topologies and on
+    /// kernels without NUMA page queries.
+    Recorded,
+}
+
+/// Placement of one shard's small chunks (all figures in pages).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardPlacement {
+    pub shard: usize,
+    /// The shard's home memory node ([`ShardMap::node_of_shard`]).
+    pub node: usize,
+    /// Mapped pages of small chunks this shard owns.
+    pub pages: u64,
+    /// … of which reside on the shard's home node.
+    pub node_local_pages: u64,
+    /// … of which reside on some other node.
+    pub remote_pages: u64,
+    /// … of which could not be attributed (not faulted in yet, or placed
+    /// before this session — recovered stores know no birth nodes).
+    pub unknown_pages: u64,
+}
+
+/// Node-per-page histogram of the whole mapped segment, grouped by
+/// owning shard (see [`MetallManager::placement_report`]). Total: every
+/// mapped page is accounted exactly once — small-chunk pages under their
+/// owner's [`ShardPlacement`], the rest under `large_pages`/`free_pages`.
+#[derive(Clone, Debug)]
+pub struct PlacementReport {
+    pub per_shard: Vec<ShardPlacement>,
+    /// Pages of large-allocation chunks (not placed per shard; the
+    /// ROADMAP follow-on is an interleave policy for these).
+    pub large_pages: u64,
+    /// Pages of free chunks and the unused tail of the last backing file.
+    pub free_pages: u64,
+    /// `mapped_len / page_size` — the invariant the report is checked
+    /// against.
+    pub total_pages: u64,
+    pub source: PlacementSource,
+}
+
+impl PlacementReport {
+    /// Pages accounted by the report (must equal `total_pages`).
+    pub fn accounted_pages(&self) -> u64 {
+        self.large_pages
+            + self.free_pages
+            + self.per_shard.iter().map(|s| s.pages).sum::<u64>()
+    }
+
+    /// Fraction of attributed small-chunk pages that are node-local
+    /// (`None` when nothing is attributed yet).
+    pub fn node_local_fraction(&self) -> Option<f64> {
+        let local: u64 = self.per_shard.iter().map(|s| s.node_local_pages).sum();
+        let known: u64 = local + self.per_shard.iter().map(|s| s.remote_pages).sum::<u64>();
+        (known > 0).then(|| local as f64 / known as f64)
+    }
 }
 
 /// Batch error policy for the free paths: process every slot (a partial
@@ -249,10 +330,11 @@ impl MetallManager {
         }
         let segment = SegmentStorage::create(dir.join("segment"), opts.segment_options(false))?;
         let nb = num_bins(opts.chunk_size);
-        let nshards = opts.resolved_shards();
+        let topo = opts.resolved_topology();
+        let nshards = opts.resolved_shards(&topo);
         let mgr = Self {
             shards: (0..nshards).map(|_| AllocShard::new(nb)).collect(),
-            shard_map: ShardMap::new(nshards),
+            shard_map: ShardMap::with_topology(nshards, topo),
             cache: ObjectCache::new(nb),
             chunks: RwLock::new(ChunkDirectory::with_shards(nshards)),
             names: Mutex::new(NameDirectory::new()),
@@ -309,11 +391,12 @@ impl MetallManager {
         let nb = num_bins(opts.chunk_size);
         let (mut chunks, bins, names) = Self::load_management(&dir, nb)?;
         // Rebuild the DRAM-only shard state: ownership is re-dealt
-        // deterministically (`chunk % nshards`), so any shard count
-        // reopens any store.
-        let nshards = opts.resolved_shards();
+        // deterministically (`chunk % nshards`), so any shard count — and
+        // any topology — reopens any store.
+        let topo = opts.resolved_topology();
+        let nshards = opts.resolved_shards(&topo);
         chunks.set_shards(nshards);
-        let shard_map = ShardMap::new(nshards);
+        let shard_map = ShardMap::with_topology(nshards, topo);
         let shards: Vec<AllocShard> = (0..nshards).map(|_| AllocShard::new(nb)).collect();
         for (bin, data) in bins.into_iter().enumerate() {
             for (chunk, bs) in data.into_chunks() {
@@ -554,6 +637,111 @@ impl MetallManager {
         self.shards.len()
     }
 
+    /// The NUMA topology this manager was opened under (DRAM-only; see
+    /// [`ManagerOptions::topology`]).
+    pub fn topology(&self) -> &Topology {
+        self.shard_map.topology()
+    }
+
+    /// Node-per-page histogram of the mapped segment, grouped by owning
+    /// shard. Every mapped page is accounted exactly once
+    /// ([`PlacementReport::accounted_pages`] == `total_pages`): small
+    /// chunks under their owner, everything else under the large/free
+    /// buckets. Attribution is kernel truth (`move_pages`) when the
+    /// topology was detected and the kernel answers, else the recorded
+    /// birth nodes — so the ≥ 95 %-node-local acceptance check runs
+    /// identically under an injected test topology on a 1-node host. On
+    /// single-node topologies every attributed page is trivially local.
+    pub fn placement_report(&self) -> PlacementReport {
+        let ps = page_size();
+        let cs = self.opts.chunk_size;
+        let pages_per_chunk = (cs / ps).max(1) as u64;
+        let mapped = self.segment.mapped_len();
+        let topo = self.shard_map.topology();
+        let rows = self.chunks.read().unwrap().placement_rows();
+        let use_kernel = topo.is_detected() && pagemap::page_node_query_supported();
+        let mut per_shard: Vec<ShardPlacement> = (0..self.shards.len())
+            .map(|s| ShardPlacement {
+                shard: s,
+                node: self.shard_map.node_of_shard(s),
+                ..Default::default()
+            })
+            .collect();
+        // One bounded-window scan of the whole extent up front: the
+        // syscall count stays O(pages / 4096), not O(chunks), however
+        // many chunks the store holds.
+        let kernel_status: Option<Vec<i32>> = if use_kernel {
+            let base = self.segment.base() as usize;
+            let total = mapped / ps;
+            let mut all = Vec::with_capacity(total);
+            while all.len() < total {
+                let n = (total - all.len()).min(4096);
+                match pagemap::page_nodes(base + all.len() * ps, n) {
+                    Some(mut v) => all.append(&mut v),
+                    None => break,
+                }
+            }
+            (all.len() == total).then_some(all)
+        } else {
+            None
+        };
+        let mut large_pages = 0u64;
+        let mut free_pages = 0u64;
+        let mapped_chunks = mapped / cs;
+        for chunk in 0..mapped_chunks {
+            let (kind, owner, birth) = match rows.get(chunk) {
+                Some(&row) => row,
+                None => (ChunkKind::Free, 0, None),
+            };
+            match kind {
+                ChunkKind::Small { .. } => {
+                    let p = &mut per_shard[owner as usize];
+                    p.pages += pages_per_chunk;
+                    let home = p.node;
+                    match &kernel_status {
+                        Some(status) => {
+                            // the kernel reports physical node ids
+                            let home_phys = topo.physical_node(home);
+                            let start = chunk * pages_per_chunk as usize;
+                            for &n in &status[start..start + pages_per_chunk as usize] {
+                                if n < 0 {
+                                    p.unknown_pages += 1; // not faulted in
+                                } else if n as usize == home_phys {
+                                    p.node_local_pages += 1;
+                                } else {
+                                    p.remote_pages += 1;
+                                }
+                            }
+                        }
+                        None => match birth {
+                            Some(n) if n as usize == home => p.node_local_pages += pages_per_chunk,
+                            Some(_) => p.remote_pages += pages_per_chunk,
+                            // single node: there is nowhere else to be
+                            None if topo.num_nodes() <= 1 => p.node_local_pages += pages_per_chunk,
+                            None => p.unknown_pages += pages_per_chunk,
+                        },
+                    }
+                }
+                ChunkKind::LargeHead { .. } | ChunkKind::LargeBody => large_pages += pages_per_chunk,
+                ChunkKind::Free => free_pages += pages_per_chunk,
+            }
+        }
+        // file-size granularity can map a partial trailing chunk
+        free_pages += ((mapped - mapped_chunks * cs) / ps) as u64;
+        let source = if kernel_status.is_some() {
+            PlacementSource::Kernel
+        } else {
+            PlacementSource::Recorded
+        };
+        PlacementReport {
+            per_shard,
+            large_pages,
+            free_pages,
+            total_pages: (mapped / ps) as u64,
+            source,
+        }
+    }
+
     fn num_bins(&self) -> usize {
         self.shards[0].bins.len()
     }
@@ -649,9 +837,70 @@ impl MetallManager {
             chunk
         };
         sh.stats.fresh_chunks.fetch_add(1, Ordering::Relaxed);
+        self.place_fresh_chunk(chunk, shard);
         let slots = slots_per_chunk(bin as usize, cs) as u32;
         let slot = b.add_chunk_and_alloc(chunk, slots);
         Ok(self.slot_offset(chunk, bin, slot))
+    }
+
+    /// NUMA placement of a fresh small chunk (multi-node topologies only;
+    /// single-node managers skip this entirely — kernel first-touch is
+    /// already local there). Two layers; exactly one places each chunk:
+    ///
+    /// 1. `mbind(MPOL_PREFERRED | MPOL_MF_MOVE)` the chunk's extent to
+    ///    the owning shard's node (its *physical* kernel id): every later
+    ///    fault — whichever thread triggers it — lands there, and pages
+    ///    still resident from the chunk's previous life (page-cache
+    ///    survivors under `free_file_space: false`) are migrated. When
+    ///    the bind takes, nothing needs touching: zeroing 2 MiB here
+    ///    would only dirty every page (full-chunk write amplification on
+    ///    the next sync/snapshot) to establish what the policy already
+    ///    guarantees.
+    /// 2. **Owner first touch**, only when `mbind` is unavailable
+    ///    (non-NUMA kernel under an injected test topology, seccomp'd
+    ///    container): zero the whole chunk from the allocating thread —
+    ///    which is homed on the owning shard, hence on the target node —
+    ///    before any slot becomes visible. Without this, the kernel
+    ///    places each page on whatever socket first *writes an object*
+    ///    into it, which under cross-shard frees and cache refills is
+    ///    routinely the wrong one. Zero-filling is safe: the chunk holds
+    ///    no live allocations, and freed chunks were hole-punched (or
+    ///    contain garbage from a dead life), so no data can be clobbered.
+    ///    Known limit: pages still resident from a previous life are
+    ///    *written*, not migrated, by this fallback — only the `mbind`
+    ///    layer (or a hole punch at free time) can re-place those.
+    ///
+    /// The birth node recorded for [`Self::placement_report`] is the
+    /// bind target in layer 1 but the *toucher's own node* in layer 2 —
+    /// so if routing ever hands a shard's fresh chunk to a thread on the
+    /// wrong node, the report shows real `remote_pages` instead of
+    /// echoing the expectation back. Runs under the owner's exclusive
+    /// bin lock, before `add_chunk_and_alloc` publishes the chunk, so no
+    /// other thread can touch these pages first (bin → chunks lock order
+    /// for the record).
+    fn place_fresh_chunk(&self, chunk: u32, shard: usize) {
+        let topo = self.shard_map.topology();
+        if topo.num_nodes() <= 1 {
+            return;
+        }
+        let cs = self.opts.chunk_size;
+        let node = self.shard_map.node_of_shard(shard);
+        let sh = &self.shards[shard];
+        let birth;
+        if self.segment.bind_range(chunk as usize * cs, cs, topo.physical_node(node)) {
+            sh.stats.bound_chunks.fetch_add(1, Ordering::Relaxed);
+            birth = node;
+        } else {
+            unsafe { self.segment.slice_mut(chunk as usize * cs, cs).fill(0) };
+            sh.stats.first_touch_chunks.fetch_add(1, Ordering::Relaxed);
+            birth = topo.node_of_cpu(current_vcpu());
+        }
+        // Deliberately a second (brief) chunk-lock acquisition rather
+        // than folding into the take/extend critical section: mbind may
+        // migrate resident pages and the zero-fill writes a whole chunk —
+        // neither belongs under the directory-wide write lock, and the
+        // birth value depends on which layer placed the chunk.
+        self.chunks.write().unwrap().set_birth_node(chunk, birth as u32);
     }
 
     fn allocate_large(&self, size: usize) -> Result<u64> {
@@ -1478,6 +1727,10 @@ mod tests {
         let store = d.join("s");
         let mut o = ManagerOptions::small_for_tests();
         o.shards = 2;
+        // explicit single-node topology: vcpu → shard stays the plain
+        // modulo wherever this test runs (a detected multi-node topology
+        // would route both pinned vcpus by node instead)
+        o.topology = Some(Topology::fake(&[2]));
         let m = MetallManager::create_with(&store, o).unwrap();
         // allocate on shard 0…
         pin_thread_vcpu(Some(0));
@@ -1573,6 +1826,104 @@ mod tests {
         pin_thread_vcpu(None);
         m.sync().unwrap();
         assert_eq!(m.used_segment_bytes(), 0, "no leaked slots after reshard churn");
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn topology_sizes_default_shard_count() {
+        let d = TempDir::new("mgr-topo-size");
+        // 2 nodes × 4 cpus → 4 shards (min(8, 4), already a multiple of 2)
+        let mut o = ManagerOptions::small_for_tests();
+        o.shards = 0;
+        o.topology = Some(Topology::fake(&[4, 4]));
+        let m = MetallManager::create_with(d.join("a"), o).unwrap();
+        assert_eq!(m.num_shards(), 4);
+        assert_eq!(m.topology().num_nodes(), 2);
+        m.close().unwrap();
+        // 3 nodes × 1 cpu → 3 shards, one per node
+        let mut o = ManagerOptions::small_for_tests();
+        o.shards = 0;
+        o.topology = Some(Topology::fake(&[1, 1, 1]));
+        let m = MetallManager::create_with(d.join("b"), o).unwrap();
+        assert_eq!(m.num_shards(), 3);
+        m.close().unwrap();
+        // an explicit shard count always wins over the topology
+        let mut o = ManagerOptions::small_for_tests();
+        o.shards = 2;
+        o.topology = Some(Topology::fake(&[4, 4]));
+        let m = MetallManager::create_with(d.join("c"), o).unwrap();
+        assert_eq!(m.num_shards(), 2);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn fake_two_node_fresh_chunks_first_touched_by_owner() {
+        use crate::alloc::object_cache::pin_thread_vcpu;
+        let d = TempDir::new("mgr-numa-ft");
+        let mut o = ManagerOptions::small_for_tests();
+        o.shards = 4;
+        o.topology = Some(Topology::fake(&[4, 4])); // satellite shape
+        let m = MetallManager::create_with(d.join("s"), o).unwrap();
+        // vcpu 0 is node 0 → shard 0; vcpu 4 is node 1 → shard 1
+        pin_thread_vcpu(Some(0));
+        let a = m.allocate(64).unwrap();
+        pin_thread_vcpu(Some(4));
+        let b = m.allocate(64).unwrap();
+        // the foreign-node thread writing into shard 0's chunk must not
+        // steal its placement: the owner already first-touched every page
+        m.write::<u64>(a, 0xF00D);
+        pin_thread_vcpu(None);
+        let ss = m.shard_stats();
+        assert!(ss[0].fresh_chunks >= 1 && ss[1].fresh_chunks >= 1, "{ss:?}");
+        // every fresh chunk was placed by exactly one layer: mbind when
+        // the kernel has it, else owner zeroing — never left to whatever
+        // foreign thread faults it first
+        for s in &ss {
+            assert_eq!(
+                s.bound_chunks + s.first_touch_chunks,
+                s.fresh_chunks,
+                "shard {}: every fresh chunk bound or owner-touched",
+                s.shard
+            );
+        }
+        let r = m.placement_report();
+        assert_eq!(r.source, PlacementSource::Recorded, "injected topology");
+        assert_eq!(r.accounted_pages(), r.total_pages, "report is total");
+        for s in &r.per_shard {
+            assert_eq!(s.remote_pages, 0, "shard {}: all chunks born local", s.shard);
+            assert_eq!(s.unknown_pages, 0, "shard {}: all chunks attributed", s.shard);
+        }
+        let frac = r.node_local_fraction().expect("live chunks attributed");
+        assert!(frac >= 0.95, "≥95% node-local, got {frac}");
+        // shard homes alternate nodes (round-robin deal)
+        assert_eq!(
+            r.per_shard.iter().map(|s| s.node).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1]
+        );
+        assert_eq!(m.read::<u64>(a), 0xF00D);
+        let _ = b;
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn single_node_skips_first_touch_and_reports_local() {
+        let d = TempDir::new("mgr-numa-1n");
+        let mut o = ManagerOptions::small_for_tests();
+        o.topology = Some(Topology::fake(&[2]));
+        let m = MetallManager::create_with(d.join("s"), o).unwrap();
+        let off = m.allocate(64).unwrap();
+        let big = m.allocate(3 * m.chunk_size()).unwrap();
+        let ss = m.shard_stats();
+        assert_eq!(ss[0].first_touch_chunks, 0, "single node: no zeroing pass");
+        assert_eq!(ss[0].bound_chunks, 0, "single node: no binding either");
+        let r = m.placement_report();
+        assert_eq!(r.accounted_pages(), r.total_pages);
+        assert!(r.large_pages > 0 && r.per_shard[0].pages > 0);
+        assert_eq!(r.per_shard[0].node, 0);
+        assert_eq!(r.per_shard[0].pages, r.per_shard[0].node_local_pages);
+        assert_eq!(r.node_local_fraction(), Some(1.0));
+        m.deallocate(big).unwrap();
+        m.deallocate(off).unwrap();
         m.close().unwrap();
     }
 

@@ -43,8 +43,39 @@
 //! structurally empty), reproducing the pre-sharding on-disk layout
 //! bit-for-bit.
 //!
-//! Follow-on (ROADMAP): true NUMA placement — `mbind`/first-touch of
-//! each shard's chunks on its socket's memory node.
+//! ## NUMA placement (ROADMAP "True NUMA placement")
+//!
+//! On a multi-node [`crate::numa::Topology`] (detected from
+//! `/sys/devices/system/node` — memory-only nodes excluded — or injected
+//! by tests), the shard count is sized from the topology (a multiple of
+//! the node count), shards are dealt round-robin to nodes, and a
+//! thread's home shard is chosen among *its own node's* shards
+//! ([`bin_dir::ShardMap`]). Each fresh chunk a shard takes is placed by
+//! exactly one of two layers: `mbind(MPOL_PREFERRED)` to the shard's
+//! node (kernel policy then covers every later fault, no page needs
+//! touching), or — when `mbind` is unavailable — **zeroed by the owning
+//! shard before any slot is published**, the first-touch discipline that
+//! pins the chunk's DRAM pages to the owner's socket regardless of which
+//! thread later writes objects into it
+//! (`MetallManager::place_fresh_chunk`).
+//!
+//! Everything degrades gracefully: on single-node topologies the whole
+//! layer is skipped (kernel first-touch is already local), and on kernels
+//! without NUMA support `mbind`/`move_pages` report "couldn't" instead of
+//! erroring — placement is an optimization, never a correctness
+//! requirement. Like the shard count, placement and topology are
+//! DRAM-only: nothing is serialized, and a store written under any
+//! topology reopens under any other.
+//!
+//! Introspection: [`manager::PlacementReport`]
+//! ([`MetallManager::placement_report`]) accounts every mapped page —
+//! kernel truth via `move_pages(2)` on detected topologies, recorded
+//! birth nodes under injected ones — and is exported as
+//! `alloc.shard<N>.node_local_pages` by
+//! [`crate::coordinator::metrics::record_placement`].
+//!
+//! Follow-on (ROADMAP): an interleave policy (`MPOL_INTERLEAVE`) for
+//! read-mostly large segments shared by threads on every node.
 
 pub mod api;
 pub mod size_class;
@@ -57,5 +88,8 @@ pub mod manager;
 
 pub use api::{MetallHandle, SegmentAlloc};
 pub use bin_dir::{ShardMap, ShardStatsSnapshot};
-pub use manager::{ManagerOptions, MetallManager, Persist, StatsSnapshot};
+pub use manager::{
+    ManagerOptions, MetallManager, Persist, PlacementReport, PlacementSource, ShardPlacement,
+    StatsSnapshot,
+};
 pub use object_cache::pin_thread_vcpu;

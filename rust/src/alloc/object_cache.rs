@@ -17,10 +17,11 @@
 //! available, a stable thread-id hash otherwise, or a per-thread pinned
 //! value ([`pin_thread_vcpu`], used by tests and benchmarks to make shard
 //! placement deterministic). Because cache slot (`vcpu % ncores`) and home
-//! shard (`vcpu % nshards`) derive from the same value, each cache slot is
-//! bound to a fixed shard whenever `ncores` is a multiple of the shard
-//! count — objects parked on a core refill allocations that the same
-//! shard's bins would serve.
+//! shard ([`super::bin_dir::ShardMap::shard_of_vcpu`] — `vcpu % nshards`
+//! on a single NUMA node, node-aware routing on multi-node topologies)
+//! derive from the same value, each cache slot is bound to a fixed shard
+//! whenever `ncores` is a multiple of the shard count — objects parked on
+//! a core refill allocations that the same shard's bins would serve.
 
 use std::cell::Cell;
 use std::sync::Mutex;

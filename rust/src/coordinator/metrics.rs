@@ -9,7 +9,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::alloc::bin_dir::ShardStatsSnapshot;
-use crate::alloc::manager::StatsSnapshot;
+use crate::alloc::manager::{PlacementReport, StatsSnapshot};
 
 /// A named set of monotonically increasing counters plus accumulated
 /// phase durations. Cheap to share behind an `Arc`.
@@ -101,6 +101,26 @@ pub fn record_alloc_stats(m: &Metrics, totals: &StatsSnapshot, shards: &[ShardSt
         m.add(&k("remote_frees"), s.remote_frees);
         m.add(&k("remote_drained"), s.remote_drained);
         m.add(&k("exclusive_acquires"), s.exclusive_acquires);
+        m.add(&k("first_touch_chunks"), s.first_touch_chunks);
+        m.add(&k("bound_chunks"), s.bound_chunks);
+    }
+}
+
+/// Fold a NUMA placement report into `m`: per-shard node-locality
+/// counters under `alloc.shard<N>.node_local_pages` (plus
+/// remote/unknown/total) and the segment-wide buckets under
+/// `alloc.placement.*`. Counters are monotonic adds: call once per
+/// report, or feed deltas.
+pub fn record_placement(m: &Metrics, r: &PlacementReport) {
+    m.add("alloc.placement.total_pages", r.total_pages);
+    m.add("alloc.placement.free_pages", r.free_pages);
+    m.add("alloc.placement.large_pages", r.large_pages);
+    for s in &r.per_shard {
+        let k = |name: &str| format!("alloc.shard{}.{name}", s.shard);
+        m.add(&k("node_local_pages"), s.node_local_pages);
+        m.add(&k("remote_pages"), s.remote_pages);
+        m.add(&k("unknown_pages"), s.unknown_pages);
+        m.add(&k("placement_pages"), s.pages);
     }
 }
 
@@ -145,6 +165,7 @@ mod tests {
                 remote_frees: 6,
                 remote_drained: 6,
                 exclusive_acquires: 3,
+                ..Default::default()
             },
         ];
         record_alloc_stats(&m, &totals, &shards);
@@ -158,6 +179,43 @@ mod tests {
         );
         assert_eq!(m.get("alloc.shard1.remote_frees"), 6);
         assert_eq!(m.get("alloc.shard1.exclusive_acquires"), 3);
+    }
+
+    #[test]
+    fn placement_bridge_exports_node_locality() {
+        use crate::alloc::manager::{PlacementSource, ShardPlacement};
+        let m = Metrics::new();
+        let report = PlacementReport {
+            per_shard: vec![
+                ShardPlacement {
+                    shard: 0,
+                    node: 0,
+                    pages: 128,
+                    node_local_pages: 126,
+                    remote_pages: 2,
+                    unknown_pages: 0,
+                },
+                ShardPlacement {
+                    shard: 1,
+                    node: 1,
+                    pages: 64,
+                    node_local_pages: 64,
+                    ..Default::default()
+                },
+            ],
+            large_pages: 32,
+            free_pages: 16,
+            total_pages: 240,
+            source: PlacementSource::Recorded,
+        };
+        assert_eq!(report.accounted_pages(), 240);
+        record_placement(&m, &report);
+        assert_eq!(m.get("alloc.shard0.node_local_pages"), 126);
+        assert_eq!(m.get("alloc.shard0.remote_pages"), 2);
+        assert_eq!(m.get("alloc.shard1.node_local_pages"), 64);
+        assert_eq!(m.get("alloc.shard1.placement_pages"), 64);
+        assert_eq!(m.get("alloc.placement.total_pages"), 240);
+        assert_eq!(m.get("alloc.placement.large_pages"), 32);
     }
 
     #[test]

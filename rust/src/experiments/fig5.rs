@@ -90,7 +90,8 @@ fn manager_opts(p: &Fig5Params, mode: IoMode) -> ManagerOptions {
         // §6.4.2: file-space freeing disabled for cross-FS comparability
         free_file_space: false,
         parallel_sync: true,
-        shards: 0, // auto
+        shards: 0,      // auto
+        topology: None, // machine topology
     }
 }
 

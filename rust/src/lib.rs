@@ -38,6 +38,7 @@
 pub mod error;
 pub mod util;
 pub mod bench_util;
+pub mod numa;
 pub mod storage;
 pub mod alloc;
 pub mod containers;

@@ -1,0 +1,383 @@
+//! NUMA topology: detection, injection, and the cpu→node map the
+//! allocator's shard placement is built on (ROADMAP "True NUMA
+//! placement"; llfree-rs keeps per-core/per-node trees for the same
+//! reason — cross-socket traffic on the allocation path dominates on
+//! big-memory analytics).
+//!
+//! ## Design
+//!
+//! A [`Topology`] is an immutable cpu→node table plus each cpu's rank
+//! within its node. It comes from one of three sources:
+//!
+//! - **Detected** — parsed from `/sys/devices/system/node/node<N>/cpulist`
+//!   at manager creation. Only detected topologies are trusted for
+//!   *kernel-truth* placement introspection (`move_pages` page queries).
+//! - **Single-node fallback** — the sysfs tree is absent (non-NUMA
+//!   kernels, sandboxed CI containers): one node owning every cpu. All
+//!   placement machinery degrades to no-ops; nothing fails.
+//! - **Injected** — tests and benches construct fake topologies
+//!   ([`Topology::fake`]) so shard sizing, vcpu→shard routing, and the
+//!   first-touch discipline are exercised on hosts with one real node.
+//!   Under an injected topology, placement introspection attributes pages
+//!   by their *recorded birth node* (the node the owning shard bound and
+//!   first-touched the chunk on) instead of asking the kernel — the whole
+//!   placement pipeline stays testable in a 1-node container.
+//!
+//! The topology is DRAM-only state, exactly like the shard count: nothing
+//! about it is serialized, and a store written under any topology reopens
+//! under any other.
+
+use std::path::Path;
+
+/// Where a [`Topology`] came from (module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologySource {
+    /// Parsed from `/sys/devices/system/node`.
+    Detected,
+    /// Sysfs absent or unreadable: one node owning every cpu.
+    SingleNode,
+    /// Constructed by a test or bench ([`Topology::fake`]).
+    Injected,
+}
+
+const UNKNOWN: u32 = u32::MAX;
+
+/// An immutable cpu→node map (module docs). Cheap to clone.
+///
+/// Node ids are *dense* (`0..num_nodes`): sparse online-node sets and
+/// memory-only (cpu-less, e.g. CXL) nodes are normalized away, because
+/// the allocator deals shards and routes threads over nodes that can
+/// actually run them. The kernel, however, speaks *physical* node ids —
+/// [`Self::physical_node`] maps back for `mbind`/`move_pages`.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    /// Node of each cpu id (`UNKNOWN` for holes in sparse cpu sets).
+    node_of_cpu: Vec<u32>,
+    /// Rank of each cpu within its node's sorted cpu list.
+    rank_in_node: Vec<u32>,
+    /// Physical (kernel) node id per dense node (identity for injected
+    /// and single-node topologies).
+    phys: Vec<usize>,
+    nnodes: usize,
+    source: TopologySource,
+}
+
+impl Topology {
+    /// Detect the machine topology from `/sys/devices/system/node`,
+    /// falling back to a single node when the tree is absent (non-NUMA
+    /// kernel) or unparsable.
+    pub fn detect() -> Self {
+        Self::detect_from("/sys/devices/system/node")
+    }
+
+    /// [`Self::detect`] with the sysfs root injectable (unit tests point
+    /// this at a fake tree).
+    pub fn detect_from(root: impl AsRef<Path>) -> Self {
+        match Self::parse_sysfs(root.as_ref()) {
+            Some(t) if t.num_cpus() > 0 => t,
+            _ => Self::single_node(),
+        }
+    }
+
+    fn parse_sysfs(root: &Path) -> Option<Self> {
+        let entries = std::fs::read_dir(root).ok()?;
+        let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+        for entry in entries {
+            let entry = entry.ok()?;
+            let name = match entry.file_name().into_string() {
+                Ok(n) => n,
+                Err(_) => continue,
+            };
+            let id = match name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) {
+                Some(id) => id,
+                None => continue, // `has_cpu`, `online`, `possible`, …
+            };
+            let list = std::fs::read_to_string(entry.path().join("cpulist")).ok()?;
+            nodes.push((id, parse_cpulist(list.trim())?));
+        }
+        // Memory-only nodes (empty cpulist — CXL expanders, ballooned
+        // nodes) are dropped: no thread is ever scheduled there, so
+        // dealing them shards would create queues nobody drains and
+        // deliberately bind chunks to far memory. (The interleave
+        // follow-on is the right consumer for such nodes.)
+        nodes.retain(|(_, l)| !l.is_empty());
+        if nodes.is_empty() {
+            return None;
+        }
+        // Renumber densely in sysfs-id order (sparse online node sets
+        // exist on real machines; the allocator wants 0..nnodes), keeping
+        // the physical id for the syscall layer.
+        nodes.sort_unstable_by_key(|&(id, _)| id);
+        let phys: Vec<usize> = nodes.iter().map(|&(id, _)| id).collect();
+        let lists: Vec<Vec<usize>> = nodes.into_iter().map(|(_, l)| l).collect();
+        Some(Self::build(&lists, phys, TopologySource::Detected))
+    }
+
+    /// One node owning every cpu the process can run on.
+    pub fn single_node() -> Self {
+        let ncpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::from_node_cpus(&[(0..ncpus).collect()], TopologySource::SingleNode)
+    }
+
+    /// Injectable fake: node `i` owns `cpus_per_node[i]` consecutive cpu
+    /// ids (`fake(&[4, 4])` = 2 nodes × 4 cpus, cpus 0–3 on node 0).
+    pub fn fake(cpus_per_node: &[usize]) -> Self {
+        let mut lists = Vec::with_capacity(cpus_per_node.len());
+        let mut next = 0usize;
+        for &k in cpus_per_node {
+            lists.push((next..next + k).collect());
+            next += k;
+        }
+        Self::from_node_cpus(&lists, TopologySource::Injected)
+    }
+
+    /// Injectable fake with explicit per-node cpu lists (interleaved,
+    /// sparse — whatever shape the test needs).
+    pub fn inject(node_cpus: &[Vec<usize>]) -> Self {
+        Self::from_node_cpus(node_cpus, TopologySource::Injected)
+    }
+
+    fn from_node_cpus(lists: &[Vec<usize>], source: TopologySource) -> Self {
+        let phys = (0..lists.len().max(1)).collect();
+        Self::build(lists, phys, source)
+    }
+
+    fn build(lists: &[Vec<usize>], mut phys: Vec<usize>, source: TopologySource) -> Self {
+        let nnodes = lists.len().max(1);
+        let table = lists.iter().flatten().max().map(|&m| m + 1).unwrap_or(0);
+        let mut node_of_cpu = vec![UNKNOWN; table];
+        let mut rank_in_node = vec![0u32; table];
+        for (n, list) in lists.iter().enumerate() {
+            let mut sorted = list.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            for (rank, &cpu) in sorted.iter().enumerate() {
+                node_of_cpu[cpu] = n as u32;
+                rank_in_node[cpu] = rank as u32;
+            }
+        }
+        phys.resize(nnodes, 0);
+        Self { node_of_cpu, rank_in_node, phys, nnodes, source }
+    }
+
+    pub fn source(&self) -> TopologySource {
+        self.source
+    }
+
+    /// Only detected topologies may consult the kernel for page placement
+    /// (injected ones describe a machine that does not exist here).
+    pub fn is_detected(&self) -> bool {
+        self.source == TopologySource::Detected
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nnodes
+    }
+
+    /// Cpus the topology knows about (not necessarily contiguous ids).
+    pub fn num_cpus(&self) -> usize {
+        self.node_of_cpu.iter().filter(|&&n| n != UNKNOWN).count()
+    }
+
+    /// Node of a (virtual) cpu. Ids beyond the table — thread-id-hash
+    /// vcpus, test pins past the fake cpu count — wrap deterministically
+    /// so every vcpu always has a home node.
+    pub fn node_of_cpu(&self, cpu: usize) -> usize {
+        match self.node_of_cpu.get(cpu) {
+            Some(&n) if n != UNKNOWN => n as usize,
+            _ => cpu % self.nnodes,
+        }
+    }
+
+    /// Rank of a cpu within its node (same wrap rule as
+    /// [`Self::node_of_cpu`] for unknown ids).
+    pub fn rank_in_node(&self, cpu: usize) -> usize {
+        match self.node_of_cpu.get(cpu) {
+            Some(&n) if n != UNKNOWN => self.rank_in_node[cpu] as usize,
+            _ => cpu / self.nnodes,
+        }
+    }
+
+    /// Physical (kernel) id of a dense node — what `mbind`/`move_pages`
+    /// expect. Identity except on machines with sparse online-node sets
+    /// or dropped memory-only nodes.
+    pub fn physical_node(&self, node: usize) -> usize {
+        self.phys.get(node).copied().unwrap_or(node)
+    }
+
+    /// Default allocator shard count for this topology: the pre-NUMA
+    /// heuristic `min(num_cpus, 4)` rounded up to a multiple of the node
+    /// count, so every node gets the same number of shards and the
+    /// vcpu→shard map can keep threads on their own node's shards. On a
+    /// single node this is exactly the old `min(num_cpus, 4)`.
+    pub fn default_shards(&self) -> usize {
+        let base = self.num_cpus().min(4).max(1);
+        let n = self.nnodes.max(1);
+        n * base.div_ceil(n)
+    }
+}
+
+/// Parse a sysfs cpulist (`"0-3,8,10-11"`). Empty input (memory-only
+/// nodes) is a valid empty list; malformed input is `None`.
+pub fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
+    let mut cpus = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().ok()?;
+                let hi: usize = hi.trim().parse().ok()?;
+                if hi < lo {
+                    return None;
+                }
+                cpus.extend(lo..=hi);
+            }
+            None => cpus.push(part.parse().ok()?),
+        }
+    }
+    Some(cpus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist(""), Some(vec![]));
+        assert_eq!(parse_cpulist("0"), Some(vec![0]));
+        assert_eq!(parse_cpulist("0-3"), Some(vec![0, 1, 2, 3]));
+        assert_eq!(parse_cpulist("0-1,4,6-7"), Some(vec![0, 1, 4, 6, 7]));
+        assert_eq!(parse_cpulist(" 2 , 5-6 "), Some(vec![2, 5, 6]));
+        assert_eq!(parse_cpulist("x"), None);
+        assert_eq!(parse_cpulist("3-1"), None);
+        assert_eq!(parse_cpulist("1-"), None);
+    }
+
+    #[test]
+    fn fake_two_node_eight_cpu() {
+        let t = Topology::fake(&[4, 4]);
+        assert_eq!(t.source(), TopologySource::Injected);
+        assert!(!t.is_detected());
+        assert_eq!(t.num_nodes(), 2);
+        assert_eq!(t.num_cpus(), 8);
+        for cpu in 0..4 {
+            assert_eq!(t.node_of_cpu(cpu), 0);
+            assert_eq!(t.rank_in_node(cpu), cpu);
+        }
+        for cpu in 4..8 {
+            assert_eq!(t.node_of_cpu(cpu), 1);
+            assert_eq!(t.rank_in_node(cpu), cpu - 4);
+        }
+        // vcpus beyond the table wrap deterministically
+        assert_eq!(t.node_of_cpu(9), 1);
+        assert_eq!(t.rank_in_node(9), 4);
+    }
+
+    #[test]
+    fn injected_interleaved_cpus() {
+        // even cpus on node 0, odd on node 1 (a real AMD layout)
+        let t = Topology::inject(&[vec![0, 2, 4, 6], vec![1, 3, 5, 7]]);
+        assert_eq!(t.num_nodes(), 2);
+        assert_eq!(t.node_of_cpu(4), 0);
+        assert_eq!(t.rank_in_node(4), 2);
+        assert_eq!(t.node_of_cpu(3), 1);
+        assert_eq!(t.rank_in_node(3), 1);
+    }
+
+    #[test]
+    fn detect_falls_back_to_single_node() {
+        let t = Topology::detect_from("/nonexistent/sysfs/node/tree");
+        assert_eq!(t.source(), TopologySource::SingleNode);
+        assert_eq!(t.num_nodes(), 1);
+        assert!(t.num_cpus() >= 1);
+        for cpu in 0..64 {
+            assert_eq!(t.node_of_cpu(cpu), 0);
+        }
+        // detect() itself must never panic, whatever this host has
+        assert!(Topology::detect().num_nodes() >= 1);
+    }
+
+    #[test]
+    fn detect_parses_a_fake_sysfs_tree() {
+        let d = TempDir::new("numa-sysfs");
+        for (node, list) in [("node0", "0-2\n"), ("node2", "3,5\n")] {
+            let p = d.join(node);
+            std::fs::create_dir_all(&p).unwrap();
+            std::fs::write(p.join("cpulist"), list).unwrap();
+        }
+        // decoy entries like the real tree has
+        std::fs::write(d.join("possible"), "0,2\n").unwrap();
+        let t = Topology::detect_from(d.path());
+        assert_eq!(t.source(), TopologySource::Detected);
+        assert!(t.is_detected());
+        // node ids are renumbered densely: sysfs node2 becomes node 1…
+        assert_eq!(t.num_nodes(), 2);
+        assert_eq!(t.num_cpus(), 5);
+        assert_eq!(t.node_of_cpu(1), 0);
+        assert_eq!(t.node_of_cpu(3), 1);
+        assert_eq!(t.node_of_cpu(5), 1);
+        assert_eq!(t.rank_in_node(5), 1);
+        // …but the syscall layer still sees the physical id 2
+        assert_eq!(t.physical_node(0), 0);
+        assert_eq!(t.physical_node(1), 2);
+        // cpu 4 is a hole: wraps
+        assert_eq!(t.node_of_cpu(4), 0);
+    }
+
+    #[test]
+    fn detect_drops_memory_only_nodes() {
+        let d = TempDir::new("numa-cxl");
+        for (node, list) in [("node0", "0-3\n"), ("node1", "\n"), ("node3", "4-7\n")] {
+            let p = d.join(node);
+            std::fs::create_dir_all(&p).unwrap();
+            std::fs::write(p.join("cpulist"), list).unwrap();
+        }
+        let t = Topology::detect_from(d.path());
+        // the cpu-less node1 (a CXL-style memory expander) is not dealt
+        // shards; the cpu nodes keep their physical ids for the kernel
+        assert_eq!(t.num_nodes(), 2);
+        assert_eq!(t.node_of_cpu(6), 1);
+        assert_eq!(t.physical_node(1), 3);
+        // injected topologies are identity-mapped
+        assert_eq!(Topology::fake(&[2, 2]).physical_node(1), 1);
+        // a tree with only memory nodes falls back to single-node
+        let d2 = TempDir::new("numa-all-cxl");
+        let p = d2.join("node0");
+        std::fs::create_dir_all(&p).unwrap();
+        std::fs::write(p.join("cpulist"), "\n").unwrap();
+        assert_eq!(Topology::detect_from(d2.path()).source(), TopologySource::SingleNode);
+    }
+
+    #[test]
+    fn detect_rejects_corrupt_tree() {
+        let d = TempDir::new("numa-bad");
+        let p = d.join("node0");
+        std::fs::create_dir_all(&p).unwrap();
+        std::fs::write(p.join("cpulist"), "not-a-list\n").unwrap();
+        let t = Topology::detect_from(d.path());
+        assert_eq!(t.source(), TopologySource::SingleNode);
+    }
+
+    #[test]
+    fn default_shards_sizing() {
+        // single node: the pre-NUMA heuristic min(cpus, 4)
+        assert_eq!(Topology::fake(&[2]).default_shards(), 2);
+        assert_eq!(Topology::fake(&[16]).default_shards(), 4);
+        // 2 nodes × 4 cpus: min(8, 4) already a multiple of 2
+        assert_eq!(Topology::fake(&[4, 4]).default_shards(), 4);
+        // 2 nodes × 1 cpu: 2 shards, one per node
+        assert_eq!(Topology::fake(&[1, 1]).default_shards(), 2);
+        // 3 nodes: min(12, 4) = 4 rounds up to 6, a multiple of 3
+        assert_eq!(Topology::fake(&[4, 4, 4]).default_shards(), 6);
+        // a multiple of the node count in every case
+        for shape in [&[1usize, 2][..], &[3, 3], &[2, 2, 2, 2]] {
+            let t = Topology::fake(shape);
+            assert_eq!(t.default_shards() % t.num_nodes(), 0, "{shape:?}");
+        }
+    }
+}

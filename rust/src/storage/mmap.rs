@@ -193,6 +193,48 @@ pub fn madvise_remove(addr: *mut u8, len: usize) -> Result<()> {
     Ok(())
 }
 
+/// `MPOL_PREFERRED`: allocate on the given node when possible, silently
+/// fall back to other nodes under memory pressure — the graceful flavour
+/// of `mbind` (`MPOL_BIND` can OOM a full node; placement is an
+/// optimization here, never a correctness requirement).
+const MPOL_PREFERRED: libc::c_long = 1;
+
+/// `MPOL_MF_MOVE`: migrate pages already resident in the range that do
+/// not conform to the policy. Needed for recycled extents — pages can
+/// survive a free (page-cache residency under `MADV_DONTNEED`, the
+/// `free_file_space: false` configs) still placed by their previous
+/// owner, and neither a new policy alone nor writing to them would move
+/// them.
+const MPOL_MF_MOVE: libc::c_long = 1 << 1;
+
+/// Best-effort NUMA bind: future page faults in `[addr, addr+len)` prefer
+/// `node`, and pages already resident elsewhere are migrated
+/// (`MPOL_MF_MOVE`, exclusively-mapped pages only — the kernel's rule).
+/// Returns whether the policy took. Every failure mode of the raw
+/// `mbind(2)` syscall (glibc does not export a wrapper) degrades to the
+/// kernel's default first-touch policy instead of erroring: `ENOSYS` on
+/// non-NUMA kernels, `EINVAL` when the node does not exist, `EPERM` in
+/// locked-down containers.
+pub fn mbind_preferred(addr: *mut u8, len: usize, node: usize) -> bool {
+    let mask_bits = 8 * std::mem::size_of::<libc::c_ulong>();
+    if node >= mask_bits {
+        return false;
+    }
+    let nodemask: libc::c_ulong = 1 << node;
+    let rc = unsafe {
+        libc::syscall(
+            libc::SYS_mbind,
+            addr as *mut libc::c_void,
+            len as libc::c_ulong,
+            MPOL_PREFERRED,
+            &nodemask as *const libc::c_ulong,
+            mask_bits as libc::c_ulong,
+            MPOL_MF_MOVE,
+        )
+    };
+    rc == 0
+}
+
 /// `fallocate(FALLOC_FL_PUNCH_HOLE)` directly on a file.
 pub fn punch_hole(file: &File, offset: u64, len: u64) -> Result<()> {
     let rc = unsafe {
@@ -324,6 +366,25 @@ mod tests {
         unsafe {
             assert_eq!(*vm.base().add(ps), 1);
         }
+    }
+
+    #[test]
+    fn mbind_preferred_degrades_gracefully() {
+        let ps = page_size();
+        let (_d, f) = tmpfile(4 * ps);
+        let vm = VmReservation::reserve(4 * ps).unwrap();
+        vm.map_file(0, &f, 0, 4 * ps, Prot::ReadWrite, Share::Shared, false).unwrap();
+        // node 0 exists everywhere NUMA does; on non-NUMA kernels the call
+        // reports false instead of failing — either way the mapping stays
+        // fully usable
+        let bound = mbind_preferred(vm.base(), 4 * ps, 0);
+        unsafe {
+            *vm.base() = 0x5A;
+            assert_eq!(*vm.base(), 0x5A);
+        }
+        // an impossible node is always a graceful no
+        assert!(!mbind_preferred(vm.base(), ps, 4096));
+        let _ = bound;
     }
 
     #[test]

@@ -107,6 +107,66 @@ pub fn coalesce(pages: &[usize]) -> Vec<Range<usize>> {
     runs
 }
 
+/// NUMA node of `npages` pages starting at `addr` (page aligned), via
+/// `move_pages(2)` in query mode (a NULL `nodes` argument asks instead of
+/// moves). Each entry is the node id (≥ 0) or a negative errno — notably
+/// `-ENOENT` for pages not faulted in yet. Returns `None` when the kernel
+/// cannot answer at all (non-NUMA builds, seccomp'd containers): the
+/// caller degrades to recorded placement, the same graceful path the
+/// binding side takes.
+pub fn page_nodes(addr: usize, npages: usize) -> Option<Vec<i32>> {
+    if npages == 0 {
+        return Some(Vec::new());
+    }
+    let ps = page_size();
+    debug_assert_eq!(addr % ps, 0);
+    let pages: Vec<*const libc::c_void> =
+        (0..npages).map(|i| (addr + i * ps) as *const libc::c_void).collect();
+    let mut status = vec![i32::MIN; npages];
+    let rc = unsafe {
+        libc::syscall(
+            libc::SYS_move_pages,
+            0 as libc::c_long, // self
+            npages as libc::c_ulong,
+            pages.as_ptr(),
+            std::ptr::null::<libc::c_int>(), // query, don't move
+            status.as_mut_ptr(),
+            0 as libc::c_long,
+        )
+    };
+    if rc != 0 {
+        return None;
+    }
+    Some(status)
+}
+
+/// Whether [`page_nodes`] works here (probed once on a present anonymous
+/// page; placement introspection falls back to recorded birth nodes when
+/// it does not).
+pub fn page_node_query_supported() -> bool {
+    static SUPPORTED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *SUPPORTED.get_or_init(|| {
+        let ps = page_size();
+        let p = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                ps,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_PRIVATE | libc::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if p == libc::MAP_FAILED {
+            return false;
+        }
+        unsafe { *(p as *mut u8) = 1 };
+        let ok = matches!(page_nodes(p as usize, 1), Some(v) if v[0] >= 0);
+        unsafe { libc::munmap(p, ps) };
+        ok
+    })
+}
+
 /// Whether this kernel actually tracks soft-dirty (CONFIG_MEM_SOFT_DIRTY).
 /// Some kernels (including this testbed's) only have
 /// `CONFIG_HAVE_ARCH_SOFT_DIRTY`; bit 55 then never gets set. bs-mmap
@@ -204,6 +264,26 @@ mod tests {
         assert_eq!(dirty, vec![1, 2, 9]);
         let runs = pm.dirty_runs(vm.base() as usize, n, false).unwrap();
         assert_eq!(runs, vec![1..3, 9..10]);
+    }
+
+    #[test]
+    fn page_node_query_degrades_gracefully() {
+        // the probe is stable (OnceLock) and, when the kernel answers at
+        // all, a freshly written anon page reports a real node
+        assert_eq!(page_node_query_supported(), page_node_query_supported());
+        let ps = page_size();
+        let n = 4;
+        let (_d, vm) = mapped_private(n);
+        unsafe {
+            *vm.base() = 1; // page 0 present
+        }
+        match page_nodes(vm.base() as usize, n) {
+            None => assert!(!page_node_query_supported(), "query works but probe says no"),
+            Some(status) => {
+                assert_eq!(status.len(), n);
+                assert!(status[0] >= 0, "present page has a node: {status:?}");
+            }
+        }
     }
 
     #[test]

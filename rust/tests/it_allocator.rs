@@ -6,6 +6,8 @@ use std::collections::HashMap;
 
 use metall_rs::alloc::size_class::{bin_of, size_of_bin};
 use metall_rs::alloc::{pin_thread_vcpu, ManagerOptions, MetallManager, SegmentAlloc};
+use metall_rs::numa::Topology;
+use metall_rs::storage::mmap::page_size;
 use metall_rs::baselines::bip::BipAllocator;
 use metall_rs::baselines::pmemkind::{MadvMode, PmemKindAllocator};
 use metall_rs::baselines::ralloc_like::RallocLike;
@@ -288,12 +290,16 @@ fn property_trace_against_oracle() {
     m.close().unwrap();
 }
 
-/// Cross-shard property trace: a 4-shard manager driven from one thread
-/// whose home shard rotates every step, so objects are routinely freed
-/// from a different shard than the one that allocated them (remote-free
-/// queue path). Checked against a shadow oracle; afterwards the store is
-/// reopened with 2 shards and then 1 shard (recovery re-deals chunk
-/// ownership), contents are verified, and a full free must leak nothing.
+/// Cross-shard property trace: a 4-shard manager under an injected
+/// 2-node topology, driven from one thread whose pinned vcpu — hence
+/// home node *and* home shard — rotates every step, so objects are
+/// routinely freed from a different shard (and node) than the one that
+/// allocated them (remote-free queue path). Checked against a shadow
+/// oracle; afterwards placement must be 100 % node-local (every chunk is
+/// first-touched by its owner, wherever it is later freed from), the
+/// store is reopened with 2 shards and then 1 shard (recovery re-deals
+/// chunk ownership), contents are verified, and a full free must leak
+/// nothing.
 #[test]
 fn cross_shard_property_trace_and_reshard_reopen() {
     const STEPS: usize = 6000;
@@ -304,6 +310,9 @@ fn cross_shard_property_trace_and_reshard_reopen() {
         file_size: 1 << 20,
         vm_reserve: 4 << 30,
         shards: 4,
+        // vcpus 0–1 on node 0, 2–3 on node 1: the rotating pin below
+        // alternates nodes as well as shards
+        topology: Some(Topology::fake(&[2, 2])),
         ..Default::default()
     };
     let m = MetallManager::create_with(&store, opts).unwrap();
@@ -336,11 +345,12 @@ fn cross_shard_property_trace_and_reshard_reopen() {
             m.deallocate(off).unwrap();
         }
     }
-    // deterministic cross-shard burst: allocate a batch on shard 0 (at
-    // most PER_BIN_CAP of these can come from the mixed-owner cache; the
-    // rest are claims from shard 0's own chunks), then free it all from
-    // shard 1 — the spill must park shard-0-owned slots on the remote
-    // queue
+    // deterministic cross-shard burst: allocate a batch on vcpu 0's home
+    // shard (at most PER_BIN_CAP of these can come from the mixed-owner
+    // cache; the rest are claims from that shard's own chunks), then free
+    // it all from vcpu 1's home shard — a different shard under this
+    // topology — so the spill must park foreign-owned slots on the
+    // owner's remote queue
     pin_thread_vcpu(Some(0));
     let extra: Vec<u64> = (0..200).map(|_| m.allocate(8).unwrap()).collect();
     pin_thread_vcpu(Some(1));
@@ -352,6 +362,28 @@ fn cross_shard_property_trace_and_reshard_reopen() {
     assert!(
         ss.iter().map(|s| s.remote_frees).sum::<u64>() > 0,
         "cross-shard burst must exercise the remote-free queue: {ss:?}"
+    );
+    // placement under the rotating node pins: every fresh chunk was
+    // placed by exactly one layer (mbind when available, else zeroed by
+    // its owning shard on its own node), so the report attributes 100 %
+    // (≥ 95 % acceptance bar) node-local
+    for s in &ss {
+        assert_eq!(
+            s.bound_chunks + s.first_touch_chunks,
+            s.fresh_chunks,
+            "shard {} bound or owner-touched",
+            s.shard
+        );
+    }
+    let r = m.placement_report();
+    assert_eq!(r.accounted_pages(), r.total_pages, "report is total");
+    for s in &r.per_shard {
+        assert_eq!(s.remote_pages, 0, "shard {} node-local", s.shard);
+        assert_eq!(s.unknown_pages, 0, "shard {} fully attributed", s.shard);
+    }
+    assert!(
+        r.node_local_fraction().unwrap_or(0.0) >= 0.95,
+        "≥95% node-local under rotating node pins: {r:?}"
     );
     m.close().unwrap();
 
@@ -381,6 +413,89 @@ fn cross_shard_property_trace_and_reshard_reopen() {
     }
     m.sync().unwrap();
     assert_eq!(m.used_segment_bytes(), 0, "cross-shard churn leaked chunks");
+    m.close().unwrap();
+}
+
+/// Placement-introspection contract: `placement_report()` is *total*
+/// (every mapped page accounted exactly once), stays total and all-local
+/// across a close/open cycle, and on single-node hosts attributes every
+/// page to node 0.
+#[test]
+fn placement_report_total_stable_and_all_node0_on_single_node() {
+    let d = TempDir::new("fz-placement");
+    let store = d.join("s");
+    let opts = ManagerOptions {
+        chunk_size: CHUNK,
+        file_size: 1 << 20,
+        vm_reserve: 4 << 30,
+        ..Default::default()
+    };
+    let m = MetallManager::create_with(&store, opts.clone()).unwrap();
+    // a mix that populates every bucket: small chunks across bins, a
+    // multi-chunk large allocation, and freed chunks
+    let mut rng = Xoshiro256ss::new(0xBEEF);
+    let mut live = Vec::new();
+    for i in 0..400usize {
+        let off = m.allocate(8 + rng.gen_range(2000) as usize).unwrap();
+        if i % 3 == 0 {
+            m.deallocate(off).unwrap();
+        } else {
+            live.push(off);
+        }
+    }
+    let big = m.allocate(3 * CHUNK).unwrap();
+    // a freed chunk-run guarantees the Free bucket is populated (large
+    // frees release their chunks immediately, no cache in between)
+    let filler = m.allocate(2 * CHUNK).unwrap();
+    m.deallocate(filler).unwrap();
+    let check_total = |m: &MetallManager| {
+        let r = m.placement_report();
+        let ps = page_size();
+        assert_eq!(r.total_pages as usize, m.segment().mapped_len() / ps, "mapped coverage");
+        assert_eq!(r.accounted_pages(), r.total_pages, "every page accounted once");
+        if m.topology().num_nodes() == 1 {
+            // all-node-0 on single-node hosts, wherever the data came from
+            for s in &r.per_shard {
+                assert_eq!(s.node, 0, "shard {} homed on node 0", s.shard);
+                assert_eq!(s.remote_pages, 0, "shard {} nothing remote", s.shard);
+                assert_eq!(
+                    s.pages,
+                    s.node_local_pages + s.unknown_pages,
+                    "shard {} pages split local/unknown only",
+                    s.shard
+                );
+            }
+        }
+        r
+    };
+    let before = check_total(&m);
+    assert!(before.per_shard.iter().map(|s| s.pages).sum::<u64>() > 0, "live small chunks");
+    assert!(before.large_pages > 0, "large bucket populated");
+    assert!(before.free_pages > 0, "free bucket populated");
+    m.close().unwrap();
+
+    // totality and (single-node) locality are stable across close/open —
+    // placement is DRAM-only, so reattach must rebuild a coherent view
+    let m = MetallManager::open_with(&store, opts, false, false).unwrap();
+    let after = check_total(&m);
+    assert_eq!(after.total_pages, before.total_pages, "mapped extent stable");
+    assert_eq!(
+        after.per_shard.iter().map(|s| s.pages).sum::<u64>()
+            + after.large_pages
+            + after.free_pages,
+        before.per_shard.iter().map(|s| s.pages).sum::<u64>()
+            + before.large_pages
+            + before.free_pages,
+        "bucket totals stable across reattach"
+    );
+    m.deallocate(big).unwrap();
+    for off in live {
+        m.deallocate(off).unwrap();
+    }
+    m.sync().unwrap();
+    let drained = m.placement_report();
+    assert_eq!(drained.accounted_pages(), drained.total_pages);
+    assert_eq!(drained.per_shard.iter().map(|s| s.pages).sum::<u64>(), 0, "all chunks freed");
     m.close().unwrap();
 }
 

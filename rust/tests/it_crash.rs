@@ -19,6 +19,7 @@ use std::process::Command;
 
 use metall_rs::alloc::{pin_thread_vcpu, ManagerOptions, MetallManager};
 use metall_rs::containers::PVec;
+use metall_rs::numa::Topology;
 use metall_rs::util::rng::Xoshiro256ss;
 use metall_rs::util::tmp::TempDir;
 
@@ -47,11 +48,18 @@ fn crash_child_entry() {
 
     let store = dir.join("s");
     // the "*-shards4" modes run the same trace on a 4-shard manager with
-    // the home shard rotating per op (cross-shard alloc/free traffic)
-    let sharded = mode.ends_with("shards4");
+    // the home shard rotating per op (cross-shard alloc/free traffic);
+    // "crash-numa2" additionally injects a fake 2-node topology so the
+    // rotation crosses nodes and every fresh chunk goes through the
+    // bind + owner-first-touch placement path before the kill
+    let numa = mode == "crash-numa2";
+    let sharded = mode.ends_with("shards4") || numa;
     let mut opts = ManagerOptions::small_for_tests();
     if sharded {
         opts.shards = 4;
+    }
+    if numa {
+        opts.topology = Some(Topology::fake(&[2, 2]));
     }
     let m = MetallManager::create_with(&store, opts).unwrap();
     let v = PVec::<u64>::create(&m).unwrap();
@@ -218,6 +226,53 @@ fn kill9_with_4_shards_snapshot_reopens_with_fewer_shards() {
         s.close().unwrap();
     }
     // and the default (auto-shard) open still accepts it
+    assert_snapshot_intact(&d.join("snap"));
+}
+
+/// Placement is DRAM-only state, exactly like the shard count: a store
+/// mutated under an injected 2-node topology (fresh chunks bound and
+/// owner-first-touched across both fake nodes) and kill-9ed must leave a
+/// refused dirty store whose pre-crash snapshot reopens cleanly under an
+/// explicit *1-node* topology — nothing about placement may leak into
+/// the persistent image.
+#[test]
+fn kill9_under_fake_2node_topology_reopens_on_1node() {
+    use std::os::unix::process::ExitStatusExt;
+    let d = TempDir::new("crash-numa");
+    let status = spawn_child("crash-numa2", d.path(), 120);
+    assert_eq!(status.signal(), Some(libc::SIGKILL), "child dies by SIGKILL: {status:?}");
+
+    let store = d.join("s");
+    assert!(!store.join("CLEAN").exists());
+    assert!(MetallManager::open(&store).is_err(), "dirty store refused");
+    for shards in [1usize, 2] {
+        let mut o = ManagerOptions::small_for_tests();
+        o.shards = shards;
+        o.topology = Some(Topology::fake(&[4])); // single node, explicitly
+        let s = MetallManager::open_with(d.join("snap"), o, false, false).unwrap_or_else(|e| {
+            panic!("2-node-written snapshot must reopen on 1 node with {shards} shards: {e}")
+        });
+        assert_eq!(s.num_shards(), shards);
+        assert_eq!(s.topology().num_nodes(), 1);
+        let off = s.find::<u64>("log").unwrap().expect("named object survives");
+        let v = PVec::<u64>::from_offset(s.read(off));
+        assert_eq!(v.len(&s), BASE_RECORDS as usize, "shards={shards}");
+        for i in 0..BASE_RECORDS {
+            assert_eq!(v.get(&s, i as usize), record_value(i), "shards={shards} record {i}");
+        }
+        assert!(s.doctor().unwrap().is_empty(), "snapshot healthy on 1 node");
+        // the reopened view is total and trivially node-local: birth
+        // records died with the crashed process, and on one node that
+        // costs nothing
+        let r = s.placement_report();
+        assert_eq!(r.accounted_pages(), r.total_pages, "report total after reopen");
+        for sp in &r.per_shard {
+            assert_eq!(sp.node, 0);
+            assert_eq!(sp.remote_pages, 0);
+        }
+        s.close().unwrap();
+    }
+    // and the default (auto-topology) open still accepts it
     assert_snapshot_intact(&d.join("snap"));
 }
 
