@@ -1,0 +1,243 @@
+//! Sync-latency benchmark for the incremental, shard-parallel persist
+//! path: a (store size × dirty fraction) matrix over one `MetallManager`.
+//!
+//! Each size cell builds a store of ≥ `size` MiB of live small objects,
+//! times the **first full sync** (every management section + the whole
+//! data extent), then times **incremental syncs** that dirty a given
+//! permille of the chunks (plus one alloc/free pair, so the management
+//! delta path runs too) and a **no-op sync** (nothing dirty at all). The
+//! fig5-style acceptance bar: with ≤ 1 % of chunks dirtied on a
+//! ≥ 64 MiB store, the incremental sync completes ≥ 5× faster than the
+//! full one, and the no-op sync writes zero section bytes.
+//!
+//! Results go to the human table, to `bench_results/sync_latency.jsonl`,
+//! and to `BENCH_sync.json` at the repo root — written twice, a
+//! `"status": "started"` stub up front and the full document at the end,
+//! so every run leaves a machine-readable trace even if interrupted.
+//!
+//! `cargo bench --bench sync_latency -- [--sizes-mb 64,256]
+//!  [--permille 10,0] [--repeats 3]`
+
+use std::collections::HashMap;
+
+use metall_rs::alloc::{ManagerOptions, MetallManager};
+use metall_rs::bench_util::{record, BenchArgs, Table};
+use metall_rs::util::human;
+use metall_rs::util::jsonw::JsonObj;
+use metall_rs::util::tmp::TempDir;
+
+const CHUNK: usize = 256 << 10; // 256 KiB: a 64 MiB store has 256 chunks
+const OUT: &str = "BENCH_sync.json";
+
+struct Cell {
+    size_mb: usize,
+    phase: String,
+    secs: f64,
+    dirty_sections: u64,
+    total_sections: u64,
+    section_bytes: u64,
+    data_chunks: u64,
+    data_bytes: u64,
+    cache_slots: u64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::parse();
+    let sizes_mb = args.get_usize_list("sizes-mb", &[64]);
+    let permille = args.get_usize_list("permille", &[10, 0]);
+    let repeats = args.get_usize("repeats", 3).max(1);
+    let work = TempDir::new("sync-latency");
+
+    // the trajectory file must exist whatever happens after this point
+    let stub = JsonObj::new()
+        .str("bench", "sync_latency")
+        .str("status", "started")
+        .raw("results", "[]")
+        .finish();
+    std::fs::write(OUT, stub + "\n")?;
+
+    let mut t = Table::new(&[
+        "size", "phase", "time", "vs full", "dirty sects", "sect bytes", "data chunks",
+        "data bytes",
+    ]);
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut speedup_1pct: Option<f64> = None;
+    let mut noop_section_bytes: Option<u64> = None;
+    let mut noop_data_chunks: Option<u64> = None;
+
+    for &mb in &sizes_mb {
+        let dir = work.join(&format!("s{mb}"));
+        let opts = ManagerOptions {
+            chunk_size: CHUNK,
+            file_size: 8 << 20,
+            vm_reserve: (4usize << 30).max(4 * mb << 20),
+            ..Default::default()
+        };
+        let m = MetallManager::create_with(&dir, opts)?;
+        // Populate: 64 KiB objects (4 per chunk) until the store holds
+        // `mb` MiB, fully written so the first sync flushes everything.
+        let obj = CHUNK / 4;
+        let mut rep_of_chunk: HashMap<usize, u64> = HashMap::new();
+        while m.used_segment_bytes() < mb << 20 {
+            let off = m.allocate(obj)?;
+            unsafe { m.bytes_mut(off, obj).fill(0x5A) };
+            rep_of_chunk.entry(off as usize / CHUNK).or_insert(off);
+        }
+        let nchunks = m.used_segment_bytes() / CHUNK;
+        let mut reps: Vec<u64> = rep_of_chunk.values().copied().collect();
+        reps.sort_unstable();
+
+        // first full sync: every section + the whole data extent
+        let t0 = std::time::Instant::now();
+        m.sync()?;
+        let full_secs = t0.elapsed().as_secs_f64();
+        let full_stats = m.sync_stats();
+        let full = Cell {
+            size_mb: mb,
+            phase: "full".into(),
+            secs: full_secs,
+            dirty_sections: full_stats.dirty_sections,
+            total_sections: full_stats.total_sections,
+            section_bytes: full_stats.section_bytes_written,
+            data_chunks: full_stats.data_chunks_flushed,
+            data_bytes: full_stats.data_bytes_flushed,
+            cache_slots: full_stats.cache_slots_preserved,
+        };
+
+        for &pm in &permille {
+            let dirty_chunks = if pm == 0 { 0 } else { (nchunks * pm / 1000).max(1) };
+            let mut best = f64::INFINITY;
+            let mut stats = m.sync_stats();
+            for _ in 0..repeats {
+                if pm > 0 {
+                    // dirty a permille of the chunks (one 8-byte write
+                    // each) plus an alloc/free pair so bin/cache dirty
+                    // tracking runs — the fig5 incremental shape
+                    for &off in reps.iter().take(dirty_chunks) {
+                        m.write::<u64>(off, 0xD117);
+                    }
+                    let tmp = m.allocate(64)?;
+                    m.deallocate(tmp)?;
+                }
+                let t0 = std::time::Instant::now();
+                m.sync()?;
+                let secs = t0.elapsed().as_secs_f64();
+                if secs < best {
+                    best = secs;
+                    stats = m.sync_stats();
+                }
+            }
+            let phase = if pm == 0 { "noop".into() } else { format!("permille_{pm}") };
+            if pm == 10 && mb >= 64 && speedup_1pct.is_none() {
+                speedup_1pct = Some(full_secs / best);
+            }
+            if pm == 0 {
+                noop_section_bytes = Some(stats.section_bytes_written);
+                noop_data_chunks = Some(stats.data_chunks_flushed);
+            }
+            cells.push(Cell {
+                size_mb: mb,
+                phase,
+                secs: best,
+                dirty_sections: stats.dirty_sections,
+                total_sections: stats.total_sections,
+                section_bytes: stats.section_bytes_written,
+                data_chunks: stats.data_chunks_flushed,
+                data_bytes: stats.data_bytes_flushed,
+                cache_slots: stats.cache_slots_preserved,
+            });
+        }
+        cells.push(full);
+        // cells were pushed incremental-first; order the table full-first
+        cells.sort_by_key(|c| (c.size_mb, c.phase != "full"));
+        m.close().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    for c in &cells {
+        let vs_full = cells
+            .iter()
+            .find(|f| f.size_mb == c.size_mb && f.phase == "full")
+            .map(|f| {
+                if c.secs > 0.0 { format!("{:.1}x", f.secs / c.secs) } else { "-".into() }
+            })
+            .unwrap_or_else(|| "-".into());
+        t.row(&[
+            format!("{} MiB", c.size_mb),
+            c.phase.clone(),
+            human::duration(c.secs),
+            vs_full,
+            format!("{}/{}", c.dirty_sections, c.total_sections),
+            human::bytes(c.section_bytes),
+            c.data_chunks.to_string(),
+            human::bytes(c.data_bytes),
+        ]);
+        record(
+            "sync_latency",
+            JsonObj::new()
+                .str("bench", "sync-latency")
+                .int("size_mb", c.size_mb as i64)
+                .str("phase", &c.phase)
+                .num("secs", c.secs)
+                .int("dirty_sections", c.dirty_sections as i64)
+                .int("total_sections", c.total_sections as i64)
+                .int("section_bytes", c.section_bytes as i64)
+                .int("data_chunks", c.data_chunks as i64)
+                .int("data_bytes", c.data_bytes as i64)
+                .int("cache_slots_preserved", c.cache_slots as i64),
+        );
+    }
+    t.print("incremental sync: store size × dirty fraction (first sync = full store)");
+    if let Some(sp) = speedup_1pct {
+        println!(
+            "\nincremental speedup at 1% dirty on the ≥64 MiB store: {sp:.1}x \
+             (acceptance bar ≥ 5x)"
+        );
+    }
+    if let (Some(sb), Some(dc)) = (noop_section_bytes, noop_data_chunks) {
+        println!("no-op sync: {sb} section bytes, {dc} data chunks (bar: 0 and 0)");
+    }
+
+    let mut rows = String::from("[");
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            rows.push(',');
+        }
+        rows.push_str(
+            &JsonObj::new()
+                .int("size_mb", c.size_mb as i64)
+                .str("phase", &c.phase)
+                .num("secs", c.secs)
+                .int("dirty_sections", c.dirty_sections as i64)
+                .int("total_sections", c.total_sections as i64)
+                .int("section_bytes", c.section_bytes as i64)
+                .int("data_chunks", c.data_chunks as i64)
+                .int("data_bytes", c.data_bytes as i64)
+                .int("cache_slots_preserved", c.cache_slots as i64)
+                .finish(),
+        );
+    }
+    rows.push(']');
+    let mut doc = JsonObj::new()
+        .str("bench", "sync_latency")
+        .str("status", "complete")
+        .str(
+            "workload",
+            "64KiB objects, full-store first sync vs permille-dirty incremental syncs",
+        )
+        .int("chunk_size", CHUNK as i64)
+        .int("repeats", repeats as i64)
+        .raw("results", &rows);
+    if let Some(sp) = speedup_1pct {
+        doc = doc.num("incremental_speedup_1pct", sp);
+    }
+    if let Some(sb) = noop_section_bytes {
+        doc = doc.int("noop_section_bytes", sb as i64);
+    }
+    if let Some(dc) = noop_data_chunks {
+        doc = doc.int("noop_data_chunks", dc as i64);
+    }
+    std::fs::write(OUT, doc.finish() + "\n")?;
+    println!("wrote {OUT}");
+    Ok(())
+}

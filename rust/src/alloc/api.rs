@@ -108,6 +108,47 @@ impl SegmentAlloc for crate::alloc::MetallManager {
     fn mapped_len(&self) -> usize {
         self.segment().mapped_len()
     }
+
+    // The write accessors are overridden to record chunk-granular dirty
+    // marks ([`MetallManager::mark_data_dirty`]), which is what lets
+    // `sync()` flush only the chunk ranges the containers actually wrote
+    // instead of msync'ing the whole mapped extent.
+
+    fn write_pod<T: Persist>(&self, offset: u64, value: T) {
+        crate::alloc::MetallManager::write(self, offset, value)
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn bytes_at_mut(&self, offset: u64, len: usize) -> &mut [u8] {
+        crate::alloc::MetallManager::bytes_mut(self, offset, len)
+    }
+
+    fn write_bytes(&self, offset: u64, data: &[u8]) {
+        debug_assert!(offset as usize + data.len() <= self.segment().mapped_len());
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                data.as_ptr(),
+                self.segment().base().add(offset as usize),
+                data.len(),
+            );
+        }
+        // after the copy: a sync must not consume the mark pre-store
+        self.mark_data_dirty(offset, data.len());
+    }
+
+    fn copy_within(&self, src: u64, dst: u64, len: usize) {
+        debug_assert!(src as usize + len <= self.segment().mapped_len());
+        debug_assert!(dst as usize + len <= self.segment().mapped_len());
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                self.segment().base().add(src as usize),
+                self.segment().base().add(dst as usize),
+                len,
+            );
+        }
+        // after the copy: a sync must not consume the mark pre-store
+        self.mark_data_dirty(dst, len);
+    }
 }
 
 /// Cloneable, `Send + Sync` handle to a shared [`MetallManager`] — the
@@ -206,6 +247,25 @@ impl SegmentAlloc for MetallHandle {
 
     fn mapped_len(&self) -> usize {
         self.0.segment().mapped_len()
+    }
+
+    // delegate to the manager's dirty-marking overrides
+
+    fn write_pod<T: Persist>(&self, offset: u64, value: T) {
+        <MetallManager as SegmentAlloc>::write_pod(&self.0, offset, value)
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn bytes_at_mut(&self, offset: u64, len: usize) -> &mut [u8] {
+        <MetallManager as SegmentAlloc>::bytes_at_mut(&self.0, offset, len)
+    }
+
+    fn write_bytes(&self, offset: u64, data: &[u8]) {
+        <MetallManager as SegmentAlloc>::write_bytes(&self.0, offset, data)
+    }
+
+    fn copy_within(&self, src: u64, dst: u64, len: usize) {
+        <MetallManager as SegmentAlloc>::copy_within(&self.0, src, dst, len)
     }
 }
 

@@ -25,7 +25,7 @@
 //! per-shard bitsets in the exact byte layout of an unsharded bin.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
 
 use crate::alloc::mlbitset::MlBitset;
@@ -173,6 +173,13 @@ pub struct AllocShard {
     /// shard at its serialization points.
     pub remote_free: Mutex<Vec<(u32, u64)>>,
     pub stats: ShardStats,
+    /// DRAM-only per-bin dirty-epoch marks: one flag per size class, set
+    /// by the manager at every point that mutates this shard's part of
+    /// the bin (fast-path CAS claims under the shared lock, the two
+    /// serialization points, frees), cleared when the bin's group section
+    /// is serialized under the exclusive lock. A sync ORs the flags
+    /// across shards per bin group to decide what to rewrite.
+    dirty: Vec<AtomicBool>,
 }
 
 impl AllocShard {
@@ -181,7 +188,30 @@ impl AllocShard {
             bins: (0..num_bins).map(|_| RwLock::new(BinData::new())).collect(),
             remote_free: Mutex::new(Vec::new()),
             stats: ShardStats::default(),
+            dirty: (0..num_bins).map(|_| AtomicBool::new(false)).collect(),
         }
+    }
+
+    /// Mark bin `bin`'s serialized image changed in this shard. Relaxed
+    /// store; callers invoke it inside the bin-lock critical section that
+    /// performed the mutation, so the release of that lock orders the
+    /// mark before any sync that serializes the bin (sync takes the
+    /// exclusive side).
+    #[inline]
+    pub fn mark_bin_dirty(&self, bin: usize) {
+        self.dirty[bin].store(true, Ordering::Relaxed);
+    }
+
+    /// Is bin `bin` dirty in this shard (non-clearing probe)?
+    #[inline]
+    pub fn peek_bin_dirty(&self, bin: usize) -> bool {
+        self.dirty[bin].load(Ordering::Relaxed)
+    }
+
+    /// Read-and-clear bin `bin`'s dirty mark (called while the sync holds
+    /// the bin's exclusive lock, just before serializing it).
+    pub fn take_bin_dirty(&self, bin: usize) -> bool {
+        self.dirty[bin].swap(false, Ordering::Relaxed)
     }
 
     pub fn stats_snapshot(&self, shard: usize) -> ShardStatsSnapshot {
@@ -356,6 +386,36 @@ impl BinData {
             self.nonfull.push(chunk); // becomes visible for reuse (LIFO)
         }
         bs.is_empty()
+    }
+
+    /// Recovery path: return a slot the manifest's transient cache
+    /// section recorded as parked-free (claimed in the serialized bitset
+    /// but actually sitting in a per-core cache or remote queue when the
+    /// store was synced). Lenient by design — an unknown chunk,
+    /// out-of-range slot, or already-clear bit returns `None` and the
+    /// entry is skipped (the checksummed section guards real corruption;
+    /// a benign mismatch can only make recovery *less* aggressive about
+    /// freeing). `Some(empty)` reports whether the chunk became empty
+    /// (the caller then releases it like a normal serialization-point
+    /// free).
+    pub fn release_cached(&mut self, chunk: u32, slot: u32) -> Option<bool> {
+        let bs = self.bitsets.get(&chunk)?;
+        if slot >= bs.capacity() || !bs.get(slot) {
+            return None;
+        }
+        let was_full = bs.is_full();
+        if was_full {
+            // same discipline as free_slot: heal the LIFO while the chunk
+            // is still listed full, then re-expose it
+            self.prune_full();
+        }
+        let bs = self.bitsets.get(&chunk).expect("bitset still present");
+        bs.clear(slot);
+        let empty = bs.is_empty();
+        if was_full {
+            self.nonfull.push(chunk);
+        }
+        Some(empty)
     }
 
     /// Drop a (now empty) chunk from this bin.
@@ -611,6 +671,36 @@ mod tests {
         }
         pin_thread_vcpu(None);
         assert!(m.home_shard() < 4);
+    }
+
+    #[test]
+    fn release_cached_is_lenient_and_reports_empty() {
+        let mut b = BinData::new();
+        b.add_chunk_and_alloc(4, 2); // slot 0 taken
+        assert_eq!(b.try_claim(), Some((4, 1))); // now full
+        // unknown chunk / clear slot / out-of-range slot are all None
+        assert_eq!(b.release_cached(9, 0), None);
+        assert_eq!(b.release_cached(4, 5), None);
+        assert_eq!(b.release_cached(4, 1), Some(false));
+        assert_eq!(b.release_cached(4, 1), None, "already clear");
+        // full → non-full transition re-exposes the chunk LIFO-style
+        assert_eq!(b.try_claim(), Some((4, 1)));
+        assert_eq!(b.release_cached(4, 1), Some(false));
+        assert_eq!(b.release_cached(4, 0), Some(true), "chunk empties");
+        b.remove_chunk(4);
+        assert_eq!(b.used_slots(), 0);
+    }
+
+    #[test]
+    fn shard_dirty_flags_are_per_bin() {
+        let s = AllocShard::new(4);
+        assert!(!s.peek_bin_dirty(0));
+        s.mark_bin_dirty(2);
+        assert!(s.peek_bin_dirty(2));
+        assert!(!s.peek_bin_dirty(1), "neighbouring bins unaffected");
+        assert!(s.take_bin_dirty(2));
+        assert!(!s.peek_bin_dirty(2), "take clears");
+        assert!(!s.take_bin_dirty(2));
     }
 
     #[test]

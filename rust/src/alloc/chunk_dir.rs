@@ -64,6 +64,11 @@ pub struct ChunkDirectory {
     /// Birth node per chunk ([`NO_BIRTH_NODE`] = unknown). Same length as
     /// `entries`; not serialized.
     birth: Vec<i32>,
+    /// DRAM-only dirty-epoch mark: set whenever `entries` changes (a sync
+    /// must rewrite the chunk section), cleared when the section is
+    /// serialized. DRAM-only rekeying (`set_shards`, birth nodes) never
+    /// sets it — the serialized bytes do not change.
+    dirty: bool,
 }
 
 /// Sentinel for "no recorded birth node" (module docs).
@@ -86,7 +91,25 @@ impl ChunkDirectory {
             owners: Vec::new(),
             pools: (0..nshards.max(1)).map(|_| BinaryHeap::new()).collect(),
             birth: Vec::new(),
+            dirty: false,
         }
+    }
+
+    /// Has the serialized image changed since the last [`Self::take_dirty`]?
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    /// Mark the serialized image changed (mutators call this internally;
+    /// the manager re-marks after a failed sync so nothing is lost).
+    pub fn mark_dirty(&mut self) {
+        self.dirty = true;
+    }
+
+    /// Read-and-clear the dirty mark (called under the exclusive chunk
+    /// lock while the section is serialized).
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
     }
 
     /// Re-key the DRAM-only shard state for `nshards` shards: ownership is
@@ -177,6 +200,7 @@ impl ChunkDirectory {
     /// falling back to the global sequential probe. Single-shard
     /// directories always probe, matching the unsharded allocator exactly.
     pub fn take_small_chunk_on(&mut self, bin: u32, shard: u32) -> u32 {
+        self.dirty = true;
         if self.pools.len() > 1 {
             while let Some(Reverse(c)) = self.pools[shard as usize].pop() {
                 if self.entries[c as usize] == ChunkKind::Free {
@@ -196,6 +220,7 @@ impl ChunkDirectory {
     /// Find (growing as needed) a run of `n` contiguous free chunks and
     /// mark them as one large allocation. Returns the head index.
     pub fn take_large(&mut self, n: u32) -> u32 {
+        self.dirty = true;
         let head = self.find_free_run(n as usize);
         self.sync_owners();
         self.entries[head as usize] = ChunkKind::LargeHead { nchunks: n };
@@ -237,6 +262,7 @@ impl ChunkDirectory {
     /// pool for locality on the next take.
     pub fn free_small_chunk_on(&mut self, chunk: u32, shard: u32) {
         debug_assert!(matches!(self.entries[chunk as usize], ChunkKind::Small { .. }));
+        self.dirty = true;
         self.entries[chunk as usize] = ChunkKind::Free;
         self.birth[chunk as usize] = NO_BIRTH_NODE;
         if self.pools.len() > 1 {
@@ -250,6 +276,7 @@ impl ChunkDirectory {
             ChunkKind::LargeHead { nchunks } => nchunks,
             k => panic!("free_large on non-head chunk {head}: {k:?}"),
         };
+        self.dirty = true;
         for i in 0..n {
             self.entries[(head + i) as usize] = ChunkKind::Free;
             self.birth[(head + i) as usize] = NO_BIRTH_NODE;
@@ -505,6 +532,31 @@ mod tests {
         assert_eq!(d.birth_node(head), None);
         // out-of-range ids are a graceful None
         assert_eq!(d.birth_node(10_000), None);
+    }
+
+    #[test]
+    fn dirty_mark_tracks_serialized_mutations_only() {
+        let mut d = ChunkDirectory::with_shards(2);
+        assert!(!d.is_dirty(), "fresh directory is clean");
+        let c = d.take_small_chunk_on(0, 1);
+        assert!(d.is_dirty());
+        assert!(d.take_dirty());
+        assert!(!d.is_dirty(), "take clears");
+        // DRAM-only mutations never dirty the serialized image
+        d.set_birth_node(c, 1);
+        d.set_shards(4);
+        assert!(!d.is_dirty());
+        d.free_small_chunk_on(c, 1);
+        assert!(d.take_dirty());
+        let head = d.take_large(2);
+        assert!(d.take_dirty());
+        d.free_large(head);
+        assert!(d.is_dirty());
+        // a deserialized directory starts clean (it matches the disk image)
+        let mut buf = Vec::new();
+        d.serialize_into(&mut buf);
+        let (de, _) = ChunkDirectory::deserialize_from(&buf).unwrap();
+        assert!(!de.is_dirty());
     }
 
     #[test]

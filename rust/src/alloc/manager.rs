@@ -6,14 +6,35 @@
 //! (`construct/find/destroy`), snapshotting (§3.4) and snapshot-
 //! consistent persistence (§3.3).
 //!
-//! ## Datastore layout (§3.6)
+//! ## Datastore layout (§3.6, segmented management format)
 //! ```text
 //! <dir>/
-//!   meta.bin          immutable geometry (magic, chunk & file size)
-//!   CLEAN             marker: present iff the store was closed cleanly
-//!   management.bin    chunk dir + bin bitsets + name dir (written on sync)
-//!   segment/chunk-NNNNNN   application data backing files
+//!   meta.bin                immutable geometry (magic, chunk & file size)
+//!   CLEAN                   marker: present iff the store closed cleanly
+//!   manifest-<epoch>.bin    checksummed section index, the sync commit
+//!                           point (fsync'd atomic rename)
+//!   mgmt-chunks-<e>.bin     chunk directory          ┐ per-section files;
+//!   mgmt-bins<g>-<e>.bin    bin bitsets, 8-bin groups│ only *dirty*
+//!   mgmt-names-<e>.bin      name directory           │ sections are
+//!   mgmt-cache-<e>.bin      parked-free slot snapshot┘ rewritten per sync
+//!   segment/chunk-NNNNNN    application data backing files
 //! ```
+//! (Legacy stores with a monolithic `management.bin` are still read; the
+//! first segmented sync supersedes and removes it. See
+//! [`crate::alloc::mgmt_io`] for the format and its crash invariants.)
+//!
+//! ## Incremental sync (persist-path scaling)
+//!
+//! [`MetallManager::sync`] is proportional to what changed, not to the
+//! store: DRAM-only dirty-epoch marks (per-shard per-bin flags, chunk- /
+//! name-directory marks, a chunk-granular map of data writes) tell it
+//! exactly which management sections to re-serialize and which chunk
+//! ranges of the mapped extent to `msync`; dirty sections are written by
+//! a flusher pool and committed atomically by the manifest rename. The
+//! per-core object caches are *preserved* across a sync — the cached
+//! free slots are serialized into the transient cache section instead of
+//! being drained, so a sync costs no cache warmth; recovery returns
+//! those slots to the bitsets. A sync with no changes writes zero bytes.
 //!
 //! ## Concurrency model (§4.5.1, sharded with a lock-free fast path)
 //!
@@ -53,14 +74,16 @@
 //! is re-dealt as `chunk % M`), and N = 1 reproduces the unsharded
 //! allocator's on-disk layout bit-for-bit.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, RwLock};
+use std::time::Instant;
 
 use crate::alloc::bin_dir::{
     serialize_merged_into, AllocShard, BinData, ShardMap, ShardStatsSnapshot,
 };
+use crate::alloc::mgmt_io::{self, Manifest, SectionId, SectionRecord};
 use crate::alloc::object_cache::current_vcpu;
 use crate::alloc::chunk_dir::{ChunkDirectory, ChunkKind};
 use crate::alloc::name_dir::{type_fingerprint, NameDirectory, NamedEntry};
@@ -272,6 +295,136 @@ fn keep_first_err(result: &mut Result<()>, r: Result<()>) {
     }
 }
 
+/// Observability snapshot of the incremental sync path
+/// ([`MetallManager::sync_stats`]): cumulative counters plus the shape of
+/// the *last* sync. Exported as `alloc.sync.*` by
+/// [`crate::coordinator::metrics::record_sync_stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SyncStats {
+    /// Cumulative `sync()` calls on this manager.
+    pub syncs: u64,
+    /// Cumulative syncs that committed a new manifest (a no-op sync
+    /// commits nothing).
+    pub manifest_commits: u64,
+    /// Last sync: management sections re-serialized and rewritten.
+    pub dirty_sections: u64,
+    /// Last sync: total sections the store has (chunk dir + bin groups +
+    /// names + cache).
+    pub total_sections: u64,
+    /// Last sync: bytes of section files written (0 for a no-op sync).
+    pub section_bytes_written: u64,
+    /// Last sync: data granules flushed — dirty *chunks* msync'd in
+    /// shared mode, dirty *pages* written back in private (bs-mmap) mode.
+    pub data_chunks_flushed: u64,
+    /// Last sync: bytes of application data flushed.
+    pub data_bytes_flushed: u64,
+    /// Last sync: wall-clock duration in microseconds.
+    pub flush_micros: u64,
+    /// Last sync: free slots left parked in the per-core caches (warmth
+    /// preserved instead of drained; serialized to the cache section).
+    pub cache_slots_preserved: u64,
+}
+
+/// Chunk-granular dirty map of the application-data segment: a fixed
+/// lock-free bitmap sized to the VM reservation (1 bit per chunk — 4 KiB
+/// per TiB at 2 MiB chunks). The write APIs mark, `sync` swaps the words
+/// to zero and flushes only the marked chunks' union. Raw-pointer writers
+/// outside the manager's APIs must call [`MetallManager::mark_data_dirty`]
+/// themselves (all in-repo containers go through the marking APIs).
+struct DirtyChunkSet {
+    words: Vec<AtomicU64>,
+}
+
+impl DirtyChunkSet {
+    fn new(max_chunks: usize) -> Self {
+        Self { words: (0..max_chunks.div_ceil(64)).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    #[inline]
+    fn mark(&self, chunk: usize) {
+        if let Some(w) = self.words.get(chunk / 64) {
+            let bit = 1u64 << (chunk % 64);
+            // already-set is the steady state on hot container writes: a
+            // relaxed load keeps the shared cache line out of RMW
+            // ping-pong between writer threads
+            if w.load(Ordering::Relaxed) & bit == 0 {
+                w.fetch_or(bit, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dirty chunk indices below `limit`, ascending, clearing their
+    /// bits. Bits at or past `limit` are *preserved* — a concurrent
+    /// segment extension can mark a chunk past the caller's snapshot of
+    /// the mapped length, and that mark must survive for the next sync,
+    /// including in the word that straddles the limit.
+    fn take_dirty(&self, limit: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (wi, w) in self.words.iter().enumerate() {
+            if wi * 64 >= limit {
+                // wholly past the limit: leave the word untouched
+                break;
+            }
+            let mut bits = w.swap(0, Ordering::Relaxed);
+            let keep_from = limit - wi * 64; // first out-of-range bit index
+            if keep_from < 64 {
+                // straddling word: put the out-of-range bits back
+                let hi = bits & (!0u64 << keep_from);
+                if hi != 0 {
+                    w.fetch_or(hi, Ordering::Relaxed);
+                }
+                bits &= !(!0u64 << keep_from);
+            }
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                bits &= bits - 1;
+                out.push(wi * 64 + b);
+            }
+        }
+        out
+    }
+}
+
+/// In-DRAM bookkeeping of the committed segmented-management state: the
+/// last committed epoch and, per section, the exact file/len/checksum the
+/// newest manifest references (clean sections are carried forward from
+/// here). `legacy` marks a store loaded from the monolithic
+/// `management.bin` — the next sync rewrites every section.
+struct MgmtState {
+    epoch: u64,
+    sections: HashMap<SectionId, SectionRecord>,
+    legacy: bool,
+    /// Bin-group width of the manifest the sections were loaded from.
+    /// When it differs from the build's [`mgmt_io::BINS_PER_GROUP`], the
+    /// next sync must rewrite every section (carried-forward bin groups
+    /// would otherwise be partitioned under the wrong width).
+    bins_per_group: usize,
+}
+
+/// What [`MetallManager::sync_management`] did.
+struct MgmtSyncOutcome {
+    dirty: u64,
+    total: u64,
+    bytes: u64,
+    cache_slots: u64,
+    committed: bool,
+}
+
+/// Everything recovered from the on-disk management image (segmented
+/// manifest, legacy monolith, or the empty never-synced state).
+struct LoadedManagement {
+    chunks: ChunkDirectory,
+    bins: Vec<BinData>,
+    names: NameDirectory,
+    /// Transient cache-section entries: `(bin, offset)` slots that are
+    /// claimed in `bins` but were parked free when the image was written.
+    cache: Vec<(u32, u64)>,
+    epoch: u64,
+    sections: HashMap<SectionId, SectionRecord>,
+    legacy: bool,
+    bins_per_group: usize,
+}
+
 /// Marker for types that may live inside the persistent segment: plain
 /// old data only — no pointers/references/niches (paper §3.5: replace raw
 /// pointers with offset pointers; remove references & virtual functions).
@@ -306,6 +459,12 @@ pub struct MetallManager {
     bs: Option<Mutex<BsMsync>>,
     stats: AllocStats,
     closed: AtomicBool,
+    /// Segmented-management commit bookkeeping (epoch + section records).
+    mgmt: Mutex<MgmtState>,
+    /// Chunk-granular dirty map of application-data writes.
+    dirty_data: DirtyChunkSet,
+    /// Last-sync observability ([`Self::sync_stats`]).
+    last_sync: Mutex<SyncStats>,
 }
 
 impl MetallManager {
@@ -339,6 +498,14 @@ impl MetallManager {
             chunks: RwLock::new(ChunkDirectory::with_shards(nshards)),
             names: Mutex::new(NameDirectory::new()),
             bs: opts.private_mode.then(|| Mutex::new(BsMsync::new())),
+            mgmt: Mutex::new(MgmtState {
+                epoch: 0,
+                sections: HashMap::new(),
+                legacy: false,
+                bins_per_group: mgmt_io::BINS_PER_GROUP,
+            }),
+            dirty_data: DirtyChunkSet::new(segment.vm_len() / opts.chunk_size + 1),
+            last_sync: Mutex::new(SyncStats::default()),
             segment,
             read_only: false,
             stats: AllocStats::default(),
@@ -389,16 +556,48 @@ impl MetallManager {
         }
         let segment = SegmentStorage::open(dir.join("segment"), opts.segment_options(read_only))?;
         let nb = num_bins(opts.chunk_size);
-        let (mut chunks, bins, names) = Self::load_management(&dir, nb)?;
+        let mut lm = Self::load_management(&dir, nb)?;
+        // Parked-free recovery: slots the manifest's transient cache
+        // section recorded as sitting in per-core caches / remote queues
+        // are claimed in the serialized bitsets but actually free —
+        // return them before the shard split so a crash between syncs
+        // leaks nothing. Chunks that empty are released like any
+        // serialization-point free (file space reclaimed below, once the
+        // segment handle exists).
+        let cs = opts.chunk_size as u64;
+        let mut touched_bins: HashSet<usize> = HashSet::new();
+        let mut freed_chunks: Vec<u32> = Vec::new();
+        for &(bin, off) in &lm.cache {
+            let chunk = (off / cs) as u32;
+            if bin as usize >= nb || (chunk as usize) >= lm.chunks.len() {
+                continue;
+            }
+            if lm.chunks.kind(chunk) != (ChunkKind::Small { bin }) {
+                continue;
+            }
+            let class = size_of_bin(bin as usize) as u64;
+            if (off % cs) % class != 0 {
+                continue;
+            }
+            let slot = ((off % cs) / class) as u32;
+            if let Some(empty) = lm.bins[bin as usize].release_cached(chunk, slot) {
+                touched_bins.insert(bin as usize);
+                if empty {
+                    lm.bins[bin as usize].remove_chunk(chunk);
+                    lm.chunks.free_small_chunk(chunk);
+                    freed_chunks.push(chunk);
+                }
+            }
+        }
         // Rebuild the DRAM-only shard state: ownership is re-dealt
         // deterministically (`chunk % nshards`), so any shard count — and
         // any topology — reopens any store.
         let topo = opts.resolved_topology();
         let nshards = opts.resolved_shards(&topo);
-        chunks.set_shards(nshards);
+        lm.chunks.set_shards(nshards);
         let shard_map = ShardMap::with_topology(nshards, topo);
         let shards: Vec<AllocShard> = (0..nshards).map(|_| AllocShard::new(nb)).collect();
-        for (bin, data) in bins.into_iter().enumerate() {
+        for (bin, data) in lm.bins.into_iter().enumerate() {
             for (chunk, bs) in data.into_chunks() {
                 let s = shard_map.recovery_shard_of_chunk(chunk);
                 shards[s].bins[bin].write().unwrap().insert_chunk(chunk, bs);
@@ -408,9 +607,17 @@ impl MetallManager {
             shards,
             shard_map,
             cache: ObjectCache::new(nb),
-            chunks: RwLock::new(chunks),
-            names: Mutex::new(names),
+            chunks: RwLock::new(lm.chunks),
+            names: Mutex::new(lm.names),
             bs: (opts.private_mode && !read_only).then(|| Mutex::new(BsMsync::new())),
+            mgmt: Mutex::new(MgmtState {
+                epoch: lm.epoch,
+                sections: lm.sections,
+                legacy: lm.legacy,
+                bins_per_group: lm.bins_per_group,
+            }),
+            dirty_data: DirtyChunkSet::new(segment.vm_len() / opts.chunk_size + 1),
+            last_sync: Mutex::new(SyncStats::default()),
             segment,
             read_only,
             stats: AllocStats::default(),
@@ -418,10 +625,44 @@ impl MetallManager {
             opts,
             dir,
         };
+        // The recovery frees above diverged the DRAM state from the
+        // on-disk sections: re-mark so the next sync persists them. (The
+        // chunk directory marked itself inside free_small_chunk.)
+        for bin in touched_bins {
+            mgr.shards[0].mark_bin_dirty(bin);
+        }
+        if !lm.cache.is_empty() {
+            // the running cache is empty now; the next sync must replace
+            // the non-empty on-disk cache section
+            mgr.cache.mark_dirty();
+        }
+        if !read_only {
+            let cs = mgr.opts.chunk_size;
+            let mapped = mgr.segment.mapped_len();
+            let mut result = Ok(());
+            for chunk in freed_chunks {
+                if (chunk as usize + 1) * cs <= mapped {
+                    keep_first_err(
+                        &mut result,
+                        mgr.segment.free_range(chunk as usize * cs, cs),
+                    );
+                }
+            }
+            result?;
+        }
         mgr.validate_consistency()?;
         if !read_only {
-            // mark dirty while we hold it read-write
-            let _ = std::fs::remove_file(mgr.dir.join(CLEAN_MARKER));
+            // Mark dirty while we hold it read-write — durably: the
+            // unlink is the other half of the CLEAN protocol. If it were
+            // left sitting in the directory's dirty metadata, a power
+            // failure after unsynced data writes could resurrect the
+            // marker and a torn store would reopen as "clean".
+            let p = mgr.dir.join(CLEAN_MARKER);
+            match std::fs::remove_file(&p) {
+                Ok(()) => mgmt_io::fsync_dir(&mgr.dir)?,
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(Error::io(&p, e)),
+            }
         }
         Ok(mgr)
     }
@@ -431,8 +672,9 @@ impl MetallManager {
         buf.extend_from_slice(META_MAGIC);
         buf.extend_from_slice(&(self.opts.chunk_size as u64).to_le_bytes());
         buf.extend_from_slice(&(self.opts.file_size as u64).to_le_bytes());
-        let p = self.dir.join("meta.bin");
-        std::fs::write(&p, &buf).map_err(|e| Error::io(&p, e))
+        // durable: geometry is written exactly once, at create
+        mgmt_io::write_section_file(&self.dir, "meta.bin", &buf)?;
+        mgmt_io::fsync_dir(&self.dir)
     }
 
     fn read_meta(dir: &Path) -> Result<(usize, usize)> {
@@ -447,55 +689,386 @@ impl MetallManager {
     }
 
     /// Flush application data and management data to the backing store
-    /// (the paper's snapshot-consistency point, §3.3).
+    /// (the paper's snapshot-consistency point, §3.3) — **incrementally**:
+    /// cost is proportional to what changed since the last sync, not to
+    /// the store.
+    ///
+    /// 1. Cross-shard frees parked on remote queues are drained (the
+    ///    owners' serialization-point work this sync is anyway).
+    /// 2. Application data: only the union of chunk ranges written since
+    ///    the last sync is `msync`'d, in parallel
+    ///    ([`SegmentStorage::sync_ranges`]); private (bs-mmap) mode keeps
+    ///    its own page-granular delta flush.
+    /// 3. Management: only dirty sections are re-serialized (a flusher
+    ///    pool writes them concurrently) and a new manifest is committed
+    ///    by fsync'd atomic rename. Nothing dirty → nothing written.
+    ///
+    /// The per-core object caches are **preserved** — their free slots are
+    /// recorded in the transient cache section instead of being drained,
+    /// so sync costs no allocation warmth ([`Self::flush_object_caches`]
+    /// is the explicit full drain). Like the monolithic format before it,
+    /// the serialized image is a consistent point only when mutators are
+    /// quiescent (§3.3's contract).
     pub fn sync(&self) -> Result<()> {
         if self.read_only {
             return Ok(());
         }
-        // Return cached free objects to their bitsets so the serialized
-        // management data does not leak them.
-        self.flush_cache()?;
-        // 1. application data
-        match &self.bs {
-            Some(bs) => {
-                bs.lock().unwrap().msync(&self.segment)?;
-            }
-            None => self.segment.sync(self.opts.parallel_sync)?,
+        let t0 = Instant::now();
+        let mut result = Ok(());
+        for shard in 0..self.shards.len() {
+            keep_first_err(&mut result, self.drain_remote(shard));
         }
-        // 2. management data (atomic tmp+rename). The shard count is
-        // DRAM-only: each bin is written as the merged union of its
-        // per-shard parts, byte-identical to an unsharded bin.
-        let nb = self.num_bins();
-        let mut buf = Vec::new();
-        buf.extend_from_slice(MGMT_MAGIC);
-        buf.extend_from_slice(&(nb as u32).to_le_bytes());
-        self.chunks.read().unwrap().serialize_into(&mut buf);
-        for bin in 0..nb {
-            // exclusive on this bin in every shard: quiesce in-flight
-            // shared-path claims (lock order shard 0..N, consistently)
-            let guards: Vec<_> =
-                self.shards.iter().map(|s| s.bins[bin].write().unwrap()).collect();
-            let parts: Vec<&BinData> = guards.iter().map(|g| &**g).collect();
-            serialize_merged_into(&parts, &mut buf);
-        }
-        self.names.lock().unwrap().serialize_into(&mut buf);
-        let tmp = self.dir.join("management.bin.tmp");
-        let fin = self.dir.join("management.bin");
-        std::fs::write(&tmp, &buf).map_err(|e| Error::io(&tmp, e))?;
-        std::fs::rename(&tmp, &fin).map_err(|e| Error::io(&fin, e))?;
+        result?;
+        let (data_chunks, data_bytes) = self.flush_data()?;
+        let outcome = self.sync_management()?;
+        let mut st = self.last_sync.lock().unwrap();
+        *st = SyncStats {
+            syncs: st.syncs + 1,
+            manifest_commits: st.manifest_commits + outcome.committed as u64,
+            dirty_sections: outcome.dirty,
+            total_sections: outcome.total,
+            section_bytes_written: outcome.bytes,
+            data_chunks_flushed: data_chunks,
+            data_bytes_flushed: data_bytes,
+            flush_micros: t0.elapsed().as_micros() as u64,
+            cache_slots_preserved: outcome.cache_slots,
+        };
         Ok(())
     }
 
-    fn load_management(
-        dir: &Path,
-        nb: usize,
-    ) -> Result<(ChunkDirectory, Vec<BinData>, NameDirectory)> {
-        let p = dir.join("management.bin");
-        if !p.exists() {
-            // never synced: empty store
-            return Ok((ChunkDirectory::new(), (0..nb).map(|_| BinData::new()).collect(), NameDirectory::new()));
+    /// Delta flush of the application data. Shared mode: msync the union
+    /// of dirty chunk ranges; private mode: the bs-mmap page-granular
+    /// user msync. Returns (granules, bytes) flushed.
+    fn flush_data(&self) -> Result<(u64, u64)> {
+        if let Some(bs) = &self.bs {
+            let st = bs.lock().unwrap().msync(&self.segment)?;
+            return Ok((st.dirty_pages as u64, st.bytes_written));
         }
-        let buf = std::fs::read(&p).map_err(|e| Error::io(&p, e))?;
+        let cs = self.opts.chunk_size;
+        let mapped = self.segment.mapped_len();
+        let chunks = self.dirty_data.take_dirty(mapped.div_ceil(cs));
+        if chunks.is_empty() {
+            return Ok((0, 0));
+        }
+        // coalesce adjacent chunks into ranges (indices are ascending)
+        let mut ranges: Vec<std::ops::Range<usize>> = Vec::new();
+        for &c in &chunks {
+            let start = c * cs;
+            let end = ((c + 1) * cs).min(mapped);
+            match ranges.last_mut() {
+                Some(r) if r.end == start => r.end = end,
+                _ => ranges.push(start..end),
+            }
+        }
+        let bytes: usize = ranges.iter().map(|r| r.len()).sum();
+        if let Err(e) = self.segment.sync_ranges(&ranges, self.opts.parallel_sync) {
+            // nothing was committed; re-mark so the next sync retries
+            for &c in &chunks {
+                self.dirty_data.mark(c);
+            }
+            return Err(e);
+        }
+        Ok((chunks.len() as u64, bytes as u64))
+    }
+
+    /// Incremental management write-back: serialize + write dirty
+    /// sections with a flusher pool, commit the manifest, GC superseded
+    /// files. See the module docs and [`crate::alloc::mgmt_io`].
+    fn sync_management(&self) -> Result<MgmtSyncOutcome> {
+        let nb = self.num_bins();
+        let ngroups = mgmt_io::num_groups(nb);
+        let total = (ngroups + 3) as u64; // chunks + groups + names + cache
+        let cache_slots = self.cache.len() as u64;
+        let mut st = self.mgmt.lock().unwrap();
+        // Rewrite everything when there is no committed segmented state
+        // (fresh store, legacy monolith) or when the loaded manifest used
+        // a different bin-group width than this build — carrying its bin
+        // sections forward under the new partition would corrupt the
+        // chain.
+        let first = st.legacy
+            || st.sections.is_empty()
+            || st.bins_per_group != mgmt_io::BINS_PER_GROUP;
+        let mut dirty_ids: Vec<SectionId> = Vec::new();
+        if first {
+            dirty_ids.push(SectionId::Chunks);
+            for g in 0..ngroups {
+                dirty_ids.push(SectionId::Bins(g as u32));
+            }
+            dirty_ids.push(SectionId::Names);
+            dirty_ids.push(SectionId::Cache);
+        } else {
+            if self.chunks.read().unwrap().is_dirty() {
+                dirty_ids.push(SectionId::Chunks);
+            }
+            for g in 0..ngroups {
+                let dirty = mgmt_io::group_bins(g, nb)
+                    .any(|b| self.shards.iter().any(|s| s.peek_bin_dirty(b)));
+                if dirty {
+                    dirty_ids.push(SectionId::Bins(g as u32));
+                }
+            }
+            if self.names.lock().unwrap().is_dirty() {
+                dirty_ids.push(SectionId::Names);
+            }
+            if self.cache.peek_dirty() {
+                dirty_ids.push(SectionId::Cache);
+            }
+        }
+        if dirty_ids.is_empty() {
+            // no-op sync: zero section bytes, no new manifest
+            return Ok(MgmtSyncOutcome {
+                dirty: 0,
+                total,
+                bytes: 0,
+                cache_slots,
+                committed: false,
+            });
+        }
+        let epoch = st.epoch + 1;
+        // Shard-parallel write-back on the shared flusher pool
+        // ([`crate::util::parallel_jobs`]; single dirty section — the
+        // common incremental shape — runs inline): each job serializes a
+        // section under that section's own locks — lock sets of distinct
+        // sections are disjoint, and a bin-group job holds one bin
+        // (across shards) at a time, so the allocator's bin → chunks
+        // nesting cannot deadlock against it.
+        let n = dirty_ids.len();
+        let outcomes =
+            crate::util::parallel_jobs(n, |i| self.write_section(dirty_ids[i], epoch));
+        let mut bytes = 0u64;
+        let mut recs = Vec::with_capacity(n);
+        let mut failure: Option<Error> = None;
+        for outcome in outcomes {
+            match outcome {
+                Ok(rec) => {
+                    bytes += rec.len;
+                    recs.push(rec);
+                }
+                Err(e) => {
+                    if failure.is_none() {
+                        failure = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // serialization cleared dirty flags; restore them so the
+            // changes are retried instead of silently dropped
+            self.remark_dirty(&dirty_ids);
+            return Err(e);
+        }
+        // manifest = clean sections carried forward + rewritten ones (on
+        // a full `first` rewrite nothing old survives — stale bin groups
+        // from a different grouping width must not be referenced)
+        let mut sections = if first { HashMap::new() } else { st.sections.clone() };
+        for rec in recs {
+            sections.insert(rec.id, rec);
+        }
+        let mut list: Vec<SectionRecord> = sections.values().cloned().collect();
+        list.sort_by_key(|r| r.id);
+        let manifest = Manifest {
+            epoch,
+            num_bins: nb as u32,
+            bins_per_group: mgmt_io::BINS_PER_GROUP as u32,
+            sections: list,
+        };
+        if let Err(e) = mgmt_io::commit_manifest(&self.dir, &manifest) {
+            self.remark_dirty(&dirty_ids);
+            return Err(e);
+        }
+        // keep the predecessor manifest as the torn-sync fallback; GC
+        // everything older (and the superseded legacy monolith)
+        let prev = (!first && st.epoch > 0).then(|| Manifest {
+            epoch: st.epoch,
+            num_bins: nb as u32,
+            bins_per_group: mgmt_io::BINS_PER_GROUP as u32,
+            sections: st.sections.values().cloned().collect(),
+        });
+        let mut keep: Vec<&Manifest> = vec![&manifest];
+        if let Some(p) = prev.as_ref() {
+            keep.push(p);
+        }
+        mgmt_io::gc(&self.dir, &keep);
+        st.epoch = epoch;
+        st.sections = sections;
+        st.legacy = false;
+        st.bins_per_group = mgmt_io::BINS_PER_GROUP;
+        Ok(MgmtSyncOutcome { dirty: n as u64, total, bytes, cache_slots, committed: true })
+    }
+
+    /// Serialize one section (clearing its dirty marks under the locks
+    /// that quiesce its mutators) and write it durably under its
+    /// epoch-unique file name.
+    fn write_section(&self, id: SectionId, epoch: u64) -> Result<SectionRecord> {
+        let buf = self.serialize_section(id);
+        let name = id.file_name(epoch);
+        mgmt_io::write_section_file(&self.dir, &name, &buf)?;
+        Ok(SectionRecord {
+            id,
+            file: name,
+            len: buf.len() as u64,
+            checksum: mgmt_io::fnv1a(&buf),
+        })
+    }
+
+    fn serialize_section(&self, id: SectionId) -> Vec<u8> {
+        let mut buf = Vec::new();
+        match id {
+            SectionId::Chunks => {
+                let mut chunks = self.chunks.write().unwrap();
+                chunks.take_dirty();
+                chunks.serialize_into(&mut buf);
+            }
+            SectionId::Bins(g) => {
+                // The shard count is DRAM-only: each bin is written as
+                // the merged union of its per-shard parts, byte-identical
+                // to an unsharded bin. Exclusive on the bin in every
+                // shard (lock order shard 0..N) quiesces in-flight
+                // shared-path claims; one bin at a time keeps the lock
+                // footprint minimal.
+                for bin in mgmt_io::group_bins(g as usize, self.num_bins()) {
+                    let guards: Vec<_> =
+                        self.shards.iter().map(|s| s.bins[bin].write().unwrap()).collect();
+                    for s in &self.shards {
+                        s.take_bin_dirty(bin);
+                    }
+                    let parts: Vec<&BinData> = guards.iter().map(|g| &**g).collect();
+                    serialize_merged_into(&parts, &mut buf);
+                }
+            }
+            SectionId::Names => {
+                let mut names = self.names.lock().unwrap();
+                names.take_dirty();
+                names.serialize_into(&mut buf);
+            }
+            SectionId::Cache => {
+                // transient: free slots parked in caches + remote queues
+                // (claimed in the bitsets; recovery returns them)
+                self.cache.take_dirty();
+                let mut entries = self.cache.snapshot_all();
+                for sh in &self.shards {
+                    entries.extend(sh.remote_free.lock().unwrap().iter().copied());
+                }
+                buf = mgmt_io::encode_cache_section(&entries);
+            }
+        }
+        buf
+    }
+
+    /// Failed sync: restore the dirty marks serialization cleared, so the
+    /// next sync rewrites the affected sections.
+    fn remark_dirty(&self, ids: &[SectionId]) {
+        for &id in ids {
+            match id {
+                SectionId::Chunks => self.chunks.write().unwrap().mark_dirty(),
+                SectionId::Bins(g) => {
+                    for bin in mgmt_io::group_bins(g as usize, self.num_bins()) {
+                        self.shards[0].mark_bin_dirty(bin);
+                    }
+                }
+                SectionId::Names => self.names.lock().unwrap().mark_dirty(),
+                SectionId::Cache => self.cache.mark_dirty(),
+            }
+        }
+    }
+
+    /// Fresh-store management state (nothing on disk yet).
+    fn empty_management(nb: usize) -> LoadedManagement {
+        LoadedManagement {
+            chunks: ChunkDirectory::new(),
+            bins: (0..nb).map(|_| BinData::new()).collect(),
+            names: NameDirectory::new(),
+            cache: Vec::new(),
+            epoch: 0,
+            sections: HashMap::new(),
+            legacy: false,
+            bins_per_group: mgmt_io::BINS_PER_GROUP,
+        }
+    }
+
+    /// Load the management image: the newest *complete* manifest (every
+    /// section present with matching checksum), falling back through
+    /// older manifests (a torn sync can only have torn the newest), then
+    /// to the legacy monolithic `management.bin`, then — for stores that
+    /// never synced — to the empty state.
+    fn load_management(dir: &Path, nb: usize) -> Result<LoadedManagement> {
+        let epochs = mgmt_io::list_manifest_epochs(dir)?;
+        for &e in epochs.iter().rev() {
+            let Some(man) = mgmt_io::read_manifest(dir, e) else { continue };
+            if man.num_bins as usize != nb {
+                continue;
+            }
+            let Some(secs) = mgmt_io::load_sections(dir, &man) else { continue };
+            if let Some(mut lm) = Self::parse_sections(nb, &man, &secs) {
+                lm.epoch = man.epoch;
+                lm.sections = man.sections.iter().map(|r| (r.id, r.clone())).collect();
+                lm.bins_per_group = man.bins_per_group as usize;
+                return Ok(lm);
+            }
+        }
+        let p = dir.join("management.bin");
+        if p.exists() {
+            let mut lm = Self::load_legacy_management(dir, &p, nb)?;
+            lm.legacy = true;
+            return Ok(lm);
+        }
+        if epochs.is_empty() {
+            // never synced: empty store
+            return Ok(Self::empty_management(nb));
+        }
+        Err(Error::Datastore(format!(
+            "no complete management manifest in {dir:?} (all candidates torn or corrupt)"
+        )))
+    }
+
+    /// Parse the sections of one manifest into directories. `None` on any
+    /// structural mismatch (the caller then tries an older manifest).
+    fn parse_sections(
+        nb: usize,
+        man: &Manifest,
+        secs: &HashMap<SectionId, Vec<u8>>,
+    ) -> Option<LoadedManagement> {
+        let chunks_buf = secs.get(&SectionId::Chunks)?;
+        let (chunks, used) = ChunkDirectory::deserialize_from(chunks_buf)?;
+        if used != chunks_buf.len() {
+            return None;
+        }
+        let bpg = man.bins_per_group as usize;
+        let mut bins = Vec::with_capacity(nb);
+        for g in 0..nb.div_ceil(bpg) {
+            let buf = secs.get(&SectionId::Bins(g as u32))?;
+            let mut pos = 0;
+            for _ in mgmt_io::group_bins_with(g, nb, bpg) {
+                let (b, used) = BinData::deserialize_from(&buf[pos..])?;
+                pos += used;
+                bins.push(b);
+            }
+            if pos != buf.len() {
+                return None;
+            }
+        }
+        let names_buf = secs.get(&SectionId::Names)?;
+        let (names, used) = NameDirectory::deserialize_from(names_buf)?;
+        if used != names_buf.len() {
+            return None;
+        }
+        let cache = mgmt_io::decode_cache_section(secs.get(&SectionId::Cache)?)?;
+        Some(LoadedManagement {
+            chunks,
+            bins,
+            names,
+            cache,
+            epoch: 0,
+            sections: HashMap::new(),
+            legacy: false,
+            bins_per_group: man.bins_per_group as usize,
+        })
+    }
+
+    /// Read the pre-segmentation monolithic `management.bin` (still
+    /// supported on open; the next sync converts the store).
+    fn load_legacy_management(dir: &Path, p: &Path, nb: usize) -> Result<LoadedManagement> {
+        let buf = std::fs::read(p).map_err(|e| Error::io(p, e))?;
         let bad = || Error::Datastore(format!("corrupt management.bin in {dir:?}"));
         if buf.len() < 12 || &buf[0..8] != MGMT_MAGIC {
             return Err(bad());
@@ -518,7 +1091,16 @@ impl MetallManager {
         if pos != buf.len() {
             return Err(bad());
         }
-        Ok((chunks, bins, names))
+        Ok(LoadedManagement {
+            chunks,
+            bins,
+            names,
+            cache: Vec::new(),
+            epoch: 0,
+            sections: HashMap::new(),
+            legacy: false,
+            bins_per_group: mgmt_io::BINS_PER_GROUP,
+        })
     }
 
     /// Cross-check chunk directory against the sharded bin data (run on
@@ -574,7 +1156,9 @@ impl MetallManager {
         let dst = dst.as_ref();
         self.sync()?;
         let (_files, _bytes, method) = reflink::copy_dir(&self.dir, dst)?;
-        std::fs::write(dst.join(CLEAN_MARKER), b"").map_err(|e| Error::io(dst, e))?;
+        // durable CLEAN marker: the snapshot is consistent by construction
+        mgmt_io::write_section_file(dst, CLEAN_MARKER, b"")?;
+        mgmt_io::fsync_dir(dst)?;
         Ok(method)
     }
 
@@ -587,9 +1171,16 @@ impl MetallManager {
         if self.closed.swap(true, Ordering::SeqCst) || self.read_only {
             return Ok(());
         }
+        // The process is ending: cache warmth is moot, so drain the
+        // per-core caches fully — the closed image is canonical (every
+        // free slot in the bitsets, empty cache section), which also
+        // keeps the on-disk bytes independent of how many syncs ran.
+        self.flush_cache()?;
         self.sync()?;
-        let p = self.dir.join(CLEAN_MARKER);
-        std::fs::write(&p, b"").map_err(|e| Error::io(&p, e))?;
+        // durable CLEAN marker (fsync file + directory: a crash right
+        // after close must not lose the marker the next open requires)
+        mgmt_io::write_section_file(&self.dir, CLEAN_MARKER, b"")?;
+        mgmt_io::fsync_dir(&self.dir)?;
         Ok(())
     }
 
@@ -630,6 +1221,42 @@ impl MetallManager {
     /// Per-shard contention counters.
     pub fn shard_stats(&self) -> Vec<ShardStatsSnapshot> {
         self.shards.iter().enumerate().map(|(i, s)| s.stats_snapshot(i)).collect()
+    }
+
+    /// Observability snapshot of the incremental sync path (cumulative
+    /// counts + the shape of the last [`Self::sync`]).
+    pub fn sync_stats(&self) -> SyncStats {
+        *self.last_sync.lock().unwrap()
+    }
+
+    /// Explicitly drain every per-core object cache (and the remote-free
+    /// queues) back to the bitsets, releasing chunks that empty. `sync()`
+    /// deliberately does *not* do this — it preserves cache warmth and
+    /// records the parked slots in the transient cache section instead —
+    /// so callers that want `used_segment_bytes()` to reflect only live
+    /// allocations (tests, space audits, pre-shrink housekeeping) call
+    /// this first.
+    pub fn flush_object_caches(&self) -> Result<()> {
+        self.check_writable()?;
+        self.flush_cache()
+    }
+
+    /// Record that `[offset, offset+len)` of the segment was written.
+    /// Every write API of the manager (and the `SegmentAlloc` impls the
+    /// containers use) marks automatically; callers writing through raw
+    /// [`Self::ptr`] pointers must mark themselves or their bytes are
+    /// flushed only by the kernel's own write-back, not by `sync()`.
+    #[inline]
+    pub fn mark_data_dirty(&self, offset: u64, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let cs = self.opts.chunk_size as u64;
+        let first = offset / cs;
+        let last = (offset + len as u64 - 1) / cs;
+        for c in first..=last {
+            self.dirty_data.mark(c as usize);
+        }
     }
 
     /// Number of allocator shards (DRAM-only; see [`ManagerOptions::shards`]).
@@ -789,6 +1416,12 @@ impl MetallManager {
             let b = sh.bins[bin as usize].read().unwrap();
             let mut claims: Vec<(u32, u32)> = Vec::with_capacity(REFILL_BATCH);
             b.try_claim_batch(REFILL_BATCH, &mut claims);
+            if !claims.is_empty() {
+                // dirty-epoch mark inside the critical section: releasing
+                // the shared lock orders it before any sync that takes
+                // the exclusive side to serialize this bin
+                sh.mark_bin_dirty(bin as usize);
+            }
             claims
         };
         if let Some(&(chunk, slot)) = claims.first() {
@@ -825,21 +1458,29 @@ impl MetallManager {
         let mut b = sh.bins[bin as usize].write().unwrap();
         b.prune_full();
         if let Some((chunk, slot)) = b.alloc_slot() {
+            sh.mark_bin_dirty(bin as usize);
             return Ok(self.slot_offset(chunk, bin, slot));
         }
+        // Reserve the chunk id under the chunk-directory lock, but run
+        // the segment extension (ftruncate + mmap syscalls) *outside* it:
+        // the reserved entry is no longer Free, so no other thread can
+        // claim it, and a concurrent large allocation's probe skips it —
+        // the directory-wide lock must not be held across syscalls. On
+        // extension failure the reservation is rolled back under a fresh
+        // lock acquisition.
         let chunk = {
             let mut chunks = self.chunks.write().unwrap();
-            let chunk = chunks.take_small_chunk_on(bin, shard as u32);
-            if let Err(e) = self.segment.extend_to((chunk as usize + 1) * cs) {
-                chunks.free_small_chunk_on(chunk, shard as u32);
-                return Err(e);
-            }
-            chunk
+            chunks.take_small_chunk_on(bin, shard as u32)
         };
+        if let Err(e) = self.segment.extend_to((chunk as usize + 1) * cs) {
+            self.chunks.write().unwrap().free_small_chunk_on(chunk, shard as u32);
+            return Err(e);
+        }
         sh.stats.fresh_chunks.fetch_add(1, Ordering::Relaxed);
         self.place_fresh_chunk(chunk, shard);
         let slots = slots_per_chunk(bin as usize, cs) as u32;
         let slot = b.add_chunk_and_alloc(chunk, slots);
+        sh.mark_bin_dirty(bin as usize);
         Ok(self.slot_offset(chunk, bin, slot))
     }
 
@@ -892,6 +1533,9 @@ impl MetallManager {
             birth = node;
         } else {
             unsafe { self.segment.slice_mut(chunk as usize * cs, cs).fill(0) };
+            // the zero-fill dirtied the whole chunk (recycled extents may
+            // hold a dead life's bytes in the file)
+            self.dirty_data.mark(chunk as usize);
             sh.stats.first_touch_chunks.fetch_add(1, Ordering::Relaxed);
             birth = topo.node_of_cpu(current_vcpu());
         }
@@ -907,10 +1551,16 @@ impl MetallManager {
         let cs = self.opts.chunk_size;
         let n = large_chunks(size, cs) as u32;
         self.stats.large_allocs.fetch_add(1, Ordering::Relaxed);
-        let mut chunks = self.chunks.write().unwrap();
-        let head = chunks.take_large(n);
+        // reserve the run under the lock, extend outside it (same
+        // discipline as the small-chunk slow path: no ftruncate/mmap
+        // syscalls under the directory-wide write lock), roll back the
+        // reservation on failure
+        let head = {
+            let mut chunks = self.chunks.write().unwrap();
+            chunks.take_large(n)
+        };
         if let Err(e) = self.segment.extend_to((head + n) as usize * cs) {
-            chunks.free_large(head);
+            self.chunks.write().unwrap().free_large(head);
             return Err(e);
         }
         Ok(head as u64 * cs as u64)
@@ -1050,6 +1700,7 @@ impl MetallManager {
         unsafe {
             std::ptr::copy_nonoverlapping(self.ptr(offset), self.ptr(new_off), copy);
         }
+        self.mark_data_dirty(new_off, copy); // after the copy (see write())
         self.deallocate(offset)?;
         Ok(new_off)
     }
@@ -1129,6 +1780,9 @@ impl MetallManager {
         let sh = &self.shards[shard];
         sh.stats.exclusive_acquires.fetch_add(1, Ordering::Relaxed);
         let mut b = sh.bins[bin as usize].write().unwrap();
+        if !offsets.is_empty() {
+            sh.mark_bin_dirty(bin as usize);
+        }
         let mut result = Ok(());
         for &off in offsets {
             let chunk = (off / cs) as u32;
@@ -1196,6 +1850,10 @@ impl MetallManager {
         assert!(!self.read_only, "write on read-only datastore");
         assert!(offset as usize + std::mem::size_of::<T>() <= self.segment.mapped_len());
         unsafe { std::ptr::write_unaligned(self.ptr(offset) as *mut T, value) }
+        // mark AFTER the store: a sync that swallows the mark must have
+        // run after the bytes landed (mark-first could msync the chunk
+        // pre-store and leave the write permanently unflushed)
+        self.mark_data_dirty(offset, std::mem::size_of::<T>());
     }
 
     /// Byte-slice view of an allocation.
@@ -1210,6 +1868,12 @@ impl MetallManager {
     /// Same as [`Self::bytes`] plus exclusivity.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn bytes_mut(&self, offset: u64, len: usize) -> &mut [u8] {
+        // Handing out a mutable view marks the range written — the caller
+        // has it precisely to write. This is inherently mark-before-write
+        // (the writes happen through the returned slice), so a sync racing
+        // the caller's stores only covers them under the documented
+        // quiescence contract; the value-writing APIs mark after.
+        self.mark_data_dirty(offset, len);
         self.segment.slice_mut(offset as usize, len)
     }
 
@@ -1364,6 +2028,27 @@ mod tests {
 
     fn mk(dir: &Path) -> MetallManager {
         MetallManager::create_with(dir, ManagerOptions::small_for_tests()).unwrap()
+    }
+
+    /// Logical management image of a store: the newest complete
+    /// manifest's section contents concatenated in section order. Two
+    /// stores with the same image hold identical management state, no
+    /// matter how many sync epochs produced it (file *names* differ by
+    /// epoch; the bytes must not).
+    fn mgmt_image(dir: &Path) -> Vec<u8> {
+        let epochs = mgmt_io::list_manifest_epochs(dir).unwrap();
+        for &e in epochs.iter().rev() {
+            let Some(man) = mgmt_io::read_manifest(dir, e) else { continue };
+            let Some(secs) = mgmt_io::load_sections(dir, &man) else { continue };
+            let mut ids: Vec<SectionId> = secs.keys().copied().collect();
+            ids.sort();
+            let mut image = Vec::new();
+            for id in ids {
+                image.extend_from_slice(&secs[&id]);
+            }
+            return image;
+        }
+        panic!("no complete manifest in {dir:?}");
     }
 
     #[test]
@@ -1586,7 +2271,8 @@ mod tests {
         let b = m.allocate(32 << 10).unwrap();
         m.deallocate(a).unwrap();
         m.deallocate(b).unwrap();
-        // force the cache out
+        // force the cache out (sync alone preserves cache warmth now)
+        m.flush_object_caches().unwrap();
         m.sync().unwrap();
         assert!(m.stats().freed_chunks >= 1);
         assert_eq!(m.used_segment_bytes(), 0);
@@ -1697,8 +2383,7 @@ mod tests {
         };
         run(&d.join("a"));
         run(&d.join("b"));
-        let mgmt_a = std::fs::read(d.join("a").join("management.bin")).unwrap();
-        let mgmt_b = std::fs::read(d.join("b").join("management.bin")).unwrap();
+        let (mgmt_a, mgmt_b) = (mgmt_image(&d.join("a")), mgmt_image(&d.join("b")));
         assert_eq!(mgmt_a, mgmt_b, "management data bit-identical");
         let files = |p: &Path| {
             let mut v: Vec<_> = std::fs::read_dir(p.join("segment"))
@@ -1750,7 +2435,9 @@ mod tests {
         });
         let ss = m.shard_stats();
         assert!(ss[0].remote_frees > 0, "cross-shard frees queued: {ss:?}");
-        // sync drains caches and remote queues: nothing may leak
+        // explicit cache flush + sync drains caches and remote queues:
+        // nothing may leak
+        m.flush_object_caches().unwrap();
         m.sync().unwrap();
         assert_eq!(m.used_segment_bytes(), 0, "no leaked slots");
         let agg = m.stats();
@@ -1794,7 +2481,7 @@ mod tests {
             pin_thread_vcpu(None);
             m.close().unwrap();
         }
-        let golden = std::fs::read(store.join("management.bin")).unwrap();
+        let golden = mgmt_image(&store);
         // a store written with 4 shards reopens and validates with any
         // shard count; closing again rewrites identical management bytes
         for reopen_shards in [1usize, 2, 4, 3] {
@@ -1810,7 +2497,7 @@ mod tests {
             assert!(m.doctor().unwrap().is_empty());
             m.close().unwrap();
             assert_eq!(
-                std::fs::read(store.join("management.bin")).unwrap(),
+                mgmt_image(&store),
                 golden,
                 "shards={reopen_shards}: persistent image unchanged by reopen"
             );
@@ -1824,6 +2511,7 @@ mod tests {
             m.deallocate(off).unwrap();
         }
         pin_thread_vcpu(None);
+        m.flush_object_caches().unwrap();
         m.sync().unwrap();
         assert_eq!(m.used_segment_bytes(), 0, "no leaked slots after reshard churn");
         m.close().unwrap();
@@ -1924,6 +2612,328 @@ mod tests {
         assert_eq!(r.node_local_fraction(), Some(1.0));
         m.deallocate(big).unwrap();
         m.deallocate(off).unwrap();
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn dirty_chunk_set_preserves_bits_past_the_limit() {
+        // a mark racing a sync (segment extended after the sync read
+        // mapped_len) must survive for the next sync — including in the
+        // word straddling the limit
+        let s = DirtyChunkSet::new(256);
+        s.mark(3);
+        s.mark(60);
+        s.mark(62); // same word as 60, past limit 61
+        s.mark(130); // wholly past the limit
+        assert_eq!(s.take_dirty(61), vec![3, 60]);
+        assert_eq!(s.take_dirty(256), vec![62, 130], "raced marks preserved");
+        assert!(s.take_dirty(256).is_empty());
+    }
+
+    #[test]
+    fn incremental_sync_rewrites_only_dirty_sections() {
+        use crate::alloc::object_cache::pin_thread_vcpu;
+        let d = TempDir::new("mgr-incsync");
+        let store = d.join("s");
+        // pinned vcpu: every cache op hits one slot, so the section byte
+        // counts compared below are deterministic
+        pin_thread_vcpu(Some(0));
+        let m = mk(&store);
+        for i in 0..100u64 {
+            m.construct::<u64>(&format!("k{i}"), i).unwrap();
+        }
+        m.sync().unwrap();
+        let st1 = m.sync_stats();
+        assert_eq!(st1.dirty_sections, st1.total_sections, "first sync writes everything");
+        assert_eq!(st1.manifest_commits, 1);
+        assert!(st1.section_bytes_written > 0);
+        // no-op sync: zero section bytes, zero data, no new manifest
+        m.sync().unwrap();
+        let st2 = m.sync_stats();
+        assert_eq!(st2.syncs, 2);
+        assert_eq!(st2.dirty_sections, 0, "nothing changed");
+        assert_eq!(st2.section_bytes_written, 0, "no-op sync writes zero section bytes");
+        assert_eq!(st2.data_chunks_flushed, 0);
+        assert_eq!(st2.manifest_commits, 1, "no new manifest committed");
+        // touch one value + one name: the next sync rewrites a strict
+        // subset of the sections and flushes one data chunk
+        m.write::<u64>(m.find::<u64>("k3").unwrap().unwrap(), 999);
+        m.construct::<u64>("extra", 1).unwrap();
+        m.sync().unwrap();
+        let st3 = m.sync_stats();
+        assert!(st3.dirty_sections >= 1, "{st3:?}");
+        assert!(st3.dirty_sections < st3.total_sections, "{st3:?}");
+        assert!(st3.section_bytes_written > 0);
+        assert!(
+            st3.section_bytes_written < st1.section_bytes_written,
+            "delta write smaller than the full image: {st3:?} vs {st1:?}"
+        );
+        assert!(st3.data_chunks_flushed >= 1);
+        assert_eq!(st3.manifest_commits, 2);
+        m.close().unwrap();
+        pin_thread_vcpu(None);
+        // the incremental chain reopens with everything intact
+        let m = MetallManager::open(&store).unwrap();
+        assert_eq!(m.read::<u64>(m.find::<u64>("k3").unwrap().unwrap()), 999);
+        assert!(m.find::<u64>("extra").unwrap().is_some());
+        for i in [0u64, 42, 99] {
+            let off = m.find::<u64>(&format!("k{i}")).unwrap().unwrap();
+            if i != 3 {
+                assert_eq!(m.read::<u64>(off), i);
+            }
+        }
+        assert!(m.doctor().unwrap().is_empty());
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn data_flush_narrows_to_dirty_chunks() {
+        let d = TempDir::new("mgr-narrow");
+        let m = mk(&d.join("s"));
+        let cs = m.chunk_size();
+        let big = m.allocate(3 * cs).unwrap(); // rounds to a 4-chunk run
+        unsafe { m.bytes_mut(big, 3 * cs).fill(0xCD) };
+        m.sync().unwrap();
+        assert!(m.sync_stats().data_chunks_flushed >= 3, "{:?}", m.sync_stats());
+        // one 8-byte write → exactly one chunk flushed
+        m.write::<u64>(big, 7);
+        m.sync().unwrap();
+        let st = m.sync_stats();
+        assert_eq!(st.data_chunks_flushed, 1, "{st:?}");
+        assert_eq!(st.data_bytes_flushed, cs as u64, "{st:?}");
+        assert_eq!(st.dirty_sections, 0, "pure data writes touch no section");
+        // a write spanning a chunk boundary flushes both sides
+        m.write::<u64>(big + cs as u64 - 4, 1);
+        m.sync().unwrap();
+        assert_eq!(m.sync_stats().data_chunks_flushed, 2);
+        m.deallocate(big).unwrap();
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn sync_preserves_cache_warmth() {
+        use crate::alloc::object_cache::pin_thread_vcpu;
+        let d = TempDir::new("mgr-warm");
+        let m = mk(&d.join("s"));
+        // pinned: the pop after the sync must hit the slot the free
+        // parked into, whatever CPU the test thread migrates across
+        pin_thread_vcpu(Some(0));
+        let a = m.allocate(64).unwrap();
+        m.deallocate(a).unwrap(); // parked in this core's cache
+        let hits0 = m.stats().cache_hits;
+        m.sync().unwrap();
+        assert!(
+            m.sync_stats().cache_slots_preserved >= 1,
+            "{:?}",
+            m.sync_stats()
+        );
+        assert!(m.used_segment_bytes() > 0, "cached slot still claims its chunk");
+        let b = m.allocate(64).unwrap();
+        assert_eq!(b, a, "sync left the freed slot cached (LIFO)");
+        assert_eq!(m.stats().cache_hits, hits0 + 1, "served from cache, no locks");
+        m.deallocate(b).unwrap();
+        m.close().unwrap();
+        pin_thread_vcpu(None);
+    }
+
+    #[test]
+    fn crash_between_syncs_recovers_cached_slots() {
+        let d = TempDir::new("mgr-cacherec");
+        let store = d.join("s");
+        {
+            let m = mk(&store);
+            let offs: Vec<u64> = (0..40).map(|_| m.allocate(64).unwrap()).collect();
+            for &off in &offs {
+                m.deallocate(off).unwrap(); // all parked in caches
+            }
+            m.sync().unwrap(); // bitsets still claim them; cache section records them
+            assert!(m.used_segment_bytes() > 0);
+            std::mem::forget(m); // crash without close
+        }
+        let m = MetallManager::open_unclean(&store).unwrap();
+        assert_eq!(
+            m.used_segment_bytes(),
+            0,
+            "recovery returned every parked slot and released the chunk"
+        );
+        assert!(m.doctor().unwrap().is_empty());
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn legacy_monolithic_management_reopens_and_converts() {
+        let d = TempDir::new("mgr-legacy");
+        let store = d.join("s");
+        {
+            let m = mk(&store);
+            for i in 0..30u64 {
+                m.construct::<u64>(&format!("v{i}"), i * 3).unwrap();
+            }
+            m.close().unwrap();
+        }
+        // convert the segmented store to the pre-segmentation monolithic
+        // format: magic + nb + chunk dir + every bin + names, then remove
+        // the manifest machinery (a close()d store has an empty cache
+        // section, so the monolith loses nothing)
+        let nb = num_bins(ManagerOptions::small_for_tests().chunk_size);
+        let epochs = mgmt_io::list_manifest_epochs(&store).unwrap();
+        let man = mgmt_io::read_manifest(&store, *epochs.last().unwrap()).unwrap();
+        let secs = mgmt_io::load_sections(&store, &man).unwrap();
+        assert_eq!(
+            mgmt_io::decode_cache_section(&secs[&SectionId::Cache]).unwrap(),
+            vec![],
+            "closed store has an empty cache section"
+        );
+        let mut legacy = Vec::new();
+        legacy.extend_from_slice(MGMT_MAGIC);
+        legacy.extend_from_slice(&(nb as u32).to_le_bytes());
+        legacy.extend_from_slice(&secs[&SectionId::Chunks]);
+        for g in 0..mgmt_io::num_groups(nb) {
+            legacy.extend_from_slice(&secs[&SectionId::Bins(g as u32)]);
+        }
+        legacy.extend_from_slice(&secs[&SectionId::Names]);
+        std::fs::write(store.join("management.bin"), &legacy).unwrap();
+        for entry in std::fs::read_dir(&store).unwrap().flatten() {
+            let name = entry.file_name();
+            let name = name.to_str().unwrap();
+            if name.starts_with("manifest-") || name.starts_with("mgmt-") {
+                std::fs::remove_file(entry.path()).unwrap();
+            }
+        }
+        // the legacy store opens; closing converts it to the segmented
+        // format and removes the monolith
+        {
+            let m = MetallManager::open(&store).unwrap();
+            for i in 0..30u64 {
+                let off = m.find::<u64>(&format!("v{i}")).unwrap().unwrap();
+                assert_eq!(m.read::<u64>(off), i * 3, "legacy value {i}");
+            }
+            assert!(m.doctor().unwrap().is_empty());
+            m.close().unwrap();
+        }
+        assert!(!store.join("management.bin").exists(), "monolith superseded");
+        assert!(!mgmt_io::list_manifest_epochs(&store).unwrap().is_empty());
+        let m = MetallManager::open(&store).unwrap();
+        assert_eq!(m.num_named(), 30);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn foreign_bin_group_width_triggers_full_rewrite() {
+        // A manifest written by a build with a different BINS_PER_GROUP
+        // must load correctly (the width is recorded in the manifest) and
+        // the next sync must rewrite *every* section — carrying 4-wide
+        // bin-group files forward into an 8-wide manifest would corrupt
+        // the chain on the following open.
+        let d = TempDir::new("mgr-bpg");
+        let store = d.join("s");
+        {
+            let m = mk(&store);
+            for i in 0..20u64 {
+                m.construct::<u64>(&format!("w{i}"), i + 7).unwrap();
+            }
+            m.close().unwrap();
+        }
+        // Rewrite the store as if a BINS_PER_GROUP=4 build had synced it:
+        // split each 8-wide group section into per-bin byte runs and
+        // regroup them 4 wide, then commit a manifest declaring width 4.
+        let nb = num_bins(ManagerOptions::small_for_tests().chunk_size);
+        let epochs = mgmt_io::list_manifest_epochs(&store).unwrap();
+        let man = mgmt_io::read_manifest(&store, *epochs.last().unwrap()).unwrap();
+        let secs = mgmt_io::load_sections(&store, &man).unwrap();
+        let mut per_bin: Vec<Vec<u8>> = Vec::with_capacity(nb);
+        for g in 0..mgmt_io::num_groups(nb) {
+            let buf = &secs[&SectionId::Bins(g as u32)];
+            let mut pos = 0;
+            for _ in mgmt_io::group_bins(g, nb) {
+                let (_, used) = BinData::deserialize_from(&buf[pos..]).unwrap();
+                per_bin.push(buf[pos..pos + used].to_vec());
+                pos += used;
+            }
+        }
+        assert_eq!(per_bin.len(), nb);
+        let epoch2 = man.epoch + 1;
+        let mut sections: Vec<SectionRecord> = man
+            .sections
+            .iter()
+            .filter(|r| !matches!(r.id, SectionId::Bins(_)))
+            .cloned()
+            .collect();
+        for (g, bins) in per_bin.chunks(4).enumerate() {
+            let bytes: Vec<u8> = bins.concat();
+            let id = SectionId::Bins(g as u32);
+            let file = id.file_name(epoch2);
+            mgmt_io::write_section_file(&store, &file, &bytes).unwrap();
+            sections.push(SectionRecord {
+                id,
+                file,
+                len: bytes.len() as u64,
+                checksum: mgmt_io::fnv1a(&bytes),
+            });
+        }
+        sections.sort_by_key(|r| r.id);
+        let foreign = mgmt_io::Manifest {
+            epoch: epoch2,
+            num_bins: nb as u32,
+            bins_per_group: 4,
+            sections,
+        };
+        mgmt_io::commit_manifest(&store, &foreign).unwrap();
+        // the foreign-width store opens and a mutating sync rewrites all
+        {
+            let m = MetallManager::open(&store).unwrap();
+            for i in 0..20u64 {
+                let off = m.find::<u64>(&format!("w{i}")).unwrap().unwrap();
+                assert_eq!(m.read::<u64>(off), i + 7, "foreign-width value {i}");
+            }
+            m.construct::<u64>("bpg", 1).unwrap();
+            m.sync().unwrap();
+            let st = m.sync_stats();
+            assert_eq!(
+                st.dirty_sections, st.total_sections,
+                "width mismatch forces a full section rewrite: {st:?}"
+            );
+            m.close().unwrap();
+        }
+        // the re-homed chain keeps reopening correctly
+        let m = MetallManager::open(&store).unwrap();
+        assert_eq!(m.num_named(), 21);
+        assert_eq!(m.read::<u64>(m.find::<u64>("w9").unwrap().unwrap()), 16);
+        assert!(m.doctor().unwrap().is_empty());
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn torn_section_falls_back_to_previous_manifest() {
+        let d = TempDir::new("mgr-torn");
+        let store = d.join("s");
+        {
+            let m = mk(&store);
+            m.construct::<u64>("a", 1).unwrap();
+            m.sync().unwrap(); // epoch 1: complete
+            m.construct::<u64>("b", 2).unwrap();
+            m.sync().unwrap(); // epoch 2: rewrote names (among others)
+            std::mem::forget(m); // crash without close
+        }
+        let epochs = mgmt_io::list_manifest_epochs(&store).unwrap();
+        assert_eq!(epochs, vec![1, 2], "current + fallback manifests retained");
+        // tear epoch 2's names section (a file the second sync wrote)
+        let man2 = mgmt_io::read_manifest(&store, 2).unwrap();
+        let rec = man2.section(SectionId::Names).unwrap();
+        assert!(rec.file.contains("000000000002"), "names rewritten at epoch 2");
+        let bytes = std::fs::read(store.join(&rec.file)).unwrap();
+        std::fs::write(store.join(&rec.file), &bytes[..bytes.len() / 2]).unwrap();
+        // recovery skips the torn epoch 2 and opens epoch 1's state
+        let m = MetallManager::open_unclean(&store).unwrap();
+        assert!(m.find::<u64>("a").unwrap().is_some(), "epoch-1 state present");
+        assert!(m.find::<u64>("b").unwrap().is_none(), "torn epoch-2 state absent");
+        assert!(m.doctor().unwrap().is_empty());
+        // the recovered store keeps working: the next sync re-commits
+        // epoch 2 over the torn leftovers
+        m.construct::<u64>("c", 3).unwrap();
+        m.close().unwrap();
+        let m = MetallManager::open(&store).unwrap();
+        assert!(m.find::<u64>("c").unwrap().is_some());
         m.close().unwrap();
     }
 

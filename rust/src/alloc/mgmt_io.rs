@@ -1,0 +1,545 @@
+//! Segmented management-data format: the on-disk protocol behind the
+//! incremental [`super::manager::MetallManager::sync`].
+//!
+//! The monolithic `management.bin` of earlier versions serialized the
+//! whole chunk directory, every bin bitset, and the name directory into
+//! one file on every sync — O(entire store) even when one object changed.
+//! This module replaces it with **per-section files** plus a small,
+//! self-checksummed **manifest** that is the single commit point:
+//!
+//! ```text
+//! <dir>/
+//!   manifest-<epoch>.bin        committed by fsync'd atomic rename
+//!   mgmt-chunks-<epoch>.bin     chunk directory
+//!   mgmt-bins<g>-<epoch>.bin    bin group g (BINS_PER_GROUP bins each)
+//!   mgmt-names-<epoch>.bin      name directory
+//!   mgmt-cache-<epoch>.bin      transient: free slots parked in the
+//!                               per-core object caches / remote queues
+//! ```
+//!
+//! ## Protocol invariants
+//!
+//! - **Sections are immutable.** A section file, once written and
+//!   fsync'd, is never rewritten: a dirty section gets a *new* file named
+//!   with the committing epoch, clean sections are carried forward by
+//!   reference (the manifest lists the exact file name, length, and
+//!   FNV-1a checksum of every section).
+//! - **The manifest is the commit point.** It is written to a temp file,
+//!   fsync'd, renamed into place, and the directory is fsync'd — so a
+//!   crash at any instant leaves either the new manifest complete or the
+//!   previous one untouched (every file either manifest references still
+//!   exists, because garbage collection never removes files referenced by
+//!   the two most recent manifests).
+//! - **Recovery walks manifests newest-first** and loads the first one
+//!   that parses, whose trailer checksum matches, and whose sections all
+//!   exist with matching checksums — "the last complete manifest". A
+//!   store that has never done a segmented sync falls back to the legacy
+//!   monolithic `management.bin`.
+//!
+//! The manager layer decides *which* sections are dirty (DRAM-only dirty
+//! flags set at the allocator's serialization points) and writes them
+//! with a flusher pool; this module owns only the bytes and the files.
+
+use std::collections::{HashMap, HashSet};
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::ops::Range;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+const MANIFEST_MAGIC: &[u8; 8] = b"METALLMF";
+const MANIFEST_VERSION: u32 = 1;
+
+/// Bins serialized per `mgmt-bins<g>` section. Grouping keeps the file
+/// count bounded while still letting a sync that touched one size class
+/// rewrite ~1/8th of the bin data instead of all of it. The value is
+/// recorded in every manifest, so it can change between versions without
+/// breaking old stores.
+pub const BINS_PER_GROUP: usize = 8;
+
+/// Identity of one management section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SectionId {
+    /// The chunk directory.
+    Chunks,
+    /// Bin group `g`: bins `[g*BINS_PER_GROUP, (g+1)*BINS_PER_GROUP)`.
+    Bins(u32),
+    /// The name directory.
+    Names,
+    /// Transient free-slot snapshot (object caches + remote-free queues):
+    /// slots that are *claimed* in the serialized bitsets but actually
+    /// free. Recovery returns them to the bitsets so a crash between
+    /// syncs leaks nothing.
+    Cache,
+}
+
+impl SectionId {
+    fn tag(self) -> u8 {
+        match self {
+            SectionId::Chunks => 0,
+            SectionId::Bins(_) => 1,
+            SectionId::Names => 2,
+            SectionId::Cache => 3,
+        }
+    }
+
+    fn group(self) -> u32 {
+        match self {
+            SectionId::Bins(g) => g,
+            _ => 0,
+        }
+    }
+
+    fn from_tag(tag: u8, group: u32) -> Option<Self> {
+        match tag {
+            0 => Some(SectionId::Chunks),
+            1 => Some(SectionId::Bins(group)),
+            2 => Some(SectionId::Names),
+            3 => Some(SectionId::Cache),
+            _ => None,
+        }
+    }
+
+    /// File name for this section when (re)written at `epoch`.
+    pub fn file_name(self, epoch: u64) -> String {
+        match self {
+            SectionId::Chunks => format!("mgmt-chunks-{epoch:012}.bin"),
+            SectionId::Bins(g) => format!("mgmt-bins{g:03}-{epoch:012}.bin"),
+            SectionId::Names => format!("mgmt-names-{epoch:012}.bin"),
+            SectionId::Cache => format!("mgmt-cache-{epoch:012}.bin"),
+        }
+    }
+}
+
+/// One committed section: exact file, length, and content checksum.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SectionRecord {
+    pub id: SectionId,
+    pub file: String,
+    pub len: u64,
+    pub checksum: u64,
+}
+
+/// A parsed manifest: the complete management state at one epoch.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Manifest {
+    pub epoch: u64,
+    pub num_bins: u32,
+    pub bins_per_group: u32,
+    pub sections: Vec<SectionRecord>,
+}
+
+/// The section/manifest content checksum: the crate-wide FNV-1a. Not
+/// cryptographic; it detects the torn/truncated/bit-rotted files the
+/// recovery walk must skip.
+pub use crate::util::fnv1a;
+
+/// Number of bin-group sections for `num_bins` bins.
+pub fn num_groups(num_bins: usize) -> usize {
+    num_bins.div_ceil(BINS_PER_GROUP)
+}
+
+/// The bin indices group `g` serializes (using `bpg` bins per group).
+pub fn group_bins_with(g: usize, num_bins: usize, bpg: usize) -> Range<usize> {
+    let start = g * bpg;
+    start..((g + 1) * bpg).min(num_bins)
+}
+
+/// [`group_bins_with`] at the current [`BINS_PER_GROUP`] (the write path).
+pub fn group_bins(g: usize, num_bins: usize) -> Range<usize> {
+    group_bins_with(g, num_bins, BINS_PER_GROUP)
+}
+
+pub fn manifest_file_name(epoch: u64) -> String {
+    format!("manifest-{epoch:012}.bin")
+}
+
+/// Parse `manifest-NNNN.bin` → epoch.
+pub fn parse_manifest_epoch(name: &str) -> Option<u64> {
+    let rest = name.strip_prefix("manifest-")?.strip_suffix(".bin")?;
+    rest.parse().ok()
+}
+
+/// All manifest epochs present in `dir`, ascending.
+pub fn list_manifest_epochs(dir: &Path) -> Result<Vec<u64>> {
+    let mut epochs = Vec::new();
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(epochs),
+        Err(e) => return Err(Error::io(dir, e)),
+    };
+    for entry in rd {
+        let entry = entry.map_err(|e| Error::io(dir, e))?;
+        if let Some(name) = entry.file_name().to_str() {
+            if let Some(e) = parse_manifest_epoch(name) {
+                epochs.push(e);
+            }
+        }
+    }
+    epochs.sort_unstable();
+    Ok(epochs)
+}
+
+impl Manifest {
+    pub fn section(&self, id: SectionId) -> Option<&SectionRecord> {
+        self.sections.iter().find(|r| r.id == id)
+    }
+
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MANIFEST_MAGIC);
+        buf.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.epoch.to_le_bytes());
+        buf.extend_from_slice(&self.num_bins.to_le_bytes());
+        buf.extend_from_slice(&self.bins_per_group.to_le_bytes());
+        buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for r in &self.sections {
+            buf.push(r.id.tag());
+            buf.extend_from_slice(&r.id.group().to_le_bytes());
+            let nb = r.file.as_bytes();
+            buf.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+            buf.extend_from_slice(nb);
+            buf.extend_from_slice(&r.len.to_le_bytes());
+            buf.extend_from_slice(&r.checksum.to_le_bytes());
+        }
+        let trailer = fnv1a(&buf);
+        buf.extend_from_slice(&trailer.to_le_bytes());
+        buf
+    }
+
+    /// Parse + verify a manifest image. `None` on any structural problem
+    /// or trailer-checksum mismatch (the recovery walk then tries the
+    /// next-older manifest).
+    pub fn deserialize(buf: &[u8]) -> Option<Self> {
+        fn take<'a>(body: &'a [u8], pos: &mut usize, n: usize) -> Option<&'a [u8]> {
+            let s = body.get(*pos..*pos + n)?;
+            *pos += n;
+            Some(s)
+        }
+        if buf.len() < 8 + 4 + 8 + 4 + 4 + 4 + 8 || &buf[0..8] != MANIFEST_MAGIC {
+            return None;
+        }
+        let body = &buf[..buf.len() - 8];
+        let trailer = u64::from_le_bytes(buf[buf.len() - 8..].try_into().ok()?);
+        if fnv1a(body) != trailer {
+            return None;
+        }
+        let pos = &mut 8usize;
+        let version = u32::from_le_bytes(take(body, pos, 4)?.try_into().ok()?);
+        if version != MANIFEST_VERSION {
+            return None;
+        }
+        let epoch = u64::from_le_bytes(take(body, pos, 8)?.try_into().ok()?);
+        let num_bins = u32::from_le_bytes(take(body, pos, 4)?.try_into().ok()?);
+        let bins_per_group = u32::from_le_bytes(take(body, pos, 4)?.try_into().ok()?);
+        let nsec = u32::from_le_bytes(take(body, pos, 4)?.try_into().ok()?) as usize;
+        let mut sections = Vec::with_capacity(nsec.min(1024));
+        for _ in 0..nsec {
+            let tag = take(body, pos, 1)?[0];
+            let group = u32::from_le_bytes(take(body, pos, 4)?.try_into().ok()?);
+            let id = SectionId::from_tag(tag, group)?;
+            let name_len = u16::from_le_bytes(take(body, pos, 2)?.try_into().ok()?) as usize;
+            let file = std::str::from_utf8(take(body, pos, name_len)?).ok()?.to_string();
+            let len = u64::from_le_bytes(take(body, pos, 8)?.try_into().ok()?);
+            let checksum = u64::from_le_bytes(take(body, pos, 8)?.try_into().ok()?);
+            sections.push(SectionRecord { id, file, len, checksum });
+        }
+        if *pos != body.len() || bins_per_group == 0 {
+            return None;
+        }
+        Some(Self { epoch, num_bins, bins_per_group, sections })
+    }
+}
+
+/// fsync a directory so renames/creates inside it are durable (on Linux a
+/// directory opens read-only and `fsync` flushes its dirents).
+pub fn fsync_dir(dir: &Path) -> Result<()> {
+    File::open(dir).and_then(|f| f.sync_all()).map_err(|e| Error::io(dir, e))
+}
+
+/// Write `dir/name` and fsync the file (NOT the directory — callers batch
+/// one directory fsync after the manifest commit). Section files have
+/// epoch-unique names, so no tmp+rename dance is needed: a torn write can
+/// only tear a file no committed manifest references yet.
+pub fn write_section_file(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    let path = dir.join(name);
+    let mut f = File::create(&path).map_err(|e| Error::io(&path, e))?;
+    f.write_all(bytes).map_err(|e| Error::io(&path, e))?;
+    f.sync_all().map_err(|e| Error::io(&path, e))?;
+    Ok(())
+}
+
+/// Commit a manifest: tmp file + fsync + atomic rename + directory fsync.
+/// After this returns, `manifest-<epoch>.bin` is durably the newest
+/// complete manifest.
+pub fn commit_manifest(dir: &Path, m: &Manifest) -> Result<()> {
+    let bytes = m.serialize();
+    let tmp = dir.join("manifest.tmp");
+    {
+        let mut f = File::create(&tmp).map_err(|e| Error::io(&tmp, e))?;
+        f.write_all(&bytes).map_err(|e| Error::io(&tmp, e))?;
+        f.sync_all().map_err(|e| Error::io(&tmp, e))?;
+    }
+    let fin = dir.join(manifest_file_name(m.epoch));
+    fs::rename(&tmp, &fin).map_err(|e| Error::io(&fin, e))?;
+    fsync_dir(dir)
+}
+
+/// Read + verify one manifest; `None` if missing, torn, or corrupt.
+pub fn read_manifest(dir: &Path, epoch: u64) -> Option<Manifest> {
+    let buf = fs::read(dir.join(manifest_file_name(epoch))).ok()?;
+    let m = Manifest::deserialize(&buf)?;
+    (m.epoch == epoch).then_some(m)
+}
+
+/// Read + verify one section's bytes; `None` on missing file, length
+/// mismatch, or checksum mismatch.
+pub fn read_section(dir: &Path, rec: &SectionRecord) -> Option<Vec<u8>> {
+    let buf = fs::read(dir.join(&rec.file)).ok()?;
+    (buf.len() as u64 == rec.len && fnv1a(&buf) == rec.checksum).then_some(buf)
+}
+
+/// Load every section of `m`; `None` if any is missing or corrupt.
+pub fn load_sections(dir: &Path, m: &Manifest) -> Option<HashMap<SectionId, Vec<u8>>> {
+    let mut out = HashMap::with_capacity(m.sections.len());
+    for rec in &m.sections {
+        out.insert(rec.id, read_section(dir, rec)?);
+    }
+    Some(out)
+}
+
+/// Best-effort garbage collection after a manifest commit: remove every
+/// `manifest-*.bin` / `mgmt-*.bin` not referenced by the manifests in
+/// `keep` (the committer passes the new manifest and its predecessor, so
+/// the fallback chain stays intact), plus the legacy monolithic
+/// `management.bin` the segmented format supersedes. Errors are swallowed
+/// — orphans are retried on the next sync and are ignored by recovery.
+pub fn gc(dir: &Path, keep: &[&Manifest]) {
+    let mut referenced: HashSet<String> = HashSet::new();
+    for m in keep {
+        referenced.insert(manifest_file_name(m.epoch));
+        for r in &m.sections {
+            referenced.insert(r.file.clone());
+        }
+    }
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stale_mgmt = (name.starts_with("mgmt-") || name.starts_with("manifest-"))
+            && name.ends_with(".bin")
+            && !referenced.contains(name);
+        let legacy = name == "management.bin" || name == "management.bin.tmp";
+        // a manifest.tmp can only be a leftover from a commit that
+        // crashed between write and rename (the current commit already
+        // renamed its own tmp before gc runs)
+        let orphan_tmp = name == "manifest.tmp";
+        if stale_mgmt || legacy || orphan_tmp {
+            let _ = fs::remove_file(entry.path());
+        }
+    }
+}
+
+// ---- transient cache section codec ----
+
+/// Encode the free-slot snapshot (`(bin, offset)` pairs).
+pub fn encode_cache_section(entries: &[(u32, u64)]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + entries.len() * 12);
+    buf.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+    for &(bin, off) in entries {
+        buf.extend_from_slice(&bin.to_le_bytes());
+        buf.extend_from_slice(&off.to_le_bytes());
+    }
+    buf
+}
+
+pub fn decode_cache_section(buf: &[u8]) -> Option<Vec<(u32, u64)>> {
+    let n = u64::from_le_bytes(buf.get(0..8)?.try_into().ok()?);
+    // derive the count from the actual body length (no arithmetic on the
+    // untrusted header: a crafted n must not overflow or pre-allocate)
+    let body = buf.len().checked_sub(8)?;
+    if body % 12 != 0 || n != (body / 12) as u64 {
+        return None;
+    }
+    let n = body / 12;
+    let mut out = Vec::with_capacity(n);
+    let mut pos = 8;
+    for _ in 0..n {
+        let bin = u32::from_le_bytes(buf.get(pos..pos + 4)?.try_into().ok()?);
+        let off = u64::from_le_bytes(buf.get(pos + 4..pos + 12)?.try_into().ok()?);
+        out.push((bin, off));
+        pos += 12;
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn sample_manifest(epoch: u64) -> Manifest {
+        Manifest {
+            epoch,
+            num_bins: 44,
+            bins_per_group: BINS_PER_GROUP as u32,
+            sections: vec![
+                SectionRecord {
+                    id: SectionId::Chunks,
+                    file: SectionId::Chunks.file_name(epoch),
+                    len: 10,
+                    checksum: 99,
+                },
+                SectionRecord {
+                    id: SectionId::Bins(2),
+                    file: SectionId::Bins(2).file_name(epoch),
+                    len: 7,
+                    checksum: 5,
+                },
+                SectionRecord {
+                    id: SectionId::Cache,
+                    file: SectionId::Cache.file_name(epoch),
+                    len: 8,
+                    checksum: 1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn manifest_roundtrip_and_checksum_rejects() {
+        let m = sample_manifest(7);
+        let bytes = m.serialize();
+        assert_eq!(Manifest::deserialize(&bytes), Some(m.clone()));
+        // any single-byte flip is caught by the trailer checksum
+        for i in [0usize, 9, bytes.len() / 2, bytes.len() - 1] {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0xFF;
+            assert!(Manifest::deserialize(&bad).is_none(), "flip at {i}");
+        }
+        // truncation at every length is rejected
+        for cut in 0..bytes.len() {
+            assert!(Manifest::deserialize(&bytes[..cut]).is_none(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn file_names_parse_back() {
+        assert_eq!(parse_manifest_epoch(&manifest_file_name(42)), Some(42));
+        assert_eq!(parse_manifest_epoch("manifest-.bin"), None);
+        assert_eq!(parse_manifest_epoch("mgmt-chunks-000000000001.bin"), None);
+        assert_eq!(SectionId::Bins(3).file_name(1), "mgmt-bins003-000000000001.bin");
+    }
+
+    #[test]
+    fn group_partition_covers_all_bins() {
+        for nb in [1usize, 7, 8, 9, 44, 64] {
+            let mut seen = vec![false; nb];
+            for g in 0..num_groups(nb) {
+                for b in group_bins(g, nb) {
+                    assert!(!seen[b]);
+                    seen[b] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "nb={nb}");
+        }
+    }
+
+    #[test]
+    fn commit_read_gc_cycle() {
+        let d = TempDir::new("mgmtio");
+        let dir = d.path();
+        // epoch 1: write its sections + manifest
+        let mut m1 = sample_manifest(1);
+        for r in &mut m1.sections {
+            let data = vec![r.id.tag(); 4];
+            r.len = data.len() as u64;
+            r.checksum = fnv1a(&data);
+            write_section_file(dir, &r.file, &data).unwrap();
+        }
+        commit_manifest(dir, &m1).unwrap();
+        assert_eq!(list_manifest_epochs(dir).unwrap(), vec![1]);
+        assert_eq!(read_manifest(dir, 1), Some(m1.clone()));
+        assert!(load_sections(dir, &m1).is_some());
+
+        // epoch 2 rewrites only the cache section; chunks/bins carried over
+        let mut m2 = m1.clone();
+        m2.epoch = 2;
+        let cache = encode_cache_section(&[(3, 64), (0, 128)]);
+        let rec = m2.sections.iter_mut().find(|r| r.id == SectionId::Cache).unwrap();
+        rec.file = SectionId::Cache.file_name(2);
+        rec.len = cache.len() as u64;
+        rec.checksum = fnv1a(&cache);
+        write_section_file(dir, &rec.file, &cache).unwrap();
+        commit_manifest(dir, &m2).unwrap();
+        gc(dir, &[&m2, &m1]);
+        // both manifests and all referenced sections survive GC
+        assert_eq!(list_manifest_epochs(dir).unwrap(), vec![1, 2]);
+        assert!(load_sections(dir, &m2).is_some());
+        assert!(load_sections(dir, &m1).is_some());
+
+        // epoch 3: carry everything; GC keeping {3, 2} drops manifest 1
+        let mut m3 = m2.clone();
+        m3.epoch = 3;
+        commit_manifest(dir, &m3).unwrap();
+        gc(dir, &[&m3, &m2]);
+        assert_eq!(list_manifest_epochs(dir).unwrap(), vec![2, 3]);
+        // epoch 1's cache section is unreferenced now and was collected
+        assert!(!dir.join(SectionId::Cache.file_name(1)).exists());
+        // the shared chunks section (still referenced) survives
+        assert!(dir.join(SectionId::Chunks.file_name(1)).exists());
+    }
+
+    #[test]
+    fn gc_removes_legacy_monolith_and_orphans() {
+        let d = TempDir::new("mgmtio-gc");
+        let dir = d.path();
+        std::fs::write(dir.join("management.bin"), b"legacy").unwrap();
+        std::fs::write(dir.join("mgmt-names-000000000009.bin"), b"orphan").unwrap();
+        std::fs::write(dir.join("manifest.tmp"), b"torn commit leftover").unwrap();
+        std::fs::write(dir.join("meta.bin"), b"keepme").unwrap();
+        let m = sample_manifest(10);
+        gc(dir, &[&m]);
+        assert!(!dir.join("management.bin").exists());
+        assert!(!dir.join("mgmt-names-000000000009.bin").exists());
+        assert!(!dir.join("manifest.tmp").exists(), "crashed-commit tmp collected");
+        assert!(dir.join("meta.bin").exists(), "non-management files untouched");
+    }
+
+    #[test]
+    fn torn_section_invalidates_manifest() {
+        let d = TempDir::new("mgmtio-torn");
+        let dir = d.path();
+        let data = b"section-bytes".to_vec();
+        let mut m = sample_manifest(5);
+        m.sections.truncate(1);
+        m.sections[0].len = data.len() as u64;
+        m.sections[0].checksum = fnv1a(&data);
+        write_section_file(dir, &m.sections[0].file, &data).unwrap();
+        commit_manifest(dir, &m).unwrap();
+        assert!(load_sections(dir, &m).is_some());
+        // truncate the section: checksum/length mismatch → unusable
+        std::fs::write(dir.join(&m.sections[0].file), &data[..4]).unwrap();
+        assert!(load_sections(dir, &m).is_none());
+        // delete it: missing → unusable
+        std::fs::remove_file(dir.join(&m.sections[0].file)).unwrap();
+        assert!(load_sections(dir, &m).is_none());
+    }
+
+    #[test]
+    fn cache_section_roundtrip() {
+        let entries = vec![(0u32, 8u64), (7, 4096), (3, 123456)];
+        let buf = encode_cache_section(&entries);
+        assert_eq!(decode_cache_section(&buf), Some(entries));
+        assert_eq!(decode_cache_section(&encode_cache_section(&[])), Some(vec![]));
+        assert!(decode_cache_section(&buf[..buf.len() - 1]).is_none());
+        assert!(decode_cache_section(&[]).is_none());
+        // a crafted header count must be rejected without overflow or a
+        // giant pre-allocation (checksums are not collision-resistant)
+        let mut evil = u64::MAX.to_le_bytes().to_vec();
+        assert!(decode_cache_section(&evil).is_none());
+        evil.extend_from_slice(&[0u8; 12]);
+        assert!(decode_cache_section(&evil).is_none(), "count/body mismatch");
+    }
+}

@@ -74,6 +74,54 @@
 //! `alloc.shard<N>.node_local_pages` by
 //! [`crate::coordinator::metrics::record_placement`].
 //!
+//! ## Incremental, shard-parallel sync (the persist path)
+//!
+//! `sync()` — and therefore `snapshot()` and `close()` — scales with the
+//! *delta* since the last sync, not with the store. The protocol, end to
+//! end:
+//!
+//! 1. **Dirty epochs (DRAM-only).** Every mutation of serialized state
+//!    raises a flag at its own serialization point: per-shard per-bin
+//!    flags in [`bin_dir::AllocShard`] (set by fast-path CAS claims
+//!    inside the shared-lock critical section, by the two exclusive
+//!    serialization points, and by frees), a chunk-directory mark
+//!    ([`chunk_dir::ChunkDirectory::is_dirty`]), a name-directory mark,
+//!    an object-cache mark, and a chunk-granular bitmap of application
+//!    data writes (all manager write APIs and the `SegmentAlloc` impls
+//!    mark it; raw-pointer writers call `MetallManager::mark_data_dirty`).
+//!    None of these flags is ever persisted.
+//!
+//! 2. **Segmented management format** ([`mgmt_io`]). Management data
+//!    lives in immutable per-section files — chunk directory, 8-bin bin
+//!    groups, names, and a transient cache section — indexed by a small
+//!    checksummed manifest committed via fsync'd atomic rename. A sync
+//!    re-serializes and rewrites *only dirty sections* (a flusher pool
+//!    writes them in parallel; each section's serialization takes only
+//!    that section's locks, one bin across all shards at a time) and
+//!    carries clean sections forward by reference. Recovery walks
+//!    manifests newest-first to the last complete one; legacy monolithic
+//!    `management.bin` stores are still read and converted on the next
+//!    sync. Per-section bytes at `shards = 1` are byte-identical to the
+//!    unsharded serialization, so the shard count remains DRAM-only.
+//!
+//! 3. **Narrowed data flush.** Shared-mode stores `msync` only the union
+//!    of dirty chunk ranges (parallel across ranges); private (bs-mmap)
+//!    stores already flush page-granular deltas via
+//!    [`crate::storage::bsmmap::BsMsync`].
+//!
+//! 4. **Cache-preserving sync.** The per-core object caches are *not*
+//!    drained: their parked-free slots (plus any remote-queue stragglers)
+//!    are serialized into the transient cache section, and recovery
+//!    returns them to the bitsets on open — so periodic snapshots cost no
+//!    allocation warmth and a crash between syncs leaks nothing.
+//!    [`MetallManager::flush_object_caches`] is the explicit full drain
+//!    (and `close()` always drains, so a closed image is canonical).
+//!
+//! A sync where nothing changed writes zero bytes and commits no
+//! manifest. Observability: [`manager::SyncStats`]
+//! ([`MetallManager::sync_stats`]), exported as `alloc.sync.*` by
+//! [`crate::coordinator::metrics::record_sync_stats`].
+//!
 //! Follow-on (ROADMAP): an interleave policy (`MPOL_INTERLEAVE`) for
 //! read-mostly large segments shared by threads on every node.
 
@@ -82,6 +130,7 @@ pub mod size_class;
 pub mod mlbitset;
 pub mod chunk_dir;
 pub mod bin_dir;
+pub mod mgmt_io;
 pub mod object_cache;
 pub mod name_dir;
 pub mod manager;
@@ -90,6 +139,6 @@ pub use api::{MetallHandle, SegmentAlloc};
 pub use bin_dir::{ShardMap, ShardStatsSnapshot};
 pub use manager::{
     ManagerOptions, MetallManager, Persist, PlacementReport, PlacementSource, ShardPlacement,
-    StatsSnapshot,
+    StatsSnapshot, SyncStats,
 };
 pub use object_cache::pin_thread_vcpu;

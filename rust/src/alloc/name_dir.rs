@@ -19,18 +19,18 @@ pub struct NamedEntry {
 #[derive(Clone, Debug, Default)]
 pub struct NameDirectory {
     map: HashMap<String, NamedEntry>,
+    /// DRAM-only dirty-epoch mark: set on successful insert/remove,
+    /// cleared when the names section is serialized. Never persisted.
+    dirty: bool,
 }
 
-/// Compile-time-ish fingerprint of a type: hash of its name, size and
-/// alignment. (Rust has no stable `TypeId` across builds; this is the
-/// pragmatic equivalent of Metall trusting the application's `T`.)
+/// Compile-time-ish fingerprint of a type: FNV-1a of its name
+/// ([`crate::util::fnv1a`]) folded with its size and alignment. (Rust
+/// has no stable `TypeId` across builds; this is the pragmatic
+/// equivalent of Metall trusting the application's `T`.)
 pub fn type_fingerprint<T: 'static>() -> u64 {
     let name = std::any::type_name::<T>();
-    let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a
-    for b in name.as_bytes() {
-        h ^= *b as u64;
-        h = h.wrapping_mul(0x100_0000_01b3);
-    }
+    let mut h = crate::util::fnv1a(name.as_bytes());
     h ^= std::mem::size_of::<T>() as u64;
     h = h.wrapping_mul(0x100_0000_01b3);
     h ^= std::mem::align_of::<T>() as u64;
@@ -49,7 +49,22 @@ impl NameDirectory {
             return false;
         }
         self.map.insert(name.to_string(), e);
+        self.dirty = true;
         true
+    }
+
+    /// Has the table changed since the last [`Self::take_dirty`]?
+    pub fn is_dirty(&self) -> bool {
+        self.dirty
+    }
+
+    pub fn mark_dirty(&mut self) {
+        self.dirty = true;
+    }
+
+    /// Read-and-clear the dirty mark (serialization point).
+    pub fn take_dirty(&mut self) -> bool {
+        std::mem::take(&mut self.dirty)
     }
 
     pub fn get(&self, name: &str) -> Option<NamedEntry> {
@@ -57,7 +72,11 @@ impl NameDirectory {
     }
 
     pub fn remove(&mut self, name: &str) -> Option<NamedEntry> {
-        self.map.remove(name)
+        let e = self.map.remove(name);
+        if e.is_some() {
+            self.dirty = true;
+        }
+        e
     }
 
     pub fn len(&self) -> usize {
@@ -106,6 +125,7 @@ impl NameDirectory {
                 return None; // duplicate key = corruption
             }
         }
+        dir.dirty = false; // matches the disk image it was read from
         Some((dir, pos))
     }
 }
@@ -145,6 +165,27 @@ mod tests {
         assert_eq!(de.len(), 3);
         assert_eq!(de.get("bb"), d.get("bb"));
         assert_eq!(de.get("— utf8 name ✓"), d.get("— utf8 name ✓"));
+    }
+
+    #[test]
+    fn dirty_mark_follows_mutations() {
+        let mut d = NameDirectory::new();
+        assert!(!d.is_dirty());
+        let e = NamedEntry { offset: 0, size: 8, type_fp: 1 };
+        assert!(d.insert("k", e));
+        assert!(d.take_dirty());
+        assert!(!d.insert("k", e), "duplicate insert");
+        assert!(!d.is_dirty(), "failed insert does not dirty");
+        assert!(d.remove("missing").is_none());
+        assert!(!d.is_dirty(), "failed remove does not dirty");
+        assert!(d.remove("k").is_some());
+        assert!(d.is_dirty());
+        // a deserialized table starts clean
+        d.insert("x", e);
+        let mut buf = Vec::new();
+        d.serialize_into(&mut buf);
+        let (de, _) = NameDirectory::deserialize_from(&buf).unwrap();
+        assert!(!de.is_dirty());
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! a core refill allocations that the same shard's bins would serve.
 
 use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 thread_local! {
@@ -70,6 +71,10 @@ struct CoreCache {
 /// The cache array: one slot per CPU core.
 pub struct ObjectCache {
     cores: Vec<Mutex<CoreCache>>,
+    /// DRAM-only dirty-epoch mark: set whenever the cached set changes
+    /// (pop, push, drain), cleared when the sync path serializes the
+    /// transient cache section. Lets a no-op sync skip the section.
+    dirty: AtomicBool,
 }
 
 impl ObjectCache {
@@ -82,7 +87,21 @@ impl ObjectCache {
         let cores = (0..ncores.max(1))
             .map(|_| Mutex::new(CoreCache { by_bin: vec![Vec::new(); num_bins] }))
             .collect();
-        Self { cores }
+        Self { cores, dirty: AtomicBool::new(false) }
+    }
+
+    /// Has the cached set changed since the last [`Self::take_dirty`]?
+    pub fn peek_dirty(&self) -> bool {
+        self.dirty.load(Ordering::Relaxed)
+    }
+
+    pub fn mark_dirty(&self) {
+        self.dirty.store(true, Ordering::Relaxed);
+    }
+
+    /// Read-and-clear the dirty mark (cache-section serialization point).
+    pub fn take_dirty(&self) -> bool {
+        self.dirty.swap(false, Ordering::Relaxed)
     }
 
     /// Cache slot for a virtual CPU (clamped to the slot count).
@@ -105,7 +124,11 @@ impl ObjectCache {
     /// virtual CPU once per allocation for both slot and shard).
     pub fn pop_at(&self, slot: usize, bin: u32) -> Option<u64> {
         let mut c = self.cores[slot].lock().unwrap();
-        c.by_bin[bin as usize].pop()
+        let got = c.by_bin[bin as usize].pop();
+        if got.is_some() {
+            self.dirty.store(true, Ordering::Relaxed);
+        }
+        got
     }
 
     /// Push a freed object. Returns the overflow spill (possibly empty):
@@ -127,6 +150,14 @@ impl ObjectCache {
         let mut c = self.cores[slot].lock().unwrap();
         let q = &mut c.by_bin[bin as usize];
         q.extend_from_slice(offsets);
+        if !offsets.is_empty() {
+            // mark AFTER the mutation (like pop/drain): a sync that
+            // consumed the flag just before this push either saw the new
+            // entries in its snapshot or the re-set flag forces the next
+            // sync to rewrite the cache section — never a clean flag over
+            // an unrecorded parked slot
+            self.dirty.store(true, Ordering::Relaxed);
+        }
         if q.len() > PER_BIN_CAP {
             // spill the older half (keep the hot top of the LIFO)
             let keep = PER_BIN_CAP / 2;
@@ -136,13 +167,31 @@ impl ObjectCache {
         Vec::new()
     }
 
-    /// Drain everything (manager close / serialize path).
+    /// Drain everything (manager close / explicit cache-flush path; the
+    /// incremental sync preserves the cache and snapshots it instead).
     pub fn drain_all(&self) -> Vec<(u32, u64)> {
         let mut out = Vec::new();
         for core in &self.cores {
             let mut c = core.lock().unwrap();
             for (bin, q) in c.by_bin.iter_mut().enumerate() {
                 out.extend(q.drain(..).map(|off| (bin as u32, off)));
+            }
+        }
+        if !out.is_empty() {
+            self.dirty.store(true, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Non-draining copy of every cached `(bin, offset)` — the sync
+    /// path's cache-section snapshot. Core order then LIFO order; the
+    /// byte image is deterministic for a deterministic trace.
+    pub fn snapshot_all(&self) -> Vec<(u32, u64)> {
+        let mut out = Vec::new();
+        for core in &self.cores {
+            let c = core.lock().unwrap();
+            for (bin, q) in c.by_bin.iter().enumerate() {
+                out.extend(q.iter().map(|&off| (bin as u32, off)));
             }
         }
         out
@@ -223,6 +272,27 @@ mod tests {
         pin_thread_vcpu(Some(3)); // wraps: 3 % 2 == slot 1
         assert_eq!(c.pop(0), Some(200));
         pin_thread_vcpu(None);
+    }
+
+    #[test]
+    fn snapshot_preserves_contents_and_dirty_tracks_changes() {
+        let c = ObjectCache::with_cores(2, 2);
+        assert!(!c.peek_dirty());
+        assert!(c.pop(0).is_none());
+        assert!(!c.peek_dirty(), "failed pop is not a change");
+        c.push(0, 100);
+        assert!(c.take_dirty());
+        assert!(!c.peek_dirty());
+        // snapshot does not drain or dirty
+        let snap = c.snapshot_all();
+        assert_eq!(snap, vec![(0, 100)]);
+        assert!(!c.peek_dirty());
+        assert_eq!(c.pop(0), Some(100), "snapshot left the object cached");
+        assert!(c.take_dirty(), "pop dirties");
+        c.push(1, 7);
+        let _ = c.take_dirty();
+        assert!(!c.drain_all().is_empty());
+        assert!(c.peek_dirty(), "drain dirties");
     }
 
     #[test]

@@ -9,7 +9,7 @@ use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::alloc::bin_dir::ShardStatsSnapshot;
-use crate::alloc::manager::{PlacementReport, StatsSnapshot};
+use crate::alloc::manager::{PlacementReport, StatsSnapshot, SyncStats};
 
 /// A named set of monotonically increasing counters plus accumulated
 /// phase durations. Cheap to share behind an `Arc`.
@@ -124,6 +124,24 @@ pub fn record_placement(m: &Metrics, r: &PlacementReport) {
     }
 }
 
+/// Fold one sync's [`SyncStats`] into `m` under `alloc.sync.*`: per-sync
+/// gauges are added as deltas (the struct's last-sync fields describe
+/// exactly one sync), so calling once after every `sync()` accumulates
+/// totals. `alloc.sync.count` / `alloc.sync.manifest_commits` count
+/// invocations and real commits (a no-op sync adds zero everywhere
+/// else).
+pub fn record_sync_stats(m: &Metrics, s: &SyncStats) {
+    m.add("alloc.sync.count", 1);
+    // the last sync committed a manifest iff it had dirty sections
+    m.add("alloc.sync.manifest_commits", u64::from(s.dirty_sections > 0));
+    m.add("alloc.sync.dirty_sections", s.dirty_sections);
+    m.add("alloc.sync.section_bytes", s.section_bytes_written);
+    m.add("alloc.sync.data_chunks", s.data_chunks_flushed);
+    m.add("alloc.sync.data_bytes", s.data_bytes_flushed);
+    m.add("alloc.sync.flush_micros", s.flush_micros);
+    m.add("alloc.sync.cache_slots_preserved", s.cache_slots_preserved);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,6 +234,38 @@ mod tests {
         assert_eq!(m.get("alloc.shard1.placement_pages"), 64);
         assert_eq!(m.get("alloc.placement.total_pages"), 240);
         assert_eq!(m.get("alloc.placement.large_pages"), 32);
+    }
+
+    #[test]
+    fn sync_bridge_accumulates_per_sync_deltas() {
+        let m = Metrics::new();
+        // a full first sync…
+        record_sync_stats(
+            &m,
+            &SyncStats {
+                syncs: 1,
+                manifest_commits: 1,
+                dirty_sections: 9,
+                total_sections: 9,
+                section_bytes_written: 4096,
+                data_chunks_flushed: 32,
+                data_bytes_flushed: 32 << 16,
+                flush_micros: 1500,
+                cache_slots_preserved: 12,
+            },
+        );
+        // …then a no-op sync adds only the invocation count
+        record_sync_stats(
+            &m,
+            &SyncStats { syncs: 2, manifest_commits: 1, total_sections: 9, ..Default::default() },
+        );
+        assert_eq!(m.get("alloc.sync.count"), 2);
+        assert_eq!(m.get("alloc.sync.manifest_commits"), 1);
+        assert_eq!(m.get("alloc.sync.dirty_sections"), 9);
+        assert_eq!(m.get("alloc.sync.section_bytes"), 4096);
+        assert_eq!(m.get("alloc.sync.data_chunks"), 32);
+        assert_eq!(m.get("alloc.sync.flush_micros"), 1500);
+        assert_eq!(m.get("alloc.sync.cache_slots_preserved"), 12);
     }
 
     #[test]

@@ -15,7 +15,6 @@
 //! one process do not interfere.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use crate::error::Result;
 use crate::storage::mmap::page_size;
@@ -95,61 +94,46 @@ impl BsMsync {
             }
         }
 
-        let bytes = AtomicU64::new(0);
-        let files_touched = AtomicUsize::new(0);
-        let next_file = AtomicUsize::new(0);
-        let nworkers = self.max_flushers.min(per_file.len()).max(1);
-
-        std::thread::scope(|s| -> Result<()> {
-            let mut handles = Vec::new();
-            for _ in 0..nworkers {
-                let per_file = &per_file;
-                let bytes = &bytes;
-                let files_touched = &files_touched;
-                let next_file = &next_file;
-                handles.push(s.spawn(move || -> Result<()> {
-                    loop {
-                        let fi = next_file.fetch_add(1, Ordering::Relaxed);
-                        if fi >= per_file.len() {
-                            return Ok(());
-                        }
-                        let file_runs = &per_file[fi];
-                        if file_runs.is_empty() {
-                            continue;
-                        }
-                        files_touched.fetch_add(1, Ordering::Relaxed);
-                        for r in file_runs {
-                            let off = r.start * ps;
-                            let len = r.len() * ps;
-                            let (file_idx, file_off) = seg.locate(off);
-                            debug_assert_eq!(file_idx, fi);
-                            // Safety: the run lies inside the mapped
-                            // extent; the application is quiescent during
-                            // an explicit msync (paper §5 semantics).
-                            let data = unsafe { seg.slice(off, len) };
-                            seg.pwrite_file(file_idx, file_off, data)?;
-                            bytes.fetch_add(len as u64, Ordering::Relaxed);
-                        }
-                    }
-                }));
-            }
-            for h in handles {
-                h.join().expect("flusher panicked")?;
-            }
-            Ok(())
-        })?;
+        // Per-file write-back on the shared flusher pool (one job per
+        // backing file, worker count capped at `max_flushers`).
+        let outcomes = crate::util::parallel_jobs_capped(
+            per_file.len(),
+            self.max_flushers,
+            |fi| -> Result<(u64, bool)> {
+                let file_runs = &per_file[fi];
+                if file_runs.is_empty() {
+                    return Ok((0, false));
+                }
+                let mut bytes = 0u64;
+                for r in file_runs {
+                    let off = r.start * ps;
+                    let len = r.len() * ps;
+                    let (file_idx, file_off) = seg.locate(off);
+                    debug_assert_eq!(file_idx, fi);
+                    // Safety: the run lies inside the mapped extent; the
+                    // application is quiescent during an explicit msync
+                    // (paper §5 semantics).
+                    let data = unsafe { seg.slice(off, len) };
+                    seg.pwrite_file(file_idx, file_off, data)?;
+                    bytes += len as u64;
+                }
+                Ok((bytes, true))
+            },
+        );
+        let mut bytes_written = 0u64;
+        let mut files_touched = 0usize;
+        for outcome in outcomes {
+            let (b, touched) = outcome?;
+            bytes_written += b;
+            files_touched += usize::from(touched);
+        }
 
         // Re-map flushed runs clean (content is now identical in the file).
         for r in &runs {
             seg.remap_range(r.start * ps, r.len() * ps)?;
         }
 
-        Ok(FlushStats {
-            dirty_pages,
-            runs: runs.len(),
-            bytes_written: bytes.into_inner(),
-            files_touched: files_touched.into_inner(),
-        })
+        Ok(FlushStats { dirty_pages, runs: runs.len(), bytes_written, files_touched })
     }
 }
 

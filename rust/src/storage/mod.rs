@@ -14,6 +14,40 @@
 //! - [`netfs`] — simulated network file systems (Lustre-like / VAST-like)
 //!   and device profiles used by the Fig 5/6 reproduction; see DESIGN.md
 //!   §3 (substitutions).
+//!
+//! ## How the sync protocol uses this layer
+//!
+//! [`crate::alloc::MetallManager::sync`] persists in two phases, both of
+//! which resolve to primitives here:
+//!
+//! **Application data, two flush paths.** In the default *shared* mode
+//! (`MAP_SHARED`) the kernel owns write-back and sync's job is to force
+//! it: the allocator tracks which chunks were written since the last
+//! sync and calls [`segment::SegmentStorage::sync_ranges`], which
+//! `msync(MS_SYNC)`s only the union of dirty chunk ranges — in parallel
+//! across ranges — instead of the whole mapped extent
+//! ([`segment::SegmentStorage::sync`] remains the full-extent fallback).
+//! In *private* (bs-mmap, §5) mode the kernel never writes back at all;
+//! [`bsmmap::BsMsync`] finds dirty pages via [`pagemap`], coalesces them
+//! into runs, `pwrite`s the runs to the backing files with a flusher
+//! pool, and re-maps them clean — already a page-granular delta flush, so
+//! the chunk-level narrowing does not apply there.
+//!
+//! **Management data** is written *above* this layer by
+//! [`crate::alloc::mgmt_io`]: immutable per-section files plus a
+//! checksummed manifest committed by fsync'd atomic rename (tmp file
+//! fsync → rename → directory fsync — the directory fsync is what makes
+//! the rename itself durable). Recovery reads the newest manifest whose
+//! sections all verify; a torn sync therefore falls back to the previous
+//! complete image, and the legacy monolithic `management.bin` is still
+//! readable. The `CLEAN` marker and `meta.bin` go through the same
+//! fsync-file-then-directory discipline.
+//!
+//! Crash model: `msync`/`pwrite`+`fsync` bound *data* loss to writes
+//! since the last sync; the manifest commit bounds *management* state to
+//! the last complete sync; and the transient cache section closes the
+//! gap between them (free slots parked in DRAM caches at sync time are
+//! recorded, and recovery returns them, so no slot leaks across a kill).
 
 pub mod mmap;
 pub mod segment;

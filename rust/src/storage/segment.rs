@@ -11,6 +11,7 @@
 //! detects the necessary VM size when opening an existing datastore."
 
 use std::fs::{self, File, OpenOptions};
+use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -166,6 +167,12 @@ impl SegmentStorage {
         self.mapped_len.load(Ordering::Acquire)
     }
 
+    /// Total VM reservation (the hard ceiling `extend_to` enforces; the
+    /// allocator sizes its chunk-granular dirty map from this).
+    pub fn vm_len(&self) -> usize {
+        self.vm.len()
+    }
+
     pub fn num_files(&self) -> usize {
         self.files.lock().unwrap().len()
     }
@@ -258,6 +265,43 @@ impl SegmentStorage {
             Ok::<(), Error>(())
         })?;
         Ok(())
+    }
+
+    /// Flush only the given byte ranges (`msync(MS_SYNC)` per range),
+    /// optionally with a flusher pool — the narrowed data flush of the
+    /// incremental sync path: when the allocator knows which chunks were
+    /// written since the last sync, only their union goes to the kernel
+    /// instead of the whole extent. Ranges must be page-aligned (chunk
+    /// ranges are: chunk size ≥ 4 KiB and a power of two) and are clamped
+    /// to the mapped extent; empty and out-of-range leftovers are
+    /// skipped. No-op for private/read-only mappings, like [`Self::sync`].
+    pub fn sync_ranges(&self, ranges: &[Range<usize>], parallel: bool) -> Result<()> {
+        if self.opts.share != Share::Shared || self.opts.prot != Prot::ReadWrite {
+            return Ok(());
+        }
+        let mapped = self.mapped_len();
+        let todo: Vec<Range<usize>> = ranges
+            .iter()
+            .map(|r| r.start.min(mapped)..r.end.min(mapped))
+            .filter(|r| !r.is_empty())
+            .collect();
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let base = self.base() as usize;
+        if !parallel {
+            for r in &todo {
+                mmap::msync((base + r.start) as *mut u8, r.len())?;
+            }
+            return Ok(());
+        }
+        // shared flusher pool; a single range runs inline
+        crate::util::parallel_jobs(todo.len(), |i| {
+            let r = &todo[i];
+            mmap::msync((base + r.start) as *mut u8, r.len())
+        })
+        .into_iter()
+        .collect()
     }
 
     /// Free a range of the segment: drop DRAM pages and (configurably)
@@ -444,6 +488,29 @@ mod tests {
         let opts = opts_small().with_vm_reserve(2 << 20);
         let seg = SegmentStorage::create(d.join("s"), opts).unwrap();
         assert!(seg.extend_to(4 << 20).is_err());
+    }
+
+    #[test]
+    fn sync_ranges_flushes_only_named_ranges() {
+        let d = TempDir::new("segranges");
+        let dir = d.join("s");
+        let seg = SegmentStorage::create(&dir, opts_small()).unwrap();
+        seg.extend_to(2 << 20).unwrap();
+        unsafe {
+            seg.slice_mut(0, 4).copy_from_slice(b"aaaa");
+            seg.slice_mut(1 << 20, 4).copy_from_slice(b"bbbb");
+        }
+        // ranges spanning both files, sequential and parallel paths
+        seg.sync_ranges(&[0..4096], false).unwrap();
+        seg.sync_ranges(&[0..4096, (1 << 20)..(1 << 20) + 4096], true).unwrap();
+        // clamped / empty / out-of-range inputs are tolerated
+        seg.sync_ranges(&[], true).unwrap();
+        seg.sync_ranges(&[(3 << 20)..(4 << 20)], true).unwrap();
+        seg.sync_ranges(&[(2 << 20) - 4096..(3 << 20)], false).unwrap();
+        unsafe {
+            assert_eq!(seg.slice(0, 4), b"aaaa");
+            assert_eq!(seg.slice(1 << 20, 4), b"bbbb");
+        }
     }
 
     #[test]

@@ -1,5 +1,9 @@
 //! Small shared utilities: deterministic RNG, bit math, human-readable
-//! formatting, and a minimal JSON writer for metrics output.
+//! formatting, a minimal JSON writer for metrics output, and the shared
+//! flusher-pool primitive ([`parallel_jobs`]).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 pub mod rng;
 pub mod bits;
@@ -18,6 +22,75 @@ pub fn align_up(v: usize, align: usize) -> usize {
 #[inline]
 pub fn div_ceil(a: usize, b: usize) -> usize {
     (a + b - 1) / b
+}
+
+/// FNV-1a over `bytes`: the crate's shared non-cryptographic hash (type
+/// fingerprints, management-section checksums). Detects corruption and
+/// torn writes; not collision-resistant against an adversary.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Run `n` independent jobs on a scoped worker pool and return their
+/// results in job order — the atomic-cursor flusher pattern (one worker
+/// per available core, capped at `n`; job `i` is claimed with a
+/// `fetch_add`, so no worker idles while work remains) shared by the
+/// sync paths: the management section writer, the range-narrowed msync,
+/// and the bs-mmap per-file write-back ([`parallel_jobs_capped`] when a
+/// caller bounds the pool). `n <= 1` runs inline on the caller — no
+/// thread spawn on the single-job latency path.
+pub fn parallel_jobs<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    parallel_jobs_capped(n, usize::MAX, f)
+}
+
+/// [`parallel_jobs`] with an explicit upper bound on the worker count
+/// (e.g. `BsMsync::max_flushers`).
+pub fn parallel_jobs_capped<T, F>(n: usize, max_workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1)
+        .min(n)
+        .min(max_workers.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 || workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            let results = &results;
+            let next = &next;
+            let f = &f;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    return;
+                }
+                *results[i].lock().unwrap() = Some(f(i));
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|c| c.into_inner().unwrap().expect("every job ran"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -40,5 +113,23 @@ mod tests {
         assert_eq!(div_ceil(1, 4), 1);
         assert_eq!(div_ceil(4, 4), 1);
         assert_eq!(div_ceil(5, 4), 2);
+    }
+
+    #[test]
+    fn parallel_jobs_ordered_complete_and_inline_for_one() {
+        assert_eq!(parallel_jobs(0, |i| i), Vec::<usize>::new());
+        // n == 1 runs on the calling thread
+        let caller = std::thread::current().id();
+        let ran_on = parallel_jobs(1, |_| std::thread::current().id());
+        assert_eq!(ran_on, vec![caller]);
+        // results come back in job order whatever the claim order was
+        let out = parallel_jobs(100, |i| i * 3);
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+        // mixed Ok/Err results pass through untouched
+        let r = parallel_jobs(4, |i| if i % 2 == 0 { Ok(i) } else { Err(i) });
+        assert_eq!(r, vec![Ok(0), Err(1), Ok(2), Err(3)]);
+        // a worker cap of 1 degenerates to an in-order sequential run
+        let seq = parallel_jobs_capped(8, 1, |i| i);
+        assert_eq!(seq, (0..8).collect::<Vec<_>>());
     }
 }

@@ -173,7 +173,10 @@ fn no_space_leak_after_full_free() {
     for off in offs {
         m.deallocate(off).unwrap();
     }
-    m.sync().unwrap(); // drains object caches to the bitsets
+    // sync() preserves cache warmth; the explicit flush drains the
+    // object caches to the bitsets so emptied chunks are released
+    m.flush_object_caches().unwrap();
+    m.sync().unwrap();
     assert_eq!(m.used_segment_bytes(), 0, "all chunks must return to Free");
     m.close().unwrap();
 }
@@ -217,6 +220,14 @@ fn property_trace_against_oracle() {
     };
 
     for step in 0..STEPS {
+        // periodic incremental syncs at arbitrary trace points: the
+        // cache-preserving sync must never disturb allocator behaviour
+        // (no drain → the LIFO warmth and therefore the trace's offset
+        // sequence are unchanged), and every later assertion doubles as
+        // a mid-trace-consistency check
+        if step % 1711 == 1000 {
+            m.sync().unwrap();
+        }
         match rng.gen_range(100) {
             // allocate
             0..=49 => {
@@ -285,6 +296,7 @@ fn property_trace_against_oracle() {
     for &off in live.keys() {
         m.deallocate(off).unwrap();
     }
+    m.flush_object_caches().unwrap();
     m.sync().unwrap();
     assert_eq!(m.used_segment_bytes(), 0, "full free returns every chunk");
     m.close().unwrap();
@@ -411,6 +423,7 @@ fn cross_shard_property_trace_and_reshard_reopen() {
     for &off in live.keys() {
         m.deallocate(off).unwrap();
     }
+    m.flush_object_caches().unwrap();
     m.sync().unwrap();
     assert_eq!(m.used_segment_bytes(), 0, "cross-shard churn leaked chunks");
     m.close().unwrap();
@@ -492,6 +505,7 @@ fn placement_report_total_stable_and_all_node0_on_single_node() {
     for off in live {
         m.deallocate(off).unwrap();
     }
+    m.flush_object_caches().unwrap();
     m.sync().unwrap();
     let drained = m.placement_report();
     assert_eq!(drained.accounted_pages(), drained.total_pages);

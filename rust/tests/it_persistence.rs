@@ -181,24 +181,41 @@ fn destroy_and_name_directory_persistence() {
     m.close().unwrap();
 }
 
-/// Corrupted management data is detected on open.
+/// Corrupted management data is detected on open: with a single manifest
+/// (one close, no fallback epoch) a bit-flip in either a section file or
+/// the manifest itself must refuse the store — the checksums catch it.
 #[test]
 fn corrupt_management_detected() {
-    let d = TempDir::new("corrupt");
-    let store = d.join("s");
-    {
-        let m = MetallManager::create_with(&store, opts()).unwrap();
-        m.construct::<u64>("x", 5).unwrap();
-        m.close().unwrap();
+    use metall_rs::alloc::mgmt_io;
+
+    let flip_mid = |p: &std::path::Path| {
+        let mut bytes = std::fs::read(p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(p, &bytes).unwrap();
+    };
+    for target in ["section", "manifest"] {
+        let d = TempDir::new(&format!("corrupt-{target}"));
+        let store = d.join("s");
+        {
+            let m = MetallManager::create_with(&store, opts()).unwrap();
+            m.construct::<u64>("x", 5).unwrap();
+            m.close().unwrap();
+        }
+        let epochs = mgmt_io::list_manifest_epochs(&store).unwrap();
+        assert_eq!(epochs.len(), 1, "one close → one manifest, no fallback");
+        let man = mgmt_io::read_manifest(&store, epochs[0]).unwrap();
+        match target {
+            "section" => {
+                // flip a byte in the chunk-directory section
+                let rec = man.section(mgmt_io::SectionId::Chunks).unwrap();
+                flip_mid(&store.join(&rec.file));
+            }
+            _ => flip_mid(&store.join(mgmt_io::manifest_file_name(epochs[0]))),
+        }
+        assert!(
+            MetallManager::open(&store).is_err(),
+            "bit-flipped {target} must not open cleanly"
+        );
     }
-    // flip a byte in management.bin
-    let p = store.join("management.bin");
-    let mut bytes = std::fs::read(&p).unwrap();
-    let mid = bytes.len() / 2;
-    bytes[mid] ^= 0xFF;
-    std::fs::write(&p, &bytes).unwrap();
-    assert!(
-        MetallManager::open(&store).is_err(),
-        "bit-flipped management data must not open cleanly"
-    );
 }

@@ -113,7 +113,7 @@ fn eight_threads_alloc_churn_plus_container_writers() {
     assert!(h.doctor().unwrap().is_empty(), "healthy after the stampede");
     let st = h.stats();
     assert!(st.fast_claims > 0, "the lock-free claim path was exercised");
-    h.sync().unwrap(); // drains the object caches and remote-free queues
+    h.sync().unwrap(); // drains the remote-free queues (caches preserved)
     let ss = h.shard_stats();
     assert_eq!(ss.len(), 4);
     assert_eq!(
@@ -182,7 +182,9 @@ fn cross_thread_free_unwinds_everything() {
     for off in all {
         h.deallocate(off).unwrap();
     }
-    h.sync().unwrap(); // drain per-core caches to the bitsets
+    // explicit drain: sync() alone preserves cache warmth by design
+    h.flush_object_caches().unwrap();
+    h.sync().unwrap();
     assert_eq!(h.used_segment_bytes(), 0, "every chunk returned to Free");
     h.try_close().unwrap();
 }
