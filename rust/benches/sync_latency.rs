@@ -1,5 +1,7 @@
 //! Sync-latency benchmark for the incremental, shard-parallel persist
-//! path: a (store size × dirty fraction) matrix over one `MetallManager`.
+//! path: a (store size × dirty fraction) matrix over one `MetallManager`,
+//! plus an **inline-vs-background** ingest-stall comparison for the
+//! watermark-driven async flusher.
 //!
 //! Each size cell builds a store of ≥ `size` MiB of live small objects,
 //! times the **first full sync** (every management section + the whole
@@ -10,15 +12,24 @@
 //! ≥ 64 MiB store, the incremental sync completes ≥ 5× faster than the
 //! full one, and the no-op sync writes zero section bytes.
 //!
+//! The background mode then replays the 1 %-dirty shape two ways on the
+//! first size: **inline** — the ingest thread dirties 1 % of the chunks
+//! and calls `sync()` itself each round, eating the full flush latency —
+//! and **background** — the same writes with a dirty-byte watermark
+//! driving the flusher thread, where the ingest thread's only stall is
+//! backpressure. Acceptance bar: background ingest-thread stall ≤ 25 %
+//! of the inline stall at the 64 MiB / 1 %-dirty shape.
+//!
 //! Results go to the human table, to `bench_results/sync_latency.jsonl`,
 //! and to `BENCH_sync.json` at the repo root — written twice, a
 //! `"status": "started"` stub up front and the full document at the end,
 //! so every run leaves a machine-readable trace even if interrupted.
 //!
 //! `cargo bench --bench sync_latency -- [--sizes-mb 64,256]
-//!  [--permille 10,0] [--repeats 3]`
+//!  [--permille 10,0] [--repeats 3] [--bg-rounds 12]`
 
 use std::collections::HashMap;
+use std::path::Path;
 
 use metall_rs::alloc::{ManagerOptions, MetallManager};
 use metall_rs::bench_util::{record, BenchArgs, Table};
@@ -41,11 +52,43 @@ struct Cell {
     cache_slots: u64,
 }
 
+/// Build a `mb`-MiB store of fully written 64 KiB objects; returns the
+/// manager, one representative offset per chunk (sorted), and the chunk
+/// count.
+fn build_store(
+    dir: &Path,
+    mb: usize,
+    configure: impl FnOnce(&mut ManagerOptions),
+) -> anyhow::Result<(MetallManager, Vec<u64>, usize)> {
+    let mut opts = ManagerOptions {
+        chunk_size: CHUNK,
+        file_size: 8 << 20,
+        vm_reserve: (4usize << 30).max(4 * mb << 20),
+        ..Default::default()
+    };
+    configure(&mut opts);
+    let m = MetallManager::create_with(dir, opts)?;
+    // 64 KiB objects (4 per chunk), fully written so the first sync
+    // flushes everything
+    let obj = CHUNK / 4;
+    let mut rep_of_chunk: HashMap<usize, u64> = HashMap::new();
+    while m.used_segment_bytes() < mb << 20 {
+        let off = m.allocate(obj)?;
+        unsafe { m.bytes_mut(off, obj).fill(0x5A) };
+        rep_of_chunk.entry(off as usize / CHUNK).or_insert(off);
+    }
+    let nchunks = m.used_segment_bytes() / CHUNK;
+    let mut reps: Vec<u64> = rep_of_chunk.values().copied().collect();
+    reps.sort_unstable();
+    Ok((m, reps, nchunks))
+}
+
 fn main() -> anyhow::Result<()> {
     let args = BenchArgs::parse();
     let sizes_mb = args.get_usize_list("sizes-mb", &[64]);
     let permille = args.get_usize_list("permille", &[10, 0]);
     let repeats = args.get_usize("repeats", 3).max(1);
+    let bg_rounds = args.get_usize("bg-rounds", 12).max(1);
     let work = TempDir::new("sync-latency");
 
     // the trajectory file must exist whatever happens after this point
@@ -67,25 +110,7 @@ fn main() -> anyhow::Result<()> {
 
     for &mb in &sizes_mb {
         let dir = work.join(&format!("s{mb}"));
-        let opts = ManagerOptions {
-            chunk_size: CHUNK,
-            file_size: 8 << 20,
-            vm_reserve: (4usize << 30).max(4 * mb << 20),
-            ..Default::default()
-        };
-        let m = MetallManager::create_with(&dir, opts)?;
-        // Populate: 64 KiB objects (4 per chunk) until the store holds
-        // `mb` MiB, fully written so the first sync flushes everything.
-        let obj = CHUNK / 4;
-        let mut rep_of_chunk: HashMap<usize, u64> = HashMap::new();
-        while m.used_segment_bytes() < mb << 20 {
-            let off = m.allocate(obj)?;
-            unsafe { m.bytes_mut(off, obj).fill(0x5A) };
-            rep_of_chunk.entry(off as usize / CHUNK).or_insert(off);
-        }
-        let nchunks = m.used_segment_bytes() / CHUNK;
-        let mut reps: Vec<u64> = rep_of_chunk.values().copied().collect();
-        reps.sort_unstable();
+        let (m, reps, nchunks) = build_store(&dir, mb, |_| {})?;
 
         // first full sync: every section + the whole data extent
         let t0 = std::time::Instant::now();
@@ -154,6 +179,82 @@ fn main() -> anyhow::Result<()> {
         let _ = std::fs::remove_dir_all(&dir);
     }
 
+    // ---- ingest-thread stall: inline sync() vs background flusher ----
+    // The fig5 shape at the first size: each round dirties ~1 % of the
+    // chunks. Inline pays the full sync() latency on the ingest thread
+    // every round; background only ever stalls at the backpressure
+    // ceiling while the watermark-driven flusher persists concurrently.
+    let mb = sizes_mb.first().copied().unwrap_or(64);
+    let inline_stall = {
+        let dir = work.join("bg-inline");
+        let (m, reps, nchunks) = build_store(&dir, mb, |_| {})?;
+        let dirty_per_round = (nchunks / 100).max(1);
+        m.sync()?; // first full sync off the measured path
+        let mut stall = 0.0f64;
+        for round in 0..bg_rounds {
+            for i in 0..dirty_per_round {
+                let off = reps[(round * dirty_per_round + i) % reps.len()];
+                m.write::<u64>(off, round as u64);
+            }
+            let t0 = std::time::Instant::now();
+            m.sync()?;
+            stall += t0.elapsed().as_secs_f64();
+        }
+        m.close().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let _ = std::fs::remove_dir_all(&dir);
+        stall
+    };
+    let (bg_stall, bg_flushes, bg_watermark_hits) = {
+        let dir = work.join("bg-async");
+        let (m, reps, nchunks) = build_store(&dir, mb, |o| {
+            // one dirty chunk crosses the watermark: the flusher chases
+            // the ingest thread round by round
+            o.sync_watermark_bytes = CHUNK;
+        })?;
+        let dirty_per_round = (nchunks / 100).max(1);
+        m.sync()?; // first full sync off the measured path
+        let stall_before = m.bg_sync_stats().writer_stall_micros;
+        for round in 0..bg_rounds {
+            for i in 0..dirty_per_round {
+                let off = reps[(round * dirty_per_round + i) % reps.len()];
+                m.write::<u64>(off, round as u64);
+            }
+            // no sync() call: the watermark drives the flusher
+        }
+        let bgstats = m.bg_sync_stats();
+        let out = (
+            (bgstats.writer_stall_micros - stall_before) as f64 / 1e6,
+            bgstats.flushes,
+            bgstats.watermark_triggers,
+        );
+        m.close().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let _ = std::fs::remove_dir_all(&dir);
+        out
+    };
+    let bg_stall_ratio = bg_stall / inline_stall.max(1e-9);
+    cells.push(Cell {
+        size_mb: mb,
+        phase: "inline_1pct_stall".into(),
+        secs: inline_stall,
+        dirty_sections: 0,
+        total_sections: 0,
+        section_bytes: 0,
+        data_chunks: 0,
+        data_bytes: 0,
+        cache_slots: 0,
+    });
+    cells.push(Cell {
+        size_mb: mb,
+        phase: "background_1pct_stall".into(),
+        secs: bg_stall,
+        dirty_sections: 0,
+        total_sections: 0,
+        section_bytes: 0,
+        data_chunks: 0,
+        data_bytes: 0,
+        cache_slots: 0,
+    });
+
     for c in &cells {
         let vs_full = cells
             .iter()
@@ -197,6 +298,14 @@ fn main() -> anyhow::Result<()> {
     if let (Some(sb), Some(dc)) = (noop_section_bytes, noop_data_chunks) {
         println!("no-op sync: {sb} section bytes, {dc} data chunks (bar: 0 and 0)");
     }
+    println!(
+        "background ingest stall: {} vs inline {} over {bg_rounds} rounds \
+         = {:.1}% of inline (bar ≤ 25%); {bg_flushes} background flushes, \
+         {bg_watermark_hits} watermark hits",
+        human::duration(bg_stall),
+        human::duration(inline_stall),
+        bg_stall_ratio * 100.0
+    );
 
     let mut rows = String::from("[");
     for (i, c) in cells.iter().enumerate() {
@@ -223,10 +332,17 @@ fn main() -> anyhow::Result<()> {
         .str("status", "complete")
         .str(
             "workload",
-            "64KiB objects, full-store first sync vs permille-dirty incremental syncs",
+            "64KiB objects, full-store first sync vs permille-dirty incremental syncs, \
+             plus inline-vs-background ingest-thread stall at the 1%-dirty shape",
         )
         .int("chunk_size", CHUNK as i64)
         .int("repeats", repeats as i64)
+        .int("bg_rounds", bg_rounds as i64)
+        .num("inline_stall_secs", inline_stall)
+        .num("background_stall_secs", bg_stall)
+        .num("background_stall_ratio", bg_stall_ratio)
+        .int("background_flushes", bg_flushes as i64)
+        .int("background_watermark_hits", bg_watermark_hits as i64)
         .raw("results", &rows);
     if let Some(sp) = speedup_1pct {
         doc = doc.num("incremental_speedup_1pct", sp);

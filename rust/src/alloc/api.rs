@@ -14,7 +14,7 @@ use std::ops::Deref;
 use std::sync::Arc;
 
 use crate::alloc::bin_dir::ShardStatsSnapshot;
-use crate::alloc::manager::{MetallManager, Persist, StatsSnapshot};
+use crate::alloc::manager::{ManagerCore, MetallManager, Persist, StatsSnapshot};
 use crate::error::{Error, Result};
 
 /// Offset-based allocation over one contiguous mapped segment.
@@ -115,12 +115,12 @@ impl SegmentAlloc for crate::alloc::MetallManager {
     // instead of msync'ing the whole mapped extent.
 
     fn write_pod<T: Persist>(&self, offset: u64, value: T) {
-        crate::alloc::MetallManager::write(self, offset, value)
+        ManagerCore::write(self, offset, value)
     }
 
     #[allow(clippy::mut_from_ref)]
     unsafe fn bytes_at_mut(&self, offset: u64, len: usize) -> &mut [u8] {
-        crate::alloc::MetallManager::bytes_mut(self, offset, len)
+        ManagerCore::bytes_mut(self, offset, len)
     }
 
     fn write_bytes(&self, offset: u64, data: &[u8]) {
@@ -285,11 +285,11 @@ trait MetallManagerExt {
 
 impl MetallManagerExt for crate::alloc::MetallManager {
     fn allocate(&self, size: usize) -> Result<u64> {
-        crate::alloc::MetallManager::allocate(self, size)
+        ManagerCore::allocate(self, size)
     }
 
     fn deallocate(&self, offset: u64) -> Result<()> {
-        crate::alloc::MetallManager::deallocate(self, offset)
+        ManagerCore::deallocate(self, offset)
     }
 }
 

@@ -1,0 +1,880 @@
+//! Background sync engine: a watermark-driven asynchronous flusher with
+//! epoch tickets, layered on the incremental (segmented-manifest) persist
+//! path.
+//!
+//! The PR-4 sync made persistence O(delta); this module takes it **off
+//! the mutation path** entirely. A [`SyncEngine`] owned by every
+//! read-write [`super::manager::MetallManager`] runs one dedicated
+//! flusher thread (which in turn drives the existing flusher *pool* for
+//! section writes and the range-narrowed data msync). Three triggers
+//! start a flush:
+//!
+//! 1. **Dirty-byte high watermark**
+//!    ([`super::manager::ManagerOptions::sync_watermark_bytes`]): the
+//!    chunk-granular `DirtyChunkSet` keeps a running count of un-synced
+//!    data bytes; crossing the watermark kicks the flusher with one
+//!    atomic swap + condvar signal — the writer never waits.
+//! 2. **Interval timer**
+//!    ([`super::manager::ManagerOptions::sync_interval_ms`]): the
+//!    flusher's idle wait times out and flushes if anything — data *or*
+//!    management sections — is dirty.
+//! 3. **Explicit request**: `sync_async()` returns a [`SyncTicket`];
+//!    `SyncTicket::wait()` blocks until the flush *epoch* covering the
+//!    request has its manifest durably committed (fsync'd atomic
+//!    rename). `sync()` is exactly `sync_async()` + `wait()` — the
+//!    durability contract of the old inline sync is unchanged.
+//!
+//! ## Epochs and the cheap quiesce point
+//!
+//! The engine counts *flush generations*: every explicit request bumps
+//! `requested`; each flush captures `covered = requested` before it
+//! starts and, on success, advances `completed` to it — one flush
+//! coalesces every request made before it began, because those callers'
+//! mutations (and their dirty-epoch marks) strictly precede the flush's
+//! section serialization. The quiesce point is a **consistent cut**
+//! (`ManagerCore::serialize_sections_cut`): the flusher briefly holds
+//! every management lock at once — in the allocator's own bin → chunks
+//! order, so no serialization point can deadlock against it — while it
+//! swaps out the dirty marks and serializes the dirty sections *to
+//! memory*; a committed epoch is therefore the exact management state
+//! of a single instant even with mutators running (per-section lock
+//! scopes would let a fresh chunk slip between two sections and commit
+//! a bin that references a chunk the chunk section calls Free). All
+//! file I/O — section writes, data msync, the manifest commit — happens
+//! after the cut is released, which is where the time goes; per-core
+//! cache hits and data writes are never paused at all.
+//!
+//! ## Backpressure
+//!
+//! Unbounded dirtying with a slow disk would let DRAM run arbitrarily
+//! far ahead of the store. Above a hard ceiling
+//! ([`super::manager::ManagerOptions::sync_ceiling_bytes`], default 4×
+//! the watermark) the *writer* that crosses it stalls — kicking the
+//! flusher and waiting on the flush-done condvar until the dirty
+//! estimate drops — and every stall is counted
+//! ([`BgSyncStats::writer_stalls`], `writer_stall_micros`). Stalls never
+//! happen while the writer holds allocator locks (only the lock-free
+//! `mark_data_dirty` path stalls), so the flusher can always make
+//! progress.
+//!
+//! ## Panic containment and shutdown
+//!
+//! The flush body runs under `catch_unwind`: a panicking flusher marks
+//! the engine **dead**, wakes every waiter with an error, and every
+//! subsequent `sync()`/`sync_async()`/`close()` returns
+//! [`Error::BgSync`] — never a silent no-op. A dead engine also refuses
+//! to write the `CLEAN` marker, so recovery falls back to the last
+//! complete manifest instead of trusting a store the flusher abandoned.
+//! `close()`/`Drop` drain the engine (a final flush resolves any
+//! outstanding tickets), join the thread, and only then run the inline
+//! close sync.
+//!
+//! I/O *errors* (as opposed to panics) are not fatal: the failing flush
+//! re-marks everything it cleared (`sync_now`'s existing contract), the
+//! error span is recorded so the tickets it covered see it, and the next
+//! flush retries.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::alloc::manager::ManagerCore;
+use crate::error::{Error, Result};
+
+/// Error spans kept for ticket waiters; beyond this many *failed*
+/// flushes, the oldest spans are evicted (a ticket can only outlive that
+/// many flushes if nobody ever waited on it).
+const MAX_ERROR_SPANS: usize = 32;
+
+/// How long a stalled writer sleeps between dirty-estimate re-checks.
+const STALL_RECHECK: Duration = Duration::from_millis(10);
+
+/// Observability snapshot of the background engine
+/// ([`super::manager::MetallManager::bg_sync_stats`]), exported as
+/// `alloc.bgsync.*` by
+/// [`crate::coordinator::metrics::record_bg_sync_stats`]. All counters
+/// are cumulative over the engine's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BgSyncStats {
+    /// Flushes the background thread ran (any trigger).
+    pub flushes: u64,
+    /// … of which returned an error (the dirty state was re-marked and
+    /// the next flush retries; covered tickets see the failure).
+    pub flush_failures: u64,
+    /// Flushes triggered by the dirty-byte watermark.
+    pub watermark_triggers: u64,
+    /// Flushes triggered by the backpressure ceiling alone (ceiling-only
+    /// configurations; when a watermark is also crossed the flush counts
+    /// as a watermark trigger).
+    pub ceiling_triggers: u64,
+    /// Flushes triggered by the interval timer.
+    pub interval_triggers: u64,
+    /// Explicit `sync_async()` / `sync()` requests.
+    pub explicit_requests: u64,
+    /// Management-section bytes written by background flushes.
+    pub section_bytes_flushed: u64,
+    /// Application-data bytes flushed by background flushes.
+    pub data_bytes_flushed: u64,
+    /// Times a writer stalled at the backpressure ceiling.
+    pub writer_stalls: u64,
+    /// Total microseconds writers spent stalled.
+    pub writer_stall_micros: u64,
+    /// Configured watermark (bytes; 0 = trigger disabled).
+    pub watermark_bytes: u64,
+    /// Configured backpressure ceiling (bytes; 0 = disabled).
+    pub ceiling_bytes: u64,
+    /// Is the flusher thread currently running?
+    pub engine_running: bool,
+    /// Did the flusher die (panic)? Every sync call errors from then on.
+    pub engine_dead: bool,
+}
+
+/// A claim on one background flush epoch, returned by
+/// [`super::manager::MetallManager::sync_async`]. [`Self::wait`] blocks
+/// until the manifest of the flush covering this request is durably
+/// committed and returns that flush's result. Dropping a ticket without
+/// waiting is allowed (fire-and-forget); the flush still runs.
+#[must_use = "a dropped ticket gives no durability signal; call wait()"]
+pub struct SyncTicket<'e> {
+    engine: Option<&'e SyncEngine>,
+    gen: u64,
+}
+
+impl<'e> SyncTicket<'e> {
+    /// A pre-completed ticket (read-only stores: nothing to flush).
+    pub(crate) fn completed() -> Self {
+        Self { engine: None, gen: 0 }
+    }
+
+    pub(crate) fn pending(engine: &'e SyncEngine, gen: u64) -> Self {
+        Self { engine: Some(engine), gen }
+    }
+
+    /// The flush generation this ticket waits for (0 for pre-completed
+    /// tickets). Monotonically increasing per manager.
+    pub fn generation(&self) -> u64 {
+        self.gen
+    }
+
+    /// Has the covering flush already committed **successfully**
+    /// (non-blocking probe)? A covering flush that *failed* reports
+    /// `false` — nothing was durably committed and the dirty state was
+    /// restored for retry; call [`Self::wait`] to obtain the error.
+    pub fn is_complete(&self) -> bool {
+        match self.engine {
+            None => true,
+            Some(e) => e.is_covered(self.gen),
+        }
+    }
+
+    /// Block until the flush epoch covering this request is durably
+    /// committed; returns the flush's result. An engine that died
+    /// (panicked flusher) or shut down before covering the request
+    /// returns [`Error::BgSync`]. A failed flush also surfaces as
+    /// [`Error::BgSync`] carrying the original error's message: the
+    /// concrete variant is flattened to a string because one flush may
+    /// cover many coalesced waiters and the underlying errors are not
+    /// cloneable.
+    pub fn wait(self) -> Result<()> {
+        match self.engine {
+            None => Ok(()),
+            Some(e) => e.wait_for(self.gen),
+        }
+    }
+}
+
+/// Flusher-thread bookkeeping, all behind one mutex.
+struct EngineState {
+    /// Highest explicit flush generation requested.
+    requested: u64,
+    /// Highest generation durably covered by a finished flush.
+    completed: u64,
+    /// Watermark kick pending (set by writers, consumed by the flusher).
+    kicked: bool,
+    shutdown: bool,
+    /// Panic payload of a dead flusher; sticky.
+    dead: Option<String>,
+    /// Failed-flush spans `(from_exclusive, to_inclusive, message)` for
+    /// ticket waiters; bounded by [`MAX_ERROR_SPANS`].
+    errors: VecDeque<(u64, u64, String)>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// The background sync engine: one per manager, lazily started (or at
+/// open when a watermark/interval is configured). See the module docs.
+pub(crate) struct SyncEngine {
+    /// The manager this engine flushes. `Weak` breaks the ownership
+    /// cycle: the *thread* holds a strong `Arc` for its lifetime, and
+    /// `shutdown_and_join` always runs before the last strong reference
+    /// outside the thread drops.
+    target: Mutex<Weak<ManagerCore>>,
+    state: Mutex<EngineState>,
+    /// Wakes the flusher (request / kick / shutdown / interval).
+    work_cv: Condvar,
+    /// Signalled after every finished flush (ticket waiters, stalled
+    /// writers).
+    done_cv: Condvar,
+    /// Held for the duration of one flush. `snapshot()`/`doctor()` take
+    /// it so they never observe a half-committed background epoch.
+    flush_gate: Mutex<()>,
+    watermark: AtomicU64,
+    ceiling: AtomicU64,
+    interval_ms: AtomicU64,
+    /// Collapses redundant watermark kicks to one condvar signal.
+    kick_pending: AtomicBool,
+    /// Test hook: makes the next flush panic inside the flusher thread.
+    panic_inject: AtomicBool,
+    // -- cumulative counters (see BgSyncStats) --
+    flushes: AtomicU64,
+    flush_failures: AtomicU64,
+    watermark_triggers: AtomicU64,
+    ceiling_triggers: AtomicU64,
+    interval_triggers: AtomicU64,
+    explicit_requests: AtomicU64,
+    section_bytes_flushed: AtomicU64,
+    data_bytes_flushed: AtomicU64,
+    writer_stalls: AtomicU64,
+    writer_stall_micros: AtomicU64,
+}
+
+impl SyncEngine {
+    pub(crate) fn new(watermark_bytes: u64, ceiling_bytes: u64, interval_ms: u64) -> Self {
+        Self {
+            target: Mutex::new(Weak::new()),
+            state: Mutex::new(EngineState {
+                requested: 0,
+                completed: 0,
+                kicked: false,
+                shutdown: false,
+                dead: None,
+                errors: VecDeque::new(),
+                thread: None,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            flush_gate: Mutex::new(()),
+            watermark: AtomicU64::new(watermark_bytes),
+            ceiling: AtomicU64::new(ceiling_bytes),
+            interval_ms: AtomicU64::new(interval_ms),
+            kick_pending: AtomicBool::new(false),
+            panic_inject: AtomicBool::new(false),
+            flushes: AtomicU64::new(0),
+            flush_failures: AtomicU64::new(0),
+            watermark_triggers: AtomicU64::new(0),
+            ceiling_triggers: AtomicU64::new(0),
+            interval_triggers: AtomicU64::new(0),
+            explicit_requests: AtomicU64::new(0),
+            section_bytes_flushed: AtomicU64::new(0),
+            data_bytes_flushed: AtomicU64::new(0),
+            writer_stalls: AtomicU64::new(0),
+            writer_stall_micros: AtomicU64::new(0),
+        }
+    }
+
+    /// Bind the engine to its manager (called once, while the manager is
+    /// being wrapped in its `Arc`).
+    pub(crate) fn bind(&self, target: Weak<ManagerCore>) {
+        *self.target.lock().unwrap() = target;
+    }
+
+    /// Should the flusher start at open (before any explicit request)?
+    /// Any configured trigger or limit needs the thread: the watermark
+    /// and interval flush on their own, and a (possibly ceiling-only)
+    /// backpressure stall can only drain if a flusher exists to kick.
+    pub(crate) fn auto_start(&self) -> bool {
+        self.watermark.load(Ordering::Relaxed) > 0
+            || self.interval_ms.load(Ordering::Relaxed) > 0
+            || self.ceiling.load(Ordering::Relaxed) > 0
+    }
+
+    /// The flush gate: held by the flusher across one whole flush
+    /// (section writes + manifest commit). `snapshot()`/`doctor()` hold
+    /// it to exclude half-committed background epochs; the inline close
+    /// sync holds it for uniformity.
+    pub(crate) fn gate(&self) -> MutexGuard<'_, ()> {
+        // A flusher that panicked mid-flush poisons the gate; the store
+        // is still recoverable (manifest protocol), so don't propagate
+        // the poison to snapshot/doctor/close.
+        self.flush_gate.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Spawn the flusher thread if it is not running. Idempotent.
+    pub(crate) fn ensure_started(&self) -> Result<()> {
+        {
+            let st = self.state.lock().unwrap();
+            if st.thread.is_some() {
+                return Ok(());
+            }
+            if let Some(d) = &st.dead {
+                return Err(Error::BgSync(format!("background flusher died: {d}")));
+            }
+            if st.shutdown {
+                return Err(Error::BgSync("sync engine is shut down".into()));
+            }
+        }
+        let weak = self.target.lock().unwrap().clone();
+        let Some(mgr) = weak.upgrade() else {
+            return Err(Error::BgSync("sync engine is not bound to a manager".into()));
+        };
+        let mut st = self.state.lock().unwrap();
+        if st.thread.is_none() {
+            let handle = std::thread::Builder::new()
+                .name("metall-bgsync".into())
+                .spawn(move || Self::run(mgr))
+                .map_err(|e| Error::BgSync(format!("cannot spawn flusher thread: {e}")))?;
+            st.thread = Some(handle);
+        }
+        Ok(())
+    }
+
+    /// Register an explicit flush request; returns its generation.
+    pub(crate) fn request(&self) -> Result<u64> {
+        self.ensure_started()?;
+        let mut st = self.state.lock().unwrap();
+        if let Some(d) = &st.dead {
+            return Err(Error::BgSync(format!("background flusher died: {d}")));
+        }
+        if st.shutdown {
+            return Err(Error::BgSync("sync engine is shut down".into()));
+        }
+        st.requested += 1;
+        let gen = st.requested;
+        self.explicit_requests.fetch_add(1, Ordering::Relaxed);
+        self.work_cv.notify_one();
+        Ok(gen)
+    }
+
+    /// Is `gen` covered by a *successful* flush? A failed covering flush
+    /// (recorded error span) must not read as durable.
+    fn is_covered(&self, gen: u64) -> bool {
+        let st = self.state.lock().unwrap();
+        st.completed >= gen && !st.errors.iter().any(|(from, to, _)| gen > *from && gen <= *to)
+    }
+
+    /// Block until generation `gen` is covered; return the covering
+    /// flush's result.
+    pub(crate) fn wait_for(&self, gen: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.completed >= gen {
+                for (from, to, msg) in &st.errors {
+                    if gen > *from && gen <= *to {
+                        return Err(Error::BgSync(msg.clone()));
+                    }
+                }
+                return Ok(());
+            }
+            if let Some(d) = &st.dead {
+                return Err(Error::BgSync(format!("background flusher died: {d}")));
+            }
+            if st.shutdown && st.thread.is_none() {
+                return Err(Error::BgSync(
+                    "sync engine shut down before the flush completed".into(),
+                ));
+            }
+            st = self.done_cv.wait(st).unwrap();
+        }
+    }
+
+    /// Hot-path hook, called by `mark_data_dirty` after marking: kicks
+    /// the flusher when the dirty estimate crosses the watermark (or an
+    /// explicitly configured ceiling — backpressure works even without a
+    /// watermark trigger) and stalls the calling writer above the hard
+    /// ceiling. Two relaxed atomic loads when neither is configured.
+    #[inline]
+    pub(crate) fn on_data_marked(&self, mgr: &ManagerCore) {
+        let wm = self.watermark.load(Ordering::Relaxed);
+        let ceiling = self.ceiling.load(Ordering::Relaxed);
+        if wm == 0 && ceiling == 0 {
+            return;
+        }
+        let dirty = mgr.dirty_data_bytes();
+        let over_wm = wm > 0 && dirty >= wm;
+        let over_ceiling = ceiling > 0 && dirty >= ceiling;
+        // load-before-swap: in the steady state (kick already pending)
+        // every writer takes the read-only branch, keeping the shared
+        // line out of RMW ping-pong — same discipline as DirtyChunkSet
+        if (over_wm || over_ceiling)
+            && !self.kick_pending.load(Ordering::Relaxed)
+            && !self.kick_pending.swap(true, Ordering::Relaxed)
+        {
+            // retry a failed open-time spawn here: watermark/interval-only
+            // workloads may never call sync(), and this branch (rare —
+            // kick_pending collapses it) is their only trigger edge. A
+            // running engine returns immediately.
+            let _ = self.ensure_started();
+            let mut st = self.state.lock().unwrap();
+            st.kicked = true;
+            self.work_cv.notify_one();
+        }
+        if over_ceiling {
+            self.stall_writer(mgr, ceiling);
+        }
+    }
+
+    /// Backpressure: hold the writer until the flusher drains the dirty
+    /// estimate below the ceiling — or stops making progress. Called
+    /// with no allocator locks held. A flush that *fails* while we wait
+    /// ends the stall (the dirty set was re-marked and cannot drain
+    /// right now; hanging the infallible write APIs on a broken disk
+    /// would be worse — the failure surfaces on the next `sync()`),
+    /// so each write is stalled at most one failed-flush round-trip.
+    fn stall_writer(&self, mgr: &ManagerCore, ceiling: u64) {
+        let t0 = Instant::now();
+        let failures0 = self.flush_failures.load(Ordering::Relaxed);
+        let mut waited = false;
+        let mut st = self.state.lock().unwrap();
+        while st.dead.is_none()
+            && !st.shutdown
+            && st.thread.is_some()
+            && self.flush_failures.load(Ordering::Relaxed) == failures0
+            && mgr.dirty_data_bytes() >= ceiling
+        {
+            st.kicked = true;
+            self.work_cv.notify_one();
+            waited = true;
+            let (guard, _) = self.done_cv.wait_timeout(st, STALL_RECHECK).unwrap();
+            st = guard;
+        }
+        drop(st);
+        if waited {
+            let micros = t0.elapsed().as_micros() as u64;
+            self.writer_stalls.fetch_add(1, Ordering::Relaxed);
+            self.writer_stall_micros.fetch_add(micros, Ordering::Relaxed);
+        }
+    }
+
+    /// Stop the flusher: signal shutdown, join the thread (it drains any
+    /// outstanding requests with one final flush first), and report a
+    /// dead engine as an error. Idempotent.
+    pub(crate) fn shutdown_and_join(&self) -> Result<()> {
+        let handle = {
+            let mut st = self.state.lock().unwrap();
+            st.shutdown = true;
+            self.work_cv.notify_all();
+            st.thread.take()
+        };
+        if let Some(h) = handle {
+            // A panic is already captured in `dead` via catch_unwind;
+            // join only fails if the unwind escaped it, which the Err
+            // below reports through the same channel.
+            if h.join().is_err() {
+                let mut st = self.state.lock().unwrap();
+                if st.dead.is_none() {
+                    st.dead = Some("flusher thread aborted".into());
+                }
+            }
+        }
+        self.done_cv.notify_all();
+        let st = self.state.lock().unwrap();
+        match &st.dead {
+            Some(d) => Err(Error::BgSync(format!("background flusher died: {d}"))),
+            None => Ok(()),
+        }
+    }
+
+    pub(crate) fn stats(&self) -> BgSyncStats {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let st = self.state.lock().unwrap();
+        BgSyncStats {
+            flushes: ld(&self.flushes),
+            flush_failures: ld(&self.flush_failures),
+            watermark_triggers: ld(&self.watermark_triggers),
+            ceiling_triggers: ld(&self.ceiling_triggers),
+            interval_triggers: ld(&self.interval_triggers),
+            explicit_requests: ld(&self.explicit_requests),
+            section_bytes_flushed: ld(&self.section_bytes_flushed),
+            data_bytes_flushed: ld(&self.data_bytes_flushed),
+            writer_stalls: ld(&self.writer_stalls),
+            writer_stall_micros: ld(&self.writer_stall_micros),
+            watermark_bytes: self.watermark.load(Ordering::Relaxed),
+            ceiling_bytes: self.ceiling.load(Ordering::Relaxed),
+            // a dead flusher's JoinHandle lingers until shutdown takes
+            // it; "running" must mean alive AND able to flush
+            engine_running: st.thread.is_some() && st.dead.is_none(),
+            engine_dead: st.dead.is_some(),
+        }
+    }
+
+    /// Test hook: the next background flush panics inside the flusher.
+    #[allow(dead_code)]
+    pub(crate) fn inject_panic_for_tests(&self) {
+        self.panic_inject.store(true, Ordering::Relaxed);
+    }
+
+    /// The flusher thread body. Holds a strong `Arc` for its whole life;
+    /// exits on shutdown (after draining outstanding requests) or on a
+    /// panic in the flush body (marking the engine dead).
+    fn run(mgr: Arc<ManagerCore>) {
+        let eng = mgr.engine();
+        // Failed-flush retry backoff in ms (0 = none pending). The
+        // watermark trigger is edge-driven by writes: without this, a
+        // transient I/O failure after the last write would leave dirty
+        // data volatile indefinitely on a watermark-only engine.
+        let mut retry_ms: u64 = 0;
+        loop {
+            // Decide what to flush under the state lock.
+            let covered;
+            {
+                let mut st = eng.state.lock().unwrap();
+                loop {
+                    if st.requested > st.completed {
+                        covered = st.requested;
+                        break;
+                    }
+                    if st.shutdown {
+                        return; // nothing outstanding: clean exit
+                    }
+                    if st.kicked {
+                        st.kicked = false;
+                        eng.kick_pending.store(false, Ordering::Relaxed);
+                        let wm = eng.watermark.load(Ordering::Relaxed);
+                        let ceiling = eng.ceiling.load(Ordering::Relaxed);
+                        let dirty = mgr.dirty_data_bytes();
+                        // flush when either limit is crossed: a stalled
+                        // writer at a ceiling-only configuration must
+                        // still be drained
+                        let over_wm = wm > 0 && dirty >= wm;
+                        let over_ceiling = ceiling > 0 && dirty >= ceiling;
+                        if over_wm || over_ceiling {
+                            if over_wm {
+                                eng.watermark_triggers.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                eng.ceiling_triggers.fetch_add(1, Ordering::Relaxed);
+                            }
+                            covered = st.requested; // == completed: pure bg flush
+                            break;
+                        }
+                        continue;
+                    }
+                    let iv = eng.interval_ms.load(Ordering::Relaxed);
+                    let wait_ms = match (iv, retry_ms) {
+                        (0, 0) => 0, // no timer: wait indefinitely
+                        (0, r) => r,
+                        (i, 0) => i,
+                        (i, r) => i.min(r),
+                    };
+                    if wait_ms == 0 {
+                        st = eng.work_cv.wait(st).unwrap();
+                    } else {
+                        let (guard, timeout) = eng
+                            .work_cv
+                            .wait_timeout(st, Duration::from_millis(wait_ms))
+                            .unwrap();
+                        st = guard;
+                        if timeout.timed_out() && mgr.anything_dirty() {
+                            if iv > 0 && (retry_ms == 0 || iv <= retry_ms) {
+                                eng.interval_triggers.fetch_add(1, Ordering::Relaxed);
+                            }
+                            // (a pure failed-flush retry gets no trigger
+                            // attribution; `flushes` still counts it)
+                            covered = st.requested;
+                            break;
+                        }
+                    }
+                }
+            }
+            // Run the flush outside the state lock: requests arriving
+            // from here on get a generation > `covered` and trigger the
+            // next round — their mutations may postdate this flush's
+            // section snapshots.
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                if eng.panic_inject.swap(false, Ordering::Relaxed) {
+                    panic!("injected flusher panic (test hook)");
+                }
+                mgr.sync_now()
+            }));
+            let mut st = eng.state.lock().unwrap();
+            match result {
+                Ok(flush) => {
+                    eng.flushes.fetch_add(1, Ordering::Relaxed);
+                    // exponential retry backoff: 50ms → 5s on repeated
+                    // failures, cleared by any success
+                    retry_ms = match &flush {
+                        Ok(()) => 0,
+                        Err(_) => (retry_ms.max(25) * 2).min(5000),
+                    };
+                    match flush {
+                        Ok(()) => {
+                            // last_sync describes this flush only when it
+                            // succeeded (a failed sync_now returns before
+                            // rewriting it — reading it then would re-add
+                            // the previous flush's bytes)
+                            let s = mgr.sync_stats();
+                            let sb = s.section_bytes_written;
+                            eng.section_bytes_flushed.fetch_add(sb, Ordering::Relaxed);
+                            eng.data_bytes_flushed
+                                .fetch_add(s.data_bytes_flushed, Ordering::Relaxed);
+                        }
+                        Err(e) => {
+                            eng.flush_failures.fetch_add(1, Ordering::Relaxed);
+                            // sync_now re-marked everything it had cleared;
+                            // record the span so covered tickets see the
+                            // failure, then let the next flush retry.
+                            if covered > st.completed {
+                                let from = st.completed;
+                                st.errors.push_back((from, covered, e.to_string()));
+                                while st.errors.len() > MAX_ERROR_SPANS {
+                                    // never evict: merge the two oldest
+                                    // spans (over-approximating across the
+                                    // gap — a stale ticket may see a false
+                                    // *failure*, never a false durability
+                                    // Ok)
+                                    let (f1, _, m1) = st.errors.pop_front().unwrap();
+                                    let (_, t2, _) = st.errors.pop_front().unwrap();
+                                    st.errors.push_front((f1, t2, m1));
+                                }
+                            }
+                        }
+                    }
+                    st.completed = st.completed.max(covered);
+                }
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "flusher panicked".into());
+                    st.dead = Some(msg);
+                    eng.done_cv.notify_all();
+                    return;
+                }
+            }
+            eng.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alloc::manager::{ManagerOptions, MetallManager};
+    use crate::util::tmp::TempDir;
+
+    fn opts() -> ManagerOptions {
+        ManagerOptions::small_for_tests()
+    }
+
+    /// Poll `f` for up to ~5 s; panics with `what` on timeout.
+    fn wait_until(what: &str, mut f: impl FnMut() -> bool) {
+        for _ in 0..500 {
+            if f() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("timed out waiting for {what}");
+    }
+
+    #[test]
+    fn explicit_ticket_commits_a_durable_manifest() {
+        let d = TempDir::new("bg-ticket");
+        let store = d.join("s");
+        let m = MetallManager::create_with(&store, opts()).unwrap();
+        m.construct::<u64>("x", 7).unwrap();
+        let t = m.sync_async().unwrap();
+        let gen = t.generation();
+        assert!(gen >= 1);
+        t.wait().unwrap();
+        assert!(
+            !crate::alloc::mgmt_io::list_manifest_epochs(&store).unwrap().is_empty(),
+            "ticket resolved only after a manifest committed"
+        );
+        assert_eq!(m.sync_stats().manifest_commits, 1);
+        // a second ticket on an unchanged store is a no-op flush
+        let t2 = m.sync_async().unwrap();
+        assert!(t2.generation() > gen);
+        t2.wait().unwrap();
+        assert_eq!(m.sync_stats().manifest_commits, 1, "no-op flush commits nothing");
+        let bg = m.bg_sync_stats();
+        assert!(bg.engine_running);
+        assert_eq!(bg.explicit_requests, 2);
+        assert!(bg.flushes >= 2);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn sync_is_sync_async_plus_wait() {
+        let d = TempDir::new("bg-sync-eq");
+        let m = MetallManager::create_with(d.join("s"), opts()).unwrap();
+        m.construct::<u64>("v", 1).unwrap();
+        m.sync().unwrap();
+        let st = m.sync_stats();
+        assert_eq!(st.syncs, 1);
+        assert_eq!(st.manifest_commits, 1);
+        assert_eq!(m.bg_sync_stats().explicit_requests, 1);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn watermark_flushes_without_an_explicit_sync() {
+        let d = TempDir::new("bg-wm");
+        let mut o = opts();
+        // one dirty chunk (64 KiB test geometry) crosses the watermark
+        o.sync_watermark_bytes = o.chunk_size;
+        let m = MetallManager::create_with(d.join("s"), o).unwrap();
+        assert!(m.bg_sync_stats().engine_running, "watermark config auto-starts the engine");
+        // dirty several chunks' worth of data, never calling sync()
+        let off = m.allocate(4 * m.chunk_size()).unwrap();
+        unsafe { m.bytes_mut(off, 4 * m.chunk_size()).fill(0xAB) };
+        wait_until("watermark-driven background flush", || {
+            m.sync_stats().manifest_commits >= 1
+        });
+        let bg = m.bg_sync_stats();
+        assert!(bg.watermark_triggers >= 1, "{bg:?}");
+        assert_eq!(bg.explicit_requests, 0, "no explicit sync was issued");
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn interval_timer_flushes_dirty_state() {
+        let d = TempDir::new("bg-iv");
+        let mut o = opts();
+        o.sync_interval_ms = 10;
+        let m = MetallManager::create_with(d.join("s"), o).unwrap();
+        m.construct::<u64>("tick", 1).unwrap(); // management-only dirt
+        wait_until("interval-driven background flush", || {
+            m.sync_stats().manifest_commits >= 1
+        });
+        assert!(m.bg_sync_stats().interval_triggers >= 1);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn ceiling_stalls_writers_and_counts_it() {
+        let d = TempDir::new("bg-stall");
+        let mut o = opts();
+        o.sync_watermark_bytes = 1; // any dirty byte kicks the flusher
+        o.sync_ceiling_bytes = 1; // …and stalls the writer until drained
+        let m = MetallManager::create_with(d.join("s"), o).unwrap();
+        let off = m.allocate(4 * m.chunk_size()).unwrap();
+        // every write re-dirties a chunk past the ceiling: each one must
+        // stall until the flusher drains (64 rounds close the tiny
+        // mark-vs-flush race window deterministically)
+        for i in 0..64u64 {
+            m.write::<u64>(off + (i % 4) * m.chunk_size() as u64, i);
+        }
+        let bg = m.bg_sync_stats();
+        assert!(bg.writer_stalls >= 1, "ceiling must stall at least one write: {bg:?}");
+        assert!(bg.writer_stall_micros > 0);
+        assert!(bg.flushes >= 1, "the stall is resolved by a real flush");
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn flusher_panic_is_contained_and_close_refuses_clean() {
+        let d = TempDir::new("bg-panic");
+        let store = d.join("s");
+        {
+            let m = MetallManager::create_with(&store, opts()).unwrap();
+            m.construct::<u64>("pre", 1).unwrap();
+            m.sync().unwrap(); // engine up, epoch 1 durable
+            m.engine().inject_panic_for_tests();
+            let err = m.sync().expect_err("a panicking flusher must surface as an error");
+            assert!(format!("{err}").contains("died"), "{err}");
+            // every subsequent sync call errors too — never a silent no-op
+            assert!(m.sync_async().is_err());
+            // close refuses to mark the store clean over a dead flusher
+            assert!(m.close().is_err());
+        }
+        assert!(!store.join("CLEAN").exists(), "no CLEAN marker after a dead flusher");
+        // recovery falls back to the last complete manifest
+        let m = MetallManager::open_unclean(&store).unwrap();
+        assert_eq!(m.read::<u64>(m.find::<u64>("pre").unwrap().unwrap()), 1);
+        assert!(m.doctor().unwrap().is_empty());
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn concurrent_tickets_coalesce_into_few_flushes() {
+        let d = TempDir::new("bg-coalesce");
+        let m = MetallManager::create_with(d.join("s"), opts()).unwrap();
+        m.construct::<u64>("base", 0).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let m = &m;
+                s.spawn(move || {
+                    for i in 0..16u64 {
+                        let off = m.allocate(64).unwrap();
+                        m.write::<u64>(off, t * 1000 + i);
+                        m.sync().unwrap();
+                    }
+                });
+            }
+        });
+        let bg = m.bg_sync_stats();
+        assert_eq!(bg.explicit_requests, 64);
+        assert!(bg.flushes <= bg.explicit_requests, "one flush may cover many requests: {bg:?}");
+        // Forced pile-up: with the flush gate held no flush can complete,
+        // so queued requests MUST coalesce — at most one in-flight flush
+        // (decided before we took the gate) plus one covering the rest.
+        let before = m.bg_sync_stats();
+        let tickets: Vec<_> = {
+            let gate = m.engine().gate();
+            let t: Vec<_> = (0..10).map(|_| m.sync_async().unwrap()).collect();
+            drop(gate);
+            t
+        };
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let after = m.bg_sync_stats();
+        assert_eq!(after.explicit_requests - before.explicit_requests, 10);
+        assert!(
+            after.flushes - before.flushes <= 2,
+            "10 gate-queued requests must coalesce into ≤ 2 flushes: {before:?} -> {after:?}"
+        );
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn private_mode_rejects_background_triggers() {
+        // BsMsync's user-level msync reads + remaps pages under a
+        // quiescent-writers contract; a background flush racing live
+        // stores could remap stale file bytes over them. The combination
+        // must be refused loudly at create *and* open.
+        let d = TempDir::new("bg-private");
+        for (wm, iv, ceil) in [(1usize, 0u64, 0usize), (0, 5, 0), (0, 0, 1)] {
+            let mut o = opts();
+            o.private_mode = true;
+            o.sync_watermark_bytes = wm;
+            o.sync_interval_ms = iv;
+            o.sync_ceiling_bytes = ceil;
+            let err = MetallManager::create_with(d.join("s"), o)
+                .expect_err("private mode + background trigger must be rejected");
+            assert!(format!("{err}").contains("bs-mmap"), "{err}");
+        }
+        // private mode without triggers still works, and a private store
+        // reopened with triggers is rejected at open time too
+        let mut o = opts();
+        o.private_mode = true;
+        let m = MetallManager::create_with(d.join("s"), o).unwrap();
+        m.construct::<u64>("x", 1).unwrap();
+        m.close().unwrap();
+        let mut o = opts();
+        o.private_mode = true;
+        o.sync_watermark_bytes = 1;
+        assert!(MetallManager::open_with(d.join("s"), o, false, false).is_err());
+    }
+
+    #[test]
+    fn read_only_tickets_complete_immediately() {
+        let d = TempDir::new("bg-ro");
+        let store = d.join("s");
+        {
+            let m = MetallManager::create_with(&store, opts()).unwrap();
+            m.construct::<u64>("x", 1).unwrap();
+            m.close().unwrap();
+        }
+        let m = MetallManager::open_read_only(&store).unwrap();
+        let t = m.sync_async().unwrap();
+        assert!(t.is_complete());
+        assert_eq!(t.generation(), 0);
+        t.wait().unwrap();
+        m.sync().unwrap();
+        assert!(!m.bg_sync_stats().engine_running, "read-only stores run no flusher");
+    }
+}

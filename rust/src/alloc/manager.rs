@@ -25,7 +25,7 @@
 //!
 //! ## Incremental sync (persist-path scaling)
 //!
-//! [`MetallManager::sync`] is proportional to what changed, not to the
+//! [`ManagerCore::sync`] is proportional to what changed, not to the
 //! store: DRAM-only dirty-epoch marks (per-shard per-bin flags, chunk- /
 //! name-directory marks, a chunk-granular map of data writes) tell it
 //! exactly which management sections to re-serialize and which chunk
@@ -35,6 +35,22 @@
 //! free slots are serialized into the transient cache section instead of
 //! being drained, so a sync costs no cache warmth; recovery returns
 //! those slots to the bitsets. A sync with no changes writes zero bytes.
+//!
+//! ## Background sync (off the mutation path)
+//!
+//! Every read-write manager owns a [`crate::alloc::bg_sync::SyncEngine`]:
+//! a dedicated flusher thread that runs the incremental sync above off
+//! the allocation path. `sync()` is now `sync_async()` + ticket wait
+//! (unchanged durability semantics: it returns after the covering
+//! manifest is durably committed); a configurable dirty-byte watermark
+//! ([`ManagerOptions::sync_watermark_bytes`]) and optional interval
+//! timer flush *without* any caller, and a hard backpressure ceiling
+//! stalls writers that outrun the disk. The `MetallManager` handle is a
+//! thin wrapper around an [`Arc<ManagerCore>`] so the flusher thread can
+//! safely share the core; all of the manager API lives on
+//! [`ManagerCore`] and is reached through `Deref`. See
+//! [`crate::alloc::bg_sync`] for the engine's epoch/ticket protocol,
+//! panic containment, and shutdown drain.
 //!
 //! ## Concurrency model (§4.5.1, sharded with a lock-free fast path)
 //!
@@ -75,11 +91,13 @@
 //! allocator's on-disk layout bit-for-bit.
 
 use std::collections::{HashMap, HashSet};
+use std::ops::Deref;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
+use crate::alloc::bg_sync::{BgSyncStats, SyncEngine, SyncTicket};
 use crate::alloc::bin_dir::{
     serialize_merged_into, AllocShard, BinData, ShardMap, ShardStatsSnapshot,
 };
@@ -134,6 +152,31 @@ pub struct ManagerOptions {
     /// (single-node fallback when absent); tests and benches inject fakes
     /// ([`Topology::fake`]) to exercise multi-node placement on any host.
     pub topology: Option<Topology>,
+    /// Background sync: dirty-data high watermark in bytes. When the
+    /// chunk-granular estimate of un-synced application data crosses it,
+    /// the background flusher runs an incremental sync without any
+    /// caller — fig5-style incremental workloads never stall on the
+    /// persist path. `0` (default) disables the watermark trigger;
+    /// explicit `sync()`/`sync_async()` still run on the engine.
+    /// Incompatible with `private_mode` (the bs-mmap user-level msync
+    /// requires quiescent writers): create/open rejects the combination.
+    /// Durability sharp edge when enabled: the unsafe
+    /// [`ManagerCore::bytes_mut`] view marks its range dirty at handout
+    /// (mark-before-write), so a background flush racing the caller's
+    /// stores can consume the mark mid-fill — bulk writers that need
+    /// ticket-grade durability must use the marking write APIs or
+    /// re-mark with [`ManagerCore::mark_data_dirty`] after writing (see
+    /// `bytes_mut`'s docs).
+    pub sync_watermark_bytes: usize,
+    /// Background sync: optional interval timer in milliseconds. When
+    /// non-zero, the flusher wakes at this cadence and flushes if
+    /// anything (data or management sections) is dirty. `0` disables.
+    pub sync_interval_ms: u64,
+    /// Backpressure hard ceiling in bytes: a writer whose dirty-data
+    /// mark pushes the estimate to or past this stalls (counted in
+    /// [`BgSyncStats`]) until the flusher drains below it. `0` = auto:
+    /// 4 × the watermark when a watermark is set, otherwise disabled.
+    pub sync_ceiling_bytes: usize,
 }
 
 impl Default for ManagerOptions {
@@ -148,6 +191,9 @@ impl Default for ManagerOptions {
             parallel_sync: true,
             shards: 0,
             topology: None,
+            sync_watermark_bytes: 0,
+            sync_interval_ms: 0,
+            sync_ceiling_bytes: 0,
         }
     }
 }
@@ -174,6 +220,30 @@ impl ManagerOptions {
             return self.shards;
         }
         topo.default_shards()
+    }
+
+    /// Effective backpressure ceiling (see [`Self::sync_ceiling_bytes`]).
+    fn resolved_sync_ceiling(&self) -> usize {
+        if self.sync_ceiling_bytes > 0 {
+            self.sync_ceiling_bytes
+        } else if self.sync_watermark_bytes > 0 {
+            self.sync_watermark_bytes.saturating_mul(4)
+        } else {
+            0
+        }
+    }
+
+    /// The engine sized for these options (read-only managers get a
+    /// fully disabled engine: no triggers, never started).
+    fn sync_engine(&self, read_only: bool) -> SyncEngine {
+        if read_only {
+            return SyncEngine::new(0, 0, 0);
+        }
+        SyncEngine::new(
+            self.sync_watermark_bytes as u64,
+            self.resolved_sync_ceiling() as u64,
+            self.sync_interval_ms,
+        )
     }
 
     fn segment_options(&self, read_only: bool) -> SegmentOptions {
@@ -333,11 +403,18 @@ pub struct SyncStats {
 /// themselves (all in-repo containers go through the marking APIs).
 struct DirtyChunkSet {
     words: Vec<AtomicU64>,
+    /// Running count of set bits — the background engine's dirty-byte
+    /// watermark input (`count × chunk_size`), maintained so the hot
+    /// write path never scans the bitmap.
+    count: AtomicU64,
 }
 
 impl DirtyChunkSet {
     fn new(max_chunks: usize) -> Self {
-        Self { words: (0..max_chunks.div_ceil(64)).map(|_| AtomicU64::new(0)).collect() }
+        Self {
+            words: (0..max_chunks.div_ceil(64)).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+        }
     }
 
     #[inline]
@@ -348,8 +425,49 @@ impl DirtyChunkSet {
             // relaxed load keeps the shared cache line out of RMW
             // ping-pong between writer threads
             if w.load(Ordering::Relaxed) & bit == 0 {
-                w.fetch_or(bit, Ordering::Relaxed);
+                let prev = w.fetch_or(bit, Ordering::Relaxed);
+                if prev & bit == 0 {
+                    // this thread freshly set the bit (the fetch_or
+                    // settles races): keep the watermark count exact
+                    self.count.fetch_add(1, Ordering::Relaxed);
+                }
             }
+        }
+    }
+
+    /// Chunks currently marked dirty (watermark estimate).
+    #[inline]
+    fn dirty_chunks(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Clear every bit below `limit` without collecting indices (the
+    /// bs-mmap flush covers all writes page-granularly and only needs
+    /// the watermark estimate reset). Same preservation rule as
+    /// [`Self::take_dirty`] for bits at or past `limit`.
+    fn clear_to(&self, limit: usize) {
+        let mut cleared = 0u64;
+        for (wi, w) in self.words.iter().enumerate() {
+            if wi * 64 >= limit {
+                break;
+            }
+            let mut bits = w.swap(0, Ordering::Relaxed);
+            let keep_from = limit - wi * 64;
+            if keep_from < 64 {
+                let hi = bits & (!0u64 << keep_from);
+                if hi != 0 {
+                    let prev = w.fetch_or(hi, Ordering::Relaxed);
+                    let dup = (prev & hi).count_ones() as u64;
+                    if dup > 0 {
+                        self.count.fetch_sub(dup, Ordering::Relaxed);
+                    }
+                }
+                bits &= !(!0u64 << keep_from);
+            }
+            cleared += bits.count_ones() as u64;
+        }
+        if cleared > 0 {
+            self.count.fetch_sub(cleared, Ordering::Relaxed);
         }
     }
 
@@ -371,7 +489,15 @@ impl DirtyChunkSet {
                 // straddling word: put the out-of-range bits back
                 let hi = bits & (!0u64 << keep_from);
                 if hi != 0 {
-                    w.fetch_or(hi, Ordering::Relaxed);
+                    // a mark racing between the swap and this restore may
+                    // have re-set (and re-counted) one of these bits; the
+                    // overlap was counted twice for a single set bit, so
+                    // settle the watermark estimate here
+                    let prev = w.fetch_or(hi, Ordering::Relaxed);
+                    let dup = (prev & hi).count_ones() as u64;
+                    if dup > 0 {
+                        self.count.fetch_sub(dup, Ordering::Relaxed);
+                    }
                 }
                 bits &= !(!0u64 << keep_from);
             }
@@ -381,6 +507,9 @@ impl DirtyChunkSet {
                 out.push(wi * 64 + b);
             }
         }
+        // bits preserved past the limit stay counted; only taken ones
+        // leave the watermark estimate
+        self.count.fetch_sub(out.len() as u64, Ordering::Relaxed);
         out
     }
 }
@@ -442,8 +571,13 @@ persist_pod!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64, usize, isize);
 unsafe impl<T: Persist, const N: usize> Persist for [T; N] {}
 unsafe impl<A: Persist, B: Persist> Persist for (A, B) {}
 
-/// The Metall manager. `Sync`: share it behind `&` across threads.
-pub struct MetallManager {
+/// The shared manager core: every field and almost every method of the
+/// Metall manager. Applications hold it through the [`MetallManager`]
+/// wrapper (which `Deref`s here); the background
+/// [`crate::alloc::bg_sync::SyncEngine`] flusher thread holds a second
+/// `Arc` so it can serialize and commit epochs off the allocation path.
+/// `Sync`: share it behind `&` across threads.
+pub struct ManagerCore {
     dir: PathBuf,
     opts: ManagerOptions,
     read_only: bool,
@@ -465,6 +599,27 @@ pub struct MetallManager {
     dirty_data: DirtyChunkSet,
     /// Last-sync observability ([`Self::sync_stats`]).
     last_sync: Mutex<SyncStats>,
+    /// Background sync engine (flusher thread, epoch tickets,
+    /// watermark/interval triggers, backpressure).
+    bg: SyncEngine,
+}
+
+/// The Metall manager: the application-facing owner of one datastore.
+/// A thin wrapper around [`Arc<ManagerCore>`] — the full API lives on
+/// [`ManagerCore`] and is reached through `Deref`; the `Arc` is what
+/// lets the background flusher thread share the core safely. Dropping
+/// (or [`Self::close`]-ing) the wrapper drains and joins the flusher,
+/// then performs the final durable sync and marks the store `CLEAN`.
+pub struct MetallManager {
+    core: Arc<ManagerCore>,
+}
+
+impl Deref for MetallManager {
+    type Target = ManagerCore;
+
+    fn deref(&self) -> &ManagerCore {
+        &self.core
+    }
 }
 
 impl MetallManager {
@@ -476,7 +631,82 @@ impl MetallManager {
     }
 
     pub fn create_with(dir: impl Into<PathBuf>, opts: ManagerOptions) -> Result<Self> {
-        let dir = dir.into();
+        Ok(Self::wrap(ManagerCore::create_core(dir.into(), opts)?))
+    }
+
+    /// Open an existing, cleanly closed datastore read-write.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::open_with(dir, ManagerOptions::default(), false, false)
+    }
+
+    /// Open read-only (paper: `metall::open_read_only` — writes to the
+    /// mapping SIGSEGV; mutating APIs return errors). Multiple processes
+    /// may open the same store read-only (§3.6).
+    pub fn open_read_only(dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::open_with(dir, ManagerOptions::default(), true, false)
+    }
+
+    /// Open even if the store was not closed cleanly (the paper §3.3:
+    /// after a crash the backing files may be inconsistent — the
+    /// application should work on a duplicate).
+    pub fn open_unclean(dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::open_with(dir, ManagerOptions::default(), false, true)
+    }
+
+    pub fn open_with(
+        dir: impl Into<PathBuf>,
+        opts: ManagerOptions,
+        read_only: bool,
+        allow_unclean: bool,
+    ) -> Result<Self> {
+        Ok(Self::wrap(ManagerCore::open_core(dir.into(), opts, read_only, allow_unclean)?))
+    }
+
+    /// Wrap a built core in its `Arc`, bind the background engine to it
+    /// (via `Weak`, so the thread can reach the core without keeping a
+    /// dropped manager alive), and start the flusher right away when a
+    /// watermark/interval/ceiling trigger is configured. A spawn failure
+    /// here (thread exhaustion) is deliberately NOT fatal: failing the
+    /// whole create/open would leave a half-materialized store behind,
+    /// and the degradation is self-healing — every explicit sync AND
+    /// every watermark/ceiling kick retries `ensure_started`
+    /// (`bg_sync_stats().engine_running` exposes the state meanwhile).
+    fn wrap(core: ManagerCore) -> Self {
+        let core = Arc::new_cyclic(|weak| {
+            core.bg.bind(weak.clone());
+            core
+        });
+        let m = MetallManager { core };
+        if !m.core.read_only && m.core.bg.auto_start() {
+            let _ = m.core.bg.ensure_started();
+        }
+        m
+    }
+
+    /// Sync, serialize, and mark the store cleanly closed. Drains the
+    /// background engine (outstanding tickets resolve), joins the
+    /// flusher thread, and runs the final full sync inline; a dead
+    /// (panicked) flusher surfaces here as an error and the store is
+    /// deliberately **not** marked clean.
+    pub fn close(self) -> Result<()> {
+        self.core.close_inner()
+        // Drop runs next and is a no-op: close_inner latched `closed`.
+    }
+}
+
+impl Drop for MetallManager {
+    fn drop(&mut self) {
+        // Best-effort clean close (explicit close() is preferred and
+        // reports errors): drains + joins the flusher, final sync,
+        // CLEAN marker — the same path as close().
+        let _ = self.core.close_inner();
+    }
+}
+
+impl ManagerCore {
+    // ------------------------------------------------- core lifecycle --
+
+    fn create_core(dir: PathBuf, opts: ManagerOptions) -> Result<Self> {
         if dir.join("meta.bin").exists() {
             return Err(Error::Datastore(format!("datastore already exists at {dir:?}")));
         }
@@ -487,11 +717,13 @@ impl MetallManager {
         if opts.file_size % opts.chunk_size != 0 {
             return Err(Error::Config("file_size must be a multiple of chunk_size".into()));
         }
+        Self::check_bg_sync_opts(&opts)?;
         let segment = SegmentStorage::create(dir.join("segment"), opts.segment_options(false))?;
         let nb = num_bins(opts.chunk_size);
         let topo = opts.resolved_topology();
         let nshards = opts.resolved_shards(&topo);
         let mgr = Self {
+            bg: opts.sync_engine(false),
             shards: (0..nshards).map(|_| AllocShard::new(nb)).collect(),
             shard_map: ShardMap::with_topology(nshards, topo),
             cache: ObjectCache::new(nb),
@@ -518,32 +750,37 @@ impl MetallManager {
         Ok(mgr)
     }
 
-    /// Open an existing, cleanly closed datastore read-write.
-    pub fn open(dir: impl Into<PathBuf>) -> Result<Self> {
-        Self::open_with(dir, ManagerOptions::default(), false, false)
+    /// Background triggers flush with **no caller** on the mutation
+    /// path, but the private-mode user-level msync
+    /// ([`crate::storage::bsmmap::BsMsync`]) reads, pwrites, and remaps
+    /// pages under a quiescent-writers contract — a background flush
+    /// racing live stores could remap a page back to stale file bytes
+    /// and silently lose them. Refuse the combination loudly; explicit
+    /// `sync()` keeps working under the §3.3 quiescence contract.
+    fn check_bg_sync_opts(opts: &ManagerOptions) -> Result<()> {
+        let triggers = opts.sync_watermark_bytes > 0
+            || opts.sync_interval_ms > 0
+            || opts.sync_ceiling_bytes > 0;
+        if opts.private_mode && triggers {
+            return Err(Error::Config(
+                "background sync triggers (watermark/interval/ceiling) are incompatible \
+                 with private (bs-mmap) mode: the user-level msync requires quiescent \
+                 writers (§5); call sync() explicitly instead"
+                    .into(),
+            ));
+        }
+        Ok(())
     }
 
-    /// Open read-only (paper: `metall::open_read_only` — writes to the
-    /// mapping SIGSEGV; mutating APIs return errors). Multiple processes
-    /// may open the same store read-only (§3.6).
-    pub fn open_read_only(dir: impl Into<PathBuf>) -> Result<Self> {
-        Self::open_with(dir, ManagerOptions::default(), true, false)
-    }
-
-    /// Open even if the store was not closed cleanly (the paper §3.3:
-    /// after a crash the backing files may be inconsistent — the
-    /// application should work on a duplicate).
-    pub fn open_unclean(dir: impl Into<PathBuf>) -> Result<Self> {
-        Self::open_with(dir, ManagerOptions::default(), false, true)
-    }
-
-    pub fn open_with(
-        dir: impl Into<PathBuf>,
+    fn open_core(
+        dir: PathBuf,
         mut opts: ManagerOptions,
         read_only: bool,
         allow_unclean: bool,
     ) -> Result<Self> {
-        let dir = dir.into();
+        if !read_only {
+            Self::check_bg_sync_opts(&opts)?;
+        }
         let (chunk_size, file_size) = Self::read_meta(&dir)?;
         opts.chunk_size = chunk_size;
         opts.file_size = file_size;
@@ -589,6 +826,30 @@ impl MetallManager {
                 }
             }
         }
+        // Heal orphan large reservations: `allocate_large` reserves its
+        // run under the chunk lock but performs the segment extension
+        // (ftruncate) outside it, and a background epoch can durably
+        // commit the reservation inside that window. If the process then
+        // died before the extension, the recovered directory records a
+        // LargeHead run past the mapped extent that no caller can hold
+        // an offset to — roll it back to Free (the next sync persists
+        // the heal; the chunk directory marks itself).
+        let mapped_chunks = segment.mapped_len() / opts.chunk_size;
+        let orphan_heads: Vec<u32> = lm
+            .chunks
+            .iter()
+            .filter_map(|(id, kind)| match kind {
+                ChunkKind::LargeHead { nchunks }
+                    if id as usize + nchunks as usize > mapped_chunks =>
+                {
+                    Some(id)
+                }
+                _ => None,
+            })
+            .collect();
+        for head in orphan_heads {
+            lm.chunks.free_large(head);
+        }
         // Rebuild the DRAM-only shard state: ownership is re-dealt
         // deterministically (`chunk % nshards`), so any shard count — and
         // any topology — reopens any store.
@@ -604,6 +865,7 @@ impl MetallManager {
             }
         }
         let mgr = Self {
+            bg: opts.sync_engine(read_only),
             shards,
             shard_map,
             cache: ObjectCache::new(nb),
@@ -709,10 +971,69 @@ impl MetallManager {
     /// is the explicit full drain). Like the monolithic format before it,
     /// the serialized image is a consistent point only when mutators are
     /// quiescent (§3.3's contract).
+    ///
+    /// The flush itself runs on the background engine's flusher thread:
+    /// this call is exactly [`Self::sync_async`] + [`SyncTicket::wait`],
+    /// returning after the covering epoch's manifest is durably
+    /// committed — the durability semantics of the old inline sync,
+    /// with concurrent callers coalescing onto one flush.
     pub fn sync(&self) -> Result<()> {
         if self.read_only {
             return Ok(());
         }
+        self.sync_async()?.wait()
+    }
+
+    /// Request an asynchronous flush of everything dirty *now* and
+    /// return a [`SyncTicket`] for its epoch; the flush runs on the
+    /// background flusher thread while this caller keeps working.
+    /// `wait()` blocks until the covering manifest is durably committed.
+    /// Read-only stores return an already-complete ticket.
+    pub fn sync_async(&self) -> Result<SyncTicket<'_>> {
+        if self.read_only {
+            return Ok(SyncTicket::completed());
+        }
+        let gen = self.bg.request()?;
+        Ok(SyncTicket::pending(&self.bg, gen))
+    }
+
+    /// The background engine (flusher-thread internals; crate-private).
+    pub(crate) fn engine(&self) -> &SyncEngine {
+        &self.bg
+    }
+
+    /// Observability snapshot of the background sync engine (triggers,
+    /// flush counts, writer stalls). Exported as `alloc.bgsync.*` by
+    /// [`crate::coordinator::metrics::record_bg_sync_stats`].
+    pub fn bg_sync_stats(&self) -> BgSyncStats {
+        self.bg.stats()
+    }
+
+    /// Estimated un-synced application-data bytes (the watermark input):
+    /// marked dirty chunks × chunk size.
+    pub(crate) fn dirty_data_bytes(&self) -> u64 {
+        self.dirty_data.dirty_chunks() * self.opts.chunk_size as u64
+    }
+
+    /// Is anything — data, management sections, or parked remote frees —
+    /// dirty? The interval trigger's probe (never on the hot path).
+    pub(crate) fn anything_dirty(&self) -> bool {
+        let nb = self.num_bins();
+        self.dirty_data.dirty_chunks() > 0
+            || self.probe_any_section_dirty(nb, mgmt_io::num_groups(nb))
+            || self.shards.iter().any(|s| !s.remote_free.lock().unwrap().is_empty())
+    }
+
+    /// One complete inline flush: the incremental sync body, run either
+    /// on the background flusher thread (the normal path) or inline by
+    /// `close()` after the engine is drained and joined. Holds the flush
+    /// gate so `snapshot()`/`doctor()` never observe a half-committed
+    /// epoch.
+    pub(crate) fn sync_now(&self) -> Result<()> {
+        if self.read_only {
+            return Ok(());
+        }
+        let _gate = self.bg.gate();
         let t0 = Instant::now();
         let mut result = Ok(());
         for shard in 0..self.shards.len() {
@@ -742,6 +1063,10 @@ impl MetallManager {
     fn flush_data(&self) -> Result<(u64, u64)> {
         if let Some(bs) = &self.bs {
             let st = bs.lock().unwrap().msync(&self.segment)?;
+            // the page-granular bs flush covered every write; drain the
+            // chunk-granular map too so the watermark estimate resets
+            let cs = self.opts.chunk_size;
+            self.dirty_data.clear_to(self.segment.mapped_len().div_ceil(cs));
             return Ok((st.dirty_pages as u64, st.bytes_written));
         }
         let cs = self.opts.chunk_size;
@@ -771,14 +1096,14 @@ impl MetallManager {
         Ok((chunks.len() as u64, bytes as u64))
     }
 
-    /// Incremental management write-back: serialize + write dirty
-    /// sections with a flusher pool, commit the manifest, GC superseded
-    /// files. See the module docs and [`crate::alloc::mgmt_io`].
+    /// Incremental management write-back: snapshot every dirty section
+    /// at one **consistent cut**, write the images with a flusher pool,
+    /// commit the manifest, GC superseded files. See the module docs and
+    /// [`crate::alloc::mgmt_io`].
     fn sync_management(&self) -> Result<MgmtSyncOutcome> {
         let nb = self.num_bins();
         let ngroups = mgmt_io::num_groups(nb);
         let total = (ngroups + 3) as u64; // chunks + groups + names + cache
-        let cache_slots = self.cache.len() as u64;
         let mut st = self.mgmt.lock().unwrap();
         // Rewrite everything when there is no committed segmented state
         // (fresh store, legacy monolith) or when the loaded manifest used
@@ -788,53 +1113,49 @@ impl MetallManager {
         let first = st.legacy
             || st.sections.is_empty()
             || st.bins_per_group != mgmt_io::BINS_PER_GROUP;
-        let mut dirty_ids: Vec<SectionId> = Vec::new();
-        if first {
-            dirty_ids.push(SectionId::Chunks);
-            for g in 0..ngroups {
-                dirty_ids.push(SectionId::Bins(g as u32));
-            }
-            dirty_ids.push(SectionId::Names);
-            dirty_ids.push(SectionId::Cache);
-        } else {
-            if self.chunks.read().unwrap().is_dirty() {
-                dirty_ids.push(SectionId::Chunks);
-            }
-            for g in 0..ngroups {
-                let dirty = mgmt_io::group_bins(g, nb)
-                    .any(|b| self.shards.iter().any(|s| s.peek_bin_dirty(b)));
-                if dirty {
-                    dirty_ids.push(SectionId::Bins(g as u32));
-                }
-            }
-            if self.names.lock().unwrap().is_dirty() {
-                dirty_ids.push(SectionId::Names);
-            }
-            if self.cache.peek_dirty() {
-                dirty_ids.push(SectionId::Cache);
-            }
-        }
-        if dirty_ids.is_empty() {
-            // no-op sync: zero section bytes, no new manifest
+        if !first && !self.probe_any_section_dirty(nb, ngroups) {
+            // No-op sync: zero section bytes, no new manifest — decided
+            // by an unlocked probe. Sound for ticket coverage: every
+            // mutation preceding the covering request is visible here
+            // (the request handshake synchronizes), and a mutation
+            // racing the probe simply belongs to the next epoch.
             return Ok(MgmtSyncOutcome {
                 dirty: 0,
                 total,
                 bytes: 0,
-                cache_slots,
+                cache_slots: self.cache.len() as u64,
                 committed: false,
             });
         }
         let epoch = st.epoch + 1;
-        // Shard-parallel write-back on the shared flusher pool
-        // ([`crate::util::parallel_jobs`]; single dirty section — the
-        // common incremental shape — runs inline): each job serializes a
-        // section under that section's own locks — lock sets of distinct
-        // sections are disjoint, and a bin-group job holds one bin
-        // (across shards) at a time, so the allocator's bin → chunks
-        // nesting cannot deadlock against it.
+        // The consistent cut — the background engine's cheap quiesce
+        // point. Mutators may be running concurrently (the flusher
+        // thread's whole purpose), so per-section lock scopes are NOT
+        // enough: a fresh chunk registering between two section
+        // serializations would commit a bin that references a chunk the
+        // chunk section still calls Free. The cut serializes every dirty
+        // section *to memory* under one simultaneous lock acquisition,
+        // so the committed epoch is the exact management state at a
+        // single instant; the durable file writes happen after release.
+        let (dirty_ids, buffers, cache_slots) = self.serialize_sections_cut(first);
+        if dirty_ids.is_empty() {
+            return Ok(MgmtSyncOutcome { dirty: 0, total, bytes: 0, cache_slots, committed: false });
+        }
+        // Durable section writes on the shared flusher pool
+        // ([`crate::util::parallel_jobs`]; a single dirty section — the
+        // common incremental shape — runs inline on this thread).
         let n = dirty_ids.len();
-        let outcomes =
-            crate::util::parallel_jobs(n, |i| self.write_section(dirty_ids[i], epoch));
+        let outcomes = crate::util::parallel_jobs(n, |i| -> Result<SectionRecord> {
+            let id = dirty_ids[i];
+            let name = id.file_name(epoch);
+            mgmt_io::write_section_file(&self.dir, &name, &buffers[i])?;
+            Ok(SectionRecord {
+                id,
+                file: name,
+                len: buffers[i].len() as u64,
+                checksum: mgmt_io::fnv1a(&buffers[i]),
+            })
+        });
         let mut bytes = 0u64;
         let mut recs = Vec::with_capacity(n);
         let mut failure: Option<Error> = None;
@@ -896,63 +1217,131 @@ impl MetallManager {
         Ok(MgmtSyncOutcome { dirty: n as u64, total, bytes, cache_slots, committed: true })
     }
 
-    /// Serialize one section (clearing its dirty marks under the locks
-    /// that quiesce its mutators) and write it durably under its
-    /// epoch-unique file name.
-    fn write_section(&self, id: SectionId, epoch: u64) -> Result<SectionRecord> {
-        let buf = self.serialize_section(id);
-        let name = id.file_name(epoch);
-        mgmt_io::write_section_file(&self.dir, &name, &buf)?;
-        Ok(SectionRecord {
-            id,
-            file: name,
-            len: buf.len() as u64,
-            checksum: mgmt_io::fnv1a(&buf),
-        })
+    /// Unlocked fast probe for the no-op path: is any section dirty?
+    fn probe_any_section_dirty(&self, nb: usize, ngroups: usize) -> bool {
+        if self.chunks.read().unwrap().is_dirty() {
+            return true;
+        }
+        for g in 0..ngroups {
+            if mgmt_io::group_bins(g, nb).any(|b| self.shards.iter().any(|s| s.peek_bin_dirty(b)))
+            {
+                return true;
+            }
+        }
+        self.names.lock().unwrap().is_dirty() || self.cache.peek_dirty()
     }
 
-    fn serialize_section(&self, id: SectionId) -> Vec<u8> {
-        let mut buf = Vec::new();
-        match id {
-            SectionId::Chunks => {
-                let mut chunks = self.chunks.write().unwrap();
-                chunks.take_dirty();
-                chunks.serialize_into(&mut buf);
-            }
-            SectionId::Bins(g) => {
-                // The shard count is DRAM-only: each bin is written as
-                // the merged union of its per-shard parts, byte-identical
-                // to an unsharded bin. Exclusive on the bin in every
-                // shard (lock order shard 0..N) quiesces in-flight
-                // shared-path claims; one bin at a time keeps the lock
-                // footprint minimal.
-                for bin in mgmt_io::group_bins(g as usize, self.num_bins()) {
+    /// The background engine's **consistent cut**: serialize every dirty
+    /// section into a memory buffer under one simultaneous lock
+    /// acquisition, so the committed epoch is the management state of a
+    /// single instant even while mutators run.
+    ///
+    /// The lock set is kept minimal: the exclusive side of every bin in
+    /// a *dirty* group — ascending (bin, shard), the allocator's own
+    /// bin → chunks order, so no serialization point can deadlock
+    /// against the cut — then **always** the chunk directory's write
+    /// side (every structural mutation passes through it, so holding it
+    /// pins the chunk↔bin structure even for unlocked clean groups),
+    /// then names, with cache/remote-queue leaf locks taken inside.
+    /// Because an in-flight serialization point marks its bin *before*
+    /// registering its chunk (mark-first discipline in `allocate`), a
+    /// re-probe of the bin flags under the chunk lock sees every group
+    /// whose structure may already be in the chunk directory; when that
+    /// grows the candidate set the cut releases and retries with the
+    /// larger one (monotone, so it converges). Allocations in clean
+    /// groups, per-core cache hits, and data writes keep flowing
+    /// throughout, and the stall covers only the in-memory snapshot,
+    /// never file I/O. `rewrite_all` forces every section (fresh store,
+    /// legacy conversion, bin-group-width change).
+    ///
+    /// Returns `(dirty ids ascending, serialized images, cut-time count
+    /// of parked cache slots)`. Each bin serializes as the merged union
+    /// of its per-shard parts, byte-identical to an unsharded bin — the
+    /// shard count stays DRAM-only.
+    fn serialize_sections_cut(&self, rewrite_all: bool) -> (Vec<SectionId>, Vec<Vec<u8>>, u64) {
+        let nb = self.num_bins();
+        let ngroups = mgmt_io::num_groups(nb);
+        let group_dirty = |g: usize| {
+            mgmt_io::group_bins(g, nb).any(|b| self.shards.iter().any(|s| s.peek_bin_dirty(b)))
+        };
+        let mut want: Vec<bool> = (0..ngroups).map(|g| rewrite_all || group_dirty(g)).collect();
+        loop {
+            let bin_guards: HashMap<usize, Vec<_>> = (0..nb)
+                .filter(|&b| want[b / mgmt_io::BINS_PER_GROUP])
+                .map(|b| {
                     let guards: Vec<_> =
-                        self.shards.iter().map(|s| s.bins[bin].write().unwrap()).collect();
-                    for s in &self.shards {
-                        s.take_bin_dirty(bin);
-                    }
-                    let parts: Vec<&BinData> = guards.iter().map(|g| &**g).collect();
-                    serialize_merged_into(&parts, &mut buf);
+                        self.shards.iter().map(|s| s.bins[b].write().unwrap()).collect();
+                    (b, guards)
+                })
+                .collect();
+            let mut chunks = self.chunks.write().unwrap();
+            let mut names = self.names.lock().unwrap();
+            // Re-probe under the chunk lock: the release/acquire edge of
+            // the lock publishes the mark-first stores of every
+            // serialization point that already touched the directory.
+            let mut grew = false;
+            for g in 0..ngroups {
+                if !want[g] && group_dirty(g) {
+                    want[g] = true;
+                    grew = true;
                 }
             }
-            SectionId::Names => {
-                let mut names = self.names.lock().unwrap();
-                names.take_dirty();
-                names.serialize_into(&mut buf);
+            if grew {
+                continue; // guards drop; retry with the larger lock set
             }
-            SectionId::Cache => {
+            // -- everything below reads one instant of allocator time --
+            let mut ids: Vec<SectionId> = Vec::new();
+            let mut buffers: Vec<Vec<u8>> = Vec::new();
+            if chunks.take_dirty() || rewrite_all {
+                let mut buf = Vec::new();
+                chunks.serialize_into(&mut buf);
+                ids.push(SectionId::Chunks);
+                buffers.push(buf);
+            }
+            for g in 0..ngroups {
+                if !want[g] {
+                    continue;
+                }
+                let mut dirty = rewrite_all;
+                for bin in mgmt_io::group_bins(g, nb) {
+                    for s in &self.shards {
+                        dirty |= s.take_bin_dirty(bin);
+                    }
+                }
+                if dirty {
+                    let mut buf = Vec::new();
+                    for bin in mgmt_io::group_bins(g, nb) {
+                        let parts: Vec<&BinData> =
+                            bin_guards[&bin].iter().map(|g| &**g).collect();
+                        serialize_merged_into(&parts, &mut buf);
+                    }
+                    ids.push(SectionId::Bins(g as u32));
+                    buffers.push(buf);
+                }
+            }
+            if names.take_dirty() || rewrite_all {
+                let mut buf = Vec::new();
+                names.serialize_into(&mut buf);
+                ids.push(SectionId::Names);
+                buffers.push(buf);
+            }
+            let mut cache_slots = self.cache.len() as u64;
+            if self.cache.take_dirty() || rewrite_all {
                 // transient: free slots parked in caches + remote queues
-                // (claimed in the bitsets; recovery returns them)
-                self.cache.take_dirty();
+                // (claimed in the bitsets; recovery returns them). A
+                // cache pop racing the cut belongs to the next epoch:
+                // recovery to *this* epoch correctly rolls the slot back
+                // to free.
                 let mut entries = self.cache.snapshot_all();
+                cache_slots = entries.len() as u64;
                 for sh in &self.shards {
                     entries.extend(sh.remote_free.lock().unwrap().iter().copied());
                 }
-                buf = mgmt_io::encode_cache_section(&entries);
+                ids.push(SectionId::Cache);
+                buffers.push(mgmt_io::encode_cache_section(&entries));
             }
+            return (ids, buffers, cache_slots);
         }
-        buf
     }
 
     /// Failed sync: restore the dirty marks serialization cleared, so the
@@ -1151,10 +1540,13 @@ impl MetallManager {
 
     /// Snapshot the datastore to `dst` (reflink when the filesystem
     /// supports it, §3.4). The snapshot is marked CLEAN — it is
-    /// consistent by construction.
+    /// consistent by construction. The directory copy runs under the
+    /// flush gate: a watermark- or interval-driven background epoch can
+    /// never be caught half-committed by the copy.
     pub fn snapshot(&self, dst: impl AsRef<Path>) -> Result<CopyMethod> {
         let dst = dst.as_ref();
         self.sync()?;
+        let _gate = self.bg.gate();
         let (_files, _bytes, method) = reflink::copy_dir(&self.dir, dst)?;
         // durable CLEAN marker: the snapshot is consistent by construction
         mgmt_io::write_section_file(dst, CLEAN_MARKER, b"")?;
@@ -1162,21 +1554,23 @@ impl MetallManager {
         Ok(method)
     }
 
-    /// Sync, serialize, and mark the store cleanly closed.
-    pub fn close(self) -> Result<()> {
-        self.close_inner()
-    }
-
-    fn close_inner(&self) -> Result<()> {
+    /// Close body, shared by [`MetallManager::close`] and `Drop`: drain
+    /// and join the background engine, then the final inline sync and
+    /// the durable CLEAN marker. A dead (panicked) flusher aborts the
+    /// close *before* the marker — the store stays "unclean" and
+    /// recovery falls back to the last complete manifest instead of
+    /// trusting it.
+    pub(crate) fn close_inner(&self) -> Result<()> {
         if self.closed.swap(true, Ordering::SeqCst) || self.read_only {
             return Ok(());
         }
+        self.bg.shutdown_and_join()?;
         // The process is ending: cache warmth is moot, so drain the
         // per-core caches fully — the closed image is canonical (every
         // free slot in the bitsets, empty cache section), which also
         // keeps the on-disk bytes independent of how many syncs ran.
         self.flush_cache()?;
-        self.sync()?;
+        self.sync_now()?;
         // durable CLEAN marker (fsync file + directory: a crash right
         // after close must not lose the marker the next open requires)
         mgmt_io::write_section_file(&self.dir, CLEAN_MARKER, b"")?;
@@ -1224,7 +1618,12 @@ impl MetallManager {
     }
 
     /// Observability snapshot of the incremental sync path (cumulative
-    /// counts + the shape of the last [`Self::sync`]).
+    /// counts + the shape of the last flush). With a watermark or
+    /// interval trigger configured, "last flush" means the engine's most
+    /// recent flush — which may be a background one that ran after your
+    /// `sync()` returned; treat the per-flush gauges as monitoring data,
+    /// not as a receipt for a specific call ([`Self::bg_sync_stats`]
+    /// carries the engine-wide cumulative totals).
     pub fn sync_stats(&self) -> SyncStats {
         *self.last_sync.lock().unwrap()
     }
@@ -1257,6 +1656,11 @@ impl MetallManager {
         for c in first..=last {
             self.dirty_data.mark(c as usize);
         }
+        // watermark kick + backpressure stall (one relaxed load when no
+        // watermark is configured). Runs with no allocator locks held —
+        // every caller of this API is lock-free at this point — so a
+        // stalled writer can never block the flusher.
+        self.bg.on_data_marked(self);
     }
 
     /// Number of allocator shards (DRAM-only; see [`ManagerOptions::shards`]).
@@ -1461,6 +1865,14 @@ impl MetallManager {
             sh.mark_bin_dirty(bin as usize);
             return Ok(self.slot_offset(chunk, bin, slot));
         }
+        // Mark the bin dirty BEFORE the chunk-directory mutation
+        // (mark-first discipline): the flush's consistent cut holds the
+        // chunk lock and re-probes the bin flags under it — a
+        // serialization point that already registered its chunk must be
+        // visible as dirty there (the chunk-lock release/acquire edge
+        // publishes this relaxed store), or the cut could commit a chunk
+        // section that owns a chunk no serialized bin knows about.
+        sh.mark_bin_dirty(bin as usize);
         // Reserve the chunk id under the chunk-directory lock, but run
         // the segment extension (ftruncate + mmap syscalls) *outside* it:
         // the reserved entry is no longer Free, so no other thread can
@@ -1866,6 +2278,16 @@ impl MetallManager {
 
     /// # Safety
     /// Same as [`Self::bytes`] plus exclusivity.
+    ///
+    /// Note on background sync: the range is marked dirty when the view
+    /// is handed out (mark-before-write — see below), so a
+    /// watermark-driven background flush can consume the mark while the
+    /// caller is still storing through the slice; the stores after that
+    /// point are covered only by the *next* mark of the chunk (any later
+    /// write) or by kernel write-back. Callers that need ticket-grade
+    /// durability for bulk writes should use [`Self::write`] /
+    /// `write_bytes` (which mark after the store) or re-mark with
+    /// [`Self::mark_data_dirty`] once the writes are done.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn bytes_mut(&self, offset: u64, len: usize) -> &mut [u8] {
         // Handing out a mutable view marks the range written — the caller
@@ -1958,8 +2380,10 @@ impl MetallManager {
     /// consistency validation and audits every named object. Returns a
     /// list of findings (empty = healthy). This is the "program that
     /// assesses compatibility / integrity" the paper's §3.5 sketches as
-    /// future work.
+    /// future work. Runs under the flush gate so it never audits a
+    /// store mid-background-epoch.
     pub fn doctor(&self) -> Result<Vec<String>> {
+        let _gate = self.bg.gate();
         let mut findings = Vec::new();
         if let Err(e) = self.validate_consistency() {
             findings.push(format!("management data: {e}"));
@@ -2010,14 +2434,6 @@ impl MetallManager {
             Some(bs) => bs.lock().unwrap().msync(&self.segment),
             None => Err(Error::InvalidOp("not in bs-mmap (private) mode".into())),
         }
-    }
-}
-
-impl Drop for MetallManager {
-    fn drop(&mut self) {
-        // Best-effort clean close (explicit close() is preferred and
-        // reports errors).
-        let _ = self.close_inner();
     }
 }
 
@@ -2934,6 +3350,133 @@ mod tests {
         m.close().unwrap();
         let m = MetallManager::open(&store).unwrap();
         assert!(m.find::<u64>("c").unwrap().is_some());
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn orphan_large_reservation_past_mapped_extent_is_healed_on_open() {
+        // Simulate the reserve-then-extend crash window: a LargeHead run
+        // registered in the chunk directory (as a background epoch could
+        // commit it) whose segment extension never happened. Recovery
+        // must roll the run back to Free — no caller can hold its offset.
+        let d = TempDir::new("mgr-orphan-large");
+        let store = d.join("s");
+        let small_used;
+        {
+            let m = mk(&store);
+            m.construct::<u64>("x", 1).unwrap();
+            small_used = m.used_segment_bytes();
+            {
+                // a 64-chunk run: far past the 1 MiB (16-chunk) first file
+                let mut chunks = m.chunks.write().unwrap();
+                chunks.take_large(64);
+            }
+            m.sync().unwrap(); // the "background epoch" committing the orphan
+            std::mem::forget(m); // die before any extension
+        }
+        let m = MetallManager::open_unclean(&store).unwrap();
+        assert_eq!(
+            m.used_segment_bytes(),
+            small_used,
+            "orphan large run rolled back to Free"
+        );
+        assert!(m.doctor().unwrap().is_empty());
+        // the healed space is reusable: a real large allocation works
+        let off = m.allocate(2 * m.chunk_size()).unwrap();
+        m.write::<u64>(off, 7);
+        m.deallocate(off).unwrap();
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn drop_without_close_performs_final_durable_sync_and_joins_flusher() {
+        // The Drop-path contract (regression for the close/Drop audit):
+        // dropping a manager without calling close() must still drain and
+        // join the background flusher, run the final full sync, and leave
+        // a CLEAN store — not a refused "unclean" one.
+        let d = TempDir::new("mgr-drop");
+        let store = d.join("s");
+        {
+            let m = mk(&store);
+            let off = m.construct::<u64>("dropped", 0xD0D0).unwrap();
+            m.write::<u64>(off, 0xD0D0);
+            // start the engine and leave an un-waited ticket in flight:
+            // Drop must resolve it, not abandon it
+            let _ = m.sync_async().unwrap();
+            m.allocate(128).unwrap();
+            drop(m);
+        }
+        assert!(store.join(CLEAN_MARKER).exists(), "Drop left a durable CLEAN marker");
+        let m = MetallManager::open(&store).expect("dropped store reopens cleanly");
+        assert_eq!(m.read::<u64>(m.find::<u64>("dropped").unwrap().unwrap()), 0xD0D0);
+        assert!(m.doctor().unwrap().is_empty());
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn close_after_close_and_drop_are_idempotent() {
+        let d = TempDir::new("mgr-close2");
+        let store = d.join("s");
+        let m = mk(&store);
+        m.construct::<u64>("x", 1).unwrap();
+        m.close().unwrap(); // close(), then the wrapper Drop: second entry is a no-op
+        let m = MetallManager::open(&store).unwrap();
+        assert_eq!(m.num_named(), 1);
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn writers_during_snapshot_yield_consistent_snapshot() {
+        use std::sync::atomic::AtomicBool;
+        // The snapshot/doctor flush-gate contract: with a watermark-driven
+        // background flusher racing writer threads, snapshot() must never
+        // copy a half-committed epoch — each snapshot opens cleanly, is
+        // structurally consistent, and holds the named baseline.
+        let d = TempDir::new("mgr-snapwr");
+        let store = d.join("s");
+        let mut o = ManagerOptions::small_for_tests();
+        o.sync_watermark_bytes = o.chunk_size; // flusher runs eagerly
+        let m = MetallManager::create_with(&store, o).unwrap();
+        let base = m.construct::<u64>("base", 42).unwrap();
+        // Pre-size the working set: the writers mutate existing
+        // allocations only (data writes feeding the watermark). The §3.3
+        // contract still requires allocator quiescence for a consistent
+        // *management* image, so the churn that moves chunks between
+        // sections stays out of the race — what is under test is the
+        // flush gate: watermark-driven background epochs must never be
+        // caught half-committed by the snapshot copy.
+        let pool: Vec<u64> = (0..64).map(|_| m.allocate(512).unwrap()).collect();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for t in 0..2u64 {
+                let (m, pool, stop) = (&m, &pool, &stop);
+                s.spawn(move || {
+                    let mut i = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let off = pool[((t * 31 + i) % pool.len() as u64) as usize];
+                        m.write::<u64>(off, i);
+                        i += 1;
+                    }
+                });
+            }
+            for round in 0..3 {
+                let snap = d.join(format!("snap{round}"));
+                m.snapshot(&snap).unwrap();
+                let s = MetallManager::open(&snap).expect("snapshot opens cleanly");
+                assert_eq!(
+                    s.read::<u64>(s.find::<u64>("base").unwrap().unwrap()),
+                    42,
+                    "round {round}: snapshotted baseline intact"
+                );
+                assert!(
+                    s.doctor().unwrap().is_empty(),
+                    "round {round}: snapshot structurally consistent under writers"
+                );
+                s.close().unwrap();
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        assert_eq!(m.read::<u64>(base), 42);
         m.close().unwrap();
     }
 

@@ -74,11 +74,12 @@
 //! `alloc.shard<N>.node_local_pages` by
 //! [`crate::coordinator::metrics::record_placement`].
 //!
-//! ## Incremental, shard-parallel sync (the persist path)
+//! ## Incremental, shard-parallel, **background** sync (the persist path)
 //!
 //! `sync()` — and therefore `snapshot()` and `close()` — scales with the
-//! *delta* since the last sync, not with the store. The protocol, end to
-//! end:
+//! *delta* since the last sync, not with the store, and the flush work
+//! runs on a dedicated background flusher thread, off the mutation path
+//! entirely. The protocol, end to end:
 //!
 //! 1. **Dirty epochs (DRAM-only).** Every mutation of serialized state
 //!    raises a flag at its own serialization point: per-shard per-bin
@@ -95,10 +96,13 @@
 //!    lives in immutable per-section files — chunk directory, 8-bin bin
 //!    groups, names, and a transient cache section — indexed by a small
 //!    checksummed manifest committed via fsync'd atomic rename. A sync
-//!    re-serializes and rewrites *only dirty sections* (a flusher pool
-//!    writes them in parallel; each section's serialization takes only
-//!    that section's locks, one bin across all shards at a time) and
-//!    carries clean sections forward by reference. Recovery walks
+//!    re-serializes and rewrites *only dirty sections*: the images are
+//!    snapshotted at one **consistent cut** (every management lock held
+//!    simultaneously, in the allocator's own bin → chunks order, for the
+//!    in-memory serialization only — mutators may be running, and a
+//!    committed epoch must be the state of a single instant), then a
+//!    flusher pool writes the files in parallel off-lock, and clean
+//!    sections are carried forward by reference. Recovery walks
 //!    manifests newest-first to the last complete one; legacy monolithic
 //!    `management.bin` stores are still read and converted on the next
 //!    sync. Per-section bytes at `shards = 1` are byte-identical to the
@@ -117,28 +121,59 @@
 //!    [`MetallManager::flush_object_caches`] is the explicit full drain
 //!    (and `close()` always drains, so a closed image is canonical).
 //!
+//! 5. **Background engine** ([`bg_sync`]). A [`bg_sync::SyncEngine`]
+//!    owned by every read-write manager runs the steps above on a
+//!    dedicated flusher thread, started by three triggers: a
+//!    **dirty-byte high watermark**
+//!    ([`ManagerOptions::sync_watermark_bytes`], fed by the
+//!    chunk-granular dirty map's running byte count), an optional
+//!    **interval timer** ([`ManagerOptions::sync_interval_ms`]), and
+//!    explicit requests — `sync_async()` returns a
+//!    [`bg_sync::SyncTicket`] whose `wait()` blocks until that flush
+//!    *epoch*'s manifest is durably committed, and `sync()` is exactly
+//!    `sync_async()` + `wait()` (unchanged durability semantics,
+//!    concurrent callers coalescing onto one flush). The quiesce point
+//!    is the consistent cut of step 2 — a brief in-memory snapshot under
+//!    all management locks at once; all file I/O runs off-lock, and
+//!    per-core cache hits and data writes are never paused at all.
+//!    Writers that outrun the disk stall at a hard **backpressure
+//!    ceiling**
+//!    ([`ManagerOptions::sync_ceiling_bytes`], counted in
+//!    [`bg_sync::BgSyncStats`]); a *panicking* flusher marks the engine
+//!    dead and every later sync call (including `close()`, which then
+//!    refuses to write `CLEAN`) errors instead of silently dropping
+//!    data; `close()`/`Drop` drain outstanding epochs, join the thread,
+//!    and run the final full sync inline. `snapshot()` and `doctor()`
+//!    hold the engine's flush gate so they never observe a
+//!    half-committed background epoch.
+//!
 //! A sync where nothing changed writes zero bytes and commits no
 //! manifest. Observability: [`manager::SyncStats`]
-//! ([`MetallManager::sync_stats`]), exported as `alloc.sync.*` by
-//! [`crate::coordinator::metrics::record_sync_stats`].
+//! ([`MetallManager::sync_stats`]) as `alloc.sync.*` and
+//! [`bg_sync::BgSyncStats`] ([`MetallManager::bg_sync_stats`]) as
+//! `alloc.bgsync.*`, via [`crate::coordinator::metrics`].
 //!
 //! Follow-on (ROADMAP): an interleave policy (`MPOL_INTERLEAVE`) for
-//! read-mostly large segments shared by threads on every node.
+//! read-mostly large segments shared by threads on every node, and
+//! epoch pipelining in the background engine (overlap epoch N+1's
+//! serialization with epoch N's msync).
 
 pub mod api;
 pub mod size_class;
 pub mod mlbitset;
 pub mod chunk_dir;
 pub mod bin_dir;
+pub mod bg_sync;
 pub mod mgmt_io;
 pub mod object_cache;
 pub mod name_dir;
 pub mod manager;
 
 pub use api::{MetallHandle, SegmentAlloc};
+pub use bg_sync::{BgSyncStats, SyncTicket};
 pub use bin_dir::{ShardMap, ShardStatsSnapshot};
 pub use manager::{
-    ManagerOptions, MetallManager, Persist, PlacementReport, PlacementSource, ShardPlacement,
-    StatsSnapshot, SyncStats,
+    ManagerCore, ManagerOptions, MetallManager, Persist, PlacementReport, PlacementSource,
+    ShardPlacement, StatsSnapshot, SyncStats,
 };
 pub use object_cache::pin_thread_vcpu;

@@ -8,6 +8,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::alloc::bg_sync::BgSyncStats;
 use crate::alloc::bin_dir::ShardStatsSnapshot;
 use crate::alloc::manager::{PlacementReport, StatsSnapshot, SyncStats};
 
@@ -142,6 +143,25 @@ pub fn record_sync_stats(m: &Metrics, s: &SyncStats) {
     m.add("alloc.sync.cache_slots_preserved", s.cache_slots_preserved);
 }
 
+/// Fold a background-engine snapshot into `m` under `alloc.bgsync.*`.
+/// [`BgSyncStats`] counters are cumulative over the engine's lifetime
+/// (unlike the per-sync [`SyncStats`] gauges), so call this once per
+/// manager at report time — or feed deltas when sampling repeatedly.
+pub fn record_bg_sync_stats(m: &Metrics, s: &BgSyncStats) {
+    m.add("alloc.bgsync.flushes", s.flushes);
+    m.add("alloc.bgsync.flush_failures", s.flush_failures);
+    m.add("alloc.bgsync.watermark_hits", s.watermark_triggers);
+    m.add("alloc.bgsync.ceiling_hits", s.ceiling_triggers);
+    m.add("alloc.bgsync.interval_fires", s.interval_triggers);
+    m.add("alloc.bgsync.explicit_requests", s.explicit_requests);
+    m.add("alloc.bgsync.section_bytes", s.section_bytes_flushed);
+    m.add("alloc.bgsync.data_bytes", s.data_bytes_flushed);
+    m.add("alloc.bgsync.writer_stalls", s.writer_stalls);
+    m.add("alloc.bgsync.writer_stall_micros", s.writer_stall_micros);
+    m.add("alloc.bgsync.watermark_bytes", s.watermark_bytes);
+    m.add("alloc.bgsync.ceiling_bytes", s.ceiling_bytes);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,6 +286,35 @@ mod tests {
         assert_eq!(m.get("alloc.sync.data_chunks"), 32);
         assert_eq!(m.get("alloc.sync.flush_micros"), 1500);
         assert_eq!(m.get("alloc.sync.cache_slots_preserved"), 12);
+    }
+
+    #[test]
+    fn bg_sync_bridge_exports_engine_counters() {
+        let m = Metrics::new();
+        let s = BgSyncStats {
+            flushes: 5,
+            flush_failures: 1,
+            watermark_triggers: 3,
+            ceiling_triggers: 0,
+            interval_triggers: 1,
+            explicit_requests: 1,
+            section_bytes_flushed: 2048,
+            data_bytes_flushed: 1 << 20,
+            writer_stalls: 2,
+            writer_stall_micros: 750,
+            watermark_bytes: 4 << 20,
+            ceiling_bytes: 16 << 20,
+            engine_running: true,
+            engine_dead: false,
+        };
+        record_bg_sync_stats(&m, &s);
+        assert_eq!(m.get("alloc.bgsync.flushes"), 5);
+        assert_eq!(m.get("alloc.bgsync.flush_failures"), 1);
+        assert_eq!(m.get("alloc.bgsync.watermark_hits"), 3);
+        assert_eq!(m.get("alloc.bgsync.interval_fires"), 1);
+        assert_eq!(m.get("alloc.bgsync.writer_stalls"), 2);
+        assert_eq!(m.get("alloc.bgsync.writer_stall_micros"), 750);
+        assert_eq!(m.get("alloc.bgsync.watermark_bytes"), 4 << 20);
     }
 
     #[test]

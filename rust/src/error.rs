@@ -39,6 +39,12 @@ pub enum Error {
     #[error("invalid operation: {0}")]
     InvalidOp(String),
 
+    /// Background sync engine failures: the flusher thread died, the
+    /// engine was shut down with work outstanding, or a background flush
+    /// epoch could not be committed.
+    #[error("background sync error: {0}")]
+    BgSync(String),
+
     /// PJRT / XLA runtime errors.
     #[error("runtime error: {0}")]
     Runtime(String),

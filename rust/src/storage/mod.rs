@@ -17,8 +17,15 @@
 //!
 //! ## How the sync protocol uses this layer
 //!
-//! [`crate::alloc::MetallManager::sync`] persists in two phases, both of
-//! which resolve to primitives here:
+//! [`crate::alloc::ManagerCore::sync`] persists in two phases, both of
+//! which resolve to primitives here — and since the background engine
+//! ([`crate::alloc::bg_sync`]) both phases run on a dedicated flusher
+//! thread, off the mutation path: `sync()` is `sync_async()` + an epoch
+//! ticket wait, a dirty-byte watermark (or interval timer) flushes with
+//! no caller at all, and writers that outrun the device stall at a hard
+//! backpressure ceiling. The primitives below are therefore routinely
+//! invoked from the `metall-bgsync` thread while application threads
+//! keep allocating and writing:
 //!
 //! **Application data, two flush paths.** In the default *shared* mode
 //! (`MAP_SHARED`) the kernel owns write-back and sync's job is to force
@@ -48,6 +55,13 @@
 //! the last complete sync; and the transient cache section closes the
 //! gap between them (free slots parked in DRAM caches at sync time are
 //! recorded, and recovery returns them, so no slot leaks across a kill).
+//! Background flushing changes none of this: a kill-9 mid-background-
+//! epoch tears at most the files that epoch was writing, and recovery
+//! walks back to the last complete manifest exactly as for a torn
+//! foreground sync. Shutdown is explicit — `close()`/`Drop` drain the
+//! engine with a final full sync and join the flusher before the
+//! `CLEAN` marker is written, and a flusher that died refuses the
+//! marker so the store is never falsely advertised as consistent.
 
 pub mod mmap;
 pub mod segment;

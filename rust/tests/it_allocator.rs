@@ -219,6 +219,10 @@ fn property_trace_against_oracle() {
         }
     };
 
+    // in-flight background epoch ticket: requested at one random trace
+    // point, waited on at a later one — the trace keeps allocating,
+    // freeing and reallocating while the flusher serializes
+    let mut pending_ticket = None;
     for step in 0..STEPS {
         // periodic incremental syncs at arbitrary trace points: the
         // cache-preserving sync must never disturb allocator behaviour
@@ -227,6 +231,14 @@ fn property_trace_against_oracle() {
         // a mid-trace-consistency check
         if step % 1711 == 1000 {
             m.sync().unwrap();
+        }
+        // random sync_async/wait points: request an epoch here, collect
+        // its durability result hundreds of mutations later
+        if step % 977 == 300 {
+            if let Some(t) = pending_ticket.take() {
+                t.wait().unwrap();
+            }
+            pending_ticket = Some(m.sync_async().unwrap());
         }
         match rng.gen_range(100) {
             // allocate
@@ -282,6 +294,11 @@ fn property_trace_against_oracle() {
                 order[i] = new_off;
             }
         }
+    }
+
+    // resolve the last in-flight background epoch before closing
+    if let Some(t) = pending_ticket.take() {
+        t.wait().unwrap();
     }
 
     // offsets and contents are stable across a close/open cycle

@@ -54,16 +54,27 @@ fn crash_child_entry() {
     // bind + owner-first-touch placement path before the kill;
     // "crash-sync" runs an incremental sync() every few ops so a random
     // kill point lands inside (or right around) a segmented sync —
-    // section writes, manifest commit, GC — with high probability
+    // section writes, manifest commit, GC — with high probability;
+    // "crash-bgsync" never calls sync() in the churn loop at all: a tiny
+    // dirty-byte watermark (+ interval timer) keeps the *background*
+    // flusher committing epochs under continuous ingest, so the kill
+    // lands around flushes nobody on the mutation path asked for
     let numa = mode == "crash-numa2";
     let sharded = mode.ends_with("shards4") || numa;
     let syncy = mode == "crash-sync";
+    let bgsync = mode == "crash-bgsync";
     let mut opts = ManagerOptions::small_for_tests();
     if sharded {
         opts.shards = 4;
     }
     if numa {
         opts.topology = Some(Topology::fake(&[2, 2]));
+    }
+    if bgsync {
+        // one dirty 64 KiB chunk crosses the watermark; the timer mops
+        // up management-only dirt between data bursts
+        opts.sync_watermark_bytes = opts.chunk_size;
+        opts.sync_interval_ms = 5;
     }
     let m = MetallManager::create_with(&store, opts).unwrap();
     let v = PVec::<u64>::create(&m).unwrap();
@@ -76,13 +87,15 @@ fn crash_child_entry() {
     }
     m.snapshot(dir.join("snap")).unwrap();
 
-    // "crash-sync": a timer thread delivers SIGKILL a few ms from now, so
-    // the signal lands wherever the churn loop happens to be — with a
-    // sync every 3 ops (each doing section writes, fsyncs, a manifest
-    // rename and GC) that is usually *inside* the segmented write path,
-    // not at an op boundary. Armed only after the snapshot completed:
-    // the snapshot is the recovery baseline the parent asserts on.
-    if syncy {
+    // "crash-sync"/"crash-bgsync": a timer thread delivers SIGKILL a few
+    // ms from now, so the signal lands wherever the churn loop happens
+    // to be — for "crash-sync" with a sync every 3 ops (each doing
+    // section writes, fsyncs, a manifest rename and GC) that is usually
+    // *inside* the segmented write path; for "crash-bgsync" it races the
+    // watermark-driven background flusher instead. Armed only after the
+    // snapshot completed: the snapshot is the recovery baseline the
+    // parent asserts on.
+    if syncy || bgsync {
         let delay = std::time::Duration::from_millis(4 + kill_at % 60);
         std::thread::spawn(move || {
             std::thread::sleep(delay);
@@ -98,7 +111,7 @@ fn crash_child_entry() {
         if sharded {
             pin_thread_vcpu(Some((op % 4) as usize));
         }
-        if !syncy && op == kill_at {
+        if !syncy && !bgsync && op == kill_at {
             match mode.as_str() {
                 "clean" => {
                     m.construct::<u64>("post_ops", op).unwrap();
@@ -359,6 +372,77 @@ fn kill9_mid_incremental_sync_recovers_from_last_complete_manifest() {
         m.close().unwrap();
         assert_snapshot_intact(&d.join("snap"));
     }
+}
+
+/// Kill-9 under **watermark-driven background sync**: the child never
+/// calls `sync()` in its churn loop — a tiny dirty-byte watermark plus an
+/// interval timer keep the background flusher committing epochs under
+/// continuous ingest, and a timer SIGKILL lands around flushes no
+/// mutation-path caller requested. The recovery contract is the same as
+/// for a torn foreground sync (the background engine writes through the
+/// identical section/manifest protocol, so the torn-sync matrix above
+/// covers its file surgeries too):
+///
+/// - plain `open()` refuses the dirty store,
+/// - background flushes really committed manifests before the kill,
+/// - `open_unclean()` recovers the last complete manifest, doctor-clean
+///   and fully usable, and re-sealing works,
+/// - the pre-churn snapshot is intact.
+#[test]
+fn kill9_mid_background_flush_recovers_from_last_complete_manifest() {
+    use std::os::unix::process::ExitStatusExt;
+    let mut rng = Xoshiro256ss::new(0xB65C);
+    // the snapshot's own sync commits epoch 1 in the store; only epochs
+    // past it prove the *background* triggers actually flushed
+    let mut saw_background_epoch = false;
+    for round in 0..3 {
+        let d = TempDir::new(&format!("crash-bgsync-{round}"));
+        let kill_at = 3 + rng.gen_range(200);
+        let status = spawn_child("crash-bgsync", d.path(), kill_at);
+        assert_eq!(
+            status.signal(),
+            Some(libc::SIGKILL),
+            "round {round}: child must die by SIGKILL, got {status:?}"
+        );
+        let store = d.join("s");
+        assert!(!store.join("CLEAN").exists(), "round {round}");
+        assert!(MetallManager::open(&store).is_err(), "round {round}: dirty store refused");
+        // the snapshot's sync committed epoch 1; the watermark flusher
+        // kept committing after it without any sync() caller
+        let epochs = metall_rs::alloc::mgmt_io::list_manifest_epochs(&store).unwrap();
+        assert!(!epochs.is_empty(), "round {round}: at least one epoch before the kill");
+        if epochs.iter().any(|&e| e > 1) {
+            saw_background_epoch = true;
+        }
+        {
+            let m = MetallManager::open_unclean(&store)
+                .expect("open_unclean recovers from the last complete background epoch");
+            assert!(
+                m.doctor().unwrap().is_empty(),
+                "round {round}: recovered store is structurally consistent"
+            );
+            let off = m.allocate(64).unwrap();
+            m.write::<u64>(off, 0xB6);
+            assert_eq!(m.read::<u64>(off), 0xB6);
+            m.deallocate(off).unwrap();
+            m.construct::<u64>("post_bg_recovery", round as u64).unwrap();
+            m.close().unwrap();
+        }
+        let m = MetallManager::open(&store).expect("re-sealed store opens");
+        assert_eq!(
+            m.read::<u64>(m.find::<u64>("post_bg_recovery").unwrap().unwrap()),
+            round as u64
+        );
+        m.close().unwrap();
+        assert_snapshot_intact(&d.join("snap"));
+    }
+    // at least one of the three rounds must have lived long enough for a
+    // watermark/interval-driven epoch to commit — otherwise this test
+    // silently degrades into a plain recovery test
+    assert!(
+        saw_background_epoch,
+        "no round committed a background epoch (epoch > 1) before its kill"
+    );
 }
 
 /// Deterministic torn-sync matrix: truncate (and separately delete) each
