@@ -151,6 +151,53 @@ impl SegmentAlloc for crate::alloc::MetallManager {
     }
 }
 
+// A reader attach is the read half of the same interface: containers
+// opened over a `ReaderManager` traverse the pinned epoch's bytes with
+// the exact code paths they use against the owning manager. The two
+// mutating methods refuse — an attach never writes the store.
+impl SegmentAlloc for crate::alloc::ReaderManager {
+    fn allocate(&self, _size: usize) -> Result<u64> {
+        Err(Error::InvalidOp(
+            "reader attach is read-only: allocate is not available on a pinned epoch".into(),
+        ))
+    }
+
+    fn deallocate(&self, _offset: u64) -> Result<()> {
+        Err(Error::InvalidOp(
+            "reader attach is read-only: deallocate is not available on a pinned epoch".into(),
+        ))
+    }
+
+    fn base(&self) -> *mut u8 {
+        self.segment_base()
+    }
+
+    fn mapped_len(&self) -> usize {
+        self.segment_mapped_len()
+    }
+
+    // The trait's default write accessors store through `base()`, which
+    // here is a PROT_READ mapping — that would SIGSEGV. Override them to
+    // fail loudly with the reason instead of dying on a wild fault.
+
+    fn write_pod<T: Persist>(&self, _offset: u64, _value: T) {
+        panic!("reader attach is read-only: write_pod on a pinned epoch");
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn bytes_at_mut(&self, _offset: u64, _len: usize) -> &mut [u8] {
+        panic!("reader attach is read-only: bytes_at_mut on a pinned epoch");
+    }
+
+    fn write_bytes(&self, _offset: u64, _data: &[u8]) {
+        panic!("reader attach is read-only: write_bytes on a pinned epoch");
+    }
+
+    fn copy_within(&self, _src: u64, _dst: u64, _len: usize) {
+        panic!("reader attach is read-only: copy_within on a pinned epoch");
+    }
+}
+
 /// Cloneable, `Send + Sync` handle to a shared [`MetallManager`] — the
 /// ergonomic face of the thread-scalable allocation path. Each worker
 /// thread clones a handle and allocates independently; the manager's
@@ -274,6 +321,7 @@ const _: () = {
     const fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<MetallHandle>();
     assert_send_sync::<MetallManager>();
+    assert_send_sync::<crate::alloc::ReaderManager>();
 };
 
 /// Disambiguation shim: calls the inherent methods (which carry the

@@ -106,6 +106,7 @@ use crate::alloc::object_cache::current_vcpu;
 use crate::alloc::chunk_dir::{ChunkDirectory, ChunkKind};
 use crate::alloc::name_dir::{type_fingerprint, NameDirectory, NamedEntry};
 use crate::alloc::object_cache::{ObjectCache, REFILL_BATCH};
+use crate::alloc::readers::{self, ReaderLease};
 use crate::alloc::size_class::{
     bin_of, is_small, large_chunks, num_bins, size_of_bin, slots_per_chunk,
 };
@@ -120,6 +121,9 @@ use crate::storage::segment::{SegmentOptions, SegmentStorage};
 const META_MAGIC: &[u8; 8] = b"METALLV1";
 const MGMT_MAGIC: &[u8; 8] = b"METALLMG";
 const CLEAN_MARKER: &str = "CLEAN";
+/// Inter-process store lock file (held via `flock` for the lifetime of
+/// a manager: exclusive by writers, shared by read-only opens).
+const STORE_LOCK: &str = "LOCK";
 
 /// Geometry and behaviour options. Geometry (chunk/file size) is fixed at
 /// create time and read back from `meta.bin` on open.
@@ -602,6 +606,11 @@ pub struct ManagerCore {
     /// Background sync engine (flusher thread, epoch tickets,
     /// watermark/interval triggers, backpressure).
     bg: SyncEngine,
+    /// Inter-process store lock: an `flock` on `<dir>/LOCK`, exclusive
+    /// for read-write managers, shared for read-only opens. Held for the
+    /// manager's lifetime — the kernel releases it when the fd closes
+    /// (drop or death), so a crashed owner never wedges the store.
+    _store_lock: std::fs::File,
 }
 
 /// The Metall manager: the application-facing owner of one datastore.
@@ -703,14 +712,377 @@ impl Drop for MetallManager {
     }
 }
 
+/// Observability counters for one reader attach (exported as
+/// `alloc.attach.*` by
+/// [`crate::coordinator::metrics::record_attach_stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AttachStats {
+    /// Wall time of the initial attach (manifest load + lease +
+    /// segment map + overlay), microseconds.
+    pub attach_micros: u64,
+    /// Successful `refresh()` re-pins since attach.
+    pub refreshes: u64,
+    /// Chunks currently resolved to epoch-side copies.
+    pub chunks_overlaid: u64,
+    /// Side copies this reader had to materialize itself (attach-time
+    /// seeding; cumulative across refreshes).
+    pub side_copies_created: u64,
+    /// Side copies reused from the flusher or an earlier reader
+    /// (cumulative across refreshes).
+    pub side_copies_reused: u64,
+    /// Committed epochs on disk ahead of the pin, measured at the last
+    /// attach/refresh decision (acceptance target: < 1 at attach).
+    pub staleness_epochs: u64,
+}
+
+/// A live read-only attach to a store **another process owns**: the
+/// reader-epoch half of the multi-process serving tier.
+///
+/// Unlike [`MetallManager::open_read_only`] — which demands the `CLEAN`
+/// marker and therefore a closed store — a `ReaderManager` attaches
+/// while the owner keeps mutating and background-flushing. It pins the
+/// **last committed manifest epoch**: the names/chunk-directory view is
+/// exactly that epoch's (management-consistent by construction), and
+/// every live chunk's data is resolved through an immutable epoch-side
+/// copy ([`crate::alloc::readers`]) so the owner's in-place msyncs and
+/// shared-page-cache writes never show through. The pin is registered
+/// in the lease registry, which the owner's GC honors; a reader that
+/// dies (kill-9 included) is reaped by the owner's next flush scan.
+///
+/// The attach performs **no on-disk mutation of the store proper** —
+/// no CLEAN unlink, no `free_range`, no legacy-monolith conversion, no
+/// store lock; it only writes its own lease and (at seeding time)
+/// epoch-side copies. Staleness at attach is bounded by one epoch: the
+/// pinned manifest is the newest committed, and the seeded data bytes
+/// lie between that commit and the next.
+///
+/// `ReaderManager` implements [`crate::alloc::SegmentAlloc`] (the
+/// mutating half returns [`Error::InvalidOp`]), so the persistent
+/// containers' read paths — `PVec`, `BankedAdjacency`, the GBTL
+/// algorithms — run over it unchanged.
+pub struct ReaderManager {
+    dir: PathBuf,
+    chunk_size: usize,
+    file_size: usize,
+    segment: SegmentStorage,
+    chunks: ChunkDirectory,
+    names: NameDirectory,
+    epoch: u64,
+    lease: ReaderLease,
+    stats: AttachStats,
+}
+
+impl ReaderManager {
+    /// Attach to the last committed epoch of the store at `dir`. Works
+    /// on a live, owner-open store (no `CLEAN` marker required) and on
+    /// a closed one alike; fails if the store has never committed a
+    /// segmented-management epoch (a legacy or never-synced store must
+    /// be synced by its writer once first).
+    pub fn attach(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let t0 = Instant::now();
+        let (chunk_size, file_size) = ManagerCore::read_meta(&dir)?;
+        let nb = num_bins(chunk_size);
+        // Lease first, at PIN_ALL: from this instant the owner's GC
+        // deletes nothing epoch-like, closing the window between
+        // choosing a manifest and recording the choice.
+        let mut lease = ReaderLease::acquire(&dir)?;
+        let (lm, epoch) = Self::load_pinned(&dir, nb)?;
+        lease.pin(epoch)?;
+        let opts = ManagerOptions { chunk_size, file_size, ..Default::default() };
+        let segment = SegmentStorage::open(dir.join("segment"), opts.segment_options(true))?;
+        let mut stats = AttachStats::default();
+        Self::overlay_pinned(&dir, &segment, &lm.chunks, chunk_size, epoch, &mut stats)?;
+        let mut r = Self {
+            dir,
+            chunk_size,
+            file_size,
+            segment,
+            chunks: lm.chunks,
+            names: lm.names,
+            epoch,
+            lease,
+            stats,
+        };
+        r.validate()?;
+        r.stats.staleness_epochs = r.staleness_epochs()?;
+        r.stats.attach_micros = t0.elapsed().as_micros() as u64;
+        Ok(r)
+    }
+
+    /// Newest complete (all sections verify) manifest, parsed.
+    fn load_pinned(dir: &Path, nb: usize) -> Result<(LoadedManagement, u64)> {
+        let epochs = mgmt_io::list_manifest_epochs(dir)?;
+        for &e in epochs.iter().rev() {
+            let Some(man) = mgmt_io::read_manifest(dir, e) else { continue };
+            if man.num_bins as usize != nb {
+                continue;
+            }
+            let Some(secs) = mgmt_io::load_sections(dir, &man) else { continue };
+            if let Some(mut lm) = ManagerCore::parse_sections(nb, &man, &secs) {
+                lm.epoch = man.epoch;
+                return Ok((lm, man.epoch));
+            }
+        }
+        Err(Error::Datastore(format!(
+            "no committed epoch to attach in {dir:?}: readers pin manifest epochs, \
+             so a never-synced (or legacy-monolith) store must be synced by its \
+             writer once before a reader can attach"
+        )))
+    }
+
+    /// Resolve every live chunk of the pinned directory to an
+    /// epoch-side copy and map it over the read-only segment. Copies
+    /// the flusher (or an earlier reader) already produced are reused;
+    /// missing ones are seeded from the live bytes and tagged with the
+    /// pin.
+    fn overlay_pinned(
+        dir: &Path,
+        segment: &SegmentStorage,
+        chunks: &ChunkDirectory,
+        chunk_size: usize,
+        pin: u64,
+        stats: &mut AttachStats,
+    ) -> Result<()> {
+        let sides = readers::index_sides(&readers::list_side_copies(dir));
+        let mapped = segment.mapped_len();
+        let mut overlaid = 0u64;
+        for (id, kind) in chunks.iter() {
+            if kind == ChunkKind::Free {
+                continue;
+            }
+            let at = id as usize * chunk_size;
+            if at + chunk_size > mapped {
+                // a reservation committed past the mapped extent (the
+                // owner heals these on its next open); nothing to read
+                continue;
+            }
+            let side_epoch = match readers::resolve_side(&sides, id, pin) {
+                Some(e) => {
+                    stats.side_copies_reused += 1;
+                    e
+                }
+                None => {
+                    readers::write_side_copy(dir, segment, id, chunk_size, pin, false)?;
+                    stats.side_copies_created += 1;
+                    pin
+                }
+            };
+            let path = readers::side_copy_path(dir, id, side_epoch);
+            let f = std::fs::OpenOptions::new()
+                .read(true)
+                .open(&path)
+                .map_err(|e| Error::io(&path, e))?;
+            segment.overlay_readonly(at, &f, chunk_size)?;
+            overlaid += 1;
+        }
+        stats.chunks_overlaid = overlaid;
+        Ok(())
+    }
+
+    /// Re-pin to a newer committed epoch if one exists. Returns whether
+    /// the view advanced. The lease sits at `PIN_ALL` for the duration
+    /// of the transition, so GC can never collect either the old or the
+    /// new epoch mid-move; on any failure the old pin is restored and
+    /// the old view remains valid.
+    pub fn refresh(&mut self) -> Result<bool> {
+        let newest = mgmt_io::list_manifest_epochs(&self.dir)?.last().copied().unwrap_or(0);
+        if newest <= self.epoch {
+            self.stats.staleness_epochs = 0;
+            return Ok(false);
+        }
+        self.lease.pin(readers::PIN_ALL)?;
+        let nb = num_bins(self.chunk_size);
+        let moved = (|| -> Result<Option<(LoadedManagement, u64, SegmentStorage)>> {
+            let (lm, epoch) = Self::load_pinned(&self.dir, nb)?;
+            if epoch <= self.epoch {
+                // the newer manifest was torn/incomplete — stay put
+                return Ok(None);
+            }
+            // Fresh read-only mapping (covers backing files added since
+            // the last attach), then overlay the new pin on it. The old
+            // mapping stays untouched until this succeeds.
+            let opts = ManagerOptions {
+                chunk_size: self.chunk_size,
+                file_size: self.file_size,
+                ..Default::default()
+            };
+            let segment =
+                SegmentStorage::open(self.dir.join("segment"), opts.segment_options(true))?;
+            let mut stats = self.stats;
+            Self::overlay_pinned(
+                &self.dir,
+                &segment,
+                &lm.chunks,
+                self.chunk_size,
+                epoch,
+                &mut stats,
+            )?;
+            self.stats = stats;
+            Ok(Some((lm, epoch, segment)))
+        })();
+        match moved {
+            Ok(Some((lm, epoch, segment))) => {
+                self.lease.pin(epoch)?;
+                self.segment = segment;
+                self.chunks = lm.chunks;
+                self.names = lm.names;
+                self.epoch = epoch;
+                self.stats.refreshes += 1;
+                self.stats.staleness_epochs = self.staleness_epochs()?;
+                self.validate()?;
+                Ok(true)
+            }
+            Ok(None) => {
+                self.lease.pin(self.epoch)?;
+                Ok(false)
+            }
+            Err(e) => {
+                let _ = self.lease.pin(self.epoch);
+                Err(e)
+            }
+        }
+    }
+
+    /// Committed epochs on disk ahead of the pin right now.
+    pub fn staleness_epochs(&self) -> Result<u64> {
+        let newest = mgmt_io::list_manifest_epochs(&self.dir)?.last().copied().unwrap_or(0);
+        Ok(newest.saturating_sub(self.epoch))
+    }
+
+    /// Light integrity check of the pinned view: every named object
+    /// must lie inside the mapped extent on non-free chunks.
+    fn validate(&self) -> Result<()> {
+        let mapped = self.segment.mapped_len() as u64;
+        let cs = self.chunk_size as u64;
+        for (name, e) in self.names.iter() {
+            if e.offset + e.size > mapped {
+                return Err(Error::Datastore(format!(
+                    "pinned epoch {}: named object {name:?} exceeds mapped segment",
+                    self.epoch
+                )));
+            }
+            let chunk = (e.offset / cs) as u32;
+            if self.chunks.kind(chunk) == ChunkKind::Free {
+                return Err(Error::Datastore(format!(
+                    "pinned epoch {}: named object {name:?} sits on a free chunk",
+                    self.epoch
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    // -------------------------------------------------- read-side API --
+
+    /// The pinned epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    pub fn attach_stats(&self) -> AttachStats {
+        self.stats
+    }
+
+    // plumbing for the `SegmentAlloc` impl (crate::alloc::api)
+    pub(crate) fn segment_base(&self) -> *mut u8 {
+        self.segment.base()
+    }
+
+    pub(crate) fn segment_mapped_len(&self) -> usize {
+        self.segment.mapped_len()
+    }
+
+    /// Read a POD value at `offset` (the reader-side mirror of
+    /// [`ManagerCore::read`]).
+    pub fn read<T: Persist>(&self, offset: u64) -> T {
+        debug_assert!(offset as usize + std::mem::size_of::<T>() <= self.segment.mapped_len());
+        unsafe {
+            std::ptr::read_unaligned(self.segment.base().add(offset as usize) as *const T)
+        }
+    }
+
+    /// Find a named object in the pinned epoch (same type-fingerprint
+    /// contract as [`ManagerCore::find`]).
+    pub fn find<T: Persist>(&self, name: &str) -> Result<Option<u64>> {
+        match self.names.get(name) {
+            None => Ok(None),
+            Some(e) => {
+                if e.type_fp != type_fingerprint::<T>() {
+                    return Err(Error::Name(format!(
+                        "find: type mismatch for {name:?} (stored fingerprint differs)"
+                    )));
+                }
+                Ok(Some(e.offset))
+            }
+        }
+    }
+
+    pub fn num_named(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn named_list(&self) -> Vec<(String, u64, u64)> {
+        self.names.iter().map(|(n, e)| (n.to_string(), e.offset, e.size)).collect()
+    }
+
+    /// Detach: release the lease (unpinning the epoch for the owner's
+    /// GC) and unmap. Dropping does the same; this is the explicit,
+    /// error-reporting spelling for symmetry with `close()`.
+    pub fn detach(self) -> Result<()> {
+        Ok(())
+    }
+}
+
 impl ManagerCore {
     // ------------------------------------------------- core lifecycle --
+
+    /// Take the inter-process store lock: exclusive for writers (a
+    /// second `create`/`open`/`open_unclean` of a live store fails
+    /// loudly instead of silently corrupting it), shared for read-only
+    /// opens (they exclude writers but not each other, §3.6). The
+    /// returned fd must be kept alive as long as the manager; dropping
+    /// it — or the process dying — releases the lock. Live-attach
+    /// readers ([`ReaderManager`]) deliberately do **not** take this
+    /// lock: their lease is their registration, and the epoch protocol
+    /// is what isolates them from the owner.
+    fn lock_store(dir: &Path, exclusive: bool) -> Result<std::fs::File> {
+        let path = dir.join(STORE_LOCK);
+        let file = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(&path)
+            .map_err(|e| Error::io(&path, e))?;
+        if !readers::flock_try(&file, exclusive)? {
+            return Err(Error::Datastore(format!(
+                "datastore {dir:?} is locked by another process (the store lock is held \
+                 {}; close the other manager first)",
+                if exclusive { "and this open needs it exclusively" } else { "exclusively" }
+            )));
+        }
+        Ok(file)
+    }
 
     fn create_core(dir: PathBuf, opts: ManagerOptions) -> Result<Self> {
         if dir.join("meta.bin").exists() {
             return Err(Error::Datastore(format!("datastore already exists at {dir:?}")));
         }
         std::fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
+        // single-writer exclusivity from the first byte: two concurrent
+        // creates of the same directory race on this lock, not on files
+        let store_lock = Self::lock_store(&dir, true)?;
+        if dir.join("meta.bin").exists() {
+            return Err(Error::Datastore(format!("datastore already exists at {dir:?}")));
+        }
         if !opts.chunk_size.is_power_of_two() || opts.chunk_size < 4096 {
             return Err(Error::Config("chunk_size must be a power of two ≥ 4096".into()));
         }
@@ -744,6 +1116,7 @@ impl ManagerCore {
             closed: AtomicBool::new(false),
             opts,
             dir,
+            _store_lock: store_lock,
         };
         mgr.write_meta()?;
         // store starts dirty; becomes clean on close()
@@ -784,6 +1157,10 @@ impl ManagerCore {
         let (chunk_size, file_size) = Self::read_meta(&dir)?;
         opts.chunk_size = chunk_size;
         opts.file_size = file_size;
+        // lock before the CLEAN check: "someone else holds the store"
+        // is the actionable diagnosis when both would fire (a live owner
+        // implies no CLEAN marker)
+        let store_lock = Self::lock_store(&dir, !read_only)?;
         let clean = dir.join(CLEAN_MARKER).exists();
         if !clean && !allow_unclean {
             return Err(Error::Datastore(format!(
@@ -886,6 +1263,7 @@ impl ManagerCore {
             closed: AtomicBool::new(false),
             opts,
             dir,
+            _store_lock: store_lock,
         };
         // The recovery frees above diverged the DRAM state from the
         // on-disk sections: re-mark so the next sync persists them. (The
@@ -1086,6 +1464,23 @@ impl ManagerCore {
             }
         }
         let bytes: usize = ranges.iter().map(|r| r.len()).sum();
+        // Epoch-side preservation for attached readers: before the
+        // in-place msync below may tear a pinned epoch's view, freeze
+        // each dirty chunk as a side copy tagged with the epoch this
+        // flush will commit (reflink where the fs supports it; see
+        // `alloc/readers`). The scan also reaps leases of dead readers.
+        let pins = readers::scan_pins(&self.dir);
+        if pins.any_live() {
+            let tag = self.mgmt.lock().unwrap().epoch + 1;
+            if let Err(e) =
+                readers::preserve_chunks(&self.dir, &self.segment, &chunks, cs, tag)
+            {
+                for &c in &chunks {
+                    self.dirty_data.mark(c);
+                }
+                return Err(e);
+            }
+        }
         if let Err(e) = self.segment.sync_ranges(&ranges, self.opts.parallel_sync) {
             // nothing was committed; re-mark so the next sync retries
             for &c in &chunks {

@@ -315,19 +315,52 @@ pub fn load_sections(dir: &Path, m: &Manifest) -> Option<HashMap<SectionId, Vec<
 /// the fallback chain stays intact), plus the legacy monolithic
 /// `management.bin` the segmented format supersedes. Errors are swallowed
 /// — orphans are retried on the next sync and are ignored by recovery.
+///
+/// Deletion is gated on the reader pin registry
+/// ([`crate::alloc::readers`]): the epoch a live lease pins — and every
+/// section file that epoch's manifest references — survives, however
+/// many commits supersede it. Stale leases (dead readers) are reaped by
+/// the same scan. If any live lease is mid-transition or unreadable, or
+/// a pinned manifest cannot be read back, **nothing** epoch-like is
+/// deleted this round: deletion is the unrecoverable direction, and the
+/// next commit retries.
 pub fn gc(dir: &Path, keep: &[&Manifest]) {
     let mut referenced: HashSet<String> = HashSet::new();
+    let mut protected_epochs: Vec<u64> = Vec::new();
     for m in keep {
         referenced.insert(manifest_file_name(m.epoch));
         for r in &m.sections {
             referenced.insert(r.file.clone());
+        }
+        protected_epochs.push(m.epoch);
+    }
+    let pins = crate::alloc::readers::scan_pins(dir);
+    let mut conservative = pins.pin_all;
+    for &e in &pins.epochs {
+        if !protected_epochs.contains(&e) {
+            protected_epochs.push(e);
+        }
+        if referenced.contains(&manifest_file_name(e)) {
+            continue;
+        }
+        match read_manifest(dir, e) {
+            Some(m) => {
+                referenced.insert(manifest_file_name(e));
+                for r in &m.sections {
+                    referenced.insert(r.file.clone());
+                }
+            }
+            // the pinned manifest should exist (it was protected when
+            // pinned); if it cannot be read, delete nothing
+            None => conservative = true,
         }
     }
     let Ok(rd) = fs::read_dir(dir) else { return };
     for entry in rd.flatten() {
         let name = entry.file_name();
         let Some(name) = name.to_str() else { continue };
-        let stale_mgmt = (name.starts_with("mgmt-") || name.starts_with("manifest-"))
+        let stale_mgmt = !conservative
+            && (name.starts_with("mgmt-") || name.starts_with("manifest-"))
             && name.ends_with(".bin")
             && !referenced.contains(name);
         let legacy = name == "management.bin" || name == "management.bin.tmp";
@@ -338,6 +371,10 @@ pub fn gc(dir: &Path, keep: &[&Manifest]) {
         if stale_mgmt || legacy || orphan_tmp {
             let _ = fs::remove_file(entry.path());
         }
+    }
+    // the epoch-side chunk copies follow the same protection set
+    if !conservative {
+        crate::alloc::readers::gc_side_copies(dir, &protected_epochs);
     }
 }
 

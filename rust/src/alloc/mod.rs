@@ -153,6 +153,59 @@
 //! [`bg_sync::BgSyncStats`] ([`MetallManager::bg_sync_stats`]) as
 //! `alloc.bgsync.*`, via [`crate::coordinator::metrics`].
 //!
+//! ## Multi-process attach: reader-epoch snapshot isolation ([`readers`])
+//!
+//! Every committed manifest epoch is a *consistent, immutable* image of
+//! the management state, which makes it a natural snapshot boundary for
+//! other processes. A [`ReaderManager`] attaches to a **live** store —
+//! the owner keeps mutating and background-flushing — by pinning the
+//! last committed epoch:
+//!
+//! - **Single-writer exclusivity.** Read-write managers hold an
+//!   exclusive `flock` on `<store>/LOCK` for their whole lifetime
+//!   (kernel-released on any death, so no stale-lock recovery is ever
+//!   needed); a second RW open fails fast with a clear
+//!   [`crate::error::Error::Datastore`] instead of corrupting the store.
+//!   The legacy CLEAN-gated [`MetallManager::open_read_only`] takes the
+//!   same lock shared. A live attach takes **no** store lock — its
+//!   registration is the lease below.
+//!
+//! - **Lease-and-pin registry** (`<store>/readers/`). Each attach
+//!   writes a checksummed lease file recording its pinned epoch and
+//!   holds an exclusive `flock` on it for the attach's lifetime.
+//!   Liveness is probed by try-locking: acquirable ⇒ the holder is gone
+//!   (kill-9 included) and the lease is reaped; blocked ⇒ live. The
+//!   owner's manifest GC ([`mgmt_io::gc`]) consults the registry and
+//!   keeps every pinned epoch's manifest *and* the section files it
+//!   references; a torn or unreadable lease conservatively pins
+//!   everything. During attach and refresh transitions the lease sits
+//!   at the `PIN_ALL` sentinel so no epoch can be collected between
+//!   choosing a manifest and recording the choice.
+//!
+//! - **Epoch-side data copies** (`<store>/epoch-side/`). `MAP_SHARED`
+//!   page-cache coherence means a reader mapping the live chunk files
+//!   would see the owner's stores *immediately* — msync timing cannot
+//!   isolate it. Stable views therefore come from **different inodes**:
+//!   before the flusher's in-place msync may tear a pinned view, it
+//!   reflinks the dirty chunks into per-`(chunk, epoch)` side files
+//!   ([`crate::storage::reflink::clone_file_range`]; byte-copy fallback
+//!   on ext4), and an attach seeds side copies for the chunks the
+//!   flusher hasn't covered. The reader maps side files over its
+//!   read-only segment reservation ([`crate::storage::segment::SegmentStorage::overlay_readonly`]),
+//!   so every pinned byte is immune to owner writes; since a mapped
+//!   file survives its own unlink, even a mis-timed GC can never yank
+//!   pages out from under a reader. Side copies are garbage-collected
+//!   with the same pin awareness as manifests.
+//!
+//! - **Staleness and refresh.** At attach the pin is the newest
+//!   committed epoch, so a reader starts **< 1 epoch stale**.
+//!   [`ReaderManager::refresh`] re-pins to a newer committed epoch in
+//!   place (fresh mapping, new overlay resolution, lease moved under
+//!   `PIN_ALL` protection) and reports staleness via
+//!   [`AttachStats::staleness_epochs`], exported as `alloc.attach.*` by
+//!   [`crate::coordinator::metrics::record_attach_stats`] and exercised
+//!   end-to-end by the `metall attach` benchmark.
+//!
 //! Follow-on (ROADMAP): an interleave policy (`MPOL_INTERLEAVE`) for
 //! read-mostly large segments shared by threads on every node, and
 //! epoch pipelining in the background engine (overlap epoch N+1's
@@ -168,12 +221,13 @@ pub mod mgmt_io;
 pub mod object_cache;
 pub mod name_dir;
 pub mod manager;
+pub mod readers;
 
 pub use api::{MetallHandle, SegmentAlloc};
 pub use bg_sync::{BgSyncStats, SyncTicket};
 pub use bin_dir::{ShardMap, ShardStatsSnapshot};
 pub use manager::{
-    ManagerCore, ManagerOptions, MetallManager, Persist, PlacementReport, PlacementSource,
-    ShardPlacement, StatsSnapshot, SyncStats,
+    AttachStats, ManagerCore, ManagerOptions, MetallManager, Persist, PlacementReport,
+    PlacementSource, ReaderManager, ShardPlacement, StatsSnapshot, SyncStats,
 };
 pub use object_cache::pin_thread_vcpu;

@@ -1,0 +1,477 @@
+//! Cross-process reader support: the lease-and-pin registry and the
+//! epoch-side data store that together give a live reader a stable view
+//! of one committed epoch (paper §3.2/§3.6 — many processes over one
+//! datastore — rebuilt on the segmented-manifest machinery).
+//!
+//! ## Leases
+//!
+//! Every attached reader owns one file under `<store>/readers/`
+//! (`lease-<pid>-<n>`) and holds an **exclusive `flock`** on it for the
+//! lifetime of the attach. The file body is a tiny checksummed record of
+//! the epoch the reader has pinned. Liveness is the lock itself: anyone
+//! probing the registry tries a non-blocking exclusive `flock` on each
+//! lease — acquiring it proves the owner is gone (the kernel releases
+//! `flock`s when the holding process dies, kill-9 included) and the
+//! lease is reaped on the spot; `EWOULDBLOCK` proves the reader is live
+//! and its pinned epoch must be honored.
+//!
+//! [`crate::alloc::mgmt_io::gc`] consults [`scan_pins`] so a pinned
+//! epoch's manifest and the section files it references are never
+//! deleted while the lease is live. A lease whose record cannot be read
+//! back (torn write, version skew) pins **everything** — deletion is
+//! the unrecoverable direction, so the registry fails conservative.
+//! [`PIN_ALL`] is also written deliberately while a reader is between
+//! epochs (mid-attach, mid-refresh) to close the race where GC lists
+//! the registry an instant before the reader records its choice.
+//!
+//! ## Epoch-side chunk copies
+//!
+//! A reader maps the segment's backing files `MAP_SHARED`; the page
+//! cache is shared with the owner, so the live files show the owner's
+//! in-flight writes immediately — `msync` timing cannot help. The only
+//! way a pinned view stays stable is to back it with **different
+//! inodes**: before the flusher's in-place `msync` may tear a pinned
+//! view, it reflinks each dirty chunk's range into
+//! `<store>/epoch-side/side-c<chunk>-e<epoch>.bin`
+//! ([`crate::storage::reflink::clone_file_range`]; plain copy where the
+//! filesystem cannot reflink), and the attached reader's mapping
+//! resolves chunks to these side files instead of the live ones. A
+//! freshly attaching reader seeds its own side copies from the live
+//! bytes (staleness < 1 epoch: the bytes are between its pinned epoch's
+//! commit and the next); after that, `refresh()` walks forward on the
+//! flusher-produced copies alone. Side files are immutable once their
+//! epoch has committed, and a mapped side file survives its own unlink,
+//! so GC (which keeps, per chunk, the newest copy at or below every
+//! protected epoch) can never yank pages out from under a reader.
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::os::unix::io::AsRawFd;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+use crate::storage::reflink;
+use crate::storage::segment::SegmentStorage;
+
+/// Registry directory inside the datastore.
+pub const READERS_DIR: &str = "readers";
+/// Epoch-side chunk-copy directory inside the datastore.
+pub const SIDE_DIR: &str = "epoch-side";
+/// Lease epoch meaning "pin everything" (reader between epochs).
+pub const PIN_ALL: u64 = u64::MAX;
+
+const LEASE_MAGIC: &[u8; 8] = b"METALLRL";
+const LEASE_LEN: usize = 24; // magic + epoch + fnv1a(magic+epoch)
+
+/// Distinguishes multiple leases taken by one process (tests, one
+/// process attaching several stores or several readers).
+static LEASE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+// ---------------------------------------------------------- flock ----
+
+/// Try to take an `flock` on `file`. Returns `Ok(true)` when acquired,
+/// `Ok(false)` on `EWOULDBLOCK` (someone else holds a conflicting
+/// lock). The lock lives until the file description is closed and is
+/// released by the kernel if the holder dies.
+pub(crate) fn flock_try(file: &File, exclusive: bool) -> Result<bool> {
+    let op = if exclusive { libc::LOCK_EX } else { libc::LOCK_SH } | libc::LOCK_NB;
+    let rc = unsafe { libc::flock(file.as_raw_fd(), op) };
+    if rc == 0 {
+        return Ok(true);
+    }
+    match std::io::Error::last_os_error().raw_os_error() {
+        Some(code) if code == libc::EWOULDBLOCK || code == libc::EAGAIN => Ok(false),
+        _ => Err(Error::sys("flock")),
+    }
+}
+
+// ---------------------------------------------------------- leases ----
+
+fn readers_dir(store: &Path) -> PathBuf {
+    store.join(READERS_DIR)
+}
+
+fn encode_lease(epoch: u64) -> [u8; LEASE_LEN] {
+    let mut buf = [0u8; LEASE_LEN];
+    buf[0..8].copy_from_slice(LEASE_MAGIC);
+    buf[8..16].copy_from_slice(&epoch.to_le_bytes());
+    let sum = crate::alloc::mgmt_io::fnv1a(&buf[0..16]);
+    buf[16..24].copy_from_slice(&sum.to_le_bytes());
+    buf
+}
+
+fn decode_lease(buf: &[u8]) -> Option<u64> {
+    if buf.len() != LEASE_LEN || &buf[0..8] != LEASE_MAGIC {
+        return None;
+    }
+    let sum = u64::from_le_bytes(buf[16..24].try_into().ok()?);
+    if crate::alloc::mgmt_io::fnv1a(&buf[0..16]) != sum {
+        return None;
+    }
+    Some(u64::from_le_bytes(buf[8..16].try_into().ok()?))
+}
+
+/// One reader's lease: a registry file held under exclusive `flock`
+/// recording the pinned epoch. Dropping releases the lock and removes
+/// the file; a kill-9 leaves the file behind for [`scan_pins`] to reap.
+pub struct ReaderLease {
+    path: PathBuf,
+    file: File,
+    epoch: u64,
+}
+
+impl ReaderLease {
+    /// Create and lock a fresh lease in `store`, pinned to [`PIN_ALL`]
+    /// (the caller re-pins once it has chosen a manifest).
+    pub fn acquire(store: &Path) -> Result<Self> {
+        let dir = readers_dir(store);
+        fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
+        let pid = std::process::id();
+        let seq = LEASE_SEQ.fetch_add(1, Ordering::Relaxed);
+        let path = dir.join(format!("lease-{pid}-{seq}"));
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .map_err(|e| Error::io(&path, e))?;
+        if !flock_try(&file, true)? {
+            // our own path collided with a live lease — cannot happen
+            // with the pid+seq name unless pids recycled mid-lease
+            return Err(Error::Datastore(format!(
+                "reader lease {path:?} is already held by another process"
+            )));
+        }
+        let mut lease = Self { path, file, epoch: PIN_ALL };
+        lease.write_record(PIN_ALL)?;
+        Ok(lease)
+    }
+
+    fn write_record(&mut self, epoch: u64) -> Result<()> {
+        use std::os::unix::fs::FileExt;
+        let buf = encode_lease(epoch);
+        self.file.write_all_at(&buf, 0).map_err(|e| Error::io(&self.path, e))?;
+        // No fsync: cross-process visibility is page-cache-immediate,
+        // and a reader crash makes the lease stale regardless of what
+        // the record says.
+        self.epoch = epoch;
+        Ok(())
+    }
+
+    /// Re-pin the lease to `epoch` (or [`PIN_ALL`] while transitioning).
+    pub fn pin(&mut self, epoch: u64) -> Result<()> {
+        self.write_record(epoch)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for ReaderLease {
+    fn drop(&mut self) {
+        // unlink first, then the fd close releases the flock — a prober
+        // can never acquire the lock while the file is still listed
+        let _ = fs::remove_file(&self.path);
+    }
+}
+
+/// What a registry scan found (after reaping stale leases).
+#[derive(Clone, Debug, Default)]
+pub struct PinScan {
+    /// Distinct pinned epochs of live leases ([`PIN_ALL`] excluded).
+    pub epochs: Vec<u64>,
+    /// A live lease pins everything: mid-transition ([`PIN_ALL`]) or a
+    /// record that failed to decode. GC must delete nothing epoch-like.
+    pub pin_all: bool,
+    /// Live leases seen.
+    pub live: usize,
+    /// Stale leases reaped by this scan.
+    pub reaped: usize,
+}
+
+impl PinScan {
+    pub fn any_live(&self) -> bool {
+        self.live > 0
+    }
+}
+
+/// Scan the registry: reap stale leases (liveness probe = non-blocking
+/// exclusive `flock`; the kernel dropped a dead reader's lock), collect
+/// the pinned epochs of live ones. Errors are absorbed conservatively:
+/// anything unreadable that cannot be proven stale counts as live and
+/// pin-all.
+pub fn scan_pins(store: &Path) -> PinScan {
+    let mut out = PinScan::default();
+    let dir = readers_dir(store);
+    let Ok(rd) = fs::read_dir(&dir) else { return out };
+    for entry in rd.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if !name.starts_with("lease-") {
+            continue;
+        }
+        let path = entry.path();
+        let Ok(file) = OpenOptions::new().read(true).open(&path) else {
+            // raced with the holder's own unlink
+            continue;
+        };
+        match flock_try(&file, true) {
+            Ok(true) => {
+                // we hold the lock: the reader is gone — reap
+                let _ = fs::remove_file(&path);
+                out.reaped += 1;
+            }
+            Ok(false) => {
+                out.live += 1;
+                match fs::read(&path).ok().as_deref().and_then(decode_lease) {
+                    Some(PIN_ALL) | None => out.pin_all = true,
+                    Some(e) => {
+                        if !out.epochs.contains(&e) {
+                            out.epochs.push(e);
+                        }
+                    }
+                }
+            }
+            Err(_) => {
+                out.live += 1;
+                out.pin_all = true;
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------- epoch-side copies ----
+
+fn side_dir(store: &Path) -> PathBuf {
+    store.join(SIDE_DIR)
+}
+
+fn side_file_name(chunk: u32, epoch: u64) -> String {
+    format!("side-c{chunk:08}-e{epoch:012}.bin")
+}
+
+fn parse_side_name(name: &str) -> Option<(u32, u64)> {
+    let rest = name.strip_prefix("side-c")?;
+    let rest = rest.strip_suffix(".bin")?;
+    let (c, e) = rest.split_once("-e")?;
+    Some((c.parse().ok()?, e.parse().ok()?))
+}
+
+/// List `(chunk, epoch)` of every epoch-side copy in `store`.
+pub fn list_side_copies(store: &Path) -> Vec<(u32, u64)> {
+    let mut out = Vec::new();
+    let Ok(rd) = fs::read_dir(side_dir(store)) else { return out };
+    for entry in rd.flatten() {
+        if let Some(name) = entry.file_name().to_str() {
+            if let Some(pair) = parse_side_name(name) {
+                out.push(pair);
+            }
+        }
+    }
+    out
+}
+
+/// Path of the side copy for `(chunk, epoch)` (whether or not it exists).
+pub fn side_copy_path(store: &Path, chunk: u32, epoch: u64) -> PathBuf {
+    side_dir(store).join(side_file_name(chunk, epoch))
+}
+
+/// Materialize one chunk's current bytes as the side copy for `epoch`.
+/// Reflink from the live backing file when the filesystem supports it;
+/// otherwise copy through the mapping. Written tmp+rename so a torn
+/// writer never leaves a short file a reader could map. Returns whether
+/// the clone path was taken. `overwrite` distinguishes the flusher
+/// (whose re-flush of an uncommitted epoch tag must replace the copy)
+/// from attaching readers (who must reuse, never clobber, a copy
+/// another reader may already map).
+pub(crate) fn write_side_copy(
+    store: &Path,
+    segment: &SegmentStorage,
+    chunk: u32,
+    chunk_size: usize,
+    epoch: u64,
+    overwrite: bool,
+) -> Result<reflink::CopyMethod> {
+    let dir = side_dir(store);
+    fs::create_dir_all(&dir).map_err(|e| Error::io(&dir, e))?;
+    let dst = dir.join(side_file_name(chunk, epoch));
+    if !overwrite && dst.exists() {
+        return Ok(reflink::CopyMethod::Fallback);
+    }
+    let tmp = dir.join(format!("{}.tmp{}", side_file_name(chunk, epoch), std::process::id()));
+    let tf = OpenOptions::new()
+        .read(true)
+        .write(true)
+        .create(true)
+        .truncate(true)
+        .open(&tmp)
+        .map_err(|e| Error::io(&tmp, e))?;
+    let offset = chunk as usize * chunk_size;
+    let (file_idx, file_off) = segment.locate(offset);
+    let method = segment
+        .with_file(file_idx, |src| {
+            reflink::clone_file_range(src, file_off as u64, chunk_size as u64, &tf, 0)
+        })
+        .ok_or_else(|| {
+            Error::Datastore(format!("side copy: chunk {chunk} has no backing file"))
+        })??;
+    drop(tf);
+    fs::rename(&tmp, &dst).map_err(|e| Error::io(&dst, e))?;
+    Ok(method)
+}
+
+/// Flusher hook: preserve every chunk in `chunks` as side copies tagged
+/// `epoch` (the epoch the in-flight flush will commit), **before** the
+/// in-place msync overwrites the live files. Returns
+/// `(copies_written, reflinked)`.
+pub(crate) fn preserve_chunks(
+    store: &Path,
+    segment: &SegmentStorage,
+    chunks: &[usize],
+    chunk_size: usize,
+    epoch: u64,
+) -> Result<(u64, u64)> {
+    let mut copies = 0u64;
+    let mut reflinks = 0u64;
+    for &c in chunks {
+        let m = write_side_copy(store, segment, c as u32, chunk_size, epoch, true)?;
+        copies += 1;
+        if m == reflink::CopyMethod::Reflink {
+            reflinks += 1;
+        }
+    }
+    Ok((copies, reflinks))
+}
+
+/// Resolve which side epoch a reader pinned at `pin` should map for
+/// `chunk`: the newest copy at or below the pin.
+pub(crate) fn resolve_side(sides: &HashMap<u32, Vec<u64>>, chunk: u32, pin: u64) -> Option<u64> {
+    sides.get(&chunk)?.iter().copied().filter(|&e| e <= pin).max()
+}
+
+/// Index a [`list_side_copies`] listing by chunk (epochs unsorted).
+pub(crate) fn index_sides(listing: &[(u32, u64)]) -> HashMap<u32, Vec<u64>> {
+    let mut map: HashMap<u32, Vec<u64>> = HashMap::new();
+    for &(c, e) in listing {
+        map.entry(c).or_default().push(e);
+    }
+    map
+}
+
+/// Prune the epoch-side store: keep, per chunk, every copy that is the
+/// newest at or below some protected epoch (committer's current +
+/// previous manifests, plus every live pin), and every copy newer than
+/// all of them (the flusher's not-yet-committed tag). Callers skip this
+/// entirely under pin-all.
+pub(crate) fn gc_side_copies(store: &Path, protected: &[u64]) {
+    if protected.is_empty() {
+        return;
+    }
+    let listing = list_side_copies(store);
+    let sides = index_sides(&listing);
+    let max_protected = protected.iter().copied().max().unwrap_or(0);
+    for (chunk, epochs) in &sides {
+        let keep: Vec<u64> = protected
+            .iter()
+            .filter_map(|&p| epochs.iter().copied().filter(|&e| e <= p).max())
+            .collect();
+        for &e in epochs {
+            if e > max_protected || keep.contains(&e) {
+                continue;
+            }
+            let _ = fs::remove_file(side_copy_path(store, *chunk, e));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn lease_roundtrip_and_scan() {
+        let d = TempDir::new("readers-lease");
+        let store = d.path().to_path_buf();
+        let mut lease = ReaderLease::acquire(&store).unwrap();
+        // fresh lease pins everything
+        let scan = scan_pins(&store);
+        assert_eq!(scan.live, 1);
+        assert!(scan.pin_all);
+        lease.pin(7).unwrap();
+        let scan = scan_pins(&store);
+        assert_eq!(scan.live, 1);
+        assert!(!scan.pin_all);
+        assert_eq!(scan.epochs, vec![7]);
+        drop(lease);
+        let scan = scan_pins(&store);
+        assert_eq!(scan.live, 0);
+        assert!(scan.epochs.is_empty());
+    }
+
+    #[test]
+    fn stale_lease_is_reaped() {
+        let d = TempDir::new("readers-stale");
+        let store = d.path().to_path_buf();
+        // a lease file with no flock holder (simulates a kill-9'd reader)
+        let dir = readers_dir(&store);
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lease-99999-0");
+        fs::write(&path, encode_lease(3)).unwrap();
+        let scan = scan_pins(&store);
+        assert_eq!(scan.reaped, 1);
+        assert_eq!(scan.live, 0);
+        assert!(!path.exists(), "stale lease reaped");
+    }
+
+    #[test]
+    fn torn_lease_record_pins_everything() {
+        let d = TempDir::new("readers-torn");
+        let store = d.path().to_path_buf();
+        let mut lease = ReaderLease::acquire(&store).unwrap();
+        lease.pin(4).unwrap();
+        // corrupt the record behind the lease's back
+        fs::write(lease.path(), b"garbage").unwrap();
+        let scan = scan_pins(&store);
+        assert_eq!(scan.live, 1);
+        assert!(scan.pin_all, "unreadable record must fail conservative");
+    }
+
+    #[test]
+    fn side_name_roundtrip() {
+        let name = side_file_name(42, 9000);
+        assert_eq!(parse_side_name(&name), Some((42, 9000)));
+        assert_eq!(parse_side_name("side-cxx-e1.bin"), None);
+        assert_eq!(parse_side_name("manifest-000000000001.bin"), None);
+    }
+
+    #[test]
+    fn side_resolution_and_gc() {
+        let d = TempDir::new("readers-side");
+        let store = d.path().to_path_buf();
+        let dir = side_dir(&store);
+        fs::create_dir_all(&dir).unwrap();
+        for (c, e) in [(0u32, 2u64), (0, 5), (0, 9), (1, 5)] {
+            fs::write(dir.join(side_file_name(c, e)), b"x").unwrap();
+        }
+        let sides = index_sides(&list_side_copies(&store));
+        assert_eq!(resolve_side(&sides, 0, 7), Some(5));
+        assert_eq!(resolve_side(&sides, 0, 9), Some(9));
+        assert_eq!(resolve_side(&sides, 0, 1), None);
+        assert_eq!(resolve_side(&sides, 1, 5), Some(5));
+        // protect epochs {5, 9}: chunk 0 keeps 5 and 9, drops 2;
+        // chunk 1 keeps 5
+        gc_side_copies(&store, &[9, 5]);
+        let mut left = list_side_copies(&store);
+        left.sort_unstable();
+        assert_eq!(left, vec![(0, 5), (0, 9), (1, 5)]);
+    }
+}

@@ -32,6 +32,11 @@ SUBCOMMANDS:
     analyze   --store <dir> --algo <pagerank|bfs> [--artifacts artifacts]
               [--iters 50] [--source 0] [--top 5]    run analytics via the PJRT engine
                                                      (uses/refreshes the persistent ELL cache)
+    attach    --store <dir> [--readers 2] [--rounds 3] [--scale 12]
+              [--out BENCH_attach.json]              multi-process snapshot-isolation bench:
+                                                     N reader processes attach to pinned
+                                                     epochs and run GBTL BFS while this
+                                                     process keeps ingesting + flushing
     doctor    --store <dir>                          validate datastore integrity
     version | help
 ";
@@ -238,6 +243,20 @@ pub fn run(argv: &[String]) -> Result<i32> {
             }
             Ok(0)
         }
+        "attach" => {
+            let store = req(&args, "store")?.to_string();
+            let readers = args.get_usize("readers", 2).max(1);
+            let rounds = args.get_usize("rounds", 3).max(1);
+            let scale = args.get_usize("scale", 12) as u32;
+            let out = args.get("out").unwrap_or("BENCH_attach.json").to_string();
+            run_attach_bench(&store, readers, rounds, scale, &out)
+        }
+        // hidden: one reader process of the attach bench (spawned by
+        // `attach` via current_exe; not listed in HELP on purpose)
+        "attach-reader" => {
+            let store = req(&args, "store")?;
+            run_attach_reader(store, args.get("ready"))
+        }
         "doctor" => {
             let store = req(&args, "store")?;
             let mgr = MetallManager::open_read_only(store).context("open datastore")?;
@@ -264,6 +283,248 @@ pub fn run(argv: &[String]) -> Result<i32> {
 /// Parse `--key value` pairs from an argv slice.
 fn parse_args(argv: &[String]) -> crate::bench_util::BenchArgs {
     crate::bench_util::BenchArgs::from_slice(argv)
+}
+
+/// `metall attach`: the multi-process snapshot-isolation benchmark. The
+/// owner (this process) seeds a GBTL matrix plus a banked adjacency
+/// list, commits the first epoch, then keeps ingesting + flushing while
+/// `readers` forked reader processes each attach to a pinned epoch, run
+/// BFS against it, and `refresh()` forward as new epochs commit. Emits a
+/// stub-first trajectory doc to `out` (so CI uploads a meaningful
+/// artifact even on a crash mid-bench).
+fn run_attach_bench(
+    store: &str,
+    readers: usize,
+    rounds: usize,
+    scale: u32,
+    out: &str,
+) -> Result<i32> {
+    use crate::alloc::AttachStats;
+    use crate::coordinator::metrics::record_attach_stats;
+    use crate::gbtl::GrbMatrix;
+    use crate::util::jsonw::JsonObj;
+    use std::process::{Command, Stdio};
+
+    let stub = JsonObj::new()
+        .str("bench", "attach")
+        .str("status", "started")
+        .int("readers", readers as i64)
+        .int("rounds", rounds as i64)
+        .int("scale", scale as i64)
+        .raw("results", "[]")
+        .finish();
+    std::fs::write(out, stub + "\n").with_context(|| format!("write {out}"))?;
+
+    let banks = 64usize;
+    let n = 1usize << scale;
+    let mgr = if std::path::Path::new(store).join("meta.bin").exists() {
+        MetallManager::open(store).context("open datastore")?
+    } else {
+        MetallManager::create(store).context("create datastore")?
+    };
+    // seed: a static matrix for the readers' BFS, an adjacency list for
+    // the concurrent ingester
+    if mgr.find::<GrbMatrix>("mat")?.is_none() {
+        let edges = RmatGenerator::graph500(scale, 8).seed(0xA77AC4).generate();
+        let mat = GrbMatrix::from_edges(&mgr, n, &edges)?;
+        mgr.construct::<GrbMatrix>("mat", mat)?;
+    }
+    let graph = match mgr.find::<u64>("graph")? {
+        Some(off) => BankedAdjacency::open(&mgr, mgr.read(off)),
+        None => {
+            let g = BankedAdjacency::create(&mgr, banks)?;
+            mgr.construct::<u64>("graph", g.offset())?;
+            g
+        }
+    };
+    // a rerun against an existing store must not leave a stale end-of-run
+    // marker for the readers to trip over
+    mgr.destroy("done")?;
+    mgr.sync()?; // the first committed epoch a reader can pin
+
+    // Spawn the readers; each touches a ready-marker file right after its
+    // attach, and the owner only starts mutating once every marker exists
+    // — so "staleness at attach < 1 epoch" is deterministic, not a race.
+    let exe = std::env::current_exe().context("current_exe")?;
+    let pid = std::process::id();
+    let ready_dir = std::env::temp_dir().join(format!("metall-attach-ready-{pid}"));
+    std::fs::create_dir_all(&ready_dir)?;
+    let mut children = Vec::new();
+    for i in 0..readers {
+        let ready = ready_dir.join(format!("r{i}"));
+        let child = Command::new(&exe)
+            .args(["attach-reader", "--store", store, "--ready", ready.to_str().unwrap()])
+            .stdout(Stdio::piped())
+            .spawn()
+            .context("spawn attach reader")?;
+        children.push((child, ready));
+    }
+    let t0 = std::time::Instant::now();
+    while children.iter().any(|(_, r)| !r.exists()) {
+        if t0.elapsed().as_secs() > 30 {
+            bail!("attach readers failed to attach within 30s");
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+
+    // Ingest + flush rounds: every round dirties management state (a new
+    // named object) so each sync() commits a fresh manifest epoch for the
+    // readers to refresh onto.
+    let metrics = Metrics::new();
+    let cfg = PipelineConfig { workers: 2, batch_size: 2048, queue_depth: 8, nbanks: banks };
+    for round in 0..rounds {
+        let gen = RmatGenerator::graph500(scale, 2).seed(1000 + round as u64);
+        ingest(&mgr, &graph, gen.generate().into_iter(), &cfg, false, &metrics)?;
+        // per-run name: reruns on the same store must not collide
+        mgr.destroy(&format!("round-{pid}-{round}"))?;
+        mgr.construct::<u64>(&format!("round-{pid}-{round}"), round as u64)?;
+        mgr.sync()?;
+    }
+    // the readers poll for this name to know the run is over
+    mgr.construct::<u64>("done", rounds as u64)?;
+    mgr.sync()?;
+
+    let mut results: Vec<AttachStats> = Vec::new();
+    let mut all_ok = true;
+    for (child, _) in children {
+        let out_c = child.wait_with_output().context("wait for attach reader")?;
+        all_ok &= out_c.status.success();
+        let text = String::from_utf8_lossy(&out_c.stdout);
+        match text.lines().find(|l| l.starts_with("ATTACH_RESULT ")) {
+            Some(line) => results.push(parse_attach_result(line)),
+            None => all_ok = false,
+        }
+    }
+    let _ = std::fs::remove_dir_all(&ready_dir);
+    mgr.close()?;
+
+    // histogram of epochs-behind at attach time: [0, 1, 2, ≥3]
+    let mut staleness_hist = [0u64; 4];
+    let mut rows = Vec::new();
+    for s in &results {
+        record_attach_stats(&metrics, s);
+        staleness_hist[(s.staleness_epochs as usize).min(3)] += 1;
+        rows.push(
+            JsonObj::new()
+                .int("attach_micros", s.attach_micros as i64)
+                .int("staleness_at_attach", s.staleness_epochs as i64)
+                .int("refreshes", s.refreshes as i64)
+                .int("chunks_overlaid", s.chunks_overlaid as i64)
+                .int("side_copies_created", s.side_copies_created as i64)
+                .int("side_copies_reused", s.side_copies_reused as i64)
+                .finish(),
+        );
+    }
+    let max_staleness = results.iter().map(|s| s.staleness_epochs).max().unwrap_or(u64::MAX);
+    let pass = all_ok && results.len() == readers && max_staleness < 1;
+    let doc = JsonObj::new()
+        .str("bench", "attach")
+        .str("status", if pass { "ok" } else { "failed" })
+        .int("readers", readers as i64)
+        .int("rounds", rounds as i64)
+        .int("scale", scale as i64)
+        .bool("attach_staleness_lt1", max_staleness < 1)
+        .raw(
+            "staleness_at_attach_histogram",
+            &format!(
+                "[{},{},{},{}]",
+                staleness_hist[0], staleness_hist[1], staleness_hist[2], staleness_hist[3]
+            ),
+        )
+        .raw("results", &format!("[{}]", rows.join(",")))
+        .finish();
+    std::fs::write(out, doc + "\n").with_context(|| format!("write {out}"))?;
+
+    let (counters, _) = metrics.snapshot();
+    for (k, v) in counters.iter().filter(|(k, _)| k.starts_with("alloc.attach.")) {
+        println!("  {k:<36} {v}");
+    }
+    println!(
+        "attach bench: {readers} readers × {rounds} epochs → {out} ({})",
+        if pass { "ok" } else { "FAILED" }
+    );
+    Ok(if pass { 0 } else { 1 })
+}
+
+/// One reader process of the attach bench: pin an epoch, report
+/// readiness, run BFS over the pinned matrix, then follow the owner's
+/// epochs via `refresh()` until the `done` marker object appears. The
+/// one-line `ATTACH_RESULT k=v …` report on stdout is the IPC back to
+/// the owner.
+fn run_attach_reader(store: &str, ready: Option<&str>) -> Result<i32> {
+    use crate::alloc::ReaderManager;
+    use crate::gbtl::algorithms::bfs_level;
+    use crate::gbtl::GrbMatrix;
+
+    let mut r = ReaderManager::attach(store).context("attach")?;
+    let staleness_at_attach = r.attach_stats().staleness_epochs;
+    if let Some(p) = ready {
+        std::fs::write(p, b"attached").context("write ready marker")?;
+    }
+
+    let mut bfs_runs = 0u64;
+    let mut reached_last = 0usize;
+    let mut edges_last = 0u64;
+    let mut run_queries = |r: &ReaderManager| -> Result<bool> {
+        let off = r
+            .find::<GrbMatrix>("mat")?
+            .ok_or_else(|| anyhow!("no 'mat' in the pinned epoch"))?;
+        let mat: GrbMatrix = r.read(off);
+        let levels = bfs_level(r, &mat, 0);
+        reached_last = levels.iter().filter(|&&l| l >= 0).count();
+        bfs_runs += 1;
+        if let Some(goff) = r.find::<u64>("graph")? {
+            let g = BankedAdjacency::open(r, r.read(goff));
+            let e = g.num_edges(r);
+            // epochs only move forward; so must the committed adjacency
+            if e < edges_last {
+                bail!("adjacency shrank across refresh: {e} < {edges_last}");
+            }
+            edges_last = e;
+        }
+        Ok(r.find::<u64>("done")?.is_some())
+    };
+    let mut done = run_queries(&r)?;
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+    while !done && std::time::Instant::now() < deadline {
+        if r.refresh().context("refresh")? {
+            done = run_queries(&r)?;
+        } else {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+    }
+    let s = r.attach_stats();
+    println!(
+        "ATTACH_RESULT attach_micros={} staleness_at_attach={staleness_at_attach} \
+         refreshes={} chunks_overlaid={} side_copies_created={} side_copies_reused={} \
+         bfs_runs={bfs_runs} reached={reached_last} edges={edges_last}",
+        s.attach_micros, s.refreshes, s.chunks_overlaid, s.side_copies_created,
+        s.side_copies_reused
+    );
+    r.detach()?;
+    Ok(if done { 0 } else { 1 })
+}
+
+/// Parse a reader's `ATTACH_RESULT k=v …` line back into stats. Unknown
+/// keys are ignored so the reader can report extras for humans.
+fn parse_attach_result(line: &str) -> crate::alloc::AttachStats {
+    let mut s = crate::alloc::AttachStats::default();
+    for kv in line.split_whitespace().skip(1) {
+        let Some((k, v)) = kv.split_once('=') else { continue };
+        let Ok(v) = v.parse::<u64>() else { continue };
+        match k {
+            "attach_micros" => s.attach_micros = v,
+            // the histogram wants staleness *at attach*, before any
+            // refresh caught the reader up
+            "staleness_at_attach" => s.staleness_epochs = v,
+            "refreshes" => s.refreshes = v,
+            "chunks_overlaid" => s.chunks_overlaid = v,
+            "side_copies_created" => s.side_copies_created = v,
+            "side_copies_reused" => s.side_copies_reused = v,
+            _ => {}
+        }
+    }
+    s
 }
 
 #[cfg(test)]

@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use crate::alloc::bg_sync::BgSyncStats;
 use crate::alloc::bin_dir::ShardStatsSnapshot;
-use crate::alloc::manager::{PlacementReport, StatsSnapshot, SyncStats};
+use crate::alloc::manager::{AttachStats, PlacementReport, StatsSnapshot, SyncStats};
 
 /// A named set of monotonically increasing counters plus accumulated
 /// phase durations. Cheap to share behind an `Arc`.
@@ -160,6 +160,21 @@ pub fn record_bg_sync_stats(m: &Metrics, s: &BgSyncStats) {
     m.add("alloc.bgsync.writer_stall_micros", s.writer_stall_micros);
     m.add("alloc.bgsync.watermark_bytes", s.watermark_bytes);
     m.add("alloc.bgsync.ceiling_bytes", s.ceiling_bytes);
+}
+
+/// Fold one reader's [`AttachStats`] into `m` under `alloc.attach.*`.
+/// The struct is cumulative over one attach's lifetime (created /
+/// reused / refreshes grow monotonically; `staleness_epochs` is the
+/// value at the last attach/refresh decision), so call this once per
+/// reader at report time — or feed deltas when sampling repeatedly.
+pub fn record_attach_stats(m: &Metrics, s: &AttachStats) {
+    m.add("alloc.attach.count", 1);
+    m.add("alloc.attach.micros", s.attach_micros);
+    m.add("alloc.attach.refreshes", s.refreshes);
+    m.add("alloc.attach.chunks_overlaid", s.chunks_overlaid);
+    m.add("alloc.attach.side_copies_created", s.side_copies_created);
+    m.add("alloc.attach.side_copies_reused", s.side_copies_reused);
+    m.add("alloc.attach.staleness_epochs", s.staleness_epochs);
 }
 
 #[cfg(test)]
@@ -315,6 +330,27 @@ mod tests {
         assert_eq!(m.get("alloc.bgsync.writer_stalls"), 2);
         assert_eq!(m.get("alloc.bgsync.writer_stall_micros"), 750);
         assert_eq!(m.get("alloc.bgsync.watermark_bytes"), 4 << 20);
+    }
+
+    #[test]
+    fn attach_bridge_exports_reader_counters() {
+        let m = Metrics::new();
+        let s = AttachStats {
+            attach_micros: 850,
+            refreshes: 2,
+            chunks_overlaid: 12,
+            side_copies_created: 9,
+            side_copies_reused: 3,
+            staleness_epochs: 0,
+        };
+        record_attach_stats(&m, &s);
+        assert_eq!(m.get("alloc.attach.count"), 1);
+        assert_eq!(m.get("alloc.attach.micros"), 850);
+        assert_eq!(m.get("alloc.attach.refreshes"), 2);
+        assert_eq!(m.get("alloc.attach.chunks_overlaid"), 12);
+        assert_eq!(m.get("alloc.attach.side_copies_created"), 9);
+        assert_eq!(m.get("alloc.attach.side_copies_reused"), 3);
+        assert_eq!(m.get("alloc.attach.staleness_epochs"), 0);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::alloc::SegmentAlloc;
 use crate::baselines::BenchAllocator;
 use crate::containers::BankedAdjacency;
 use crate::coordinator::metrics::Metrics;
-use crate::error::Result;
+use crate::error::{Error, Result};
 
 /// Pipeline configuration.
 #[derive(Clone, Debug)]
@@ -78,7 +78,11 @@ where
                 let mut batches = 0u64;
                 loop {
                     let batch = {
-                        let guard = rx.lock().unwrap();
+                        // a sibling that panicked while holding the
+                        // receiver poisons the mutex; the channel itself
+                        // is still sound, so keep draining rather than
+                        // cascading the panic through every worker
+                        let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
                         guard.recv()
                     };
                     match batch {
@@ -92,6 +96,11 @@ where
                 }
             }));
         }
+        // Give up our receiver reference: once every worker has exited
+        // (error or panic), the channel closes and the producer's send
+        // fails fast instead of blocking forever on a full queue that
+        // nobody will ever drain.
+        drop(rx);
         // producer (this thread)
         let mut batch = Vec::with_capacity(batch_size);
         let mut stall_ns = 0u64;
@@ -103,22 +112,49 @@ where
             if batch.len() >= batch_size {
                 let full = std::mem::replace(&mut batch, Vec::with_capacity(batch_size));
                 let t = Instant::now();
-                tx.send(full).expect("workers alive");
+                // send fails only when every worker has exited (all
+                // receivers dropped) — they errored or panicked. Stop
+                // producing and fall through to the join below, which
+                // reports what actually went wrong.
+                if tx.send(full).is_err() {
+                    break;
+                }
                 stall_ns += t.elapsed().as_nanos() as u64;
             }
         }
         if !batch.is_empty() {
-            tx.send(batch).expect("workers alive");
+            let _ = tx.send(batch);
         }
         drop(tx); // close channel: workers drain and exit
         metrics.add_time("producer_stall", stall_ns);
 
+        // Join every worker before judging the run: a panic or an
+        // insert_batch error in one must not leave siblings detached,
+        // and the caller gets the first underlying error (panics are
+        // reported only when no worker produced a real error).
         let mut edges_total = 0;
         let mut batches_total = 0;
+        let mut first_err: Option<Error> = None;
+        let mut panicked = 0usize;
         for h in handles {
-            let (e, b) = h.join().expect("worker panicked")?;
-            edges_total += e;
-            batches_total += b;
+            match h.join() {
+                Ok(Ok((e, b))) => {
+                    edges_total += e;
+                    batches_total += b;
+                }
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => panicked += 1,
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if panicked > 0 {
+            return Err(Error::Runtime(format!("{panicked} pipeline worker(s) panicked")));
         }
         Ok((edges_total, batches_total))
     })?;
@@ -174,6 +210,32 @@ mod tests {
             assert_eq!(g.degree(&m, v), 100, "vertex {v}");
         }
         m.close().unwrap();
+    }
+
+    #[test]
+    fn worker_failure_surfaces_error_instead_of_panicking() {
+        // A segment too small for the stream: insert_batch runs out of
+        // space mid-run. The old code panicked twice over — the producer
+        // on `send` once the workers were gone, then the join on the
+        // workers' Err — instead of reporting the allocation failure.
+        let d = TempDir::new("pipe-fail");
+        let mut o = ManagerOptions::small_for_tests();
+        o.vm_reserve = 16 * o.chunk_size; // a handful of chunks only
+        let m = MetallManager::create_with(d.join("s"), o).unwrap();
+        let g = BankedAdjacency::create(&m, 4).unwrap();
+        // far more edges than the reservation can hold; small batches +
+        // shallow queue keep the producer sending after workers die
+        let edges = (0..2_000_000u64).map(|i| (i % 1024, i));
+        let cfg = PipelineConfig { workers: 3, batch_size: 64, queue_depth: 2, nbanks: 4 };
+        let err = ingest(&m, &g, edges, &cfg, false, &Metrics::new())
+            .expect_err("segment exhaustion must surface as Err");
+        // the first underlying insert error, not a panic or join artifact
+        assert!(
+            matches!(err, crate::error::Error::Alloc(_)),
+            "expected the workers' allocation failure, got: {err}"
+        );
+        // the manager survives; callers may still sync/close it
+        drop(m);
     }
 
     #[test]

@@ -62,6 +62,35 @@
 //! engine with a final full sync and join the flusher before the
 //! `CLEAN` marker is written, and a flusher that died refuses the
 //! marker so the store is never falsely advertised as consistent.
+//!
+//! ## How reader attach uses this layer
+//!
+//! A live attach ([`crate::alloc::ReaderManager`]) pins one committed
+//! manifest epoch while the owner keeps writing. This layer supplies the
+//! two primitives that make the pinned view *stable*:
+//!
+//! **Different inodes, not timing.** A read-only mapping of the live
+//! chunk files would share page-cache pages with the owner's
+//! `MAP_SHARED` writable mapping, so the reader would see every store
+//! the instant it happens — no msync ordering can prevent that. The
+//! pinned view therefore resolves each live chunk to an immutable
+//! **epoch-side file** (`epoch-side/side-c…-e….bin`): the flusher clones
+//! dirty chunks aside *before* its in-place msync whenever a lease is
+//! live, and an attach seeds the rest. [`reflink::clone_file_range`]
+//! does the cloning — `FICLONERANGE` shares blocks copy-on-write where
+//! the filesystem supports it (XFS/Btrfs/APFS), and a `pread`/`pwrite`
+//! loop with zero-fill past EOF is the ext4 fallback, so a side copy is
+//! always full-chunk-length.
+//!
+//! **Overlay mapping.** The reader opens the segment read-only and maps
+//! each side file over its chunk's pages in the reserved extent
+//! ([`segment::SegmentStorage::overlay_readonly`] — `MAP_FIXED` within
+//! the reservation, refused on writable segments). Offsets computed
+//! against `base()` resolve identically to the owner's, so containers
+//! traverse the pinned epoch with unchanged code. POSIX keeps a mapped
+//! inode alive past `unlink`, which gives the protocol its last-ditch
+//! safety: even if a side file is collected the moment after a reader
+//! mapped it, the reader's pages stay valid until it detaches.
 
 pub mod mmap;
 pub mod segment;

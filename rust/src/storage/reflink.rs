@@ -18,6 +18,19 @@ use crate::error::{Error, Result};
 /// `FICLONE` ioctl request code (linux/fs.h: `_IOW(0x94, 9, int)`).
 const FICLONE: libc::c_ulong = 0x4004_9409;
 
+/// `FICLONERANGE` ioctl request code
+/// (linux/fs.h: `_IOW(0x94, 13, struct file_clone_range)`).
+const FICLONERANGE: libc::c_ulong = 0x4020_940D;
+
+/// linux/fs.h `struct file_clone_range`.
+#[repr(C)]
+struct FileCloneRange {
+    src_fd: i64,
+    src_offset: u64,
+    src_length: u64,
+    dest_offset: u64,
+}
+
 /// How a copy was performed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CopyMethod {
@@ -46,6 +59,61 @@ pub fn copy_file(src: &Path, dst: &Path) -> Result<CopyMethod> {
             Ok(CopyMethod::Fallback)
         }
         _ => Err(Error::sys("ioctl(FICLONE)")),
+    }
+}
+
+/// Clone `len` bytes of `src` at `src_off` into `dst` at `dst_off`,
+/// attempting a block-sharing `FICLONERANGE` first and falling back to
+/// a `pread`/`pwrite` copy where the filesystem cannot reflink (or the
+/// range is not block-aligned). The epoch-side chunk preservation
+/// ([`crate::alloc::readers`]) is the caller: chunk-sized, chunk-aligned
+/// ranges, so the clone path is eligible wherever the fs supports it.
+pub fn clone_file_range(
+    src: &File,
+    src_off: u64,
+    len: u64,
+    dst: &File,
+    dst_off: u64,
+) -> Result<CopyMethod> {
+    let arg = FileCloneRange {
+        src_fd: src.as_raw_fd() as i64,
+        src_offset: src_off,
+        src_length: len,
+        dest_offset: dst_off,
+    };
+    let rc = unsafe { libc::ioctl(dst.as_raw_fd(), FICLONERANGE, &arg) };
+    if rc == 0 {
+        return Ok(CopyMethod::Reflink);
+    }
+    let errno = std::io::Error::last_os_error().raw_os_error().unwrap_or(0);
+    match errno {
+        libc::EOPNOTSUPP | libc::EINVAL | libc::EXDEV | libc::ENOTTY | libc::ENOSYS
+        | libc::EBADF | libc::EPERM => {
+            use std::os::unix::fs::FileExt;
+            let mut buf = vec![0u8; (len as usize).min(1 << 20)];
+            let mut done = 0u64;
+            while done < len {
+                let want = ((len - done) as usize).min(buf.len());
+                // short reads past EOF come back zero-filled: the live
+                // backing file is always chunk-granular here, but a hole
+                // or race must not produce a short side copy
+                let got = src
+                    .read_at(&mut buf[..want], src_off + done)
+                    .map_err(|e| Error::Sys { call: "pread(clone fallback)", source: e })?;
+                if got == 0 {
+                    buf[..want].fill(0);
+                    dst.write_all_at(&buf[..want], dst_off + done)
+                        .map_err(|e| Error::Sys { call: "pwrite(clone fallback)", source: e })?;
+                    done += want as u64;
+                } else {
+                    dst.write_all_at(&buf[..got], dst_off + done)
+                        .map_err(|e| Error::Sys { call: "pwrite(clone fallback)", source: e })?;
+                    done += got as u64;
+                }
+            }
+            Ok(CopyMethod::Fallback)
+        }
+        _ => Err(Error::sys("ioctl(FICLONERANGE)")),
     }
 }
 
@@ -106,6 +174,36 @@ mod tests {
         std::fs::write(&dst, b"longer-preexisting-content").unwrap();
         copy_file(&src, &dst).unwrap();
         assert_eq!(std::fs::read(&dst).unwrap(), b"ab");
+    }
+
+    #[test]
+    fn clone_range_roundtrip() {
+        let d = TempDir::new("reflink-range");
+        let src = d.join("src");
+        let dst = d.join("dst");
+        let body: Vec<u8> = (0..8192u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&src, &body).unwrap();
+        let sf = File::open(&src).unwrap();
+        let df = OpenOptions::new().read(true).write(true).create(true).open(&dst).unwrap();
+        clone_file_range(&sf, 4096, 4096, &df, 0).unwrap();
+        assert_eq!(std::fs::read(&dst).unwrap(), &body[4096..8192]);
+    }
+
+    #[test]
+    fn clone_range_past_eof_zero_fills() {
+        let d = TempDir::new("reflink-range-eof");
+        let src = d.join("src");
+        let dst = d.join("dst");
+        std::fs::write(&src, b"abc").unwrap();
+        let sf = File::open(&src).unwrap();
+        let df = OpenOptions::new().read(true).write(true).create(true).open(&dst).unwrap();
+        // ext4 fallback path: reading past EOF must still produce a
+        // full-length, zero-padded copy
+        clone_file_range(&sf, 0, 16, &df, 0).unwrap();
+        let got = std::fs::read(&dst).unwrap();
+        assert_eq!(got.len(), 16);
+        assert_eq!(&got[0..3], b"abc");
+        assert!(got[3..].iter().all(|&b| b == 0));
     }
 
     #[test]

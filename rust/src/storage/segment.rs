@@ -345,6 +345,39 @@ impl SegmentStorage {
         (offset / self.opts.file_size, offset % self.opts.file_size)
     }
 
+    /// Run `f` against the backing file at `file_idx` (`None` when the
+    /// segment has no such file yet). The epoch-side preservation path
+    /// ([`crate::alloc::readers`]) reflinks chunk ranges out of the live
+    /// files through this.
+    pub(crate) fn with_file<R>(&self, file_idx: usize, f: impl FnOnce(&File) -> R) -> Option<R> {
+        let files = self.files.lock().unwrap();
+        files.get(file_idx).map(f)
+    }
+
+    /// Replace the mapping of `[at, at+len)` with a **read-only** shared
+    /// mapping of `file` from offset 0 (`MAP_FIXED` over the
+    /// reservation). This is how an attached reader resolves a pinned
+    /// chunk to its epoch-side copy instead of the live backing file:
+    /// the copy is a different inode, so the owner's page-cache writes
+    /// and in-place msyncs never show through, and the mapping survives
+    /// even if the copy is later unlinked. Only read-only segments may
+    /// be overlaid — a writable segment's pages must keep writing back
+    /// to the real backing files.
+    pub fn overlay_readonly(&self, at: usize, file: &File, len: usize) -> Result<()> {
+        if self.opts.prot != Prot::Read {
+            return Err(Error::InvalidOp(
+                "overlay_readonly: only read-only segments may resolve to side files".into(),
+            ));
+        }
+        if at % page_size() != 0 || at + len > self.mapped_len() {
+            return Err(Error::InvalidOp(format!(
+                "overlay_readonly: bad range {at}+{len} (mapped {})",
+                self.mapped_len()
+            )));
+        }
+        self.vm.map_file(at, file, 0, len, Prot::Read, Share::Shared, false)
+    }
+
     /// `pwrite` raw bytes directly into a backing file, bypassing the
     /// mapping — the bs-mmap user-level msync write-back path (§5.1).
     pub fn pwrite_file(&self, file_idx: usize, file_off: usize, data: &[u8]) -> Result<()> {

@@ -1,0 +1,416 @@
+//! Live multi-process reader-attach integration tests (epoch snapshot
+//! isolation).
+//!
+//! The same re-exec harness as `it_crash.rs`: a child process — this
+//! test binary filtered down to `attach_child_entry` plus control env
+//! vars — attaches a [`ReaderManager`] to a store the parent holds open
+//! and keeps mutating. The parent asserts the attach contract:
+//!
+//! - a second **writer** is refused while an owner (or RO opener) holds
+//!   the store lock, in-process and cross-process alike,
+//! - an attached reader observes exactly its pinned committed epoch, no
+//!   matter how the owner mutates afterward; `refresh()` advances it,
+//! - epoch GC never collects a pinned manifest (or its sections) while
+//!   the lease is live, and collects it again once the pin is gone,
+//! - a `kill -9`'d reader's lease is reaped by the next registry scan
+//!   (liveness = flock probe; the kernel dropped the dead fd's lock).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::time::{Duration, Instant};
+
+use metall_rs::alloc::mgmt_io::{list_manifest_epochs, manifest_file_name, read_manifest};
+use metall_rs::alloc::readers::scan_pins;
+use metall_rs::alloc::{ManagerOptions, MetallManager, ReaderManager, SegmentAlloc};
+use metall_rs::containers::PVec;
+use metall_rs::error::Error;
+use metall_rs::util::tmp::TempDir;
+
+const MODE_ENV: &str = "METALL_IT_ATTACH_MODE";
+const DIR_ENV: &str = "METALL_IT_ATTACH_DIR";
+const MARKER_ENV: &str = "METALL_IT_ATTACH_MARKER";
+
+/// Records the owner pushes (quiesced) before the first commit.
+const BASE_RECORDS: u64 = 200;
+
+fn record_value(i: u64) -> u64 {
+    i.wrapping_mul(7).wrapping_add(1)
+}
+
+/// Child-process body. A no-op without the control env vars.
+#[test]
+fn attach_child_entry() {
+    let mode = match std::env::var(MODE_ENV) {
+        Ok(m) => m,
+        Err(_) => return, // normal test run: nothing to do
+    };
+    let dir = PathBuf::from(std::env::var(DIR_ENV).expect("child needs dir"));
+    let store = dir.join("s");
+    match mode.as_str() {
+        // the owner (parent) is live and holds the exclusive store
+        // lock; every writer-side open from another process must bounce
+        "second-open" => {
+            let err = MetallManager::open_unclean(&store)
+                .err()
+                .expect("second RW open of a live store must be refused");
+            assert!(format!("{err}").contains("locked"), "{err}");
+            let err = MetallManager::open(&store)
+                .err()
+                .expect("plain open of a live store must be refused");
+            assert!(format!("{err}").contains("locked"), "{err}");
+        }
+        // attach, report readiness, then follow the owner's epochs and
+        // check the committed-prefix contract on every advance
+        "reader-verify" => reader_verify_child(&store),
+        // attach, report readiness, then just sit holding the lease
+        // until the parent SIGKILLs us
+        "reader-hold" => {
+            let r = ReaderManager::attach(&store).expect("attach to live store");
+            touch_marker();
+            assert!(r.epoch() > 0);
+            loop {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+        other => panic!("unknown child mode {other}"),
+    }
+}
+
+fn touch_marker() {
+    let marker = std::env::var(MARKER_ENV).expect("child needs marker path");
+    std::fs::write(&marker, b"ready").expect("write ready marker");
+}
+
+/// The consistency discipline: a record visible in the view of
+/// committed epoch E was written before E's flush finished, and the
+/// (single-threaded) owner starts E+1's flush only after that — so on
+/// every refresh, everything below the length observed at the
+/// *previous* epoch's view must be bit-exact. The attach-time view is
+/// seeded from live bytes while the owner is quiesced here, so its
+/// whole length qualifies as the first stable prefix.
+fn reader_verify_child(store: &Path) {
+    let mut r = ReaderManager::attach(store).expect("attach to live store");
+    let off = r
+        .find::<u64>("log")
+        .unwrap()
+        .expect("'log' is named in the pinned epoch");
+    let v = PVec::<u64>::from_offset(r.read(off));
+    let len0 = v.len(&r);
+    assert_eq!(len0, BASE_RECORDS as usize, "owner was quiesced at spawn");
+    for i in 0..len0 {
+        assert_eq!(v.get(&r, i), record_value(i as u64), "record {i} at attach");
+    }
+    // the attach is read-only end to end
+    assert!(matches!(r.allocate(16), Err(Error::InvalidOp(_))));
+    touch_marker(); // the owner starts mutating only after this
+
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut advances = 0usize;
+    let mut stable = len0; // verified-prefix bound for the NEXT view
+    let mut prev_len = len0;
+    while advances < 3 {
+        assert!(Instant::now() < deadline, "owner kept committing; refresh must advance");
+        if !r.refresh().expect("refresh") {
+            std::thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        advances += 1;
+        let off = r.find::<u64>("log").unwrap().expect("'log' in every epoch");
+        let v = PVec::<u64>::from_offset(r.read(off));
+        let len = v.len(&r);
+        assert!(len >= prev_len, "committed length is monotone: {len} < {prev_len}");
+        for i in 0..stable {
+            assert_eq!(v.get(&r, i), record_value(i as u64), "record {i} after advance {advances}");
+        }
+        stable = prev_len;
+        prev_len = len;
+    }
+    // fall through: the harness exits 0, the lease Drop unlinks the file
+}
+
+/// Re-exec this test binary as the attach child.
+fn spawn_child(mode: &str, dir: &Path, marker: &Path) -> std::process::Child {
+    let exe = std::env::current_exe().expect("test binary path");
+    Command::new(exe)
+        .args(["attach_child_entry", "--exact", "--nocapture", "--test-threads=1"])
+        .env(MODE_ENV, mode)
+        .env(DIR_ENV, dir)
+        .env(MARKER_ENV, marker)
+        .spawn()
+        .expect("spawn attach child")
+}
+
+fn wait_marker(marker: &Path) {
+    let t0 = Instant::now();
+    while !marker.exists() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "child never reported ready");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// One owner round: mutate management + data, then commit an epoch.
+fn owner_round(m: &MetallManager, v: &PVec<u64>, next: &mut u64, round: usize) {
+    for _ in 0..40 {
+        v.push(m, record_value(*next)).unwrap();
+        *next += 1;
+    }
+    m.construct::<u64>(&format!("r{round}"), round as u64).unwrap();
+    m.sync().unwrap();
+}
+
+#[test]
+fn double_rw_open_is_rejected_while_owner_live() {
+    let d = TempDir::new("attach-lock");
+    let store = d.join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+
+    // in-process: flock is per open-file-description, so a second open
+    // in the same process conflicts exactly like another process would
+    for (what, res) in [
+        ("open", MetallManager::open(&store).err()),
+        ("open_unclean", MetallManager::open_unclean(&store).err()),
+        ("open_read_only", MetallManager::open_read_only(&store).err()),
+    ] {
+        let err = res.unwrap_or_else(|| panic!("{what} of a live store must be refused"));
+        assert!(format!("{err}").contains("locked"), "{what}: {err}");
+    }
+
+    // cross-process: the child asserts the same refusals from outside
+    let marker = d.join("unused-marker");
+    let mut child = spawn_child("second-open", d.path(), &marker);
+    let status = child.wait().expect("wait for second-open child");
+    assert!(status.success(), "second-open child failed: {status:?}");
+
+    m.close().unwrap();
+
+    // closed store: RO openers share the lock with each other but still
+    // exclude writers
+    let ro1 = MetallManager::open_read_only(&store).unwrap();
+    let ro2 = MetallManager::open_read_only(&store).unwrap();
+    let err = MetallManager::open(&store).err().expect("RW open must wait for RO holders");
+    assert!(format!("{err}").contains("locked"), "{err}");
+    drop(ro1);
+    drop(ro2);
+    MetallManager::open(&store).unwrap().close().unwrap();
+}
+
+#[test]
+fn snapshot_isolation_pinned_view_survives_owner_mutation() {
+    let d = TempDir::new("attach-iso");
+    let store = d.join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("log", v.offset()).unwrap();
+    for i in 0..500u64 {
+        v.push(&m, record_value(i)).unwrap();
+    }
+    m.sync().unwrap();
+
+    // attach pins the newest committed epoch with zero staleness
+    let mut r = ReaderManager::attach(&store).unwrap();
+    assert_eq!(r.epoch(), *list_manifest_epochs(&store).unwrap().last().unwrap());
+    assert_eq!(r.attach_stats().staleness_epochs, 0);
+    assert!(matches!(r.allocate(8), Err(Error::InvalidOp(_))));
+    assert!(matches!(SegmentAlloc::deallocate(&r, 64), Err(Error::InvalidOp(_))));
+    let off = r.find::<u64>("log").unwrap().unwrap();
+    let rv = PVec::<u64>::from_offset(r.read(off));
+    assert_eq!(rv.len(&r), 500);
+
+    // the owner rewrites everything and grows the vector, then commits
+    for i in 0..500u64 {
+        v.set(&m, i as usize, 9999);
+    }
+    for i in 500..800u64 {
+        v.push(&m, record_value(i)).unwrap();
+    }
+    m.construct::<u64>("v2", 2).unwrap();
+    m.sync().unwrap();
+
+    // the pinned view is frozen at its epoch…
+    assert_eq!(rv.len(&r), 500, "pinned view must not see the growth");
+    for i in 0..500u64 {
+        assert_eq!(rv.get(&r, i as usize), record_value(i), "pinned record {i}");
+    }
+    assert!(r.find::<u64>("v2").unwrap().is_none(), "pinned names are frozen too");
+
+    // …until refresh() re-pins to the new commit
+    assert!(r.refresh().unwrap(), "a newer epoch exists");
+    let off = r.find::<u64>("log").unwrap().unwrap();
+    let rv = PVec::<u64>::from_offset(r.read(off));
+    assert_eq!(rv.len(&r), 800);
+    for i in 0..500 {
+        assert_eq!(rv.get(&r, i), 9999, "refreshed record {i}");
+    }
+    for i in 500..800u64 {
+        assert_eq!(rv.get(&r, i as usize), record_value(i), "refreshed record {i}");
+    }
+    assert!(r.find::<u64>("v2").unwrap().is_some());
+    assert!(!r.refresh().unwrap(), "no newer epoch: refresh is a no-op");
+
+    r.detach().unwrap();
+    m.close().unwrap();
+}
+
+#[test]
+fn gc_preserves_pinned_epoch_across_sync_cycles() {
+    let d = TempDir::new("attach-gc");
+    let store = d.join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("log", v.offset()).unwrap();
+    let mut next = 0u64;
+    owner_round(&m, &v, &mut next, 0);
+
+    let pinned = *list_manifest_epochs(&store).unwrap().last().unwrap();
+    let mut r = ReaderManager::attach(&store).unwrap();
+    assert_eq!(r.epoch(), pinned);
+    let pinned_sections = read_manifest(&store, pinned).unwrap().sections;
+
+    // six epochs of churn: without the pin, `pinned` would be far
+    // behind the keep window and collected — the lease must hold it
+    for round in 1..=6 {
+        owner_round(&m, &v, &mut next, round);
+        assert!(
+            store.join(manifest_file_name(pinned)).exists(),
+            "round {round}: pinned manifest was GC'd with the lease live"
+        );
+        for s in &pinned_sections {
+            assert!(store.join(&s.file).exists(), "round {round}: pinned section {}", s.file);
+        }
+        // the frozen view stays fully readable the whole time
+        let off = r.find::<u64>("log").unwrap().unwrap();
+        assert_eq!(PVec::<u64>::from_offset(r.read(off)).len(&r), 40);
+    }
+
+    // unpin (refresh to newest), let two more cycles run: the old epoch
+    // is now collectable and must actually go away
+    assert!(r.refresh().unwrap());
+    assert!(r.epoch() > pinned);
+    for round in 7..=8 {
+        owner_round(&m, &v, &mut next, round);
+    }
+    assert!(
+        !store.join(manifest_file_name(pinned)).exists(),
+        "unpinned old manifest must be collected again"
+    );
+
+    r.detach().unwrap();
+    m.close().unwrap();
+}
+
+#[test]
+fn attach_requires_committed_epoch_and_works_on_closed_store() {
+    let d = TempDir::new("attach-epoch");
+    let store = d.join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("log", v.offset()).unwrap();
+    v.push(&m, record_value(0)).unwrap();
+
+    // never synced: nothing committed to pin
+    let err = ReaderManager::attach(&store).err().expect("attach needs a committed epoch");
+    assert!(format!("{err}").contains("no committed epoch"), "{err}");
+    // and the failed attempt leaves no lease behind
+    assert_eq!(scan_pins(&store).live, 0);
+
+    m.sync().unwrap();
+    let r = ReaderManager::attach(&store).unwrap();
+    assert_eq!(PVec::<u64>::from_offset(r.read(r.find::<u64>("log").unwrap().unwrap())).len(&r), 1);
+    r.detach().unwrap();
+    m.close().unwrap();
+
+    // a cleanly closed store attaches just as well (no owner needed)
+    let r = ReaderManager::attach(&store).unwrap();
+    let rv = PVec::<u64>::from_offset(r.read(r.find::<u64>("log").unwrap().unwrap()));
+    assert_eq!(rv.get(&r, 0), record_value(0));
+    r.detach().unwrap();
+}
+
+#[test]
+fn reader_follows_live_owner_across_epochs() {
+    let d = TempDir::new("attach-live");
+    let store = d.join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("log", v.offset()).unwrap();
+    let mut next = 0u64;
+    for _ in 0..BASE_RECORDS {
+        v.push(&m, record_value(next)).unwrap();
+        next += 1;
+    }
+    m.sync().unwrap(); // the epoch the child pins, owner quiesced
+
+    let marker = d.join("ready");
+    let mut child = spawn_child("reader-verify", d.path(), &marker);
+    wait_marker(&marker);
+
+    // keep committing epochs until the child has verified three
+    // advances of its view (it exits 0 on success, panics on any
+    // consistency violation)
+    let t0 = Instant::now();
+    let mut round = 1usize;
+    let status = loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            break status;
+        }
+        if t0.elapsed() > Duration::from_secs(90) {
+            let _ = child.kill();
+            panic!("reader-verify child did not finish");
+        }
+        owner_round(&m, &v, &mut next, round);
+        round += 1;
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert!(status.success(), "reader-verify child failed: {status:?}");
+
+    // clean exit dropped the lease
+    let pins = scan_pins(&store);
+    assert_eq!(pins.live, 0, "no live lease after the reader exited");
+    m.close().unwrap();
+}
+
+#[test]
+fn kill9_reader_lease_is_reaped_and_epoch_collectable_again() {
+    use std::os::unix::process::ExitStatusExt;
+    let d = TempDir::new("attach-kill9");
+    let store = d.join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("log", v.offset()).unwrap();
+    let mut next = 0u64;
+    owner_round(&m, &v, &mut next, 0);
+    let pinned = *list_manifest_epochs(&store).unwrap().last().unwrap();
+
+    let marker = d.join("ready");
+    let mut child = spawn_child("reader-hold", d.path(), &marker);
+    wait_marker(&marker);
+
+    // the lease is live and pins the attach epoch; GC honours it
+    let pins = scan_pins(&store);
+    assert_eq!(pins.live, 1);
+    assert!(!pins.pin_all, "a settled reader pins one epoch, not everything");
+    assert_eq!(pins.epochs, [pinned]);
+    for round in 1..=2 {
+        owner_round(&m, &v, &mut next, round);
+    }
+    assert!(store.join(manifest_file_name(pinned)).exists());
+
+    // kill -9: no Drop runs, the lease file stays behind — but the
+    // kernel releases the dead process's flock, so the next scan probes
+    // the lease as acquirable, reaps it, and unpins the epoch
+    child.kill().expect("SIGKILL the reader");
+    let status = child.wait().expect("reap the reader");
+    assert_eq!(status.signal(), Some(libc::SIGKILL));
+    let pins = scan_pins(&store);
+    assert_eq!(pins.live, 0, "dead reader must not count as live");
+    assert_eq!(pins.reaped, 1, "stale lease must be reaped");
+
+    for round in 3..=4 {
+        owner_round(&m, &v, &mut next, round);
+    }
+    assert!(
+        !store.join(manifest_file_name(pinned)).exists(),
+        "after the reap, the old epoch is collectable again"
+    );
+    m.close().unwrap();
+}
