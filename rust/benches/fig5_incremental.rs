@@ -1,11 +1,13 @@
 //! Fig 5 — cumulative execution time per month of incrementally
 //! constructing the Wikipedia-like and Reddit-like graphs on simulated
-//! Lustre and VAST, for direct-mmap / staging-mmap / bs-mmap.
+//! Lustre and VAST, for direct-mmap / staging-mmap / bs-mmap — plus the
+//! background-engine comparison (serial depth-1 vs pipelined depth-2
+//! month-boundary flushes on the same simulated backends).
 //!
 //! `cargo bench --bench fig5_incremental -- [--months 8] [--first-month 20000]`
 
 use metall_rs::bench_util::{record, BenchArgs, Table};
-use metall_rs::experiments::fig5::{run_cell, Fig5Params, IoMode};
+use metall_rs::experiments::fig5::{run_bg_cell, run_cell, Fig5Params, IoMode};
 use metall_rs::util::human;
 use metall_rs::util::jsonw::JsonObj;
 use metall_rs::util::tmp::TempDir;
@@ -58,6 +60,42 @@ fn main() -> anyhow::Result<()> {
                 human::duration(b)
             );
         }
+    }
+
+    // Background-engine comparison: the same incremental shape with the
+    // flush on the sync engine — strictly serial vs epoch-pipelined.
+    for fs in ["lustre", "vast"] {
+        let mut t = Table::new(&["month", "bg-serial flush", "bg-pipelined flush"]);
+        let serial = run_bg_cell(fs, "wiki", false, &p, work.path())?;
+        let piped = run_bg_cell(fs, "wiki", true, &p, work.path())?;
+        let (mut cs, mut cp) = (0.0f64, 0.0f64);
+        for m in 0..p.months as usize {
+            cs += serial[m].flush_secs;
+            cp += piped[m].flush_secs;
+            t.row(&[format!("{m}"), human::duration(cs), human::duration(cp)]);
+            for cell in [&serial, &piped] {
+                record(
+                    "fig5_incremental",
+                    JsonObj::new()
+                        .str("fs", fs)
+                        .str("dataset", "wiki")
+                        .str("mode", cell[m].mode)
+                        .int("month", m as i64)
+                        .int("edges", cell[m].edges as i64)
+                        .num("ingest_secs", cell[m].ingest_secs)
+                        .num("flush_secs", cell[m].flush_secs),
+                );
+            }
+        }
+        t.print(&format!(
+            "Fig 5 — wiki on {fs}, background engine (cumulative flush stall)"
+        ));
+        println!(
+            "  totals: bg-serial {} | bg-pipelined {} = {:.2}x",
+            human::duration(cs),
+            human::duration(cp),
+            cp / cs.max(1e-9)
+        );
     }
     Ok(())
 }

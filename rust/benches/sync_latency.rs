@@ -20,25 +20,40 @@
 //! backpressure. Acceptance bar: background ingest-thread stall ≤ 25 %
 //! of the inline stall at the 64 MiB / 1 %-dirty shape.
 //!
+//! A **simulated-backend matrix** then replays the fig5 incremental
+//! shape against the [`metall_rs::storage::netfs`] cost models
+//! (default lustre + vast, `sleep_scale = 1.0` so the modelled backend
+//! really paces the threads), pipelined (depth 2, `sync_async` per
+//! round + one final wait) vs serial (depth 1, blocking `sync()` per
+//! round). The measure is the sync stall the ingest loop observes on
+//! the persist path; acceptance bar on lustre: pipelined ≤ 0.7× serial.
+//! Each pipelined cell also reports the bandwidth-adaptive watermark
+//! against the profile's bandwidth-delay product (bar: within 2×).
+//!
 //! Results go to the human table, to `bench_results/sync_latency.jsonl`,
-//! and to `BENCH_sync.json` at the repo root — written twice, a
-//! `"status": "started"` stub up front and the full document at the end,
-//! so every run leaves a machine-readable trace even if interrupted.
+//! and to `BENCH_sync.json` / `BENCH_sync_netfs.json` at the repo root —
+//! each written twice, a `"status": "started"` stub up front and the
+//! full document at the end, so every run leaves a machine-readable
+//! trace even if interrupted.
 //!
 //! `cargo bench --bench sync_latency -- [--sizes-mb 64,256]
-//!  [--permille 10,0] [--repeats 3] [--bg-rounds 12]`
+//!  [--permille 10,0] [--repeats 3] [--bg-rounds 12]
+//!  [--netfs-profiles lustre,vast] [--netfs-rounds 8] [--netfs-mb 24]
+//!  [--netfs-compute-ms 40]`
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use metall_rs::alloc::{ManagerOptions, MetallManager};
 use metall_rs::bench_util::{record, BenchArgs, Table};
+use metall_rs::storage::netfs;
 use metall_rs::util::human;
 use metall_rs::util::jsonw::JsonObj;
 use metall_rs::util::tmp::TempDir;
 
 const CHUNK: usize = 256 << 10; // 256 KiB: a 64 MiB store has 256 chunks
 const OUT: &str = "BENCH_sync.json";
+const OUT_NETFS: &str = "BENCH_sync_netfs.json";
 
 struct Cell {
     size_mb: usize,
@@ -83,21 +98,122 @@ fn build_store(
     Ok((m, reps, nchunks))
 }
 
+/// One simulated-backend cell: the fig5 incremental shape against a
+/// [`metall_rs::storage::netfs`] cost model, either strictly serial
+/// (depth 1, blocking `sync()` per round) or pipelined (depth 2,
+/// `sync_async` per round + one final wait). `sync_stall_secs` is the
+/// time the ingest loop spent on the persist path.
+struct NetCell {
+    profile: String,
+    mode: &'static str,
+    sync_stall_secs: f64,
+    wall_secs: f64,
+    sim_secs: f64,
+    epochs_committed: u64,
+    peak_in_flight: u64,
+    adaptive_watermark_bytes: u64,
+    measured_bandwidth_bps: u64,
+}
+
+fn netfs_cell(
+    work: &TempDir,
+    profile: &str,
+    pipelined: bool,
+    mb: usize,
+    rounds: usize,
+    compute_ms: u64,
+) -> anyhow::Result<NetCell> {
+    let mode = if pipelined { "pipelined" } else { "serial" };
+    let dir = work.join(&format!("netfs-{profile}-{mode}"));
+    let (m, reps, nchunks) = build_store(&dir, mb, |o| {
+        o.netfs_profile = Some(profile.to_string());
+        o.netfs_sleep_scale = 1.0; // the modelled backend really paces us
+        o.sync_pipeline_depth = if pipelined { 2 } else { 1 };
+    })?;
+    m.sync()?; // first full sync off the measured path
+    let dirty_per_round = (nchunks / 100).clamp(1, 8);
+    let sim0 = m.netfs().map(|n| n.sim_seconds()).unwrap_or(0.0);
+    let t_all = std::time::Instant::now();
+    let mut stall = 0.0f64;
+    let mut last = None;
+    for round in 0..rounds {
+        for i in 0..dirty_per_round {
+            let off = reps[(round * dirty_per_round + i) % reps.len()];
+            m.write::<u64>(off, round as u64);
+        }
+        let tmp = m.allocate(64)?;
+        m.deallocate(tmp)?; // fig5's management-delta shape
+        let t0 = std::time::Instant::now();
+        if pipelined {
+            last = Some(m.sync_async()?);
+        } else {
+            m.sync()?;
+        }
+        stall += t0.elapsed().as_secs_f64();
+        // Modelled ingest compute between flush points — the window the
+        // pipelined engine hides its backend writes behind. The serial
+        // mode gets the identical window; it just cannot overlap it.
+        std::thread::sleep(std::time::Duration::from_millis(compute_ms));
+    }
+    if let Some(t) = last {
+        let t0 = std::time::Instant::now();
+        t.wait()?;
+        stall += t0.elapsed().as_secs_f64();
+    }
+    let wall_secs = t_all.elapsed().as_secs_f64();
+    let sim_secs = m.netfs().map(|n| n.sim_seconds()).unwrap_or(0.0) - sim0;
+    let bg = m.bg_sync_stats();
+    m.close().map_err(|e| anyhow::anyhow!("{e}"))?;
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(NetCell {
+        profile: profile.to_string(),
+        mode,
+        sync_stall_secs: stall,
+        wall_secs,
+        sim_secs,
+        epochs_committed: bg.epochs_committed,
+        peak_in_flight: bg.pipeline_peak_in_flight,
+        adaptive_watermark_bytes: bg.adaptive_watermark_bytes,
+        measured_bandwidth_bps: bg.measured_bandwidth_bps,
+    })
+}
+
 fn main() -> anyhow::Result<()> {
     let args = BenchArgs::parse();
     let sizes_mb = args.get_usize_list("sizes-mb", &[64]);
     let permille = args.get_usize_list("permille", &[10, 0]);
     let repeats = args.get_usize("repeats", 3).max(1);
     let bg_rounds = args.get_usize("bg-rounds", 12).max(1);
+    let netfs_profiles: Vec<String> = args
+        .get("netfs-profiles")
+        .unwrap_or("lustre,vast")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let netfs_rounds = args.get_usize("netfs-rounds", 8).max(2);
+    let netfs_mb = args.get_usize("netfs-mb", 24).max(8);
+    let netfs_compute_ms = args.get_usize("netfs-compute-ms", 40) as u64;
+    // unknown profile names fail fast, before any store is built
+    for p in &netfs_profiles {
+        netfs::profile_by_name_strict(p).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
     let work = TempDir::new("sync-latency");
 
-    // the trajectory file must exist whatever happens after this point
+    // the trajectory files must exist whatever happens after this point
     let stub = JsonObj::new()
         .str("bench", "sync_latency")
         .str("status", "started")
         .raw("results", "[]")
         .finish();
     std::fs::write(OUT, stub + "\n")?;
+    let stub = JsonObj::new()
+        .str("bench", "sync_latency_netfs")
+        .str("status", "started")
+        .raw("results", "[]")
+        .raw("profiles", "[]")
+        .finish();
+    std::fs::write(OUT_NETFS, stub + "\n")?;
 
     let mut t = Table::new(&[
         "size", "phase", "time", "vs full", "dirty sects", "sect bytes", "data chunks",
@@ -255,6 +371,21 @@ fn main() -> anyhow::Result<()> {
         cache_slots: 0,
     });
 
+    // ---- simulated-backend matrix: profile × serial-vs-pipelined ----
+    let mut netcells: Vec<NetCell> = Vec::new();
+    for p in &netfs_profiles {
+        for pipelined in [false, true] {
+            netcells.push(netfs_cell(
+                &work,
+                p,
+                pipelined,
+                netfs_mb,
+                netfs_rounds,
+                netfs_compute_ms,
+            )?);
+        }
+    }
+
     for c in &cells {
         let vs_full = cells
             .iter()
@@ -355,5 +486,122 @@ fn main() -> anyhow::Result<()> {
     }
     std::fs::write(OUT, doc.finish() + "\n")?;
     println!("wrote {OUT}");
+
+    // ---- simulated-backend matrix: table + BENCH_sync_netfs.json ----
+    let mut nt = Table::new(&[
+        "backend", "mode", "sync stall", "wall", "sim io", "epochs", "peak", "adaptive wm",
+        "meas bw",
+    ]);
+    for c in &netcells {
+        nt.row(&[
+            c.profile.clone(),
+            c.mode.to_string(),
+            human::duration(c.sync_stall_secs),
+            human::duration(c.wall_secs),
+            human::duration(c.sim_secs),
+            c.epochs_committed.to_string(),
+            c.peak_in_flight.to_string(),
+            human::bytes(c.adaptive_watermark_bytes),
+            human::rate(c.measured_bandwidth_bps as f64),
+        ]);
+        record(
+            "sync_latency",
+            JsonObj::new()
+                .str("bench", "sync-netfs")
+                .str("profile", &c.profile)
+                .str("mode", c.mode)
+                .num("sync_stall_secs", c.sync_stall_secs)
+                .num("wall_secs", c.wall_secs)
+                .num("sim_secs", c.sim_secs)
+                .int("epochs_committed", c.epochs_committed as i64)
+                .int("pipeline_peak_in_flight", c.peak_in_flight as i64)
+                .int("adaptive_watermark_bytes", c.adaptive_watermark_bytes as i64)
+                .int("measured_bandwidth_bps", c.measured_bandwidth_bps as i64),
+        );
+    }
+    nt.print(&format!(
+        "simulated backends: fig5 incremental shape, {netfs_rounds} rounds × \
+         {netfs_compute_ms} ms modelled ingest compute, serial vs pipelined"
+    ));
+
+    let mut nrows = String::from("[");
+    for (i, c) in netcells.iter().enumerate() {
+        if i > 0 {
+            nrows.push(',');
+        }
+        nrows.push_str(
+            &JsonObj::new()
+                .str("profile", &c.profile)
+                .str("mode", c.mode)
+                .num("sync_stall_secs", c.sync_stall_secs)
+                .num("wall_secs", c.wall_secs)
+                .num("sim_secs", c.sim_secs)
+                .int("epochs_committed", c.epochs_committed as i64)
+                .int("pipeline_peak_in_flight", c.peak_in_flight as i64)
+                .int("adaptive_watermark_bytes", c.adaptive_watermark_bytes as i64)
+                .int("measured_bandwidth_bps", c.measured_bandwidth_bps as i64)
+                .finish(),
+        );
+    }
+    nrows.push(']');
+    let mut summaries = String::from("[");
+    for (i, p) in netfs_profiles.iter().enumerate() {
+        let bdp = netfs::profile_by_name_strict(p)
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .bdp_bytes();
+        let serial = netcells.iter().find(|c| &c.profile == p && c.mode == "serial");
+        let piped = netcells.iter().find(|c| &c.profile == p && c.mode == "pipelined");
+        let (serial, piped) = match (serial, piped) {
+            (Some(s), Some(pl)) => (s, pl),
+            _ => continue,
+        };
+        let ratio = piped.sync_stall_secs / serial.sync_stall_secs.max(1e-9);
+        let wm_over_bdp = piped.adaptive_watermark_bytes as f64 / bdp.max(1) as f64;
+        println!(
+            "{p}: pipelined sync stall {} vs serial {} = {:.2}x (bar ≤ 0.7 on lustre); \
+             adaptive watermark {} vs BDP {} = {:.2}x (bar within 2x)",
+            human::duration(piped.sync_stall_secs),
+            human::duration(serial.sync_stall_secs),
+            ratio,
+            human::bytes(piped.adaptive_watermark_bytes),
+            human::bytes(bdp),
+            wm_over_bdp
+        );
+        if i > 0 {
+            summaries.push(',');
+        }
+        summaries.push_str(
+            &JsonObj::new()
+                .str("profile", p)
+                .int("bdp_bytes", bdp as i64)
+                .num("serial_sync_stall_secs", serial.sync_stall_secs)
+                .num("pipelined_sync_stall_secs", piped.sync_stall_secs)
+                .num("pipelined_over_serial_sync_ratio", ratio)
+                .int("adaptive_watermark_bytes", piped.adaptive_watermark_bytes as i64)
+                .num("watermark_over_bdp", wm_over_bdp)
+                .int("measured_bandwidth_bps", piped.measured_bandwidth_bps as i64)
+                .finish(),
+        );
+    }
+    summaries.push(']');
+    let ndoc = JsonObj::new()
+        .str("bench", "sync_latency_netfs")
+        .str("status", "complete")
+        .str(
+            "workload",
+            "fig5 incremental shape against the netfs cost models (sleep_scale=1.0): \
+             per round dirty ~1% of chunks + one alloc/free, then blocking sync() \
+             (serial, depth 1) vs sync_async + one final wait (pipelined, depth 2), \
+             with fixed modelled ingest compute between flush points",
+        )
+        .int("chunk_size", CHUNK as i64)
+        .int("store_mb", netfs_mb as i64)
+        .int("rounds", netfs_rounds as i64)
+        .int("compute_ms", netfs_compute_ms as i64)
+        .num("background_stall_ratio", bg_stall_ratio)
+        .raw("results", &nrows)
+        .raw("profiles", &summaries);
+    std::fs::write(OUT_NETFS, ndoc.finish() + "\n")?;
+    println!("wrote {OUT_NETFS}");
     Ok(())
 }

@@ -4,13 +4,14 @@
 //! from the simulator itself).
 
 use metall_rs::bench_util::{record, Table};
-use metall_rs::storage::netfs::{profile_by_name, SimNetFs};
+use metall_rs::storage::netfs::{profile_by_name_strict, SimNetFs};
 use metall_rs::util::jsonw::JsonObj;
 
 fn main() {
     let mut t = Table::new(&["device", "op latency", "bandwidth", "concurrency", "metadata op"]);
     for name in ["optane", "nvme", "vast", "lustre"] {
-        let p = profile_by_name(name).unwrap();
+        // strict lookup: a typo here aborts listing the known profiles
+        let p = profile_by_name_strict(name).expect("known profile");
         t.row(&[
             p.name.to_string(),
             format!("{:.1} us", p.op_latency * 1e6),
@@ -31,11 +32,11 @@ fn main() {
     t.print("Table 1: device cost model (derived from paper Table 1)");
 
     // measured sanity of the model: latency ordering and bandwidth ordering
-    let lat = |n: &str| SimNetFs::new(profile_by_name(n).unwrap()).charge_io(1, 0, 1);
+    let lat = |n: &str| SimNetFs::new(profile_by_name_strict(n).unwrap()).charge_io(1, 0, 1);
     assert!(lat("optane") < lat("nvme"), "optane beats nvme on latency");
     assert!(lat("nvme") < lat("vast"), "local beats network on latency");
     assert!(lat("vast") < lat("lustre"), "vast is the latency-oriented PFS");
-    let bw = |n: &str| SimNetFs::new(profile_by_name(n).unwrap()).charge_io(0, 1 << 30, 16);
+    let bw = |n: &str| SimNetFs::new(profile_by_name_strict(n).unwrap()).charge_io(0, 1 << 30, 16);
     assert!(bw("lustre") < bw("vast"), "lustre is the throughput-oriented PFS");
     println!("\norderings verified: optane < nvme < vast < lustre (latency); lustre > vast (bandwidth)");
 }

@@ -1,48 +1,92 @@
-//! Background sync engine: a watermark-driven asynchronous flusher with
-//! epoch tickets, layered on the incremental (segmented-manifest) persist
-//! path.
+//! Background sync engine: an epoch-pipelined, watermark-driven
+//! asynchronous flusher with epoch tickets, layered on the incremental
+//! (segmented-manifest) persist path.
 //!
 //! The PR-4 sync made persistence O(delta); this module takes it **off
-//! the mutation path** entirely. A [`SyncEngine`] owned by every
-//! read-write [`super::manager::MetallManager`] runs one dedicated
-//! flusher thread (which in turn drives the existing flusher *pool* for
-//! section writes and the range-narrowed data msync). Three triggers
-//! start a flush:
+//! the mutation path** entirely — and overlaps it with itself. A
+//! [`SyncEngine`] owned by every read-write
+//! [`super::manager::MetallManager`] runs two dedicated threads:
 //!
-//! 1. **Dirty-byte high watermark**
-//!    ([`super::manager::ManagerOptions::sync_watermark_bytes`]): the
-//!    chunk-granular `DirtyChunkSet` keeps a running count of un-synced
-//!    data bytes; crossing the watermark kicks the flusher with one
-//!    atomic swap + condvar signal — the writer never waits.
+//! - the **flusher** (`metall-bgsync`) takes consistent cuts
+//!   ([`ManagerCore::prepare_epoch`]): it drains remote frees, swaps out
+//!   the dirty data chunks, serializes every dirty management section
+//!   *to memory* under one simultaneous lock acquisition, and assigns
+//!   the cut its epoch number;
+//! - the **committer** (`metall-bgcommit`) makes cuts durable
+//!   ([`ManagerCore::commit_epoch`]): data msync, section-file writes,
+//!   the fsync'd atomic manifest rename — where the time goes on a slow
+//!   (Lustre/VAST-like) backend.
+//!
+//! Prepared cuts travel through a bounded in-memory queue
+//! ([`super::manager::ManagerOptions::sync_pipeline_depth`], default 2
+//! in-flight epochs): while epoch N's msync and section writes are still
+//! in flight, the flusher may already take the cut for epoch N+1. The
+//! queue is FIFO and the committer is single, so **manifests commit
+//! strictly in epoch order** — N+1's rename never lands before N's (and
+//! [`ManagerCore::commit_epoch`] refuses a non-monotone epoch outright).
+//! Side-copy freezing for pinned readers keys off the epoch assigned at
+//! cut time, so multiple uncommitted tags may briefly coexist; see
+//! `alloc/readers`.
+//!
+//! Three triggers start a flush round:
+//!
+//! 1. **Dirty-byte watermark**: the chunk-granular `DirtyChunkSet` keeps
+//!    a running count of un-synced data bytes; crossing the watermark
+//!    kicks the flusher with one atomic swap + condvar signal — the
+//!    writer never waits. The threshold is the **bandwidth-adaptive**
+//!    value below when active, else the configured
+//!    [`super::manager::ManagerOptions::sync_watermark_bytes`].
 //! 2. **Interval timer**
 //!    ([`super::manager::ManagerOptions::sync_interval_ms`]): the
 //!    flusher's idle wait times out and flushes if anything — data *or*
 //!    management sections — is dirty.
 //! 3. **Explicit request**: `sync_async()` returns a [`SyncTicket`];
 //!    `SyncTicket::wait()` blocks until the flush *epoch* covering the
-//!    request has its manifest durably committed (fsync'd atomic
-//!    rename). `sync()` is exactly `sync_async()` + `wait()` — the
-//!    durability contract of the old inline sync is unchanged.
+//!    request has its manifest durably committed. `sync()` is exactly
+//!    `sync_async()` + `wait()` — the durability contract of the old
+//!    inline sync is unchanged.
 //!
-//! ## Epochs and the cheap quiesce point
+//! ## The adaptive watermark
+//!
+//! A fixed watermark is wrong on every backend but the one it was tuned
+//! for: too low on Lustre (each flush pays a multi-ms round trip for few
+//! bytes), too high on NVMe (data sits volatile for no reason). The
+//! engine therefore measures, per committed epoch, the **effective flush
+//! bandwidth** and the **fixed per-flush round-trip delay** (from the
+//! [`crate::storage::netfs::SimNetFs`] charge account when a profile is
+//! active, else measured wall time) and EWMA-smooths both
+//! ([`EWMA_ALPHA`]). After [`MIN_ADAPTIVE_SAMPLES`] data-carrying
+//! flushes the watermark is set near the measured **bandwidth-delay
+//! product** — the batch size at which the bandwidth term catches up
+//! with one op round trip — clamped to `[`[`ADAPTIVE_FLOOR`]`,
+//! ceiling/2]` (or [`ADAPTIVE_CEILING_DEFAULT`] when no ceiling is
+//! configured). The adaptive value only *arms the trigger* when a
+//! watermark was configured at all and
+//! [`super::manager::ManagerOptions::sync_watermark_adaptive`] is set;
+//! it is always exported via [`BgSyncStats::adaptive_watermark_bytes`].
+//!
+//! ## Generations, riders, and the cheap quiesce point
 //!
 //! The engine counts *flush generations*: every explicit request bumps
-//! `requested`; each flush captures `covered = requested` before it
-//! starts and, on success, advances `completed` to it — one flush
-//! coalesces every request made before it began, because those callers'
-//! mutations (and their dirty-epoch marks) strictly precede the flush's
-//! section serialization. The quiesce point is a **consistent cut**
+//! `requested`; each cut captures `covered = requested` before it starts
+//! — one cut coalesces every request made before it began, because those
+//! callers' mutations (and their dirty marks) strictly precede the cut's
+//! section serialization. `completed` advances to a cut's `covered` only
+//! when its manifest is durable (commit order makes that monotone). A
+//! round that finds **nothing dirty** while earlier epochs are still in
+//! flight cannot advance `completed` yet — its requests are durable only
+//! once those epochs land — so their generations *ride* (`riders`) and
+//! are folded into `completed` when the queue drains.
+//!
+//! The quiesce point is the consistent cut
 //! (`ManagerCore::serialize_sections_cut`): the flusher briefly holds
 //! every management lock at once — in the allocator's own bin → chunks
 //! order, so no serialization point can deadlock against it — while it
-//! swaps out the dirty marks and serializes the dirty sections *to
-//! memory*; a committed epoch is therefore the exact management state
-//! of a single instant even with mutators running (per-section lock
-//! scopes would let a fresh chunk slip between two sections and commit
-//! a bin that references a chunk the chunk section calls Free). All
-//! file I/O — section writes, data msync, the manifest commit — happens
-//! after the cut is released, which is where the time goes; per-core
-//! cache hits and data writes are never paused at all.
+//! swaps out the dirty marks and serializes the dirty sections to
+//! memory; a committed epoch is therefore the exact management state of
+//! a single instant even with mutators running. All file I/O happens on
+//! the committer, after the cut is released; per-core cache hits and
+//! data writes are never paused at all.
 //!
 //! ## Backpressure
 //!
@@ -55,33 +99,40 @@
 //! ([`BgSyncStats::writer_stalls`], `writer_stall_micros`). Stalls never
 //! happen while the writer holds allocator locks (only the lock-free
 //! `mark_data_dirty` path stalls), so the flusher can always make
-//! progress.
+//! progress; under the pipeline a stall ends as soon as the *cut* drains
+//! the dirty set, not when the commit lands.
 //!
-//! ## Panic containment and shutdown
+//! ## Panic containment, failure attribution, and shutdown
 //!
-//! The flush body runs under `catch_unwind`: a panicking flusher marks
-//! the engine **dead**, wakes every waiter with an error, and every
-//! subsequent `sync()`/`sync_async()`/`close()` returns
+//! Both thread bodies run under `catch_unwind`: a panicking flusher or
+//! committer marks the engine **dead**, wakes every waiter with an
+//! error, and every subsequent `sync()`/`sync_async()`/`close()` returns
 //! [`Error::BgSync`] — never a silent no-op. A dead engine also refuses
 //! to write the `CLEAN` marker, so recovery falls back to the last
-//! complete manifest instead of trusting a store the flusher abandoned.
-//! `close()`/`Drop` drain the engine (a final flush resolves any
-//! outstanding tickets), join the thread, and only then run the inline
+//! complete manifest. Attribution is per *epoch*, not per engine: if the
+//! committer dies with epoch N committed and N+1 queued, tickets covered
+//! by N still resolve `Ok` (their manifest is durable) and only tickets
+//! mapping onto N+1 surface the error. `close()`/`Drop` drain the engine
+//! (the flusher hands its last cuts to the committer, the committer
+//! drains the queue), join both threads, and only then run the inline
 //! close sync.
 //!
-//! I/O *errors* (as opposed to panics) are not fatal: the failing flush
-//! re-marks everything it cleared (`sync_now`'s existing contract), the
-//! error span is recorded so the tickets it covered see it, and the next
-//! flush retries.
+//! I/O *errors* (as opposed to panics) are not fatal: a failed cut or
+//! commit re-marks everything it cleared
+//! ([`ManagerCore::abort_epoch`]), a commit failure aborts every *later*
+//! queued epoch too (their manifests would carry forward section files
+//! the failed epoch never durably referenced), the merged error span is
+//! recorded so exactly the covered tickets see it, and the next flush
+//! retries with exponential backoff.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
+use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::alloc::manager::ManagerCore;
+use crate::alloc::manager::{ManagerCore, PreparedEpoch};
 use crate::error::{Error, Result};
 
 /// Error spans kept for ticket waiters; beyond this many *failed*
@@ -92,6 +143,23 @@ const MAX_ERROR_SPANS: usize = 32;
 /// How long a stalled writer sleeps between dirty-estimate re-checks.
 const STALL_RECHECK: Duration = Duration::from_millis(10);
 
+/// Lower clamp of the adaptive watermark: never flush-batch less than
+/// this, however low the measured bandwidth-delay product (64 KiB — one
+/// default chunk).
+pub(crate) const ADAPTIVE_FLOOR: u64 = 64 << 10;
+
+/// Upper clamp of the adaptive watermark when no backpressure ceiling is
+/// configured (256 MiB). With a ceiling, the clamp is `ceiling / 2` so
+/// the trigger always fires well before writers stall.
+pub(crate) const ADAPTIVE_CEILING_DEFAULT: u64 = 256 << 20;
+
+/// EWMA smoothing factor for the measured bandwidth / delay.
+const EWMA_ALPHA: f64 = 0.3;
+
+/// Data-carrying flushes observed before the adaptive value overrides
+/// the configured watermark (one sample is noise).
+const MIN_ADAPTIVE_SAMPLES: u64 = 2;
+
 /// Observability snapshot of the background engine
 /// ([`super::manager::MetallManager::bg_sync_stats`]), exported as
 /// `alloc.bgsync.*` by
@@ -99,10 +167,11 @@ const STALL_RECHECK: Duration = Duration::from_millis(10);
 /// are cumulative over the engine's lifetime.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct BgSyncStats {
-    /// Flushes the background thread ran (any trigger).
+    /// Flush rounds the flusher ran (any trigger; a round is one cut,
+    /// whether it found work or not).
     pub flushes: u64,
-    /// … of which returned an error (the dirty state was re-marked and
-    /// the next flush retries; covered tickets see the failure).
+    /// … of which failed — a cut or commit error (the dirty state was
+    /// re-marked and the next flush retries; covered tickets see it).
     pub flush_failures: u64,
     /// Flushes triggered by the dirty-byte watermark.
     pub watermark_triggers: u64,
@@ -126,9 +195,23 @@ pub struct BgSyncStats {
     pub watermark_bytes: u64,
     /// Configured backpressure ceiling (bytes; 0 = disabled).
     pub ceiling_bytes: u64,
+    /// Configured pipeline depth (maximum in-flight epochs).
+    pub pipeline_depth: u64,
+    /// Highest number of epochs ever simultaneously in flight
+    /// (committing + queued). ≥ 2 means pipelining actually overlapped.
+    pub pipeline_peak_in_flight: u64,
+    /// Current bandwidth-adaptive watermark (bytes; 0 until
+    /// [`MIN_ADAPTIVE_SAMPLES`] data flushes were measured).
+    pub adaptive_watermark_bytes: u64,
+    /// EWMA of the measured effective flush bandwidth (bytes/second,
+    /// with the fixed per-flush delay removed; 0 until measured).
+    pub measured_bandwidth_bps: u64,
+    /// Manifest-bearing epochs durably committed by the committer.
+    pub epochs_committed: u64,
     /// Is the flusher thread currently running?
     pub engine_running: bool,
-    /// Did the flusher die (panic)? Every sync call errors from then on.
+    /// Did a background thread die (panic)? Every sync call errors from
+    /// then on.
     pub engine_dead: bool,
 }
 
@@ -172,12 +255,13 @@ impl<'e> SyncTicket<'e> {
 
     /// Block until the flush epoch covering this request is durably
     /// committed; returns the flush's result. An engine that died
-    /// (panicked flusher) or shut down before covering the request
-    /// returns [`Error::BgSync`]. A failed flush also surfaces as
-    /// [`Error::BgSync`] carrying the original error's message: the
-    /// concrete variant is flattened to a string because one flush may
-    /// cover many coalesced waiters and the underlying errors are not
-    /// cloneable.
+    /// (panicked flusher/committer) or shut down before covering the
+    /// request returns [`Error::BgSync`] — but a generation whose epoch
+    /// committed *before* the death still resolves `Ok`. A failed flush
+    /// also surfaces as [`Error::BgSync`] carrying the original error's
+    /// message: the concrete variant is flattened to a string because
+    /// one flush may cover many coalesced waiters and the underlying
+    /// errors are not cloneable.
     pub fn wait(self) -> Result<()> {
         match self.engine {
             None => Ok(()),
@@ -186,47 +270,123 @@ impl<'e> SyncTicket<'e> {
     }
 }
 
-/// Flusher-thread bookkeeping, all behind one mutex.
+/// Bandwidth/delay estimator state behind the adaptive watermark.
+struct AdaptiveCtl {
+    /// EWMA of effective flush bandwidth (bytes/sec, delay removed).
+    ewma_bw: f64,
+    /// EWMA of the fixed per-flush round-trip delay (seconds).
+    ewma_delay: f64,
+    /// Data-carrying samples folded in so far.
+    samples: u64,
+}
+
+/// Flusher/committer bookkeeping, all behind one mutex.
 struct EngineState {
     /// Highest explicit flush generation requested.
     requested: u64,
-    /// Highest generation durably covered by a finished flush.
+    /// Highest generation durably covered by a committed epoch (or
+    /// terminally failed — error spans carry the distinction).
     completed: u64,
+    /// Highest generation a flush round has picked up (its cut is taken
+    /// or in progress). Keeps the flusher from re-cutting generations
+    /// whose epochs merely haven't committed yet.
+    handled: u64,
+    /// Generations handled by rounds that found nothing dirty while
+    /// earlier epochs were still in flight: durable only once the queue
+    /// drains, at which point they fold into `completed`.
+    riders: u64,
     /// Watermark kick pending (set by writers, consumed by the flusher).
     kicked: bool,
     shutdown: bool,
-    /// Panic payload of a dead flusher; sticky.
+    /// Panic payload of a dead background thread; sticky.
     dead: Option<String>,
     /// Failed-flush spans `(from_exclusive, to_inclusive, message)` for
     /// ticket waiters; bounded by [`MAX_ERROR_SPANS`].
     errors: VecDeque<(u64, u64, String)>,
+    /// Prepared cuts awaiting commit, in strictly increasing epoch
+    /// order; bounded by the pipeline depth (together with
+    /// `committing`).
+    queue: VecDeque<PreparedEpoch>,
+    /// Generation of the cut the committer is currently making durable.
+    committing: Option<u64>,
+    /// Has the flusher thread returned? The committer may only exit a
+    /// shutdown once this is set — the flusher pushes its final cuts
+    /// while draining, and abandoning them un-committed and un-aborted
+    /// would silently drop their changes (dirty flags were cleared at
+    /// cut time).
+    flusher_exited: bool,
+    /// The flusher thread.
     thread: Option<JoinHandle<()>>,
+    /// The committer thread.
+    committer: Option<JoinHandle<()>>,
+}
+
+impl EngineState {
+    fn in_flight(&self) -> usize {
+        self.queue.len() + usize::from(self.committing.is_some())
+    }
+
+    /// Record a failed span for ticket waiters, merging the two oldest
+    /// spans instead of evicting when full (over-approximating across
+    /// the gap — a stale ticket may see a false *failure*, never a false
+    /// durability Ok).
+    fn push_error_span(&mut self, from: u64, to: u64, msg: String) {
+        self.errors.push_back((from, to, msg));
+        while self.errors.len() > MAX_ERROR_SPANS {
+            let (f1, _, m1) = self.errors.pop_front().unwrap();
+            let (_, t2, _) = self.errors.pop_front().unwrap();
+            self.errors.push_front((f1, t2, m1));
+        }
+    }
 }
 
 /// The background sync engine: one per manager, lazily started (or at
 /// open when a watermark/interval is configured). See the module docs.
 pub(crate) struct SyncEngine {
     /// The manager this engine flushes. `Weak` breaks the ownership
-    /// cycle: the *thread* holds a strong `Arc` for its lifetime, and
+    /// cycle: the *threads* hold strong `Arc`s for their lifetime, and
     /// `shutdown_and_join` always runs before the last strong reference
-    /// outside the thread drops.
+    /// outside the threads drops.
     target: Mutex<Weak<ManagerCore>>,
     state: Mutex<EngineState>,
-    /// Wakes the flusher (request / kick / shutdown / interval).
+    /// Wakes the flusher (request / kick / shutdown / freed pipeline
+    /// slot).
     work_cv: Condvar,
-    /// Signalled after every finished flush (ticket waiters, stalled
-    /// writers).
+    /// Wakes the committer (cut queued / shutdown).
+    commit_cv: Condvar,
+    /// Signalled after every finished round or commit (ticket waiters,
+    /// stalled writers).
     done_cv: Condvar,
-    /// Held for the duration of one flush. `snapshot()`/`doctor()` take
-    /// it so they never observe a half-committed background epoch.
-    flush_gate: Mutex<()>,
+    /// Shared-held by the flusher across a cut and by the committer
+    /// across a commit — the two may overlap each other (that is the
+    /// pipeline). `snapshot()`/`doctor()`/the inline close sync take it
+    /// exclusively so they never observe a half-committed epoch.
+    flush_gate: RwLock<()>,
     watermark: AtomicU64,
     ceiling: AtomicU64,
     interval_ms: AtomicU64,
+    /// Maximum in-flight epochs (committing + queued); ≥ 1.
+    depth: usize,
+    /// Does the adaptive value arm the watermark trigger?
+    adaptive: bool,
+    /// Current adaptive watermark (0 until enough samples).
+    adaptive_wm: AtomicU64,
+    /// EWMA'd effective bandwidth for stats export (bytes/sec).
+    measured_bw_bps: AtomicU64,
+    ctl: Mutex<AdaptiveCtl>,
+    /// Failed-flush retry backoff in ms (0 = none pending), shared
+    /// between flusher (uses it in its idle wait) and committer (bumps
+    /// it on commit failure). The watermark trigger is edge-driven by
+    /// writes: without this, a transient I/O failure after the last
+    /// write would leave dirty data volatile indefinitely on a
+    /// watermark-only engine.
+    retry_ms: AtomicU64,
     /// Collapses redundant watermark kicks to one condvar signal.
     kick_pending: AtomicBool,
-    /// Test hook: makes the next flush panic inside the flusher thread.
+    /// Test hook: makes the next cut panic inside the flusher thread.
     panic_inject: AtomicBool,
+    /// Test hook: makes the next commit panic inside the committer.
+    commit_panic_inject: AtomicBool,
     // -- cumulative counters (see BgSyncStats) --
     flushes: AtomicU64,
     flush_failures: AtomicU64,
@@ -238,29 +398,51 @@ pub(crate) struct SyncEngine {
     data_bytes_flushed: AtomicU64,
     writer_stalls: AtomicU64,
     writer_stall_micros: AtomicU64,
+    pipeline_peak: AtomicU64,
+    epochs_committed: AtomicU64,
 }
 
 impl SyncEngine {
-    pub(crate) fn new(watermark_bytes: u64, ceiling_bytes: u64, interval_ms: u64) -> Self {
+    pub(crate) fn new(
+        watermark_bytes: u64,
+        ceiling_bytes: u64,
+        interval_ms: u64,
+        pipeline_depth: usize,
+        adaptive: bool,
+    ) -> Self {
         Self {
             target: Mutex::new(Weak::new()),
             state: Mutex::new(EngineState {
                 requested: 0,
                 completed: 0,
+                handled: 0,
+                riders: 0,
                 kicked: false,
                 shutdown: false,
                 dead: None,
                 errors: VecDeque::new(),
+                queue: VecDeque::new(),
+                committing: None,
+                flusher_exited: false,
                 thread: None,
+                committer: None,
             }),
             work_cv: Condvar::new(),
+            commit_cv: Condvar::new(),
             done_cv: Condvar::new(),
-            flush_gate: Mutex::new(()),
+            flush_gate: RwLock::new(()),
             watermark: AtomicU64::new(watermark_bytes),
             ceiling: AtomicU64::new(ceiling_bytes),
             interval_ms: AtomicU64::new(interval_ms),
+            depth: pipeline_depth.max(1),
+            adaptive,
+            adaptive_wm: AtomicU64::new(0),
+            measured_bw_bps: AtomicU64::new(0),
+            ctl: Mutex::new(AdaptiveCtl { ewma_bw: 0.0, ewma_delay: 0.0, samples: 0 }),
+            retry_ms: AtomicU64::new(0),
             kick_pending: AtomicBool::new(false),
             panic_inject: AtomicBool::new(false),
+            commit_panic_inject: AtomicBool::new(false),
             flushes: AtomicU64::new(0),
             flush_failures: AtomicU64::new(0),
             watermark_triggers: AtomicU64::new(0),
@@ -271,6 +453,8 @@ impl SyncEngine {
             data_bytes_flushed: AtomicU64::new(0),
             writer_stalls: AtomicU64::new(0),
             writer_stall_micros: AtomicU64::new(0),
+            pipeline_peak: AtomicU64::new(0),
+            epochs_committed: AtomicU64::new(0),
         }
     }
 
@@ -290,18 +474,72 @@ impl SyncEngine {
             || self.ceiling.load(Ordering::Relaxed) > 0
     }
 
-    /// The flush gate: held by the flusher across one whole flush
-    /// (section writes + manifest commit). `snapshot()`/`doctor()` hold
-    /// it to exclude half-committed background epochs; the inline close
-    /// sync holds it for uniformity.
-    pub(crate) fn gate(&self) -> MutexGuard<'_, ()> {
-        // A flusher that panicked mid-flush poisons the gate; the store
+    /// The exclusive flush gate: blocks both pipeline stages.
+    /// `snapshot()`/`doctor()` hold it to exclude half-committed
+    /// background epochs; the inline close sync holds it for uniformity.
+    pub(crate) fn gate(&self) -> RwLockWriteGuard<'_, ()> {
+        // A thread that panicked mid-flush poisons the gate; the store
         // is still recoverable (manifest protocol), so don't propagate
         // the poison to snapshot/doctor/close.
-        self.flush_gate.lock().unwrap_or_else(|p| p.into_inner())
+        self.flush_gate.write().unwrap_or_else(|p| p.into_inner())
     }
 
-    /// Spawn the flusher thread if it is not running. Idempotent.
+    /// The shared flush gate: held by the flusher across one cut and by
+    /// the committer across one commit, so the two overlap each other
+    /// but never an exclusive-gate holder.
+    fn gate_shared(&self) -> RwLockReadGuard<'_, ()> {
+        self.flush_gate.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The watermark the trigger actually compares against: the
+    /// adaptive estimate once armed, the configured value otherwise
+    /// (and always 0 = disabled when no watermark was configured).
+    pub(crate) fn effective_watermark(&self) -> u64 {
+        let cfg = self.watermark.load(Ordering::Relaxed);
+        if cfg == 0 || !self.adaptive {
+            return cfg;
+        }
+        match self.adaptive_wm.load(Ordering::Relaxed) {
+            0 => cfg,
+            adaptive => adaptive,
+        }
+    }
+
+    /// Fold one committed epoch's measurements into the bandwidth/delay
+    /// estimator: `bytes` flushed, the seconds of I/O they took
+    /// (simulated seconds when a netfs profile is active), and the fixed
+    /// per-flush round-trip `delay_secs` (the bandwidth-independent
+    /// term). Called by [`ManagerCore::commit_epoch`] for data-carrying
+    /// epochs only.
+    pub(crate) fn record_flush_sample(&self, bytes: u64, io_secs: f64, delay_secs: f64) {
+        if bytes == 0 || io_secs <= 0.0 {
+            return;
+        }
+        let bw_raw = bytes as f64 / (io_secs - delay_secs).max(1e-9);
+        let delay = delay_secs.max(0.0);
+        let mut c = self.ctl.lock().unwrap();
+        if c.samples == 0 {
+            c.ewma_bw = bw_raw;
+            c.ewma_delay = delay;
+        } else {
+            c.ewma_bw = EWMA_ALPHA * bw_raw + (1.0 - EWMA_ALPHA) * c.ewma_bw;
+            c.ewma_delay = EWMA_ALPHA * delay + (1.0 - EWMA_ALPHA) * c.ewma_delay;
+        }
+        c.samples += 1;
+        self.measured_bw_bps.store(c.ewma_bw as u64, Ordering::Relaxed);
+        if c.samples >= MIN_ADAPTIVE_SAMPLES {
+            let ceiling = self.ceiling.load(Ordering::Relaxed);
+            let hi = if ceiling > 0 {
+                (ceiling / 2).max(ADAPTIVE_FLOOR)
+            } else {
+                ADAPTIVE_CEILING_DEFAULT
+            };
+            let bdp = (c.ewma_bw * c.ewma_delay) as u64;
+            self.adaptive_wm.store(bdp.clamp(ADAPTIVE_FLOOR, hi), Ordering::Relaxed);
+        }
+    }
+
+    /// Spawn the flusher + committer threads if not running. Idempotent.
     pub(crate) fn ensure_started(&self) -> Result<()> {
         {
             let st = self.state.lock().unwrap();
@@ -321,11 +559,25 @@ impl SyncEngine {
         };
         let mut st = self.state.lock().unwrap();
         if st.thread.is_none() {
-            let handle = std::thread::Builder::new()
-                .name("metall-bgsync".into())
-                .spawn(move || Self::run(mgr))
-                .map_err(|e| Error::BgSync(format!("cannot spawn flusher thread: {e}")))?;
-            st.thread = Some(handle);
+            let spawn = |name: &str, f: fn(Arc<ManagerCore>)| {
+                let mgr = mgr.clone();
+                std::thread::Builder::new()
+                    .name(name.into())
+                    .spawn(move || f(mgr))
+                    .map_err(|e| Error::BgSync(format!("cannot spawn {name} thread: {e}")))
+            };
+            st.committer = Some(spawn("metall-bgcommit", Self::run_committer)?);
+            match spawn("metall-bgsync", Self::run) {
+                Ok(h) => st.thread = Some(h),
+                Err(e) => {
+                    // a committer with no flusher would wait forever;
+                    // mark the engine dead so it drains and exits
+                    st.dead = Some(e.to_string());
+                    st.flusher_exited = true;
+                    self.commit_cv.notify_all();
+                    return Err(e);
+                }
+            }
         }
         Ok(())
     }
@@ -355,7 +607,8 @@ impl SyncEngine {
     }
 
     /// Block until generation `gen` is covered; return the covering
-    /// flush's result.
+    /// flush's result. Checked **before** the dead flag so a generation
+    /// whose epoch committed before a later panic still resolves `Ok`.
     pub(crate) fn wait_for(&self, gen: u64) -> Result<()> {
         let mut st = self.state.lock().unwrap();
         loop {
@@ -370,7 +623,7 @@ impl SyncEngine {
             if let Some(d) = &st.dead {
                 return Err(Error::BgSync(format!("background flusher died: {d}")));
             }
-            if st.shutdown && st.thread.is_none() {
+            if st.shutdown && st.thread.is_none() && st.committer.is_none() {
                 return Err(Error::BgSync(
                     "sync engine shut down before the flush completed".into(),
                 ));
@@ -380,13 +633,14 @@ impl SyncEngine {
     }
 
     /// Hot-path hook, called by `mark_data_dirty` after marking: kicks
-    /// the flusher when the dirty estimate crosses the watermark (or an
-    /// explicitly configured ceiling — backpressure works even without a
-    /// watermark trigger) and stalls the calling writer above the hard
-    /// ceiling. Two relaxed atomic loads when neither is configured.
+    /// the flusher when the dirty estimate crosses the (adaptive)
+    /// watermark (or an explicitly configured ceiling — backpressure
+    /// works even without a watermark trigger) and stalls the calling
+    /// writer above the hard ceiling. Two relaxed atomic loads when
+    /// neither is configured.
     #[inline]
     pub(crate) fn on_data_marked(&self, mgr: &ManagerCore) {
-        let wm = self.watermark.load(Ordering::Relaxed);
+        let wm = self.effective_watermark();
         let ceiling = self.ceiling.load(Ordering::Relaxed);
         if wm == 0 && ceiling == 0 {
             return;
@@ -422,6 +676,8 @@ impl SyncEngine {
     /// right now; hanging the infallible write APIs on a broken disk
     /// would be worse — the failure surfaces on the next `sync()`),
     /// so each write is stalled at most one failed-flush round-trip.
+    /// Under the pipeline the stall ends at the *cut* (which drains the
+    /// dirty set), not at the commit.
     fn stall_writer(&self, mgr: &ManagerCore, ceiling: u64) {
         let t0 = Instant::now();
         let failures0 = self.flush_failures.load(Ordering::Relaxed);
@@ -447,17 +703,19 @@ impl SyncEngine {
         }
     }
 
-    /// Stop the flusher: signal shutdown, join the thread (it drains any
-    /// outstanding requests with one final flush first), and report a
-    /// dead engine as an error. Idempotent.
+    /// Stop both threads: signal shutdown, join the flusher (it hands
+    /// any outstanding requests to the committer as final cuts first),
+    /// then join the committer (it drains the queue), and report a dead
+    /// engine as an error. Idempotent.
     pub(crate) fn shutdown_and_join(&self) -> Result<()> {
-        let handle = {
+        let flusher = {
             let mut st = self.state.lock().unwrap();
             st.shutdown = true;
             self.work_cv.notify_all();
+            self.commit_cv.notify_all();
             st.thread.take()
         };
-        if let Some(h) = handle {
+        if let Some(h) = flusher {
             // A panic is already captured in `dead` via catch_unwind;
             // join only fails if the unwind escaped it, which the Err
             // below reports through the same channel.
@@ -465,6 +723,19 @@ impl SyncEngine {
                 let mut st = self.state.lock().unwrap();
                 if st.dead.is_none() {
                     st.dead = Some("flusher thread aborted".into());
+                }
+            }
+        }
+        let committer = {
+            let mut st = self.state.lock().unwrap();
+            self.commit_cv.notify_all();
+            st.committer.take()
+        };
+        if let Some(h) = committer {
+            if h.join().is_err() {
+                let mut st = self.state.lock().unwrap();
+                if st.dead.is_none() {
+                    st.dead = Some("committer thread aborted".into());
                 }
             }
         }
@@ -492,6 +763,11 @@ impl SyncEngine {
             writer_stall_micros: ld(&self.writer_stall_micros),
             watermark_bytes: self.watermark.load(Ordering::Relaxed),
             ceiling_bytes: self.ceiling.load(Ordering::Relaxed),
+            pipeline_depth: self.depth as u64,
+            pipeline_peak_in_flight: ld(&self.pipeline_peak),
+            adaptive_watermark_bytes: ld(&self.adaptive_wm),
+            measured_bandwidth_bps: ld(&self.measured_bw_bps),
+            epochs_committed: ld(&self.epochs_committed),
             // a dead flusher's JoinHandle lingers until shutdown takes
             // it; "running" must mean alive AND able to flush
             engine_running: st.thread.is_some() && st.dead.is_none(),
@@ -499,39 +775,65 @@ impl SyncEngine {
         }
     }
 
-    /// Test hook: the next background flush panics inside the flusher.
+    /// Test hook: the next cut panics inside the flusher thread.
     #[allow(dead_code)]
     pub(crate) fn inject_panic_for_tests(&self) {
         self.panic_inject.store(true, Ordering::Relaxed);
     }
 
-    /// The flusher thread body. Holds a strong `Arc` for its whole life;
-    /// exits on shutdown (after draining outstanding requests) or on a
-    /// panic in the flush body (marking the engine dead).
+    /// Test hook: the next commit panics inside the committer thread.
+    #[allow(dead_code)]
+    pub(crate) fn inject_commit_panic_for_tests(&self) {
+        self.commit_panic_inject.store(true, Ordering::Relaxed);
+    }
+
+    /// Exponential failed-flush backoff: 50 ms → 5 s, cleared by any
+    /// successful commit or no-op round.
+    fn bump_retry(&self) {
+        let r = self.retry_ms.load(Ordering::Relaxed);
+        self.retry_ms.store((r.max(25) * 2).min(5000), Ordering::Relaxed);
+    }
+
+    /// The flusher thread body: decide a trigger, wait for a pipeline
+    /// slot, take one consistent cut, hand it to the committer. Holds a
+    /// strong `Arc` for its whole life; exits on shutdown (after every
+    /// outstanding request's cut is taken — the committer finishes the
+    /// queue) or when the engine is dead.
     fn run(mgr: Arc<ManagerCore>) {
         let eng = mgr.engine();
-        // Failed-flush retry backoff in ms (0 = none pending). The
-        // watermark trigger is edge-driven by writes: without this, a
-        // transient I/O failure after the last write would leave dirty
-        // data volatile indefinitely on a watermark-only engine.
-        let mut retry_ms: u64 = 0;
         loop {
             // Decide what to flush under the state lock.
             let covered;
+            let prev_handled;
             {
                 let mut st = eng.state.lock().unwrap();
                 loop {
-                    if st.requested > st.completed {
+                    if st.dead.is_some() {
+                        st.flusher_exited = true;
+                        eng.commit_cv.notify_all();
+                        return;
+                    }
+                    let slot_free = st.in_flight() < eng.depth;
+                    if !slot_free {
+                        // full pipeline: wait for the committer to pop
+                        st = eng.work_cv.wait(st).unwrap();
+                        continue;
+                    }
+                    if st.requested > st.handled {
                         covered = st.requested;
                         break;
                     }
                     if st.shutdown {
-                        return; // nothing outstanding: clean exit
+                        // every request has its cut: clean exit — the
+                        // committer finishes the queued ones
+                        st.flusher_exited = true;
+                        eng.commit_cv.notify_all();
+                        return;
                     }
                     if st.kicked {
                         st.kicked = false;
                         eng.kick_pending.store(false, Ordering::Relaxed);
-                        let wm = eng.watermark.load(Ordering::Relaxed);
+                        let wm = eng.effective_watermark();
                         let ceiling = eng.ceiling.load(Ordering::Relaxed);
                         let dirty = mgr.dirty_data_bytes();
                         // flush when either limit is crossed: a stalled
@@ -545,13 +847,14 @@ impl SyncEngine {
                             } else {
                                 eng.ceiling_triggers.fetch_add(1, Ordering::Relaxed);
                             }
-                            covered = st.requested; // == completed: pure bg flush
+                            covered = st.requested; // == handled: pure bg flush
                             break;
                         }
                         continue;
                     }
                     let iv = eng.interval_ms.load(Ordering::Relaxed);
-                    let wait_ms = match (iv, retry_ms) {
+                    let retry = eng.retry_ms.load(Ordering::Relaxed);
+                    let wait_ms = match (iv, retry) {
                         (0, 0) => 0, // no timer: wait indefinitely
                         (0, r) => r,
                         (i, 0) => i,
@@ -566,7 +869,7 @@ impl SyncEngine {
                             .unwrap();
                         st = guard;
                         if timeout.timed_out() && mgr.anything_dirty() {
-                            if iv > 0 && (retry_ms == 0 || iv <= retry_ms) {
+                            if iv > 0 && (retry == 0 || iv <= retry) {
                                 eng.interval_triggers.fetch_add(1, Ordering::Relaxed);
                             }
                             // (a pure failed-flush retry gets no trigger
@@ -576,61 +879,65 @@ impl SyncEngine {
                         }
                     }
                 }
+                prev_handled = st.handled;
+                st.handled = covered;
             }
-            // Run the flush outside the state lock: requests arriving
+            // Take the cut outside the state lock: requests arriving
             // from here on get a generation > `covered` and trigger the
-            // next round — their mutations may postdate this flush's
-            // section snapshots.
+            // next round — their mutations may postdate this cut's
+            // section snapshots. The shared gate lets an in-flight
+            // commit overlap the cut but excludes snapshot/doctor.
             let result = catch_unwind(AssertUnwindSafe(|| {
                 if eng.panic_inject.swap(false, Ordering::Relaxed) {
                     panic!("injected flusher panic (test hook)");
                 }
-                mgr.sync_now()
+                let _g = eng.gate_shared();
+                mgr.prepare_epoch()
             }));
+            let mut noop = false;
             let mut st = eng.state.lock().unwrap();
             match result {
-                Ok(flush) => {
+                Ok(cut) => {
                     eng.flushes.fetch_add(1, Ordering::Relaxed);
-                    // exponential retry backoff: 50ms → 5s on repeated
-                    // failures, cleared by any success
-                    retry_ms = match &flush {
-                        Ok(()) => 0,
-                        Err(_) => (retry_ms.max(25) * 2).min(5000),
-                    };
-                    match flush {
-                        Ok(()) => {
-                            // last_sync describes this flush only when it
-                            // succeeded (a failed sync_now returns before
-                            // rewriting it — reading it then would re-add
-                            // the previous flush's bytes)
-                            let s = mgr.sync_stats();
-                            let sb = s.section_bytes_written;
-                            eng.section_bytes_flushed.fetch_add(sb, Ordering::Relaxed);
-                            eng.data_bytes_flushed
-                                .fetch_add(s.data_bytes_flushed, Ordering::Relaxed);
+                    match cut {
+                        Ok(Some(mut prep)) => {
+                            prep.gen = covered;
+                            st.queue.push_back(prep);
+                            eng.pipeline_peak
+                                .fetch_max(st.in_flight() as u64, Ordering::Relaxed);
+                            eng.commit_cv.notify_all();
+                            // `completed` advances when the commit lands
+                        }
+                        Ok(None) => {
+                            // nothing dirty: requests up to `covered` are
+                            // durable once every in-flight epoch lands
+                            eng.retry_ms.store(0, Ordering::Relaxed);
+                            noop = true;
+                            if st.in_flight() == 0 {
+                                st.completed = st.completed.max(covered);
+                            } else {
+                                st.riders = st.riders.max(covered);
+                            }
                         }
                         Err(e) => {
                             eng.flush_failures.fetch_add(1, Ordering::Relaxed);
-                            // sync_now re-marked everything it had cleared;
-                            // record the span so covered tickets see the
-                            // failure, then let the next flush retry.
-                            if covered > st.completed {
-                                let from = st.completed;
-                                st.errors.push_back((from, covered, e.to_string()));
-                                while st.errors.len() > MAX_ERROR_SPANS {
-                                    // never evict: merge the two oldest
-                                    // spans (over-approximating across the
-                                    // gap — a stale ticket may see a false
-                                    // *failure*, never a false durability
-                                    // Ok)
-                                    let (f1, _, m1) = st.errors.pop_front().unwrap();
-                                    let (_, t2, _) = st.errors.pop_front().unwrap();
-                                    st.errors.push_front((f1, t2, m1));
+                            eng.bump_retry();
+                            // prepare_epoch re-marked everything it had
+                            // cleared; record the span so exactly the
+                            // generations this round picked up see the
+                            // failure (epochs already in the queue keep
+                            // their own, earlier generations), then let
+                            // the next round retry.
+                            if covered > prev_handled {
+                                st.push_error_span(prev_handled, covered, e.to_string());
+                                if st.in_flight() == 0 {
+                                    st.completed = st.completed.max(covered);
+                                } else {
+                                    st.riders = st.riders.max(covered);
                                 }
                             }
                         }
                     }
-                    st.completed = st.completed.max(covered);
                 }
                 Err(payload) => {
                     let msg = payload
@@ -639,11 +946,127 @@ impl SyncEngine {
                         .or_else(|| payload.downcast_ref::<String>().cloned())
                         .unwrap_or_else(|| "flusher panicked".into());
                     st.dead = Some(msg);
+                    st.flusher_exited = true;
+                    drop(st);
                     eng.done_cv.notify_all();
+                    eng.commit_cv.notify_all(); // committer drains + exits
                     return;
                 }
             }
+            drop(st);
+            if noop {
+                // outside the state lock: the counter update takes
+                // manager-side locks
+                mgr.record_noop_sync();
+            }
             eng.done_cv.notify_all();
+        }
+    }
+
+    /// The committer thread body: pop cuts FIFO — hence strictly
+    /// ascending epochs — and make each durable. Exits when the queue is
+    /// empty and the engine is shut down or dead (a dead *flusher* does
+    /// not abandon already-taken cuts: they still commit).
+    fn run_committer(mgr: Arc<ManagerCore>) {
+        let eng = mgr.engine();
+        loop {
+            let prep = {
+                let mut st = eng.state.lock().unwrap();
+                loop {
+                    if let Some(p) = st.queue.pop_front() {
+                        st.committing = Some(p.gen);
+                        break p;
+                    }
+                    // exit only when no more cuts can arrive: the
+                    // flusher pushes its final cuts while draining a
+                    // shutdown
+                    if st.dead.is_some() || (st.shutdown && st.flusher_exited) {
+                        return;
+                    }
+                    st = eng.commit_cv.wait(st).unwrap();
+                }
+            };
+            eng.work_cv.notify_all(); // a pipeline slot freed
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                if eng.commit_panic_inject.swap(false, Ordering::Relaxed) {
+                    panic!("injected committer panic (test hook)");
+                }
+                let _g = eng.gate_shared();
+                mgr.commit_epoch(&prep)
+            }));
+            // Post-process under the state lock; aborts of later queued
+            // epochs run after release (they take allocator locks).
+            let mut aborted: Vec<PreparedEpoch> = Vec::new();
+            let mut died = false;
+            {
+                let mut st = eng.state.lock().unwrap();
+                st.committing = None;
+                match result {
+                    Ok(Ok(())) => {
+                        eng.retry_ms.store(0, Ordering::Relaxed);
+                        eng.epochs_committed.fetch_add(1, Ordering::Relaxed);
+                        // last_sync describes this commit (written by
+                        // commit_epoch just before returning Ok)
+                        let s = mgr.sync_stats();
+                        eng.section_bytes_flushed
+                            .fetch_add(s.section_bytes_written, Ordering::Relaxed);
+                        eng.data_bytes_flushed
+                            .fetch_add(s.data_bytes_flushed, Ordering::Relaxed);
+                        st.completed = st.completed.max(prep.gen);
+                        if st.queue.is_empty() {
+                            // rider generations (no-op rounds while this
+                            // epoch was in flight) are durable now
+                            st.completed = st.completed.max(st.riders);
+                            st.riders = 0;
+                        }
+                    }
+                    Ok(Err(e)) => {
+                        eng.flush_failures.fetch_add(1, Ordering::Relaxed);
+                        eng.bump_retry();
+                        // commit_epoch aborted this cut; every *later*
+                        // queued epoch must abort too — committing it
+                        // would carry forward section files this failed
+                        // epoch never durably referenced. One merged
+                        // span covers them all; the next round retries
+                        // the union of their re-marked changes.
+                        let mut maxg = prep.gen.max(st.riders);
+                        while let Some(p) = st.queue.pop_front() {
+                            maxg = maxg.max(p.gen);
+                            aborted.push(p);
+                        }
+                        if maxg > st.completed {
+                            let from = st.completed;
+                            st.push_error_span(from, maxg, e.to_string());
+                            st.completed = maxg;
+                        }
+                        st.riders = 0;
+                        // retry edge for watermark-only configurations:
+                        // the re-marked bytes re-arm the trigger path
+                        st.kicked = true;
+                    }
+                    Err(payload) => {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "committer panicked".into());
+                        while let Some(p) = st.queue.pop_front() {
+                            aborted.push(p);
+                        }
+                        st.dead = Some(msg);
+                        died = true;
+                    }
+                }
+            }
+            for p in &aborted {
+                mgr.abort_epoch(p);
+            }
+            eng.done_cv.notify_all();
+            eng.work_cv.notify_all();
+            if died {
+                eng.commit_cv.notify_all();
+                return;
+            }
         }
     }
 }
@@ -808,9 +1231,10 @@ mod tests {
         let bg = m.bg_sync_stats();
         assert_eq!(bg.explicit_requests, 64);
         assert!(bg.flushes <= bg.explicit_requests, "one flush may cover many requests: {bg:?}");
-        // Forced pile-up: with the flush gate held no flush can complete,
-        // so queued requests MUST coalesce — at most one in-flight flush
-        // (decided before we took the gate) plus one covering the rest.
+        // Forced pile-up: with the flush gate held exclusively no cut can
+        // start, so queued requests MUST coalesce — at most one in-flight
+        // round (decided before we took the gate) plus one covering the
+        // rest.
         let before = m.bg_sync_stats();
         let tickets: Vec<_> = {
             let gate = m.engine().gate();
@@ -876,5 +1300,108 @@ mod tests {
         t.wait().unwrap();
         m.sync().unwrap();
         assert!(!m.bg_sync_stats().engine_running, "read-only stores run no flusher");
+    }
+
+    #[test]
+    fn pipelined_commits_overlap_and_stay_epoch_ordered() {
+        let d = TempDir::new("bg-pipe");
+        let store = d.join("s");
+        let mut o = opts();
+        // slow modelled backend, really slept: each commit takes the
+        // charged ~20 ms, so cuts run ahead of in-flight commits. The
+        // upper-case name also exercises case-insensitive resolution.
+        o.netfs_profile = Some("LUSTRE".into());
+        o.netfs_sleep_scale = 1.0;
+        let m = MetallManager::create_with(&store, o).unwrap();
+        let cs = m.chunk_size();
+        let off = m.allocate(8 * cs).unwrap();
+        let mut tickets = Vec::new();
+        for i in 0..6u64 {
+            unsafe { m.bytes_mut(off + (i % 8) * cs as u64, cs).fill(i as u8 + 1) };
+            tickets.push(m.sync_async().unwrap());
+            // give the flusher time to cut this epoch while the previous
+            // commit is still sleeping on the simulated backend
+            std::thread::sleep(Duration::from_millis(3));
+        }
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let bg = m.bg_sync_stats();
+        assert_eq!(bg.pipeline_depth, 2, "default depth resolves to 2");
+        assert!(
+            bg.pipeline_peak_in_flight >= 2,
+            "cuts must overlap in-flight commits: {bg:?}"
+        );
+        assert!(bg.epochs_committed >= 3, "{bg:?}");
+        m.close().unwrap();
+        // the surviving manifests are a strictly monotone tail of the
+        // committed chain
+        let epochs = crate::alloc::mgmt_io::list_manifest_epochs(&store).unwrap();
+        assert!(!epochs.is_empty());
+        assert!(epochs.windows(2).all(|w| w[0] < w[1]), "{epochs:?}");
+        let m = MetallManager::open(&store).unwrap();
+        assert!(m.doctor().unwrap().is_empty());
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn adaptive_watermark_tracks_the_backend_bdp() {
+        let d = TempDir::new("bg-adaptive");
+        let mut o = opts();
+        o.netfs_profile = Some("lustre".into()); // account only: no sleeps
+        o.sync_watermark_bytes = 1 << 20;
+        // keep ceiling/2 well above the Lustre BDP so the clamp is inert
+        o.sync_ceiling_bytes = 64 << 20;
+        let m = MetallManager::create_with(d.join("s"), o).unwrap();
+        let cs = m.chunk_size();
+        let off = m.allocate(4 * cs).unwrap();
+        for round in 0..3u8 {
+            unsafe { m.bytes_mut(off, 4 * cs).fill(round + 1) };
+            m.sync().unwrap();
+        }
+        let bg = m.bg_sync_stats();
+        let profile = crate::storage::netfs::LUSTRE;
+        let bdp = profile.bdp_bytes();
+        assert!(
+            bg.adaptive_watermark_bytes >= bdp / 2 && bg.adaptive_watermark_bytes <= bdp * 2,
+            "adaptive watermark {} should sit near the profile BDP {bdp}",
+            bg.adaptive_watermark_bytes
+        );
+        let bw = bg.measured_bandwidth_bps as f64;
+        assert!(
+            bw >= profile.bandwidth / 2.0 && bw <= profile.bandwidth * 2.0,
+            "measured bandwidth {bw} vs modelled {}",
+            profile.bandwidth
+        );
+        m.close().unwrap();
+    }
+
+    #[test]
+    fn committed_epochs_resolve_ok_after_a_committer_death() {
+        let d = TempDir::new("bg-commit-death");
+        let store = d.join("s");
+        {
+            let m = MetallManager::create_with(&store, opts()).unwrap();
+            m.construct::<u64>("a", 1).unwrap();
+            let t1 = m.sync_async().unwrap();
+            wait_until("epoch 1 durably committed", || t1.is_complete());
+            m.engine().inject_commit_panic_for_tests();
+            m.construct::<u64>("b", 2).unwrap();
+            let t2 = m.sync_async().unwrap();
+            let err = t2.wait().expect_err("the queued epoch died with the committer");
+            assert!(format!("{err}").contains("died"), "{err}");
+            // the generation whose epoch committed before the death still
+            // resolves Ok — failure attribution is per epoch, not per
+            // engine
+            assert!(t1.is_complete());
+            t1.wait().unwrap();
+            assert!(m.sync_async().is_err(), "dead engine refuses new work");
+            assert!(m.close().is_err());
+        }
+        assert!(!store.join("CLEAN").exists());
+        let m = MetallManager::open_unclean(&store).unwrap();
+        assert_eq!(m.read::<u64>(m.find::<u64>("a").unwrap().unwrap()), 1);
+        assert!(m.find::<u64>("b").unwrap().is_none(), "epoch 2 never committed");
+        m.close().unwrap();
     }
 }

@@ -114,6 +114,7 @@ use crate::error::{Error, Result};
 use crate::numa::Topology;
 use crate::storage::bsmmap::BsMsync;
 use crate::storage::mmap::page_size;
+use crate::storage::netfs::SimNetFs;
 use crate::storage::pagemap;
 use crate::storage::reflink::{self, CopyMethod};
 use crate::storage::segment::{SegmentOptions, SegmentStorage};
@@ -181,6 +182,33 @@ pub struct ManagerOptions {
     /// [`BgSyncStats`]) until the flusher drains below it. `0` = auto:
     /// 4 × the watermark when a watermark is set, otherwise disabled.
     pub sync_ceiling_bytes: usize,
+    /// Background sync: how many epochs may be in flight at once
+    /// (serialized-but-uncommitted in the manifest queue plus the one the
+    /// committer is writing). `0` = auto (2: one committing, one queued).
+    /// `1` reproduces the strictly serial one-epoch-at-a-time engine of
+    /// earlier versions. The flusher blocks (backpressure) rather than
+    /// queue a cut beyond this depth.
+    pub sync_pipeline_depth: usize,
+    /// Background sync: adapt the watermark to measured flush bandwidth.
+    /// When `true` (default) and a watermark is configured, the engine
+    /// keeps an EWMA of per-epoch effective flush bandwidth and fixed
+    /// per-flush latency (including [`SimNetFs`] charged time when a
+    /// profile is active) and moves the trigger toward the measured
+    /// bandwidth-delay product, clamped to `[64 KiB, ceiling/2]` — fast
+    /// NVMe stores flush eagerly, Lustre stores batch up to what one
+    /// in-flight epoch can absorb. `false` pins the configured value.
+    pub sync_watermark_adaptive: bool,
+    /// Simulated-backend profile name (`"lustre"`, `"vast"`, `"nvme"`,
+    /// `"optane"`, case-insensitive; see [`crate::storage::netfs`]).
+    /// When set, the sync path — data-range msync, section writes, and
+    /// manifest commits — charges the cost model, and
+    /// [`MetallManager::netfs`] exposes the account. Unknown names fail
+    /// fast at create/open with the list of known profiles.
+    pub netfs_profile: Option<String>,
+    /// Fraction of simulated backend time to actually sleep (`0.0` =
+    /// account only). Benches use `1.0` so thread interleaving against
+    /// the modelled backend is realistic.
+    pub netfs_sleep_scale: f64,
 }
 
 impl Default for ManagerOptions {
@@ -198,6 +226,10 @@ impl Default for ManagerOptions {
             sync_watermark_bytes: 0,
             sync_interval_ms: 0,
             sync_ceiling_bytes: 0,
+            sync_pipeline_depth: 0,
+            sync_watermark_adaptive: true,
+            netfs_profile: None,
+            netfs_sleep_scale: 0.0,
         }
     }
 }
@@ -237,16 +269,39 @@ impl ManagerOptions {
         }
     }
 
+    /// Effective pipeline depth (see [`Self::sync_pipeline_depth`]).
+    fn resolved_pipeline_depth(&self) -> usize {
+        if self.sync_pipeline_depth > 0 {
+            self.sync_pipeline_depth
+        } else {
+            2
+        }
+    }
+
+    /// Resolve the simulated-backend account for these options; fails
+    /// fast on an unknown profile name.
+    fn resolved_netfs(&self) -> Result<Option<Arc<SimNetFs>>> {
+        match &self.netfs_profile {
+            None => Ok(None),
+            Some(name) => {
+                let p = crate::storage::netfs::profile_by_name_strict(name)?;
+                Ok(Some(Arc::new(SimNetFs::new(p).with_sleep_scale(self.netfs_sleep_scale))))
+            }
+        }
+    }
+
     /// The engine sized for these options (read-only managers get a
     /// fully disabled engine: no triggers, never started).
     fn sync_engine(&self, read_only: bool) -> SyncEngine {
         if read_only {
-            return SyncEngine::new(0, 0, 0);
+            return SyncEngine::new(0, 0, 0, 1, false);
         }
         SyncEngine::new(
             self.sync_watermark_bytes as u64,
             self.resolved_sync_ceiling() as u64,
             self.sync_interval_ms,
+            self.resolved_pipeline_depth(),
+            self.sync_watermark_adaptive,
         )
     }
 
@@ -392,8 +447,14 @@ pub struct SyncStats {
     pub data_chunks_flushed: u64,
     /// Last sync: bytes of application data flushed.
     pub data_bytes_flushed: u64,
-    /// Last sync: wall-clock duration in microseconds.
+    /// Last sync: wall-clock duration in microseconds, *including* the
+    /// un-slept portion of simulated backend time when a
+    /// [`SimNetFs`] profile is active — the effective-bandwidth input of
+    /// the adaptive watermark.
     pub flush_micros: u64,
+    /// Last sync: simulated backend time charged by the [`SimNetFs`]
+    /// cost model, in microseconds (0 when no profile is active).
+    pub sim_flush_micros: u64,
     /// Last sync: free slots left parked in the per-core caches (warmth
     /// preserved instead of drained; serialized to the cache section).
     pub cache_slots_preserved: u64,
@@ -532,15 +593,44 @@ struct MgmtState {
     /// next sync must rewrite every section (carried-forward bin groups
     /// would otherwise be partitioned under the wrong width).
     bins_per_group: usize,
+    /// Next epoch number to hand to a consistent cut. Runs ahead of
+    /// `epoch` while pipelined cuts are in flight (`epoch` only advances
+    /// when the committer lands a manifest, strictly in cut order).
+    next_epoch: u64,
 }
 
-/// What [`MetallManager::sync_management`] did.
-struct MgmtSyncOutcome {
-    dirty: u64,
-    total: u64,
-    bytes: u64,
+/// One consistent cut the flusher prepared and the committer will make
+/// durable: the assigned epoch, the dirty data ranges taken from the
+/// chunk map, and the serialized dirty sections. Epochs commit strictly
+/// in `epoch` order; a cut that fails to commit is *aborted* — its data
+/// chunks and section dirty flags are re-marked so the next cut retries
+/// them ([`ManagerCore::abort_epoch`]).
+pub(crate) struct PreparedEpoch {
+    /// The epoch this cut will commit as (assigned at cut time from
+    /// [`MgmtState::next_epoch`]).
+    epoch: u64,
+    /// The ticket generation this cut covers (every request up to it).
+    pub(crate) gen: u64,
+    /// Coalesced dirty data ranges to msync (shared mode; empty when the
+    /// bs-mmap path already flushed at prepare time).
+    ranges: Vec<std::ops::Range<usize>>,
+    /// The dirty chunk indices behind `ranges` (for re-mark on abort and
+    /// the granule count in stats).
+    data_chunks: Vec<usize>,
+    /// Private (bs-mmap) mode flushes at prepare time under the cut's
+    /// quiescence contract; this carries its `(granules, bytes)` result.
+    data_flushed: Option<(u64, u64)>,
+    /// Dirty section ids and their serialized images, parallel vectors.
+    ids: Vec<SectionId>,
+    buffers: Vec<Vec<u8>>,
+    /// This cut re-serialized *every* section (first segmented sync /
+    /// legacy upgrade / bin-group width change): its manifest must not
+    /// carry forward any previously committed section.
+    rewrite_all: bool,
+    /// Free slots parked in the per-core caches at cut time.
     cache_slots: u64,
-    committed: bool,
+    /// Total sections the store has (for stats).
+    total_sections: u64,
 }
 
 /// Everything recovered from the on-disk management image (segmented
@@ -601,6 +691,9 @@ pub struct ManagerCore {
     mgmt: Mutex<MgmtState>,
     /// Chunk-granular dirty map of application-data writes.
     dirty_data: DirtyChunkSet,
+    /// Simulated-backend account ([`ManagerOptions::netfs_profile`]);
+    /// shared with the segment so `sync_ranges` charges it too.
+    netfs: Option<Arc<SimNetFs>>,
     /// Last-sync observability ([`Self::sync_stats`]).
     last_sync: Mutex<SyncStats>,
     /// Background sync engine (flusher thread, epoch tickets,
@@ -1090,7 +1183,11 @@ impl ManagerCore {
             return Err(Error::Config("file_size must be a multiple of chunk_size".into()));
         }
         Self::check_bg_sync_opts(&opts)?;
+        let netfs = opts.resolved_netfs()?;
         let segment = SegmentStorage::create(dir.join("segment"), opts.segment_options(false))?;
+        if let Some(fs) = &netfs {
+            segment.set_netfs(fs.clone());
+        }
         let nb = num_bins(opts.chunk_size);
         let topo = opts.resolved_topology();
         let nshards = opts.resolved_shards(&topo);
@@ -1107,8 +1204,10 @@ impl ManagerCore {
                 sections: HashMap::new(),
                 legacy: false,
                 bins_per_group: mgmt_io::BINS_PER_GROUP,
+                next_epoch: 1,
             }),
             dirty_data: DirtyChunkSet::new(segment.vm_len() / opts.chunk_size + 1),
+            netfs,
             last_sync: Mutex::new(SyncStats::default()),
             segment,
             read_only: false,
@@ -1168,7 +1267,11 @@ impl ManagerCore {
                  or use open_unclean() after duplicating it (paper §3.3)"
             )));
         }
+        let netfs = opts.resolved_netfs()?;
         let segment = SegmentStorage::open(dir.join("segment"), opts.segment_options(read_only))?;
+        if let Some(fs) = &netfs {
+            segment.set_netfs(fs.clone());
+        }
         let nb = num_bins(opts.chunk_size);
         let mut lm = Self::load_management(&dir, nb)?;
         // Parked-free recovery: slots the manifest's transient cache
@@ -1254,8 +1357,10 @@ impl ManagerCore {
                 sections: lm.sections,
                 legacy: lm.legacy,
                 bins_per_group: lm.bins_per_group,
+                next_epoch: lm.epoch + 1,
             }),
             dirty_data: DirtyChunkSet::new(segment.vm_len() / opts.chunk_size + 1),
+            netfs,
             last_sync: Mutex::new(SyncStats::default()),
             segment,
             read_only,
@@ -1380,6 +1485,13 @@ impl ManagerCore {
         &self.bg
     }
 
+    /// The simulated-backend account, when a
+    /// [`ManagerOptions::netfs_profile`] is active: charged ops/bytes and
+    /// modelled seconds for every sync-path write this manager performed.
+    pub fn netfs(&self) -> Option<&SimNetFs> {
+        self.netfs.as_deref()
+    }
+
     /// Observability snapshot of the background sync engine (triggers,
     /// flush counts, writer stalls). Exported as `alloc.bgsync.*` by
     /// [`crate::coordinator::metrics::record_bg_sync_stats`].
@@ -1402,214 +1514,360 @@ impl ManagerCore {
             || self.shards.iter().any(|s| !s.remote_free.lock().unwrap().is_empty())
     }
 
-    /// One complete inline flush: the incremental sync body, run either
-    /// on the background flusher thread (the normal path) or inline by
-    /// `close()` after the engine is drained and joined. Holds the flush
-    /// gate so `snapshot()`/`doctor()` never observe a half-committed
-    /// epoch.
+    /// One complete inline flush — a prepared cut committed on this
+    /// thread: the serial path, run by `close()` after the engine is
+    /// drained and joined (and by tests). Holds the flush gate
+    /// exclusively so `snapshot()`/`doctor()` never observe a
+    /// half-committed epoch and no pipelined prepare/commit overlaps it.
     pub(crate) fn sync_now(&self) -> Result<()> {
         if self.read_only {
             return Ok(());
         }
         let _gate = self.bg.gate();
-        let t0 = Instant::now();
+        match self.prepare_epoch()? {
+            Some(prep) => self.commit_epoch(&prep),
+            None => {
+                self.record_noop_sync();
+                Ok(())
+            }
+        }
+    }
+
+    /// Stage 1 of a flush — the **consistent cut**: drain parked remote
+    /// frees, take the dirty data chunks out of the chunk map, serialize
+    /// every dirty management section to memory under one simultaneous
+    /// lock acquisition, assign the cut its epoch, and freeze epoch-side
+    /// copies for pinned readers. Returns `None` when nothing at all is
+    /// dirty (the caller records a no-op sync).
+    ///
+    /// The cut takes no durable action besides the side-copy freeze: the
+    /// pipelined engine may run this for epoch N+1 while epoch N's
+    /// [`Self::commit_epoch`] is still doing I/O. Mutators may be running
+    /// concurrently (the flusher thread's whole purpose), so per-section
+    /// lock scopes are NOT enough: a fresh chunk registering between two
+    /// section serializations would commit a bin that references a chunk
+    /// the chunk section still calls Free — hence the simultaneous-lock
+    /// serialization in [`Self::serialize_sections_cut`].
+    pub(crate) fn prepare_epoch(&self) -> Result<Option<PreparedEpoch>> {
+        if self.read_only {
+            return Ok(None);
+        }
         let mut result = Ok(());
         for shard in 0..self.shards.len() {
             keep_first_err(&mut result, self.drain_remote(shard));
         }
         result?;
-        let (data_chunks, data_bytes) = self.flush_data()?;
-        let outcome = self.sync_management()?;
-        let mut st = self.last_sync.lock().unwrap();
-        *st = SyncStats {
-            syncs: st.syncs + 1,
-            manifest_commits: st.manifest_commits + outcome.committed as u64,
-            dirty_sections: outcome.dirty,
-            total_sections: outcome.total,
-            section_bytes_written: outcome.bytes,
-            data_chunks_flushed: data_chunks,
-            data_bytes_flushed: data_bytes,
-            flush_micros: t0.elapsed().as_micros() as u64,
-            cache_slots_preserved: outcome.cache_slots,
-        };
-        Ok(())
-    }
-
-    /// Delta flush of the application data. Shared mode: msync the union
-    /// of dirty chunk ranges; private mode: the bs-mmap page-granular
-    /// user msync. Returns (granules, bytes) flushed.
-    fn flush_data(&self) -> Result<(u64, u64)> {
-        if let Some(bs) = &self.bs {
-            let st = bs.lock().unwrap().msync(&self.segment)?;
-            // the page-granular bs flush covered every write; drain the
-            // chunk-granular map too so the watermark estimate resets
-            let cs = self.opts.chunk_size;
-            self.dirty_data.clear_to(self.segment.mapped_len().div_ceil(cs));
-            return Ok((st.dirty_pages as u64, st.bytes_written));
-        }
         let cs = self.opts.chunk_size;
-        let mapped = self.segment.mapped_len();
-        let chunks = self.dirty_data.take_dirty(mapped.div_ceil(cs));
-        if chunks.is_empty() {
-            return Ok((0, 0));
-        }
-        // coalesce adjacent chunks into ranges (indices are ascending)
+        // --- data cut ---
+        let mut data_flushed = None;
+        let mut data_chunks: Vec<usize> = Vec::new();
         let mut ranges: Vec<std::ops::Range<usize>> = Vec::new();
-        for &c in &chunks {
-            let start = c * cs;
-            let end = ((c + 1) * cs).min(mapped);
-            match ranges.last_mut() {
-                Some(r) if r.end == start => r.end = end,
-                _ => ranges.push(start..end),
+        if let Some(bs) = &self.bs {
+            // Private (bs-mmap) mode flushes page-granularly *at cut
+            // time*: its user-level msync requires quiescent writers
+            // (§5), a contract the explicit-sync caller provides right
+            // now — deferring it to the committer would break it.
+            let st = bs.lock().unwrap().msync(&self.segment)?;
+            self.dirty_data.clear_to(self.segment.mapped_len().div_ceil(cs));
+            if st.dirty_pages > 0 {
+                data_flushed = Some((st.dirty_pages as u64, st.bytes_written));
             }
-        }
-        let bytes: usize = ranges.iter().map(|r| r.len()).sum();
-        // Epoch-side preservation for attached readers: before the
-        // in-place msync below may tear a pinned epoch's view, freeze
-        // each dirty chunk as a side copy tagged with the epoch this
-        // flush will commit (reflink where the fs supports it; see
-        // `alloc/readers`). The scan also reaps leases of dead readers.
-        let pins = readers::scan_pins(&self.dir);
-        if pins.any_live() {
-            let tag = self.mgmt.lock().unwrap().epoch + 1;
-            if let Err(e) =
-                readers::preserve_chunks(&self.dir, &self.segment, &chunks, cs, tag)
-            {
-                for &c in &chunks {
-                    self.dirty_data.mark(c);
+        } else {
+            let mapped = self.segment.mapped_len();
+            data_chunks = self.dirty_data.take_dirty(mapped.div_ceil(cs));
+            // coalesce adjacent chunks into ranges (indices ascending)
+            for &c in &data_chunks {
+                let start = c * cs;
+                let end = ((c + 1) * cs).min(mapped);
+                match ranges.last_mut() {
+                    Some(r) if r.end == start => r.end = end,
+                    _ => ranges.push(start..end),
                 }
-                return Err(e);
             }
         }
-        if let Err(e) = self.segment.sync_ranges(&ranges, self.opts.parallel_sync) {
-            // nothing was committed; re-mark so the next sync retries
-            for &c in &chunks {
-                self.dirty_data.mark(c);
-            }
-            return Err(e);
-        }
-        Ok((chunks.len() as u64, bytes as u64))
-    }
-
-    /// Incremental management write-back: snapshot every dirty section
-    /// at one **consistent cut**, write the images with a flusher pool,
-    /// commit the manifest, GC superseded files. See the module docs and
-    /// [`crate::alloc::mgmt_io`].
-    fn sync_management(&self) -> Result<MgmtSyncOutcome> {
+        // --- management cut ---
         let nb = self.num_bins();
         let ngroups = mgmt_io::num_groups(nb);
         let total = (ngroups + 3) as u64; // chunks + groups + names + cache
-        let mut st = self.mgmt.lock().unwrap();
         // Rewrite everything when there is no committed segmented state
         // (fresh store, legacy monolith) or when the loaded manifest used
         // a different bin-group width than this build — carrying its bin
         // sections forward under the new partition would corrupt the
-        // chain.
-        let first = st.legacy
-            || st.sections.is_empty()
-            || st.bins_per_group != mgmt_io::BINS_PER_GROUP;
-        if !first && !self.probe_any_section_dirty(nb, ngroups) {
-            // No-op sync: zero section bytes, no new manifest — decided
-            // by an unlocked probe. Sound for ticket coverage: every
-            // mutation preceding the covering request is visible here
-            // (the request handshake synchronizes), and a mutation
-            // racing the probe simply belongs to the next epoch.
-            return Ok(MgmtSyncOutcome {
-                dirty: 0,
-                total,
-                bytes: 0,
-                cache_slots: self.cache.len() as u64,
-                committed: false,
-            });
+        // chain. `next_epoch` is read (and bumped, if this cut commits a
+        // manifest) under the mgmt lock; cuts themselves are serialized
+        // by the engine (one flusher thread; `sync_now` holds the
+        // exclusive gate), so the read-bump pair cannot race another cut.
+        let (first, epoch) = {
+            let st = self.mgmt.lock().unwrap();
+            let first = st.legacy
+                || st.sections.is_empty()
+                || st.bins_per_group != mgmt_io::BINS_PER_GROUP;
+            (first, st.next_epoch)
+        };
+        let (ids, buffers, cache_slots) =
+            if !first && !self.probe_any_section_dirty(nb, ngroups) {
+                // No dirty sections — decided by an unlocked probe. Sound
+                // for ticket coverage: every mutation preceding the
+                // covering request is visible here (the request handshake
+                // synchronizes), and a mutation racing the probe simply
+                // belongs to the next epoch.
+                (Vec::new(), Vec::new(), self.cache.len() as u64)
+            } else {
+                self.serialize_sections_cut(first)
+            };
+        if !ids.is_empty() {
+            self.mgmt.lock().unwrap().next_epoch = epoch + 1;
         }
-        let epoch = st.epoch + 1;
-        // The consistent cut — the background engine's cheap quiesce
-        // point. Mutators may be running concurrently (the flusher
-        // thread's whole purpose), so per-section lock scopes are NOT
-        // enough: a fresh chunk registering between two section
-        // serializations would commit a bin that references a chunk the
-        // chunk section still calls Free. The cut serializes every dirty
-        // section *to memory* under one simultaneous lock acquisition,
-        // so the committed epoch is the exact management state at a
-        // single instant; the durable file writes happen after release.
-        let (dirty_ids, buffers, cache_slots) = self.serialize_sections_cut(first);
-        if dirty_ids.is_empty() {
-            return Ok(MgmtSyncOutcome { dirty: 0, total, bytes: 0, cache_slots, committed: false });
+        if ids.is_empty() && ranges.is_empty() && data_flushed.is_none() {
+            return Ok(None);
         }
-        // Durable section writes on the shared flusher pool
-        // ([`crate::util::parallel_jobs`]; a single dirty section — the
-        // common incremental shape — runs inline on this thread).
-        let n = dirty_ids.len();
-        let outcomes = crate::util::parallel_jobs(n, |i| -> Result<SectionRecord> {
-            let id = dirty_ids[i];
-            let name = id.file_name(epoch);
-            mgmt_io::write_section_file(&self.dir, &name, &buffers[i])?;
-            Ok(SectionRecord {
-                id,
-                file: name,
-                len: buffers[i].len() as u64,
-                checksum: mgmt_io::fnv1a(&buffers[i]),
-            })
-        });
-        let mut bytes = 0u64;
-        let mut recs = Vec::with_capacity(n);
-        let mut failure: Option<Error> = None;
-        for outcome in outcomes {
-            match outcome {
-                Ok(rec) => {
-                    bytes += rec.len;
-                    recs.push(rec);
-                }
-                Err(e) => {
-                    if failure.is_none() {
-                        failure = Some(e);
+        // Epoch-side preservation for attached readers: before the
+        // committer's in-place msync may tear a pinned epoch's view,
+        // freeze each dirty chunk as a side copy tagged with the epoch
+        // this cut will commit (reflink where the fs supports it; see
+        // `alloc/readers`). The scan also reaps leases of dead readers.
+        if !data_chunks.is_empty() {
+            let pins = readers::scan_pins(&self.dir);
+            if pins.any_live() {
+                if let Err(e) =
+                    readers::preserve_chunks(&self.dir, &self.segment, &data_chunks, cs, epoch)
+                {
+                    for &c in &data_chunks {
+                        self.dirty_data.mark(c);
                     }
+                    self.remark_dirty(&ids);
+                    return Err(e);
                 }
             }
         }
-        if let Some(e) = failure {
-            // serialization cleared dirty flags; restore them so the
-            // changes are retried instead of silently dropped
-            self.remark_dirty(&dirty_ids);
-            return Err(e);
-        }
-        // manifest = clean sections carried forward + rewritten ones (on
-        // a full `first` rewrite nothing old survives — stale bin groups
-        // from a different grouping width must not be referenced)
-        let mut sections = if first { HashMap::new() } else { st.sections.clone() };
-        for rec in recs {
-            sections.insert(rec.id, rec);
-        }
-        let mut list: Vec<SectionRecord> = sections.values().cloned().collect();
-        list.sort_by_key(|r| r.id);
-        let manifest = Manifest {
+        Ok(Some(PreparedEpoch {
             epoch,
-            num_bins: nb as u32,
-            bins_per_group: mgmt_io::BINS_PER_GROUP as u32,
-            sections: list,
+            gen: 0,
+            ranges,
+            data_chunks,
+            data_flushed,
+            ids,
+            buffers,
+            rewrite_all: first,
+            cache_slots,
+            total_sections: total,
+        }))
+    }
+
+    /// Stage 2 of a flush — make one prepared cut **durable**: msync its
+    /// data ranges, write its section files, commit its manifest by
+    /// fsync'd atomic rename, GC superseded files, and advance the
+    /// committed epoch. Runs on the committer thread under the pipelined
+    /// engine (strictly in epoch order — see the monotonicity check) or
+    /// inline via [`Self::sync_now`]. Any failure aborts the cut
+    /// ([`Self::abort_epoch`]) so the next cut retries its changes.
+    pub(crate) fn commit_epoch(&self, prep: &PreparedEpoch) -> Result<()> {
+        let t0 = Instant::now();
+        let net = self.netfs.as_deref();
+        let sim0 = net.map(|fs| fs.sim_seconds()).unwrap_or(0.0);
+        // --- data flush ---
+        let tdata = Instant::now();
+        let (data_chunks_n, data_bytes) = if let Some((g, b)) = prep.data_flushed {
+            (g, b)
+        } else if prep.ranges.is_empty() {
+            (0, 0)
+        } else {
+            if let Err(e) = self.segment.sync_ranges(&prep.ranges, self.opts.parallel_sync) {
+                // nothing was committed; re-mark so the next cut retries
+                self.abort_epoch(prep);
+                return Err(e);
+            }
+            let bytes: usize = prep.ranges.iter().map(|r| r.len()).sum();
+            (prep.data_chunks.len() as u64, bytes as u64)
         };
-        if let Err(e) = mgmt_io::commit_manifest(&self.dir, &manifest) {
-            self.remark_dirty(&dirty_ids);
-            return Err(e);
+        let data_secs = tdata.elapsed().as_secs_f64();
+        let sim_after_data = net.map(|fs| fs.sim_seconds()).unwrap_or(0.0);
+        // --- section writes + manifest commit ---
+        let tcommit = Instant::now();
+        let n = prep.ids.len();
+        let mut section_bytes = 0u64;
+        let mut committed = false;
+        if n > 0 {
+            let epoch = prep.epoch;
+            {
+                // The ordering invariant the pipeline rests on: manifests
+                // land strictly monotonically. The committer drains its
+                // queue FIFO in cut order, so this cannot fire; if it
+                // ever does, refusing the commit keeps the manifest chain
+                // sound (a newer manifest never references state older
+                // than its predecessor's).
+                let st = self.mgmt.lock().unwrap();
+                if epoch <= st.epoch {
+                    drop(st);
+                    self.abort_epoch(prep);
+                    return Err(Error::BgSync(format!(
+                        "manifest commit order violation: epoch {epoch} after {}",
+                        self.mgmt.lock().unwrap().epoch
+                    )));
+                }
+            }
+            // Durable section writes on the shared flusher pool
+            // ([`crate::util::parallel_jobs`]; a single dirty section —
+            // the common incremental shape — runs inline on this thread).
+            let outcomes = crate::util::parallel_jobs(n, |i| -> Result<SectionRecord> {
+                let id = prep.ids[i];
+                let name = id.file_name(epoch);
+                mgmt_io::write_section_file_charged(&self.dir, &name, &prep.buffers[i], net)?;
+                Ok(SectionRecord {
+                    id,
+                    file: name,
+                    len: prep.buffers[i].len() as u64,
+                    checksum: mgmt_io::fnv1a(&prep.buffers[i]),
+                })
+            });
+            let mut recs = Vec::with_capacity(n);
+            let mut failure: Option<Error> = None;
+            for outcome in outcomes {
+                match outcome {
+                    Ok(rec) => {
+                        section_bytes += rec.len;
+                        recs.push(rec);
+                    }
+                    Err(e) => {
+                        if failure.is_none() {
+                            failure = Some(e);
+                        }
+                    }
+                }
+            }
+            if let Some(e) = failure {
+                self.abort_epoch(prep);
+                return Err(e);
+            }
+            // The manifest is built *at commit time*, in commit order:
+            // clean sections are carried forward from the committed state
+            // as of this instant — for a pipelined epoch N+1 that is
+            // epoch N's just-landed state, so its manifest never
+            // references files N's failure would have orphaned. (On a
+            // full `rewrite_all` cut nothing old survives — stale bin
+            // groups from a different grouping width must not be
+            // referenced.)
+            let nb = self.num_bins();
+            let (mut sections, prev) = {
+                let st = self.mgmt.lock().unwrap();
+                let sections =
+                    if prep.rewrite_all { HashMap::new() } else { st.sections.clone() };
+                // keep the predecessor manifest as the torn-sync fallback
+                let prev = (!prep.rewrite_all && st.epoch > 0).then(|| Manifest {
+                    epoch: st.epoch,
+                    num_bins: nb as u32,
+                    bins_per_group: mgmt_io::BINS_PER_GROUP as u32,
+                    sections: st.sections.values().cloned().collect(),
+                });
+                (sections, prev)
+            };
+            for rec in recs {
+                sections.insert(rec.id, rec);
+            }
+            let mut list: Vec<SectionRecord> = sections.values().cloned().collect();
+            list.sort_by_key(|r| r.id);
+            let manifest = Manifest {
+                epoch,
+                num_bins: nb as u32,
+                bins_per_group: mgmt_io::BINS_PER_GROUP as u32,
+                sections: list,
+            };
+            if let Err(e) = mgmt_io::commit_manifest_charged(&self.dir, &manifest, net) {
+                self.abort_epoch(prep);
+                return Err(e);
+            }
+            {
+                let mut st = self.mgmt.lock().unwrap();
+                st.epoch = epoch;
+                st.sections = sections;
+                st.legacy = false;
+                st.bins_per_group = mgmt_io::BINS_PER_GROUP;
+            }
+            // GC the superseded files (and the legacy monolith), keeping
+            // the new manifest and its fallback predecessor
+            let mut keep: Vec<&Manifest> = vec![&manifest];
+            if let Some(p) = prev.as_ref() {
+                keep.push(p);
+            }
+            mgmt_io::gc(&self.dir, &keep);
+            committed = true;
         }
-        // keep the predecessor manifest as the torn-sync fallback; GC
-        // everything older (and the superseded legacy monolith)
-        let prev = (!first && st.epoch > 0).then(|| Manifest {
-            epoch: st.epoch,
-            num_bins: nb as u32,
-            bins_per_group: mgmt_io::BINS_PER_GROUP as u32,
-            sections: st.sections.values().cloned().collect(),
-        });
-        let mut keep: Vec<&Manifest> = vec![&manifest];
-        if let Some(p) = prev.as_ref() {
-            keep.push(p);
+        // --- stats + the adaptive-watermark sample ---
+        let sim_delta = net.map(|fs| fs.sim_seconds() - sim0).unwrap_or(0.0).max(0.0);
+        let unslept = sim_delta * (1.0 - net.map(|fs| fs.sleep_scale).unwrap_or(0.0)).max(0.0);
+        let flush_micros = (t0.elapsed().as_secs_f64() + unslept) * 1e6;
+        {
+            let mut st = self.last_sync.lock().unwrap();
+            *st = SyncStats {
+                syncs: st.syncs + 1,
+                manifest_commits: st.manifest_commits + committed as u64,
+                dirty_sections: n as u64,
+                total_sections: prep.total_sections,
+                section_bytes_written: section_bytes,
+                data_chunks_flushed: data_chunks_n,
+                data_bytes_flushed: data_bytes,
+                flush_micros: flush_micros as u64,
+                sim_flush_micros: (sim_delta * 1e6) as u64,
+                cache_slots_preserved: prep.cache_slots,
+            };
         }
-        mgmt_io::gc(&self.dir, &keep);
-        st.epoch = epoch;
-        st.sections = sections;
-        st.legacy = false;
-        st.bins_per_group = mgmt_io::BINS_PER_GROUP;
-        Ok(MgmtSyncOutcome { dirty: n as u64, total, bytes, cache_slots, committed: true })
+        // Bandwidth sample for the adaptive watermark: effective
+        // bandwidth over the *data* portion of the flush with the fixed
+        // per-flush round-trip delay removed, plus that delay itself.
+        // Under a netfs profile the delay is the modelled op round trip
+        // of the range flush (the bandwidth-independent term of the cost
+        // model); locally it is the measured section+manifest commit
+        // time (the per-epoch cost a bigger batch amortizes).
+        if data_bytes > 0 && !prep.ranges.is_empty() {
+            // Under a profile the modelled backend *replaces* the local
+            // device in the cost model, so the sample is the simulated
+            // time (mixing in the local msync wall time would double-
+            // count the transfer); locally it is the measured wall time.
+            let sim_data = (sim_after_data - sim0).max(0.0);
+            let data_io_secs = if net.is_some() { sim_data } else { data_secs };
+            let delay_secs = match net {
+                Some(fs) => {
+                    let p = &fs.profile;
+                    let streams = if self.opts.parallel_sync { prep.ranges.len() } else { 1 };
+                    let eff = streams.clamp(1, p.concurrency) as f64;
+                    prep.ranges.len() as f64 * p.op_latency / eff
+                }
+                None => tcommit.elapsed().as_secs_f64(),
+            };
+            self.bg.record_flush_sample(data_bytes, data_io_secs, delay_secs);
+        }
+        Ok(())
+    }
+
+    /// Undo a prepared cut that failed to commit (or was abandoned when
+    /// an earlier queued epoch failed): re-mark its data chunks and its
+    /// sections' dirty flags so the next cut retries every change. The
+    /// epoch number is simply skipped — recovery and GC tolerate gaps.
+    pub(crate) fn abort_epoch(&self, prep: &PreparedEpoch) {
+        for &c in &prep.data_chunks {
+            self.dirty_data.mark(c);
+        }
+        self.remark_dirty(&prep.ids);
+    }
+
+    /// Record a sync invocation that found nothing dirty: counters move,
+    /// nothing is written, no manifest commits.
+    pub(crate) fn record_noop_sync(&self) {
+        let nb = self.num_bins();
+        let total = (mgmt_io::num_groups(nb) + 3) as u64;
+        let mut st = self.last_sync.lock().unwrap();
+        *st = SyncStats {
+            syncs: st.syncs + 1,
+            manifest_commits: st.manifest_commits,
+            dirty_sections: 0,
+            total_sections: total,
+            section_bytes_written: 0,
+            data_chunks_flushed: 0,
+            data_bytes_flushed: 0,
+            flush_micros: 0,
+            sim_flush_micros: 0,
+            cache_slots_preserved: self.cache.len() as u64,
+        };
     }
 
     /// Unlocked fast probe for the no-op path: is any section dirty?

@@ -24,12 +24,18 @@
 //!   with the committing epoch, clean sections are carried forward by
 //!   reference (the manifest lists the exact file name, length, and
 //!   FNV-1a checksum of every section).
-//! - **The manifest is the commit point.** It is written to a temp file,
-//!   fsync'd, renamed into place, and the directory is fsync'd — so a
-//!   crash at any instant leaves either the new manifest complete or the
-//!   previous one untouched (every file either manifest references still
-//!   exists, because garbage collection never removes files referenced by
-//!   the two most recent manifests).
+//! - **The manifest is the commit point.** It is written to a per-epoch
+//!   temp file (`manifest-<epoch>.tmp`), fsync'd, renamed into place, and
+//!   the directory is fsync'd — so a crash at any instant leaves either
+//!   the new manifest complete or the previous one untouched (every file
+//!   either manifest references still exists, because garbage collection
+//!   never removes files referenced by the two most recent manifests).
+//! - **Commits are strictly epoch-ordered.** The pipelined background
+//!   engine may *write section files* for epoch N+1 while epoch N's data
+//!   flush is still in flight, but `manifest-<N+1>.bin` is never renamed
+//!   into place before `manifest-<N>.bin` — the committer drains its
+//!   queue in FIFO epoch order, so the newest complete manifest always
+//!   dominates every older one.
 //! - **Recovery walks manifests newest-first** and loads the first one
 //!   that parses, whose trailer checksum matches, and whose sections all
 //!   exist with matching checksums — "the last complete manifest". A
@@ -263,19 +269,53 @@ pub fn fsync_dir(dir: &Path) -> Result<()> {
 /// epoch-unique names, so no tmp+rename dance is needed: a torn write can
 /// only tear a file no committed manifest references yet.
 pub fn write_section_file(dir: &Path, name: &str, bytes: &[u8]) -> Result<()> {
+    write_section_file_charged(dir, name, bytes, None)
+}
+
+/// [`write_section_file`] that charges the simulated backend when a
+/// [`SimNetFs`](crate::storage::netfs::SimNetFs) profile is active: one
+/// write op for the body plus one metadata op for the create.
+pub fn write_section_file_charged(
+    dir: &Path,
+    name: &str,
+    bytes: &[u8],
+    netfs: Option<&crate::storage::netfs::SimNetFs>,
+) -> Result<()> {
     let path = dir.join(name);
     let mut f = File::create(&path).map_err(|e| Error::io(&path, e))?;
     f.write_all(bytes).map_err(|e| Error::io(&path, e))?;
     f.sync_all().map_err(|e| Error::io(&path, e))?;
+    if let Some(fs) = netfs {
+        fs.charge_metadata(1);
+        fs.charge_io(1, bytes.len() as u64, 1);
+    }
     Ok(())
 }
 
-/// Commit a manifest: tmp file + fsync + atomic rename + directory fsync.
-/// After this returns, `manifest-<epoch>.bin` is durably the newest
-/// complete manifest.
+/// Name of the per-epoch staging file a manifest commit writes before the
+/// atomic rename. Epoch-unique so pipelined commits never share a tmp.
+pub fn manifest_tmp_name(epoch: u64) -> String {
+    format!("manifest-{epoch:012}.tmp")
+}
+
+/// Commit a manifest: per-epoch tmp file + fsync + atomic rename +
+/// directory fsync. After this returns, `manifest-<epoch>.bin` is durably
+/// the newest complete manifest.
 pub fn commit_manifest(dir: &Path, m: &Manifest) -> Result<()> {
+    commit_manifest_charged(dir, m, None)
+}
+
+/// [`commit_manifest`] that charges the simulated backend when a
+/// [`SimNetFs`](crate::storage::netfs::SimNetFs) profile is active: one
+/// write op for the image plus metadata ops for the create/rename/dir
+/// fsync round trips.
+pub fn commit_manifest_charged(
+    dir: &Path,
+    m: &Manifest,
+    netfs: Option<&crate::storage::netfs::SimNetFs>,
+) -> Result<()> {
     let bytes = m.serialize();
-    let tmp = dir.join("manifest.tmp");
+    let tmp = dir.join(manifest_tmp_name(m.epoch));
     {
         let mut f = File::create(&tmp).map_err(|e| Error::io(&tmp, e))?;
         f.write_all(&bytes).map_err(|e| Error::io(&tmp, e))?;
@@ -283,7 +323,12 @@ pub fn commit_manifest(dir: &Path, m: &Manifest) -> Result<()> {
     }
     let fin = dir.join(manifest_file_name(m.epoch));
     fs::rename(&tmp, &fin).map_err(|e| Error::io(&fin, e))?;
-    fsync_dir(dir)
+    fsync_dir(dir)?;
+    if let Some(fs) = netfs {
+        fs.charge_metadata(3);
+        fs.charge_io(1, bytes.len() as u64, 1);
+    }
+    Ok(())
 }
 
 /// Read + verify one manifest; `None` if missing, torn, or corrupt.
@@ -364,10 +409,13 @@ pub fn gc(dir: &Path, keep: &[&Manifest]) {
             && name.ends_with(".bin")
             && !referenced.contains(name);
         let legacy = name == "management.bin" || name == "management.bin.tmp";
-        // a manifest.tmp can only be a leftover from a commit that
+        // a manifest tmp (legacy shared name or a per-epoch
+        // `manifest-<e>.tmp`) can only be a leftover from a commit that
         // crashed between write and rename (the current commit already
-        // renamed its own tmp before gc runs)
-        let orphan_tmp = name == "manifest.tmp";
+        // renamed its own tmp before gc runs, and pipelined commits are
+        // strictly ordered, so no later epoch's tmp is in flight here)
+        let orphan_tmp = name == "manifest.tmp"
+            || (name.starts_with("manifest-") && name.ends_with(".tmp"));
         if stale_mgmt || legacy || orphan_tmp {
             let _ = fs::remove_file(entry.path());
         }
@@ -535,12 +583,14 @@ mod tests {
         std::fs::write(dir.join("management.bin"), b"legacy").unwrap();
         std::fs::write(dir.join("mgmt-names-000000000009.bin"), b"orphan").unwrap();
         std::fs::write(dir.join("manifest.tmp"), b"torn commit leftover").unwrap();
+        std::fs::write(dir.join(manifest_tmp_name(4)), b"torn pipelined commit").unwrap();
         std::fs::write(dir.join("meta.bin"), b"keepme").unwrap();
         let m = sample_manifest(10);
         gc(dir, &[&m]);
         assert!(!dir.join("management.bin").exists());
         assert!(!dir.join("mgmt-names-000000000009.bin").exists());
         assert!(!dir.join("manifest.tmp").exists(), "crashed-commit tmp collected");
+        assert!(!dir.join(manifest_tmp_name(4)).exists(), "per-epoch tmp collected");
         assert!(dir.join("meta.bin").exists(), "non-management files untouched");
     }
 

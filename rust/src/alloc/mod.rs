@@ -121,31 +121,60 @@
 //!    [`MetallManager::flush_object_caches`] is the explicit full drain
 //!    (and `close()` always drains, so a closed image is canonical).
 //!
-//! 5. **Background engine** ([`bg_sync`]). A [`bg_sync::SyncEngine`]
-//!    owned by every read-write manager runs the steps above on a
-//!    dedicated flusher thread, started by three triggers: a
-//!    **dirty-byte high watermark**
-//!    ([`ManagerOptions::sync_watermark_bytes`], fed by the
-//!    chunk-granular dirty map's running byte count), an optional
-//!    **interval timer** ([`ManagerOptions::sync_interval_ms`]), and
-//!    explicit requests — `sync_async()` returns a
-//!    [`bg_sync::SyncTicket`] whose `wait()` blocks until that flush
-//!    *epoch*'s manifest is durably committed, and `sync()` is exactly
-//!    `sync_async()` + `wait()` (unchanged durability semantics,
-//!    concurrent callers coalescing onto one flush). The quiesce point
-//!    is the consistent cut of step 2 — a brief in-memory snapshot under
-//!    all management locks at once; all file I/O runs off-lock, and
-//!    per-core cache hits and data writes are never paused at all.
-//!    Writers that outrun the disk stall at a hard **backpressure
-//!    ceiling**
-//!    ([`ManagerOptions::sync_ceiling_bytes`], counted in
-//!    [`bg_sync::BgSyncStats`]); a *panicking* flusher marks the engine
-//!    dead and every later sync call (including `close()`, which then
-//!    refuses to write `CLEAN`) errors instead of silently dropping
-//!    data; `close()`/`Drop` drain outstanding epochs, join the thread,
-//!    and run the final full sync inline. `snapshot()` and `doctor()`
-//!    hold the engine's flush gate so they never observe a
-//!    half-committed background epoch.
+//! 5. **Background engine, epoch-pipelined** ([`bg_sync`]). A
+//!    [`bg_sync::SyncEngine`] owned by every read-write manager runs
+//!    the steps above across **two** dedicated threads. The *flusher*
+//!    answers three triggers — a **dirty-byte high watermark** (fed by
+//!    the chunk-granular dirty map's running byte count; see the
+//!    adaptive controller below), an optional **interval timer**
+//!    ([`ManagerOptions::sync_interval_ms`]), and explicit requests
+//!    (`sync_async()` returns a [`bg_sync::SyncTicket`] whose `wait()`
+//!    blocks until the covering flush *epoch*'s manifest is durably
+//!    committed; `sync()` is exactly `sync_async()` + `wait()`, with
+//!    concurrent callers coalescing) — by taking the consistent cut of
+//!    step 2 and serializing its dirty sections into an in-memory
+//!    prepared epoch. The *committer* pops prepared epochs from a
+//!    bounded FIFO queue and makes each durable: data msync, section
+//!    file writes, manifest rename. Because one thread owns the queue
+//!    head, **manifests commit strictly in epoch order** — epoch N+1's
+//!    rename can never land before epoch N's — while epoch N+1's cut
+//!    and serialization overlap epoch N's backend writes. The queue is
+//!    bounded by [`ManagerOptions::sync_pipeline_depth`] (default 2:
+//!    one committing, one queued; depth 1 reproduces the strictly
+//!    serial engine): a trigger that finds the pipeline full waits for
+//!    a slot rather than queue further cuts, so memory for serialized
+//!    sections stays bounded. Reader side-copy freezing runs at cut
+//!    time, tagged with the epoch whose cut produced it. A failed
+//!    commit aborts every later queued epoch (their dirty flags are
+//!    restored, so nothing is lost — the next round re-cuts them) and
+//!    tickets covering exactly the failed-through generations report
+//!    the error; tickets whose epoch already committed still resolve
+//!    `Ok`. Writers that outrun the backend stall at a hard
+//!    **backpressure ceiling** ([`ManagerOptions::sync_ceiling_bytes`],
+//!    counted in [`bg_sync::BgSyncStats`]); the stall ends as soon as
+//!    the next *cut* clears the dirty estimate — the writer never waits
+//!    for the backend write itself. A *panicking* flusher or committer
+//!    marks the engine dead and every later sync call (including
+//!    `close()`, which then refuses to write `CLEAN`) errors instead of
+//!    silently dropping data; `close()`/`Drop` drain outstanding
+//!    epochs, join both threads, and run the final full sync inline.
+//!    `snapshot()` and `doctor()` hold the engine's flush gate
+//!    exclusively so they never observe a half-committed background
+//!    epoch.
+//!
+//! 6. **Bandwidth-adaptive watermark.** With
+//!    [`ManagerOptions::sync_watermark_adaptive`] (default on) and a
+//!    configured watermark, the engine maintains EWMAs of per-epoch
+//!    effective flush bandwidth and fixed per-flush latency — measured
+//!    from the commit path itself, including [`crate::storage::netfs`]
+//!    charged time when a simulated backend profile
+//!    ([`ManagerOptions::netfs_profile`]) is active — and moves the
+//!    trigger toward the measured **bandwidth-delay product**, clamped
+//!    to `[64 KiB, ceiling/2]`. Slow, latency-heavy backends (Lustre)
+//!    batch dirty bytes up to what one in-flight epoch can absorb; fast
+//!    local stores flush eagerly. The current value and the measured
+//!    bandwidth are exported as `alloc.bgsync.adaptive_watermark_bytes`
+//!    / `alloc.bgsync.measured_bandwidth_bps`.
 //!
 //! A sync where nothing changed writes zero bytes and commits no
 //! manifest. Observability: [`manager::SyncStats`]
@@ -207,9 +236,7 @@
 //!   end-to-end by the `metall attach` benchmark.
 //!
 //! Follow-on (ROADMAP): an interleave policy (`MPOL_INTERLEAVE`) for
-//! read-mostly large segments shared by threads on every node, and
-//! epoch pipelining in the background engine (overlap epoch N+1's
-//! serialization with epoch N's msync).
+//! read-mostly large segments shared by threads on every node.
 
 pub mod api;
 pub mod size_class;

@@ -43,6 +43,15 @@
 //! epoch has committed, and a mapped side file survives its own unlink,
 //! so GC (which keeps, per chunk, the newest copy at or below every
 //! protected epoch) can never yank pages out from under a reader.
+//!
+//! With the pipelined flusher, the freeze runs at **cut** time
+//! (`prepare_epoch`), so side copies for more than one not-yet-committed
+//! epoch may coexist on disk at once — each tagged with the epoch whose
+//! cut produced it. Readers only ever resolve to epochs named by a
+//! committed manifest, so copies tagged with an epoch that was later
+//! aborted are simply never referenced and are collected the next time a
+//! later epoch commits (GC keeps everything newer than the max protected
+//! epoch, which covers the still-in-flight tags).
 
 use std::collections::HashMap;
 use std::fs::{self, File, OpenOptions};

@@ -27,8 +27,11 @@ SUBCOMMANDS:
     inspect   --store <dir>                          named objects + usage stats
     snapshot  --store <dir> --to <dir>               reflink/copy snapshot
     sync      --store <dir> [--watermark-mb n] [--interval-ms n]
+              [--pipeline <depth>] [--netfs <profile>]
                                                      run a background sync epoch and print
                                                      the alloc.sync.* / alloc.bgsync.* metrics
+                                                     (--netfs charges a simulated backend;
+                                                     unknown profiles fail fast listing names)
     analyze   --store <dir> --algo <pagerank|bfs> [--artifacts artifacts]
               [--iters 50] [--source 0] [--top 5]    run analytics via the PJRT engine
                                                      (uses/refreshes the persistent ELL cache)
@@ -147,9 +150,21 @@ pub fn run(argv: &[String]) -> Result<i32> {
         }
         "sync" => {
             let store = req(&args, "store")?;
+            // Validate the profile name before touching the datastore so a
+            // typo fails fast with the list of known backends.
+            let netfs_profile = match args.get("netfs") {
+                Some(name) => {
+                    crate::storage::netfs::profile_by_name_strict(name)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    Some(name.to_string())
+                }
+                None => None,
+            };
             let o = ManagerOptions {
                 sync_watermark_bytes: args.get_usize("watermark-mb", 0) << 20,
                 sync_interval_ms: args.get_usize("interval-ms", 0) as u64,
+                sync_pipeline_depth: args.get_usize("pipeline", 0),
+                netfs_profile,
                 ..Default::default()
             };
             let mgr = MetallManager::open_with(store, o, false, false).context("open datastore")?;

@@ -140,6 +140,7 @@ pub fn record_sync_stats(m: &Metrics, s: &SyncStats) {
     m.add("alloc.sync.data_chunks", s.data_chunks_flushed);
     m.add("alloc.sync.data_bytes", s.data_bytes_flushed);
     m.add("alloc.sync.flush_micros", s.flush_micros);
+    m.add("alloc.sync.sim_flush_micros", s.sim_flush_micros);
     m.add("alloc.sync.cache_slots_preserved", s.cache_slots_preserved);
 }
 
@@ -160,6 +161,11 @@ pub fn record_bg_sync_stats(m: &Metrics, s: &BgSyncStats) {
     m.add("alloc.bgsync.writer_stall_micros", s.writer_stall_micros);
     m.add("alloc.bgsync.watermark_bytes", s.watermark_bytes);
     m.add("alloc.bgsync.ceiling_bytes", s.ceiling_bytes);
+    m.add("alloc.bgsync.pipeline_depth", s.pipeline_depth);
+    m.add("alloc.bgsync.pipeline_peak_in_flight", s.pipeline_peak_in_flight);
+    m.add("alloc.bgsync.adaptive_watermark_bytes", s.adaptive_watermark_bytes);
+    m.add("alloc.bgsync.measured_bandwidth_bps", s.measured_bandwidth_bps);
+    m.add("alloc.bgsync.epochs_committed", s.epochs_committed);
 }
 
 /// Fold one reader's [`AttachStats`] into `m` under `alloc.attach.*`.
@@ -286,6 +292,7 @@ mod tests {
                 data_chunks_flushed: 32,
                 data_bytes_flushed: 32 << 16,
                 flush_micros: 1500,
+                sim_flush_micros: 900,
                 cache_slots_preserved: 12,
             },
         );
@@ -300,6 +307,7 @@ mod tests {
         assert_eq!(m.get("alloc.sync.section_bytes"), 4096);
         assert_eq!(m.get("alloc.sync.data_chunks"), 32);
         assert_eq!(m.get("alloc.sync.flush_micros"), 1500);
+        assert_eq!(m.get("alloc.sync.sim_flush_micros"), 900);
         assert_eq!(m.get("alloc.sync.cache_slots_preserved"), 12);
     }
 
@@ -319,6 +327,11 @@ mod tests {
             writer_stall_micros: 750,
             watermark_bytes: 4 << 20,
             ceiling_bytes: 16 << 20,
+            pipeline_depth: 2,
+            pipeline_peak_in_flight: 2,
+            adaptive_watermark_bytes: 9 << 20,
+            measured_bandwidth_bps: 3_000_000_000,
+            epochs_committed: 4,
             engine_running: true,
             engine_dead: false,
         };
@@ -330,6 +343,11 @@ mod tests {
         assert_eq!(m.get("alloc.bgsync.writer_stalls"), 2);
         assert_eq!(m.get("alloc.bgsync.writer_stall_micros"), 750);
         assert_eq!(m.get("alloc.bgsync.watermark_bytes"), 4 << 20);
+        assert_eq!(m.get("alloc.bgsync.pipeline_depth"), 2);
+        assert_eq!(m.get("alloc.bgsync.pipeline_peak_in_flight"), 2);
+        assert_eq!(m.get("alloc.bgsync.adaptive_watermark_bytes"), 9 << 20);
+        assert_eq!(m.get("alloc.bgsync.measured_bandwidth_bps"), 3_000_000_000);
+        assert_eq!(m.get("alloc.bgsync.epochs_committed"), 4);
     }
 
     #[test]

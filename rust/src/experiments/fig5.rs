@@ -15,7 +15,7 @@ use crate::coordinator::pipeline::{ingest, PipelineConfig};
 use crate::error::Result;
 use crate::graph::stream::{MonthBatch, StreamConfig};
 use crate::storage::mmap::page_size;
-use crate::storage::netfs::{profile_by_name, SimNetFs};
+use crate::storage::netfs::{profile_by_name_strict, SimNetFs};
 
 /// The three §6.4.2 configurations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -128,8 +128,7 @@ pub fn run_cell(
     p: &Fig5Params,
     workdir: &Path,
 ) -> Result<Vec<MonthRow>> {
-    let profile = profile_by_name(fs_name)
-        .ok_or_else(|| crate::error::Error::Config(format!("unknown fs {fs_name}")))?;
+    let profile = profile_by_name_strict(fs_name)?;
     let net = SimNetFs::new(profile);
     let stream = match dataset {
         "wiki" => StreamConfig::wiki_like(p.months, p.first_month_edges),
@@ -233,6 +232,84 @@ pub fn run_cell(
     Ok(rows)
 }
 
+/// One background-engine cell for the pipelined-vs-serial comparison.
+/// Unlike [`run_cell`] (which reopens the store each month and models
+/// the flush charge by hand), a single manager stays open across all
+/// months with the simulated backend wired into its own sync path
+/// ([`ManagerOptions::netfs_profile`], `sleep_scale = 1.0`) and every
+/// month-boundary flush runs on the background engine — strictly serial
+/// (depth 1, blocking `sync()` per month) or pipelined (depth 2,
+/// `sync_async` per month + one final wait, added to the last row).
+/// `flush_secs` is the stall the ingest loop observes on the persist
+/// path; the simulated charge is slept inside the engine, so pipelined
+/// months hide the backend write behind the next month's ingest.
+pub fn run_bg_cell(
+    fs_name: &str,
+    dataset: &str,
+    pipelined: bool,
+    p: &Fig5Params,
+    workdir: &Path,
+) -> Result<Vec<MonthRow>> {
+    profile_by_name_strict(fs_name)?; // fail fast, before any store exists
+    let mode = if pipelined { "bg-pipelined" } else { "bg-serial" };
+    let stream = match dataset {
+        "wiki" => StreamConfig::wiki_like(p.months, p.first_month_edges),
+        _ => StreamConfig::reddit_like(p.months, p.first_month_edges),
+    };
+    let batches: Vec<MonthBatch> = stream.generate();
+    let dir = workdir.join(format!("fig5-{fs_name}-{dataset}-{mode}"));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut opts = manager_opts(p, IoMode::DirectMmap);
+    opts.netfs_profile = Some(fs_name.to_string());
+    opts.netfs_sleep_scale = 1.0;
+    opts.sync_pipeline_depth = if pipelined { 2 } else { 1 };
+    let mgr = MetallManager::create_with(&dir, opts)?;
+    let graph = BankedAdjacency::create(&mgr, p.nbanks)?;
+    mgr.construct::<u64>("graph", graph.offset())?;
+
+    let mut rows = Vec::new();
+    let mut last = None;
+    for b in &batches {
+        let t0 = std::time::Instant::now();
+        let metrics = Metrics::new();
+        let cfg = PipelineConfig {
+            workers: 2,
+            batch_size: 4096,
+            queue_depth: 8,
+            nbanks: p.nbanks,
+        };
+        let rep = ingest(&mgr, &graph, b.edges.iter().copied(), &cfg, true, &metrics)?;
+        let ingest_local = t0.elapsed().as_secs_f64();
+
+        let t1 = std::time::Instant::now();
+        if pipelined {
+            last = Some(mgr.sync_async()?);
+        } else {
+            mgr.sync()?;
+        }
+        rows.push(MonthRow {
+            fs: fs_name.to_string(),
+            dataset: dataset.to_string(),
+            mode,
+            month: b.month,
+            edges: rep.edges,
+            ingest_secs: ingest_local,
+            flush_secs: t1.elapsed().as_secs_f64(),
+        });
+    }
+    if let Some(t) = last {
+        let t1 = std::time::Instant::now();
+        t.wait()?;
+        if let Some(r) = rows.last_mut() {
+            r.flush_secs += t1.elapsed().as_secs_f64();
+        }
+    }
+    mgr.close()?;
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(rows)
+}
+
 /// Dirty-page estimate for the direct-mmap charge: pages written this
 /// iteration ≈ segment pages touched by the month's inserts. We read the
 /// kernel's per-file block deltas as a cheap proxy: count pages of the
@@ -287,6 +364,27 @@ mod tests {
             // months grow
             assert!(rows[2].edges > rows[0].edges);
         }
+    }
+
+    #[test]
+    fn bg_cells_complete_on_both_engine_shapes() {
+        let d = TempDir::new("fig5c");
+        for pipelined in [false, true] {
+            let rows = run_bg_cell("vast", "wiki", pipelined, &tiny(), d.path()).unwrap();
+            assert_eq!(rows.len(), 3, "pipelined={pipelined}");
+            assert!(rows.iter().all(|r| r.edges > 0 && r.flush_secs >= 0.0));
+            assert!(rows[2].edges > rows[0].edges);
+        }
+    }
+
+    #[test]
+    fn unknown_backend_fails_fast_listing_profiles() {
+        let d = TempDir::new("fig5d");
+        let err = run_cell("gpfs", "wiki", IoMode::BsMmap, &tiny(), d.path()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("gpfs") && msg.contains("lustre"), "{msg}");
+        let err = run_bg_cell("gpfs", "wiki", true, &tiny(), d.path()).unwrap_err();
+        assert!(err.to_string().contains("lustre"));
     }
 
     #[test]

@@ -12,20 +12,31 @@
 //! - [`reflink`] — `FICLONE`-based snapshot copy with a plain-copy
 //!   fallback (paper §3.4).
 //! - [`netfs`] — simulated network file systems (Lustre-like / VAST-like)
-//!   and device profiles used by the Fig 5/6 reproduction; see DESIGN.md
-//!   §3 (substitutions).
+//!   and device profiles used by the Fig 5/6 reproduction and, via
+//!   [`crate::alloc::ManagerOptions::netfs_profile`], charged directly by
+//!   the sync path itself; see DESIGN.md §3 (substitutions).
 //!
 //! ## How the sync protocol uses this layer
 //!
 //! [`crate::alloc::ManagerCore::sync`] persists in two phases, both of
 //! which resolve to primitives here — and since the background engine
-//! ([`crate::alloc::bg_sync`]) both phases run on a dedicated flusher
-//! thread, off the mutation path: `sync()` is `sync_async()` + an epoch
-//! ticket wait, a dirty-byte watermark (or interval timer) flushes with
-//! no caller at all, and writers that outrun the device stall at a hard
-//! backpressure ceiling. The primitives below are therefore routinely
-//! invoked from the `metall-bgsync` thread while application threads
-//! keep allocating and writing:
+//! ([`crate::alloc::bg_sync`]) the phases run **pipelined across two
+//! engine threads**, off the mutation path: the `metall-bgsync` flusher
+//! takes each epoch's consistent cut and serializes its dirty sections
+//! in memory, while the `metall-bgcommit` committer drains a bounded
+//! FIFO of prepared epochs and makes each durable in strict epoch order
+//! (data msync → section writes → manifest rename — epoch N+1's rename
+//! never lands before epoch N's). `sync()` is `sync_async()` + an epoch
+//! ticket wait, a dirty-byte watermark (fixed, or bandwidth-adaptive
+//! from measured flush bandwidth × latency) or interval timer flushes
+//! with no caller at all, and writers that outrun the device stall at a
+//! hard backpressure ceiling — a stall that ends at the next *cut*, not
+//! at the backend write behind it. The primitives below are therefore
+//! routinely invoked from both engine threads while application threads
+//! keep allocating and writing; when a [`netfs`] profile is active,
+//! [`segment::SegmentStorage::sync_ranges`] and every
+//! [`crate::alloc::mgmt_io`] section/manifest write additionally charge
+//! the simulated backend's cost account:
 //!
 //! **Application data, two flush paths.** In the default *shared* mode
 //! (`MAP_SHARED`) the kernel owns write-back and sync's job is to force
@@ -55,13 +66,17 @@
 //! the last complete sync; and the transient cache section closes the
 //! gap between them (free slots parked in DRAM caches at sync time are
 //! recorded, and recovery returns them, so no slot leaks across a kill).
-//! Background flushing changes none of this: a kill-9 mid-background-
-//! epoch tears at most the files that epoch was writing, and recovery
-//! walks back to the last complete manifest exactly as for a torn
-//! foreground sync. Shutdown is explicit — `close()`/`Drop` drain the
-//! engine with a final full sync and join the flusher before the
-//! `CLEAN` marker is written, and a flusher that died refuses the
-//! marker so the store is never falsely advertised as consistent.
+//! Pipelined background flushing changes none of this: with up to
+//! `sync_pipeline_depth` epochs in flight, a kill-9 tears at most the
+//! files those in-flight epochs were writing — and because manifests
+//! commit strictly in epoch order, the newest *complete* manifest on
+//! disk is always a consistent prefix of the epoch sequence; recovery
+//! walks back to it exactly as for a torn foreground sync (the
+//! `torn_pipeline_queue_matrix` integration test drives the full file
+//! surgery). Shutdown is explicit — `close()`/`Drop` drain the queue,
+//! join both engine threads, and run a final full sync before the
+//! `CLEAN` marker is written; an engine that died refuses the marker so
+//! the store is never falsely advertised as consistent.
 //!
 //! ## How reader attach uses this layer
 //!

@@ -39,6 +39,16 @@ pub struct NetFsProfile {
     pub metadata_latency: f64,
 }
 
+impl NetFsProfile {
+    /// Bandwidth-delay product of the modelled backend: how many bytes a
+    /// single flush must carry before the bandwidth term catches up with
+    /// one op round trip. The adaptive watermark controller converges
+    /// near this value (Lustre ≈ 4.5 MB, VAST ≈ 250 KB).
+    pub fn bdp_bytes(&self) -> u64 {
+        (self.bandwidth * self.op_latency) as u64
+    }
+}
+
 /// Lustre-like: throughput-oriented parallel FS. High aggregate bandwidth
 /// and good parallelism, but every RPC pays a hefty round trip and
 /// metadata operations are notoriously expensive.
@@ -80,14 +90,31 @@ pub const OPTANE: NetFsProfile = NetFsProfile {
     metadata_latency: 2.0e-6,
 };
 
+/// Every profile this module knows, for error messages and matrix benches.
+pub const PROFILE_NAMES: &[&str] = &["lustre", "vast", "nvme", "optane"];
+
+/// Resolve a profile by name, case-insensitively (`"LUSTRE"` and
+/// `"Lustre"` both mean [`LUSTRE`]).
 pub fn profile_by_name(name: &str) -> Option<NetFsProfile> {
-    match name {
+    match name.to_ascii_lowercase().as_str() {
         "lustre" => Some(LUSTRE),
         "vast" => Some(VAST),
         "nvme" => Some(NVME),
         "optane" => Some(OPTANE),
         _ => None,
     }
+}
+
+/// [`profile_by_name`] that fails fast with the list of known profiles —
+/// the CLI/bench entry points use this so a typo aborts the run instead
+/// of silently leaving the I/O uncharged.
+pub fn profile_by_name_strict(name: &str) -> crate::error::Result<NetFsProfile> {
+    profile_by_name(name).ok_or_else(|| {
+        crate::error::Error::Config(format!(
+            "unknown netfs profile {name:?} (known: {})",
+            PROFILE_NAMES.join(", ")
+        ))
+    })
 }
 
 /// A simulated file system account. Thread-safe; simulated time is
@@ -205,9 +232,29 @@ mod tests {
 
     #[test]
     fn profiles_resolvable() {
-        for n in ["lustre", "vast", "nvme", "optane"] {
+        for n in PROFILE_NAMES {
             assert!(profile_by_name(n).is_some());
         }
         assert!(profile_by_name("gpfs").is_none());
+    }
+
+    #[test]
+    fn profile_lookup_is_case_insensitive_and_strict_lists_names() {
+        assert_eq!(profile_by_name("LUSTRE").unwrap().name, "lustre");
+        assert_eq!(profile_by_name("Vast").unwrap().name, "vast");
+        assert_eq!(profile_by_name_strict("nVmE").unwrap().name, "nvme");
+        let err = profile_by_name_strict("gpfs").unwrap_err().to_string();
+        for n in PROFILE_NAMES {
+            assert!(err.contains(n), "{err} should list {n}");
+        }
+    }
+
+    #[test]
+    fn bandwidth_delay_products_match_table1_shape() {
+        // Lustre: high latency × high bandwidth → MB-scale BDP; VAST is
+        // latency-oriented → sub-MB. The adaptive watermark keys off this.
+        assert!(LUSTRE.bdp_bytes() > (1 << 20));
+        assert!(VAST.bdp_bytes() < (1 << 20));
+        assert!(NVME.bdp_bytes() < VAST.bdp_bytes());
     }
 }

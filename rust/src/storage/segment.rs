@@ -14,10 +14,11 @@ use std::fs::{self, File, OpenOptions};
 use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::{Error, Result};
 use crate::storage::mmap::{self, page_size, Prot, Share, VmReservation};
+use crate::storage::netfs::SimNetFs;
 use crate::util::{align_up, div_ceil};
 
 /// Default backing-file size (the paper's 256 MB, here 64 MiB so that the
@@ -87,6 +88,10 @@ pub struct SegmentStorage {
     files: Mutex<Vec<File>>,
     mapped_len: AtomicUsize,
     opts: SegmentOptions,
+    /// Optional simulated-backend account: when set, every range flush
+    /// ([`Self::sync_ranges`]) charges the cost model so sync-path
+    /// benches measure Lustre/VAST behaviour, not the local disk's.
+    netfs: OnceLock<Arc<SimNetFs>>,
 }
 
 impl SegmentStorage {
@@ -105,7 +110,14 @@ impl SegmentStorage {
             )));
         }
         let vm = VmReservation::reserve(opts.vm_reserve)?;
-        Ok(Self { vm, dir, files: Mutex::new(vec![]), mapped_len: AtomicUsize::new(0), opts })
+        Ok(Self {
+            vm,
+            dir,
+            files: Mutex::new(vec![]),
+            mapped_len: AtomicUsize::new(0),
+            opts,
+            netfs: OnceLock::new(),
+        })
     }
 
     /// Open an existing segment store, mapping every backing file found.
@@ -146,7 +158,19 @@ impl SegmentStorage {
             files: Mutex::new(files),
             mapped_len: AtomicUsize::new(total),
             opts,
+            netfs: OnceLock::new(),
         })
+    }
+
+    /// Attach the simulated-backend account (once, right after
+    /// create/open). Subsequent calls are ignored.
+    pub fn set_netfs(&self, fs: Arc<SimNetFs>) {
+        let _ = self.netfs.set(fs);
+    }
+
+    /// The attached simulated-backend account, if any.
+    pub fn netfs(&self) -> Option<&SimNetFs> {
+        self.netfs.get().map(Arc::as_ref)
     }
 
     fn detect_files(dir: &Path) -> Result<Detected> {
@@ -289,10 +313,17 @@ impl SegmentStorage {
             return Ok(());
         }
         let base = self.base() as usize;
+        let charge = |streams: usize| {
+            if let Some(fs) = self.netfs() {
+                let bytes: u64 = todo.iter().map(|r| r.len() as u64).sum();
+                fs.charge_io(todo.len() as u64, bytes, streams);
+            }
+        };
         if !parallel {
             for r in &todo {
                 mmap::msync((base + r.start) as *mut u8, r.len())?;
             }
+            charge(1);
             return Ok(());
         }
         // shared flusher pool; a single range runs inline
@@ -301,7 +332,9 @@ impl SegmentStorage {
             mmap::msync((base + r.start) as *mut u8, r.len())
         })
         .into_iter()
-        .collect()
+        .collect::<Result<()>>()?;
+        charge(todo.len());
+        Ok(())
     }
 
     /// Free a range of the segment: drop DRAM pages and (configurably)

@@ -58,11 +58,17 @@ fn crash_child_entry() {
     // "crash-bgsync" never calls sync() in the churn loop at all: a tiny
     // dirty-byte watermark (+ interval timer) keeps the *background*
     // flusher committing epochs under continuous ingest, so the kill
-    // lands around flushes nobody on the mutation path asked for
+    // lands around flushes nobody on the mutation path asked for;
+    // "crash-pipeline" runs the depth-2 epoch-pipelined engine against
+    // the simulated lustre backend (partly slept, so each commit takes
+    // long enough for the next cut to queue behind it) and fires
+    // sync_async every other op — the kill lands while epoch N's commit
+    // is in flight and epoch N+1's sections sit serialized in the queue
     let numa = mode == "crash-numa2";
     let sharded = mode.ends_with("shards4") || numa;
     let syncy = mode == "crash-sync";
     let bgsync = mode == "crash-bgsync";
+    let pipeline = mode == "crash-pipeline";
     let mut opts = ManagerOptions::small_for_tests();
     if sharded {
         opts.shards = 4;
@@ -75,6 +81,14 @@ fn crash_child_entry() {
         // up management-only dirt between data bursts
         opts.sync_watermark_bytes = opts.chunk_size;
         opts.sync_interval_ms = 5;
+    }
+    if pipeline {
+        opts.sync_pipeline_depth = 2;
+        opts.netfs_profile = Some("lustre".to_string());
+        // sleep a fifth of the modelled backend time: commits take long
+        // enough that cuts queue behind them, and the SIGKILL window
+        // reliably covers an overlapped prepare/commit pair
+        opts.netfs_sleep_scale = 0.2;
     }
     let m = MetallManager::create_with(&store, opts).unwrap();
     let v = PVec::<u64>::create(&m).unwrap();
@@ -95,7 +109,7 @@ fn crash_child_entry() {
     // watermark-driven background flusher instead. Armed only after the
     // snapshot completed: the snapshot is the recovery baseline the
     // parent asserts on.
-    if syncy || bgsync {
+    if syncy || bgsync || pipeline {
         let delay = std::time::Duration::from_millis(4 + kill_at % 60);
         std::thread::spawn(move || {
             std::thread::sleep(delay);
@@ -111,7 +125,7 @@ fn crash_child_entry() {
         if sharded {
             pin_thread_vcpu(Some((op % 4) as usize));
         }
-        if !syncy && !bgsync && op == kill_at {
+        if !syncy && !bgsync && !pipeline && op == kill_at {
             match mode.as_str() {
                 "clean" => {
                     m.construct::<u64>("post_ops", op).unwrap();
@@ -135,6 +149,11 @@ fn crash_child_entry() {
         }
         if syncy && op % 3 == 2 {
             m.sync().unwrap();
+        }
+        if pipeline && op % 2 == 1 {
+            // fire-and-forget: tickets coalesce, the queue fills, and the
+            // slowed commits keep two epochs in flight almost constantly
+            drop(m.sync_async().unwrap());
         }
     }
     unreachable!("loop only exits through close or SIGKILL");
@@ -445,6 +464,75 @@ fn kill9_mid_background_flush_recovers_from_last_complete_manifest() {
     );
 }
 
+/// Kill-9 under the **epoch-pipelined engine on a slow backend**: the
+/// child runs depth-2 pipelining against partly-slept simulated lustre
+/// and fires `sync_async` every other op, so at the kill instant epoch
+/// N's commit (section writes, manifest rename) is typically in flight
+/// with epoch N+1's sections already serialized in the queue. The
+/// recovery contract does not change:
+///
+/// - plain `open()` refuses the dirty store,
+/// - committed manifest epochs are strictly monotone on disk (the
+///   commit-order invariant survives the crash),
+/// - `open_unclean()` recovers on the **newest complete** manifest —
+///   doctor-clean, fully usable — and re-sealing works,
+/// - the pre-churn snapshot is intact.
+#[test]
+fn kill9_mid_pipelined_flush_recovers_on_newest_complete_manifest() {
+    use std::os::unix::process::ExitStatusExt;
+    let mut rng = Xoshiro256ss::new(0x919E);
+    // the snapshot's own sync commits epoch 1; epochs past it prove the
+    // pipelined engine really committed under churn before the kill
+    let mut saw_pipelined_epoch = false;
+    for round in 0..3 {
+        let d = TempDir::new(&format!("crash-pipe-{round}"));
+        let kill_at = 3 + rng.gen_range(200);
+        let status = spawn_child("crash-pipeline", d.path(), kill_at);
+        assert_eq!(
+            status.signal(),
+            Some(libc::SIGKILL),
+            "round {round}: child must die by SIGKILL, got {status:?}"
+        );
+        let store = d.join("s");
+        assert!(!store.join("CLEAN").exists(), "round {round}");
+        assert!(MetallManager::open(&store).is_err(), "round {round}: dirty store refused");
+        let epochs = metall_rs::alloc::mgmt_io::list_manifest_epochs(&store).unwrap();
+        assert!(!epochs.is_empty(), "round {round}: at least one epoch before the kill");
+        assert!(
+            epochs.windows(2).all(|w| w[0] < w[1]),
+            "round {round}: committed epochs strictly monotone: {epochs:?}"
+        );
+        if epochs.iter().any(|&e| e > 1) {
+            saw_pipelined_epoch = true;
+        }
+        {
+            let m = MetallManager::open_unclean(&store)
+                .expect("open_unclean recovers on the newest complete manifest");
+            assert!(
+                m.doctor().unwrap().is_empty(),
+                "round {round}: recovered store is structurally consistent"
+            );
+            let off = m.allocate(64).unwrap();
+            m.write::<u64>(off, 0x919E);
+            assert_eq!(m.read::<u64>(off), 0x919E);
+            m.deallocate(off).unwrap();
+            m.construct::<u64>("post_pipe_recovery", round as u64).unwrap();
+            m.close().unwrap();
+        }
+        let m = MetallManager::open(&store).expect("re-sealed store opens");
+        assert_eq!(
+            m.read::<u64>(m.find::<u64>("post_pipe_recovery").unwrap().unwrap()),
+            round as u64
+        );
+        m.close().unwrap();
+        assert_snapshot_intact(&d.join("snap"));
+    }
+    assert!(
+        saw_pipelined_epoch,
+        "no round committed a pipelined epoch (epoch > 1) before its kill"
+    );
+}
+
 /// Deterministic torn-sync matrix: truncate (and separately delete) each
 /// file the *newest* sync wrote — every rewritten section and the
 /// manifest itself — and assert recovery lands exactly on the previous
@@ -524,6 +612,116 @@ fn torn_sync_truncation_matrix_recovers_previous_epoch() {
     let m = MetallManager::open_unclean(&store).unwrap();
     assert_eq!(m.read::<u64>(m.find::<u64>("b").unwrap().unwrap()), 2);
     m.close().unwrap();
+}
+
+/// Torn-**queue** matrix, the pipelined twin of the test above: with the
+/// depth-2 engine two epochs can have files on disk at the same time, so
+/// the surgery set is every file the two newest epochs wrote — both
+/// manifests plus every section tagged with either epoch. Recovery must
+/// land on the **newest manifest that remains complete**: tearing an
+/// epoch-3 file (or manifest 3 itself) rolls back to epoch 2; tearing a
+/// file only epoch 2's manifest references (manifest 2 itself, or a
+/// section epoch 3 superseded) leaves epoch 3 intact and recovery keeps
+/// its full state. Sections referenced by *both* kept manifests are
+/// excluded: they were committed before either in-flight epoch and are
+/// immutable, so no crash inside the pipeline window can tear them.
+#[test]
+fn torn_pipeline_queue_matrix_recovers_newest_complete_manifest() {
+    use metall_rs::alloc::mgmt_io;
+    use std::collections::HashSet;
+
+    fn copy_tree(src: &Path, dst: &Path) {
+        std::fs::create_dir_all(dst).unwrap();
+        for e in std::fs::read_dir(src).unwrap().flatten() {
+            let p = e.path();
+            let t = dst.join(e.file_name());
+            if p.is_dir() {
+                copy_tree(&p, &t);
+            } else {
+                std::fs::copy(&p, &t).unwrap();
+            }
+        }
+    }
+
+    let d = TempDir::new("torn-queue");
+    let store = d.join("s");
+    {
+        let mut o = ManagerOptions::small_for_tests();
+        o.sync_pipeline_depth = 2;
+        let m = MetallManager::create_with(&store, o).unwrap();
+        m.construct::<u64>("a", 1).unwrap();
+        m.sync().unwrap(); // epoch 1: "a"
+        m.construct::<u64>("b", 2).unwrap();
+        m.sync().unwrap(); // epoch 2: "a", "b"
+        m.construct::<u64>("c", 3).unwrap();
+        m.sync().unwrap(); // epoch 3: "a", "b", "c"
+        std::mem::forget(m); // crash without close
+    }
+    // GC keeps the newest manifest plus its fallback
+    assert_eq!(mgmt_io::list_manifest_epochs(&store).unwrap(), vec![2, 3]);
+    let man2 = mgmt_io::read_manifest(&store, 2).unwrap();
+    let man3 = mgmt_io::read_manifest(&store, 3).unwrap();
+    let closure = |m: &metall_rs::alloc::mgmt_io::Manifest, e: u64| -> HashSet<String> {
+        let mut s: HashSet<String> = m.sections.iter().map(|r| r.file.clone()).collect();
+        s.insert(mgmt_io::manifest_file_name(e));
+        s
+    };
+    let refs2 = closure(&man2, 2);
+    let refs3 = closure(&man3, 3);
+    // every file the two newest epochs wrote, by its epoch tag
+    let victims: Vec<&String> = refs2
+        .union(&refs3)
+        .filter(|f| f.contains("000000000002") || f.contains("000000000003"))
+        .collect();
+    let (mut rolled_back, mut kept_newest) = (0u32, 0u32);
+    for (i, file) in victims.iter().enumerate() {
+        let breaks3 = refs3.contains(*file);
+        let breaks2 = refs2.contains(*file);
+        if breaks3 && breaks2 {
+            continue; // pre-pipeline immutable section: not a queue casualty
+        }
+        let expected_epoch = if breaks3 { 2u64 } else { 3 };
+        for surgery in ["truncate", "delete"] {
+            let variant = d.join(format!("q{i}-{surgery}"));
+            copy_tree(&store, &variant);
+            let victim = variant.join(file);
+            match surgery {
+                "truncate" => {
+                    let bytes = std::fs::read(&victim).unwrap();
+                    std::fs::write(&victim, &bytes[..bytes.len() / 2]).unwrap();
+                }
+                _ => std::fs::remove_file(&victim).unwrap(),
+            }
+            let m = MetallManager::open_unclean(&variant).unwrap_or_else(|e| {
+                panic!("{surgery} {file}: recovery on the newest complete manifest failed: {e}")
+            });
+            assert!(m.find::<u64>("a").unwrap().is_some(), "{surgery} {file}");
+            assert!(m.find::<u64>("b").unwrap().is_some(), "{surgery} {file}");
+            if expected_epoch == 3 {
+                assert_eq!(
+                    m.read::<u64>(m.find::<u64>("c").unwrap().expect("epoch-3 state intact")),
+                    3,
+                    "{surgery} {file}"
+                );
+            } else {
+                assert!(
+                    m.find::<u64>("c").unwrap().is_none(),
+                    "{surgery} {file}: torn epoch-3 state rolled back"
+                );
+            }
+            assert!(m.doctor().unwrap().is_empty(), "{surgery} {file}");
+            m.close().unwrap();
+        }
+        if expected_epoch == 2 {
+            rolled_back += 1;
+        } else {
+            kept_newest += 1;
+        }
+    }
+    // the matrix must exercise both directions: epoch-3 casualties roll
+    // back to 2, epoch-2-only casualties keep the newest epoch intact
+    assert!(rolled_back >= 2, "≥2 epoch-3 files torn: {victims:?}");
+    assert!(kept_newest >= 1, "≥1 epoch-2-only file torn: {victims:?}");
 }
 
 /// Kill while a large multi-chunk write is in flight: the CLEAN protocol
