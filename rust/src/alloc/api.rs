@@ -15,6 +15,7 @@ use std::sync::Arc;
 
 use crate::alloc::bin_dir::ShardStatsSnapshot;
 use crate::alloc::manager::{ManagerCore, MetallManager, Persist, StatsSnapshot};
+use crate::containers::oplog::OpToken;
 use crate::error::{Error, Result};
 
 /// Offset-based allocation over one contiguous mapped segment.
@@ -90,6 +91,25 @@ pub trait SegmentAlloc: Sync {
             );
         }
     }
+
+    // ---- container operation log (crash-atomic mutations) ----
+
+    /// Append a container-operation intent record to the persistent op
+    /// log *before* the operation touches user bytes (see the protocol
+    /// in [`crate::containers`]). Returns the token
+    /// [`Self::oplog_commit`] seals, or `None` on allocators without a
+    /// log (baselines, read-only attaches): the containers then run
+    /// unlogged, exactly as before the log existed.
+    fn oplog_begin(&self, _rec: crate::containers::oplog::OpRecord) -> Result<Option<OpToken>> {
+        Ok(None)
+    }
+
+    /// Seal the commit mark of a record begun by [`Self::oplog_begin`]
+    /// — called after the new header image(s) are published and before
+    /// any trailing `deallocate`. `None` tokens are a no-op.
+    fn oplog_commit(&self, _token: Option<OpToken>) -> Result<()> {
+        Ok(())
+    }
 }
 
 impl SegmentAlloc for crate::alloc::MetallManager {
@@ -148,6 +168,17 @@ impl SegmentAlloc for crate::alloc::MetallManager {
         }
         // after the copy: a sync must not consume the mark pre-store
         self.mark_data_dirty(dst, len);
+    }
+
+    fn oplog_begin(&self, rec: crate::containers::oplog::OpRecord) -> Result<Option<OpToken>> {
+        ManagerCore::oplog_begin(self, rec).map(Some)
+    }
+
+    fn oplog_commit(&self, token: Option<OpToken>) -> Result<()> {
+        match token {
+            Some(t) => ManagerCore::oplog_commit(self, t),
+            None => Ok(()),
+        }
     }
 }
 
@@ -313,6 +344,14 @@ impl SegmentAlloc for MetallHandle {
 
     fn copy_within(&self, src: u64, dst: u64, len: usize) {
         <MetallManager as SegmentAlloc>::copy_within(&self.0, src, dst, len)
+    }
+
+    fn oplog_begin(&self, rec: crate::containers::oplog::OpRecord) -> Result<Option<OpToken>> {
+        <MetallManager as SegmentAlloc>::oplog_begin(&self.0, rec)
+    }
+
+    fn oplog_commit(&self, token: Option<OpToken>) -> Result<()> {
+        <MetallManager as SegmentAlloc>::oplog_commit(&self.0, token)
     }
 }
 

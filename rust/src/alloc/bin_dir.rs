@@ -418,6 +418,26 @@ impl BinData {
         Some(empty)
     }
 
+    /// Recovery-only adoption: mark `slot` of a chunk this bin already
+    /// tracks as used (a committed op-log record proved the allocation
+    /// outlived the last management cut). Lenient like
+    /// [`Self::release_cached`] — unknown chunk, out-of-range slot, or
+    /// an already-set bit returns `false` and the caller leaves the
+    /// record's extent to newer management state. When the adoption
+    /// fills the chunk, the stale LIFO entry is pruned.
+    pub fn adopt_slot(&mut self, chunk: u32, slot: u32) -> bool {
+        let Some(bs) = self.bitsets.get(&chunk) else {
+            return false;
+        };
+        if slot >= bs.capacity() || !bs.set(slot) {
+            return false;
+        }
+        if bs.is_full() {
+            self.prune_full();
+        }
+        true
+    }
+
     /// Drop a (now empty) chunk from this bin.
     pub fn remove_chunk(&mut self, chunk: u32) {
         let bs = self.bitsets.remove(&chunk).expect("removing unknown chunk");

@@ -284,6 +284,52 @@ impl ChunkDirectory {
         n
     }
 
+    /// Recovery-only adoption: force `chunk` to `Small { bin }` owned by
+    /// `shard`, growing the directory when the id lies beyond the
+    /// recovered length (an op-log record can describe a chunk the last
+    /// committed manifest never saw). Only a `Free` (or brand-new)
+    /// entry converts — anything else means newer management state
+    /// already accounts for the chunk and the caller must leave it
+    /// alone. Returns whether the entry converted.
+    pub fn adopt_small_chunk(&mut self, chunk: u32, bin: u32, shard: u32) -> bool {
+        let idx = chunk as usize;
+        if idx >= self.entries.len() {
+            self.entries.resize(idx + 1, ChunkKind::Free);
+        }
+        self.sync_owners();
+        if self.entries[idx] != ChunkKind::Free {
+            return false;
+        }
+        self.dirty = true;
+        self.entries[idx] = ChunkKind::Small { bin };
+        self.owners[idx] = shard;
+        self.birth[idx] = NO_BIRTH_NODE;
+        true
+    }
+
+    /// Recovery-only adoption of a large run: convert `head..head+n` to
+    /// one large allocation when every member chunk is `Free` (or
+    /// beyond the recovered length). Returns whether the run converted.
+    pub fn adopt_large(&mut self, head: u32, n: u32) -> bool {
+        if n == 0 {
+            return false;
+        }
+        let end = head as usize + n as usize;
+        if end > self.entries.len() {
+            self.entries.resize(end, ChunkKind::Free);
+        }
+        self.sync_owners();
+        if (head as usize..end).any(|i| self.entries[i] != ChunkKind::Free) {
+            return false;
+        }
+        self.dirty = true;
+        self.entries[head as usize] = ChunkKind::LargeHead { nchunks: n };
+        for i in head as usize + 1..end {
+            self.entries[i] = ChunkKind::LargeBody;
+        }
+        true
+    }
+
     /// Occupied chunk count (for stats / fragmentation reporting).
     pub fn used_chunks(&self) -> usize {
         self.entries.iter().filter(|k| !matches!(k, ChunkKind::Free)).count()

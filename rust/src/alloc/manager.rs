@@ -90,7 +90,7 @@
 //! is re-dealt as `chunk % M`), and N = 1 reproduces the unsharded
 //! allocator's on-disk layout bit-for-bit.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::ops::Deref;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -107,9 +107,11 @@ use crate::alloc::chunk_dir::{ChunkDirectory, ChunkKind};
 use crate::alloc::name_dir::{type_fingerprint, NameDirectory, NamedEntry};
 use crate::alloc::object_cache::{ObjectCache, REFILL_BATCH};
 use crate::alloc::readers::{self, ReaderLease};
+use crate::alloc::mlbitset::MlBitset;
 use crate::alloc::size_class::{
     bin_of, is_small, large_chunks, num_bins, size_of_bin, slots_per_chunk,
 };
+use crate::containers::oplog::{self, OpLogStats, OpRecord, OpToken, RecordState};
 use crate::error::{Error, Result};
 use crate::numa::Topology;
 use crate::storage::bsmmap::BsMsync;
@@ -599,6 +601,69 @@ struct MgmtState {
     next_epoch: u64,
 }
 
+/// DRAM bookkeeping of the persistent container op log. The log bytes
+/// themselves live in an ordinary named allocation inside the segment
+/// ([`oplog::OPLOG_NAME`], created lazily by the first logged container
+/// mutation); this tracks the ring geometry and sequence horizons.
+///
+/// Lock discipline: this mutex is leaf-level and is never held across a
+/// `mark_data_dirty` (whose backpressure stall can wait on the flusher)
+/// — the flusher itself takes it briefly in `prepare_epoch` to stamp
+/// the cut table.
+struct OpLogDram {
+    /// Segment offset of the log object; [`oplog::NONE`] until it exists.
+    log_off: u64,
+    /// Ring capacity in records (from the persistent log header).
+    capacity: u32,
+    /// Next ring sequence number to assign.
+    next_seq: u64,
+    /// Reclaim horizon: every record below it is decided *and* covered
+    /// by a durably committed management epoch, so its ring slot may be
+    /// overwritten. Advances when the committer lands a manifest.
+    safe_seq: u64,
+    /// Sequence numbers of ops begun but not yet committed. The minimum
+    /// pins the epoch cut horizon: a cut must not claim coverage of a
+    /// record whose op is still in flight.
+    inflight: BTreeSet<u64>,
+    /// Horizon of the last cut-table stamp (dedup: an unchanged horizon
+    /// is not re-stamped, or the stamp's own dirty mark would feed a
+    /// perpetual flush loop).
+    last_cut_seq: u64,
+}
+
+impl OpLogDram {
+    fn absent() -> Self {
+        OpLogDram {
+            log_off: oplog::NONE,
+            capacity: oplog::DEFAULT_CAPACITY,
+            next_seq: 0,
+            safe_seq: 0,
+            inflight: BTreeSet::new(),
+            last_cut_seq: 0,
+        }
+    }
+
+    /// The sequence horizon an epoch cut taken *now* may claim: every
+    /// record below it is decided (committed or aborted).
+    fn cut_horizon(&self) -> u64 {
+        self.inflight.iter().next().copied().unwrap_or(self.next_seq)
+    }
+}
+
+/// Cumulative op-log counters (mirrored into [`OpLogStats`]).
+#[derive(Default)]
+struct OpLogCounters {
+    appended: AtomicU64,
+    committed: AtomicU64,
+    forced_syncs: AtomicU64,
+    recovered_forward: AtomicU64,
+    recovered_rollback: AtomicU64,
+    recovered_adopted: AtomicU64,
+    recovered_released: AtomicU64,
+    recovery_anomalies: AtomicU64,
+    validate_records: AtomicU64,
+}
+
 /// One consistent cut the flusher prepared and the committer will make
 /// durable: the assigned epoch, the dirty data ranges taken from the
 /// chunk map, and the serialized dirty sections. Epochs commit strictly
@@ -631,6 +696,9 @@ pub(crate) struct PreparedEpoch {
     cache_slots: u64,
     /// Total sections the store has (for stats).
     total_sections: u64,
+    /// Op-log sequence horizon this cut covers (0 when no log exists):
+    /// becomes the reclaim horizon `safe_seq` when the cut commits.
+    cut_seq: u64,
 }
 
 /// Everything recovered from the on-disk management image (segmented
@@ -699,6 +767,13 @@ pub struct ManagerCore {
     /// Background sync engine (flusher thread, epoch tickets,
     /// watermark/interval triggers, backpressure).
     bg: SyncEngine,
+    /// Container op-log ring state (see [`OpLogDram`]).
+    oplog: Mutex<OpLogDram>,
+    oplog_counters: OpLogCounters,
+    /// Records at `seq >=` this are in the newest epoch's tail and are
+    /// subject to [`Self::validate_containers`]; on a clean open it is
+    /// set to `next_seq` so stale decided records are not re-audited.
+    oplog_validate_floor: AtomicU64,
     /// Inter-process store lock: an `flock` on `<dir>/LOCK`, exclusive
     /// for read-write managers, shared for read-only opens. Held for the
     /// manager's lifetime — the kernel releases it when the fd closes
@@ -1209,6 +1284,9 @@ impl ManagerCore {
             dirty_data: DirtyChunkSet::new(segment.vm_len() / opts.chunk_size + 1),
             netfs,
             last_sync: Mutex::new(SyncStats::default()),
+            oplog: Mutex::new(OpLogDram::absent()),
+            oplog_counters: OpLogCounters::default(),
+            oplog_validate_floor: AtomicU64::new(0),
             segment,
             read_only: false,
             stats: AllocStats::default(),
@@ -1362,6 +1440,9 @@ impl ManagerCore {
             dirty_data: DirtyChunkSet::new(segment.vm_len() / opts.chunk_size + 1),
             netfs,
             last_sync: Mutex::new(SyncStats::default()),
+            oplog: Mutex::new(OpLogDram::absent()),
+            oplog_counters: OpLogCounters::default(),
+            oplog_validate_floor: AtomicU64::new(0),
             segment,
             read_only,
             stats: AllocStats::default(),
@@ -1396,6 +1477,15 @@ impl ManagerCore {
             result?;
         }
         mgr.validate_consistency()?;
+        // Container op-log: rediscover the ring (sequence horizons, the
+        // validate floor), then — on an unclean read-write open — replay
+        // the newest epoch's tail: keep committed records (re-adopting
+        // extents the recovered management state predates), roll unsealed
+        // ones forward or back. A clean open replays nothing.
+        mgr.load_oplog(clean);
+        if !read_only && !clean {
+            mgr.recover_containers()?;
+        }
         if !read_only {
             // Mark dirty while we hold it read-write — durably: the
             // unlink is the other half of the CLEAN protocol. If it were
@@ -1558,6 +1648,36 @@ impl ManagerCore {
         }
         result?;
         let cs = self.opts.chunk_size;
+        // --- op-log cut stamp ---
+        // Stamp the log's cut table with (this cut's epoch, the decided-
+        // record horizon) BEFORE the data cut, so the stamp's bytes ride
+        // this very epoch's flush. Direct `dirty_data.mark`, never
+        // `mark_data_dirty`: the flusher must not run its own watermark
+        // kick / backpressure stall. An unchanged horizon is not
+        // re-stamped (its mark would re-dirty the chunk every epoch —
+        // a flush that never goes idle); recovery then falls back to the
+        // newest older entry, which carries the same horizon.
+        let cut_seq = {
+            let mut lg = self.oplog.lock().unwrap();
+            if lg.log_off == oplog::NONE {
+                0
+            } else {
+                let horizon = lg.cut_horizon();
+                if horizon != lg.last_cut_seq {
+                    let epoch = self.mgmt.lock().unwrap().next_epoch;
+                    let bytes = oplog::CutEntry { epoch, cut_seq: horizon }.to_bytes();
+                    let at = oplog::cut_entry_off(lg.log_off, epoch);
+                    unsafe {
+                        std::ptr::copy_nonoverlapping(bytes.as_ptr(), self.ptr(at), bytes.len());
+                    }
+                    for c in at / cs as u64..=(at + bytes.len() as u64 - 1) / cs as u64 {
+                        self.dirty_data.mark(c as usize);
+                    }
+                    lg.last_cut_seq = horizon;
+                }
+                horizon
+            }
+        };
         // --- data cut ---
         let mut data_flushed = None;
         let mut data_chunks: Vec<usize> = Vec::new();
@@ -1651,6 +1771,7 @@ impl ManagerCore {
             rewrite_all: first,
             cache_slots,
             total_sections: total,
+            cut_seq,
         }))
     }
 
@@ -1791,6 +1912,17 @@ impl ManagerCore {
             }
             mgmt_io::gc(&self.dir, &keep);
             committed = true;
+        }
+        // The op-log reclaim horizon advances only on a *manifest*
+        // commit: a data-only epoch leaves the committed management
+        // state where it was, and recovery onto that older state still
+        // needs every record at or above its (older) cut entry — their
+        // extents are what `recover_containers` re-adopts.
+        if committed && prep.cut_seq > 0 {
+            let mut lg = self.oplog.lock().unwrap();
+            if prep.cut_seq > lg.safe_seq {
+                lg.safe_seq = prep.cut_seq;
+            }
         }
         // --- stats + the adaptive-watermark sample ---
         let sim_delta = net.map(|fs| fs.sim_seconds() - sim0).unwrap_or(0.0).max(0.0);
@@ -2314,6 +2446,719 @@ impl ManagerCore {
         // every caller of this API is lock-free at this point — so a
         // stalled writer can never block the flusher.
         self.bg.on_data_marked(self);
+    }
+
+    // ------------------------------------------- container op log --
+    //
+    // The runtime half of [`crate::containers::oplog`]: sequence
+    // allocation + ring append (`oplog_begin`), the commit seal
+    // (`oplog_commit`), open-time rediscovery (`load_oplog`), unclean-
+    // open replay (`recover_containers`), and the doctor-facing
+    // invariant audit (`validate_containers`).
+
+    /// Mark bytes dirty without the background engine's watermark kick /
+    /// backpressure stall — for writes made during open-time recovery
+    /// (the engine is not yet bound) and by the flusher itself (which
+    /// must never stall on its own backpressure).
+    fn recovery_mark(&self, offset: u64, len: usize) {
+        if len == 0 {
+            return;
+        }
+        let cs = self.opts.chunk_size as u64;
+        for c in offset / cs..=(offset + len as u64 - 1) / cs {
+            self.dirty_data.mark(c as usize);
+        }
+    }
+
+    fn read_record(&self, at: u64) -> OpRecord {
+        let mut b = [0u8; oplog::RECORD_SIZE];
+        b.copy_from_slice(unsafe { self.bytes(at, oplog::RECORD_SIZE) });
+        OpRecord::from_bytes(&b)
+    }
+
+    /// Zero-padded snapshot of `len` live header bytes at `off`.
+    fn read_image(&self, off: u64, len: usize) -> [u8; oplog::IMAGE_SIZE] {
+        let mut img = [0u8; oplog::IMAGE_SIZE];
+        img[..len].copy_from_slice(unsafe { self.bytes(off, len) });
+        img
+    }
+
+    /// Restore `len` bytes of a logged header image (recovery only —
+    /// never writes the zero padding, which belongs to neighbours).
+    fn write_image(&self, off: u64, img: &[u8; oplog::IMAGE_SIZE], len: usize) {
+        unsafe {
+            std::ptr::copy_nonoverlapping(img.as_ptr(), self.ptr(off), len);
+        }
+        self.recovery_mark(off, len);
+    }
+
+    fn write_recovery_u64(&self, off: u64, v: u64) {
+        unsafe {
+            std::ptr::write_unaligned(self.ptr(off) as *mut u64, v);
+        }
+        self.recovery_mark(off, 8);
+    }
+
+    /// Seal a ring slot's commit/abort mark during recovery.
+    fn seal_slot(&self, slot: u64, mark: u64) {
+        self.write_recovery_u64(slot + oplog::COMMIT_CRC_AT as u64, mark);
+    }
+
+    /// The log object's (offset, ring capacity), creating it on first
+    /// use: one `oplog::DEFAULT_CAPACITY`-slot ring in an ordinary
+    /// allocation registered under [`oplog::OPLOG_NAME`]. A losing racer
+    /// waits for the winner to finish zeroing the ring before appending
+    /// into it.
+    fn ensure_oplog(&self) -> Result<(u64, u32)> {
+        {
+            let lg = self.oplog.lock().unwrap();
+            if lg.log_off != oplog::NONE {
+                return Ok((lg.log_off, lg.capacity));
+            }
+        }
+        let capacity = oplog::DEFAULT_CAPACITY;
+        let size = oplog::log_size(capacity);
+        let off = self.allocate(size)?;
+        let fresh = {
+            let mut names = self.names.lock().unwrap();
+            match names.get(oplog::OPLOG_NAME) {
+                Some(_) => false,
+                None => names.insert(
+                    oplog::OPLOG_NAME,
+                    NamedEntry { offset: off, size: size as u64, type_fp: 0 },
+                ),
+            }
+        };
+        if !fresh {
+            self.deallocate(off)?;
+            loop {
+                {
+                    let lg = self.oplog.lock().unwrap();
+                    if lg.log_off != oplog::NONE {
+                        return Ok((lg.log_off, lg.capacity));
+                    }
+                }
+                std::thread::yield_now();
+            }
+        }
+        // The ring must start all-zero (a reused chunk's stale bytes
+        // could otherwise verify as records); publish through the DRAM
+        // state only after header + zeroing are complete.
+        unsafe {
+            let b = self.bytes_mut(off, size);
+            b[..oplog::LOG_HEADER_SIZE].copy_from_slice(&oplog::header_bytes(capacity));
+            b[oplog::LOG_HEADER_SIZE..].fill(0);
+        }
+        self.mark_data_dirty(off, size);
+        let mut lg = self.oplog.lock().unwrap();
+        lg.log_off = off;
+        lg.capacity = capacity;
+        Ok((off, capacity))
+    }
+
+    /// Append a container-op intent record: assign its ring sequence
+    /// number, seal the intent checksum, write the 192-byte record into
+    /// its slot. When the ring is full past the reclaim horizon, force a
+    /// manifest-committing sync to advance it (bounded retries). The
+    /// ring write and its dirty mark run *outside* the oplog mutex — the
+    /// mark's backpressure stall may wait on the flusher, and the
+    /// flusher takes the oplog mutex for its cut stamp.
+    pub(crate) fn oplog_begin(&self, mut rec: OpRecord) -> Result<OpToken> {
+        self.check_writable()?;
+        let (log_off, capacity) = self.ensure_oplog()?;
+        let mut forced = 0u32;
+        let seq = loop {
+            {
+                let mut lg = self.oplog.lock().unwrap();
+                if lg.next_seq - lg.safe_seq < capacity as u64 {
+                    let s = lg.next_seq;
+                    lg.next_seq += 1;
+                    lg.inflight.insert(s);
+                    break s;
+                }
+            }
+            if forced >= 3 {
+                return Err(Error::InvalidOp(
+                    "container op log is full and syncing does not advance its reclaim \
+                     horizon (an operation appears stalled in flight)"
+                        .into(),
+                ));
+            }
+            forced += 1;
+            self.oplog_counters.forced_syncs.fetch_add(1, Ordering::Relaxed);
+            // A data-only epoch does not advance the horizon (no manifest
+            // commit) — dirty the name section so this sync commits one.
+            self.names.lock().unwrap().mark_dirty();
+            self.sync()?;
+        };
+        rec.seq = seq;
+        rec.commit_crc = 0;
+        rec.seal_intent();
+        let slot = oplog::slot_off(log_off, capacity, seq);
+        self.write::<[u8; oplog::RECORD_SIZE]>(slot, rec.to_bytes());
+        self.oplog_counters.appended.fetch_add(1, Ordering::Relaxed);
+        Ok(OpToken { slot_off: slot, seq, intent_crc: rec.intent_crc })
+    }
+
+    /// Seal a record's commit mark — one 8-byte write into its ring slot
+    /// — and retire its sequence number from the in-flight set that pins
+    /// the epoch cut horizon. The caller runs its trailing
+    /// `deallocate(free_off)` strictly *after* this returns.
+    pub(crate) fn oplog_commit(&self, token: OpToken) -> Result<()> {
+        self.write::<u64>(
+            token.slot_off + oplog::COMMIT_CRC_AT as u64,
+            oplog::commit_mark(token.intent_crc),
+        );
+        self.oplog_counters.committed.fetch_add(1, Ordering::Relaxed);
+        self.oplog.lock().unwrap().inflight.remove(&token.seq);
+        Ok(())
+    }
+
+    /// Open-time rediscovery of the log ring: decode the persistent
+    /// header, scan for the highest intent-valid sequence number, and
+    /// derive the replay/validate floor from the newest durable cut
+    /// entry at or below the recovered manifest epoch. A clean open
+    /// validates nothing (floor = next_seq): every decided record's
+    /// effect is already in the committed management state.
+    fn load_oplog(&self, clean: bool) {
+        let entry = self.names.lock().unwrap().get(oplog::OPLOG_NAME);
+        let Some(e) = entry else { return };
+        if e.offset + oplog::LOG_HEADER_SIZE as u64 > self.segment.mapped_len() as u64 {
+            return;
+        }
+        let capacity = {
+            let header = unsafe { self.bytes(e.offset, oplog::LOG_HEADER_SIZE) };
+            match oplog::decode_header(header) {
+                Some(c) if oplog::log_size(c) as u64 <= e.size => c,
+                _ => {
+                    // Torn mid-creation (the name committed before the
+                    // header bytes): re-initialize in place on a writable
+                    // open; a reader treats the log as absent.
+                    if self.read_only || (oplog::log_size(oplog::DEFAULT_CAPACITY) as u64) > e.size
+                    {
+                        return;
+                    }
+                    let c = oplog::DEFAULT_CAPACITY;
+                    unsafe {
+                        let b = self.segment.slice_mut(e.offset as usize, oplog::log_size(c));
+                        b[..oplog::LOG_HEADER_SIZE].copy_from_slice(&oplog::header_bytes(c));
+                        b[oplog::LOG_HEADER_SIZE..].fill(0);
+                    }
+                    self.recovery_mark(e.offset, oplog::log_size(c));
+                    c
+                }
+            }
+        };
+        let ring = e.offset + oplog::LOG_HEADER_SIZE as u64;
+        let mut max_seq: Option<u64> = None;
+        for i in 0..capacity as u64 {
+            let rec = self.read_record(ring + i * oplog::RECORD_SIZE as u64);
+            if rec.intent_valid() {
+                max_seq = Some(max_seq.map_or(rec.seq, |m: u64| m.max(rec.seq)));
+            }
+        }
+        let next_seq = max_seq.map_or(0, |m| m + 1);
+        let repoch = self.mgmt.lock().unwrap().epoch;
+        let mut floor_entry: Option<oplog::CutEntry> = None;
+        for slot in 0..oplog::CUT_SLOTS as u64 {
+            let mut b = [0u8; 24];
+            b.copy_from_slice(unsafe { self.bytes(oplog::cut_entry_off(e.offset, slot), 24) });
+            if let Some(c) = oplog::CutEntry::from_bytes(&b) {
+                if c.epoch <= repoch && floor_entry.map_or(true, |f| c.epoch > f.epoch) {
+                    floor_entry = Some(c);
+                }
+            }
+        }
+        let floor = if clean { next_seq } else { floor_entry.map_or(0, |c| c.cut_seq).min(next_seq) };
+        self.oplog_validate_floor.store(floor, Ordering::Relaxed);
+        let mut lg = self.oplog.lock().unwrap();
+        lg.log_off = e.offset;
+        lg.capacity = capacity;
+        lg.next_seq = next_seq;
+        // Until the next manifest commit, records at or above the floor
+        // are the recovery evidence for this manifest — their slots must
+        // not be reused. (Clean open: everything is decided and covered.)
+        lg.safe_seq = floor;
+        // force the first cut to stamp a fresh entry
+        lg.last_cut_seq = u64::MAX;
+    }
+
+    /// Unclean-open replay of the log tail, in ascending sequence order:
+    ///
+    /// - **Committed** records at or above the floor are kept; the extent
+    ///   each allocated is re-adopted into the recovered allocator (the
+    ///   recovered manifest predates the allocation). Their retired
+    ///   extents are deliberately *not* released — a pre-cut reuse racing
+    ///   the cut could make that release free live data; leaking a
+    ///   ring-window of retired extents is the safe trade.
+    /// - **Unsealed** records (any sequence — an op can span a cut) are
+    ///   rolled *forward* when every current header cell already matches
+    ///   its new image (the kill landed between the last publish and the
+    ///   commit seal): seal the commit, adopt the extent, run the missing
+    ///   trailing deallocate. Otherwise rolled *back*: restore the old
+    ///   images, un-key a half-inserted map slot, seal an abort, and
+    ///   release the never-published allocation (leak-free rollback).
+    ///   Both are safe at any sequence: the trailing deallocate runs
+    ///   strictly after the commit seal, so an unsealed record's old
+    ///   extent is still intact.
+    fn recover_containers(&self) -> Result<()> {
+        let (log_off, capacity, floor) = {
+            let lg = self.oplog.lock().unwrap();
+            (lg.log_off, lg.capacity, lg.safe_seq)
+        };
+        if log_off == oplog::NONE {
+            return Ok(());
+        }
+        let ring = log_off + oplog::LOG_HEADER_SIZE as u64;
+        let mut recs: Vec<OpRecord> = Vec::new();
+        for i in 0..capacity as u64 {
+            let rec = self.read_record(ring + i * oplog::RECORD_SIZE as u64);
+            if !rec.intent_valid() {
+                continue;
+            }
+            match rec.state() {
+                RecordState::Aborted => {}
+                RecordState::Committed => {
+                    if rec.seq >= floor {
+                        recs.push(rec);
+                    }
+                }
+                RecordState::Unsealed => recs.push(rec),
+            }
+        }
+        recs.sort_by_key(|r| r.seq);
+        let mapped = self.segment.mapped_len() as u64;
+        for rec in &recs {
+            match rec.state() {
+                RecordState::Committed => {
+                    if rec.alloc_off != oplog::NONE {
+                        self.recovery_adopt(rec.alloc_off, rec.alloc_size);
+                    }
+                }
+                RecordState::Unsealed => self.recover_unsealed(rec, log_off, capacity, mapped)?,
+                RecordState::Aborted => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn recover_unsealed(
+        &self,
+        rec: &OpRecord,
+        log_off: u64,
+        capacity: u32,
+        mapped: u64,
+    ) -> Result<()> {
+        let h1_len = rec.h1_len();
+        let h2_len = (rec.h2_len as usize).min(oplog::IMAGE_SIZE);
+        let slot = oplog::slot_off(log_off, capacity, rec.seq);
+        // a record whose header cells lie outside the mapped extent is
+        // unactionable — seal an abort so validation skips it
+        if rec.h1_off == oplog::NONE
+            || rec.h1_off + h1_len as u64 > mapped
+            || (rec.h2_off != oplog::NONE && rec.h2_off + h2_len.max(1) as u64 > mapped)
+        {
+            self.oplog_counters.recovery_anomalies.fetch_add(1, Ordering::Relaxed);
+            self.seal_slot(slot, oplog::abort_mark(rec.intent_crc));
+            return Ok(());
+        }
+        let cur1 = self.read_image(rec.h1_off, h1_len);
+        let forward = cur1[..h1_len] == rec.h1_new[..h1_len]
+            && (rec.h2_off == oplog::NONE
+                || self.read_image(rec.h2_off, h2_len)[..h2_len] == rec.h2_new[..h2_len]);
+        if forward {
+            self.seal_slot(slot, oplog::commit_mark(rec.intent_crc));
+            self.oplog_counters.recovered_forward.fetch_add(1, Ordering::Relaxed);
+            if rec.alloc_off != oplog::NONE {
+                self.recovery_adopt(rec.alloc_off, rec.alloc_size);
+            }
+            if rec.free_off != oplog::NONE {
+                // the op's own trailing deallocate, which never ran
+                self.recovery_release(rec.free_off)?;
+            }
+        } else {
+            if cur1[..h1_len] != rec.h1_old[..h1_len] {
+                // matches neither image: torn mid-publish — the old image
+                // is still the consistent restore point, but surface it
+                self.oplog_counters.recovery_anomalies.fetch_add(1, Ordering::Relaxed);
+            }
+            self.write_image(rec.h1_off, &rec.h1_old, h1_len);
+            if rec.h2_off != oplog::NONE && h2_len > 0 {
+                self.write_image(rec.h2_off, &rec.h2_old, h2_len);
+            }
+            // a rolled-back insert keyed its slot before the header
+            // publish — un-key it or the probe chain counts a ghost
+            if rec.kind == oplog::OP_MAP_INSERT
+                && rec.flags & oplog::FLAG_OVERWRITE == 0
+                && rec.aux != 0
+                && rec.aux + 8 <= mapped
+            {
+                let cur_key: u64 = self.read(rec.aux);
+                if cur_key == rec.aux2 {
+                    self.write_recovery_u64(rec.aux, u64::MAX); // EMPTY_KEY
+                }
+            }
+            self.seal_slot(slot, oplog::abort_mark(rec.intent_crc));
+            self.oplog_counters.recovered_rollback.fetch_add(1, Ordering::Relaxed);
+            // the extent the op allocated was never published — release
+            // it, unless it *is* the header cell being restored (a torn
+            // create: something may already reference the cell)
+            if rec.alloc_off != oplog::NONE && rec.alloc_off != rec.h1_off {
+                self.recovery_release(rec.alloc_off)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Adopt an extent a post-cut op allocated into the recovered
+    /// allocator state (bitset + chunk directory surgery). Lenient: an
+    /// extent the recovered state already accounts for — or whose
+    /// geometry no longer lines up — is skipped. A skip can at worst
+    /// leak; adopting blindly could hand the same bytes out twice.
+    fn recovery_adopt(&self, offset: u64, size: u64) -> bool {
+        let cs = self.opts.chunk_size;
+        if size == 0 || size > usize::MAX as u64 {
+            return false;
+        }
+        let size = size as usize;
+        let chunk = (offset / cs as u64) as u32;
+        let adopted = if is_small(size, cs) {
+            if (chunk as usize + 1) * cs > self.segment.mapped_len() {
+                return false;
+            }
+            let bin = bin_of(size) as u32;
+            let class = size_of_bin(bin as usize) as u64;
+            if (offset % cs as u64) % class != 0 {
+                return false;
+            }
+            let slot = ((offset % cs as u64) / class) as u32;
+            let slots = slots_per_chunk(bin as usize, cs) as u32;
+            if slot >= slots {
+                return false;
+            }
+            let kind = {
+                let chunks = self.chunks.read().unwrap();
+                if (chunk as usize) < chunks.len() { chunks.kind(chunk) } else { ChunkKind::Free }
+            };
+            match kind {
+                ChunkKind::Small { bin: b } if b == bin => {
+                    let owner = self.chunks.read().unwrap().owner(chunk) as usize;
+                    let sh = &self.shards[owner];
+                    sh.mark_bin_dirty(bin as usize);
+                    sh.bins[bin as usize].write().unwrap().adopt_slot(chunk, slot)
+                }
+                ChunkKind::Free => {
+                    let shard = self.shard_map.recovery_shard_of_chunk(chunk);
+                    let sh = &self.shards[shard];
+                    // mark-first discipline (see allocate())
+                    sh.mark_bin_dirty(bin as usize);
+                    let ok =
+                        self.chunks.write().unwrap().adopt_small_chunk(chunk, bin, shard as u32);
+                    if ok {
+                        let bs = MlBitset::new(slots);
+                        bs.set(slot);
+                        sh.bins[bin as usize].write().unwrap().insert_chunk(chunk, bs);
+                    }
+                    ok
+                }
+                _ => false,
+            }
+        } else {
+            let n = large_chunks(size, cs) as u32;
+            if offset % cs as u64 != 0 || (chunk as usize + n as usize) * cs > self.segment.mapped_len()
+            {
+                return false;
+            }
+            self.chunks.write().unwrap().adopt_large(chunk, n)
+        };
+        if adopted {
+            self.oplog_counters.recovered_adopted.fetch_add(1, Ordering::Relaxed);
+        }
+        adopted
+    }
+
+    /// Release an extent straight into the bitsets — never through the
+    /// object cache, whose parked frees would leave the bitset claimed
+    /// and make a later adopt of the same slot double-account. Lenient:
+    /// an extent the recovered state does not hold as live is skipped.
+    fn recovery_release(&self, offset: u64) -> Result<bool> {
+        let cs = self.opts.chunk_size as u64;
+        let cs_us = self.opts.chunk_size;
+        let chunk = (offset / cs) as u32;
+        let kind = {
+            let chunks = self.chunks.read().unwrap();
+            if (chunk as usize) >= chunks.len() {
+                return Ok(false);
+            }
+            chunks.kind(chunk)
+        };
+        let released = match kind {
+            ChunkKind::Small { bin } => {
+                let class = size_of_bin(bin as usize) as u64;
+                if (offset % cs) % class != 0 {
+                    return Ok(false);
+                }
+                let slot = ((offset % cs) / class) as u32;
+                let owner = self.chunks.read().unwrap().owner(chunk) as usize;
+                let sh = &self.shards[owner];
+                let mut b = sh.bins[bin as usize].write().unwrap();
+                if !b.is_slot_used(chunk, slot) {
+                    return Ok(false);
+                }
+                sh.mark_bin_dirty(bin as usize);
+                let empty = b.free_slot(chunk, slot);
+                if empty {
+                    b.remove_chunk(chunk);
+                    let mut chunks = self.chunks.write().unwrap();
+                    chunks.free_small_chunk_on(chunk, owner as u32);
+                    drop(chunks);
+                    sh.stats.freed_chunks.fetch_add(1, Ordering::Relaxed);
+                    if (chunk as usize + 1) * cs_us <= self.segment.mapped_len() {
+                        self.segment.free_range(chunk as usize * cs_us, cs_us)?;
+                    }
+                }
+                true
+            }
+            ChunkKind::LargeHead { .. } => {
+                if offset % cs != 0 {
+                    return Ok(false);
+                }
+                let n = {
+                    let mut chunks = self.chunks.write().unwrap();
+                    chunks.free_large(chunk)
+                };
+                self.stats.freed_large_chunks.fetch_add(n as u64, Ordering::Relaxed);
+                if (chunk as usize + n as usize) * cs_us <= self.segment.mapped_len() {
+                    self.segment.free_range(chunk as usize * cs_us, n as usize * cs_us)?;
+                }
+                true
+            }
+            ChunkKind::Free | ChunkKind::LargeBody => false,
+        };
+        if released {
+            self.oplog_counters.recovered_released.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(released)
+    }
+
+    /// Container-invariant audit over the newest epoch's log tail: every
+    /// intent-valid, non-aborted record at `seq >=` the validate floor,
+    /// reduced to the newest record per header cell. Checks `len <= cap`,
+    /// that `data_off`/`table_off` point at live allocations big enough
+    /// for `cap`, that a hash table's keyed-slot population matches its
+    /// `len`, and that an adjacency bank's `nedges` equals the sum of its
+    /// per-vertex list lengths (no half-linked rows). Assumes quiescent
+    /// mutators (the same contract as [`Self::doctor`], which runs it
+    /// under the flush gate). Returns human-readable findings.
+    pub fn validate_containers(&self) -> Vec<String> {
+        let mut findings = Vec::new();
+        let (log_off, capacity) = {
+            let lg = self.oplog.lock().unwrap();
+            (lg.log_off, lg.capacity)
+        };
+        if log_off == oplog::NONE {
+            return findings;
+        }
+        let floor = self.oplog_validate_floor.load(Ordering::Relaxed);
+        let ring = log_off + oplog::LOG_HEADER_SIZE as u64;
+        let mut newest: HashMap<u64, OpRecord> = HashMap::new();
+        let mut banks: HashMap<u64, OpRecord> = HashMap::new();
+        let mut examined = 0u64;
+        for i in 0..capacity as u64 {
+            let rec = self.read_record(ring + i * oplog::RECORD_SIZE as u64);
+            if !rec.intent_valid() || rec.seq < floor || rec.state() == RecordState::Aborted {
+                continue;
+            }
+            examined += 1;
+            if rec.h1_off != oplog::NONE {
+                let e = newest.entry(rec.h1_off).or_insert(rec);
+                if rec.seq >= e.seq {
+                    *e = rec;
+                }
+            }
+            if rec.kind == oplog::OP_EDGE && rec.h2_off != oplog::NONE {
+                let e = banks.entry(rec.h2_off).or_insert(rec);
+                if rec.seq >= e.seq {
+                    *e = rec;
+                }
+            }
+        }
+        self.oplog_counters.validate_records.store(examined, Ordering::Relaxed);
+        let mapped = self.segment.mapped_len() as u64;
+        for (&h1, rec) in &newest {
+            // a header cell that is no longer a live allocation belongs
+            // to a destroyed container (destroy is not logged) — skip
+            if self.usable_size(h1).is_err() {
+                continue;
+            }
+            let unit = (rec.unit.max(1)) as u64;
+            match rec.kind {
+                oplog::OP_VEC_CREATE | oplog::OP_VEC_PUSH | oplog::OP_VEC_EXTEND
+                | oplog::OP_VEC_POP | oplog::OP_VEC_GROW | oplog::OP_EDGE => {
+                    self.validate_vec_header(h1, unit, &mut findings);
+                }
+                oplog::OP_MAP_CREATE | oplog::OP_MAP_INSERT | oplog::OP_MAP_GROW => {
+                    self.validate_map_header(h1, unit, &mut findings);
+                }
+                oplog::OP_STR_SET => {
+                    let s = oplog::str_image(&self.read_image(h1, 16));
+                    if s.len > 0 {
+                        match self.usable_size(s.data_off) {
+                            Ok(sz) if sz as u64 >= s.len => {}
+                            _ => findings.push(format!(
+                                "container string @{h1}: data_off {} not a live allocation \
+                                 of at least len {}B",
+                                s.data_off, s.len
+                            )),
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (&h2, _rec) in &banks {
+            if h2 + 16 > mapped {
+                continue;
+            }
+            let b = oplog::bank_image(&self.read_image(h2, 16));
+            // a dead bank map means the adjacency was destroyed — skip
+            if self.usable_size(b.map_header_off).is_err() {
+                continue;
+            }
+            let m = oplog::map_image(&self.read_image(b.map_header_off, oplog::IMAGE_SIZE));
+            if m.cap == 0 {
+                if b.nedges != 0 {
+                    findings.push(format!(
+                        "adjacency bank @{h2}: nedges {} but its vertex map is empty",
+                        b.nedges
+                    ));
+                }
+                continue;
+            }
+            // bank maps are PHashMapU64<u64 handle>: stride 16
+            let stride = 16u64;
+            if self
+                .usable_size(m.table_off)
+                .map(|sz| (sz as u64) < m.cap.saturating_mul(stride))
+                .unwrap_or(true)
+            {
+                // the map audit above already reports the broken table
+                continue;
+            }
+            let mut total = 0u64;
+            let mut broken = false;
+            for s in 0..m.cap {
+                let key: u64 = self.read(m.table_off + s * stride);
+                if key == u64::MAX {
+                    continue;
+                }
+                let handle: u64 = self.read(m.table_off + s * stride + 8);
+                if self.usable_size(handle).is_err() {
+                    findings.push(format!(
+                        "adjacency bank @{h2}: vertex {key} list header {handle} is not a \
+                         live allocation (half-linked row)"
+                    ));
+                    broken = true;
+                    continue;
+                }
+                total += oplog::vec_image(&self.read_image(handle, oplog::IMAGE_SIZE)).len;
+            }
+            if !broken && total != b.nedges {
+                findings.push(format!(
+                    "adjacency bank @{h2}: nedges {} != sum of per-vertex list lengths {total}",
+                    b.nedges
+                ));
+            }
+        }
+        findings
+    }
+
+    fn validate_vec_header(&self, h1: u64, elem: u64, findings: &mut Vec<String>) {
+        let v = oplog::vec_image(&self.read_image(h1, oplog::IMAGE_SIZE));
+        if v.len > v.cap {
+            findings.push(format!("container vec @{h1}: len {} > cap {}", v.len, v.cap));
+            return;
+        }
+        if v.cap == 0 {
+            if v.data_off != u64::MAX {
+                findings.push(format!(
+                    "container vec @{h1}: cap 0 but data_off {} is set",
+                    v.data_off
+                ));
+            }
+            return;
+        }
+        match self.usable_size(v.data_off) {
+            Ok(sz) if (sz as u64) >= v.cap.saturating_mul(elem) => {}
+            Ok(sz) => findings.push(format!(
+                "container vec @{h1}: data extent {sz}B < cap {} × elem {elem}B",
+                v.cap
+            )),
+            Err(_) => findings.push(format!(
+                "container vec @{h1}: data_off {} is not a live allocation",
+                v.data_off
+            )),
+        }
+    }
+
+    fn validate_map_header(&self, h1: u64, stride: u64, findings: &mut Vec<String>) {
+        let m = oplog::map_image(&self.read_image(h1, oplog::IMAGE_SIZE));
+        if m.cap == 0 {
+            if m.len != 0 {
+                findings.push(format!("container map @{h1}: no table but len {}", m.len));
+            }
+            return;
+        }
+        if !m.cap.is_power_of_two() {
+            findings.push(format!("container map @{h1}: cap {} not a power of two", m.cap));
+            return;
+        }
+        if m.len > m.cap {
+            findings.push(format!("container map @{h1}: len {} > cap {}", m.len, m.cap));
+            return;
+        }
+        match self.usable_size(m.table_off) {
+            Ok(sz) if (sz as u64) >= m.cap.saturating_mul(stride) => {
+                let mut keyed = 0u64;
+                for s in 0..m.cap {
+                    let key: u64 = self.read(m.table_off + s * stride);
+                    if key != u64::MAX {
+                        keyed += 1;
+                    }
+                }
+                if keyed != m.len {
+                    findings.push(format!(
+                        "container map @{h1}: {keyed} keyed slots but len {}",
+                        m.len
+                    ));
+                }
+            }
+            Ok(sz) => findings.push(format!(
+                "container map @{h1}: table extent {sz}B < cap {} × stride {stride}B",
+                m.cap
+            )),
+            Err(_) => findings.push(format!(
+                "container map @{h1}: table_off {} is not a live allocation",
+                m.table_off
+            )),
+        }
+    }
+
+    /// Cumulative op-log counters (append/commit rates, ring-full forced
+    /// syncs, recovery outcomes, the last validation's record count).
+    pub fn oplog_stats(&self) -> OpLogStats {
+        let c = &self.oplog_counters;
+        OpLogStats {
+            appended: c.appended.load(Ordering::Relaxed),
+            committed: c.committed.load(Ordering::Relaxed),
+            forced_syncs: c.forced_syncs.load(Ordering::Relaxed),
+            recovered_forward: c.recovered_forward.load(Ordering::Relaxed),
+            recovered_rollback: c.recovered_rollback.load(Ordering::Relaxed),
+            recovered_adopted: c.recovered_adopted.load(Ordering::Relaxed),
+            recovered_released: c.recovered_released.load(Ordering::Relaxed),
+            recovery_anomalies: c.recovery_anomalies.load(Ordering::Relaxed),
+            validate_records: c.validate_records.load(Ordering::Relaxed),
+        }
     }
 
     /// Number of allocator shards (DRAM-only; see [`ManagerOptions::shards`]).
@@ -3078,6 +3923,10 @@ impl ManagerCore {
         if !chunks.validate() {
             findings.push("chunk directory structure invalid".into());
         }
+        // container audit re-takes the chunk lock through usable_size —
+        // release ours first (a queued writer would wedge a re-read)
+        drop(chunks);
+        findings.extend(self.validate_containers());
         Ok(findings)
     }
 

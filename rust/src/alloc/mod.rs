@@ -235,6 +235,39 @@
 //!   [`crate::coordinator::metrics::record_attach_stats`] and exercised
 //!   end-to-end by the `metall attach` benchmark.
 //!
+//! ## Container op log: crash-consistent *user* data
+//!
+//! Manifest epochs make the allocator's *management* state recover to a
+//! consistent cut, but application bytes in the segment carry no such
+//! guarantee on their own — a kill-9 can land between a container's
+//! element write and its header publish, or after a grow retired the
+//! extent a recovered header still references. The
+//! [`crate::containers::oplog`] subsystem closes that gap: every
+//! mutating container operation appends a checksum-sealed **intent
+//! record** (old/new header images, allocated/retired extents) to a
+//! per-manager persistent ring before touching user bytes, and seals a
+//! **commit mark** after its headers are published. The ring is ordinary
+//! segment data — its slots ride the same dirty-chunk map and
+//! background-sync epochs as the bytes they describe — and each
+//! manifest cut stamps the log with the sequence horizon it covers
+//! (`safe_seq` advances only on committed manifests, so ring reclaim
+//! never outruns durability; a full ring forces a manifest commit).
+//!
+//! On `open_unclean`, `ManagerCore::recover_containers` replays the
+//! tail above the recovered epoch's horizon in sequence order:
+//! committed records have their allocations **adopted** into the
+//! recovered bitsets (retired extents stay leaked — releasing them
+//! could free pre-cut state a committed record no longer describes);
+//! unsealed records roll **forward** when the current header bytes
+//! already match the new images (commit-sealed, retired extent
+//! released) and **back** otherwise (old images restored, half-keyed
+//! map slots cleared, abort-sealed, the never-published allocation
+//! released). `ManagerCore::validate_containers` — wired into
+//! `doctor()` — then audits container invariants over every header the
+//! replayed tail names. Counters surface as `alloc.oplog.*`
+//! ([`crate::containers::oplog::OpLogStats`],
+//! [`ManagerCore::oplog_stats`]).
+//!
 //! Follow-on (ROADMAP): an interleave policy (`MPOL_INTERLEAVE`) for
 //! read-mostly large segments shared by threads on every node.
 

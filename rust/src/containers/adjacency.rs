@@ -13,6 +13,7 @@ use std::sync::Mutex;
 
 use crate::alloc::manager::Persist;
 use crate::alloc::SegmentAlloc;
+use crate::containers::oplog;
 use crate::containers::{PHashMapU64, PVec};
 use crate::error::Result;
 use crate::util::rng::mix64;
@@ -111,12 +112,19 @@ impl BankedAdjacency {
         let entry_off = self.bank_entry_off(a, bank);
         let entry: BankEntry = a.read_pod(entry_off);
         let list = entry.map.get_or_insert_with(a, src, |a| PVec::<u64>::create(a))?;
-        list.push(a, dst)?;
-        a.write_pod(
+        // One OP_EDGE record covers the list header *and* this bank
+        // entry: the edge-list append and the `nedges` bump publish (and
+        // roll back) atomically — the crash window where the old code
+        // could persist a grown list with a stale counter is gone.
+        let new_entry = BankEntry { map: entry.map, nedges: entry.nedges + 1 };
+        list.push_edge(
+            a,
+            dst,
             entry_off,
-            BankEntry { map: entry.map, nedges: entry.nedges + 1 },
-        );
-        Ok(())
+            oplog::image_of(&entry),
+            oplog::image_of(&new_entry),
+            std::mem::size_of::<BankEntry>() as u32,
+        )
     }
 
     /// Insert a batch: edges are grouped per bank so each bank mutex is

@@ -1,4 +1,5 @@
-//! Position-independent persistent containers.
+//! Position-independent persistent containers, crash-atomic per
+//! operation.
 //!
 //! These are the rust analogue of using Boost.Container with Metall's
 //! offset-pointer STL allocator (paper §3.2.3, §3.5): every internal
@@ -8,7 +9,67 @@
 //! the [`crate::alloc::SegmentAlloc`] explicitly, which also mirrors how
 //! Metall's STL allocator rediscovers its manager through the segment
 //! header (§4.4).
+//!
+//! ## The op-log protocol (crash-consistent user data)
+//!
+//! Allocator *management* state recovers from the last committed
+//! manifest epoch (Makalu-style split), but that alone leaves container
+//! contents torn after a kill-9: a value written with `len` never
+//! bumped, or a grow that retired the extent a recovered header still
+//! points at. Every mutating container operation therefore routes
+//! through a per-manager persistent **operation log** ([`oplog`]),
+//! DGAP-style checksum-sealed:
+//!
+//! 1. **Allocate first.** Any new extent the op needs (`grow`'s bigger
+//!    array, `insert`'s rehashed table) is allocated before anything is
+//!    logged, so a crash can at worst leak it — never corrupt.
+//! 2. **Intent before user bytes.** The op appends a 192-byte
+//!    [`oplog::OpRecord`] — op kind, the header cell(s) it will publish
+//!    with their old *and* new 24-byte images, the allocated and the
+//!    to-be-freed extents — sealed by an intent checksum, via
+//!    [`crate::alloc::SegmentAlloc::oplog_begin`].
+//! 3. **Write, then publish.** Element/slot bytes land in space no
+//!    reader traverses yet; the header image(s) named by the record are
+//!    published last.
+//! 4. **Commit seal, then retire.** [`oplog_commit`]
+//!    (crate::alloc::SegmentAlloc::oplog_commit) seals the commit mark;
+//!    only after it does the op `deallocate` the extent it replaced.
+//!    An unsealed record's old extent is therefore always intact.
+//!
+//! Ring slots participate in the ordinary `DirtyChunkSet`/background
+//! sync epochs, so the log is durable exactly with the data it
+//! describes; each management epoch's consistent cut stamps the log's
+//! cut table with the sequence horizon that epoch covers.
+//!
+//! ## Recovery contract
+//!
+//! `open_unclean` replays the newest-epoch log tail in sequence order
+//! (see `recover_containers` in [`crate::alloc::manager`]): committed
+//! records are kept — the extent each allocated is adopted into the
+//! recovered allocator's bitsets (their *retired* extents are
+//! deliberately leaked: a pre-cut reuse racing the epoch cut could make
+//! that release free live data); unsealed records are rolled **forward**
+//! (new images finished + commit-sealed, retired extent released — its
+//! deallocate never ran, so nobody else can hold it) when the current
+//! header bytes already match the new images, rolled **back** (old
+//! images restored, half-keyed map slot cleared, abort-sealed, the
+//! never-published allocation released) otherwise. A
+//! `validate_containers()` pass — wired into `doctor` — then asserts
+//! container invariants over every touched header: `len ≤ cap`, live
+//! `data_off`/`table_off` extents large enough for `cap`, hash-table
+//! key population matching `len`, and adjacency banks whose `nedges`
+//! equals the sum of their per-vertex list lengths (no half-linked
+//! rows).
+//!
+//! Scope: operations are crash-atomic **per container op** under the
+//! containers' existing single-writer discipline (`PVec`/`PHashMap`
+//! take `&self` but are not thread-safe for concurrent mutation;
+//! [`BankedAdjacency`] serializes per bank). `PVec::set` overwrites in
+//! place without logging (old bytes are gone by design), as do map
+//! value overwrites larger than 24 bytes — both documented at the
+//! method level.
 
+pub mod oplog;
 pub mod pvec;
 pub mod phashmap;
 pub mod pstring;

@@ -1,0 +1,630 @@
+//! Container operation log: the persistent record format behind
+//! crash-atomic container mutations (DGAP-style checksum-sealed records;
+//! see the module docs in [`crate::containers`] for the full protocol).
+//!
+//! This module owns the *format* only — a fixed 192-byte little-endian
+//! record codec, the 512-byte log header with its epoch cut table, and
+//! the header-image decode helpers recovery uses. The runtime state
+//! (sequence allocation, appending, sealing, replay) lives in
+//! [`crate::alloc::manager`]; the containers produce [`OpRecord`]s and
+//! hand them to [`crate::alloc::SegmentAlloc::oplog_begin`] /
+//! [`oplog_commit`](crate::alloc::SegmentAlloc::oplog_commit).
+//!
+//! ## Record life cycle
+//!
+//! 1. The mutating container allocates any new extent it needs, then
+//!    builds an [`OpRecord`] naming the op kind, the header cell(s) it
+//!    will publish (`h1`/`h2` offset + old and new 24-byte images), the
+//!    freshly allocated extent (`alloc_off`/`alloc_size`), and the extent
+//!    the op will retire (`free_off`).
+//! 2. `oplog_begin` assigns the record its ring sequence number, seals
+//!    the **intent** checksum over the whole record, and writes it into
+//!    the ring *before any user byte moves*.
+//! 3. The container performs its data writes and publishes the new
+//!    header image(s).
+//! 4. `oplog_commit` seals the **commit** mark — a second checksum
+//!    derived from the intent checksum — and only then does the
+//!    container run its trailing `deallocate(free_off)`.
+//!
+//! A record whose intent checksum does not verify is garbage (torn
+//! append or never-written ring slot) and is ignored. A record with a
+//! valid intent but no commit mark was in flight at the kill: recovery
+//! decides per record whether to roll it forward (finish publishing and
+//! seal) or back (restore the old images and seal an **abort** mark).
+//! Because the trailing deallocate runs strictly after the commit seal,
+//! an unsealed record's `free_off` extent is still untouched — rollback
+//! never resurrects a header into hole-punched space.
+
+use crate::alloc::Persist;
+use crate::util::fnv1a;
+
+/// One ring slot, bytes on disk.
+pub const RECORD_SIZE: usize = 192;
+/// Log header (magic + geometry + cut table), bytes on disk.
+pub const LOG_HEADER_SIZE: usize = 512;
+/// Cut-table slots; epoch `e` writes slot `e % CUT_SLOTS`.
+pub const CUT_SLOTS: usize = 16;
+/// Default ring capacity in records (192 B each → 192 KiB + header).
+pub const DEFAULT_CAPACITY: u32 = 1024;
+/// Name-directory key of the per-manager log object (created lazily on
+/// the first logged container mutation).
+pub const OPLOG_NAME: &str = "__metall_oplog__";
+/// "No offset here" sentinel for `h2_off`, `alloc_off`, `free_off`.
+pub const NONE: u64 = u64::MAX;
+
+/// `little-endian("METALLOG")`.
+pub const OPLOG_MAGIC: u64 = u64::from_le_bytes(*b"METALLOG");
+/// On-disk format version.
+pub const OPLOG_VERSION: u32 = 1;
+
+// ------------------------------------------------------------ op kinds --
+
+/// `PVec::create` — `h1` is the fresh header cell itself (`alloc_off ==
+/// h1_off`), old and new images both the init image.
+pub const OP_VEC_CREATE: u32 = 1;
+/// `PVec::push` — header-only (`len + 1`), element written below `len`.
+pub const OP_VEC_PUSH: u32 = 2;
+/// `PVec::extend_from_slice` — header-only (`len + n`), `aux = n`.
+pub const OP_VEC_EXTEND: u32 = 3;
+/// `PVec::pop` — header-only (`len - 1`).
+pub const OP_VEC_POP: u32 = 4;
+/// `PVec` capacity growth: `alloc_off` is the new extent, `free_off`
+/// the retired one, `aux` the element size.
+pub const OP_VEC_GROW: u32 = 5;
+/// `PHashMap::create` — like [`OP_VEC_CREATE`].
+pub const OP_MAP_CREATE: u32 = 6;
+/// `PHashMap::insert` — new key: `aux` is the slot offset, `aux2` the
+/// key (slot is keyed *before* the header publishes `len + 1`).
+/// Overwrite ([`FLAG_OVERWRITE`]): `h1_old == h1_new`, and for values
+/// ≤ 24 bytes `h2` carries the in-slot value cell's old/new images.
+pub const OP_MAP_INSERT: u32 = 7;
+/// `PHashMap` table growth/rehash: `alloc_off` new table, `free_off`
+/// old table, `aux` the slot stride.
+pub const OP_MAP_GROW: u32 = 8;
+/// `BankedAdjacency::insert_edge` — the combined two-header publish:
+/// `h1` is the per-source `PVec` header (`len + 1`), `h2` the bank's
+/// `BankEntry` cell (`nedges + 1`). No alloc/free of its own (the
+/// nested `get_or_insert_with`/`reserve` log their own records first).
+pub const OP_EDGE: u32 = 9;
+/// `PString::set` — `alloc_off` new bytes, `free_off` old bytes.
+pub const OP_STR_SET: u32 = 10;
+
+/// [`OP_MAP_INSERT`]: existing key, value overwritten in place.
+pub const FLAG_OVERWRITE: u32 = 1;
+
+/// Human-readable op-kind name for doctor/recovery reports.
+pub fn kind_name(kind: u32) -> &'static str {
+    match kind {
+        OP_VEC_CREATE => "vec_create",
+        OP_VEC_PUSH => "vec_push",
+        OP_VEC_EXTEND => "vec_extend",
+        OP_VEC_POP => "vec_pop",
+        OP_VEC_GROW => "vec_grow",
+        OP_MAP_CREATE => "map_create",
+        OP_MAP_INSERT => "map_insert",
+        OP_MAP_GROW => "map_grow",
+        OP_EDGE => "edge_insert",
+        OP_STR_SET => "str_set",
+        _ => "unknown",
+    }
+}
+
+// ----------------------------------------------------------- the record --
+
+/// Serialized field offsets (little-endian, fixed layout — the codec is
+/// field-by-field, never a struct memcpy, so the on-disk format is
+/// independent of Rust layout decisions).
+const SEQ_AT: usize = 0;
+const KIND_AT: usize = 8;
+const FLAGS_AT: usize = 12;
+const H1_OFF_AT: usize = 16;
+const H1_OLD_AT: usize = 24;
+const H1_NEW_AT: usize = 48;
+const H2_OFF_AT: usize = 72;
+const H2_OLD_AT: usize = 80;
+const H2_NEW_AT: usize = 104;
+const ALLOC_OFF_AT: usize = 128;
+const ALLOC_SIZE_AT: usize = 136;
+const FREE_OFF_AT: usize = 144;
+const AUX_AT: usize = 152;
+const AUX2_AT: usize = 160;
+const UNIT_AT: usize = 168;
+const H2_LEN_AT: usize = 172;
+const INTENT_CRC_AT: usize = 176;
+/// Byte offset of the commit mark inside a ring slot — the commit seal
+/// is an 8-byte write at `slot_off + COMMIT_CRC_AT`, nothing else.
+pub const COMMIT_CRC_AT: usize = 184;
+
+/// Header images are at most 24 bytes (the largest container header,
+/// `PVecHeader`/`MapHeader`, is 3 × u64); smaller cells zero-pad.
+pub const IMAGE_SIZE: usize = 24;
+
+const COMMIT_TAG: u64 = 0x434f_4d4d_4954_4f4b; // "COMMITOK"
+const ABORT_TAG: u64 = 0x41_424f_5254_4544; // "ABORTED"
+
+/// One container-operation intent record (see module docs for the
+/// protocol). All offsets are segment offsets; [`NONE`] marks an absent
+/// `h2`/`alloc`/`free` member.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OpRecord {
+    /// Ring sequence number, assigned by `oplog_begin`.
+    pub seq: u64,
+    /// One of the `OP_*` constants.
+    pub kind: u32,
+    /// `FLAG_*` bits.
+    pub flags: u32,
+    /// Primary header cell this op publishes.
+    pub h1_off: u64,
+    pub h1_old: [u8; IMAGE_SIZE],
+    pub h1_new: [u8; IMAGE_SIZE],
+    /// Secondary cell ([`OP_EDGE`]'s `BankEntry`, overwrite value cell),
+    /// or [`NONE`].
+    pub h2_off: u64,
+    pub h2_old: [u8; IMAGE_SIZE],
+    pub h2_new: [u8; IMAGE_SIZE],
+    /// Extent allocated *before* this record was appended, or [`NONE`].
+    pub alloc_off: u64,
+    pub alloc_size: u64,
+    /// Extent deallocated *after* the commit seal, or [`NONE`].
+    pub free_off: u64,
+    /// Kind-specific operand (slot offset, element size, count…).
+    pub aux: u64,
+    /// Kind-specific operand ([`OP_MAP_INSERT`]: the key).
+    pub aux2: u64,
+    /// Element size (vec ops) / slot stride (map ops) — what
+    /// `validate_containers` needs to size-check `data_off`/`table_off`
+    /// extents and walk table slots.
+    pub unit: u32,
+    /// True byte length of the `h2` images (a `BankEntry` or `StrHeader`
+    /// is 16 B, an overwrite value cell `stride - 8`); images zero-pad
+    /// to [`IMAGE_SIZE`] but recovery compares and restores only this
+    /// many bytes — writing the padding would clobber neighbours.
+    pub h2_len: u32,
+    /// FNV-1a over the record with both checksum fields zeroed.
+    pub intent_crc: u64,
+    /// Commit/abort mark derived from `intent_crc`, 0 while in flight.
+    pub commit_crc: u64,
+}
+
+/// Seal state a valid-intent record is in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecordState {
+    /// Intent written, op was in flight at the kill.
+    Unsealed,
+    /// Op fully published (recovery keeps / re-applies it).
+    Committed,
+    /// Recovery rolled it back.
+    Aborted,
+}
+
+impl OpRecord {
+    /// A zeroed skeleton with every optional member absent.
+    pub fn new(kind: u32) -> Self {
+        OpRecord {
+            seq: 0,
+            kind,
+            flags: 0,
+            h1_off: NONE,
+            h1_old: [0; IMAGE_SIZE],
+            h1_new: [0; IMAGE_SIZE],
+            h2_off: NONE,
+            h2_old: [0; IMAGE_SIZE],
+            h2_new: [0; IMAGE_SIZE],
+            alloc_off: NONE,
+            alloc_size: 0,
+            free_off: NONE,
+            aux: 0,
+            aux2: 0,
+            unit: 0,
+            h2_len: 0,
+            intent_crc: 0,
+            commit_crc: 0,
+        }
+    }
+
+    pub fn to_bytes(&self) -> [u8; RECORD_SIZE] {
+        let mut b = [0u8; RECORD_SIZE];
+        b[SEQ_AT..SEQ_AT + 8].copy_from_slice(&self.seq.to_le_bytes());
+        b[KIND_AT..KIND_AT + 4].copy_from_slice(&self.kind.to_le_bytes());
+        b[FLAGS_AT..FLAGS_AT + 4].copy_from_slice(&self.flags.to_le_bytes());
+        b[H1_OFF_AT..H1_OFF_AT + 8].copy_from_slice(&self.h1_off.to_le_bytes());
+        b[H1_OLD_AT..H1_OLD_AT + IMAGE_SIZE].copy_from_slice(&self.h1_old);
+        b[H1_NEW_AT..H1_NEW_AT + IMAGE_SIZE].copy_from_slice(&self.h1_new);
+        b[H2_OFF_AT..H2_OFF_AT + 8].copy_from_slice(&self.h2_off.to_le_bytes());
+        b[H2_OLD_AT..H2_OLD_AT + IMAGE_SIZE].copy_from_slice(&self.h2_old);
+        b[H2_NEW_AT..H2_NEW_AT + IMAGE_SIZE].copy_from_slice(&self.h2_new);
+        b[ALLOC_OFF_AT..ALLOC_OFF_AT + 8].copy_from_slice(&self.alloc_off.to_le_bytes());
+        b[ALLOC_SIZE_AT..ALLOC_SIZE_AT + 8].copy_from_slice(&self.alloc_size.to_le_bytes());
+        b[FREE_OFF_AT..FREE_OFF_AT + 8].copy_from_slice(&self.free_off.to_le_bytes());
+        b[AUX_AT..AUX_AT + 8].copy_from_slice(&self.aux.to_le_bytes());
+        b[AUX2_AT..AUX2_AT + 8].copy_from_slice(&self.aux2.to_le_bytes());
+        b[UNIT_AT..UNIT_AT + 4].copy_from_slice(&self.unit.to_le_bytes());
+        b[H2_LEN_AT..H2_LEN_AT + 4].copy_from_slice(&self.h2_len.to_le_bytes());
+        b[INTENT_CRC_AT..INTENT_CRC_AT + 8].copy_from_slice(&self.intent_crc.to_le_bytes());
+        b[COMMIT_CRC_AT..COMMIT_CRC_AT + 8].copy_from_slice(&self.commit_crc.to_le_bytes());
+        b
+    }
+
+    pub fn from_bytes(b: &[u8; RECORD_SIZE]) -> Self {
+        let u64_at = |at: usize| u64::from_le_bytes(b[at..at + 8].try_into().unwrap());
+        let u32_at = |at: usize| u32::from_le_bytes(b[at..at + 4].try_into().unwrap());
+        let img_at = |at: usize| -> [u8; IMAGE_SIZE] { b[at..at + IMAGE_SIZE].try_into().unwrap() };
+        OpRecord {
+            seq: u64_at(SEQ_AT),
+            kind: u32_at(KIND_AT),
+            flags: u32_at(FLAGS_AT),
+            h1_off: u64_at(H1_OFF_AT),
+            h1_old: img_at(H1_OLD_AT),
+            h1_new: img_at(H1_NEW_AT),
+            h2_off: u64_at(H2_OFF_AT),
+            h2_old: img_at(H2_OLD_AT),
+            h2_new: img_at(H2_NEW_AT),
+            alloc_off: u64_at(ALLOC_OFF_AT),
+            alloc_size: u64_at(ALLOC_SIZE_AT),
+            free_off: u64_at(FREE_OFF_AT),
+            aux: u64_at(AUX_AT),
+            aux2: u64_at(AUX2_AT),
+            unit: u32_at(UNIT_AT),
+            h2_len: u32_at(H2_LEN_AT),
+            intent_crc: u64_at(INTENT_CRC_AT),
+            commit_crc: u64_at(COMMIT_CRC_AT),
+        }
+    }
+
+    /// FNV-1a over the serialized record with both checksum fields
+    /// zeroed — what `intent_crc` must equal for the intent to verify.
+    pub fn body_crc(&self) -> u64 {
+        let mut b = self.to_bytes();
+        b[INTENT_CRC_AT..INTENT_CRC_AT + 8].fill(0);
+        b[COMMIT_CRC_AT..COMMIT_CRC_AT + 8].fill(0);
+        fnv1a(&b)
+    }
+
+    /// Seal the intent checksum (done by `oplog_begin` after assigning
+    /// `seq`, before the ring write).
+    pub fn seal_intent(&mut self) {
+        self.intent_crc = self.body_crc();
+    }
+
+    /// Does the intent checksum verify? A zeroed ring slot fails (the
+    /// FNV of 192 zero bytes is nonzero while its stored crc is zero),
+    /// as does any torn append.
+    pub fn intent_valid(&self) -> bool {
+        self.intent_crc != 0 && self.intent_crc == self.body_crc()
+    }
+
+    /// Seal state; meaningless unless [`Self::intent_valid`].
+    pub fn state(&self) -> RecordState {
+        if self.commit_crc == commit_mark(self.intent_crc) {
+            RecordState::Committed
+        } else if self.commit_crc == abort_mark(self.intent_crc) {
+            RecordState::Aborted
+        } else {
+            RecordState::Unsealed
+        }
+    }
+
+    /// True byte length of the `h1` images: the full 24-byte
+    /// `PVecHeader`/`MapHeader` for every kind except [`OP_STR_SET`],
+    /// whose `StrHeader` is 16 bytes.
+    pub fn h1_len(&self) -> usize {
+        match self.kind {
+            OP_STR_SET => 16,
+            _ => IMAGE_SIZE,
+        }
+    }
+}
+
+/// The 8-byte commit mark for a record with this intent checksum.
+pub fn commit_mark(intent_crc: u64) -> u64 {
+    fnv1a(&(intent_crc ^ COMMIT_TAG).to_le_bytes())
+}
+
+/// The 8-byte abort mark recovery seals on a rolled-back record.
+pub fn abort_mark(intent_crc: u64) -> u64 {
+    fnv1a(&(intent_crc ^ ABORT_TAG).to_le_bytes())
+}
+
+/// Segment offset of the ring slot holding `seq`.
+pub fn slot_off(log_off: u64, capacity: u32, seq: u64) -> u64 {
+    log_off + LOG_HEADER_SIZE as u64 + (seq % capacity as u64) * RECORD_SIZE as u64
+}
+
+/// Total bytes of a log object with `capacity` ring slots.
+pub fn log_size(capacity: u32) -> usize {
+    LOG_HEADER_SIZE + capacity as usize * RECORD_SIZE
+}
+
+// ------------------------------------------------------------ log header --
+
+const CAPACITY_AT: usize = 12;
+const CUTS_AT: usize = 16;
+const CUT_ENTRY_SIZE: usize = 24;
+
+/// One epoch's cut: every record with `seq < cut_seq` was fully decided
+/// (committed or aborted) *before* this management epoch's consistent
+/// cut was taken — so recovery onto that epoch's manifest only ever
+/// replays records at `seq >= cut_seq`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CutEntry {
+    pub epoch: u64,
+    pub cut_seq: u64,
+}
+
+fn cut_crc(epoch: u64, cut_seq: u64) -> u64 {
+    let mut b = [0u8; 16];
+    b[..8].copy_from_slice(&epoch.to_le_bytes());
+    b[8..].copy_from_slice(&cut_seq.to_le_bytes());
+    fnv1a(&b)
+}
+
+impl CutEntry {
+    pub fn to_bytes(&self) -> [u8; CUT_ENTRY_SIZE] {
+        let mut b = [0u8; CUT_ENTRY_SIZE];
+        b[..8].copy_from_slice(&self.epoch.to_le_bytes());
+        b[8..16].copy_from_slice(&self.cut_seq.to_le_bytes());
+        b[16..].copy_from_slice(&cut_crc(self.epoch, self.cut_seq).to_le_bytes());
+        b
+    }
+
+    /// Decode; `None` when the slot is empty or torn (bad crc).
+    pub fn from_bytes(b: &[u8; CUT_ENTRY_SIZE]) -> Option<Self> {
+        let epoch = u64::from_le_bytes(b[..8].try_into().unwrap());
+        let cut_seq = u64::from_le_bytes(b[8..16].try_into().unwrap());
+        let crc = u64::from_le_bytes(b[16..].try_into().unwrap());
+        if epoch == 0 || crc != cut_crc(epoch, cut_seq) {
+            return None;
+        }
+        Some(CutEntry { epoch, cut_seq })
+    }
+}
+
+/// Segment offset of epoch `e`'s cut-table slot.
+pub fn cut_entry_off(log_off: u64, epoch: u64) -> u64 {
+    log_off + CUTS_AT as u64 + (epoch % CUT_SLOTS as u64) * CUT_ENTRY_SIZE as u64
+}
+
+/// Serialize a fresh log header (called once at lazy creation; the cut
+/// table starts all-zero = no valid entries).
+pub fn header_bytes(capacity: u32) -> [u8; LOG_HEADER_SIZE] {
+    let mut b = [0u8; LOG_HEADER_SIZE];
+    b[..8].copy_from_slice(&OPLOG_MAGIC.to_le_bytes());
+    b[8..12].copy_from_slice(&OPLOG_VERSION.to_le_bytes());
+    b[CAPACITY_AT..CAPACITY_AT + 4].copy_from_slice(&capacity.to_le_bytes());
+    b
+}
+
+/// Decode magic/version/capacity from the first 16 header bytes;
+/// `None` when the magic or version mismatches or capacity is silly.
+pub fn decode_header(b: &[u8]) -> Option<u32> {
+    if b.len() < CUTS_AT {
+        return None;
+    }
+    let magic = u64::from_le_bytes(b[..8].try_into().unwrap());
+    let version = u32::from_le_bytes(b[8..12].try_into().unwrap());
+    let capacity = u32::from_le_bytes(b[CAPACITY_AT..CAPACITY_AT + 4].try_into().unwrap());
+    if magic != OPLOG_MAGIC || version != OPLOG_VERSION || capacity == 0 {
+        return None;
+    }
+    Some(capacity)
+}
+
+// -------------------------------------------------------- image helpers --
+
+/// Snapshot a ≤ 24-byte POD header into a zero-padded image.
+pub fn image_of<T: Persist>(v: &T) -> [u8; IMAGE_SIZE] {
+    let n = std::mem::size_of::<T>();
+    assert!(n <= IMAGE_SIZE, "container header exceeds the image size");
+    let mut img = [0u8; IMAGE_SIZE];
+    // Persist guarantees plain-old-data with no padding requirements
+    let src = unsafe { std::slice::from_raw_parts(v as *const T as *const u8, n) };
+    img[..n].copy_from_slice(src);
+    img
+}
+
+/// Decoded [`OP_VEC_*`] header image (`PVecHeader` layout).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VecImage {
+    pub data_off: u64,
+    pub len: u64,
+    pub cap: u64,
+}
+
+pub fn vec_image(img: &[u8; IMAGE_SIZE]) -> VecImage {
+    VecImage {
+        data_off: u64::from_le_bytes(img[..8].try_into().unwrap()),
+        len: u64::from_le_bytes(img[8..16].try_into().unwrap()),
+        cap: u64::from_le_bytes(img[16..].try_into().unwrap()),
+    }
+}
+
+/// Decoded [`OP_MAP_*`] header image (`MapHeader` layout).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MapImage {
+    pub table_off: u64,
+    pub cap: u64,
+    pub len: u64,
+}
+
+pub fn map_image(img: &[u8; IMAGE_SIZE]) -> MapImage {
+    MapImage {
+        table_off: u64::from_le_bytes(img[..8].try_into().unwrap()),
+        cap: u64::from_le_bytes(img[8..16].try_into().unwrap()),
+        len: u64::from_le_bytes(img[16..].try_into().unwrap()),
+    }
+}
+
+/// Decoded [`OP_STR_SET`] header image (`StrHeader` layout).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StrImage {
+    pub data_off: u64,
+    pub len: u64,
+}
+
+pub fn str_image(img: &[u8; IMAGE_SIZE]) -> StrImage {
+    StrImage {
+        data_off: u64::from_le_bytes(img[..8].try_into().unwrap()),
+        len: u64::from_le_bytes(img[8..16].try_into().unwrap()),
+    }
+}
+
+/// Decoded [`OP_EDGE`] `h2` image (`BankEntry` layout: the bank map's
+/// header offset + the edge counter).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BankImage {
+    pub map_header_off: u64,
+    pub nedges: u64,
+}
+
+pub fn bank_image(img: &[u8; IMAGE_SIZE]) -> BankImage {
+    BankImage {
+        map_header_off: u64::from_le_bytes(img[..8].try_into().unwrap()),
+        nedges: u64::from_le_bytes(img[8..16].try_into().unwrap()),
+    }
+}
+
+// ------------------------------------------------------- token + stats --
+
+/// Handle `oplog_begin` returns and `oplog_commit` consumes: where the
+/// record landed and the intent checksum the commit mark derives from.
+#[derive(Clone, Copy, Debug)]
+pub struct OpToken {
+    /// Segment offset of the ring slot holding the record.
+    pub slot_off: u64,
+    /// Ring sequence number (the commit path retires it from the
+    /// in-flight set that pins the reclaim horizon).
+    pub seq: u64,
+    pub intent_crc: u64,
+}
+
+/// Cumulative per-manager op-log counters (exported as `alloc.oplog.*`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OpLogStats {
+    /// Intent records appended.
+    pub appended: u64,
+    /// Commit marks sealed.
+    pub committed: u64,
+    /// Ring-full forced syncs (writers waited for a manifest commit to
+    /// advance the reclaim horizon).
+    pub forced_syncs: u64,
+    /// Recovery: unsealed records rolled forward (re-sealed).
+    pub recovered_forward: u64,
+    /// Recovery: unsealed records rolled back (old images restored).
+    pub recovered_rollback: u64,
+    /// Recovery: extents adopted into the recovered allocator.
+    pub recovered_adopted: u64,
+    /// Recovery: stale extents released back to the allocator.
+    pub recovered_released: u64,
+    /// Recovery: current header bytes matched neither image (restored
+    /// the old image anyway; worth surfacing in doctor).
+    pub recovery_anomalies: u64,
+    /// Records the last `validate_containers` pass examined.
+    pub validate_records: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> OpRecord {
+        let mut r = OpRecord::new(OP_VEC_GROW);
+        r.seq = 41;
+        r.h1_off = 4096;
+        r.h1_old[..8].copy_from_slice(&77u64.to_le_bytes());
+        r.h1_new[..8].copy_from_slice(&99u64.to_le_bytes());
+        r.alloc_off = 1 << 20;
+        r.alloc_size = 256;
+        r.free_off = 1 << 16;
+        r.aux = 8;
+        r.unit = 8;
+        r.h2_len = 16;
+        r
+    }
+
+    #[test]
+    fn record_roundtrips_and_layout_is_stable() {
+        let mut r = sample();
+        r.seal_intent();
+        r.commit_crc = commit_mark(r.intent_crc);
+        let b = r.to_bytes();
+        assert_eq!(OpRecord::from_bytes(&b), r);
+        // the commit mark must live exactly at COMMIT_CRC_AT: the seal
+        // path writes those 8 bytes directly into the ring slot
+        assert_eq!(
+            u64::from_le_bytes(b[COMMIT_CRC_AT..COMMIT_CRC_AT + 8].try_into().unwrap()),
+            r.commit_crc
+        );
+    }
+
+    #[test]
+    fn intent_checksum_detects_torn_and_empty_slots() {
+        let zero = OpRecord::from_bytes(&[0u8; RECORD_SIZE]);
+        assert!(!zero.intent_valid(), "all-zero ring slot is not a record");
+        let mut r = sample();
+        assert!(!r.intent_valid(), "unsealed intent does not verify");
+        r.seal_intent();
+        assert!(r.intent_valid());
+        let mut b = r.to_bytes();
+        b[H1_NEW_AT] ^= 0xFF; // torn byte inside the body
+        assert!(!OpRecord::from_bytes(&b).intent_valid());
+    }
+
+    #[test]
+    fn seal_states_are_distinct() {
+        let mut r = sample();
+        r.seal_intent();
+        assert_eq!(r.state(), RecordState::Unsealed);
+        r.commit_crc = commit_mark(r.intent_crc);
+        assert_eq!(r.state(), RecordState::Committed);
+        r.commit_crc = abort_mark(r.intent_crc);
+        assert_eq!(r.state(), RecordState::Aborted);
+        assert_ne!(commit_mark(r.intent_crc), abort_mark(r.intent_crc));
+    }
+
+    #[test]
+    fn cut_entries_roundtrip_and_reject_torn_slots() {
+        let c = CutEntry { epoch: 7, cut_seq: 1234 };
+        let b = c.to_bytes();
+        assert_eq!(CutEntry::from_bytes(&b), Some(c));
+        let mut torn = b;
+        torn[9] ^= 0x55;
+        assert_eq!(CutEntry::from_bytes(&torn), None);
+        assert_eq!(CutEntry::from_bytes(&[0u8; CUT_ENTRY_SIZE]), None, "empty slot");
+        // two epochs 16 apart share a table slot
+        assert_eq!(cut_entry_off(0, 3), cut_entry_off(0, 19));
+        assert_ne!(cut_entry_off(0, 3), cut_entry_off(0, 4));
+    }
+
+    #[test]
+    fn header_roundtrips_and_ring_geometry() {
+        let h = header_bytes(DEFAULT_CAPACITY);
+        assert_eq!(decode_header(&h), Some(DEFAULT_CAPACITY));
+        let mut bad = h;
+        bad[0] ^= 1;
+        assert_eq!(decode_header(&bad), None);
+        assert_eq!(log_size(DEFAULT_CAPACITY), LOG_HEADER_SIZE + 1024 * RECORD_SIZE);
+        // slots wrap at capacity
+        assert_eq!(slot_off(0, 8, 3), slot_off(0, 8, 11));
+        assert_eq!(slot_off(0, 8, 0), LOG_HEADER_SIZE as u64);
+    }
+
+    #[test]
+    fn images_decode_container_headers() {
+        let v = vec_image(&{
+            let mut img = [0u8; IMAGE_SIZE];
+            img[..8].copy_from_slice(&10u64.to_le_bytes());
+            img[8..16].copy_from_slice(&3u64.to_le_bytes());
+            img[16..].copy_from_slice(&4u64.to_le_bytes());
+            img
+        });
+        assert_eq!(v, VecImage { data_off: 10, len: 3, cap: 4 });
+        let m = map_image(&{
+            let mut img = [0u8; IMAGE_SIZE];
+            img[..8].copy_from_slice(&20u64.to_le_bytes());
+            img[8..16].copy_from_slice(&8u64.to_le_bytes());
+            img[16..].copy_from_slice(&5u64.to_le_bytes());
+            img
+        });
+        assert_eq!(m, MapImage { table_off: 20, cap: 8, len: 5 });
+    }
+}

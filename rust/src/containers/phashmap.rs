@@ -2,16 +2,21 @@
 //! keys (the `unordered_map` of the paper's vertex table, §6.1).
 //!
 //! Linear probing, power-of-two capacity, grow at 70% load. The reserved
-//! key `u64::MAX` marks empty slots (vertex IDs are 64-bit but the
-//! generator never produces `u64::MAX`). No deletion — the graph
-//! workloads only insert — keeping the probe sequences tombstone-free.
+//! key `u64::MAX` ([`EMPTY_KEY`]) marks empty slots — inserting it would
+//! be indistinguishable from an empty slot and silently corrupt probe
+//! chains, so [`PHashMapU64::insert`] rejects it with
+//! `Error::InvalidOp` (vertex IDs are 64-bit but real generators never
+//! produce `u64::MAX`). No deletion — the graph workloads only insert —
+//! keeping the probe sequences tombstone-free.
 
 use std::marker::PhantomData;
 
 use crate::alloc::manager::Persist;
 use crate::alloc::SegmentAlloc;
-use crate::error::Result;
+use crate::containers::oplog::{self, OpRecord};
+use crate::error::{Error, Result};
 use crate::util::rng::mix64;
+use crate::util::test_kill_point;
 
 /// Reserved empty-slot marker.
 pub const EMPTY_KEY: u64 = u64::MAX;
@@ -49,7 +54,17 @@ impl<V: Persist> PHashMapU64<V> {
     pub fn create<A: SegmentAlloc>(a: &A) -> Result<Self> {
         let header_off = a.allocate(std::mem::size_of::<MapHeader>())?;
         let m = Self { header_off, _v: PhantomData };
-        m.write_header(a, MapHeader { table_off: 0, cap: 0, len: 0 });
+        let init = MapHeader { table_off: 0, cap: 0, len: 0 };
+        let mut rec = OpRecord::new(oplog::OP_MAP_CREATE);
+        rec.h1_off = header_off;
+        rec.h1_old = oplog::image_of(&init);
+        rec.h1_new = rec.h1_old;
+        rec.alloc_off = header_off;
+        rec.alloc_size = std::mem::size_of::<MapHeader>() as u64;
+        rec.unit = Self::STRIDE as u32;
+        let tok = a.oplog_begin(rec)?;
+        m.write_header(a, init);
+        a.oplog_commit(tok)?;
         Ok(m)
     }
 
@@ -94,12 +109,29 @@ impl<V: Persist> PHashMapU64<V> {
         Ok(table_off)
     }
 
+    /// Double the table (rehash). Crash-safe order: build the new table
+    /// in an unpublished extent, log the intent, publish the header,
+    /// seal the commit — and only then retire the old table. (The old
+    /// code deallocated the table *before* publishing the header that
+    /// stops pointing at it, leaving a dangling `table_off` for a kill
+    /// in between.)
     fn grow<A: SegmentAlloc>(&self, a: &A) -> Result<MapHeader> {
         let h = self.header(a);
         let new_cap = (h.cap * 2).max(8);
         let new_off = Self::init_table(a, new_cap)?;
         let mut nh = MapHeader { table_off: new_off, cap: new_cap, len: h.len };
-        // rehash
+        let mut rec = OpRecord::new(oplog::OP_MAP_GROW);
+        rec.h1_off = self.header_off;
+        rec.h1_old = oplog::image_of(&h);
+        rec.h1_new = oplog::image_of(&nh);
+        rec.alloc_off = new_off;
+        rec.alloc_size = new_cap * Self::STRIDE as u64;
+        if h.cap > 0 {
+            rec.free_off = h.table_off;
+        }
+        rec.unit = Self::STRIDE as u32;
+        let tok = a.oplog_begin(rec)?;
+        // rehash into the (still unpublished) new table
         if h.cap > 0 {
             for s in 0..h.cap {
                 let off = Self::slot_off(&h, s);
@@ -109,9 +141,13 @@ impl<V: Persist> PHashMapU64<V> {
                     Self::raw_insert(a, &mut nh, k, v);
                 }
             }
-            a.deallocate(h.table_off)?;
         }
         self.write_header(a, nh);
+        test_kill_point("pmap_grow_retire");
+        a.oplog_commit(tok)?;
+        if h.cap > 0 {
+            a.deallocate(h.table_off)?;
+        }
         Ok(nh)
     }
 
@@ -161,20 +197,80 @@ impl<V: Persist> PHashMapU64<V> {
         self.probe(a, key).is_some()
     }
 
-    /// Insert or overwrite; returns true when the key was new.
+    /// First empty slot on `key`'s probe chain (the table must have
+    /// room — callers grow first).
+    fn find_free_slot<A: SegmentAlloc>(a: &A, h: &MapHeader, key: u64) -> u64 {
+        let mask = h.cap - 1;
+        let mut s = mix64(key) & mask;
+        loop {
+            let off = Self::slot_off(h, s);
+            let k: u64 = a.read_pod(off);
+            if k == EMPTY_KEY {
+                return off;
+            }
+            debug_assert_ne!(k, key, "find_free_slot on existing key");
+            s = (s + 1) & mask;
+        }
+    }
+
+    /// Insert or overwrite; returns true when the key was new. The
+    /// reserved [`EMPTY_KEY`] (`u64::MAX`) is rejected with
+    /// `Error::InvalidOp` — storing it would alias the empty-slot marker
+    /// and corrupt every probe chain crossing its slot.
+    ///
+    /// Crash-atomicity: a new-key insert is fully logged (key + `len`
+    /// publish roll back together). An *overwrite* logs old/new value
+    /// images only when `V` fits a 24-byte log image; larger values are
+    /// overwritten in place un-logged — a kill mid-write can tear the
+    /// value (never the map structure).
     pub fn insert<A: SegmentAlloc>(&self, a: &A, key: u64, value: V) -> Result<bool> {
-        assert_ne!(key, EMPTY_KEY, "key u64::MAX is reserved");
+        if key == EMPTY_KEY {
+            return Err(Error::InvalidOp(
+                "key u64::MAX is reserved as the hash map's empty-slot marker".into(),
+            ));
+        }
         if let Some(off) = self.probe(a, key) {
-            a.write_pod(off + 8, value);
+            if std::mem::size_of::<V>() <= oplog::IMAGE_SIZE {
+                let old: V = a.read_pod(off + 8);
+                let h = self.header(a);
+                let mut rec = OpRecord::new(oplog::OP_MAP_INSERT);
+                rec.flags = oplog::FLAG_OVERWRITE;
+                rec.h1_off = self.header_off;
+                rec.h1_old = oplog::image_of(&h);
+                rec.h1_new = rec.h1_old;
+                rec.h2_off = off + 8;
+                rec.h2_old = oplog::image_of(&old);
+                rec.h2_new = oplog::image_of(&value);
+                rec.h2_len = std::mem::size_of::<V>() as u32;
+                rec.aux = off;
+                rec.aux2 = key;
+                rec.unit = Self::STRIDE as u32;
+                let tok = a.oplog_begin(rec)?;
+                a.write_pod(off + 8, value);
+                a.oplog_commit(tok)?;
+            } else {
+                a.write_pod(off + 8, value);
+            }
             return Ok(false);
         }
         let mut h = self.header(a);
         if h.cap == 0 || (h.len + 1) * 10 > h.cap * 7 {
             h = self.grow(a)?;
         }
-        Self::raw_insert(a, &mut h, key, value);
+        let slot = Self::find_free_slot(a, &h, key);
+        let mut rec = OpRecord::new(oplog::OP_MAP_INSERT);
+        rec.h1_off = self.header_off;
+        rec.h1_old = oplog::image_of(&h);
         h.len += 1;
+        rec.h1_new = oplog::image_of(&h);
+        rec.aux = slot;
+        rec.aux2 = key;
+        rec.unit = Self::STRIDE as u32;
+        let tok = a.oplog_begin(rec)?;
+        a.write_pod(slot, key);
+        a.write_pod(slot + 8, value);
         self.write_header(a, h);
+        a.oplog_commit(tok)?;
         Ok(true)
     }
 
@@ -309,11 +405,17 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "reserved")]
-    fn reserved_key_panics() {
+    fn reserved_key_rejected() {
         let d = TempDir::new("pmap5");
         let m = mgr(&d);
         let map = PHashMapU64::<u64>::create(&m).unwrap();
-        let _ = map.insert(&m, EMPTY_KEY, 1);
+        let err = map.insert(&m, EMPTY_KEY, 1).unwrap_err();
+        assert!(err.to_string().contains("reserved"), "got: {err}");
+        // the rejected insert left no trace
+        assert_eq!(map.len(&m), 0);
+        assert_eq!(map.get(&m, EMPTY_KEY), None);
+        // and the map still works
+        assert!(map.insert(&m, u64::MAX - 1, 7).unwrap());
+        assert_eq!(map.get(&m, u64::MAX - 1), Some(7));
     }
 }

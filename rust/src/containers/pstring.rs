@@ -2,6 +2,7 @@
 
 use crate::alloc::manager::Persist;
 use crate::alloc::SegmentAlloc;
+use crate::containers::oplog::{self, OpRecord};
 use crate::error::Result;
 
 #[derive(Clone, Copy, Debug)]
@@ -65,12 +66,12 @@ impl PString {
         String::from_utf8_lossy(bytes).into_owned()
     }
 
-    /// Replace the contents.
+    /// Replace the contents. Crash-safe order: fill the new extent, log
+    /// the intent, publish the header, seal the commit — and only then
+    /// retire the old bytes (the old code freed them first, leaving a
+    /// dangling `data_off` for a kill in between).
     pub fn set<A: SegmentAlloc>(&self, a: &A, s: &str) -> Result<()> {
         let h: StrHeader = a.read_pod(self.header_off);
-        if h.data_off != u64::MAX {
-            a.deallocate(h.data_off)?;
-        }
         let data_off = if s.is_empty() {
             u64::MAX
         } else {
@@ -78,7 +79,25 @@ impl PString {
             a.write_bytes(off, s.as_bytes());
             off
         };
-        a.write_pod(self.header_off, StrHeader { data_off, len: s.len() as u64 });
+        let nh = StrHeader { data_off, len: s.len() as u64 };
+        let mut rec = OpRecord::new(oplog::OP_STR_SET);
+        rec.h1_off = self.header_off;
+        rec.h1_old = oplog::image_of(&h);
+        rec.h1_new = oplog::image_of(&nh);
+        if data_off != u64::MAX {
+            rec.alloc_off = data_off;
+            rec.alloc_size = s.len() as u64;
+        }
+        if h.data_off != u64::MAX {
+            rec.free_off = h.data_off;
+        }
+        rec.unit = 1;
+        let tok = a.oplog_begin(rec)?;
+        a.write_pod(self.header_off, nh);
+        a.oplog_commit(tok)?;
+        if h.data_off != u64::MAX {
+            a.deallocate(h.data_off)?;
+        }
         Ok(())
     }
 

@@ -11,7 +11,9 @@ use std::marker::PhantomData;
 
 use crate::alloc::manager::Persist;
 use crate::alloc::SegmentAlloc;
-use crate::error::Result;
+use crate::containers::oplog::{self, OpRecord};
+use crate::error::{Error, Result};
+use crate::util::test_kill_point;
 
 /// Persistent header (what actually lives in the segment).
 #[derive(Clone, Copy, Debug)]
@@ -51,7 +53,17 @@ impl<T: Persist> PVec<T> {
     pub fn create<A: SegmentAlloc>(a: &A) -> Result<Self> {
         let header_off = a.allocate(std::mem::size_of::<PVecHeader>())?;
         let v = Self { header_off, _t: PhantomData };
-        v.write_header(a, PVecHeader { data_off: NO_DATA, len: 0, cap: 0 });
+        let init = PVecHeader { data_off: NO_DATA, len: 0, cap: 0 };
+        let mut rec = OpRecord::new(oplog::OP_VEC_CREATE);
+        rec.h1_off = header_off;
+        rec.h1_old = oplog::image_of(&init);
+        rec.h1_new = rec.h1_old;
+        rec.alloc_off = header_off;
+        rec.alloc_size = std::mem::size_of::<PVecHeader>() as u64;
+        rec.unit = Self::ELEM as u32;
+        let tok = a.oplog_begin(rec)?;
+        v.write_header(a, init);
+        a.oplog_commit(tok)?;
         Ok(v)
     }
 
@@ -92,40 +104,104 @@ impl<T: Persist> PVec<T> {
 
     pub fn get<A: SegmentAlloc>(&self, a: &A, i: usize) -> T {
         let h = self.header(a);
-        assert!((i as u64) < h.len, "index {i} out of bounds (len {})", h.len);
+        debug_assert!((i as u64) < h.len, "index {i} out of bounds (len {})", h.len);
         a.read_pod(Self::elem_off(&h, i))
     }
 
+    /// Fallible [`Self::get`]: `Err(InvalidOp)` instead of a debug
+    /// assertion when `i` is out of bounds.
+    pub fn try_get<A: SegmentAlloc>(&self, a: &A, i: usize) -> Result<T> {
+        let h = self.header(a);
+        if (i as u64) >= h.len {
+            return Err(Error::InvalidOp(format!(
+                "pvec index {i} out of bounds (len {})",
+                h.len
+            )));
+        }
+        Ok(a.read_pod(Self::elem_off(&h, i)))
+    }
+
+    /// In-place element overwrite. NOT crash-atomic: the element bytes
+    /// are mutated directly with no logged intent (a kill mid-write can
+    /// tear the element, though never the container structure).
     pub fn set<A: SegmentAlloc>(&self, a: &A, i: usize, v: T) {
         let h = self.header(a);
-        assert!((i as u64) < h.len, "index {i} out of bounds (len {})", h.len);
+        debug_assert!((i as u64) < h.len, "index {i} out of bounds (len {})", h.len);
         a.write_pod(Self::elem_off(&h, i), v);
     }
 
-    /// Grow capacity to at least `need` elements.
+    /// Fallible [`Self::set`]: `Err(InvalidOp)` instead of a debug
+    /// assertion when `i` is out of bounds.
+    pub fn try_set<A: SegmentAlloc>(&self, a: &A, i: usize, v: T) -> Result<()> {
+        let h = self.header(a);
+        if (i as u64) >= h.len {
+            return Err(Error::InvalidOp(format!(
+                "pvec index {i} out of bounds (len {})",
+                h.len
+            )));
+        }
+        a.write_pod(Self::elem_off(&h, i), v);
+        Ok(())
+    }
+
+    /// Grow capacity to at least `need` elements. Crash-safe order: fill
+    /// the new extent, log the intent, publish the header, seal the
+    /// commit — and only then retire the old extent. (The old code freed
+    /// the extent *before* publishing the header that stops pointing at
+    /// it, leaving a dangling `data_off` for a kill in between.)
     fn grow<A: SegmentAlloc>(&self, a: &A, need: usize) -> Result<PVecHeader> {
-        let mut h = self.header(a);
+        let h = self.header(a);
         if (need as u64) <= h.cap {
             return Ok(h);
         }
         let new_cap = need.max((h.cap as usize) * 2).max(4);
         let new_off = a.allocate(new_cap * Self::ELEM)?;
+        let mut nh = h;
+        nh.data_off = new_off;
+        nh.cap = new_cap as u64;
+        let mut rec = OpRecord::new(oplog::OP_VEC_GROW);
+        rec.h1_off = self.header_off;
+        rec.h1_old = oplog::image_of(&h);
+        rec.h1_new = oplog::image_of(&nh);
+        rec.alloc_off = new_off;
+        rec.alloc_size = (new_cap * Self::ELEM) as u64;
+        if h.data_off != NO_DATA {
+            rec.free_off = h.data_off;
+        }
+        rec.unit = Self::ELEM as u32;
+        let tok = a.oplog_begin(rec)?;
         if h.data_off != NO_DATA {
             a.copy_within(h.data_off, new_off, h.len as usize * Self::ELEM);
+        }
+        self.write_header(a, nh);
+        test_kill_point("pvec_grow_retire");
+        a.oplog_commit(tok)?;
+        if h.data_off != NO_DATA {
             a.deallocate(h.data_off)?;
         }
-        h.data_off = new_off;
-        h.cap = new_cap as u64;
-        self.write_header(a, h);
-        Ok(h)
+        Ok(nh)
+    }
+
+    /// Reserve capacity for at least `need` elements (public so callers
+    /// composing multi-container ops can pre-grow before logging them).
+    pub fn reserve<A: SegmentAlloc>(&self, a: &A, need: usize) -> Result<()> {
+        self.grow(a, need)?;
+        Ok(())
     }
 
     pub fn push<A: SegmentAlloc>(&self, a: &A, v: T) -> Result<()> {
         let mut h = self.grow(a, self.len(a) + 1)?;
-        a.write_pod(Self::elem_off(&h, h.len as usize), v);
+        let at = h.len as usize;
+        let mut rec = OpRecord::new(oplog::OP_VEC_PUSH);
+        rec.h1_off = self.header_off;
+        rec.h1_old = oplog::image_of(&h);
         h.len += 1;
+        rec.h1_new = oplog::image_of(&h);
+        rec.unit = Self::ELEM as u32;
+        let tok = a.oplog_begin(rec)?;
+        a.write_pod(Self::elem_off(&h, at), v);
         self.write_header(a, h);
-        Ok(())
+        a.oplog_commit(tok)
     }
 
     /// Bulk append (single growth + memcpy — the ingestion hot path).
@@ -134,24 +210,72 @@ impl<T: Persist> PVec<T> {
             return Ok(());
         }
         let mut h = self.grow(a, self.len(a) + vs.len())?;
+        let at = h.len as usize;
+        let mut rec = OpRecord::new(oplog::OP_VEC_EXTEND);
+        rec.h1_off = self.header_off;
+        rec.h1_old = oplog::image_of(&h);
+        h.len += vs.len() as u64;
+        rec.h1_new = oplog::image_of(&h);
+        rec.aux = vs.len() as u64;
+        rec.unit = Self::ELEM as u32;
+        let tok = a.oplog_begin(rec)?;
         let bytes = unsafe {
             std::slice::from_raw_parts(vs.as_ptr() as *const u8, vs.len() * Self::ELEM)
         };
-        a.write_bytes(Self::elem_off(&h, h.len as usize), bytes);
-        h.len += vs.len() as u64;
+        a.write_bytes(Self::elem_off(&h, at), bytes);
         self.write_header(a, h);
-        Ok(())
+        a.oplog_commit(tok)
     }
 
-    pub fn pop<A: SegmentAlloc>(&self, a: &A) -> Option<T> {
+    /// Adjacency edge append: one [`oplog::OP_EDGE`] record covers both
+    /// this vec's header and the caller's rider cell (the 16-byte
+    /// `BankEntry` holding the bank's edge counter), so a kill between
+    /// the two publishes rolls them back *together* — no half-linked
+    /// row where the list grew but the counter didn't.
+    pub(crate) fn push_edge<A: SegmentAlloc>(
+        &self,
+        a: &A,
+        v: T,
+        rider_off: u64,
+        rider_old: [u8; oplog::IMAGE_SIZE],
+        rider_new: [u8; oplog::IMAGE_SIZE],
+        rider_len: u32,
+    ) -> Result<()> {
+        let mut h = self.grow(a, self.len(a) + 1)?;
+        let at = h.len as usize;
+        let mut rec = OpRecord::new(oplog::OP_EDGE);
+        rec.h1_off = self.header_off;
+        rec.h1_old = oplog::image_of(&h);
+        h.len += 1;
+        rec.h1_new = oplog::image_of(&h);
+        rec.h2_off = rider_off;
+        rec.h2_old = rider_old;
+        rec.h2_new = rider_new;
+        rec.h2_len = rider_len;
+        rec.unit = Self::ELEM as u32;
+        let tok = a.oplog_begin(rec)?;
+        a.write_pod(Self::elem_off(&h, at), v);
+        self.write_header(a, h);
+        a.write_bytes(rider_off, &rider_new[..rider_len as usize]);
+        a.oplog_commit(tok)
+    }
+
+    pub fn pop<A: SegmentAlloc>(&self, a: &A) -> Result<Option<T>> {
         let mut h = self.header(a);
         if h.len == 0 {
-            return None;
+            return Ok(None);
         }
+        let mut rec = OpRecord::new(oplog::OP_VEC_POP);
+        rec.h1_off = self.header_off;
+        rec.h1_old = oplog::image_of(&h);
         h.len -= 1;
+        rec.h1_new = oplog::image_of(&h);
+        rec.unit = Self::ELEM as u32;
+        let tok = a.oplog_begin(rec)?;
         let v = a.read_pod(Self::elem_off(&h, h.len as usize));
         self.write_header(a, h);
-        Some(v)
+        a.oplog_commit(tok)?;
+        Ok(Some(v))
     }
 
     /// Copy out as a std Vec (analytics export path).
@@ -206,7 +330,7 @@ mod tests {
         assert_eq!(v.get(&m, 99), 297);
         v.set(&m, 50, 7777);
         assert_eq!(v.get(&m, 50), 7777);
-        assert_eq!(v.pop(&m), Some(297));
+        assert_eq!(v.pop(&m).unwrap(), Some(297));
         assert_eq!(v.len(&m), 99);
     }
 
@@ -283,12 +407,30 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "out of bounds")]
-    fn oob_get_panics() {
+    fn oob_access_is_fallible() {
         let d = TempDir::new("pvec6");
         let m = mgr(&d);
         let v = PVec::<u64>::create(&m).unwrap();
         v.push(&m, 1).unwrap();
-        v.get(&m, 1);
+        assert_eq!(v.try_get(&m, 0).unwrap(), 1);
+        assert!(v.try_get(&m, 1).is_err());
+        assert!(v.try_set(&m, 1, 9).is_err());
+        v.try_set(&m, 0, 9).unwrap();
+        assert_eq!(v.try_get(&m, 0).unwrap(), 9);
+        // empty vec: every index is out of bounds
+        assert!(v.pop(&m).unwrap().is_some());
+        assert!(v.try_get(&m, 0).is_err());
+    }
+
+    #[test]
+    fn pop_drains_to_none() {
+        let d = TempDir::new("pvec7");
+        let m = mgr(&d);
+        let v = PVec::<u64>::create(&m).unwrap();
+        v.push(&m, 5).unwrap();
+        v.push(&m, 6).unwrap();
+        assert_eq!(v.pop(&m).unwrap(), Some(6));
+        assert_eq!(v.pop(&m).unwrap(), Some(5));
+        assert_eq!(v.pop(&m).unwrap(), None);
     }
 }

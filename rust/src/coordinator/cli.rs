@@ -277,8 +277,10 @@ pub fn run(argv: &[String]) -> Result<i32> {
             let mgr = MetallManager::open_read_only(store).context("open datastore")?;
             let report = mgr.doctor()?;
             if report.is_empty() {
+                let audited = mgr.oplog_stats().validate_records;
                 println!("{store}: OK — management data consistent, all named \
-                          objects within the mapped segment");
+                          objects within the mapped segment, container \
+                          invariants hold ({audited} op-log records audited)");
                 Ok(0)
             } else {
                 for finding in &report {

@@ -11,6 +11,7 @@ use std::time::Instant;
 use crate::alloc::bg_sync::BgSyncStats;
 use crate::alloc::bin_dir::ShardStatsSnapshot;
 use crate::alloc::manager::{AttachStats, PlacementReport, StatsSnapshot, SyncStats};
+use crate::containers::oplog::OpLogStats;
 
 /// A named set of monotonically increasing counters plus accumulated
 /// phase durations. Cheap to share behind an `Arc`.
@@ -166,6 +167,23 @@ pub fn record_bg_sync_stats(m: &Metrics, s: &BgSyncStats) {
     m.add("alloc.bgsync.adaptive_watermark_bytes", s.adaptive_watermark_bytes);
     m.add("alloc.bgsync.measured_bandwidth_bps", s.measured_bandwidth_bps);
     m.add("alloc.bgsync.epochs_committed", s.epochs_committed);
+}
+
+/// Fold a manager's container op-log counters into `m` under
+/// `alloc.oplog.*`. [`OpLogStats`] counters are cumulative over the
+/// manager's lifetime (recovery counters are set once at open), so call
+/// this once per manager at report time — or feed deltas when sampling
+/// repeatedly.
+pub fn record_oplog_stats(m: &Metrics, s: &OpLogStats) {
+    m.add("alloc.oplog.appended", s.appended);
+    m.add("alloc.oplog.committed", s.committed);
+    m.add("alloc.oplog.forced_syncs", s.forced_syncs);
+    m.add("alloc.oplog.recovered_forward", s.recovered_forward);
+    m.add("alloc.oplog.recovered_rollback", s.recovered_rollback);
+    m.add("alloc.oplog.recovered_adopted", s.recovered_adopted);
+    m.add("alloc.oplog.recovered_released", s.recovered_released);
+    m.add("alloc.oplog.recovery_anomalies", s.recovery_anomalies);
+    m.add("alloc.oplog.validate_records", s.validate_records);
 }
 
 /// Fold one reader's [`AttachStats`] into `m` under `alloc.attach.*`.
@@ -369,6 +387,32 @@ mod tests {
         assert_eq!(m.get("alloc.attach.side_copies_created"), 9);
         assert_eq!(m.get("alloc.attach.side_copies_reused"), 3);
         assert_eq!(m.get("alloc.attach.staleness_epochs"), 0);
+    }
+
+    #[test]
+    fn oplog_bridge_exports_log_counters() {
+        let m = Metrics::new();
+        let s = OpLogStats {
+            appended: 120,
+            committed: 118,
+            forced_syncs: 1,
+            recovered_forward: 2,
+            recovered_rollback: 1,
+            recovered_adopted: 3,
+            recovered_released: 2,
+            recovery_anomalies: 0,
+            validate_records: 40,
+        };
+        record_oplog_stats(&m, &s);
+        assert_eq!(m.get("alloc.oplog.appended"), 120);
+        assert_eq!(m.get("alloc.oplog.committed"), 118);
+        assert_eq!(m.get("alloc.oplog.forced_syncs"), 1);
+        assert_eq!(m.get("alloc.oplog.recovered_forward"), 2);
+        assert_eq!(m.get("alloc.oplog.recovered_rollback"), 1);
+        assert_eq!(m.get("alloc.oplog.recovered_adopted"), 3);
+        assert_eq!(m.get("alloc.oplog.recovered_released"), 2);
+        assert_eq!(m.get("alloc.oplog.recovery_anomalies"), 0);
+        assert_eq!(m.get("alloc.oplog.validate_records"), 40);
     }
 
     #[test]

@@ -37,6 +37,22 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Crash-injection hook for the kill-9 integration tests: when the
+/// `METALL_KILL_POINT` environment variable names this call site, the
+/// process SIGKILLs itself on the spot — no unwinding, no destructors,
+/// exactly the crash model the recovery paths must survive. Always
+/// compiled (a `#[cfg(test)]` gate would not reach the re-exec'd child
+/// processes the crash tests spawn); the env lookup is the only cost on
+/// the hot path when unset.
+#[inline]
+pub fn test_kill_point(name: &str) {
+    if std::env::var_os("METALL_KILL_POINT").is_some_and(|v| v == name) {
+        unsafe {
+            libc::raise(libc::SIGKILL);
+        }
+    }
+}
+
 /// Run `n` independent jobs on a scoped worker pool and return their
 /// results in job order — the atomic-cursor flusher pattern (one worker
 /// per available core, capped at `n`; job `i` is claimed with a

@@ -18,7 +18,7 @@ use std::path::{Path, PathBuf};
 use std::process::Command;
 
 use metall_rs::alloc::{pin_thread_vcpu, ManagerOptions, MetallManager};
-use metall_rs::containers::PVec;
+use metall_rs::containers::{BankedAdjacency, PHashMapU64, PVec};
 use metall_rs::numa::Topology;
 use metall_rs::util::rng::Xoshiro256ss;
 use metall_rs::util::tmp::TempDir;
@@ -45,6 +45,15 @@ fn crash_child_entry() {
     };
     let dir = PathBuf::from(std::env::var(DIR_ENV).expect("child needs dir"));
     let kill_at: u64 = std::env::var(KILL_AT_ENV).expect("child needs kill_at").parse().unwrap();
+
+    // container-level crash modes have their own child bodies (the
+    // generic trace below churns raw allocations; these churn the
+    // op-logged containers themselves)
+    match mode.as_str() {
+        "crash-container" => return crash_container_child(&dir, kill_at),
+        "kpoint-vec" | "kpoint-map" => return kill_point_child(&dir, &mode),
+        _ => {}
+    }
 
     let store = dir.join("s");
     // the "*-shards4" modes run the same trace on a 4-shard manager with
@@ -722,6 +731,261 @@ fn torn_pipeline_queue_matrix_recovers_newest_complete_manifest() {
     // back to 2, epoch-2-only casualties keep the newest epoch intact
     assert!(rolled_back >= 2, "≥2 epoch-3 files torn: {victims:?}");
     assert!(kept_newest >= 1, "≥1 epoch-2-only file torn: {victims:?}");
+}
+
+// ------------------------------------------------------------------------
+// Container crash consistency (the per-operation commit log).
+
+/// Elements the container-churn trace pushes into its `PVec`.
+fn container_vec_value(i: u64) -> u64 {
+    i.wrapping_mul(11).wrapping_add(3)
+}
+
+/// Values the container-churn trace maps key `k` to.
+fn container_map_value(k: u64) -> u64 {
+    k.wrapping_mul(3).wrapping_add(1)
+}
+
+/// Pushes/inserts committed before the deterministic kill-point children
+/// arm `METALL_KILL_POINT` (enough to leave the vec at cap 64 and the
+/// map several grows past its initial table).
+const KPOINT_BASE: u64 = 50;
+
+/// "crash-container" child: one `PVec`, one `PHashMapU64` and one
+/// `BankedAdjacency` mutate in lock-step — push `op`, insert key `op`,
+/// link edge `(op % 64) → op` — under the watermark-driven background
+/// flusher, until a timer SIGKILL lands at an arbitrary instant. Every
+/// op routes through the op log, so the parent can assert an exact
+/// committed-prefix oracle over all three containers.
+fn crash_container_child(dir: &Path, kill_at: u64) {
+    let store = dir.join("s");
+    let mut opts = ManagerOptions::small_for_tests();
+    opts.sync_watermark_bytes = opts.chunk_size;
+    opts.sync_interval_ms = 5;
+    let m = MetallManager::create_with(&store, opts).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("cv", v.offset()).unwrap();
+    let map = PHashMapU64::<u64>::create(&m).unwrap();
+    m.construct::<u64>("cm", map.offset()).unwrap();
+    let g = BankedAdjacency::create(&m, 4).unwrap();
+    m.construct::<u64>("cg", g.offset()).unwrap();
+    m.sync().unwrap(); // epoch 1: the empty containers are durable
+    let delay = std::time::Duration::from_millis(4 + kill_at % 60);
+    std::thread::spawn(move || {
+        std::thread::sleep(delay);
+        unsafe { libc::raise(libc::SIGKILL) };
+    });
+    for op in 0u64.. {
+        v.push(&m, container_vec_value(op)).unwrap();
+        map.insert(&m, op, container_map_value(op)).unwrap();
+        g.insert_edge(&m, op % 64, op).unwrap();
+    }
+    unreachable!("the timer SIGKILL is the only exit");
+}
+
+/// "kpoint-vec"/"kpoint-map" child: commit a base batch (epoch-synced),
+/// then arm the named `METALL_KILL_POINT` and keep mutating — the next
+/// capacity grow dies *between* publishing the new header and retiring
+/// the old extent, the exact window the pre-fix code left dangling.
+fn kill_point_child(dir: &Path, mode: &str) {
+    let store = dir.join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    match mode {
+        "kpoint-vec" => {
+            let v = PVec::<u64>::create(&m).unwrap();
+            m.construct::<u64>("cv", v.offset()).unwrap();
+            for i in 0..KPOINT_BASE {
+                v.push(&m, container_vec_value(i)).unwrap();
+            }
+            m.sync().unwrap();
+            std::env::set_var("METALL_KILL_POINT", "pvec_grow_retire");
+            for i in KPOINT_BASE.. {
+                v.push(&m, container_vec_value(i)).unwrap();
+            }
+        }
+        "kpoint-map" => {
+            let map = PHashMapU64::<u64>::create(&m).unwrap();
+            m.construct::<u64>("cm", map.offset()).unwrap();
+            for k in 0..KPOINT_BASE {
+                map.insert(&m, k, container_map_value(k)).unwrap();
+            }
+            m.sync().unwrap();
+            std::env::set_var("METALL_KILL_POINT", "pmap_grow_retire");
+            for k in KPOINT_BASE.. {
+                map.insert(&m, k, container_map_value(k)).unwrap();
+            }
+        }
+        other => panic!("unknown kill-point child mode {other}"),
+    }
+    unreachable!("the armed grow kill point must fire");
+}
+
+/// Kill-9 mid **container churn**: the op-log recovery contract. After
+/// `open_unclean` replays the log tail, the three containers must hold
+/// an exact *committed prefix* of the child's lock-step trace:
+///
+/// - the vec is `container_vec_value(0..lv)` exactly — no torn length,
+///   no dangling `data_off`, no lost committed push,
+/// - the map holds keys `0..lm` exactly (each with its oracle value,
+///   the next key absent — a half-keyed slot must have been rolled
+///   back), with `lm ∈ {lv-1, lv}` since the insert trails the push by
+///   at most one op,
+/// - the adjacency holds edges `(i % 64) → i` for `i < le` exactly,
+///   `nedges` matching the materialized edge count (the two-header
+///   `OP_EDGE` publish keeps counter and lists atomic),
+/// - `doctor` — which runs `validate_containers` — reports nothing,
+/// - the recovered containers keep working and re-seal cleanly.
+#[test]
+fn kill9_mid_container_churn_recovers_committed_prefix() {
+    use std::os::unix::process::ExitStatusExt;
+    let mut rng = Xoshiro256ss::new(0xC07A);
+    // at least one round must actually exercise replay/adoption —
+    // otherwise every kill landed on an epoch boundary and the test
+    // silently degraded into plain manifest recovery
+    let mut saw_replay = false;
+    for round in 0..4 {
+        let d = TempDir::new(&format!("crash-cont-{round}"));
+        let kill_at = rng.gen_range(200);
+        let status = spawn_child("crash-container", d.path(), kill_at);
+        assert_eq!(
+            status.signal(),
+            Some(libc::SIGKILL),
+            "round {round}: child must die by SIGKILL, got {status:?}"
+        );
+        let store = d.join("s");
+        assert!(!store.join("CLEAN").exists(), "round {round}");
+        assert!(MetallManager::open(&store).is_err(), "round {round}: dirty store refused");
+        let (lv, lm) = {
+            let m = MetallManager::open_unclean(&store)
+                .expect("open_unclean replays the container op log");
+            assert!(
+                m.doctor().unwrap().is_empty(),
+                "round {round}: container invariants hold after replay"
+            );
+            let st = m.oplog_stats();
+            saw_replay |= st.recovered_adopted + st.recovered_forward + st.recovered_rollback > 0;
+            assert_eq!(st.recovery_anomalies, 0, "round {round}: no unexplained header bytes");
+
+            let v = PVec::<u64>::from_offset(m.read(m.find::<u64>("cv").unwrap().unwrap()));
+            let map =
+                PHashMapU64::<u64>::from_offset(m.read(m.find::<u64>("cm").unwrap().unwrap()));
+            let g = BankedAdjacency::open(&m, m.read(m.find::<u64>("cg").unwrap().unwrap()));
+
+            let lv = v.len(&m) as u64;
+            for i in 0..lv {
+                assert_eq!(v.get(&m, i as usize), container_vec_value(i), "round {round} vec[{i}]");
+            }
+            let lm = map.len(&m) as u64;
+            assert!(
+                lm <= lv && lv <= lm + 1,
+                "round {round}: map len {lm} must trail vec len {lv} by at most one op"
+            );
+            for k in 0..lm {
+                assert_eq!(map.get(&m, k), Some(container_map_value(k)), "round {round} map[{k}]");
+            }
+            assert_eq!(map.get(&m, lm), None, "round {round}: uncommitted key rolled back");
+            let le = g.num_edges(&m);
+            assert!(
+                le <= lm && lm <= le + 1,
+                "round {round}: edge count {le} must trail map len {lm} by at most one op"
+            );
+            let mut edges = g.to_edge_list(&m);
+            assert_eq!(edges.len() as u64, le, "round {round}: nedges matches materialized edges");
+            edges.sort_by_key(|&(_, dst)| dst);
+            for (i, &(src, dst)) in edges.iter().enumerate() {
+                assert_eq!(dst, i as u64, "round {round}: edges are the exact trace prefix");
+                assert_eq!(src, dst % 64, "round {round}: edge {dst} hangs off its trace source");
+            }
+            // the recovered containers keep working: continue the trace
+            v.push(&m, container_vec_value(lv)).unwrap();
+            map.insert(&m, lm, container_map_value(lm)).unwrap();
+            m.close().unwrap();
+            (lv, lm)
+        };
+        let m = MetallManager::open(&store).expect("re-sealed store opens");
+        let v = PVec::<u64>::from_offset(m.read(m.find::<u64>("cv").unwrap().unwrap()));
+        assert_eq!(v.len(&m) as u64, lv + 1, "round {round}: post-recovery push persisted");
+        assert_eq!(v.get(&m, lv as usize), container_vec_value(lv));
+        let map = PHashMapU64::<u64>::from_offset(m.read(m.find::<u64>("cm").unwrap().unwrap()));
+        assert_eq!(map.get(&m, lm), Some(container_map_value(lm)));
+        assert!(m.doctor().unwrap().is_empty(), "round {round}: clean reopen audits clean");
+        m.close().unwrap();
+    }
+    assert!(
+        saw_replay,
+        "no round left op-log records to replay/adopt — every kill landed on an epoch cut"
+    );
+}
+
+/// Deterministic regression for the `PVec::grow` crash window: the child
+/// dies *between* publishing the grown header and retiring the old
+/// extent (`pvec_grow_retire`). The unsealed grow record's new image
+/// already matches the header, so recovery must roll it **forward** —
+/// adopt the new extent, release the retired one — leaving every
+/// committed push intact. Under the pre-fix op order (deallocate before
+/// publish) this exact kill left `data_off` dangling.
+#[test]
+fn kill_point_in_pvec_grow_retire_window_rolls_forward() {
+    use std::os::unix::process::ExitStatusExt;
+    let d = TempDir::new("kpoint-vec");
+    let status = spawn_child("kpoint-vec", d.path(), 0);
+    assert_eq!(status.signal(), Some(libc::SIGKILL), "armed kill point fires: {status:?}");
+    let store = d.join("s");
+    assert!(MetallManager::open(&store).is_err(), "dirty store refused");
+    let m = MetallManager::open_unclean(&store).unwrap();
+    assert!(m.doctor().unwrap().is_empty(), "recovered store audits clean");
+    let st = m.oplog_stats();
+    assert!(st.recovered_forward >= 1, "published-but-unsealed grow rolls forward: {st:?}");
+    assert!(st.recovered_released >= 1, "the forward-rolled grow releases its retired extent");
+    let v = PVec::<u64>::from_offset(m.read(m.find::<u64>("cv").unwrap().unwrap()));
+    // cap doubles at pushes 5/9/17/33/65 — the armed kill fires inside
+    // push 65's grow, after 64 committed pushes; push 65 itself never
+    // logged an intent
+    assert_eq!(v.len(&m), 64, "every committed push survives the mid-grow kill");
+    for i in 0..64u64 {
+        assert_eq!(v.get(&m, i as usize), container_vec_value(i), "vec[{i}]");
+    }
+    // the adopted extent is real: the vector keeps growing through it
+    for i in 64..200u64 {
+        v.push(&m, container_vec_value(i)).unwrap();
+    }
+    assert_eq!(v.len(&m), 200);
+    m.close().unwrap();
+    MetallManager::open(&store).expect("re-sealed store opens").close().unwrap();
+}
+
+/// Deterministic regression for the `PHashMap::grow` crash window
+/// (`pmap_grow_retire`): same shape as the vec test — the rehashed
+/// table is published, the commit seal never lands, the old table is
+/// never freed. Recovery rolls the grow forward; every committed insert
+/// must probe correctly through the adopted table.
+#[test]
+fn kill_point_in_pmap_grow_retire_window_rolls_forward() {
+    use std::os::unix::process::ExitStatusExt;
+    let d = TempDir::new("kpoint-map");
+    let status = spawn_child("kpoint-map", d.path(), 0);
+    assert_eq!(status.signal(), Some(libc::SIGKILL), "armed kill point fires: {status:?}");
+    let store = d.join("s");
+    assert!(MetallManager::open(&store).is_err(), "dirty store refused");
+    let m = MetallManager::open_unclean(&store).unwrap();
+    assert!(m.doctor().unwrap().is_empty(), "recovered store audits clean");
+    let st = m.oplog_stats();
+    assert!(st.recovered_forward >= 1, "published-but-unsealed grow rolls forward: {st:?}");
+    assert!(st.recovered_released >= 1, "the forward-rolled grow releases the old table");
+    let map = PHashMapU64::<u64>::from_offset(m.read(m.find::<u64>("cm").unwrap().unwrap()));
+    let lm = map.len(&m) as u64;
+    assert!(lm >= KPOINT_BASE, "the synced base batch survives, len {lm}");
+    for k in 0..lm {
+        assert_eq!(map.get(&m, k), Some(container_map_value(k)), "map[{k}]");
+    }
+    assert_eq!(map.get(&m, lm), None, "the grow-triggering insert never logged an intent");
+    // the adopted table is real: inserts keep landing in it
+    for k in lm..lm + 100 {
+        map.insert(&m, k, container_map_value(k)).unwrap();
+    }
+    assert_eq!(map.len(&m) as u64, lm + 100);
+    m.close().unwrap();
+    MetallManager::open(&store).expect("re-sealed store opens").close().unwrap();
 }
 
 /// Kill while a large multi-chunk write is in flight: the CLEAN protocol
