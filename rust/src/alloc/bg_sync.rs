@@ -117,13 +117,22 @@
 //! drains the queue), join both threads, and only then run the inline
 //! close sync.
 //!
-//! I/O *errors* (as opposed to panics) are not fatal: a failed cut or
-//! commit re-marks everything it cleared
-//! ([`ManagerCore::abort_epoch`]), a commit failure aborts every *later*
-//! queued epoch too (their manifests would carry forward section files
-//! the failed epoch never durably referenced), the merged error span is
-//! recorded so exactly the covered tickets see it, and the next flush
-//! retries with exponential backoff.
+//! I/O *errors* (as opposed to panics) are classified
+//! ([`crate::storage::faults::classify`]) rather than uniformly fatal:
+//! a **transiently** failed cut or commit re-marks everything it
+//! cleared ([`ManagerCore::abort_epoch`]), a commit failure aborts
+//! every *later* queued epoch too (their manifests would carry forward
+//! section files the failed epoch never durably referenced), the
+//! merged error span is recorded so exactly the covered tickets see
+//! it, and the next flush retries with exponential backoff. A
+//! **permanently** classified error (EROFS/ENODEV/ENXIO/EBADF), or
+//! transients repeated past
+//! [`super::manager::ManagerOptions::sync_fail_limit`] consecutive
+//! rounds, instead **wounds** the manager
+//! ([`ManagerCore::wound`]): the store flips to degraded read-only,
+//! the engine parks ([`SyncEngine::park`] — dead-engine semantics with
+//! the wound as the attributed reason), and `close()` refuses the
+//! CLEAN marker.
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -134,6 +143,7 @@ use std::time::{Duration, Instant};
 
 use crate::alloc::manager::{ManagerCore, PreparedEpoch};
 use crate::error::{Error, Result};
+use crate::storage::faults::FaultClass;
 
 /// Error spans kept for ticket waiters; beyond this many *failed*
 /// flushes, the oldest spans are evicted (a ticket can only outlive that
@@ -369,6 +379,13 @@ pub(crate) struct SyncEngine {
     depth: usize,
     /// Does the adaptive value arm the watermark trigger?
     adaptive: bool,
+    /// Consecutive failed flush rounds before the manager is wounded
+    /// (degraded read-only); 0 = never auto-wound on transients.
+    /// Permanently-classified errors wound regardless.
+    fail_limit: u64,
+    /// Consecutive failed flush rounds so far (reset by any success or
+    /// no-op round).
+    consec_failures: AtomicU64,
     /// Current adaptive watermark (0 until enough samples).
     adaptive_wm: AtomicU64,
     /// EWMA'd effective bandwidth for stats export (bytes/sec).
@@ -409,6 +426,7 @@ impl SyncEngine {
         interval_ms: u64,
         pipeline_depth: usize,
         adaptive: bool,
+        fail_limit: u64,
     ) -> Self {
         Self {
             target: Mutex::new(Weak::new()),
@@ -436,6 +454,8 @@ impl SyncEngine {
             interval_ms: AtomicU64::new(interval_ms),
             depth: pipeline_depth.max(1),
             adaptive,
+            fail_limit,
+            consec_failures: AtomicU64::new(0),
             adaptive_wm: AtomicU64::new(0),
             measured_bw_bps: AtomicU64::new(0),
             ctl: Mutex::new(AdaptiveCtl { ewma_bw: 0.0, ewma_delay: 0.0, samples: 0 }),
@@ -794,6 +814,48 @@ impl SyncEngine {
         self.retry_ms.store((r.max(25) * 2).min(5000), Ordering::Relaxed);
     }
 
+    /// Park the engine on behalf of a wounded manager: both threads
+    /// drain what they already hold and exit, every waiter (tickets,
+    /// stalled writers) is woken with the reason attributed, and all
+    /// subsequent `request()`/`wait_for()`/`shutdown_and_join()` calls
+    /// error — so `close()` refuses the CLEAN marker. Reuses the dead
+    /// channel: a parked engine behaves exactly like one whose thread
+    /// died, except the reason names the wound instead of a panic.
+    pub(crate) fn park(&self, reason: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.dead.is_none() {
+            st.dead = Some(reason);
+        }
+        drop(st);
+        self.done_cv.notify_all();
+        self.work_cv.notify_all();
+        self.commit_cv.notify_all();
+    }
+
+    /// Classify one failed flush/commit round and decide whether the
+    /// manager must flip to degraded read-only: immediately for a
+    /// [`FaultClass::Permanent`] error (the backend is gone), or after
+    /// [`Self::fail_limit`] consecutive transient failures (the
+    /// existing backoff retried and the backend never came back).
+    /// Returns the wound reason; the caller invokes `mgr.wound()` with
+    /// it **outside** the engine state lock (wound parks the engine,
+    /// which re-takes it).
+    fn note_round_failure(&self, mgr: &ManagerCore, e: &Error) -> Option<String> {
+        let consec = self.consec_failures.fetch_add(1, Ordering::Relaxed) + 1;
+        let class = crate::storage::faults::classify(e);
+        mgr.count_flush_failure(class);
+        match class {
+            FaultClass::Permanent => Some(format!("permanent backend failure: {e}")),
+            FaultClass::Transient if self.fail_limit > 0 && consec >= self.fail_limit => {
+                Some(format!(
+                    "{consec} consecutive failed flush rounds (limit {}), last: {e}",
+                    self.fail_limit
+                ))
+            }
+            FaultClass::Transient => None,
+        }
+    }
+
     /// The flusher thread body: decide a trigger, wait for a pipeline
     /// slot, take one consistent cut, hand it to the committer. Holds a
     /// strong `Arc` for its whole life; exits on shutdown (after every
@@ -895,6 +957,7 @@ impl SyncEngine {
                 mgr.prepare_epoch()
             }));
             let mut noop = false;
+            let mut wound_reason: Option<String> = None;
             let mut st = eng.state.lock().unwrap();
             match result {
                 Ok(cut) => {
@@ -912,6 +975,7 @@ impl SyncEngine {
                             // nothing dirty: requests up to `covered` are
                             // durable once every in-flight epoch lands
                             eng.retry_ms.store(0, Ordering::Relaxed);
+                            eng.consec_failures.store(0, Ordering::Relaxed);
                             noop = true;
                             if st.in_flight() == 0 {
                                 st.completed = st.completed.max(covered);
@@ -922,6 +986,7 @@ impl SyncEngine {
                         Err(e) => {
                             eng.flush_failures.fetch_add(1, Ordering::Relaxed);
                             eng.bump_retry();
+                            wound_reason = eng.note_round_failure(&mgr, &e);
                             // prepare_epoch re-marked everything it had
                             // cleared; record the span so exactly the
                             // generations this round picked up see the
@@ -954,6 +1019,11 @@ impl SyncEngine {
                 }
             }
             drop(st);
+            if let Some(reason) = wound_reason {
+                // parks the engine: the loop's next pass sees dead and
+                // exits; the committer drains its queue first
+                mgr.wound(reason);
+            }
             if noop {
                 // outside the state lock: the counter update takes
                 // manager-side locks
@@ -998,12 +1068,14 @@ impl SyncEngine {
             // epochs run after release (they take allocator locks).
             let mut aborted: Vec<PreparedEpoch> = Vec::new();
             let mut died = false;
+            let mut wound_reason: Option<String> = None;
             {
                 let mut st = eng.state.lock().unwrap();
                 st.committing = None;
                 match result {
                     Ok(Ok(())) => {
                         eng.retry_ms.store(0, Ordering::Relaxed);
+                        eng.consec_failures.store(0, Ordering::Relaxed);
                         eng.epochs_committed.fetch_add(1, Ordering::Relaxed);
                         // last_sync describes this commit (written by
                         // commit_epoch just before returning Ok)
@@ -1023,6 +1095,7 @@ impl SyncEngine {
                     Ok(Err(e)) => {
                         eng.flush_failures.fetch_add(1, Ordering::Relaxed);
                         eng.bump_retry();
+                        wound_reason = eng.note_round_failure(&mgr, &e);
                         // commit_epoch aborted this cut; every *later*
                         // queued epoch must abort too — committing it
                         // would carry forward section files this failed
@@ -1060,6 +1133,12 @@ impl SyncEngine {
             }
             for p in &aborted {
                 mgr.abort_epoch(p);
+            }
+            if let Some(reason) = wound_reason {
+                // outside the state lock (wound parks the engine). The
+                // failed epoch and everything queued behind it were
+                // already aborted above, so nothing is abandoned.
+                mgr.wound(reason);
             }
             eng.done_cv.notify_all();
             eng.work_cv.notify_all();

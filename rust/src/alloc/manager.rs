@@ -94,7 +94,7 @@ use std::collections::{BTreeSet, HashMap, HashSet};
 use std::ops::Deref;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 use std::time::Instant;
 
 use crate::alloc::bg_sync::{BgSyncStats, SyncEngine, SyncTicket};
@@ -115,6 +115,7 @@ use crate::containers::oplog::{self, OpLogStats, OpRecord, OpToken, RecordState}
 use crate::error::{Error, Result};
 use crate::numa::Topology;
 use crate::storage::bsmmap::BsMsync;
+use crate::storage::faults::FaultClass;
 use crate::storage::mmap::page_size;
 use crate::storage::netfs::SimNetFs;
 use crate::storage::pagemap;
@@ -124,6 +125,12 @@ use crate::storage::segment::{SegmentOptions, SegmentStorage};
 const META_MAGIC: &[u8; 8] = b"METALLV1";
 const MGMT_MAGIC: &[u8; 8] = b"METALLMG";
 const CLEAN_MARKER: &str = "CLEAN";
+/// Advisory marker a **wounded** manager drops in the store directory
+/// (best-effort: the backend just failed). `metall doctor` reads it to
+/// report the degradation cross-process; any successful read-write
+/// open removes it — recovery from the last committed manifest is what
+/// resolves a wound, and that is exactly what a rw open performs.
+pub const WOUNDED_MARKER: &str = "WOUNDED";
 /// Inter-process store lock file (held via `flock` for the lifetime of
 /// a manager: exclusive by writers, shared by read-only opens).
 const STORE_LOCK: &str = "LOCK";
@@ -200,6 +207,16 @@ pub struct ManagerOptions {
     /// NVMe stores flush eagerly, Lustre stores batch up to what one
     /// in-flight epoch can absorb. `false` pins the configured value.
     pub sync_watermark_adaptive: bool,
+    /// Consecutive failed background flush rounds tolerated before the
+    /// manager **wounds** itself (flips to degraded read-only; see the
+    /// module-level "Error taxonomy & degraded mode" notes). Transient
+    /// failures (EIO/EAGAIN/ENOSPC/…) below the limit are retried with
+    /// the engine's exponential backoff and never surface on the
+    /// mutation path; permanently classified errors
+    /// (EROFS/ENODEV/ENXIO/EBADF) wound immediately regardless. `0`
+    /// disables the consecutive-transient wound (permanent errors still
+    /// wound). Default 16.
+    pub sync_fail_limit: usize,
     /// Simulated-backend profile name (`"lustre"`, `"vast"`, `"nvme"`,
     /// `"optane"`, case-insensitive; see [`crate::storage::netfs`]).
     /// When set, the sync path — data-range msync, section writes, and
@@ -230,6 +247,7 @@ impl Default for ManagerOptions {
             sync_ceiling_bytes: 0,
             sync_pipeline_depth: 0,
             sync_watermark_adaptive: true,
+            sync_fail_limit: 16,
             netfs_profile: None,
             netfs_sleep_scale: 0.0,
         }
@@ -296,7 +314,7 @@ impl ManagerOptions {
     /// fully disabled engine: no triggers, never started).
     fn sync_engine(&self, read_only: bool) -> SyncEngine {
         if read_only {
-            return SyncEngine::new(0, 0, 0, 1, false);
+            return SyncEngine::new(0, 0, 0, 1, false, 0);
         }
         SyncEngine::new(
             self.sync_watermark_bytes as u64,
@@ -304,6 +322,7 @@ impl ManagerOptions {
             self.sync_interval_ms,
             self.resolved_pipeline_depth(),
             self.sync_watermark_adaptive,
+            self.sync_fail_limit as u64,
         )
     }
 
@@ -650,12 +669,44 @@ impl OpLogDram {
     }
 }
 
+/// Failure-health counters behind [`ManagerCore::health_stats`].
+#[derive(Default)]
+struct HealthCounters {
+    /// Background flush/commit rounds that failed with a transiently
+    /// classified error (retried by the engine's backoff).
+    transient_failures: AtomicU64,
+    /// … with a permanently classified error (each one wounds).
+    permanent_failures: AtomicU64,
+    /// Segment extensions rolled back on the allocation path (reserved
+    /// chunk ids returned to the free pool; ENOSPC surfaces as a clean
+    /// `Error::Alloc` and a smaller allocation can still succeed).
+    extend_rollbacks: AtomicU64,
+}
+
+/// Failure-health snapshot ([`ManagerCore::health_stats`]), exported as
+/// `alloc.faults.*` / `alloc.health.degraded` by
+/// [`crate::coordinator::metrics::record_health_stats`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    /// Background flush rounds failed with a transient classification.
+    pub transient_failures: u64,
+    /// Background flush rounds failed with a permanent classification.
+    pub permanent_failures: u64,
+    /// Allocation-path segment extensions rolled back (ENOSPC etc.).
+    pub extend_rollbacks: u64,
+    /// Is the manager wounded (degraded read-only)?
+    pub degraded: bool,
+    /// The originating failure when wounded.
+    pub degraded_reason: Option<String>,
+}
+
 /// Cumulative op-log counters (mirrored into [`OpLogStats`]).
 #[derive(Default)]
 struct OpLogCounters {
     appended: AtomicU64,
     committed: AtomicU64,
     forced_syncs: AtomicU64,
+    forced_sync_errors: AtomicU64,
     recovered_forward: AtomicU64,
     recovered_rollback: AtomicU64,
     recovered_adopted: AtomicU64,
@@ -767,6 +818,13 @@ pub struct ManagerCore {
     /// Background sync engine (flusher thread, epoch tickets,
     /// watermark/interval triggers, backpressure).
     bg: SyncEngine,
+    /// Wound latch: set (once, first failure wins) when a permanent
+    /// backend failure flips this manager to degraded read-only. The
+    /// payload is the originating failure, echoed by every subsequent
+    /// [`Error::Degraded`]. See [`Self::wound`].
+    wounded: OnceLock<String>,
+    /// Failure-health counters ([`Self::health_stats`]).
+    health: HealthCounters,
     /// Container op-log ring state (see [`OpLogDram`]).
     oplog: Mutex<OpLogDram>,
     oplog_counters: OpLogCounters,
@@ -1284,6 +1342,8 @@ impl ManagerCore {
             dirty_data: DirtyChunkSet::new(segment.vm_len() / opts.chunk_size + 1),
             netfs,
             last_sync: Mutex::new(SyncStats::default()),
+            wounded: OnceLock::new(),
+            health: HealthCounters::default(),
             oplog: Mutex::new(OpLogDram::absent()),
             oplog_counters: OpLogCounters::default(),
             oplog_validate_floor: AtomicU64::new(0),
@@ -1440,6 +1500,8 @@ impl ManagerCore {
             dirty_data: DirtyChunkSet::new(segment.vm_len() / opts.chunk_size + 1),
             netfs,
             last_sync: Mutex::new(SyncStats::default()),
+            wounded: OnceLock::new(),
+            health: HealthCounters::default(),
             oplog: Mutex::new(OpLogDram::absent()),
             oplog_counters: OpLogCounters::default(),
             oplog_validate_floor: AtomicU64::new(0),
@@ -1498,6 +1560,10 @@ impl ManagerCore {
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
                 Err(e) => return Err(Error::io(&p, e)),
             }
+            // A fresh read-write epoch starts healthy: clear any advisory
+            // WOUNDED breadcrumb a previous degraded run left behind
+            // (best-effort — it is advisory, recovery never trusts it).
+            let _ = std::fs::remove_file(mgr.dir.join(WOUNDED_MARKER));
         }
         Ok(mgr)
     }
@@ -1566,6 +1632,9 @@ impl ManagerCore {
         if self.read_only {
             return Ok(SyncTicket::completed());
         }
+        if let Some(reason) = self.wounded.get() {
+            return Err(Error::Degraded(reason.clone()));
+        }
         let gen = self.bg.request()?;
         Ok(SyncTicket::pending(&self.bg, gen))
     }
@@ -1587,6 +1656,72 @@ impl ManagerCore {
     /// [`crate::coordinator::metrics::record_bg_sync_stats`].
     pub fn bg_sync_stats(&self) -> BgSyncStats {
         self.bg.stats()
+    }
+
+    // --------------------------------------------- wounded / degraded --
+
+    /// Flip the manager into **degraded read-only** after a permanent
+    /// backend failure (or too many consecutive transient ones — the
+    /// engine's call, see [`SyncEngine`]'s classification). First caller
+    /// wins; repeat wounds are no-ops. Ordering matters:
+    ///
+    /// 1. The reason is published (`OnceLock::set`) so every mutating
+    ///    API ([`Self::check_writable`], [`Self::sync_async`]) starts
+    ///    returning [`Error::Degraded`] immediately.
+    /// 2. A best-effort advisory `WOUNDED` breadcrumb is dropped in the
+    ///    store directory for `metall doctor` — written with a *plain*
+    ///    `fs::write`, deliberately outside the fault-injection sites:
+    ///    when the backend is the thing that failed, the breadcrumb is
+    ///    allowed to fail too.
+    /// 3. The background engine is parked: in-flight tickets resolve
+    ///    with the wound as their attribution, the flusher and committer
+    ///    drain what they hold and exit.
+    ///
+    /// Reads are untouched — the mapped segment and the last committed
+    /// manifest stay valid, and live [`readers::ReaderManager`] attaches
+    /// keep serving the last committed epoch.
+    pub(crate) fn wound(&self, reason: String) {
+        if self.wounded.set(reason.clone()).is_err() {
+            return; // already wounded; first reason stands
+        }
+        let _ = std::fs::write(self.dir.join(WOUNDED_MARKER), reason.as_bytes());
+        self.bg.park(format!("manager wounded (degraded read-only): {reason}"));
+    }
+
+    /// Engine-side failure bookkeeping (one failed flush/commit round).
+    pub(crate) fn count_flush_failure(&self, class: FaultClass) {
+        match class {
+            FaultClass::Transient => {
+                self.health.transient_failures.fetch_add(1, Ordering::Relaxed)
+            }
+            FaultClass::Permanent => {
+                self.health.permanent_failures.fetch_add(1, Ordering::Relaxed)
+            }
+        };
+    }
+
+    /// Has a backend failure flipped this manager to degraded read-only?
+    pub fn is_degraded(&self) -> bool {
+        self.wounded.get().is_some()
+    }
+
+    /// The originating failure when degraded.
+    pub fn degraded_reason(&self) -> Option<String> {
+        self.wounded.get().cloned()
+    }
+
+    /// Failure-health snapshot: classified flush failures, allocation
+    /// rollbacks, and the degraded flag. Exported as `alloc.faults.*` /
+    /// `alloc.health.degraded` by
+    /// [`crate::coordinator::metrics::record_health_stats`].
+    pub fn health_stats(&self) -> HealthStats {
+        HealthStats {
+            transient_failures: self.health.transient_failures.load(Ordering::Relaxed),
+            permanent_failures: self.health.permanent_failures.load(Ordering::Relaxed),
+            extend_rollbacks: self.health.extend_rollbacks.load(Ordering::Relaxed),
+            degraded: self.is_degraded(),
+            degraded_reason: self.degraded_reason(),
+        }
     }
 
     /// Estimated un-synced application-data bytes (the watermark input):
@@ -1612,6 +1747,9 @@ impl ManagerCore {
     pub(crate) fn sync_now(&self) -> Result<()> {
         if self.read_only {
             return Ok(());
+        }
+        if let Some(reason) = self.wounded.get() {
+            return Err(Error::Degraded(reason.clone()));
         }
         let _gate = self.bg.gate();
         match self.prepare_epoch()? {
@@ -2349,6 +2487,14 @@ impl ManagerCore {
         if self.closed.swap(true, Ordering::SeqCst) || self.read_only {
             return Ok(());
         }
+        if let Some(reason) = self.wounded.get() {
+            // A wounded store must NOT earn the CLEAN marker: the last
+            // committed manifest is the truth, and the next open has to
+            // take the recovery path to it. Join the parked engine
+            // threads, then surface the wound.
+            let _ = self.bg.shutdown_and_join();
+            return Err(Error::Degraded(reason.clone()));
+        }
         self.bg.shutdown_and_join()?;
         // The process is ending: cache warmth is moot, so drain the
         // per-core caches fully — the closed image is canonical (every
@@ -2589,7 +2735,17 @@ impl ManagerCore {
             // A data-only epoch does not advance the horizon (no manifest
             // commit) — dirty the name section so this sync commits one.
             self.names.lock().unwrap().mark_dirty();
-            self.sync()?;
+            // A failed forced sync (fault-stalled manifest commit) is
+            // tolerated here: count it and retry — after three attempts
+            // the ring-full contract above reports the stall. A wounded
+            // manager is the exception: its flushes can never succeed,
+            // so surface the degradation immediately.
+            if let Err(e) = self.sync() {
+                if matches!(e, Error::Degraded(_)) {
+                    return Err(e);
+                }
+                self.oplog_counters.forced_sync_errors.fetch_add(1, Ordering::Relaxed);
+            }
         };
         rec.seq = seq;
         rec.commit_crc = 0;
@@ -3152,6 +3308,7 @@ impl ManagerCore {
             appended: c.appended.load(Ordering::Relaxed),
             committed: c.committed.load(Ordering::Relaxed),
             forced_syncs: c.forced_syncs.load(Ordering::Relaxed),
+            forced_sync_errors: c.forced_sync_errors.load(Ordering::Relaxed),
             recovered_forward: c.recovered_forward.load(Ordering::Relaxed),
             recovered_rollback: c.recovered_rollback.load(Ordering::Relaxed),
             recovered_adopted: c.recovered_adopted.load(Ordering::Relaxed),
@@ -3286,6 +3443,9 @@ impl ManagerCore {
         if self.read_only {
             return Err(Error::InvalidOp("datastore is open read-only".into()));
         }
+        if let Some(reason) = self.wounded.get() {
+            return Err(Error::Degraded(reason.clone()));
+        }
         Ok(())
     }
 
@@ -3384,6 +3544,7 @@ impl ManagerCore {
         };
         if let Err(e) = self.segment.extend_to((chunk as usize + 1) * cs) {
             self.chunks.write().unwrap().free_small_chunk_on(chunk, shard as u32);
+            self.health.extend_rollbacks.fetch_add(1, Ordering::Relaxed);
             return Err(e);
         }
         sh.stats.fresh_chunks.fetch_add(1, Ordering::Relaxed);
@@ -3471,6 +3632,7 @@ impl ManagerCore {
         };
         if let Err(e) = self.segment.extend_to((head + n) as usize * cs) {
             self.chunks.write().unwrap().free_large(head);
+            self.health.extend_rollbacks.fetch_add(1, Ordering::Relaxed);
             return Err(e);
         }
         Ok(head as u64 * cs as u64)
@@ -3883,6 +4045,11 @@ impl ManagerCore {
     pub fn doctor(&self) -> Result<Vec<String>> {
         let _gate = self.bg.gate();
         let mut findings = Vec::new();
+        if let Some(reason) = self.wounded.get() {
+            findings.push(format!(
+                "wounded (degraded read-only after backend failure): {reason}"
+            ));
+        }
         if let Err(e) = self.validate_consistency() {
             findings.push(format!("management data: {e}"));
         }

@@ -48,11 +48,11 @@
 
 use std::collections::{HashMap, HashSet};
 use std::fs::{self, File};
-use std::io::Write as _;
 use std::ops::Range;
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::storage::faults;
 
 const MANIFEST_MAGIC: &[u8; 8] = b"METALLMF";
 const MANIFEST_VERSION: u32 = 1;
@@ -261,7 +261,10 @@ impl Manifest {
 /// fsync a directory so renames/creates inside it are durable (on Linux a
 /// directory opens read-only and `fsync` flushes its dirents).
 pub fn fsync_dir(dir: &Path) -> Result<()> {
-    File::open(dir).and_then(|f| f.sync_all()).map_err(|e| Error::io(dir, e))
+    faults::check(faults::Site::DirFsync)
+        .and_then(|()| File::open(dir))
+        .and_then(|f| f.sync_all())
+        .map_err(|e| Error::io(dir, e))
 }
 
 /// Write `dir/name` and fsync the file (NOT the directory — callers batch
@@ -282,9 +285,12 @@ pub fn write_section_file_charged(
     netfs: Option<&crate::storage::netfs::SimNetFs>,
 ) -> Result<()> {
     let path = dir.join(name);
+    faults::check(faults::Site::Create).map_err(|e| Error::io(&path, e))?;
     let mut f = File::create(&path).map_err(|e| Error::io(&path, e))?;
-    f.write_all(bytes).map_err(|e| Error::io(&path, e))?;
-    f.sync_all().map_err(|e| Error::io(&path, e))?;
+    faults::write_full(&mut f, bytes, faults::Site::Write).map_err(|e| Error::io(&path, e))?;
+    faults::check(faults::Site::Fsync)
+        .and_then(|()| f.sync_all())
+        .map_err(|e| Error::io(&path, e))?;
     if let Some(fs) = netfs {
         fs.charge_metadata(1);
         fs.charge_io(1, bytes.len() as u64, 1);
@@ -317,12 +323,18 @@ pub fn commit_manifest_charged(
     let bytes = m.serialize();
     let tmp = dir.join(manifest_tmp_name(m.epoch));
     {
+        faults::check(faults::Site::Create).map_err(|e| Error::io(&tmp, e))?;
         let mut f = File::create(&tmp).map_err(|e| Error::io(&tmp, e))?;
-        f.write_all(&bytes).map_err(|e| Error::io(&tmp, e))?;
-        f.sync_all().map_err(|e| Error::io(&tmp, e))?;
+        faults::write_full(&mut f, &bytes, faults::Site::Write)
+            .map_err(|e| Error::io(&tmp, e))?;
+        faults::check(faults::Site::Fsync)
+            .and_then(|()| f.sync_all())
+            .map_err(|e| Error::io(&tmp, e))?;
     }
     let fin = dir.join(manifest_file_name(m.epoch));
-    fs::rename(&tmp, &fin).map_err(|e| Error::io(&fin, e))?;
+    faults::check(faults::Site::Rename)
+        .and_then(|()| fs::rename(&tmp, &fin))
+        .map_err(|e| Error::io(&fin, e))?;
     fsync_dir(dir)?;
     if let Some(fs) = netfs {
         fs.charge_metadata(3);

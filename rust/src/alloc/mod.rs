@@ -268,6 +268,39 @@
 //! ([`crate::containers::oplog::OpLogStats`],
 //! [`ManagerCore::oplog_stats`]).
 //!
+//! ## Error taxonomy & degraded mode
+//!
+//! Backend failures on the durability path are **classified**, not
+//! uniformly fatal ([`crate::storage::faults::classify`]):
+//!
+//! - **Transient** (`EIO`, `EAGAIN`, `ENOSPC`, and anything
+//!   unclassifiable): the background engine keeps the failed round's
+//!   dirty flags, backs off (doubling retry interval, capped), and
+//!   re-cuts on the next trigger. Nothing is lost — the last committed
+//!   manifest stays the recovery point. `ENOSPC` on the *allocation*
+//!   path is fully rolled back at the call site instead: the reserved
+//!   chunk ids return to the free pool, the failure surfaces as a clean
+//!   [`crate::error::Error::Alloc`], and a smaller allocation can still
+//!   succeed ([`ManagerCore::health_stats`] counts the rollbacks).
+//!
+//! - **Permanent** (`EROFS`, `ENODEV`, `ENXIO`, `EBADF`) — or
+//!   [`ManagerOptions::sync_fail_limit`] *consecutive* transient
+//!   failures — **wounds** the manager (`ManagerCore::wound`): it flips
+//!   atomically to **degraded read-only**. Every mutating API
+//!   (`allocate`, `construct`, `sync`, …) returns
+//!   [`crate::error::Error::Degraded`] with the originating failure;
+//!   in-flight [`SyncTicket`]s resolve with the same attribution; the
+//!   background engine parks; live [`ReaderManager`] attaches keep
+//!   serving the last committed epoch (their side copies and manifests
+//!   are immutable); and `close()` refuses to write the `CLEAN` marker
+//!   so the next open takes the recovery path to the last committed
+//!   manifest. An advisory `WOUNDED` breadcrumb (best-effort, never
+//!   trusted by recovery) lets `metall doctor` report the state; any
+//!   successful read-write open clears it.
+//!
+//! The deterministic fault-injection layer behind the classification
+//! tests lives in [`crate::storage::faults`].
+//!
 //! Follow-on (ROADMAP): an interleave policy (`MPOL_INTERLEAVE`) for
 //! read-mostly large segments shared by threads on every node.
 
@@ -287,7 +320,8 @@ pub use api::{MetallHandle, SegmentAlloc};
 pub use bg_sync::{BgSyncStats, SyncTicket};
 pub use bin_dir::{ShardMap, ShardStatsSnapshot};
 pub use manager::{
-    AttachStats, ManagerCore, ManagerOptions, MetallManager, Persist, PlacementReport,
-    PlacementSource, ReaderManager, ShardPlacement, StatsSnapshot, SyncStats,
+    AttachStats, HealthStats, ManagerCore, ManagerOptions, MetallManager, Persist,
+    PlacementReport, PlacementSource, ReaderManager, ShardPlacement, StatsSnapshot, SyncStats,
+    WOUNDED_MARKER,
 };
 pub use object_cache::pin_thread_vcpu;

@@ -60,6 +60,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
+use crate::storage::faults;
 use crate::storage::reflink;
 use crate::storage::segment::SegmentStorage;
 
@@ -159,9 +160,9 @@ impl ReaderLease {
     }
 
     fn write_record(&mut self, epoch: u64) -> Result<()> {
-        use std::os::unix::fs::FileExt;
         let buf = encode_lease(epoch);
-        self.file.write_all_at(&buf, 0).map_err(|e| Error::io(&self.path, e))?;
+        faults::write_full_at(&self.file, &buf, 0, faults::Site::Lease)
+            .map_err(|e| Error::io(&self.path, e))?;
         // No fsync: cross-process visibility is page-cache-immediate,
         // and a reader crash makes the lease stale regardless of what
         // the record says.
@@ -316,6 +317,7 @@ pub(crate) fn write_side_copy(
         return Ok(reflink::CopyMethod::Fallback);
     }
     let tmp = dir.join(format!("{}.tmp{}", side_file_name(chunk, epoch), std::process::id()));
+    faults::check(faults::Site::Create).map_err(|e| Error::io(&tmp, e))?;
     let tf = OpenOptions::new()
         .read(true)
         .write(true)
@@ -333,7 +335,10 @@ pub(crate) fn write_side_copy(
             Error::Datastore(format!("side copy: chunk {chunk} has no backing file"))
         })??;
     drop(tf);
-    fs::rename(&tmp, &dst).map_err(|e| Error::io(&dst, e))?;
+    if let Err(e) = faults::check(faults::Site::Rename).and_then(|()| fs::rename(&tmp, &dst)) {
+        let _ = fs::remove_file(&tmp);
+        return Err(Error::io(&dst, e));
+    }
     Ok(method)
 }
 

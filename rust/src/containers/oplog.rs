@@ -507,6 +507,10 @@ pub struct OpLogStats {
     /// Ring-full forced syncs (writers waited for a manifest commit to
     /// advance the reclaim horizon).
     pub forced_syncs: u64,
+    /// … of which failed (a fault-stalled manifest commit). The append
+    /// retries anyway: after three failed attempts the ring-full
+    /// `InvalidOp` contract reports the stall to the caller.
+    pub forced_sync_errors: u64,
     /// Recovery: unsealed records rolled forward (re-sealed).
     pub recovered_forward: u64,
     /// Recovery: unsealed records rolled back (old images restored).

@@ -274,8 +274,43 @@ pub fn run(argv: &[String]) -> Result<i32> {
         }
         "doctor" => {
             let store = req(&args, "store")?;
-            let mgr = MetallManager::open_read_only(store).context("open datastore")?;
-            let report = mgr.doctor()?;
+            // The advisory WOUNDED breadcrumb is the cross-process signal
+            // that a previous owner degraded to read-only after a backend
+            // failure (the in-process flag dies with that owner). It is
+            // advisory — the store itself recovers to its last committed
+            // manifest — but worth surfacing loudly.
+            let wounded_reason =
+                std::fs::read_to_string(std::path::Path::new(store).join(crate::alloc::WOUNDED_MARKER))
+                    .ok()
+                    .map(|r| {
+                        format!(
+                            "previous owner wounded (degraded read-only after backend \
+                             failure): {}",
+                            r.trim()
+                        )
+                    });
+            let mgr = match MetallManager::open_read_only(store) {
+                Ok(mgr) => mgr,
+                // A wounded store refused its CLEAN marker, so the
+                // CLEAN-gated read-only open cannot audit it — report the
+                // wound (and the recovery route) instead of a bare error.
+                Err(e) => {
+                    if let Some(w) = wounded_reason {
+                        println!("WARN: {w}");
+                        println!(
+                            "WARN: store was not closed cleanly ({e}); reopen \
+                             read-write with open_unclean() to recover to the \
+                             last committed manifest"
+                        );
+                        return Ok(1);
+                    }
+                    return Err(e).context("open datastore");
+                }
+            };
+            let mut report = mgr.doctor()?;
+            if let Some(w) = wounded_reason {
+                report.insert(0, w);
+            }
             if report.is_empty() {
                 let audited = mgr.oplog_stats().validate_records;
                 println!("{store}: OK — management data consistent, all named \

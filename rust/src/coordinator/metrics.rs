@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use crate::alloc::bg_sync::BgSyncStats;
 use crate::alloc::bin_dir::ShardStatsSnapshot;
-use crate::alloc::manager::{AttachStats, PlacementReport, StatsSnapshot, SyncStats};
+use crate::alloc::manager::{AttachStats, HealthStats, PlacementReport, StatsSnapshot, SyncStats};
 use crate::containers::oplog::OpLogStats;
 
 /// A named set of monotonically increasing counters plus accumulated
@@ -178,12 +178,26 @@ pub fn record_oplog_stats(m: &Metrics, s: &OpLogStats) {
     m.add("alloc.oplog.appended", s.appended);
     m.add("alloc.oplog.committed", s.committed);
     m.add("alloc.oplog.forced_syncs", s.forced_syncs);
+    m.add("alloc.oplog.forced_sync_errors", s.forced_sync_errors);
     m.add("alloc.oplog.recovered_forward", s.recovered_forward);
     m.add("alloc.oplog.recovered_rollback", s.recovered_rollback);
     m.add("alloc.oplog.recovered_adopted", s.recovered_adopted);
     m.add("alloc.oplog.recovered_released", s.recovered_released);
     m.add("alloc.oplog.recovery_anomalies", s.recovery_anomalies);
     m.add("alloc.oplog.validate_records", s.validate_records);
+}
+
+/// Fold a manager's failure-health snapshot into `m`: classified flush
+/// failures and allocation-path rollbacks under `alloc.faults.*`, and
+/// the degraded flag as the 0/1 gauge `alloc.health.degraded`.
+/// [`HealthStats`] counters are cumulative over the manager's lifetime,
+/// so call this once per manager at report time — or feed deltas when
+/// sampling repeatedly.
+pub fn record_health_stats(m: &Metrics, s: &HealthStats) {
+    m.add("alloc.faults.transient_failures", s.transient_failures);
+    m.add("alloc.faults.permanent_failures", s.permanent_failures);
+    m.add("alloc.faults.extend_rollbacks", s.extend_rollbacks);
+    m.add("alloc.health.degraded", u64::from(s.degraded));
 }
 
 /// Fold one reader's [`AttachStats`] into `m` under `alloc.attach.*`.
@@ -396,6 +410,7 @@ mod tests {
             appended: 120,
             committed: 118,
             forced_syncs: 1,
+            forced_sync_errors: 1,
             recovered_forward: 2,
             recovered_rollback: 1,
             recovered_adopted: 3,
@@ -407,12 +422,34 @@ mod tests {
         assert_eq!(m.get("alloc.oplog.appended"), 120);
         assert_eq!(m.get("alloc.oplog.committed"), 118);
         assert_eq!(m.get("alloc.oplog.forced_syncs"), 1);
+        assert_eq!(m.get("alloc.oplog.forced_sync_errors"), 1);
         assert_eq!(m.get("alloc.oplog.recovered_forward"), 2);
         assert_eq!(m.get("alloc.oplog.recovered_rollback"), 1);
         assert_eq!(m.get("alloc.oplog.recovered_adopted"), 3);
         assert_eq!(m.get("alloc.oplog.recovered_released"), 2);
         assert_eq!(m.get("alloc.oplog.recovery_anomalies"), 0);
         assert_eq!(m.get("alloc.oplog.validate_records"), 40);
+    }
+
+    #[test]
+    fn health_bridge_exports_fault_counters_and_degraded_gauge() {
+        let m = Metrics::new();
+        let s = HealthStats {
+            transient_failures: 4,
+            permanent_failures: 1,
+            extend_rollbacks: 2,
+            degraded: true,
+            degraded_reason: Some("permanent backend failure: io".into()),
+        };
+        record_health_stats(&m, &s);
+        assert_eq!(m.get("alloc.faults.transient_failures"), 4);
+        assert_eq!(m.get("alloc.faults.permanent_failures"), 1);
+        assert_eq!(m.get("alloc.faults.extend_rollbacks"), 2);
+        assert_eq!(m.get("alloc.health.degraded"), 1);
+        // a healthy manager adds a zero gauge
+        record_health_stats(&m, &HealthStats::default());
+        assert_eq!(m.get("alloc.health.degraded"), 1);
+        assert_eq!(m.get("alloc.faults.transient_failures"), 4);
     }
 
     #[test]

@@ -45,6 +45,16 @@ pub enum Error {
     #[error("background sync error: {0}")]
     BgSync(String),
 
+    /// The manager was **wounded** by a permanent backend failure and
+    /// flipped to degraded read-only mode: committed data keeps
+    /// serving, every mutating API returns this, and `close()` refuses
+    /// the CLEAN marker so the next open replays recovery from the
+    /// last committed manifest. The payload is the originating
+    /// failure. See the "Error taxonomy & degraded mode" notes in
+    /// [`crate::alloc`] and [`crate::storage`].
+    #[error("datastore degraded (read-only after backend failure): {0}")]
+    Degraded(String),
+
     /// PJRT / XLA runtime errors.
     #[error("runtime error: {0}")]
     Runtime(String),

@@ -1,0 +1,555 @@
+//! Deterministic I/O fault injection (`FaultFs`): the standing
+//! robustness harness behind `it_faults.rs`.
+//!
+//! Every durability-relevant syscall site in the store — file creation,
+//! `write`/`pwrite` (including *short* writes), `fsync`, directory
+//! fsync, `msync`, `ftruncate`/`fallocate`, `rename`, `mmap`, reflink
+//! clones, and reader lease records — asks this layer for permission
+//! before performing the real operation. With no plan armed the check
+//! is one relaxed atomic load; with a plan armed every intercepted
+//! operation is counted (globally and per [`Site`]) and the k-th
+//! matching operation fails with the planned errno instead of running.
+//!
+//! Determinism is the whole point: the ALICE-style sweep first runs a
+//! workload in counting mode ([`arm_counting`]) to learn how many
+//! injectable operations it performs, then replays it once per index k
+//! with `FaultPlan { nth: k, .. }` armed and asserts the recovery
+//! oracles after each. Call sites that are normally parallel (the
+//! per-file msync fan-out) serialize themselves when a plan is armed
+//! ([`armed`]) so operation indices are stable across runs.
+//!
+//! The layer is process-global (faults must reach free functions in
+//! `mgmt_io`/`readers`/`reflink`, not just methods that could carry a
+//! handle) and always compiled — like
+//! [`crate::util::test_kill_point`], it is env-triggerable in child
+//! processes via `METALL_FAULT_PLAN` (`nth=K[;site=NAME][;kind=eio|
+//! enospc|eagain|short][;sticky=1]`), and costs one atomic load per
+//! I/O when disarmed.
+//!
+//! Besides injection, this module owns the **failure taxonomy** the
+//! hardened error paths share: [`classify`] sorts an [`Error`] into
+//! [`FaultClass::Transient`] (EIO/EAGAIN/EINTR/ENOSPC/timeouts —
+//! retried by the background engine with its existing backoff) versus
+//! [`FaultClass::Permanent`] (EROFS/ENODEV/ENXIO/EBADF — the backend
+//! is gone; the manager flips to wounded degraded read-only mode, see
+//! `alloc::manager`).
+
+use std::io;
+use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use crate::error::Error;
+
+/// Number of distinct injection sites (length of [`Site::ALL`]).
+pub const SITE_COUNT: usize = 10;
+
+/// One class of intercepted syscall. The sweep fails individual
+/// operations by *index*, but per-site streams let a targeted test pin
+/// a failure to, say, only manifest renames or only lease writes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// `open(O_CREAT | O_EXCL)` / `File::create` of segment chunk
+    /// files, section files, manifest temporaries, side-copy
+    /// temporaries.
+    Create = 0,
+    /// `write`/`pwrite` of file bytes (section files, manifest bodies,
+    /// pwrite-based segment imports). Short-write capable.
+    Write = 1,
+    /// `fsync`/`fdatasync` (`File::sync_all`).
+    Fsync = 2,
+    /// `fsync` of a *directory* (the rename-durability barrier).
+    DirFsync = 3,
+    /// `msync(MS_SYNC)` of segment ranges.
+    Msync = 4,
+    /// `ftruncate`/`fallocate` (`File::set_len` growing a segment
+    /// file) — the ENOSPC site.
+    Truncate = 5,
+    /// `rename(2)` (manifest commit, side-copy publish).
+    Rename = 6,
+    /// `mmap(MAP_FIXED)` of a segment file into the reservation.
+    Mmap = 7,
+    /// `FICLONERANGE`/`FICLONE` reflink clones and their pread/pwrite
+    /// fallback (epoch-side copies, snapshots).
+    Reflink = 8,
+    /// Reader lease-record `pwrite` (torn-lease injection).
+    Lease = 9,
+}
+
+impl Site {
+    pub const ALL: [Site; SITE_COUNT] = [
+        Site::Create,
+        Site::Write,
+        Site::Fsync,
+        Site::DirFsync,
+        Site::Msync,
+        Site::Truncate,
+        Site::Rename,
+        Site::Mmap,
+        Site::Reflink,
+        Site::Lease,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::Create => "create",
+            Site::Write => "write",
+            Site::Fsync => "fsync",
+            Site::DirFsync => "dirfsync",
+            Site::Msync => "msync",
+            Site::Truncate => "truncate",
+            Site::Rename => "rename",
+            Site::Mmap => "mmap",
+            Site::Reflink => "reflink",
+            Site::Lease => "lease",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Site> {
+        Site::ALL.iter().copied().find(|s| s.name() == name)
+    }
+}
+
+/// What the injected operation reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `EIO` — the canonical transient media error.
+    Eio,
+    /// `ENOSPC` — disk full (the `extend_to` hardening target).
+    Enospc,
+    /// `EAGAIN` — transient resource exhaustion.
+    Eagain,
+    /// Write sites only: write *half* the buffer for real, then fail
+    /// with `EIO` — a torn write that partially reached the disk. At
+    /// non-write sites this degrades to a plain `EIO`.
+    ShortWrite,
+}
+
+impl FaultKind {
+    fn errno(self) -> i32 {
+        match self {
+            FaultKind::Eio | FaultKind::ShortWrite => libc::EIO,
+            FaultKind::Enospc => libc::ENOSPC,
+            FaultKind::Eagain => libc::EAGAIN,
+        }
+    }
+
+    fn from_name(name: &str) -> Option<FaultKind> {
+        match name {
+            "eio" => Some(FaultKind::Eio),
+            "enospc" => Some(FaultKind::Enospc),
+            "eagain" => Some(FaultKind::Eagain),
+            "short" => Some(FaultKind::ShortWrite),
+            _ => None,
+        }
+    }
+}
+
+/// A deterministic failure schedule: fail the `nth` (1-based)
+/// intercepted operation of the selected stream.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    /// 1-based index into the operation stream; `0` never fires
+    /// (counting only).
+    pub nth: u64,
+    /// Restrict the stream to one site; `None` = every intercepted
+    /// operation in program order.
+    pub site: Option<Site>,
+    pub kind: FaultKind,
+    /// Keep failing every matching operation after the trigger — a
+    /// *permanently* failed backend. One-shot (transient glitch)
+    /// otherwise.
+    pub sticky: bool,
+}
+
+impl FaultPlan {
+    /// Fail the k-th operation of the global stream, one-shot.
+    pub fn nth_global(nth: u64, kind: FaultKind) -> Self {
+        FaultPlan { nth, site: None, kind, sticky: false }
+    }
+
+    /// Fail the k-th operation at one site.
+    pub fn nth_at(nth: u64, site: Site, kind: FaultKind) -> Self {
+        FaultPlan { nth, site: Some(site), kind, sticky: false }
+    }
+
+    /// Permanently fail a site starting at its k-th operation.
+    pub fn sticky_at(nth: u64, site: Site, kind: FaultKind) -> Self {
+        FaultPlan { nth, site: Some(site), kind, sticky: true }
+    }
+
+    /// Parse the `METALL_FAULT_PLAN` env format:
+    /// `nth=K[;site=NAME][;kind=eio|enospc|eagain|short][;sticky=1]`.
+    pub fn parse(spec: &str) -> Option<Self> {
+        let mut plan = FaultPlan { nth: 0, site: None, kind: FaultKind::Eio, sticky: false };
+        for part in spec.split(';').filter(|p| !p.is_empty()) {
+            let (k, v) = part.split_once('=')?;
+            match k.trim() {
+                "nth" => plan.nth = v.trim().parse().ok()?,
+                "site" => plan.site = Some(Site::from_name(v.trim())?),
+                "kind" => plan.kind = FaultKind::from_name(v.trim())?,
+                "sticky" => plan.sticky = v.trim() == "1" || v.trim() == "true",
+                _ => return None,
+            }
+        }
+        (plan.nth > 0).then_some(plan)
+    }
+}
+
+/// Counts observed between [`arm`]/[`arm_counting`] and [`disarm`] —
+/// the failure-site manifest the sweep publishes as a CI artifact.
+#[derive(Clone, Debug, Default)]
+pub struct FaultReport {
+    /// Every intercepted operation, program order.
+    pub ops: u64,
+    /// Per-site operation counts, indexed like [`Site::ALL`].
+    pub site_ops: [u64; SITE_COUNT],
+    /// Operations actually failed by the plan.
+    pub injected: u64,
+}
+
+#[derive(Default)]
+struct FaultState {
+    plan: Option<FaultPlan>,
+    report: FaultReport,
+    tripped: bool,
+    /// `Some(thread)`: only that thread's operations are intercepted
+    /// (and counted). `None`: every thread in the process — what the
+    /// dedicated `it_faults` binary uses so background engine threads
+    /// are covered; unit tests inside the shared lib test process use
+    /// the thread-scoped default so parallel unrelated tests neither
+    /// perturb the counters nor trip someone else's plan.
+    owner: Option<std::thread::ThreadId>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<FaultState> = Mutex::new(FaultState {
+    plan: None,
+    report: FaultReport { ops: 0, site_ops: [0; SITE_COUNT], injected: 0 },
+    tripped: false,
+    owner: None,
+});
+
+/// Arm a failure plan scoped to the **calling thread** (resets all
+/// counters). The scoping makes arming safe inside a parallel test
+/// harness; use [`arm_process_wide`] when background threads must be
+/// covered too.
+pub fn arm(plan: FaultPlan) {
+    arm_scoped(Some(plan), Some(std::thread::current().id()));
+}
+
+/// Arm a failure plan covering **every thread** in the process
+/// (background flusher/committer included). Callers must serialize
+/// with anything else doing I/O in the process.
+pub fn arm_process_wide(plan: FaultPlan) {
+    arm_scoped(Some(plan), None);
+}
+
+/// Count every interceptable operation of the calling thread without
+/// failing any — the dry run that sizes a single-threaded sweep.
+pub fn arm_counting() {
+    arm_scoped(None, Some(std::thread::current().id()));
+}
+
+/// Process-wide counting mode (the sweep's dry run: engine threads'
+/// operations count too).
+pub fn arm_counting_process_wide() {
+    arm_scoped(None, None);
+}
+
+fn arm_scoped(plan: Option<FaultPlan>, owner: Option<std::thread::ThreadId>) {
+    let mut st = STATE.lock().unwrap();
+    *st = FaultState { plan, owner, ..Default::default() };
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm and return what was observed.
+pub fn disarm() -> FaultReport {
+    ENABLED.store(false, Ordering::SeqCst);
+    let mut st = STATE.lock().unwrap();
+    let report = st.report.clone();
+    *st = FaultState::default();
+    report
+}
+
+/// Is a plan (or counting mode) armed? Parallel I/O fan-outs check
+/// this and run serially so operation indices stay deterministic.
+pub fn armed() -> bool {
+    maybe_arm_from_env();
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Serialize tests that arm the fault layer: the plan/counter state is
+/// one process-global slot, so two arming tests running on parallel
+/// harness threads would clobber each other. Every test that calls
+/// [`arm`]/[`arm_counting`]/… holds this guard for its whole body.
+#[doc(hidden)]
+pub fn test_serial_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Operations intercepted so far under the current arming.
+pub fn op_count() -> u64 {
+    STATE.lock().unwrap().report.ops
+}
+
+/// One-time env-var arming for child processes (`METALL_FAULT_PLAN`).
+fn maybe_arm_from_env() {
+    static ENV_ONCE: OnceLock<()> = OnceLock::new();
+    ENV_ONCE.get_or_init(|| {
+        if let Ok(spec) = std::env::var("METALL_FAULT_PLAN") {
+            if let Some(plan) = FaultPlan::parse(&spec) {
+                // a child process armed from the environment is dedicated
+                // to the experiment: cover all of its threads
+                arm_process_wide(plan);
+            }
+        }
+    });
+}
+
+/// What a write-capable site should do.
+enum WriteFate {
+    Pass,
+    /// Write only this prefix, then report the stashed error.
+    Short(usize),
+    Fail(io::Error),
+}
+
+/// The injected error is a plain `from_raw_os_error` so that
+/// `raw_os_error()` survives — the ENOSPC hardening in
+/// `SegmentStorage::extend_to` and [`classify_errno`] both key on the
+/// real errno, and a wrapped custom error would hide it.
+fn injected_error(kind: FaultKind, _site: Site) -> io::Error {
+    io::Error::from_raw_os_error(kind.errno())
+}
+
+fn intercept(site: Site, write_len: Option<usize>) -> WriteFate {
+    if !armed() {
+        return WriteFate::Pass;
+    }
+    let mut st = STATE.lock().unwrap();
+    if let Some(owner) = st.owner {
+        if owner != std::thread::current().id() {
+            return WriteFate::Pass;
+        }
+    }
+    st.report.ops += 1;
+    st.report.site_ops[site as usize] += 1;
+    let Some(plan) = st.plan else { return WriteFate::Pass };
+    if let Some(only) = plan.site {
+        if only != site {
+            return WriteFate::Pass;
+        }
+    }
+    let idx = match plan.site {
+        Some(_) => st.report.site_ops[site as usize],
+        None => st.report.ops,
+    };
+    let fire = if plan.sticky { idx >= plan.nth } else { idx == plan.nth && !st.tripped };
+    if !fire {
+        return WriteFate::Pass;
+    }
+    st.tripped = true;
+    st.report.injected += 1;
+    match (plan.kind, write_len) {
+        (FaultKind::ShortWrite, Some(len)) if len > 1 => WriteFate::Short(len / 2),
+        (kind, _) => WriteFate::Fail(injected_error(kind, site)),
+    }
+}
+
+/// Gate a non-write operation (fsync, rename, msync, truncate, mmap,
+/// reflink, create). `Ok(())` means "go ahead".
+pub fn check(site: Site) -> io::Result<()> {
+    match intercept(site, None) {
+        WriteFate::Fail(e) => Err(e),
+        _ => Ok(()),
+    }
+}
+
+/// Perform a full buffered write through the fault layer: passes the
+/// bytes through untouched normally, simulates a torn (short) write or
+/// fails outright when the armed plan says so.
+pub fn write_full<W: io::Write>(w: &mut W, buf: &[u8], site: Site) -> io::Result<()> {
+    match intercept(site, Some(buf.len())) {
+        WriteFate::Pass => w.write_all(buf),
+        WriteFate::Short(n) => {
+            w.write_all(&buf[..n])?;
+            Err(injected_error(FaultKind::ShortWrite, site))
+        }
+        WriteFate::Fail(e) => Err(e),
+    }
+}
+
+/// Positioned variant of [`write_full`] (`pwrite` sites).
+pub fn write_full_at(f: &std::fs::File, buf: &[u8], off: u64, site: Site) -> io::Result<()> {
+    match intercept(site, Some(buf.len())) {
+        WriteFate::Pass => f.write_all_at(buf, off),
+        WriteFate::Short(n) => {
+            f.write_all_at(&buf[..n], off)?;
+            Err(injected_error(FaultKind::ShortWrite, site))
+        }
+        WriteFate::Fail(e) => Err(e),
+    }
+}
+
+// ------------------------------------------------------ classification --
+
+/// Transient failures are retried (the background engine's existing
+/// backoff); permanent ones wound the manager into degraded read-only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultClass {
+    Transient,
+    Permanent,
+}
+
+/// Classify a raw errno. The permanent set is deliberately small and
+/// certain — "the backend is gone, retrying cannot help": read-only
+/// remounts, vanished devices, invalidated descriptors. Everything
+/// else (EIO flickers, EAGAIN, ENOSPC that an operator can free,
+/// unknown codes) is transient; *repeated* transient failures are
+/// promoted to permanent by the engine's consecutive-failure limit,
+/// not by this table.
+pub fn classify_errno(raw: i32) -> FaultClass {
+    match raw {
+        libc::EROFS | libc::ENODEV | libc::ENXIO | libc::EBADF => FaultClass::Permanent,
+        _ => FaultClass::Transient,
+    }
+}
+
+/// Classify a crate [`Error`] by walking to its underlying OS error,
+/// if any. Errors with no errno (logic errors, poisoned state)
+/// classify as transient — the consecutive-failure limit still
+/// catches a persistently failing path.
+pub fn classify(err: &Error) -> FaultClass {
+    let source = match err {
+        Error::Io { source, .. } => Some(source),
+        Error::Sys { source, .. } => Some(source),
+        _ => None,
+    };
+    match source.and_then(|s| s.raw_os_error()) {
+        Some(raw) => classify_errno(raw),
+        None => FaultClass::Transient,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    #[test]
+    fn disarmed_is_passthrough() {
+        let _g = test_serial_guard();
+        let _ = disarm();
+        assert!(check(Site::Fsync).is_ok());
+        let mut buf = Vec::new();
+        write_full(&mut buf, b"abc", Site::Write).unwrap();
+        assert_eq!(buf, b"abc");
+    }
+
+    #[test]
+    fn counting_mode_counts_without_failing() {
+        let _g = test_serial_guard();
+        arm_counting();
+        assert!(check(Site::Fsync).is_ok());
+        assert!(check(Site::Rename).is_ok());
+        assert!(check(Site::Fsync).is_ok());
+        let r = disarm();
+        assert_eq!(r.ops, 3);
+        assert_eq!(r.site_ops[Site::Fsync as usize], 2);
+        assert_eq!(r.site_ops[Site::Rename as usize], 1);
+        assert_eq!(r.injected, 0);
+    }
+
+    #[test]
+    fn nth_global_fires_once_then_passes() {
+        let _g = test_serial_guard();
+        arm(FaultPlan::nth_global(2, FaultKind::Eio));
+        assert!(check(Site::Msync).is_ok());
+        let err = check(Site::Fsync).unwrap_err();
+        assert_eq!(err.raw_os_error(), Some(libc::EIO));
+        assert!(check(Site::Fsync).is_ok(), "one-shot plan passes after firing");
+        let r = disarm();
+        assert_eq!((r.ops, r.injected), (3, 1));
+    }
+
+    #[test]
+    fn site_filtered_stream_ignores_other_sites() {
+        let _g = test_serial_guard();
+        arm(FaultPlan::nth_at(1, Site::Rename, FaultKind::Enospc));
+        assert!(check(Site::Fsync).is_ok());
+        assert!(check(Site::Msync).is_ok());
+        let err = check(Site::Rename).unwrap_err();
+        assert_eq!(err.raw_os_error(), Some(libc::ENOSPC));
+        let _ = disarm();
+    }
+
+    #[test]
+    fn sticky_plan_keeps_failing() {
+        let _g = test_serial_guard();
+        arm(FaultPlan::sticky_at(1, Site::Fsync, FaultKind::Eio));
+        assert!(check(Site::Fsync).is_err());
+        assert!(check(Site::Fsync).is_err());
+        assert!(check(Site::Write).is_ok(), "other sites unaffected");
+        let r = disarm();
+        assert_eq!(r.injected, 2);
+    }
+
+    #[test]
+    fn short_write_leaves_a_torn_prefix() {
+        let _g = test_serial_guard();
+        arm(FaultPlan::nth_at(1, Site::Write, FaultKind::ShortWrite));
+        let mut buf = Vec::new();
+        let err = write_full(&mut buf, &[7u8; 10], Site::Write).unwrap_err();
+        assert_eq!(err.raw_os_error(), Some(libc::EIO));
+        assert_eq!(buf.len(), 5, "half the buffer reached the 'disk'");
+        let _ = disarm();
+    }
+
+    #[test]
+    fn plan_parses_from_env_format() {
+        let p = FaultPlan::parse("nth=7;site=msync;kind=enospc;sticky=1").unwrap();
+        assert_eq!(p.nth, 7);
+        assert_eq!(p.site, Some(Site::Msync));
+        assert_eq!(p.kind, FaultKind::Enospc);
+        assert!(p.sticky);
+        assert!(FaultPlan::parse("nth=0").is_none(), "nth is 1-based");
+        assert!(FaultPlan::parse("bogus=1").is_none());
+        assert!(FaultPlan::parse("nth=3").is_some());
+    }
+
+    #[test]
+    fn classification_taxonomy() {
+        assert_eq!(classify_errno(libc::EIO), FaultClass::Transient);
+        assert_eq!(classify_errno(libc::EAGAIN), FaultClass::Transient);
+        assert_eq!(classify_errno(libc::ENOSPC), FaultClass::Transient);
+        assert_eq!(classify_errno(libc::EROFS), FaultClass::Permanent);
+        assert_eq!(classify_errno(libc::ENODEV), FaultClass::Permanent);
+        let e = Error::io("/x", io::Error::from_raw_os_error(libc::EROFS));
+        assert_eq!(classify(&e), FaultClass::Permanent);
+        assert_eq!(classify(&Error::Alloc("no errno".into())), FaultClass::Transient);
+    }
+
+    #[test]
+    fn write_full_at_short_write_is_positioned() {
+        let _g = test_serial_guard();
+        let dir = crate::util::tmp::TempDir::new("faults-wfa");
+        let path = dir.join("f");
+        let mut f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .unwrap();
+        f.write_all(&[0u8; 16]).unwrap();
+        arm(FaultPlan::nth_at(1, Site::Lease, FaultKind::ShortWrite));
+        let err = write_full_at(&f, &[9u8; 8], 4, Site::Lease).unwrap_err();
+        assert_eq!(err.raw_os_error(), Some(libc::EIO));
+        let _ = disarm();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[4..8], &[9u8; 4], "torn prefix landed at the offset");
+        assert_eq!(&bytes[8..12], &[0u8; 4], "tail never written");
+    }
+}

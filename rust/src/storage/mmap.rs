@@ -116,6 +116,8 @@ impl VmReservation {
         if populate {
             flags |= libc::MAP_POPULATE;
         }
+        crate::storage::faults::check(crate::storage::faults::Site::Mmap)
+            .map_err(|source| Error::Sys { call: "mmap(MAP_FIXED file)", source })?;
         let p = unsafe {
             libc::mmap(
                 self.base.add(at) as *mut libc::c_void,
@@ -164,6 +166,8 @@ impl Drop for VmReservation {
 /// `msync(MS_SYNC)` a range: flush dirty pages of a shared mapping to the
 /// backing file and wait for completion.
 pub fn msync(addr: *mut u8, len: usize) -> Result<()> {
+    crate::storage::faults::check(crate::storage::faults::Site::Msync)
+        .map_err(|source| Error::Sys { call: "msync", source })?;
     let rc = unsafe { libc::msync(addr as *mut libc::c_void, len, libc::MS_SYNC) };
     if rc != 0 {
         return Err(Error::sys("msync"));

@@ -15,6 +15,10 @@
 //!   and device profiles used by the Fig 5/6 reproduction and, via
 //!   [`crate::alloc::ManagerOptions::netfs_profile`], charged directly by
 //!   the sync path itself; see DESIGN.md §3 (substitutions).
+//! - [`faults`] — deterministic I/O fault injection (`FaultFs`): every
+//!   durability syscall site in this layer and above asks it for
+//!   permission, so the `it_faults.rs` ALICE-style sweep can fail the
+//!   k-th write/fsync/msync/rename/… of a workload and assert recovery.
 //!
 //! ## How the sync protocol uses this layer
 //!
@@ -106,6 +110,35 @@
 //! inode alive past `unlink`, which gives the protocol its last-ditch
 //! safety: even if a side file is collected the moment after a reader
 //! mapped it, the reader's pages stay valid until it detaches.
+//!
+//! ## Error taxonomy & degraded mode
+//!
+//! Every primitive in this layer reports failures with the real errno
+//! attached ([`crate::error::Error::Io`] /
+//! [`Error::Sys`](crate::error::Error::Sys)), because the layers above
+//! *classify* by it ([`faults::classify_errno`]):
+//!
+//! - **Transient** — `EIO`, `EAGAIN`, `EINTR`, `ENOSPC`, timeouts, and
+//!   every unknown errno. A failed background flush/commit round is
+//!   retried with the engine's exponential backoff; the mutation path
+//!   never sees these unless it explicitly waits on a sync ticket.
+//! - **ENOSPC on segment growth** is special-cased at its source:
+//!   [`segment::SegmentStorage::extend_to`] rolls its own partial work
+//!   back (created file removed, reservation stays intact) and
+//!   surfaces a clean [`Error::Alloc`](crate::error::Error::Alloc), so
+//!   an allocator caller releases its reserved chunk ids and a smaller
+//!   allocation can still succeed. A full disk is an allocation
+//!   failure, never a crash or a wound.
+//! - **Permanent** — `EROFS`, `ENODEV`, `ENXIO`, `EBADF`, or
+//!   transient failures repeated past the engine's consecutive-failure
+//!   limit. The manager **wounds** itself: it atomically flips to
+//!   degraded read-only, mutating APIs return
+//!   [`Error::Degraded`](crate::error::Error::Degraded), in-flight
+//!   sync tickets resolve with the failure attributed, the engine
+//!   parks, live reader attaches keep serving the last committed
+//!   epoch, and `close()` refuses the `CLEAN` marker (recovery replays
+//!   from the last complete manifest). See [`crate::alloc`] for the
+//!   API-level contract.
 
 pub mod mmap;
 pub mod segment;
@@ -113,3 +146,4 @@ pub mod pagemap;
 pub mod bsmmap;
 pub mod reflink;
 pub mod netfs;
+pub mod faults;

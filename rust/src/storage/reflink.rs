@@ -14,6 +14,7 @@ use std::os::unix::io::AsRawFd;
 use std::path::Path;
 
 use crate::error::{Error, Result};
+use crate::storage::faults;
 
 /// `FICLONE` ioctl request code (linux/fs.h: `_IOW(0x94, 9, int)`).
 const FICLONE: libc::c_ulong = 0x4004_9409;
@@ -40,6 +41,7 @@ pub enum CopyMethod {
 
 /// Copy `src` to `dst`, attempting a reflink clone first.
 pub fn copy_file(src: &Path, dst: &Path) -> Result<CopyMethod> {
+    faults::check(faults::Site::Reflink).map_err(|e| Error::io(dst, e))?;
     let sf = File::open(src).map_err(|e| Error::io(src, e))?;
     let df = OpenOptions::new()
         .write(true)
@@ -75,6 +77,8 @@ pub fn clone_file_range(
     dst: &File,
     dst_off: u64,
 ) -> Result<CopyMethod> {
+    faults::check(faults::Site::Reflink)
+        .map_err(|source| Error::Sys { call: "clone_file_range", source })?;
     let arg = FileCloneRange {
         src_fd: src.as_raw_fd() as i64,
         src_offset: src_off,

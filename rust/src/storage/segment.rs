@@ -17,6 +17,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::error::{Error, Result};
+use crate::storage::faults;
 use crate::storage::mmap::{self, page_size, Prot, Share, VmReservation};
 use crate::storage::netfs::SimNetFs;
 use crate::util::{align_up, div_ceil};
@@ -238,22 +239,47 @@ impl SegmentStorage {
         }
         for i in files.len()..want_files {
             let path = Self::file_path(&self.dir, i);
-            let f = OpenOptions::new()
+            faults::check(faults::Site::Create).map_err(|e| Error::io(&path, e))?;
+            let f = match OpenOptions::new()
                 .read(true)
                 .write(true)
                 .create_new(true)
                 .open(&path)
-                .map_err(|e| Error::io(&path, e))?;
-            f.set_len(self.opts.file_size as u64).map_err(|e| Error::io(&path, e))?;
-            self.vm.map_file(
-                i * self.opts.file_size,
-                &f,
-                0,
-                self.opts.file_size,
-                self.opts.prot,
-                self.opts.share,
-                false,
-            )?;
+            {
+                Ok(f) => f,
+                Err(e) => {
+                    // nothing of ours to roll back; account the files that
+                    // did complete before surfacing the failure
+                    self.mapped_len.store(files.len() * self.opts.file_size, Ordering::Release);
+                    return Err(enospc_to_alloc(Error::io(&path, e)));
+                }
+            };
+            // From here the file exists but is not yet usable: any failure
+            // of the ftruncate/mmap pair removes it again, so a retry (or
+            // a recovery scan) never meets a zero-length backing file —
+            // and the chunk reservation a failed allocation rolls back is
+            // matched by an equally clean segment.
+            let grown = faults::check(faults::Site::Truncate)
+                .map_err(|e| Error::io(&path, e))
+                .and_then(|()| {
+                    f.set_len(self.opts.file_size as u64).map_err(|e| Error::io(&path, e))
+                })
+                .and_then(|()| {
+                    self.vm.map_file(
+                        i * self.opts.file_size,
+                        &f,
+                        0,
+                        self.opts.file_size,
+                        self.opts.prot,
+                        self.opts.share,
+                        false,
+                    )
+                });
+            if let Err(e) = grown {
+                let _ = fs::remove_file(&path);
+                self.mapped_len.store(files.len() * self.opts.file_size, Ordering::Release);
+                return Err(enospc_to_alloc(e));
+            }
             files.push(f);
         }
         self.mapped_len.store(files.len() * self.opts.file_size, Ordering::Release);
@@ -269,24 +295,46 @@ impl SegmentStorage {
         }
         let n = self.num_files();
         let fsz = self.opts.file_size;
-        if !parallel || n <= 1 {
+        // With a fault plan armed the per-file fan-out runs as one serial
+        // msync so injected-operation indices stay deterministic.
+        if !parallel || n <= 1 || faults::armed() {
             if n > 0 {
                 mmap::msync(self.base(), n * fsz)?;
             }
             return Ok(());
         }
         let base = self.base() as usize;
+        // Join EVERY worker, then report the first real msync error; a
+        // panicking worker surfaces as Error::Runtime instead of tearing
+        // the whole process down through a propagated join panic (the
+        // same containment the pipeline workers got).
         std::thread::scope(|s| {
-            let mut handles = vec![];
-            for i in 0..n {
-                handles.push(s.spawn(move || {
-                    mmap::msync((base + i * fsz) as *mut u8, fsz)
-                }));
-            }
+            let handles: Vec<_> = (0..n)
+                .map(|i| s.spawn(move || mmap::msync((base + i * fsz) as *mut u8, fsz)))
+                .collect();
+            let mut first: Option<Error> = None;
             for h in handles {
-                h.join().expect("sync thread panicked")?;
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        first.get_or_insert(e);
+                    }
+                    Err(panic) => {
+                        let msg = panic
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| panic.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "opaque panic payload".to_string());
+                        first.get_or_insert(Error::Runtime(format!(
+                            "segment sync worker panicked: {msg}"
+                        )));
+                    }
+                }
             }
-            Ok::<(), Error>(())
+            match first {
+                None => Ok(()),
+                Some(e) => Err(e),
+            }
         })?;
         Ok(())
     }
@@ -319,7 +367,8 @@ impl SegmentStorage {
                 fs.charge_io(todo.len() as u64, bytes, streams);
             }
         };
-        if !parallel {
+        // serial when a fault plan is armed: deterministic op indices
+        if !parallel || faults::armed() {
             for r in &todo {
                 mmap::msync((base + r.start) as *mut u8, r.len())?;
             }
@@ -414,7 +463,6 @@ impl SegmentStorage {
     /// `pwrite` raw bytes directly into a backing file, bypassing the
     /// mapping — the bs-mmap user-level msync write-back path (§5.1).
     pub fn pwrite_file(&self, file_idx: usize, file_off: usize, data: &[u8]) -> Result<()> {
-        use std::os::unix::fs::FileExt;
         let files = self.files.lock().unwrap();
         let f = files.get(file_idx).ok_or_else(|| {
             Error::Datastore(format!("pwrite: no backing file {file_idx}"))
@@ -423,7 +471,8 @@ impl SegmentStorage {
         // ever becomes contended; pwrite needs no seek state.
         let f = f.try_clone().map_err(|e| Error::io(&self.dir, e))?;
         drop(files);
-        f.write_all_at(data, file_off as u64).map_err(|e| Error::io(&self.dir, e))
+        faults::write_full_at(&f, data, file_off as u64, faults::Site::Write)
+            .map_err(|e| Error::io(&self.dir, e))
     }
 
     /// Re-map `[offset, offset+len)` from the backing file(s), discarding
@@ -480,6 +529,24 @@ impl SegmentStorage {
 
 struct Detected {
     next_idx: usize,
+}
+
+/// ENOSPC while growing the segment is an *allocation* failure, not an
+/// I/O catastrophe: `extend_to` already rolled its partial work back,
+/// the caller releases its reserved chunk ids, and a smaller request
+/// can still succeed — so surface it as a clean [`Error::Alloc`]. Any
+/// other errno passes through unchanged for classification upstream.
+fn enospc_to_alloc(e: Error) -> Error {
+    let raw = match &e {
+        Error::Io { source, .. } => source.raw_os_error(),
+        Error::Sys { source, .. } => source.raw_os_error(),
+        _ => None,
+    };
+    if raw == Some(libc::ENOSPC) {
+        Error::Alloc(format!("segment extension failed: no space left on device ({e})"))
+    } else {
+        e
+    }
 }
 
 #[cfg(test)]
@@ -625,6 +692,43 @@ mod tests {
         unsafe {
             assert_eq!(seg.slice((1 << 20) + 7, 3), b"xyz");
         }
+    }
+
+    #[test]
+    fn injected_enospc_on_truncate_rolls_back_and_reports_alloc() {
+        let _g = faults::test_serial_guard();
+        let d = TempDir::new("segenospc");
+        let seg = SegmentStorage::create(d.join("s"), opts_small()).unwrap();
+        seg.extend_to(1 << 20).unwrap();
+        // next Truncate (the new file's ftruncate) reports a full disk
+        faults::arm(faults::FaultPlan::nth_at(1, faults::Site::Truncate, faults::FaultKind::Enospc));
+        let err = seg.extend_to(2 << 20).unwrap_err();
+        faults::disarm();
+        assert!(matches!(err, Error::Alloc(_)), "ENOSPC surfaces as Alloc: {err}");
+        // the half-built backing file was removed and accounting is sane
+        assert_eq!(seg.num_files(), 1);
+        assert_eq!(seg.mapped_len(), 1 << 20);
+        assert!(!SegmentStorage::file_path(seg.dir(), 1).exists(), "partial file rolled back");
+        // the disk "recovers": the same extension now succeeds
+        seg.extend_to(2 << 20).unwrap();
+        assert_eq!(seg.num_files(), 2);
+        unsafe { seg.slice_mut((1 << 20) + 8, 4).copy_from_slice(b"ok!!") };
+        seg.sync(false).unwrap();
+    }
+
+    #[test]
+    fn injected_mmap_failure_rolls_back_partial_file() {
+        let _g = faults::test_serial_guard();
+        let d = TempDir::new("segmmapfail");
+        let seg = SegmentStorage::create(d.join("s"), opts_small()).unwrap();
+        faults::arm(faults::FaultPlan::nth_at(1, faults::Site::Mmap, faults::FaultKind::Eio));
+        let err = seg.extend_to(1 << 20).unwrap_err();
+        faults::disarm();
+        assert!(matches!(err, Error::Sys { .. }), "mmap failure stays a Sys error: {err}");
+        assert_eq!(seg.num_files(), 0);
+        assert!(!SegmentStorage::file_path(seg.dir(), 0).exists());
+        seg.extend_to(1 << 20).unwrap();
+        assert_eq!(seg.num_files(), 1);
     }
 
     #[test]

@@ -1,0 +1,456 @@
+//! Fault-injection integration tests (robustness PR: deterministic
+//! syscall-level failures via [`metall_rs::storage::faults`]).
+//!
+//! The headline test is an ALICE-style sweep: a fixed workload is first
+//! dry-run under a counting plan to learn how many durability syscalls
+//! (write / fsync / dirfsync / msync / ftruncate / rename / mmap /
+//! reflink / lease) it issues, then re-run once per `k` with the k-th
+//! I/O forced to fail. After every injected failure the store must
+//! either have never been created, or reopen via `open_unclean()` with
+//! a clean `doctor()` report and the container holding an exact prefix
+//! of the workload's trace — never shorter than the last acknowledged
+//! `sync()`.
+//!
+//! The remaining tests pin the failure-semantics contracts one by one:
+//! ENOSPC on segment extension rolls back cleanly to `Error::Alloc`;
+//! persistent flush failure wounds the manager into degraded read-only
+//! while an attached reader keeps serving its pinned epoch; a full
+//! op-log ring whose forced syncs are fault-stalled reports the stall
+//! as `InvalidOp` after three attempts; a torn lease record makes the
+//! pin scan conservatively pin everything.
+//!
+//! Fault state is process-global, so every test holds
+//! [`faults::test_serial_guard`] for its whole body and disarms on exit
+//! (panic included) via a drop guard.
+
+use std::path::{Path, PathBuf};
+
+use metall_rs::alloc::{
+    readers, ManagerOptions, MetallManager, ReaderManager, SegmentAlloc, WOUNDED_MARKER,
+};
+use metall_rs::containers::oplog::{OpRecord, OP_VEC_PUSH};
+use metall_rs::containers::PVec;
+use metall_rs::error::Error;
+use metall_rs::storage::faults::{self, FaultKind, FaultPlan, FaultReport, Site};
+use metall_rs::util::tmp::TempDir;
+
+/// `small_for_tests` chunk size.
+const CHUNK: usize = 64 << 10;
+
+fn record_value(i: u64) -> u64 {
+    i.wrapping_mul(7).wrapping_add(1)
+}
+
+/// Disarm on scope exit so a panicking test cannot leave a live plan
+/// behind for the next test in the binary.
+struct DisarmOnDrop;
+
+impl Drop for DisarmOnDrop {
+    fn drop(&mut self) {
+        let _ = faults::disarm();
+    }
+}
+
+/// Serialize the test body against every other fault test and clear any
+/// state a previously panicked body left armed. Tuple order matters:
+/// fields drop front-to-back, so the disarm runs while the serial lock
+/// is still held.
+fn serial() -> (DisarmOnDrop, std::sync::MutexGuard<'static, ()>) {
+    let g = faults::test_serial_guard();
+    let _ = faults::disarm();
+    (DisarmOnDrop, g)
+}
+
+// ------------------------------------------------------- ALICE sweep --
+
+/// What the sweep workload durably promised before it died: `floor` is
+/// the record count covered by the last `sync()`/`close()` that
+/// *returned Ok*, and is therefore the committed prefix recovery must
+/// never roll back past.
+#[derive(Default)]
+struct Progress {
+    created: bool,
+    floor: u64,
+    closed: bool,
+}
+
+/// The fixed workload under the sweep: create, batch pushes with two
+/// explicit syncs in between, one multi-file large allocation (drives
+/// segment-file create + truncate sites), clean close. Every fallible
+/// step uses `?` so an injected fault surfaces exactly where it hit.
+fn sweep_workload(store: &Path, p: &mut Progress) -> metall_rs::error::Result<()> {
+    let m = MetallManager::create_with(store, ManagerOptions::small_for_tests())?;
+    p.created = true;
+    let v = PVec::<u64>::create(&m)?;
+    m.construct::<u64>("log", v.offset())?;
+    for i in 0..40 {
+        v.push(&m, record_value(i))?;
+    }
+    m.sync()?;
+    p.floor = 40;
+    for i in 40..80 {
+        v.push(&m, record_value(i))?;
+    }
+    // 20 chunks > one 1 MiB segment file: exercises file create +
+    // ftruncate under fault, and the extend-rollback path on failure.
+    let big = m.allocate(20 * CHUNK)?;
+    m.deallocate(big)?;
+    m.sync()?;
+    p.floor = 80;
+    for i in 80..120 {
+        v.push(&m, record_value(i))?;
+    }
+    m.close()?;
+    p.floor = 120;
+    p.closed = true;
+    Ok(())
+}
+
+/// Post-failure oracle: the store reopens via the explicit unclean
+/// escape hatch, doctor is clean, and the vector is an exact
+/// `record_value` prefix no shorter than the acknowledged floor.
+fn recovery_oracle(store: &Path, p: &Progress, k: u64) {
+    let m = MetallManager::open_unclean(store)
+        .unwrap_or_else(|e| panic!("k={k}: created store must reopen uncleanly: {e}"));
+    let findings = m.doctor().unwrap();
+    assert!(findings.is_empty(), "k={k}: doctor after recovery: {findings:?}");
+    let len = match m.find::<u64>("log").unwrap() {
+        None => 0,
+        Some(cell) => {
+            let v = PVec::<u64>::from_offset(m.read(cell));
+            let len = v.len(&m) as u64;
+            for i in 0..len {
+                assert_eq!(
+                    v.get(&m, i as usize),
+                    record_value(i),
+                    "k={k}: corrupted record at index {i}"
+                );
+            }
+            len
+        }
+    };
+    assert!(len <= 120, "k={k}: recovered more records than were ever pushed: {len}");
+    assert!(
+        len >= p.floor,
+        "k={k}: committed prefix lost: recovered {len} < acknowledged floor {}",
+        p.floor
+    );
+    m.close().unwrap_or_else(|e| panic!("k={k}: re-seal after recovery failed: {e}"));
+}
+
+fn manifest_out_path() -> PathBuf {
+    std::env::var_os("METALL_FAULTS_MANIFEST")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("target/it_faults_failure_sites.json"))
+}
+
+/// Persist the per-site failure-site manifest (CI uploads it as an
+/// artifact): which sites the workload exercises and how often, plus
+/// the sweep outcome tallies.
+fn write_site_manifest(seed: u64, dry: &FaultReport, recovered: u64, skipped: u64) {
+    let path = manifest_out_path();
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    let mut sites = String::new();
+    for s in Site::ALL {
+        if !sites.is_empty() {
+            sites.push(',');
+        }
+        sites.push_str(&format!("\"{}\":{}", s.name(), dry.site_ops[s as usize]));
+    }
+    let body = format!(
+        "{{\"seed\":{seed},\"total_ops\":{},\"sites\":{{{sites}}},\
+         \"sweep_runs\":{},\"recovered\":{recovered},\"skipped_precreate\":{skipped}}}\n",
+        dry.ops, dry.ops
+    );
+    let _ = std::fs::write(&path, body);
+}
+
+#[test]
+fn alice_sweep_every_kth_io_failure_preserves_committed_prefix() {
+    let _serial = serial();
+    let seed: u64 = std::env::var("METALL_FAULTS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFA17);
+
+    // Dry run: count every durability syscall the workload issues.
+    faults::arm_counting_process_wide();
+    let dry = {
+        let d = TempDir::new("faults-dry");
+        let mut p = Progress::default();
+        sweep_workload(&d.path().join("s"), &mut p).expect("fault-free dry run");
+        assert!(p.closed);
+        faults::disarm()
+    };
+    assert_eq!(dry.injected, 0);
+    assert!(
+        dry.ops >= 20,
+        "workload must exercise a meaningful number of I/O sites, saw {}",
+        dry.ops
+    );
+    assert!(dry.ops <= 2000, "sweep would be unreasonably large: {} ops", dry.ops);
+    write_site_manifest(seed, &dry, 0, 0);
+    let n = dry.ops;
+
+    // Sweep: fail the k-th I/O for every k, rotating the injected
+    // errno by the seed so EIO / ENOSPC / torn write / EAGAIN all land
+    // on many different sites across the sweep.
+    const KINDS: [FaultKind; 4] =
+        [FaultKind::Eio, FaultKind::Enospc, FaultKind::ShortWrite, FaultKind::Eagain];
+    let (mut recovered, mut skipped) = (0u64, 0u64);
+    for k in 1..=n {
+        let kind = KINDS[(k.wrapping_add(seed) % 4) as usize];
+        let d = TempDir::new(&format!("faults-sweep-{k}"));
+        let store = d.path().join("s");
+        let mut p = Progress::default();
+        faults::arm_process_wide(FaultPlan::nth_global(k, kind));
+        let res = sweep_workload(&store, &mut p);
+        let rep = faults::disarm();
+        if rep.injected == 0 {
+            // Thread-timing variance moved the k-th op off this run:
+            // then nothing failed and the workload must have succeeded.
+            assert!(res.is_ok(), "k={k}: no fault injected yet workload failed: {res:?}");
+        }
+        if !p.created {
+            // The fault killed `create_with` itself: nothing was
+            // promised, nothing to recover.
+            skipped += 1;
+            continue;
+        }
+        recovery_oracle(&store, &p, k);
+        recovered += 1;
+    }
+    assert!(recovered > 0, "sweep never reached a recoverable store");
+    write_site_manifest(seed, &dry, recovered, skipped);
+}
+
+// --------------------------------------------- ENOSPC alloc rollback --
+
+#[test]
+fn enospc_on_segment_extension_rolls_back_to_alloc_error() {
+    let _serial = serial();
+    let d = TempDir::new("faults-enospc");
+    let store = d.path().join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("log", v.offset()).unwrap();
+    v.push(&m, record_value(0)).unwrap();
+
+    // Every ftruncate/fallocate from here on reports a full disk (the
+    // plan is thread-scoped: the extend-outside-lock path runs on the
+    // allocating thread).
+    faults::arm(FaultPlan::sticky_at(1, Site::Truncate, FaultKind::Enospc));
+
+    // Large path: 20 chunks need a second segment file → extension
+    // fails → reserved chunk run must return to the free pool and the
+    // caller sees a clean allocation error, not an aborted process.
+    match m.allocate(20 * CHUNK) {
+        Err(Error::Alloc(msg)) => {
+            assert!(msg.contains("no space"), "ENOSPC not surfaced in message: {msg}")
+        }
+        other => panic!("expected Error::Alloc from ENOSPC extension, got {other:?}"),
+    }
+
+    // Small path: fresh half-chunk allocations burn through the already
+    // mapped file, then the first one needing a new file fails the same
+    // way.
+    let mut hit_small = false;
+    for _ in 0..200 {
+        match m.allocate(CHUNK / 2) {
+            Ok(_) => continue,
+            Err(Error::Alloc(_)) => {
+                hit_small = true;
+                break;
+            }
+            Err(e) => panic!("expected Error::Alloc on small-path ENOSPC, got {e:?}"),
+        }
+    }
+    assert!(hit_small, "small allocations never hit the faulted extension");
+    let _ = faults::disarm();
+
+    // Inline allocation failures never wound the store, and both failed
+    // extensions released their chunk reservations.
+    assert!(!m.is_degraded());
+    let hs = m.health_stats();
+    assert!(hs.extend_rollbacks >= 2, "expected both rollbacks counted: {hs:?}");
+
+    // With the disk "back", the same allocations succeed and the store
+    // is still fully healthy.
+    m.allocate(CHUNK / 2).expect("allocation after ENOSPC clears");
+    m.allocate(20 * CHUNK).expect("large allocation after ENOSPC clears");
+    v.push(&m, record_value(1)).unwrap();
+    assert!(m.doctor().unwrap().is_empty());
+    m.close().unwrap();
+}
+
+// ----------------------------------------- wounded mode + live reader --
+
+#[test]
+fn persistent_flush_failure_wounds_manager_while_reader_serves_pinned_epoch() {
+    let _serial = serial();
+    let d = TempDir::new("faults-wound");
+    let store = d.path().join("s");
+    let mut opts = ManagerOptions::small_for_tests();
+    opts.sync_fail_limit = 2;
+    let m = MetallManager::create_with(&store, opts).unwrap();
+    let v = PVec::<u64>::create(&m).unwrap();
+    m.construct::<u64>("log", v.offset()).unwrap();
+    for i in 0..50 {
+        v.push(&m, record_value(i)).unwrap();
+    }
+    m.sync().unwrap();
+
+    // A reader pins the committed epoch before the backend "fails".
+    let r = ReaderManager::attach(&store).unwrap();
+    let roff = r.find::<u64>("log").unwrap().unwrap();
+    assert_eq!(PVec::<u64>::from_offset(r.read(roff)).len(&r), 50);
+
+    // Dirty the store, then make every fsync fail persistently. Two
+    // consecutive failed flush rounds (sync_fail_limit) must wound the
+    // manager into degraded read-only.
+    for i in 50..60 {
+        v.push(&m, record_value(i)).unwrap();
+    }
+    faults::arm_process_wide(FaultPlan::sticky_at(1, Site::Fsync, FaultKind::Eio));
+    let mut wounded = false;
+    for _ in 0..20 {
+        let _ = m.sync();
+        if m.is_degraded() {
+            wounded = true;
+            break;
+        }
+    }
+    let _ = faults::disarm();
+    assert!(wounded, "persistent fsync failure never wounded the manager");
+
+    // Every mutating API now reports the degradation with attribution.
+    let reason = m.degraded_reason().expect("wounded manager has a reason");
+    assert!(
+        reason.contains("consecutive failed flush rounds"),
+        "unexpected wound attribution: {reason}"
+    );
+    assert!(matches!(m.allocate(64), Err(Error::Degraded(_))));
+    assert!(matches!(m.sync(), Err(Error::Degraded(_))));
+    assert!(matches!(v.push(&m, 0), Err(Error::Degraded(_))));
+    let hs = m.health_stats();
+    assert!(hs.degraded);
+    assert!(hs.transient_failures >= 2, "failed rounds not counted: {hs:?}");
+    let findings = m.doctor().unwrap();
+    assert!(
+        findings.iter().any(|f| f.contains("wounded")),
+        "doctor must surface the wound: {findings:?}"
+    );
+
+    // The attached reader is untouched: it keeps serving the last
+    // committed epoch.
+    assert_eq!(PVec::<u64>::from_offset(r.read(roff)).len(&r), 50);
+
+    // close() refuses the CLEAN marker and leaves the WOUNDED
+    // breadcrumb for the next opener.
+    assert!(matches!(m.close(), Err(Error::Degraded(_))));
+    assert!(!store.join("CLEAN").exists(), "a wounded store must not be sealed CLEAN");
+    let breadcrumb = store.join(WOUNDED_MARKER);
+    assert!(breadcrumb.exists());
+    assert!(std::fs::read_to_string(&breadcrumb).unwrap().contains("flush rounds"));
+    drop(r);
+
+    // Recovery: the explicit unclean open clears the breadcrumb and
+    // lands on the last committed manifest — the 50 acknowledged
+    // records, not the 10 that never flushed.
+    let m2 = MetallManager::open_unclean(&store).unwrap();
+    assert!(!m2.is_degraded());
+    assert!(!breadcrumb.exists(), "rw reopen must clear the WOUNDED breadcrumb");
+    let off = m2.find::<u64>("log").unwrap().unwrap();
+    let v2 = PVec::<u64>::from_offset(m2.read(off));
+    let len = v2.len(&m2) as u64;
+    assert!(len >= 50, "committed prefix lost across the wound: {len}");
+    for i in 0..len.min(50) {
+        assert_eq!(v2.get(&m2, i as usize), record_value(i));
+    }
+    assert!(m2.doctor().unwrap().is_empty());
+    m2.close().unwrap();
+}
+
+// ------------------------------------- op-log ring-full stall contract --
+
+#[test]
+fn oplog_full_ring_with_fault_stalled_syncs_reports_invalid_op() {
+    let _serial = serial();
+    let d = TempDir::new("faults-ring");
+    let store = d.path().join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+
+    // One operation begins and never commits: it pins the reclaim
+    // horizon at sequence 0 forever.
+    let stalled = SegmentAlloc::oplog_begin(&m, OpRecord::new(OP_VEC_PUSH))
+        .unwrap()
+        .expect("manager-backed op log always issues tokens");
+    // Fill the rest of the ring with committed records.
+    for _ in 0..1023 {
+        let t = SegmentAlloc::oplog_begin(&m, OpRecord::new(OP_VEC_PUSH)).unwrap();
+        SegmentAlloc::oplog_commit(&m, t).unwrap();
+    }
+
+    // The ring is full and the forced syncs cannot help anyway: every
+    // manifest rename fails. After three tolerated attempts the append
+    // must report the stall instead of spinning.
+    faults::arm_process_wide(FaultPlan::sticky_at(1, Site::Rename, FaultKind::Eio));
+    let err = SegmentAlloc::oplog_begin(&m, OpRecord::new(OP_VEC_PUSH)).unwrap_err();
+    let _ = faults::disarm();
+    match &err {
+        Error::InvalidOp(msg) => {
+            assert!(msg.contains("stalled in flight"), "wrong stall message: {msg}")
+        }
+        other => panic!("expected InvalidOp from the full-ring stall, got {other:?}"),
+    }
+    let st = m.oplog_stats();
+    assert_eq!(st.forced_syncs, 3, "exactly three forced syncs before giving up: {st:?}");
+    assert_eq!(st.forced_sync_errors, 3, "all three were fault-stalled: {st:?}");
+    // Three transient failures are far below the default wound limit.
+    assert!(!m.is_degraded(), "a reported stall must not wound the store");
+
+    // Committing the stalled op unblocks everything: the next sync
+    // advances the horizon and appends work again.
+    SegmentAlloc::oplog_commit(&m, Some(stalled)).unwrap();
+    m.sync().unwrap();
+    let t = SegmentAlloc::oplog_begin(&m, OpRecord::new(OP_VEC_PUSH)).unwrap();
+    SegmentAlloc::oplog_commit(&m, t).unwrap();
+    m.close().unwrap();
+}
+
+// -------------------------------------------------- torn lease record --
+
+#[test]
+fn torn_lease_record_makes_pin_scan_conservative() {
+    let _serial = serial();
+    let d = TempDir::new("faults-lease");
+    let store = d.path().join("s");
+    let m = MetallManager::create_with(&store, ManagerOptions::small_for_tests()).unwrap();
+    m.construct::<u64>("x", 1).unwrap();
+    m.sync().unwrap();
+
+    let mut lease = readers::ReaderLease::acquire(&store).unwrap();
+    // Tear the pin record mid-write: half of the 24-byte record lands
+    // over the previous (valid) one.
+    faults::arm(FaultPlan::nth_at(1, Site::Lease, FaultKind::ShortWrite));
+    lease.pin(1).expect_err("torn lease write must surface the error");
+    let _ = faults::disarm();
+
+    // The lease is live (its flock is held) but undecodable: the scan
+    // must refuse to guess and pin every epoch, so GC deletes nothing.
+    let scan = readers::scan_pins(&store);
+    assert_eq!(scan.live, 1, "the torn lease is still live: {scan:?}");
+    assert!(scan.pin_all, "a torn lease record must pin everything: {scan:?}");
+
+    // A successful re-pin repairs the record and the scan resolves.
+    lease.pin(1).expect("re-pin over the torn record");
+    let scan = readers::scan_pins(&store);
+    assert_eq!(scan.live, 1);
+    assert!(!scan.pin_all, "repaired lease must pin only its epoch: {scan:?}");
+    assert_eq!(scan.epochs, vec![1]);
+
+    drop(lease);
+    m.close().unwrap();
+}
