@@ -8,6 +8,7 @@
 
 use metall_rs::bench_util::{record, BenchArgs, Table};
 use metall_rs::experiments::fig5::{run_bg_cell, run_cell, Fig5Params, IoMode};
+use metall_rs::telemetry::export::OpLatency;
 use metall_rs::util::human;
 use metall_rs::util::jsonw::JsonObj;
 use metall_rs::util::tmp::TempDir;
@@ -66,8 +67,8 @@ fn main() -> anyhow::Result<()> {
     // flush on the sync engine — strictly serial vs epoch-pipelined.
     for fs in ["lustre", "vast"] {
         let mut t = Table::new(&["month", "bg-serial flush", "bg-pipelined flush"]);
-        let serial = run_bg_cell(fs, "wiki", false, &p, work.path())?;
-        let piped = run_bg_cell(fs, "wiki", true, &p, work.path())?;
+        let (serial, _) = run_bg_cell(fs, "wiki", false, &p, work.path())?;
+        let (piped, piped_lat) = run_bg_cell(fs, "wiki", true, &p, work.path())?;
         let (mut cs, mut cp) = (0.0f64, 0.0f64);
         for m in 0..p.months as usize {
             cs += serial[m].flush_secs;
@@ -96,6 +97,34 @@ fn main() -> anyhow::Result<()> {
             human::duration(cp),
             cp / cs.max(1e-9)
         );
+        // tail latency of the pipelined engine's epoch phases, from the
+        // always-on telemetry histograms
+        let mut lt = Table::new(&["op", "samples", "p50", "p99", "p999"]);
+        for (op, snap) in &piped_lat {
+            if snap.count == 0 {
+                continue;
+            }
+            let l = OpLatency::from_snapshot(*op, snap);
+            lt.row(&[
+                l.op.to_string(),
+                l.count.to_string(),
+                human::duration(l.p50 as f64 / 1e9),
+                human::duration(l.p99 as f64 / 1e9),
+                human::duration(l.p999 as f64 / 1e9),
+            ]);
+            record(
+                "fig5_incremental",
+                JsonObj::new()
+                    .str("bench", "fig5-bg-quantiles")
+                    .str("fs", fs)
+                    .str("op", l.op)
+                    .int("count", l.count as i64)
+                    .int("p50_ns", l.p50 as i64)
+                    .int("p99_ns", l.p99 as i64)
+                    .int("p999_ns", l.p999 as i64),
+            );
+        }
+        lt.print(&format!("Fig 5 — wiki on {fs}, bg-pipelined per-op latency quantiles"));
     }
     Ok(())
 }

@@ -49,8 +49,105 @@ fn churn<A: SegmentAlloc>(a: &A, ops: usize, threads: usize, seed: u64) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
+/// `--telemetry-gate`: the CI overhead gate for ISSUE 10. Runs the
+/// metall churn workload with the latency sampler fully off
+/// (`telemetry_sample: 0`) and at the default rate (1-in-64),
+/// interleaved for `--repeats` rounds, and fails when the median
+/// default-on time regresses more than `--max-overhead-pct` (default
+/// 5%) over sampler-off. Writes `BENCH_telemetry.json` stub-first so CI
+/// uploads a meaningful artifact even on a crash mid-gate.
+fn telemetry_gate(args: &BenchArgs) -> anyhow::Result<()> {
+    let ops = args.get_usize("ops", 120_000);
+    let threads = args.get_usize("threads", 4);
+    let repeats = args.get_usize("repeats", 5).max(1);
+    let bar = args.get_usize("max-overhead-pct", 5) as f64;
+    let out = args.get("out").unwrap_or("BENCH_telemetry.json").to_string();
+    let stub = JsonObj::new()
+        .str("bench", "telemetry_overhead")
+        .str("status", "started")
+        .int("ops", ops as i64)
+        .int("threads", threads as i64)
+        .int("repeats", repeats as i64)
+        .finish();
+    std::fs::write(&out, stub + "\n")?;
+
+    let work = TempDir::new("micro-alloc-tel");
+    let run_once = |sample: u32, tag: &str, i: usize| -> anyhow::Result<f64> {
+        let dir = work.join(&format!("tel-{tag}-{i}"));
+        let opts = ManagerOptions {
+            chunk_size: CHUNK,
+            file_size: 16 << 20,
+            vm_reserve: 32 << 30,
+            telemetry_sample: sample,
+            ..Default::default()
+        };
+        let m = MetallManager::create_with(&dir, opts)?;
+        let secs = churn(&m, ops, threads, 7 + i as u64);
+        m.close()?;
+        let _ = std::fs::remove_dir_all(&dir);
+        Ok(secs)
+    };
+    // one unrecorded warmup pair (page-cache + allocator warm paths)
+    run_once(0, "warm", 0)?;
+    run_once(64, "warm", 1)?;
+    let mut off = Vec::with_capacity(repeats);
+    let mut on = Vec::with_capacity(repeats);
+    for i in 0..repeats {
+        // interleaved so slow machine drift hits both arms equally
+        off.push(run_once(0, "off", i)?);
+        on.push(run_once(64, "on", i)?);
+    }
+    let median = |v: &[f64]| {
+        let mut v = v.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let (m_off, m_on) = (median(&off), median(&on));
+    let overhead_pct = (m_on - m_off) / m_off * 100.0;
+    let pass = overhead_pct <= bar;
+
+    let fmt_arr = |v: &[f64]| {
+        let items: Vec<String> = v.iter().map(|s| format!("{s:.6}")).collect();
+        format!("[{}]", items.join(","))
+    };
+    let doc = JsonObj::new()
+        .str("bench", "telemetry_overhead")
+        .str("status", if pass { "ok" } else { "failed" })
+        .int("ops", ops as i64)
+        .int("threads", threads as i64)
+        .int("repeats", repeats as i64)
+        .int("sample_rate_on", 64)
+        .num("median_off_secs", m_off)
+        .num("median_on_secs", m_on)
+        .num("overhead_pct", overhead_pct)
+        .num("max_overhead_pct", bar)
+        .bool("pass", pass)
+        .raw("off_secs", &fmt_arr(&off))
+        .raw("on_secs", &fmt_arr(&on))
+        .finish();
+    std::fs::write(&out, doc + "\n")?;
+
+    let mut t = Table::new(&["sampler", "median", "ops/s"]);
+    t.row(&["off (0)".into(), human::duration(m_off), human::rate(ops as f64 / m_off)]);
+    t.row(&["on (1-in-64)".into(), human::duration(m_on), human::rate(ops as f64 / m_on)]);
+    t.print(&format!(
+        "telemetry overhead gate: {overhead_pct:+.2}% (bar {bar:.0}%) → {}",
+        if pass { "ok" } else { "FAILED" }
+    ));
+    if !pass {
+        anyhow::bail!(
+            "telemetry overhead {overhead_pct:.2}% exceeds the {bar:.0}% bar \
+             (median off {m_off:.4}s vs default-on {m_on:.4}s)"
+        );
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = BenchArgs::parse();
+    if args.has("telemetry-gate") {
+        return telemetry_gate(&args);
+    }
     let ops = args.get_usize("ops", 200_000);
     let threads = args.get_usize_list("threads", &[1, 2, 4, 8]);
     let work = TempDir::new("micro-alloc");

@@ -47,6 +47,7 @@ use std::path::Path;
 use metall_rs::alloc::{ManagerOptions, MetallManager};
 use metall_rs::bench_util::{record, BenchArgs, Table};
 use metall_rs::storage::netfs;
+use metall_rs::telemetry::export::OpLatency;
 use metall_rs::util::human;
 use metall_rs::util::jsonw::JsonObj;
 use metall_rs::util::tmp::TempDir;
@@ -220,6 +221,7 @@ fn main() -> anyhow::Result<()> {
         "data bytes",
     ]);
     let mut cells: Vec<Cell> = Vec::new();
+    let mut lat_rows: Vec<(usize, OpLatency)> = Vec::new();
     let mut speedup_1pct: Option<f64> = None;
     let mut noop_section_bytes: Option<u64> = None;
     let mut noop_data_chunks: Option<u64> = None;
@@ -291,6 +293,13 @@ fn main() -> anyhow::Result<()> {
         cells.push(full);
         // cells were pushed incremental-first; order the table full-first
         cells.sort_by_key(|c| (c.size_mb, c.phase != "full"));
+        // per-op tail latencies from the always-on telemetry histograms
+        // (alloc paths sampled 1-in-64; epoch phases unsampled)
+        for (op, snap) in m.latency_snapshot() {
+            if snap.count > 0 {
+                lat_rows.push((mb, OpLatency::from_snapshot(op, &snap)));
+            }
+        }
         m.close().map_err(|e| anyhow::anyhow!("{e}"))?;
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -420,6 +429,32 @@ fn main() -> anyhow::Result<()> {
         );
     }
     t.print("incremental sync: store size × dirty fraction (first sync = full store)");
+
+    let mut lt = Table::new(&["size", "op", "samples", "p50", "p90", "p99", "p999"]);
+    for (mb, l) in &lat_rows {
+        lt.row(&[
+            format!("{mb} MiB"),
+            l.op.to_string(),
+            l.count.to_string(),
+            human::duration(l.p50 as f64 / 1e9),
+            human::duration(l.p90 as f64 / 1e9),
+            human::duration(l.p99 as f64 / 1e9),
+            human::duration(l.p999 as f64 / 1e9),
+        ]);
+        record(
+            "sync_latency",
+            JsonObj::new()
+                .str("bench", "sync-latency-quantiles")
+                .int("size_mb", *mb as i64)
+                .str("op", l.op)
+                .int("count", l.count as i64)
+                .int("p50_ns", l.p50 as i64)
+                .int("p90_ns", l.p90 as i64)
+                .int("p99_ns", l.p99 as i64)
+                .int("p999_ns", l.p999 as i64),
+        );
+    }
+    lt.print("per-op latency quantiles (telemetry histograms; alloc paths sampled 1-in-64)");
     if let Some(sp) = speedup_1pct {
         println!(
             "\nincremental speedup at 1% dirty on the ≥64 MiB store: {sp:.1}x \
@@ -458,6 +493,24 @@ fn main() -> anyhow::Result<()> {
         );
     }
     rows.push(']');
+    let mut lats = String::from("[");
+    for (i, (mb, l)) in lat_rows.iter().enumerate() {
+        if i > 0 {
+            lats.push(',');
+        }
+        lats.push_str(
+            &JsonObj::new()
+                .int("size_mb", *mb as i64)
+                .str("op", l.op)
+                .int("count", l.count as i64)
+                .int("p50_ns", l.p50 as i64)
+                .int("p90_ns", l.p90 as i64)
+                .int("p99_ns", l.p99 as i64)
+                .int("p999_ns", l.p999 as i64)
+                .finish(),
+        );
+    }
+    lats.push(']');
     let mut doc = JsonObj::new()
         .str("bench", "sync_latency")
         .str("status", "complete")
@@ -474,7 +527,8 @@ fn main() -> anyhow::Result<()> {
         .num("background_stall_ratio", bg_stall_ratio)
         .int("background_flushes", bg_flushes as i64)
         .int("background_watermark_hits", bg_watermark_hits as i64)
-        .raw("results", &rows);
+        .raw("results", &rows)
+        .raw("latency_ns", &lats);
     if let Some(sp) = speedup_1pct {
         doc = doc.num("incremental_speedup_1pct", sp);
     }

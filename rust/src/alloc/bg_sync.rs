@@ -717,9 +717,20 @@ impl SyncEngine {
         }
         drop(st);
         if waited {
-            let micros = t0.elapsed().as_micros() as u64;
+            let ns = t0.elapsed().as_nanos() as u64;
+            let micros = ns / 1_000;
             self.writer_stalls.fetch_add(1, Ordering::Relaxed);
             self.writer_stall_micros.fetch_add(micros, Ordering::Relaxed);
+            // Stalls ARE the tail the telemetry exists for: always
+            // recorded (no sampling), plus a flight-recorder breadcrumb.
+            mgr.telemetry().record_ns(crate::telemetry::Op::Stall, ns);
+            mgr.telemetry().event(
+                crate::telemetry::recorder::EventKind::CeilingStall,
+                0,
+                micros,
+                mgr.dirty_data_bytes(),
+                0,
+            );
         }
     }
 
@@ -909,6 +920,13 @@ impl SyncEngine {
                             } else {
                                 eng.ceiling_triggers.fetch_add(1, Ordering::Relaxed);
                             }
+                            mgr.telemetry().event(
+                                crate::telemetry::recorder::EventKind::WatermarkKick,
+                                if over_wm { 0 } else { 1 },
+                                dirty,
+                                if over_wm { wm } else { ceiling },
+                                0,
+                            );
                             covered = st.requested; // == handled: pure bg flush
                             break;
                         }
@@ -933,6 +951,13 @@ impl SyncEngine {
                         if timeout.timed_out() && mgr.anything_dirty() {
                             if iv > 0 && (retry == 0 || iv <= retry) {
                                 eng.interval_triggers.fetch_add(1, Ordering::Relaxed);
+                                mgr.telemetry().event(
+                                    crate::telemetry::recorder::EventKind::IntervalKick,
+                                    0,
+                                    iv,
+                                    mgr.dirty_data_bytes(),
+                                    0,
+                                );
                             }
                             // (a pure failed-flush retry gets no trigger
                             // attribution; `flushes` still counts it)
@@ -1013,6 +1038,14 @@ impl SyncEngine {
                     st.dead = Some(msg);
                     st.flusher_exited = true;
                     drop(st);
+                    mgr.telemetry().event(
+                        crate::telemetry::recorder::EventKind::EngineDead,
+                        1,
+                        0,
+                        0,
+                        0,
+                    );
+                    mgr.telemetry().flush_recorder();
                     eng.done_cv.notify_all();
                     eng.commit_cv.notify_all(); // committer drains + exits
                     return;
@@ -1143,6 +1176,14 @@ impl SyncEngine {
             eng.done_cv.notify_all();
             eng.work_cv.notify_all();
             if died {
+                mgr.telemetry().event(
+                    crate::telemetry::recorder::EventKind::EngineDead,
+                    2,
+                    0,
+                    0,
+                    0,
+                );
+                mgr.telemetry().flush_recorder();
                 eng.commit_cv.notify_all();
                 return;
             }

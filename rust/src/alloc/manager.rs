@@ -121,6 +121,7 @@ use crate::storage::netfs::SimNetFs;
 use crate::storage::pagemap;
 use crate::storage::reflink::{self, CopyMethod};
 use crate::storage::segment::{SegmentOptions, SegmentStorage};
+use crate::telemetry::{recorder::EventKind, Op as TelOp, Telemetry};
 
 const META_MAGIC: &[u8; 8] = b"METALLV1";
 const MGMT_MAGIC: &[u8; 8] = b"METALLMG";
@@ -228,6 +229,14 @@ pub struct ManagerOptions {
     /// account only). Benches use `1.0` so thread interleaving against
     /// the modelled backend is realistic.
     pub netfs_sleep_scale: f64,
+    /// Latency-telemetry sampling rate for the *hot* paths
+    /// (allocate/deallocate, op-log append): 1 in `telemetry_sample`
+    /// calls is timed into the [`crate::telemetry`] histograms. Rare
+    /// ops (epoch phases, backpressure stalls, reader attach/refresh)
+    /// are always recorded. Default 64 (≈ 1.6 % of hot ops pay two
+    /// clock reads); `1` times everything, `0` disables all latency
+    /// histograms. The flight recorder is independent of this rate.
+    pub telemetry_sample: u32,
 }
 
 impl Default for ManagerOptions {
@@ -250,6 +259,7 @@ impl Default for ManagerOptions {
             sync_fail_limit: 16,
             netfs_profile: None,
             netfs_sleep_scale: 0.0,
+            telemetry_sample: 64,
         }
     }
 }
@@ -825,6 +835,10 @@ pub struct ManagerCore {
     wounded: OnceLock<String>,
     /// Failure-health counters ([`Self::health_stats`]).
     health: HealthCounters,
+    /// Latency histograms + crash-persisted flight recorder
+    /// ([`crate::telemetry`]; sampling per
+    /// [`ManagerOptions::telemetry_sample`]).
+    tel: Telemetry,
     /// Container op-log ring state (see [`OpLogDram`]).
     oplog: Mutex<OpLogDram>,
     oplog_counters: OpLogCounters,
@@ -996,6 +1010,9 @@ pub struct ReaderManager {
     epoch: u64,
     lease: ReaderLease,
     stats: AttachStats,
+    /// Attach/refresh latency histograms (no flight recorder: a reader
+    /// must not write into the owner's store beyond its lease/sides).
+    tel: Telemetry,
 }
 
 impl ReaderManager {
@@ -1029,10 +1046,13 @@ impl ReaderManager {
             epoch,
             lease,
             stats,
+            tel: Telemetry::new(ManagerOptions::default().telemetry_sample, 1),
         };
         r.validate()?;
         r.stats.staleness_epochs = r.staleness_epochs()?;
         r.stats.attach_micros = t0.elapsed().as_micros() as u64;
+        // Attach is a rare op: always recorded (the serving tier's tail).
+        r.tel.record_ns(TelOp::Attach, t0.elapsed().as_nanos() as u64);
         Ok(r)
     }
 
@@ -1112,6 +1132,15 @@ impl ReaderManager {
     /// new epoch mid-move; on any failure the old pin is restored and
     /// the old view remains valid.
     pub fn refresh(&mut self) -> Result<bool> {
+        let t0 = Instant::now();
+        let r = self.refresh_inner();
+        if matches!(r, Ok(true)) {
+            self.tel.record_ns(TelOp::Refresh, t0.elapsed().as_nanos() as u64);
+        }
+        r
+    }
+
+    fn refresh_inner(&mut self) -> Result<bool> {
         let newest = mgmt_io::list_manifest_epochs(&self.dir)?.last().copied().unwrap_or(0);
         if newest <= self.epoch {
             self.stats.staleness_epochs = 0;
@@ -1216,6 +1245,13 @@ impl ReaderManager {
 
     pub fn attach_stats(&self) -> AttachStats {
         self.stats
+    }
+
+    /// This reader's attach/refresh latency histograms.
+    pub fn latency_snapshot(
+        &self,
+    ) -> Vec<(TelOp, crate::telemetry::histogram::HistogramSnapshot)> {
+        self.tel.snapshot()
     }
 
     // plumbing for the `SegmentAlloc` impl (crate::alloc::api)
@@ -1344,6 +1380,7 @@ impl ManagerCore {
             last_sync: Mutex::new(SyncStats::default()),
             wounded: OnceLock::new(),
             health: HealthCounters::default(),
+            tel: Telemetry::with_recorder(opts.telemetry_sample, nshards, &dir, 1),
             oplog: Mutex::new(OpLogDram::absent()),
             oplog_counters: OpLogCounters::default(),
             oplog_validate_floor: AtomicU64::new(0),
@@ -1502,6 +1539,13 @@ impl ManagerCore {
             last_sync: Mutex::new(SyncStats::default()),
             wounded: OnceLock::new(),
             health: HealthCounters::default(),
+            // Read-only opens must not write into the store: histograms
+            // only, no flight ring.
+            tel: if read_only {
+                Telemetry::new(opts.telemetry_sample, nshards)
+            } else {
+                Telemetry::with_recorder(opts.telemetry_sample, nshards, &dir, 1)
+            },
             oplog: Mutex::new(OpLogDram::absent()),
             oplog_counters: OpLogCounters::default(),
             oplog_validate_floor: AtomicU64::new(0),
@@ -1685,12 +1729,23 @@ impl ManagerCore {
             return; // already wounded; first reason stands
         }
         let _ = std::fs::write(self.dir.join(WOUNDED_MARKER), reason.as_bytes());
+        // The wound may be this process's last interesting act: record
+        // it and make the whole flight ring durable for the post-mortem
+        // (`metall trace` / `doctor`).
+        self.tel.event(
+            EventKind::Wound,
+            0,
+            self.health.transient_failures.load(Ordering::Relaxed),
+            0,
+            0,
+        );
+        self.tel.flush_recorder();
         self.bg.park(format!("manager wounded (degraded read-only): {reason}"));
     }
 
     /// Engine-side failure bookkeeping (one failed flush/commit round).
     pub(crate) fn count_flush_failure(&self, class: FaultClass) {
-        match class {
+        let prior = match class {
             FaultClass::Transient => {
                 self.health.transient_failures.fetch_add(1, Ordering::Relaxed)
             }
@@ -1698,6 +1753,16 @@ impl ManagerCore {
                 self.health.permanent_failures.fetch_add(1, Ordering::Relaxed)
             }
         };
+        self.tel.event(
+            EventKind::FlushFailure,
+            match class {
+                FaultClass::Transient => 0,
+                FaultClass::Permanent => 1,
+            },
+            prior + 1,
+            0,
+            0,
+        );
     }
 
     /// Has a backend failure flipped this manager to degraded read-only?
@@ -1777,6 +1842,23 @@ impl ManagerCore {
     /// the chunk section still calls Free — hence the simultaneous-lock
     /// serialization in [`Self::serialize_sections_cut`].
     pub(crate) fn prepare_epoch(&self) -> Result<Option<PreparedEpoch>> {
+        let t0 = Instant::now();
+        let r = self.prepare_epoch_inner();
+        if let Ok(Some(prep)) = &r {
+            self.tel.record_ns(TelOp::EpochCut, t0.elapsed().as_nanos() as u64);
+            let data_bytes: usize = prep.ranges.iter().map(|rg| rg.len()).sum();
+            self.tel.event(
+                EventKind::EpochPrepared,
+                0,
+                prep.epoch,
+                data_bytes as u64,
+                prep.ids.len() as u64,
+            );
+        }
+        r
+    }
+
+    fn prepare_epoch_inner(&self) -> Result<Option<PreparedEpoch>> {
         if self.read_only {
             return Ok(None);
         }
@@ -1871,7 +1953,10 @@ impl ManagerCore {
                 // belongs to the next epoch.
                 (Vec::new(), Vec::new(), self.cache.len() as u64)
             } else {
-                self.serialize_sections_cut(first)
+                let tser = Instant::now();
+                let out = self.serialize_sections_cut(first);
+                self.tel.record_ns(TelOp::EpochSerialize, tser.elapsed().as_nanos() as u64);
+                out
             };
         if !ids.is_empty() {
             self.mgmt.lock().unwrap().next_epoch = epoch + 1;
@@ -1886,6 +1971,9 @@ impl ManagerCore {
         // `alloc/readers`). The scan also reaps leases of dead readers.
         if !data_chunks.is_empty() {
             let pins = readers::scan_pins(&self.dir);
+            if pins.reaped > 0 {
+                self.tel.event(EventKind::LeaseReap, 0, pins.reaped as u64, 0, 0);
+            }
             if pins.any_live() {
                 if let Err(e) =
                     readers::preserve_chunks(&self.dir, &self.segment, &data_chunks, cs, epoch)
@@ -1921,6 +2009,22 @@ impl ManagerCore {
     /// inline via [`Self::sync_now`]. Any failure aborts the cut
     /// ([`Self::abort_epoch`]) so the next cut retries its changes.
     pub(crate) fn commit_epoch(&self, prep: &PreparedEpoch) -> Result<()> {
+        let r = self.commit_epoch_inner(prep);
+        match &r {
+            Ok(()) => {
+                let data_bytes = self.last_sync.lock().unwrap().data_bytes_flushed;
+                self.tel
+                    .event(EventKind::EpochCommitted, 0, prep.epoch, data_bytes, 0);
+            }
+            Err(_) => {
+                // abort_epoch already restored the dirty flags
+                self.tel.event(EventKind::EpochAborted, 0, prep.epoch, 0, 0);
+            }
+        }
+        r
+    }
+
+    fn commit_epoch_inner(&self, prep: &PreparedEpoch) -> Result<()> {
         let t0 = Instant::now();
         let net = self.netfs.as_deref();
         let sim0 = net.map(|fs| fs.sim_seconds()).unwrap_or(0.0);
@@ -2031,10 +2135,12 @@ impl ManagerCore {
                 bins_per_group: mgmt_io::BINS_PER_GROUP as u32,
                 sections: list,
             };
+            let tman = Instant::now();
             if let Err(e) = mgmt_io::commit_manifest_charged(&self.dir, &manifest, net) {
                 self.abort_epoch(prep);
                 return Err(e);
             }
+            self.tel.record_ns(TelOp::EpochManifest, tman.elapsed().as_nanos() as u64);
             {
                 let mut st = self.mgmt.lock().unwrap();
                 st.epoch = epoch;
@@ -2106,6 +2212,7 @@ impl ManagerCore {
             };
             self.bg.record_flush_sample(data_bytes, data_io_secs, delay_secs);
         }
+        self.tel.record_ns(TelOp::EpochCommit, t0.elapsed().as_nanos() as u64);
         Ok(())
     }
 
@@ -2484,6 +2591,18 @@ impl ManagerCore {
     /// recovery falls back to the last complete manifest instead of
     /// trusting it.
     pub(crate) fn close_inner(&self) -> Result<()> {
+        let r = self.close_inner_body();
+        if r.is_err() {
+            // A failed close is a post-mortem trigger: the store stays
+            // unclean, so leave a durable flight ring for `metall
+            // trace`/`doctor` to reconstruct what the engine was doing.
+            self.tel.event(EventKind::CloseFailed, 0, 0, 0, 0);
+            self.tel.flush_recorder();
+        }
+        r
+    }
+
+    fn close_inner_body(&self) -> Result<()> {
         if self.closed.swap(true, Ordering::SeqCst) || self.read_only {
             return Ok(());
         }
@@ -2546,6 +2665,22 @@ impl ManagerCore {
     /// Per-shard contention counters.
     pub fn shard_stats(&self) -> Vec<ShardStatsSnapshot> {
         self.shards.iter().enumerate().map(|(i, s)| s.stats_snapshot(i)).collect()
+    }
+
+    /// The manager's latency histograms + flight recorder
+    /// ([`crate::telemetry::Telemetry`]). Sampling is configured by
+    /// [`ManagerOptions::telemetry_sample`].
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.tel
+    }
+
+    /// Merged per-op latency snapshots (shards folded), the input to
+    /// [`crate::coordinator::metrics::record_latency_stats`] and the
+    /// `metall stats` exporters.
+    pub fn latency_snapshot(
+        &self,
+    ) -> Vec<(TelOp, crate::telemetry::histogram::HistogramSnapshot)> {
+        self.tel.snapshot()
     }
 
     /// Observability snapshot of the incremental sync path (cumulative
@@ -2710,6 +2845,15 @@ impl ManagerCore {
     /// mark's backpressure stall may wait on the flusher, and the
     /// flusher takes the oplog mutex for its cut stamp.
     pub(crate) fn oplog_begin(&self, mut rec: OpRecord) -> Result<OpToken> {
+        let t0 = self.tel.maybe_start();
+        let r = self.oplog_begin_inner(&mut rec);
+        if let Some(t) = t0 {
+            self.tel.record(TelOp::OplogAppend, t);
+        }
+        r
+    }
+
+    fn oplog_begin_inner(&self, rec: &mut OpRecord) -> Result<OpToken> {
         self.check_writable()?;
         let (log_off, capacity) = self.ensure_oplog()?;
         let mut forced = 0u32;
@@ -2888,6 +3032,7 @@ impl ManagerCore {
             match rec.state() {
                 RecordState::Committed => {
                     if rec.alloc_off != oplog::NONE {
+                        self.tel.event(EventKind::RecoveryAdopt, 0, rec.seq, rec.alloc_off, 0);
                         self.recovery_adopt(rec.alloc_off, rec.alloc_size);
                     }
                 }
@@ -2925,6 +3070,7 @@ impl ManagerCore {
         if forward {
             self.seal_slot(slot, oplog::commit_mark(rec.intent_crc));
             self.oplog_counters.recovered_forward.fetch_add(1, Ordering::Relaxed);
+            self.tel.event(EventKind::RecoveryReplay, 0, rec.seq, rec.h1_off, 0);
             if rec.alloc_off != oplog::NONE {
                 self.recovery_adopt(rec.alloc_off, rec.alloc_size);
             }
@@ -2956,6 +3102,7 @@ impl ManagerCore {
             }
             self.seal_slot(slot, oplog::abort_mark(rec.intent_crc));
             self.oplog_counters.recovered_rollback.fetch_add(1, Ordering::Relaxed);
+            self.tel.event(EventKind::RecoveryRollback, 0, rec.seq, rec.h1_off, 0);
             // the extent the op allocated was never published — release
             // it, unless it *is* the header cell being restored (a torn
             // create: something may already reference the cell)
@@ -3451,6 +3598,23 @@ impl ManagerCore {
 
     /// Allocate `size` bytes; returns the segment offset.
     pub fn allocate(&self, size: usize) -> Result<u64> {
+        // Sampled latency telemetry wraps the whole path so the
+        // histogram sees cache hits, CAS claims, and fresh-chunk slow
+        // paths in their true mix.
+        let t0 = self.tel.maybe_start();
+        let r = self.allocate_inner(size);
+        if let Some(t) = t0 {
+            let op = if is_small(size, self.opts.chunk_size) {
+                TelOp::AllocSmall
+            } else {
+                TelOp::AllocLarge
+            };
+            self.tel.record(op, t);
+        }
+        r
+    }
+
+    fn allocate_inner(&self, size: usize) -> Result<u64> {
         self.check_writable()?;
         if size == 0 {
             return Err(Error::Alloc("zero-size allocation".into()));
@@ -3545,6 +3709,7 @@ impl ManagerCore {
         if let Err(e) = self.segment.extend_to((chunk as usize + 1) * cs) {
             self.chunks.write().unwrap().free_small_chunk_on(chunk, shard as u32);
             self.health.extend_rollbacks.fetch_add(1, Ordering::Relaxed);
+            self.tel.event(EventKind::ExtendRollback, 0, 1, 0, 0);
             return Err(e);
         }
         sh.stats.fresh_chunks.fetch_add(1, Ordering::Relaxed);
@@ -3633,6 +3798,7 @@ impl ManagerCore {
         if let Err(e) = self.segment.extend_to((head + n) as usize * cs) {
             self.chunks.write().unwrap().free_large(head);
             self.health.extend_rollbacks.fetch_add(1, Ordering::Relaxed);
+            self.tel.event(EventKind::ExtendRollback, 0, n as u64, 0, 0);
             return Err(e);
         }
         Ok(head as u64 * cs as u64)
@@ -3647,6 +3813,15 @@ impl ManagerCore {
     /// Deallocate a previously allocated offset. Like `free(3)`, the
     /// size is derived from the allocator's own metadata.
     pub fn deallocate(&self, offset: u64) -> Result<()> {
+        let t0 = self.tel.maybe_start();
+        let r = self.deallocate_inner(offset);
+        if let Some(t) = t0 {
+            self.tel.record(TelOp::Dealloc, t);
+        }
+        r
+    }
+
+    fn deallocate_inner(&self, offset: u64) -> Result<()> {
         self.check_writable()?;
         self.stats.deallocs.fetch_add(1, Ordering::Relaxed);
         let cs = self.opts.chunk_size as u64;

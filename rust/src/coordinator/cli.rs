@@ -40,7 +40,19 @@ SUBCOMMANDS:
                                                      N reader processes attach to pinned
                                                      epochs and run GBTL BFS while this
                                                      process keeps ingesting + flushing
-    doctor    --store <dir>                          validate datastore integrity
+    stats     --store <dir> [--format prom|json] [--watch] [--probe-ops 256]
+                                                     export counters, latency quantiles
+                                                     (p50/p90/p99/p999), and the flight-
+                                                     recorder tail as Prometheus text
+                                                     exposition or JSON; probes the store
+                                                     with real ops when it can be opened
+                                                     read-write (--probe-ops 0 disables)
+    trace     --store <dir> [--tail 32]              render the newest flight-recorder
+                                                     dump under <store>/diag/ (survives
+                                                     kill -9: the ring is an mmap'd file)
+    doctor    --store <dir>                          validate datastore integrity (prints
+                                                     the flight-recorder tail when a diag
+                                                     dump or WOUNDED breadcrumb is present)
     version | help
 ";
 
@@ -272,6 +284,55 @@ pub fn run(argv: &[String]) -> Result<i32> {
             let store = req(&args, "store")?;
             run_attach_reader(store, args.get("ready"))
         }
+        "stats" => {
+            let store = req(&args, "store")?;
+            let format = args.get("format").unwrap_or("prom").to_string();
+            if !matches!(format.as_str(), "prom" | "json") {
+                bail!("unknown --format {format} (prom|json)");
+            }
+            let watch = args.has("watch");
+            let probe_ops = args.get_usize("probe-ops", 256);
+            loop {
+                let b = collect_stats(store, probe_ops)?;
+                match format.as_str() {
+                    "prom" => {
+                        let text = crate::telemetry::export::render_prometheus(&b);
+                        crate::telemetry::export::validate_prometheus(&text)
+                            .map_err(|e| anyhow!("internal: invalid exposition: {e}"))?;
+                        print!("{text}");
+                    }
+                    _ => println!("{}", crate::telemetry::export::render_json(&b)),
+                }
+                if !watch {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_secs(2));
+                println!();
+            }
+            Ok(0)
+        }
+        "trace" => {
+            let store = req(&args, "store")?;
+            let tail = args.get_usize("tail", 32);
+            let Some(path) = crate::telemetry::recorder::newest_dump(std::path::Path::new(store))
+            else {
+                println!("{store}: no flight-recorder dump under diag/");
+                return Ok(1);
+            };
+            let dump = crate::telemetry::recorder::load(&path)
+                .with_context(|| format!("parse flight dump {}", path.display()))?;
+            println!(
+                "flight recorder {} — pid {}, capacity {}, {} events",
+                path.display(),
+                dump.pid,
+                dump.capacity,
+                dump.events.len()
+            );
+            for line in crate::telemetry::recorder::render_tail(&dump, tail) {
+                println!("  {line}");
+            }
+            Ok(0)
+        }
         "doctor" => {
             let store = req(&args, "store")?;
             // The advisory WOUNDED breadcrumb is the cross-process signal
@@ -302,6 +363,9 @@ pub fn run(argv: &[String]) -> Result<i32> {
                              read-write with open_unclean() to recover to the \
                              last committed manifest"
                         );
+                        // the wounded owner msync'd its flight ring on the
+                        // way down — show what it saw last
+                        print_flight_tail(store, 12);
                         return Ok(1);
                     }
                     return Err(e).context("open datastore");
@@ -316,11 +380,13 @@ pub fn run(argv: &[String]) -> Result<i32> {
                 println!("{store}: OK — management data consistent, all named \
                           objects within the mapped segment, container \
                           invariants hold ({audited} op-log records audited)");
+                print_flight_tail(store, 8);
                 Ok(0)
             } else {
                 for finding in &report {
                     println!("WARN: {finding}");
                 }
+                print_flight_tail(store, 12);
                 Ok(1)
             }
         }
@@ -335,6 +401,104 @@ pub fn run(argv: &[String]) -> Result<i32> {
 /// Parse `--key value` pairs from an argv slice.
 fn parse_args(argv: &[String]) -> crate::bench_util::BenchArgs {
     crate::bench_util::BenchArgs::from_slice(argv)
+}
+
+/// Print the last `tail` flight-recorder events of the newest dump under
+/// `<store>/diag/`, if one exists and parses. Best-effort: diagnostics
+/// of diagnostics must never turn a doctor run into an error.
+fn print_flight_tail(store: &str, tail: usize) {
+    use crate::telemetry::recorder;
+    let Some(path) = recorder::newest_dump(std::path::Path::new(store)) else { return };
+    let Ok(dump) = recorder::load(&path) else {
+        println!("WARN: flight dump {} exists but does not parse", path.display());
+        return;
+    };
+    let lines = recorder::render_tail(&dump, tail);
+    if lines.is_empty() {
+        return;
+    }
+    println!("flight recorder tail ({}, pid {}):", path.display(), dump.pid);
+    for l in lines {
+        println!("  {l}");
+    }
+}
+
+/// Gather everything `metall stats` exports. When the store can be
+/// opened read-write, a short probe (real small/large allocations, a
+/// dealloc pass, one sync epoch, one reader attach) feeds the latency
+/// histograms genuine samples at sample rate 1 — so a fresh store still
+/// reports meaningful p99/p999 rows. Falls back to read-only (no
+/// probes) when another owner holds the store, and to just the flight
+/// dump when even that fails (e.g. a wounded, uncleanly closed store).
+fn collect_stats(store: &str, probe_ops: usize) -> Result<crate::telemetry::export::StatsBundle> {
+    use crate::alloc::ReaderManager;
+    use crate::coordinator::metrics::{
+        record_alloc_stats, record_attach_stats, record_bg_sync_stats, record_health_stats,
+        record_oplog_stats, record_sync_stats,
+    };
+    use crate::telemetry::export::StatsBundle;
+    use crate::telemetry::histogram::HistogramSnapshot;
+    use crate::telemetry::Op;
+
+    let metrics = Metrics::new();
+    let mut lat: Vec<(Op, HistogramSnapshot)> = Vec::new();
+    let rw_opts = ManagerOptions { telemetry_sample: 1, ..Default::default() };
+    match MetallManager::open_with(store, rw_opts, false, false) {
+        Ok(mgr) => {
+            if probe_ops > 0 {
+                let mut offs = Vec::with_capacity(probe_ops + 1);
+                for _ in 0..probe_ops {
+                    offs.push(mgr.allocate(64)?);
+                }
+                // one multi-chunk allocation exercises the large class
+                offs.push(mgr.allocate(mgr.chunk_size() * 2)?);
+                for off in offs {
+                    mgr.deallocate(off)?;
+                }
+                mgr.sync()?; // epoch cut/serialize/commit/manifest samples
+            }
+            record_alloc_stats(&metrics, &mgr.stats(), &mgr.shard_stats());
+            record_sync_stats(&metrics, &mgr.sync_stats());
+            record_bg_sync_stats(&metrics, &mgr.bg_sync_stats());
+            record_oplog_stats(&metrics, &mgr.oplog_stats());
+            record_health_stats(&metrics, &mgr.health_stats());
+            lat = mgr.latency_snapshot();
+            mgr.close()?;
+            if probe_ops > 0 {
+                // a real attach gives the attach/refresh histograms data
+                let r = ReaderManager::attach(store)?;
+                record_attach_stats(&metrics, &r.attach_stats());
+                let rl = r.latency_snapshot();
+                r.detach()?;
+                for ((_, snap), (_, rs)) in lat.iter_mut().zip(rl.iter()) {
+                    snap.merge(rs);
+                }
+            }
+        }
+        Err(_) => {
+            if let Ok(mgr) = MetallManager::open_read_only(store) {
+                record_alloc_stats(&metrics, &mgr.stats(), &mgr.shard_stats());
+                record_oplog_stats(&metrics, &mgr.oplog_stats());
+                record_health_stats(&metrics, &mgr.health_stats());
+                lat = mgr.latency_snapshot();
+            } else {
+                // wounded / unclean: export empty histograms (all ops
+                // still present) plus whatever the flight dump holds
+                lat = crate::telemetry::Telemetry::new(0, 1).snapshot();
+            }
+        }
+    }
+
+    let (counters, timers) = metrics.snapshot();
+    let mut b = StatsBundle::with_latencies(&lat);
+    b.counters = counters.into_iter().collect();
+    b.timers = timers.into_iter().collect();
+    if let Some(path) = crate::telemetry::recorder::newest_dump(std::path::Path::new(store)) {
+        if let Ok(dump) = crate::telemetry::recorder::load(&path) {
+            b.events = crate::telemetry::recorder::render_tail(&dump, 16);
+        }
+    }
+    Ok(b)
 }
 
 /// `metall attach`: the multi-process snapshot-isolation benchmark. The
@@ -448,6 +612,24 @@ fn run_attach_bench(
         }
     }
     let _ = std::fs::remove_dir_all(&ready_dir);
+    // owner-side tail latencies (epoch phases, allocs) as alloc.lat.*
+    // gauges next to the attach counters
+    crate::coordinator::metrics::record_latency_stats(&metrics, &mgr.latency_snapshot());
+    let owner_lat: Vec<String> = mgr
+        .latency_snapshot()
+        .iter()
+        .filter(|(_, s)| s.count > 0)
+        .map(|(op, s)| {
+            let l = crate::telemetry::export::OpLatency::from_snapshot(*op, s);
+            JsonObj::new()
+                .str("op", l.op)
+                .int("count", l.count as i64)
+                .int("p50_ns", l.p50 as i64)
+                .int("p99_ns", l.p99 as i64)
+                .int("p999_ns", l.p999 as i64)
+                .finish()
+        })
+        .collect();
     mgr.close()?;
 
     // histogram of epochs-behind at attach time: [0, 1, 2, ≥3]
@@ -484,11 +666,15 @@ fn run_attach_bench(
             ),
         )
         .raw("results", &format!("[{}]", rows.join(",")))
+        .raw("owner_latency_ns", &format!("[{}]", owner_lat.join(",")))
         .finish();
     std::fs::write(out, doc + "\n").with_context(|| format!("write {out}"))?;
 
     let (counters, _) = metrics.snapshot();
-    for (k, v) in counters.iter().filter(|(k, _)| k.starts_with("alloc.attach.")) {
+    for (k, v) in counters
+        .iter()
+        .filter(|(k, _)| k.starts_with("alloc.attach.") || k.starts_with("alloc.lat."))
+    {
         println!("  {k:<36} {v}");
     }
     println!(
@@ -621,5 +807,66 @@ mod tests {
     #[test]
     fn missing_args_error() {
         assert!(run(&["create".to_string()]).is_err());
+    }
+
+    #[test]
+    fn stats_exports_valid_prometheus_and_json() {
+        let d = TempDir::new("cli-stats");
+        let store = d.join("s");
+        let store_s = store.to_str().unwrap();
+        assert_eq!(run_cmd(&["create", "--store", store_s]), 0);
+
+        // the bundle behind both formats: probed, so every instrumented
+        // path has real samples
+        let b = collect_stats(store_s, 64).unwrap();
+        let text = crate::telemetry::export::render_prometheus(&b);
+        crate::telemetry::export::validate_prometheus(&text).unwrap();
+        for op in ["alloc_small", "alloc_large", "epoch_commit", "attach"] {
+            let name = format!("metall_alloc_lat_{op}_ns");
+            assert!(text.contains(&format!("{name}{{quantile=\"0.99\"}}")), "{name} p99 missing");
+            assert!(text.contains(&format!("{name}{{quantile=\"0.999\"}}")), "{name} p999 missing");
+        }
+        // the probe really recorded: alloc_small count > 0
+        let count_line = text
+            .lines()
+            .find(|l| l.starts_with("metall_alloc_lat_alloc_small_ns_count"))
+            .unwrap();
+        let n: u64 = count_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!(n >= 64, "probe recorded {n} alloc_small samples");
+        let j = crate::telemetry::export::render_json(&b);
+        assert!(j.contains("\"epoch_commit\"") && j.contains("\"p999_ns\""));
+
+        // the subcommands run end-to-end
+        assert_eq!(run_cmd(&["stats", "--store", store_s, "--format", "prom"]), 0);
+        assert_eq!(
+            run_cmd(&["stats", "--store", store_s, "--format", "json", "--probe-ops", "0"]),
+            0
+        );
+        assert!(run(&[
+            "stats".to_string(),
+            "--store".to_string(),
+            store_s.to_string(),
+            "--format".to_string(),
+            "xml".to_string(),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn trace_renders_flight_dump() {
+        let d = TempDir::new("cli-trace");
+        let store = d.join("s");
+        let store_s = store.to_str().unwrap();
+        // no store yet → no dump
+        std::fs::create_dir_all(&store).unwrap();
+        assert_eq!(run_cmd(&["trace", "--store", store_s]), 1);
+        // any owner session leaves a flight ring with at least the Open
+        // and epoch-lifecycle events
+        assert_eq!(run_cmd(&["create", "--store", store_s]), 0);
+        assert_eq!(run_cmd(&["sync", "--store", store_s]), 0);
+        assert_eq!(run_cmd(&["trace", "--store", store_s]), 0);
+        assert_eq!(run_cmd(&["trace", "--store", store_s, "--tail", "4"]), 0);
+        // doctor surfaces the tail alongside its report
+        assert_eq!(run_cmd(&["doctor", "--store", store_s]), 0);
     }
 }

@@ -5,20 +5,55 @@
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::RwLock;
 use std::time::Instant;
 
 use crate::alloc::bg_sync::BgSyncStats;
 use crate::alloc::bin_dir::ShardStatsSnapshot;
 use crate::alloc::manager::{AttachStats, HealthStats, PlacementReport, StatsSnapshot, SyncStats};
 use crate::containers::oplog::OpLogStats;
+use crate::telemetry::export::OpLatency;
+use crate::telemetry::histogram::HistogramSnapshot;
+use crate::telemetry::Op;
 
 /// A named set of monotonically increasing counters plus accumulated
 /// phase durations. Cheap to share behind an `Arc`.
+///
+/// The maps are guarded by `RwLock`, not `Mutex`: once a key exists
+/// (steady state — key sets stabilize after the first report), updates
+/// take the *shared* lock and `fetch_add`/`store` on the existing
+/// atomic, so concurrent recorders from many threads never serialize on
+/// each other. The exclusive lock is only taken the first time a key is
+/// seen.
 #[derive(Default)]
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, AtomicU64>>,
-    timers_ns: Mutex<BTreeMap<String, AtomicU64>>,
+    counters: RwLock<BTreeMap<String, AtomicU64>>,
+    timers_ns: RwLock<BTreeMap<String, AtomicU64>>,
+}
+
+/// Shared-lock fast path: update `name` in place if present, else take
+/// the write lock and insert. `store` overwrites (gauge semantics);
+/// otherwise the value is added (counter semantics).
+fn upsert(map: &RwLock<BTreeMap<String, AtomicU64>>, name: &str, v: u64, store: bool) {
+    {
+        let m = map.read().unwrap();
+        if let Some(c) = m.get(name) {
+            if store {
+                c.store(v, Ordering::Relaxed);
+            } else {
+                c.fetch_add(v, Ordering::Relaxed);
+            }
+            return;
+        }
+    }
+    let mut m = map.write().unwrap();
+    // re-check: another thread may have inserted between the locks
+    let c = m.entry(name.to_string()).or_default();
+    if store {
+        c.store(v, Ordering::Relaxed);
+    } else {
+        c.fetch_add(v, Ordering::Relaxed);
+    }
 }
 
 impl Metrics {
@@ -27,13 +62,18 @@ impl Metrics {
     }
 
     pub fn add(&self, name: &str, v: u64) {
-        let mut m = self.counters.lock().unwrap();
-        m.entry(name.to_string()).or_default().fetch_add(v, Ordering::Relaxed);
+        upsert(&self.counters, name, v, false);
+    }
+
+    /// Overwrite `name` with `v` (gauge semantics — used by the latency
+    /// bridge, whose quantiles are not monotonic).
+    pub fn set(&self, name: &str, v: u64) {
+        upsert(&self.counters, name, v, true);
     }
 
     pub fn get(&self, name: &str) -> u64 {
         self.counters
-            .lock()
+            .read()
             .unwrap()
             .get(name)
             .map(|c| c.load(Ordering::Relaxed))
@@ -49,13 +89,12 @@ impl Metrics {
     }
 
     pub fn add_time(&self, name: &str, ns: u64) {
-        let mut m = self.timers_ns.lock().unwrap();
-        m.entry(name.to_string()).or_default().fetch_add(ns, Ordering::Relaxed);
+        upsert(&self.timers_ns, name, ns, false);
     }
 
     pub fn seconds(&self, name: &str) -> f64 {
         self.timers_ns
-            .lock()
+            .read()
             .unwrap()
             .get(name)
             .map(|c| c.load(Ordering::Relaxed) as f64 / 1e9)
@@ -66,14 +105,14 @@ impl Metrics {
     pub fn snapshot(&self) -> (BTreeMap<String, u64>, BTreeMap<String, f64>) {
         let c = self
             .counters
-            .lock()
+            .read()
             .unwrap()
             .iter()
             .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
             .collect();
         let t = self
             .timers_ns
-            .lock()
+            .read()
             .unwrap()
             .iter()
             .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed) as f64 / 1e9))
@@ -213,6 +252,27 @@ pub fn record_attach_stats(m: &Metrics, s: &AttachStats) {
     m.add("alloc.attach.side_copies_created", s.side_copies_created);
     m.add("alloc.attach.side_copies_reused", s.side_copies_reused);
     m.add("alloc.attach.staleness_epochs", s.staleness_epochs);
+}
+
+/// Fold per-op latency quantiles from
+/// [`crate::telemetry::Telemetry::snapshot`] into `m` as
+/// `alloc.lat.<op>.{p50,p90,p99,p999,count}` gauges (nanoseconds except
+/// `count`). Quantiles are *set*, not added — they describe the
+/// histogram's current state, so re-recording refreshes them in place.
+/// Ops with no samples are skipped (keys never exist with bogus zeros).
+pub fn record_latency_stats(m: &Metrics, snaps: &[(Op, HistogramSnapshot)]) {
+    for (op, snap) in snaps {
+        if snap.count == 0 {
+            continue;
+        }
+        let l = OpLatency::from_snapshot(*op, snap);
+        let k = |q: &str| format!("alloc.lat.{}.{q}", l.op);
+        m.set(&k("p50"), l.p50);
+        m.set(&k("p90"), l.p90);
+        m.set(&k("p99"), l.p99);
+        m.set(&k("p999"), l.p999);
+        m.set(&k("count"), l.count);
+    }
 }
 
 #[cfg(test)]
@@ -465,5 +525,215 @@ mod tests {
             }
         });
         assert_eq!(m.get("n"), 4000);
+    }
+
+    /// Many threads hammering a mix of pre-existing and fresh keys with
+    /// adds, gauge sets, timer adds, and concurrent reads: the RwLock
+    /// fast path must never lose an update or deadlock against the
+    /// write-lock insert path.
+    #[test]
+    fn many_thread_mixed_updates_smoke() {
+        const THREADS: usize = 16;
+        const ITERS: u64 = 2000;
+        let m = Metrics::new();
+        m.add("hot", 0); // pre-existing: pure shared-lock traffic
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                s.spawn(|| {
+                    for i in 0..ITERS {
+                        m.add("hot", 1);
+                        // 8 keys created racily across all threads
+                        m.add(&format!("key{}", i % 8), 1);
+                        m.set("gauge", i);
+                        m.add_time("phase", 3);
+                        if i % 64 == 0 {
+                            let _ = m.get("hot");
+                            let _ = m.snapshot();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(m.get("hot"), THREADS as u64 * ITERS);
+        for k in 0..8 {
+            assert_eq!(m.get(&format!("key{k}")), THREADS as u64 * ITERS / 8);
+        }
+        assert_eq!(m.get("gauge"), ITERS - 1, "last set wins (all threads end at the same value)");
+        assert_eq!(
+            (m.seconds("phase") * 1e9).round() as u64,
+            THREADS as u64 * ITERS * 3,
+            "timer adds are not lost"
+        );
+    }
+
+    #[test]
+    fn latency_bridge_sets_quantile_gauges() {
+        use crate::telemetry::Telemetry;
+        let m = Metrics::new();
+        let t = Telemetry::new(1, 1);
+        for ns in [100u64, 200, 300, 400, 50_000] {
+            t.record_ns(Op::AllocSmall, ns);
+        }
+        record_latency_stats(&m, &t.snapshot());
+        assert_eq!(m.get("alloc.lat.alloc_small.count"), 5);
+        assert!(m.get("alloc.lat.alloc_small.p50") >= 200);
+        assert!(m.get("alloc.lat.alloc_small.p999") >= 50_000);
+        // no samples → no keys (not a bogus zero row)
+        assert_eq!(m.get("alloc.lat.attach.count"), 0);
+        assert!(!m.snapshot().0.contains_key("alloc.lat.attach.p99"));
+        // re-recording overwrites in place (gauge semantics)
+        record_latency_stats(&m, &t.snapshot());
+        assert_eq!(m.get("alloc.lat.alloc_small.count"), 5);
+    }
+
+    /// Normalize an emitted key to its catalogue form: shard indices →
+    /// `shard<N>`, latency op names → `<op>`.
+    fn normalize(k: &str) -> String {
+        if let Some(rest) = k.strip_prefix("alloc.lat.") {
+            if let Some(dot) = rest.rfind('.') {
+                return format!("alloc.lat.<op>.{}", &rest[dot + 1..]);
+            }
+        }
+        if let Some(pos) = k.find(".shard") {
+            let rest = &k[pos + ".shard".len()..];
+            let digits = rest.chars().take_while(|c| c.is_ascii_digit()).count();
+            if digits > 0 {
+                return format!("{}.shard<N>{}", &k[..pos], &rest[digits..]);
+            }
+        }
+        k.to_string()
+    }
+
+    /// The golden key set: every key the bridges emit is catalogued in
+    /// `docs/METRICS.md`, and every catalogued `alloc.*` key is
+    /// producible by a bridge. Renaming or adding a metric without
+    /// updating the catalogue fails here.
+    #[test]
+    fn golden_key_set_matches_docs_catalogue() {
+        use crate::alloc::manager::{PlacementSource, ShardPlacement};
+        use crate::telemetry::Telemetry;
+        use std::collections::BTreeSet;
+
+        const DOC: &str = include_str!("../../../docs/METRICS.md");
+        let catalogued: BTreeSet<String> = DOC
+            .lines()
+            .filter_map(|line| {
+                let rest = line.strip_prefix("| `")?;
+                let end = rest.find('`')?;
+                Some(rest[..end].to_string())
+            })
+            .filter(|k| k.starts_with("alloc."))
+            .collect();
+        assert!(catalogued.len() > 50, "catalogue parsed ({} keys)", catalogued.len());
+
+        // Drive every bridge once; values are irrelevant, keys are not.
+        let m = Metrics::new();
+        record_alloc_stats(
+            &m,
+            &StatsSnapshot {
+                allocs: 1,
+                deallocs: 1,
+                cache_hits: 1,
+                fast_claims: 1,
+                fresh_chunks: 1,
+                freed_chunks: 1,
+                large_allocs: 1,
+            },
+            &[ShardStatsSnapshot {
+                shard: 0,
+                fast_claims: 1,
+                fresh_chunks: 1,
+                freed_chunks: 1,
+                remote_frees: 1,
+                remote_drained: 1,
+                exclusive_acquires: 1,
+                first_touch_chunks: 1,
+                bound_chunks: 1,
+            }],
+        );
+        record_placement(
+            &m,
+            &PlacementReport {
+                per_shard: vec![ShardPlacement { shard: 0, pages: 1, ..Default::default() }],
+                large_pages: 1,
+                free_pages: 1,
+                total_pages: 2,
+                source: PlacementSource::Recorded,
+            },
+        );
+        record_sync_stats(&m, &SyncStats { syncs: 1, dirty_sections: 1, ..Default::default() });
+        record_bg_sync_stats(
+            &m,
+            &BgSyncStats {
+                flushes: 1,
+                flush_failures: 1,
+                watermark_triggers: 1,
+                ceiling_triggers: 1,
+                interval_triggers: 1,
+                explicit_requests: 1,
+                section_bytes_flushed: 1,
+                data_bytes_flushed: 1,
+                writer_stalls: 1,
+                writer_stall_micros: 1,
+                watermark_bytes: 1,
+                ceiling_bytes: 1,
+                pipeline_depth: 1,
+                pipeline_peak_in_flight: 1,
+                adaptive_watermark_bytes: 1,
+                measured_bandwidth_bps: 1,
+                epochs_committed: 1,
+                engine_running: true,
+                engine_dead: false,
+            },
+        );
+        record_oplog_stats(
+            &m,
+            &OpLogStats {
+                appended: 1,
+                committed: 1,
+                forced_syncs: 1,
+                forced_sync_errors: 1,
+                recovered_forward: 1,
+                recovered_rollback: 1,
+                recovered_adopted: 1,
+                recovered_released: 1,
+                recovery_anomalies: 1,
+                validate_records: 1,
+            },
+        );
+        record_health_stats(
+            &m,
+            &HealthStats {
+                transient_failures: 1,
+                permanent_failures: 1,
+                extend_rollbacks: 1,
+                degraded: false,
+                degraded_reason: None,
+            },
+        );
+        record_attach_stats(
+            &m,
+            &AttachStats {
+                attach_micros: 1,
+                refreshes: 1,
+                chunks_overlaid: 1,
+                side_copies_created: 1,
+                side_copies_reused: 1,
+                staleness_epochs: 1,
+            },
+        );
+        let t = Telemetry::new(1, 1);
+        for op in Op::ALL {
+            t.record_ns(op, 1_000);
+        }
+        record_latency_stats(&m, &t.snapshot());
+
+        let emitted: BTreeSet<String> = m.snapshot().0.keys().map(|k| normalize(k.as_str())).collect();
+        for k in &emitted {
+            assert!(catalogued.contains(k), "emitted key `{k}` missing from docs/METRICS.md");
+        }
+        for k in &catalogued {
+            assert!(emitted.contains(k), "catalogued key `{k}` no longer produced by any bridge");
+        }
     }
 }

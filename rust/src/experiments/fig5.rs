@@ -16,6 +16,7 @@ use crate::error::Result;
 use crate::graph::stream::{MonthBatch, StreamConfig};
 use crate::storage::mmap::page_size;
 use crate::storage::netfs::{profile_by_name_strict, SimNetFs};
+use crate::telemetry::{histogram::HistogramSnapshot, Op};
 
 /// The three §6.4.2 configurations.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -249,7 +250,7 @@ pub fn run_bg_cell(
     pipelined: bool,
     p: &Fig5Params,
     workdir: &Path,
-) -> Result<Vec<MonthRow>> {
+) -> Result<(Vec<MonthRow>, Vec<(Op, HistogramSnapshot)>)> {
     profile_by_name_strict(fs_name)?; // fail fast, before any store exists
     let mode = if pipelined { "bg-pipelined" } else { "bg-serial" };
     let stream = match dataset {
@@ -305,9 +306,12 @@ pub fn run_bg_cell(
             r.flush_secs += t1.elapsed().as_secs_f64();
         }
     }
+    // tail latencies of the epoch phases (and sampled alloc paths) for
+    // the bench's p99/p999 rows
+    let lat = mgr.latency_snapshot();
     mgr.close()?;
     let _ = std::fs::remove_dir_all(&dir);
-    Ok(rows)
+    Ok((rows, lat))
 }
 
 /// Dirty-page estimate for the direct-mmap charge: pages written this
@@ -370,10 +374,13 @@ mod tests {
     fn bg_cells_complete_on_both_engine_shapes() {
         let d = TempDir::new("fig5c");
         for pipelined in [false, true] {
-            let rows = run_bg_cell("vast", "wiki", pipelined, &tiny(), d.path()).unwrap();
+            let (rows, lat) = run_bg_cell("vast", "wiki", pipelined, &tiny(), d.path()).unwrap();
             assert_eq!(rows.len(), 3, "pipelined={pipelined}");
             assert!(rows.iter().all(|r| r.edges > 0 && r.flush_secs >= 0.0));
             assert!(rows[2].edges > rows[0].edges);
+            // every month-boundary flush left epoch-commit samples
+            let commit = lat.iter().find(|(op, _)| *op == Op::EpochCommit).unwrap();
+            assert!(commit.1.count >= 3, "pipelined={pipelined}: {}", commit.1.count);
         }
     }
 

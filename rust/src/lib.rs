@@ -40,6 +40,7 @@ pub mod util;
 pub mod bench_util;
 pub mod numa;
 pub mod storage;
+pub mod telemetry;
 pub mod alloc;
 pub mod containers;
 pub mod baselines;

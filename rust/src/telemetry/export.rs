@@ -1,0 +1,277 @@
+//! Prometheus / JSON rendering (ISSUE 10 tentpole, layer 3).
+//!
+//! A [`StatsBundle`] is the flat export view of a store: the
+//! `coordinator::metrics` counter/timer snapshot, per-op latency
+//! quantiles from [`crate::telemetry::Telemetry::snapshot`], and the
+//! flight-recorder tail. Renderers are pure string builders — no I/O —
+//! so `metall stats --watch` can re-render cheaply and tests can
+//! validate the exposition line-by-line.
+//!
+//! Prometheus text-format rules honored here: metric names match
+//! `[a-zA-Z_:][a-zA-Z0-9_:]*` (our dotted keys are sanitized and
+//! prefixed `metall_`), every sample is `name{labels} value`, summaries
+//! expose `{quantile="…"}` series plus `_sum`/`_count`, and `# TYPE`
+//! precedes the first sample of each metric.
+
+use crate::telemetry::{histogram::HistogramSnapshot, Op};
+use crate::util::jsonw::{quote, JsonObj};
+
+/// Per-op latency quantiles (nanoseconds), precomputed from a
+/// [`HistogramSnapshot`] so renderers and bridges share one shape.
+#[derive(Clone, Copy)]
+pub struct OpLatency {
+    pub op: &'static str,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+    pub p999: u64,
+}
+
+impl OpLatency {
+    pub fn from_snapshot(op: Op, snap: &HistogramSnapshot) -> OpLatency {
+        OpLatency {
+            op: op.name(),
+            count: snap.count,
+            sum_ns: snap.sum,
+            p50: snap.quantile(0.50),
+            p90: snap.quantile(0.90),
+            p99: snap.quantile(0.99),
+            p999: snap.quantile(0.999),
+        }
+    }
+}
+
+/// Everything `metall stats` exports, already flattened.
+#[derive(Default)]
+pub struct StatsBundle {
+    /// `coordinator::metrics` counters (`alloc.allocs`, …), sorted.
+    pub counters: Vec<(String, u64)>,
+    /// `coordinator::metrics` timers in seconds, sorted.
+    pub timers: Vec<(String, f64)>,
+    /// One entry per [`Op`], in [`Op::ALL`] order.
+    pub latencies: Vec<OpLatency>,
+    /// Human-readable flight-recorder tail (may be empty).
+    pub events: Vec<String>,
+}
+
+impl StatsBundle {
+    pub fn with_latencies(snaps: &[(Op, HistogramSnapshot)]) -> StatsBundle {
+        StatsBundle {
+            latencies: snaps
+                .iter()
+                .map(|(op, s)| OpLatency::from_snapshot(*op, s))
+                .collect(),
+            ..StatsBundle::default()
+        }
+    }
+}
+
+/// Sanitize a dotted metric key into a Prometheus metric name:
+/// `alloc.lat.alloc_small.p99` → `metall_alloc_lat_alloc_small_p99`.
+pub fn prom_name(key: &str) -> String {
+    let mut out = String::with_capacity(key.len() + 7);
+    out.push_str("metall_");
+    for ch in key.chars() {
+        if ch.is_ascii_alphanumeric() || ch == '_' || ch == ':' {
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+/// Prometheus text exposition (version 0.0.4).
+pub fn render_prometheus(b: &StatsBundle) -> String {
+    let mut out = String::new();
+    for (k, v) in &b.counters {
+        let name = prom_name(k);
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for (k, v) in &b.timers {
+        let name = format!("{}_seconds", prom_name(&format!("time.{k}")));
+        out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+    }
+    for l in &b.latencies {
+        let name = prom_name(&format!("alloc.lat.{}.ns", l.op));
+        out.push_str(&format!("# TYPE {name} summary\n"));
+        for (q, v) in [("0.5", l.p50), ("0.9", l.p90), ("0.99", l.p99), ("0.999", l.p999)] {
+            out.push_str(&format!("{name}{{quantile=\"{q}\"}} {v}\n"));
+        }
+        out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", l.sum_ns, l.count));
+    }
+    out
+}
+
+/// JSON rendering (single object; stable key order).
+pub fn render_json(b: &StatsBundle) -> String {
+    let mut counters = String::from("{");
+    for (i, (k, v)) in b.counters.iter().enumerate() {
+        if i > 0 {
+            counters.push(',');
+        }
+        counters.push_str(&format!("{}:{}", quote(k), v));
+    }
+    counters.push('}');
+
+    let mut timers = String::from("{");
+    for (i, (k, v)) in b.timers.iter().enumerate() {
+        if i > 0 {
+            timers.push(',');
+        }
+        timers.push_str(&format!("{}:{}", quote(k), v));
+    }
+    timers.push('}');
+
+    let mut lats = String::from("{");
+    for (i, l) in b.latencies.iter().enumerate() {
+        if i > 0 {
+            lats.push(',');
+        }
+        let obj = JsonObj::new()
+            .int("count", l.count as i64)
+            .int("sum_ns", l.sum_ns as i64)
+            .int("p50_ns", l.p50 as i64)
+            .int("p90_ns", l.p90 as i64)
+            .int("p99_ns", l.p99 as i64)
+            .int("p999_ns", l.p999 as i64)
+            .finish();
+        lats.push_str(&format!("{}:{}", quote(l.op), obj));
+    }
+    lats.push('}');
+
+    let mut events = String::from("[");
+    for (i, e) in b.events.iter().enumerate() {
+        if i > 0 {
+            events.push(',');
+        }
+        events.push_str(&quote(e));
+    }
+    events.push(']');
+
+    JsonObj::new()
+        .raw("counters", &counters)
+        .raw("timers_s", &timers)
+        .raw("latency", &lats)
+        .raw("events", &events)
+        .finish()
+}
+
+/// Minimal Prometheus text-format checker used by tests and
+/// `metall stats --check`: every line is a comment or
+/// `name[{labels}] value`, names are legal, and every sample's metric
+/// was introduced by a `# TYPE` line.
+pub fn validate_prometheus(text: &str) -> Result<(), String> {
+    let mut typed: Vec<String> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let n = lineno + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().ok_or(format!("line {n}: TYPE without name"))?;
+            let kind = it.next().ok_or(format!("line {n}: TYPE without kind"))?;
+            if !matches!(kind, "counter" | "gauge" | "summary" | "histogram" | "untyped") {
+                return Err(format!("line {n}: bad TYPE kind {kind}"));
+            }
+            typed.push(name.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value_part) = match line.find(' ') {
+            Some(sp) => (&line[..sp], line[sp + 1..].trim()),
+            None => return Err(format!("line {n}: no value")),
+        };
+        let bare = match name_part.find('{') {
+            Some(br) => {
+                if !name_part.ends_with('}') {
+                    return Err(format!("line {n}: unterminated labels"));
+                }
+                &name_part[..br]
+            }
+            None => name_part,
+        };
+        let mut chars = bare.chars();
+        let ok_first = chars
+            .next()
+            .map(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+            .unwrap_or(false);
+        if !ok_first || !chars.all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':') {
+            return Err(format!("line {n}: illegal metric name {bare}"));
+        }
+        if value_part.parse::<f64>().is_err() {
+            return Err(format!("line {n}: non-numeric value {value_part}"));
+        }
+        // A summary's _sum/_count series belong to the base family.
+        let family = bare
+            .strip_suffix("_sum")
+            .or_else(|| bare.strip_suffix("_count"))
+            .unwrap_or(bare);
+        if !typed.iter().any(|t| t == bare || t == family) {
+            return Err(format!("line {n}: sample {bare} without # TYPE"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Telemetry;
+
+    fn bundle() -> StatsBundle {
+        let t = Telemetry::new(1, 1);
+        t.record_ns(Op::AllocSmall, 500);
+        t.record_ns(Op::AllocSmall, 900);
+        t.record_ns(Op::EpochCommit, 40_000);
+        t.record_ns(Op::Attach, 7_000);
+        let mut b = StatsBundle::with_latencies(&t.snapshot());
+        b.counters = vec![("alloc.allocs".into(), 2), ("alloc.shard0.claims".into(), 1)];
+        b.timers = vec![("sync".into(), 0.125)];
+        b.events = vec!["[  0.000001s #   0] open (read-write owner)".into()];
+        b
+    }
+
+    #[test]
+    fn prometheus_output_is_valid_and_complete() {
+        let text = render_prometheus(&bundle());
+        validate_prometheus(&text).unwrap();
+        assert!(text.contains("metall_alloc_allocs 2"));
+        assert!(text.contains("metall_time_sync_seconds 0.125"));
+        // Every op appears with p99/p999 quantiles even when empty.
+        for op in Op::ALL {
+            let name = format!("metall_alloc_lat_{}_ns", op.name());
+            assert!(text.contains(&format!("{name}{{quantile=\"0.99\"}}")), "{name} p99");
+            assert!(text.contains(&format!("{name}{{quantile=\"0.999\"}}")), "{name} p999");
+            assert!(text.contains(&format!("{name}_count")), "{name} count");
+        }
+    }
+
+    #[test]
+    fn validator_rejects_bad_exposition() {
+        assert!(validate_prometheus("metall_x 1").is_err(), "sample without TYPE");
+        assert!(validate_prometheus("# TYPE 9bad gauge\n9bad 1").is_err(), "bad name");
+        assert!(
+            validate_prometheus("# TYPE metall_x gauge\nmetall_x abc").is_err(),
+            "bad value"
+        );
+        assert!(validate_prometheus("# TYPE metall_x gauge\nmetall_x 1\n").is_ok());
+    }
+
+    #[test]
+    fn json_output_parses_key_structure() {
+        let j = render_json(&bundle());
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"counters\""));
+        assert!(j.contains("\"alloc.allocs\":2"));
+        assert!(j.contains("\"latency\""));
+        assert!(j.contains("\"alloc_small\""));
+        assert!(j.contains("\"p999_ns\""));
+        assert!(j.contains("\"events\""));
+    }
+}

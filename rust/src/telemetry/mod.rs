@@ -1,0 +1,252 @@
+//! Always-on telemetry (ISSUE 10): lock-free latency histograms, a
+//! crash-persisted flight recorder, and Prometheus/JSON export.
+//!
+//! Three layers, each usable alone:
+//!
+//! 1. [`histogram`] — mergeable log-linear histograms with per-CPU
+//!    sharded recording; the [`Telemetry`] facade owns one per
+//!    instrumented [`Op`] and gates the *hot* ops (alloc/dealloc,
+//!    op-log append) behind a cheap 1-in-N sampler
+//!    ([`ManagerOptions::telemetry_sample`](crate::alloc::ManagerOptions::telemetry_sample),
+//!    default 1-in-64, `0` = off). Rare ops (epoch phases, stalls,
+//!    attach/refresh) are recorded unsampled — they are the tail the
+//!    ROADMAP `serving_tail` item needs.
+//! 2. [`recorder`] — a fixed-size ring of structured engine events
+//!    written through an mmap'd file under `<store>/diag/`, so even a
+//!    `kill -9` leaves a parseable post-mortem.
+//! 3. [`export`] — renders counters + histograms + events as Prometheus
+//!    text exposition or JSON for `metall stats` / `metall trace`.
+//!
+//! The sampler is a thread-local counter, not a RNG: with the default
+//! power-of-two rate the hot-path cost of an *unsampled* op is one TLS
+//! increment and a mask test. Sampled ops pay two `Instant::now()`
+//! calls and three relaxed `fetch_add`s.
+
+pub mod export;
+pub mod histogram;
+pub mod recorder;
+
+use std::cell::Cell;
+use std::path::Path;
+use std::time::Instant;
+
+use histogram::{HistogramSnapshot, ShardedHistogram};
+use recorder::{EventKind, FlightRecorder};
+
+/// Every instrumented operation. The `name()` strings are the stable
+/// metric identities (`alloc.lat.<name>.*` — catalogued in
+/// `docs/METRICS.md`); treat them like an on-disk format.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Op {
+    /// Small-object allocation (cache pop / bitset claim / fresh chunk).
+    AllocSmall,
+    /// Large (multi-chunk) allocation.
+    AllocLarge,
+    /// Deallocation (either size class).
+    Dealloc,
+    /// `mark_data_dirty` backpressure stall at the sync ceiling.
+    Stall,
+    /// Container op-log intent append (`oplog_begin`).
+    OplogAppend,
+    /// Background flusher: consistent cut + serialize (whole
+    /// `prepare_epoch`).
+    EpochCut,
+    /// The management-section serialization portion of the cut.
+    EpochSerialize,
+    /// Committer: whole `commit_epoch` (data msync + section writes +
+    /// manifest).
+    EpochCommit,
+    /// The manifest build + atomic-rename portion of the commit.
+    EpochManifest,
+    /// `ReaderManager::attach`.
+    Attach,
+    /// `ReaderManager::refresh`.
+    Refresh,
+}
+
+impl Op {
+    pub const ALL: [Op; 11] = [
+        Op::AllocSmall,
+        Op::AllocLarge,
+        Op::Dealloc,
+        Op::Stall,
+        Op::OplogAppend,
+        Op::EpochCut,
+        Op::EpochSerialize,
+        Op::EpochCommit,
+        Op::EpochManifest,
+        Op::Attach,
+        Op::Refresh,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::AllocSmall => "alloc_small",
+            Op::AllocLarge => "alloc_large",
+            Op::Dealloc => "dealloc",
+            Op::Stall => "stall",
+            Op::OplogAppend => "oplog_append",
+            Op::EpochCut => "epoch_cut",
+            Op::EpochSerialize => "epoch_serialize",
+            Op::EpochCommit => "epoch_commit",
+            Op::EpochManifest => "epoch_manifest",
+            Op::Attach => "attach",
+            Op::Refresh => "refresh",
+        }
+    }
+}
+
+thread_local! {
+    static SAMPLE_CTR: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Facade owned by `ManagerCore` (with a flight recorder) and
+/// `ReaderManager` (histograms only). All methods take `&self` and are
+/// callable from any thread.
+pub struct Telemetry {
+    /// 1-in-`rate` sampling of hot ops; 0 disables all histograms.
+    rate: u32,
+    /// `rate - 1` when `rate` is a power of two, else 0 (modulo path).
+    mask: u32,
+    hists: Vec<ShardedHistogram>,
+    recorder: Option<FlightRecorder>,
+}
+
+impl Telemetry {
+    /// Histograms only (readers, tests, benches).
+    pub fn new(sample_rate: u32, shards: usize) -> Telemetry {
+        let mask = if sample_rate.is_power_of_two() { sample_rate - 1 } else { 0 };
+        let mut hists = Vec::with_capacity(Op::ALL.len());
+        hists.resize_with(Op::ALL.len(), || ShardedHistogram::new(shards));
+        Telemetry { rate: sample_rate, mask, hists, recorder: None }
+    }
+
+    /// Histograms plus a flight recorder under `<store>/diag/`.
+    /// Recorder creation is best-effort: an I/O failure leaves the
+    /// telemetry working without one — diagnostics never fail an open.
+    pub fn with_recorder(sample_rate: u32, shards: usize, store: &Path, mode: u32) -> Telemetry {
+        let mut t = Telemetry::new(sample_rate, shards);
+        t.recorder = FlightRecorder::create(store, mode).ok();
+        t
+    }
+
+    pub fn sample_rate(&self) -> u32 {
+        self.rate
+    }
+
+    /// Should this hot-path call be timed? One TLS increment + mask.
+    #[inline]
+    pub fn sample(&self) -> bool {
+        if self.rate <= 1 {
+            return self.rate == 1;
+        }
+        SAMPLE_CTR.with(|c| {
+            let v = c.get().wrapping_add(1);
+            c.set(v);
+            if self.mask != 0 { v & self.mask == 0 } else { v % self.rate == 0 }
+        })
+    }
+
+    /// `Some(now)` on sampled calls — pair with [`Telemetry::record`].
+    #[inline]
+    pub fn maybe_start(&self) -> Option<Instant> {
+        if self.sample() { Some(Instant::now()) } else { None }
+    }
+
+    /// Record the elapsed time since `t0` under `op`.
+    #[inline]
+    pub fn record(&self, op: Op, t0: Instant) {
+        self.record_ns(op, t0.elapsed().as_nanos() as u64);
+    }
+
+    /// Record a raw nanosecond value under `op` (no sampling — used by
+    /// the rare ops, which must not miss tail events).
+    #[inline]
+    pub fn record_ns(&self, op: Op, ns: u64) {
+        if self.rate == 0 {
+            return;
+        }
+        self.hists[op as usize].record(ns);
+    }
+
+    /// Append a structured event to the flight recorder (no-op without
+    /// one). Event recording ignores the sampler: events are rare and
+    /// are exactly what a post-mortem needs complete.
+    #[inline]
+    pub fn event(&self, kind: EventKind, code: u32, a: u64, b: u64, c: u64) {
+        if let Some(r) = &self.recorder {
+            r.record(kind, code, a, b, c);
+        }
+    }
+
+    /// `msync` the flight ring — call when recording a failure that may
+    /// be the process's last act (wound, contained panic, failed close).
+    pub fn flush_recorder(&self) {
+        if let Some(r) = &self.recorder {
+            r.flush();
+        }
+    }
+
+    pub fn recorder_path(&self) -> Option<&Path> {
+        self.recorder.as_ref().map(FlightRecorder::path)
+    }
+
+    /// Merged per-op snapshots (shards folded), in [`Op::ALL`] order.
+    pub fn snapshot(&self) -> Vec<(Op, HistogramSnapshot)> {
+        Op::ALL
+            .iter()
+            .map(|&op| (op, self.hists[op as usize].snapshot()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_honors_rate() {
+        let t = Telemetry::new(4, 1);
+        let hits = (0..4000).filter(|_| t.sample()).count();
+        assert_eq!(hits, 1000, "1-in-4 sampling is exact per thread");
+        let off = Telemetry::new(0, 1);
+        assert!((0..100).all(|_| !off.sample()));
+        off.record_ns(Op::AllocSmall, 123);
+        assert_eq!(off.snapshot()[0].1.count, 0, "rate 0 disables histograms");
+        let always = Telemetry::new(1, 1);
+        assert!((0..100).all(|_| always.sample()));
+    }
+
+    #[test]
+    fn snapshot_orders_ops_and_records() {
+        let t = Telemetry::new(1, 2);
+        t.record_ns(Op::Attach, 1_000);
+        t.record_ns(Op::Attach, 2_000);
+        t.record_ns(Op::EpochCommit, 5_000);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), Op::ALL.len());
+        let attach = snap.iter().find(|(op, _)| *op == Op::Attach).unwrap();
+        assert_eq!(attach.1.count, 2);
+        let commit = snap.iter().find(|(op, _)| *op == Op::EpochCommit).unwrap();
+        assert_eq!(commit.1.count, 1);
+        assert!(commit.1.quantile(0.99) >= 5_000);
+    }
+
+    #[test]
+    fn events_reach_the_ring() {
+        let dir = std::env::temp_dir().join(format!("metall-telev-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = Telemetry::with_recorder(64, 1, &dir, 1);
+        t.event(EventKind::Wound, 0, 7, 0, 0);
+        t.flush_recorder();
+        let path = t.recorder_path().unwrap().to_path_buf();
+        drop(t);
+        let dump = recorder::load(&path).unwrap();
+        assert!(dump
+            .events
+            .iter()
+            .any(|e| recorder::EventKind::from_u32(e.kind) == Some(EventKind::Wound) && e.a == 7));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,510 @@
+//! Crash-persisted flight recorder (ISSUE 10 tentpole, layer 2).
+//!
+//! A fixed-size lock-free ring of structured engine events, written
+//! *through* an `mmap(MAP_SHARED)` file at `<store>/diag/flight-<pid>.bin`
+//! from the moment the manager opens. Because every `record` lands
+//! directly in the shared mapping, the kernel page cache owns the bytes
+//! the instant they are written: a `kill -9` (which can run no handler)
+//! still leaves the ring on disk, and an explicit [`FlightRecorder::flush`]
+//! (`msync`) on wound / panic containment / failed close makes the tail
+//! durable against machine loss too.
+//!
+//! Torn tails are expected, not fatal: each 64-byte slot carries its own
+//! FNV-1a checksum, so a reader ([`load`]) keeps exactly the slots that
+//! verify and orders them by sequence number. Writers never coordinate
+//! beyond one `fetch_add` on the head counter; two writers can only
+//! collide on a slot after the ring laps itself inside the race window,
+//! and the loser is at worst one discarded (checksum-failing) slot.
+//!
+//! The ring is diagnostics, never a correctness input: every I/O error
+//! downgrades to "no recorder" and the file set per store is bounded
+//! ([`MAX_DIAG_FILES`] newest kept).
+
+use std::fs;
+use std::io::{self, Read as _, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::fnv1a;
+
+const MAGIC: u64 = 0x4d54_4c5f_464c_5431; // "MTL_FLT1"
+const VERSION: u32 = 1;
+const HDR_SIZE: usize = 64;
+const SLOT_SIZE: usize = 64;
+/// Checksummed prefix of a slot (seq..c inclusive).
+const SLOT_CRC_OVER: usize = 48;
+/// Default ring capacity in events (64 KiB of slots).
+pub const DEFAULT_CAPACITY: u32 = 1024;
+/// Newest `flight-*.bin` files kept per store (`diag/` stays bounded).
+pub const MAX_DIAG_FILES: usize = 8;
+
+/// What happened. Stored as a `u32` in the slot; unknown values from a
+/// newer writer render as `event#N` instead of failing the parse.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u32)]
+pub enum EventKind {
+    /// Recorder created (code: 1 = read-write owner, 2 = reader attach).
+    Open = 1,
+    /// Epoch cut + serialized (a: epoch, b: data bytes, c: dirty sections).
+    EpochPrepared = 2,
+    /// Epoch manifest durably committed (a: epoch, b: data bytes).
+    EpochCommitted = 3,
+    /// Epoch aborted, dirty flags restored (a: epoch).
+    EpochAborted = 4,
+    /// Flusher woke on the dirty-byte watermark (a: dirty bytes, b: watermark).
+    WatermarkKick = 5,
+    /// Flusher woke on the interval timer.
+    IntervalKick = 6,
+    /// Writer stalled at the backpressure ceiling (a: stall µs, b: dirty bytes).
+    CeilingStall = 7,
+    /// A sync round failed (code: [`crate::storage::faults::FaultClass`]
+    /// as 0 = transient / 1 = permanent; a: consecutive failures).
+    FlushFailure = 8,
+    /// Manager wounded → degraded read-only (a: consecutive failures).
+    Wound = 9,
+    /// Flusher or committer thread panicked; engine dead (code: 1 =
+    /// flusher, 2 = committer).
+    EngineDead = 10,
+    /// Stale reader leases reaped at cut time (a: reaped count).
+    LeaseReap = 11,
+    /// Recovery rolled an unsealed op-log record forward (a: seq).
+    RecoveryReplay = 12,
+    /// Recovery rolled an unsealed op-log record back (a: seq).
+    RecoveryRollback = 13,
+    /// Recovery adopted a committed record's allocations (a: seq).
+    RecoveryAdopt = 14,
+    /// ENOSPC on the allocation path rolled back (a: chunks released).
+    ExtendRollback = 15,
+    /// `close()` failed; store left unclean (a: 0, see breadcrumbs).
+    CloseFailed = 16,
+}
+
+impl EventKind {
+    pub fn from_u32(v: u32) -> Option<EventKind> {
+        use EventKind::*;
+        Some(match v {
+            1 => Open,
+            2 => EpochPrepared,
+            3 => EpochCommitted,
+            4 => EpochAborted,
+            5 => WatermarkKick,
+            6 => IntervalKick,
+            7 => CeilingStall,
+            8 => FlushFailure,
+            9 => Wound,
+            10 => EngineDead,
+            11 => LeaseReap,
+            12 => RecoveryReplay,
+            13 => RecoveryRollback,
+            14 => RecoveryAdopt,
+            15 => ExtendRollback,
+            16 => CloseFailed,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded ring slot.
+#[derive(Clone, Copy, Debug)]
+pub struct FlightEvent {
+    pub seq: u64,
+    /// Monotonic nanoseconds since the recorder was created.
+    pub t_ns: u64,
+    pub kind: u32,
+    pub code: u32,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+impl FlightEvent {
+    /// Human-readable one-liner (used by `metall trace` / `doctor`).
+    pub fn describe(&self) -> String {
+        let t = self.t_ns as f64 / 1e9;
+        let body = match EventKind::from_u32(self.kind) {
+            Some(EventKind::Open) => match self.code {
+                1 => "open (read-write owner)".to_string(),
+                2 => "open (reader attach)".to_string(),
+                c => format!("open (mode {c})"),
+            },
+            Some(EventKind::EpochPrepared) => format!(
+                "epoch {} prepared: {} data bytes, {} dirty sections",
+                self.a, self.b, self.c
+            ),
+            Some(EventKind::EpochCommitted) => {
+                format!("epoch {} committed ({} data bytes)", self.a, self.b)
+            }
+            Some(EventKind::EpochAborted) => {
+                format!("epoch {} aborted; dirty flags restored", self.a)
+            }
+            Some(EventKind::WatermarkKick) => format!(
+                "watermark kick: {} dirty bytes >= {} watermark",
+                self.a, self.b
+            ),
+            Some(EventKind::IntervalKick) => "interval kick".to_string(),
+            Some(EventKind::CeilingStall) => format!(
+                "writer stalled {} us at backpressure ceiling ({} dirty bytes)",
+                self.a, self.b
+            ),
+            Some(EventKind::FlushFailure) => format!(
+                "flush failure #{} ({})",
+                self.a,
+                if self.code == 1 { "permanent" } else { "transient" }
+            ),
+            Some(EventKind::Wound) => format!(
+                "WOUND: manager degraded read-only after {} consecutive failures",
+                self.a
+            ),
+            Some(EventKind::EngineDead) => format!(
+                "engine dead: {} thread panicked",
+                if self.code == 2 { "committer" } else { "flusher" }
+            ),
+            Some(EventKind::LeaseReap) => {
+                format!("reaped {} stale reader lease(s)", self.a)
+            }
+            Some(EventKind::RecoveryReplay) => {
+                format!("recovery: op-log seq {} rolled forward", self.a)
+            }
+            Some(EventKind::RecoveryRollback) => {
+                format!("recovery: op-log seq {} rolled back", self.a)
+            }
+            Some(EventKind::RecoveryAdopt) => {
+                format!("recovery: op-log seq {} allocations adopted", self.a)
+            }
+            Some(EventKind::ExtendRollback) => {
+                format!("ENOSPC: allocation rolled back ({} chunk(s) released)", self.a)
+            }
+            Some(EventKind::CloseFailed) => "close failed; store left unclean".to_string(),
+            None => format!("event#{} code={} a={} b={} c={}", self.kind, self.code, self.a, self.b, self.c),
+        };
+        format!("[{t:>10.6}s #{:>4}] {body}", self.seq)
+    }
+}
+
+/// A parsed dump: header fields plus the valid slots in sequence order.
+pub struct FlightDump {
+    pub pid: u32,
+    pub capacity: u32,
+    /// UNIX wall-clock nanoseconds when the recorder was created
+    /// (anchors the events' relative timestamps).
+    pub wall_anchor_ns: u64,
+    pub events: Vec<FlightEvent>,
+}
+
+/// The live writer side: an `mmap(MAP_SHARED)` ring over the dump file.
+pub struct FlightRecorder {
+    map: *mut u8,
+    len: usize,
+    capacity: u64,
+    head: AtomicU64,
+    start: Instant,
+    path: PathBuf,
+}
+
+// The raw pointer is to a private shared mapping written only through
+// atomic head reservation; see module docs for the collision story.
+unsafe impl Send for FlightRecorder {}
+unsafe impl Sync for FlightRecorder {}
+
+fn le64(buf: &mut [u8], off: usize, v: u64) {
+    buf[off..off + 8].copy_from_slice(&v.to_le_bytes());
+}
+fn le32(buf: &mut [u8], off: usize, v: u32) {
+    buf[off..off + 4].copy_from_slice(&v.to_le_bytes());
+}
+fn rd64(buf: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(buf[off..off + 8].try_into().unwrap())
+}
+fn rd32(buf: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(buf[off..off + 4].try_into().unwrap())
+}
+
+impl FlightRecorder {
+    /// Create the per-process ring under `<store>/diag/`, pruning the
+    /// oldest dump files beyond [`MAX_DIAG_FILES`]. `mode` is stamped
+    /// into the `Open` event (1 = rw owner, 2 = reader).
+    pub fn create(store: &Path, mode: u32) -> io::Result<FlightRecorder> {
+        Self::create_with_capacity(store, mode, DEFAULT_CAPACITY)
+    }
+
+    pub fn create_with_capacity(
+        store: &Path,
+        mode: u32,
+        capacity: u32,
+    ) -> io::Result<FlightRecorder> {
+        let capacity = capacity.max(8);
+        let diag = store.join("diag");
+        fs::create_dir_all(&diag)?;
+        prune_old_dumps(&diag, MAX_DIAG_FILES.saturating_sub(1));
+
+        let pid = std::process::id();
+        let path = diag.join(format!("flight-{pid}.bin"));
+        let len = HDR_SIZE + capacity as usize * SLOT_SIZE;
+
+        let mut header = [0u8; HDR_SIZE];
+        le64(&mut header, 0, MAGIC);
+        le32(&mut header, 8, VERSION);
+        le32(&mut header, 12, capacity);
+        le32(&mut header, 16, pid);
+        let wall = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        le64(&mut header, 24, wall);
+        let crc = fnv1a(&header[..56]);
+        le64(&mut header, 56, crc);
+
+        let file = fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)?;
+        file.set_len(len as u64)?;
+        {
+            let mut f = &file;
+            f.write_all(&header)?;
+        }
+
+        let map = unsafe {
+            libc::mmap(
+                std::ptr::null_mut(),
+                len,
+                libc::PROT_READ | libc::PROT_WRITE,
+                libc::MAP_SHARED,
+                std::os::unix::io::AsRawFd::as_raw_fd(&file),
+                0,
+            )
+        };
+        if map == libc::MAP_FAILED {
+            return Err(io::Error::last_os_error());
+        }
+        let rec = FlightRecorder {
+            map: map as *mut u8,
+            len,
+            capacity: capacity as u64,
+            head: AtomicU64::new(0),
+            start: Instant::now(),
+            path,
+        };
+        rec.record(EventKind::Open, mode, 0, 0, 0);
+        Ok(rec)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one event. Lock-free; safe from any thread.
+    #[inline]
+    pub fn record(&self, kind: EventKind, code: u32, a: u64, b: u64, c: u64) {
+        let seq = self.head.fetch_add(1, Ordering::Relaxed);
+        let t_ns = self.start.elapsed().as_nanos() as u64;
+        let mut slot = [0u8; SLOT_SIZE];
+        le64(&mut slot, 0, seq);
+        le64(&mut slot, 8, t_ns);
+        le32(&mut slot, 16, kind as u32);
+        le32(&mut slot, 20, code);
+        le64(&mut slot, 24, a);
+        le64(&mut slot, 32, b);
+        le64(&mut slot, 40, c);
+        let crc = fnv1a(&slot[..SLOT_CRC_OVER]);
+        le64(&mut slot, 48, crc);
+        let off = HDR_SIZE + (seq % self.capacity) as usize * SLOT_SIZE;
+        // In-bounds by construction; the mapping lives as long as self.
+        unsafe {
+            std::ptr::copy_nonoverlapping(slot.as_ptr(), self.map.add(off), SLOT_SIZE);
+        }
+    }
+
+    /// `msync` the whole ring — called on wound, panic containment, and
+    /// failed close. Best-effort: an error here must never mask the
+    /// failure being recorded.
+    pub fn flush(&self) {
+        unsafe {
+            libc::msync(self.map as *mut libc::c_void, self.len, libc::MS_SYNC);
+        }
+    }
+}
+
+impl Drop for FlightRecorder {
+    fn drop(&mut self) {
+        unsafe {
+            libc::msync(self.map as *mut libc::c_void, self.len, libc::MS_ASYNC);
+            libc::munmap(self.map as *mut libc::c_void, self.len);
+        }
+    }
+}
+
+fn prune_old_dumps(diag: &Path, keep: usize) {
+    let mut dumps: Vec<(std::time::SystemTime, PathBuf)> = Vec::new();
+    let Ok(rd) = fs::read_dir(diag) else { return };
+    for ent in rd.flatten() {
+        let name = ent.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("flight-") && name.ends_with(".bin") {
+            let mtime = ent
+                .metadata()
+                .and_then(|m| m.modified())
+                .unwrap_or(std::time::UNIX_EPOCH);
+            dumps.push((mtime, ent.path()));
+        }
+    }
+    if dumps.len() <= keep {
+        return;
+    }
+    dumps.sort_by_key(|(t, _)| *t);
+    let excess = dumps.len() - keep;
+    for (_, p) in dumps.into_iter().take(excess) {
+        let _ = fs::remove_file(p);
+    }
+}
+
+/// Parse a dump file: validate the header, keep every slot whose
+/// checksum verifies, order by sequence number. Torn or zero slots are
+/// silently skipped — a post-crash ring is expected to have a ragged
+/// tail.
+pub fn load(path: &Path) -> io::Result<FlightDump> {
+    let mut bytes = Vec::new();
+    fs::File::open(path)?.read_to_end(&mut bytes)?;
+    if bytes.len() < HDR_SIZE {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "flight dump truncated"));
+    }
+    if rd64(&bytes, 0) != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "bad flight dump magic"));
+    }
+    if rd64(&bytes, 56) != fnv1a(&bytes[..56]) {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "flight header checksum"));
+    }
+    let capacity = rd32(&bytes, 12);
+    let pid = rd32(&bytes, 16);
+    let wall_anchor_ns = rd64(&bytes, 24);
+    let nslots = ((bytes.len() - HDR_SIZE) / SLOT_SIZE).min(capacity as usize);
+    let mut events = Vec::new();
+    for i in 0..nslots {
+        let off = HDR_SIZE + i * SLOT_SIZE;
+        let slot = &bytes[off..off + SLOT_SIZE];
+        let kind = rd32(slot, 16);
+        if kind == 0 {
+            continue; // never written
+        }
+        if rd64(slot, 48) != fnv1a(&slot[..SLOT_CRC_OVER]) {
+            continue; // torn write
+        }
+        events.push(FlightEvent {
+            seq: rd64(slot, 0),
+            t_ns: rd64(slot, 8),
+            kind,
+            code: rd32(slot, 20),
+            a: rd64(slot, 24),
+            b: rd64(slot, 32),
+            c: rd64(slot, 40),
+        });
+    }
+    events.sort_by_key(|e| e.seq);
+    Ok(FlightDump { pid, capacity, wall_anchor_ns, events })
+}
+
+/// The newest `flight-*.bin` under `<store>/diag/`, if any.
+pub fn newest_dump(store: &Path) -> Option<PathBuf> {
+    let diag = store.join("diag");
+    let mut best: Option<(std::time::SystemTime, PathBuf)> = None;
+    for ent in fs::read_dir(diag).ok()?.flatten() {
+        let name = ent.file_name();
+        let name = name.to_string_lossy().into_owned();
+        if !(name.starts_with("flight-") && name.ends_with(".bin")) {
+            continue;
+        }
+        let mtime = ent
+            .metadata()
+            .and_then(|m| m.modified())
+            .unwrap_or(std::time::UNIX_EPOCH);
+        if best.as_ref().map(|(t, _)| mtime >= *t).unwrap_or(true) {
+            best = Some((mtime, ent.path()));
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+/// Render the last `tail` events of a dump as human-readable lines.
+pub fn render_tail(dump: &FlightDump, tail: usize) -> Vec<String> {
+    let skip = dump.events.len().saturating_sub(tail);
+    dump.events[skip..].iter().map(FlightEvent::describe).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_roundtrip_and_wrap() {
+        let dir = tempdir("flt-roundtrip");
+        let rec = FlightRecorder::create_with_capacity(&dir, 1, 16).unwrap();
+        for i in 0..40u64 {
+            rec.record(EventKind::EpochCommitted, 0, i, i * 10, 0);
+        }
+        rec.flush();
+        let path = rec.path().to_path_buf();
+        drop(rec);
+
+        let dump = load(&path).unwrap();
+        assert_eq!(dump.pid, std::process::id());
+        // 41 events written (Open + 40); ring holds the newest 16.
+        assert_eq!(dump.events.len(), 16);
+        let seqs: Vec<u64> = dump.events.iter().map(|e| e.seq).collect();
+        let expect: Vec<u64> = (25..41).collect();
+        assert_eq!(seqs, expect);
+        let last = dump.events.last().unwrap();
+        assert_eq!(EventKind::from_u32(last.kind), Some(EventKind::EpochCommitted));
+        assert_eq!(last.a, 39);
+        assert!(last.describe().contains("epoch 39 committed"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_slot_is_skipped_not_fatal() {
+        let dir = tempdir("flt-torn");
+        let rec = FlightRecorder::create_with_capacity(&dir, 1, 16).unwrap();
+        rec.record(EventKind::Wound, 0, 3, 0, 0);
+        rec.flush();
+        let path = rec.path().to_path_buf();
+        drop(rec);
+
+        // Corrupt the second slot (the Wound event) on disk.
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[HDR_SIZE + SLOT_SIZE + 24] ^= 0xff;
+        fs::write(&path, &bytes).unwrap();
+
+        let dump = load(&path).unwrap();
+        assert_eq!(dump.events.len(), 1, "only the Open event survives");
+        assert_eq!(EventKind::from_u32(dump.events[0].kind), Some(EventKind::Open));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn diag_dir_is_bounded() {
+        let dir = tempdir("flt-bound");
+        let diag = dir.join("diag");
+        fs::create_dir_all(&diag).unwrap();
+        for i in 0..20 {
+            fs::write(diag.join(format!("flight-{i}.bin")), b"x").unwrap();
+        }
+        let rec = FlightRecorder::create(&dir, 1).unwrap();
+        drop(rec);
+        let n = fs::read_dir(&diag).unwrap().count();
+        assert!(n <= MAX_DIAG_FILES, "diag holds {n} files");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "metall-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+}

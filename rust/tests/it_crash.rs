@@ -19,7 +19,9 @@ use std::process::Command;
 
 use metall_rs::alloc::{pin_thread_vcpu, ManagerOptions, MetallManager};
 use metall_rs::containers::{BankedAdjacency, PHashMapU64, PVec};
+use metall_rs::coordinator::cli;
 use metall_rs::numa::Topology;
+use metall_rs::telemetry::recorder;
 use metall_rs::util::rng::Xoshiro256ss;
 use metall_rs::util::tmp::TempDir;
 
@@ -211,6 +213,34 @@ fn kill9_mid_mutation_dirty_store_refused_snapshot_recovers() {
             !store.join("CLEAN").exists(),
             "round {round}: no CLEAN marker after kill -9"
         );
+        // 0. the dead owner left a parseable flight-recorder dump (the
+        //    ring is mmap(MAP_SHARED), so kill -9 cannot lose it), and
+        //    `metall trace` renders it. Snapshot the path *before* any
+        //    reopen so it is provably the child's, not ours.
+        let dump_path = recorder::newest_dump(&store)
+            .unwrap_or_else(|| panic!("round {round}: kill -9 left no flight dump"));
+        let dump = recorder::load(&dump_path)
+            .unwrap_or_else(|e| panic!("round {round}: flight dump unparseable: {e}"));
+        assert_ne!(
+            dump.pid,
+            std::process::id(),
+            "round {round}: dump must belong to the dead child"
+        );
+        assert!(
+            dump.events.iter().any(|e| e.kind == recorder::EventKind::Open as u32),
+            "round {round}: child's dump must record its open"
+        );
+        assert!(
+            !recorder::render_tail(&dump, 8).is_empty(),
+            "round {round}: rendered tail must not be empty"
+        );
+        let trace_rc = cli::run(&[
+            "trace".to_string(),
+            "--store".to_string(),
+            store.display().to_string(),
+        ])
+        .expect("metall trace runs on a crashed store");
+        assert_eq!(trace_rc, 0, "round {round}: metall trace must render the dump");
         // 1. the dirty store is refused
         let err = match MetallManager::open(&store) {
             Err(e) => e,

@@ -32,6 +32,7 @@ use metall_rs::containers::oplog::{OpRecord, OP_VEC_PUSH};
 use metall_rs::containers::PVec;
 use metall_rs::error::Error;
 use metall_rs::storage::faults::{self, FaultKind, FaultPlan, FaultReport, Site};
+use metall_rs::telemetry::recorder;
 use metall_rs::util::tmp::TempDir;
 
 /// `small_for_tests` chunk size.
@@ -354,6 +355,36 @@ fn persistent_flush_failure_wounds_manager_while_reader_serves_pinned_epoch() {
     let breadcrumb = store.join(WOUNDED_MARKER);
     assert!(breadcrumb.exists());
     assert!(std::fs::read_to_string(&breadcrumb).unwrap().contains("flush rounds"));
+
+    // The wound must leave a parseable flight-recorder dump whose tail
+    // attributes the failure: the failed flush rounds and the wound
+    // itself, in that order.
+    let dump_path = recorder::newest_dump(&store).expect("wound left no flight dump in diag/");
+    let dump = recorder::load(&dump_path).expect("flight dump must parse after a wound");
+    assert_eq!(dump.pid, std::process::id(), "dump must belong to the wounded owner");
+    let kinds: Vec<u32> = dump.events.iter().map(|e| e.kind).collect();
+    let first_failure = kinds
+        .iter()
+        .position(|&k| k == recorder::EventKind::FlushFailure as u32)
+        .expect("flight dump records no FlushFailure event");
+    let wound_at = kinds
+        .iter()
+        .position(|&k| k == recorder::EventKind::Wound as u32)
+        .expect("flight dump records no Wound event");
+    assert!(
+        first_failure < wound_at,
+        "failure events must precede the wound: {kinds:?}"
+    );
+    let wound_ev = dump.events[wound_at];
+    assert!(
+        wound_ev.a >= 2,
+        "wound event must carry the consecutive-failure count: {wound_ev:?}"
+    );
+    assert!(
+        wound_ev.describe().contains("degraded read-only"),
+        "wound event must render an attribution line: {}",
+        wound_ev.describe()
+    );
     drop(r);
 
     // Recovery: the explicit unclean open clears the breadcrumb and
